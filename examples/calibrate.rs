@@ -1,0 +1,51 @@
+//! Calibration helper: prints the Fig-1/2/3 sweeps (single seed) next to
+//! the paper's numbers, for tuning the cost-model constants.
+//! Not part of the shipped experiment suite — see `sensitivity_sweep`.
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::conf::SparkConf;
+use sparktune::engine::run;
+use sparktune::experiments::{kryo_baseline, VARIANTS};
+use sparktune::sim::SimOpts;
+use sparktune::workloads::Workload;
+
+fn once(w: Workload, conf: &SparkConf) -> Option<(f64, Vec<(String, f64)>)> {
+    let r = run(&w.job(), conf, &ClusterSpec::marenostrum(), &SimOpts { jitter: 0.0, seed: 1 });
+    if r.crashed.is_some() {
+        return None;
+    }
+    let stages = r.stages.iter().map(|s| (s.name.clone(), s.duration)).collect();
+    Some((r.duration, stages))
+}
+
+fn main() {
+    let which: Vec<String> = std::env::args().skip(1).collect();
+    let all = [Workload::SortByKey1B, Workload::Shuffling400G, Workload::KMeans100M];
+    for w in all {
+        if !which.is_empty() && !which.contains(&w.name().to_string()) {
+            continue;
+        }
+        let base = once(w, &kryo_baseline()).expect("baseline");
+        println!("\n=== {} ===  kryo baseline {:.1}s  stages: {:?}", w.name(), base.0, base.1);
+        let java = once(w, &SparkConf::default());
+        match java {
+            Some((j, _)) => println!("{:<28} {:8.1}s ({:+.1}%)", "serializer=java", j, 100.0 * (j - base.0) / base.0),
+            None => println!("{:<28} CRASH", "serializer=java"),
+        }
+        for v in VARIANTS {
+            let mut conf = kryo_baseline();
+            for (k, val) in v.settings {
+                conf.set(k, val).unwrap();
+            }
+            match once(w, &conf) {
+                Some((t, _)) => println!(
+                    "{:<28} {:8.1}s ({:+.1}%)",
+                    v.label,
+                    t,
+                    100.0 * (t - base.0) / base.0
+                ),
+                None => println!("{:<28} CRASH", v.label),
+            }
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Regenerate the paper's §5 case studies: the Fig-4 methodology applied
+//! end-to-end to sort-by-key (10% threshold), the 500-column k-means
+//! instance, and aggregate-by-key (5% threshold), reported next to the
+//! paper's numbers.
+//!
+//! ```bash
+//! cargo run --release --example case_studies
+//! ```
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::cases::{case_studies, case_table};
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    let cases = case_studies(&cluster);
+    for c in &cases {
+        println!(
+            "== {} (threshold {:.0}%) ==",
+            c.workload.name(),
+            c.threshold * 100.0
+        );
+        println!("  default: {:>8.1}s   (paper: {:.0}s)", c.outcome.baseline, c.paper.default_secs);
+        for t in &c.outcome.trials {
+            let time = if t.duration.is_finite() {
+                format!("{:.1}s", t.duration)
+            } else {
+                "CRASH".into()
+            };
+            println!(
+                "  {:<40} {:>9}  {}",
+                t.step,
+                time,
+                if t.kept { "← kept" } else { "" }
+            );
+        }
+        println!(
+            "  tuned:   {:>8.1}s → {:.1}% improvement  (paper: {:.0}s, {:.0}%)\n",
+            c.outcome.best,
+            c.improvement_pct(),
+            c.paper.best_secs,
+            c.paper.improvement_pct
+        );
+    }
+    println!("{}", case_table(&cases).to_markdown());
+}

@@ -1,0 +1,85 @@
+//! Quickstart: run one benchmark under two configurations and see why
+//! tuning matters.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::conf::SparkConf;
+use sparktune::engine::run;
+use sparktune::real;
+use sparktune::sim::SimOpts;
+use sparktune::workloads::Workload;
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    let job = Workload::SortByKey1B.job();
+
+    // 1. Out-of-the-box Spark 1.5.2 defaults.
+    let default = SparkConf::default();
+    let r1 = run(&job, &default, &cluster, &SimOpts::default());
+    println!("sort-by-key, default configuration:        {:>7.1}s", r1.duration);
+
+    // 2. The paper's case-study-1 final configuration.
+    let tuned = SparkConf::default()
+        .with("spark.serializer", "org.apache.spark.serializer.KryoSerializer")
+        .with("spark.shuffle.manager", "hash")
+        .with("spark.shuffle.consolidateFiles", "true")
+        .with("spark.shuffle.memoryFraction", "0.4")
+        .with("spark.storage.memoryFraction", "0.4");
+    let r2 = run(&job, &tuned, &cluster, &SimOpts::default());
+    println!("sort-by-key, paper's tuned configuration:  {:>7.1}s", r2.duration);
+    println!(
+        "improvement: {:.1}%  (paper reports 44% on the real cluster)",
+        100.0 * (r1.duration - r2.duration) / r1.duration
+    );
+
+    // 3. A configuration the paper found to crash.
+    let bad = SparkConf::default()
+        .with("spark.shuffle.memoryFraction", "0.1")
+        .with("spark.storage.memoryFraction", "0.7");
+    let r3 = run(&job, &bad, &cluster, &SimOpts::default());
+    println!(
+        "sort-by-key @ memoryFraction 0.1/0.7:       {}",
+        r3.crashed.as_deref().unwrap_or("(unexpectedly survived)")
+    );
+
+    // Per-stage view of the default run.
+    println!("\nstage breakdown (default):");
+    for s in &r1.stages {
+        println!(
+            "  {:<9} {:>7.1}s  cpu {:>8.1}s  disk {:>6.1} GB  net {:>5.1} GB  spilled {:>6.1} GB",
+            s.name,
+            s.duration,
+            s.cpu_secs,
+            s.disk_bytes / 1e9,
+            s.net_bytes / 1e9,
+            s.spilled_bytes as f64 / 1e9,
+        );
+    }
+
+    // 4. Real mode: the same operators actually executed on materialized
+    // records with real shuffle files on disk — the simulator's
+    // correctness anchor.
+    println!("\nreal-mode sort-by-key (200k records, real shuffle files):");
+    let parts = real::partition_input(real::generate_kv(200_000, 1_000, 42), 8);
+    for (label, conf) in [
+        ("default        ", SparkConf::default()),
+        ("kryo + snappy  ", SparkConf::default().with("spark.serializer", "kryo")),
+        (
+            "kryo, no compress",
+            SparkConf::default()
+                .with("spark.serializer", "kryo")
+                .with("spark.shuffle.compress", "false"),
+        ),
+    ] {
+        let r = real::sort_by_key(&conf, parts.clone(), 8).expect("real run");
+        println!(
+            "  {label}  {:>6.0} ms  {:>6.1} MB on the wire  ({} shuffle files)",
+            r.wall_secs * 1e3,
+            r.metrics.wire_bytes as f64 / 1e6,
+            r.metrics.shuffle_files,
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Regenerate the paper's §4 sensitivity analysis: Figs 1, 2, 3 and
+//! Table 2 (median of 5 seeded repetitions per configuration).
+//!
+//! ```bash
+//! cargo run --release --example sensitivity_sweep [--out-dir experiments_out]
+//! ```
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::{sensitivity, table2};
+use sparktune::workloads::Workload;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let out_dir = args
+        .windows(2)
+        .find(|w| w[0] == "--out-dir")
+        .map(|w| w[1].clone());
+
+    let cluster = ClusterSpec::marenostrum();
+    for w in [
+        Workload::SortByKey1B,
+        Workload::Shuffling400G,
+        Workload::KMeans100M,
+        Workload::KMeans200M,
+    ] {
+        let fig = sensitivity(w, &cluster);
+        println!("{}", fig.to_ascii(110));
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir).expect("mkdir");
+            let path = format!("{dir}/{}.csv", fig.id);
+            std::fs::write(&path, fig.to_csv()).expect("write csv");
+            eprintln!("wrote {path}");
+        }
+    }
+
+    let t = table2(&cluster);
+    println!("{}", t.to_markdown());
+    if let Some(dir) = &out_dir {
+        std::fs::write(format!("{dir}/table2.csv"), t.to_csv()).expect("write csv");
+        eprintln!("wrote {dir}/table2.csv");
+    }
+}

@@ -1,0 +1,57 @@
+//! Apply the paper's Fig-4 trial-and-error methodology to a workload and
+//! watch the decision list execute.
+//!
+//! ```bash
+//! cargo run --release --example tune_application [workload] [threshold]
+//! # e.g. cargo run --release --example tune_application kmeans-500d 0.05
+//! ```
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::cases::sim_runner;
+use sparktune::tuner::{tune, TuneOpts};
+use sparktune::workloads::Workload;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workload = args
+        .first()
+        .map(|s| Workload::from_name(s).expect("unknown workload"))
+        .unwrap_or(Workload::SortByKey1B);
+    let threshold: f64 = args.get(1).map(|s| s.parse().expect("bad threshold")).unwrap_or(0.10);
+
+    let cluster = ClusterSpec::marenostrum();
+    let mut runner = sim_runner(workload, &cluster);
+    let out = tune(&mut runner, &TuneOpts { threshold, short_version: false });
+
+    println!(
+        "Fig-4 methodology on {} (keep-if-improves-by > {:.0}%):\n",
+        workload.name(),
+        threshold * 100.0
+    );
+    println!("  trial 1  default configuration           {:>9.1}s  (baseline)", out.baseline);
+    for (i, t) in out.trials.iter().enumerate() {
+        let time = if t.duration.is_finite() {
+            format!("{:.1}s", t.duration)
+        } else {
+            "CRASH".into()
+        };
+        println!(
+            "  trial {:<2} {:<40} {:>9}  {}",
+            i + 2,
+            t.step,
+            time,
+            if t.kept { "← kept" } else { "" }
+        );
+    }
+    println!(
+        "\nfinal configuration ({} runs total, {:.1}% faster than default):",
+        out.runs(),
+        100.0 * out.total_improvement()
+    );
+    for (k, v) in out.final_settings() {
+        println!("  {k}={v}");
+    }
+    if out.final_settings().is_empty() {
+        println!("  <defaults — nothing cleared the threshold>");
+    }
+}

@@ -1,0 +1,75 @@
+"""AOT compile path: lower the L2 model (with the L1 Pallas kernel inside)
+to **HLO text** artifacts the Rust runtime loads via the PJRT C API.
+
+HLO *text* — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--p 16384]
+[--d 64] [--k 16] [--block-p 2048]``
+
+Outputs:
+    kmeans_step.hlo.txt      — per-partition map-task computation
+    new_centroids.hlo.txt    — reduce-side combine
+    kmeans_step.meta         — ``key=value`` shape metadata for Rust
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+from jax._src.lib import xla_client as xc
+
+from .kernels.kmeans import mxu_utilization_estimate, vmem_footprint_bytes
+from .model import lower_kmeans_step, lower_new_centroids
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--p", type=int, default=16384, help="points per partition")
+    ap.add_argument("--d", type=int, default=64, help="dimensions")
+    ap.add_argument("--k", type=int, default=16, help="centroids")
+    ap.add_argument("--block-p", type=int, default=2048, help="Pallas point-block")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    step = to_hlo_text(lower_kmeans_step(args.p, args.d, args.k, args.block_p))
+    step_path = os.path.join(args.out_dir, "kmeans_step.hlo.txt")
+    with open(step_path, "w") as f:
+        f.write(step)
+    print(f"wrote {len(step)} chars to {step_path}")
+
+    comb = to_hlo_text(lower_new_centroids(args.d, args.k))
+    comb_path = os.path.join(args.out_dir, "new_centroids.hlo.txt")
+    with open(comb_path, "w") as f:
+        f.write(comb)
+    print(f"wrote {len(comb)} chars to {comb_path}")
+
+    meta_path = os.path.join(args.out_dir, "kmeans_step.meta")
+    with open(meta_path, "w") as f:
+        f.write(f"p={args.p}\n")
+        f.write(f"d={args.d}\n")
+        f.write(f"k={args.k}\n")
+        f.write(f"block_p={args.block_p}\n")
+        f.write(f"vmem_bytes={vmem_footprint_bytes(args.block_p, args.d, args.k)}\n")
+        f.write(
+            f"mxu_utilization={mxu_utilization_estimate(args.block_p, args.d, args.k):.4f}\n"
+        )
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

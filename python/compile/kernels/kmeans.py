@@ -1,0 +1,129 @@
+"""L1 — the k-means assignment + partial-aggregation Pallas kernel.
+
+One k-means iteration's compute hot-spot over a partition of points:
+for each point, find the nearest centroid, and accumulate per-centroid
+partial sums and counts (which the reduce side of the engine combines
+into new centroids).
+
+Kernel layout (see DESIGN.md §Hardware-Adaptation):
+
+* the point partition ``(P, D)`` is tiled into ``(BLOCK_P, D)`` VMEM
+  blocks via ``BlockSpec`` — the HBM→VMEM schedule a CUDA kernel would
+  express with threadblocks;
+* the centroid matrix ``(K, D)`` is small and stays resident in VMEM
+  across all grid steps;
+* the distance computation is expressed as one ``x @ c.T`` matmul per
+  block (MXU-shaped work: ``BLOCK_P × D × K``) plus row norms — *not* an
+  elementwise loop — so on a real TPU it hits the systolic array;
+* partial sums are accumulated across grid steps into the output refs
+  (the grid is sequential on one core, so read-modify-write is safe).
+
+``interpret=True`` is mandatory on this image: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tiling: 128-multiples keep the matmul MXU-aligned on real TPUs.
+DEFAULT_BLOCK_P = 2048
+
+
+def _kmeans_block_kernel(x_ref, c_ref, m_ref, sums_ref, counts_ref):
+    """One grid step: assign a block of points, accumulate partials.
+
+    x_ref:      (BLOCK_P, D) points block
+    c_ref:      (K, D) centroids (resident)
+    m_ref:      (BLOCK_P,) 0/1 validity mask (padding rows are 0)
+    sums_ref:   (K, D) accumulated partial sums      (output)
+    counts_ref: (K,)  accumulated per-centroid count (output)
+    """
+    step = pl.program_id(0)
+
+    x = x_ref[...]
+    c = c_ref[...]
+    m = m_ref[...]
+
+    # Squared distances via the expanded form; the x @ c.T term is the MXU
+    # workload. |x|^2 is constant per row and irrelevant to the argmin.
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # (BP, K)
+    c2 = jnp.sum(c * c, axis=1)  # (K,)
+    d2 = c2[None, :] - 2.0 * xc  # (BP, K), up to the |x|^2 constant
+    assign = jnp.argmin(d2, axis=1)  # (BP,)
+
+    # One-hot (BP, K) masked by validity; partials via a second matmul.
+    k = c.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    onehot = onehot * m[:, None]
+    block_sums = jnp.dot(onehot.T, x, preferred_element_type=jnp.float32)  # (K, D)
+    block_counts = jnp.sum(onehot, axis=0)  # (K,)
+
+    @pl.when(step == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    sums_ref[...] += block_sums
+    counts_ref[...] += block_counts
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def kmeans_partials(points, centroids, mask, *, block_p: int = DEFAULT_BLOCK_P):
+    """Partial sums/counts for one k-means step over one partition.
+
+    points:    (P, D) f32, P divisible by block_p (pad + mask otherwise)
+    centroids: (K, D) f32
+    mask:      (P,)  f32 0/1 — invalid (padding) rows contribute nothing
+
+    Returns (sums (K, D) f32, counts (K,) f32).
+    """
+    p, d = points.shape
+    k = centroids.shape[0]
+    if p % block_p != 0:
+        raise ValueError(f"P={p} must be a multiple of block_p={block_p}")
+    grid = p // block_p
+    return pl.pallas_call(
+        _kmeans_block_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block_p, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_p,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(points, centroids, mask)
+
+
+def vmem_footprint_bytes(block_p: int, d: int, k: int) -> int:
+    """Estimated VMEM residency of one grid step (f32), for the §Perf
+    MXU/VMEM analysis: points block + centroids + one-hot + distances +
+    outputs."""
+    return 4 * (block_p * d + k * d + block_p * k * 2 + k * d + k + block_p)
+
+
+def mxu_utilization_estimate(block_p: int, d: int, k: int) -> float:
+    """Fraction of the per-step FLOPs that land on MXU-shaped matmuls
+    (the two jnp.dot calls) vs vector ops — the §Perf efficiency metric.
+    Dimensions aligned to 128 keep the systolic array full; misalignment
+    wastes the remainder lanes."""
+    def align_eff(n: int) -> float:
+        return n / (128 * ((n + 127) // 128))
+
+    matmul_flops = 2.0 * block_p * d * k * 2  # x@c.T and onehot.T@x
+    vector_flops = block_p * k * 4.0 + block_p * d
+    shape_eff = align_eff(block_p) * align_eff(d) * align_eff(k)
+    return (matmul_flops / (matmul_flops + vector_flops)) * shape_eff

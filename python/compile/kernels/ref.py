@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the k-means kernel — the correctness reference the
+Pallas kernel (and, transitively, the Rust-side PJRT execution) is tested
+against."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_partials_ref(points, centroids, mask):
+    """Reference partial sums/counts (same contract as
+    ``kernels.kmeans.kmeans_partials``)."""
+    d2 = (
+        jnp.sum(points * points, axis=1)[:, None]
+        - 2.0 * points @ centroids.T
+        + jnp.sum(centroids * centroids, axis=1)[None, :]
+    )
+    assign = jnp.argmin(d2, axis=1)
+    k = centroids.shape[0]
+    onehot = (assign[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    onehot = onehot * mask[:, None]
+    sums = onehot.T @ points
+    counts = onehot.sum(axis=0)
+    return sums, counts
+
+
+def kmeans_update_ref(points, centroids, mask):
+    """Full-step reference: new centroids (empty clusters keep the old)."""
+    sums, counts = kmeans_partials_ref(points, centroids, mask)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    updated = sums / safe
+    return jnp.where(counts[:, None] > 0, updated, centroids)

@@ -1,0 +1,59 @@
+"""L2 — the k-means step as a JAX computation, calling the L1 Pallas
+kernel so both lower into one HLO module.
+
+The exported function is the per-partition *map task* of the engine's
+k-means workload: given this partition's points and the current
+centroids, produce the partial sums/counts the reduce stage combines.
+``new_centroids`` (partials → centroids) is exported separately for the
+reduce side / driver.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.kmeans import kmeans_partials, DEFAULT_BLOCK_P
+
+
+def kmeans_step(points, centroids, mask, *, block_p: int = DEFAULT_BLOCK_P):
+    """One partition's contribution to a k-means iteration.
+
+    Returns ``(sums (K,D), counts (K,), inertia ())`` — inertia is the
+    masked sum of squared distances to the assigned centroid, the loss
+    the e2e example logs per iteration.
+    """
+    sums, counts = kmeans_partials(points, centroids, mask, block_p=block_p)
+    # Inertia from the same quantities (cheap, outside the kernel):
+    # for assigned centroid c(x): |x-c|^2 summed. Recompute via distances
+    # on the (small) per-partition scale in plain XLA ops.
+    d2 = (
+        jnp.sum(points * points, axis=1)[:, None]
+        - 2.0 * points @ centroids.T
+        + jnp.sum(centroids * centroids, axis=1)[None, :]
+    )
+    inertia = jnp.sum(jnp.min(d2, axis=1) * mask)
+    return sums, counts, inertia
+
+
+def new_centroids(sums, counts, old_centroids):
+    """Reduce-side combine: partial sums/counts → next centroids (empty
+    clusters keep their previous position)."""
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    updated = sums / safe
+    return jnp.where(counts[:, None] > 0, updated, old_centroids)
+
+
+def lower_kmeans_step(p: int, d: int, k: int, block_p: int):
+    """Lower ``kmeans_step`` for fixed shapes; returns the jax Lowered."""
+    pts = jax.ShapeDtypeStruct((p, d), jnp.float32)
+    cts = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    msk = jax.ShapeDtypeStruct((p,), jnp.float32)
+    fn = lambda a, b, m: kmeans_step(a, b, m, block_p=block_p)  # noqa: E731
+    return jax.jit(fn).lower(pts, cts, msk)
+
+
+def lower_new_centroids(d: int, k: int):
+    s = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    c = jax.ShapeDtypeStruct((k,), jnp.float32)
+    return jax.jit(new_centroids).lower(s, c, s)

@@ -1,0 +1,25 @@
+//! Bench: experiment **E8** — the methodology's ≤10 runs vs exhaustive
+//! grid search (216 configurations) vs random search, on the three
+//! case-study workloads. Quantifies the paper's "10 runs instead of 512"
+//! efficiency claim.
+//!
+//! `cargo bench --bench ablation_search`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::ablation::{ablation, ablation_table, threshold_sweep};
+use sparktune::testkit::bench;
+use sparktune::workloads::Workload;
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    let workloads =
+        [Workload::SortByKey1B, Workload::KMeans500D, Workload::AggregateByKey2B];
+    let mut rows = None;
+    bench("ablation: 3 workloads × (10 + 216 + 41) runs", 1, 3.0 * 267.0, || {
+        rows = Some(ablation(&workloads, &cluster));
+    });
+    println!("\n{}", ablation_table(&rows.unwrap()).to_markdown());
+    for w in [Workload::SortByKey1B, Workload::AggregateByKey2B] {
+        println!("{}", threshold_sweep(w, &cluster).to_markdown());
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate the paper's **§5 case studies** — the Fig-4
+//! methodology applied end-to-end to sort-by-key (10 % threshold),
+//! k-means-500d and aggregate-by-key (5 %).
+//!
+//! `cargo bench --bench case_studies`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::cases::{case_studies, case_table};
+use sparktune::testkit::bench;
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    let mut cases = None;
+    bench("case studies: 3 × ≤10-run methodology", 2, 30.0, || {
+        cases = Some(case_studies(&cluster));
+    });
+    println!("\n{}", case_table(&cases.unwrap()).to_markdown());
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate the paper's **Fig 1** (sort-by-key sensitivity,
+//! 1 B × 100 B records, Kryo baseline) and time the harness itself.
+//!
+//! `cargo bench --bench fig1_sortbykey`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::sensitivity;
+use sparktune::testkit::bench;
+use sparktune::workloads::Workload;
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    let mut fig = None;
+    bench("fig1: 17 configs × 5 reps (sim)", 3, 17.0 * 5.0, || {
+        fig = Some(sensitivity(Workload::SortByKey1B, &cluster));
+    });
+    println!("\n{}", fig.unwrap().to_ascii(110));
+}

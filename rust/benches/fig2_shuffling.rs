@@ -1,0 +1,18 @@
+//! Bench: regenerate the paper's **Fig 2** (shuffling sensitivity,
+//! 400 GB terasort-gen, Kryo baseline).
+//!
+//! `cargo bench --bench fig2_shuffling`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::sensitivity;
+use sparktune::testkit::bench;
+use sparktune::workloads::Workload;
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    let mut fig = None;
+    bench("fig2: 17 configs × 5 reps (sim)", 3, 17.0 * 5.0, || {
+        fig = Some(sensitivity(Workload::Shuffling400G, &cluster));
+    });
+    println!("\n{}", fig.unwrap().to_ascii(110));
+}

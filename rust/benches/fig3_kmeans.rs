@@ -1,0 +1,22 @@
+//! Bench: regenerate the paper's **Fig 3** (k-means sensitivity, 100 M
+//! points top / 200 M points bottom, 100 dims, k = 10, 10 iterations).
+//!
+//! `cargo bench --bench fig3_kmeans`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::sensitivity;
+use sparktune::testkit::bench;
+use sparktune::workloads::Workload;
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    for (label, w) in
+        [("fig3-top (100M)", Workload::KMeans100M), ("fig3-bottom (200M)", Workload::KMeans200M)]
+    {
+        let mut fig = None;
+        bench(&format!("{label}: 17 configs × 5 reps"), 2, 17.0 * 5.0, || {
+            fig = Some(sensitivity(w, &cluster));
+        });
+        println!("\n{}", fig.unwrap().to_ascii(110));
+    }
+}

@@ -1,0 +1,81 @@
+//! Bench: the L3 hot paths — codec/serializer substrates, the
+//! discrete-event simulator core, and a full simulated job — the
+//! instrument behind EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench hotpath`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::codec::CodecKind;
+use sparktune::conf::SparkConf;
+use sparktune::engine::run;
+use sparktune::ser::{Record, SerKind};
+use sparktune::sim::{run_stage, Phase, SimOpts, TaskSpec};
+use sparktune::testkit::bench;
+use sparktune::util::Prng;
+use sparktune::workloads::Workload;
+
+fn main() {
+    // ---- codecs on 4 MiB of mid-entropy data ----
+    let mut rng = Prng::new(0xBE7C);
+    let mut data = vec![0u8; 4 << 20];
+    rng.fill_bytes_entropy(&mut data, 0.45);
+    for kind in CodecKind::SPARK {
+        let mut compressed = Vec::new();
+        bench(&format!("codec/{kind}/compress 4MiB"), 9, data.len() as f64, || {
+            compressed = kind.compress_raw(&data);
+        });
+        bench(&format!("codec/{kind}/decompress 4MiB"), 9, data.len() as f64, || {
+            std::hint::black_box(kind.decompress_raw(&compressed, data.len()).unwrap());
+        });
+    }
+
+    // ---- serializers on 20k × 100 B KV records ----
+    let records: Vec<Record> = (0..20_000)
+        .map(|_| {
+            let mut k = vec![0u8; 10];
+            let mut v = vec![0u8; 90];
+            rng.fill_bytes_entropy(&mut k, 0.6);
+            rng.fill_bytes_entropy(&mut v, 0.45);
+            Record::Kv { key: k, value: v }
+        })
+        .collect();
+    let payload = 100.0 * 20_000.0;
+    for kind in SerKind::ALL {
+        let mut bytes = Vec::new();
+        bench(&format!("ser/{kind}/serialize 20k recs"), 9, payload, || {
+            bytes = kind.serialize(&records);
+        });
+        bench(&format!("ser/{kind}/deserialize 20k recs"), 9, payload, || {
+            std::hint::black_box(kind.deserialize(&bytes).unwrap());
+        });
+    }
+
+    // ---- DES core: 2000-task mixed stage on the 320-core cluster ----
+    let cluster = ClusterSpec::marenostrum();
+    let tasks: Vec<TaskSpec> = (0..2000)
+        .map(|i| {
+            TaskSpec::new(vec![
+                Phase::NetIn { bytes: 1e6 * (1 + i % 5) as f64 },
+                Phase::DiskRead { bytes: 2e6 },
+                Phase::Cpu { secs: 0.05 },
+                Phase::DiskWrite { bytes: 3e6 },
+            ])
+        })
+        .collect();
+    bench("sim/run_stage 2000 tasks × 4 phases", 9, 2000.0, || {
+        std::hint::black_box(run_stage(&cluster, &tasks, &SimOpts::default()));
+    });
+
+    // ---- full simulated jobs (the unit of every experiment) ----
+    for (name, w) in [
+        ("sort-by-key", Workload::SortByKey1B),
+        ("shuffling", Workload::Shuffling400G),
+        ("kmeans-100m (21 stages)", Workload::KMeans100M),
+    ] {
+        let job = w.job();
+        let conf = SparkConf::default();
+        bench(&format!("engine/run {name}"), 9, 1.0, || {
+            std::hint::black_box(run(&job, &conf, &cluster, &SimOpts::default()));
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate the paper's **Table 2** (mean |deviation| from the
+//! Kryo baseline per parameter per benchmark) side-by-side with the
+//! paper's reported values.
+//!
+//! `cargo bench --bench table2_impact`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::experiments::table2;
+use sparktune::testkit::bench;
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    let mut t = None;
+    bench("table2: 3 benchmarks × 16 configs × 5 reps", 1, 3.0 * 16.0 * 5.0, || {
+        t = Some(table2(&cluster));
+    });
+    println!("\n{}", t.unwrap().to_markdown());
+}

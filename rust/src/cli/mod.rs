@@ -1,0 +1,307 @@
+//! Hand-rolled CLI (no `clap` in the offline crate set): argument
+//! parsing, subcommand dispatch, `--help-conf` from the parameter
+//! registry.
+//!
+//! ```text
+//! sparktune run    --workload <name> [--conf k=v]... [--seed N] [--reps N]
+//! sparktune tune   --workload <name> [--threshold 0.10] [--short]
+//! sparktune sweep  --figure fig1|fig2|fig3|table2 [--out-dir DIR]
+//! sparktune cases  [--out-dir DIR]
+//! sparktune ablation [--workload <name>]
+//! sparktune help-conf
+//! ```
+
+use crate::cluster::ClusterSpec;
+use crate::conf::{params, SparkConf};
+use crate::engine::run;
+use crate::experiments::{self, cases, sensitivity};
+use crate::sim::SimOpts;
+use crate::tuner::{tune, TuneOpts};
+use crate::util::stats::Summary;
+use crate::workloads::Workload;
+
+/// Parsed flags: `--key value` pairs, repeated `--conf`, positionals.
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+    confs: Vec<String>,
+    bools: Vec<String>,
+}
+
+fn parse_args(argv: &[String]) -> Result<Args, String> {
+    let Some(cmd) = argv.first() else {
+        return Err("missing subcommand".into());
+    };
+    let mut flags = Vec::new();
+    let mut confs = Vec::new();
+    let mut bools = Vec::new();
+    let mut i = 1;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if name == "conf" {
+                i += 1;
+                confs.push(
+                    argv.get(i).ok_or_else(|| "missing value after --conf".to_string())?.clone(),
+                );
+            } else if matches!(name, "short" | "verbose") {
+                bools.push(name.to_string());
+            } else {
+                i += 1;
+                let v = argv
+                    .get(i)
+                    .ok_or_else(|| format!("missing value after --{name}"))?
+                    .clone();
+                flags.push((name.to_string(), v));
+            }
+        } else {
+            return Err(format!("unexpected argument {a:?}"));
+        }
+        i += 1;
+    }
+    Ok(Args { cmd: cmd.clone(), flags, confs, bools })
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    fn workload(&self) -> Result<Workload, String> {
+        let name = self.flag("workload").unwrap_or("sort-by-key");
+        Workload::from_name(name).ok_or_else(|| format!("unknown workload {name:?}"))
+    }
+
+    fn conf(&self) -> Result<SparkConf, String> {
+        let mut conf = SparkConf::default();
+        for pair in &self.confs {
+            let (k, v) =
+                pair.split_once('=').ok_or_else(|| format!("--conf expects k=v, got {pair:?}"))?;
+            conf.set(k, v).map_err(|e| e.to_string())?;
+        }
+        Ok(conf)
+    }
+}
+
+const USAGE: &str = "sparktune — Spark-1.5 parameter-tuning reproduction (Petridis et al., 2016)
+
+USAGE:
+  sparktune run      --workload <name> [--conf k=v]... [--reps N] [--seed N]
+  sparktune tune     --workload <name> [--threshold 0.10] [--short]
+  sparktune sweep    --figure fig1|fig2|fig3|table2 [--out-dir DIR]
+  sparktune cases    [--out-dir DIR]
+  sparktune ablation [--workload <name>]
+  sparktune help-conf
+
+WORKLOADS: sort-by-key | shuffling | kmeans-100m | kmeans-200m |
+           kmeans-500d | aggregate-by-key | mini-sort-by-key
+";
+
+/// CLI entrypoint; returns the process exit code.
+pub fn main(argv: Vec<String>) -> i32 {
+    match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            2
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<(), String> {
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" || argv[0] == "-h" {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let args = parse_args(argv)?;
+    let cluster = ClusterSpec::marenostrum();
+    match args.cmd.as_str() {
+        "run" => {
+            let w = args.workload()?;
+            let conf = args.conf()?;
+            conf.validate().map_err(|e| e.to_string())?;
+            let reps: u64 = args.flag("reps").unwrap_or("5").parse().map_err(|e| format!("{e}"))?;
+            let seed: u64 = args.flag("seed").unwrap_or("42").parse().map_err(|e| format!("{e}"))?;
+            let job = w.job();
+            let mut durations = Vec::new();
+            for rep in 0..reps {
+                let r = run(&job, &conf, &cluster, &SimOpts { jitter: 0.04, seed: seed + rep });
+                if let Some(c) = r.crashed {
+                    println!("run {rep}: CRASH — {c}");
+                    return Ok(());
+                }
+                println!("run {rep}: {:.1}s ({} stages)", r.duration, r.stages.len());
+                if args.has("verbose") {
+                    for s in &r.stages {
+                        println!(
+                            "    {:<10} {:>8.2}s  cpu {:>8.1}s  disk {:>7.1} GB  net {:>6.1} GB  gc ×{:.3}",
+                            s.name,
+                            s.duration,
+                            s.cpu_secs,
+                            s.disk_bytes / 1e9,
+                            s.net_bytes / 1e9,
+                            s.gc_factor
+                        );
+                    }
+                }
+                durations.push(r.duration);
+            }
+            let s = Summary::from(durations);
+            println!(
+                "{}: median {:.1}s (min {:.1} / max {:.1}) under [{}]",
+                w.name(),
+                s.median(),
+                s.min(),
+                s.max(),
+                conf
+            );
+            Ok(())
+        }
+        "tune" => {
+            let w = args.workload()?;
+            let threshold: f64 =
+                args.flag("threshold").unwrap_or("0.0").parse().map_err(|e| format!("{e}"))?;
+            let mut runner = cases::sim_runner(w, &cluster);
+            let out =
+                tune(&mut runner, &TuneOpts { threshold, short_version: args.has("short") });
+            println!("tuning {} (threshold {:.0}%):", w.name(), threshold * 100.0);
+            println!("  baseline (defaults): {:.1}s", out.baseline);
+            for t in &out.trials {
+                let time = if t.duration.is_finite() {
+                    format!("{:.1}s", t.duration)
+                } else {
+                    "CRASH".to_string()
+                };
+                println!(
+                    "  [{}] {:<36} {:>9}  ({:+.1}%)",
+                    if t.kept { "KEEP" } else { "    " },
+                    t.step,
+                    time,
+                    -100.0 * t.improvement
+                );
+            }
+            println!(
+                "  final: {:.1}s — {:.1}% improvement in {} runs",
+                out.best,
+                100.0 * out.total_improvement(),
+                out.runs()
+            );
+            for (k, v) in out.final_settings() {
+                println!("    {k}={v}");
+            }
+            Ok(())
+        }
+        "sweep" => {
+            let fig = args.flag("figure").unwrap_or("fig1");
+            let out_dir = args.flag("out-dir").map(str::to_string);
+            let emit = |fig: &crate::report::Figure| -> Result<(), String> {
+                println!("{}", fig.to_ascii(100));
+                if let Some(dir) = &out_dir {
+                    std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                    let path = format!("{dir}/{}.csv", fig.id);
+                    std::fs::write(&path, fig.to_csv()).map_err(|e| e.to_string())?;
+                    println!("wrote {path}");
+                }
+                Ok(())
+            };
+            match fig {
+                "fig1" => emit(&sensitivity(Workload::SortByKey1B, &cluster))?,
+                "fig2" => emit(&sensitivity(Workload::Shuffling400G, &cluster))?,
+                "fig3" => {
+                    emit(&sensitivity(Workload::KMeans100M, &cluster))?;
+                    emit(&sensitivity(Workload::KMeans200M, &cluster))?;
+                }
+                "table2" => {
+                    let t = experiments::table2(&cluster);
+                    println!("{}", t.to_markdown());
+                    if let Some(dir) = &out_dir {
+                        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                        std::fs::write(format!("{dir}/table2.csv"), t.to_csv())
+                            .map_err(|e| e.to_string())?;
+                    }
+                }
+                other => return Err(format!("unknown figure {other:?}")),
+            }
+            Ok(())
+        }
+        "cases" => {
+            let cs = cases::case_studies(&cluster);
+            println!("{}", cases::case_table(&cs).to_markdown());
+            if let Some(dir) = args.flag("out-dir") {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                std::fs::write(format!("{dir}/case_studies.csv"), cases::case_table(&cs).to_csv())
+                    .map_err(|e| e.to_string())?;
+            }
+            Ok(())
+        }
+        "ablation" => {
+            let w = args.workload()?;
+            let rows = experiments::ablation::ablation(&[w], &cluster);
+            println!("{}", experiments::ablation::ablation_table(&rows).to_markdown());
+            Ok(())
+        }
+        "help-conf" => {
+            println!("Modeled Spark 1.5.2 parameters (★ = the paper's 12):\n");
+            for p in params::PARAMS {
+                println!(
+                    "{} {:<40} [{}] default={}\n    {}\n",
+                    if p.paper_param { "★" } else { " " },
+                    p.key,
+                    p.category,
+                    p.default,
+                    p.doc
+                );
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn parses_flags_confs_and_bools() {
+        let a = parse_args(&argv(
+            "run --workload mini --conf spark.serializer=kryo --conf spark.rdd.compress=true --short --reps 2",
+        ))
+        .unwrap();
+        assert_eq!(a.cmd, "run");
+        assert_eq!(a.flag("workload"), Some("mini"));
+        assert_eq!(a.flag("reps"), Some("2"));
+        assert_eq!(a.confs.len(), 2);
+        assert!(a.has("short"));
+        let conf = a.conf().unwrap();
+        assert_eq!(conf.serializer, crate::ser::SerKind::Kryo);
+        assert!(conf.rdd_compress);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_args(&argv("run --workload")).is_err());
+        assert!(parse_args(&argv("run stray")).is_err());
+        assert!(parse_args(&[]).is_err());
+        let a = parse_args(&argv("run --conf noequals")).unwrap();
+        assert!(a.conf().is_err());
+        let a = parse_args(&argv("run --workload quantum")).unwrap();
+        assert!(a.workload().is_err());
+    }
+
+    #[test]
+    fn run_and_tune_mini_through_dispatch() {
+        assert_eq!(main(argv("run --workload mini --reps 2 --seed 7")), 0);
+        assert_eq!(main(argv("tune --workload mini --short")), 0);
+        assert_eq!(main(argv("help-conf")), 0);
+        assert_eq!(main(argv("nope")), 2);
+    }
+}

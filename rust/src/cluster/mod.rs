@@ -1,0 +1,149 @@
+//! Cluster hardware model.
+//!
+//! [`ClusterSpec`] describes the modeled testbed: node count, cores,
+//! memory, and the three contended hardware resources the cost model
+//! charges — per-node disk bandwidth (+ seek cost), per-node NIC
+//! bandwidth, and CPU speed (a scalar relative to one MareNostrum-era
+//! Xeon E5 core, which all codec/serializer profiles are expressed in).
+//!
+//! [`ClusterSpec::marenostrum`] is the paper's testbed: 20 × 16-core
+//! nodes, 1.5 GB/core average allocated memory (§4), Infiniband
+//! interconnect, GPFS-backed local scratch. Constants are set to 2013-era
+//! MareNostrum III hardware classes and then held fixed across ALL
+//! experiments — only `SparkConf` varies, exactly as in the paper.
+
+use crate::conf::SparkConf;
+
+/// Node identifier (0-based).
+pub type NodeId = u32;
+
+/// Hardware description of the modeled cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterSpec {
+    /// Number of worker nodes (one executor per node).
+    pub nodes: u32,
+    /// Cores per node.
+    pub cores_per_node: u32,
+    /// Executor JVM heap per node, bytes.
+    pub heap_per_node: u64,
+    /// Physical RAM per node, bytes (RAM − heap is the OS page cache that
+    /// absorbs small shuffle writes; see `shuffle::FLUSH_PENALTY_SECS`).
+    pub ram_per_node: u64,
+    /// Sequential disk bandwidth per node, bytes/s (shared by all tasks on
+    /// the node — local scratch on MareNostrum compute nodes).
+    pub disk_bw: f64,
+    /// Cost of one disk seek / small random I-O, seconds.
+    pub disk_seek: f64,
+    /// Cost of an open+close pair on the scratch filesystem, seconds
+    /// (drives the hash-shuffle many-files penalty).
+    pub file_open_cost: f64,
+    /// NIC bandwidth per node (receive side is the binding constraint in
+    /// all-to-all shuffles), bytes/s.
+    pub net_bw: f64,
+    /// Per-fetch network round-trip latency, seconds.
+    pub net_latency: f64,
+    /// CPU speed relative to one MareNostrum Xeon E5-2670 core (1.0).
+    pub cpu_speed: f64,
+    /// Fixed per-task overhead (scheduling, launch, result ser), seconds.
+    pub task_overhead: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's testbed (see module docs). Memory: the paper states
+    /// ~1.5 GB/core *average allocated*, i.e. 24 GB heap per 16-core node.
+    pub fn marenostrum() -> ClusterSpec {
+        ClusterSpec {
+            nodes: 20,
+            cores_per_node: 16,
+            heap_per_node: 24 * (1 << 30),
+            ram_per_node: 32 * (1 << 30),
+            // Local SATA scratch of the era: ~110 MB/s sequential, ~8 ms
+            // seek; GPFS metadata ops make file open/close ~1.5 ms.
+            disk_bw: 110.0e6,
+            disk_seek: 8.0e-3,
+            file_open_cost: 1.5e-3,
+            // Infiniband FDR-10 host link: ~1.2 GB/s effective per node
+            // once TCP-over-IB and framing overheads are paid.
+            net_bw: 1.2e9,
+            net_latency: 50.0e-6,
+            cpu_speed: 1.0,
+            task_overhead: 15.0e-3,
+        }
+    }
+
+    /// A small laptop-class spec used by Real-mode runs and tests
+    /// (4 nodes × 2 cores, modest I/O) — keeps simulated numbers human.
+    pub fn mini() -> ClusterSpec {
+        ClusterSpec {
+            nodes: 4,
+            cores_per_node: 2,
+            heap_per_node: 2 * (1 << 30),
+            ram_per_node: 4 * (1 << 30),
+            disk_bw: 200.0e6,
+            disk_seek: 0.1e-3,
+            file_open_cost: 0.05e-3,
+            net_bw: 1.0e9,
+            net_latency: 20.0e-6,
+            cpu_speed: 1.0,
+            task_overhead: 2.0e-3,
+        }
+    }
+
+    /// Derive the spec implied by a [`SparkConf`]'s cluster-level fields,
+    /// keeping MareNostrum hardware constants.
+    pub fn from_conf(conf: &SparkConf) -> ClusterSpec {
+        let mut s = ClusterSpec::marenostrum();
+        s.nodes = conf.num_executors;
+        s.cores_per_node = conf.executor_cores;
+        s.heap_per_node = conf.executor_memory;
+        s.ram_per_node = s.ram_per_node.max(conf.executor_memory + (8 << 30));
+        s
+    }
+
+    /// Total cores.
+    pub fn total_cores(&self) -> u32 {
+        self.nodes * self.cores_per_node
+    }
+
+    /// Total heap, bytes.
+    pub fn total_heap(&self) -> u64 {
+        self.heap_per_node * self.nodes as u64
+    }
+
+    /// Aggregate NIC receive bandwidth, bytes/s.
+    pub fn total_net_bw(&self) -> f64 {
+        self.net_bw * self.nodes as f64
+    }
+
+    /// Aggregate disk bandwidth, bytes/s.
+    pub fn total_disk_bw(&self) -> f64 {
+        self.disk_bw * self.nodes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marenostrum_matches_paper_setup() {
+        let c = ClusterSpec::marenostrum();
+        assert_eq!(c.nodes, 20);
+        assert_eq!(c.cores_per_node, 16);
+        assert_eq!(c.total_cores(), 320);
+        // ~1.5 GB per core
+        let per_core = c.heap_per_node as f64 / c.cores_per_node as f64;
+        assert!((per_core / (1 << 30) as f64 - 1.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn from_conf_overrides_topology() {
+        let conf = SparkConf::default()
+            .with("spark.executor.instances", "4")
+            .with("spark.executor.cores", "8");
+        let c = ClusterSpec::from_conf(&conf);
+        assert_eq!(c.nodes, 4);
+        assert_eq!(c.total_cores(), 32);
+        assert_eq!(c.disk_bw, ClusterSpec::marenostrum().disk_bw);
+    }
+}

@@ -1,0 +1,287 @@
+//! LZ4-style codec (`spark.io.compression.codec=lz4`).
+//!
+//! Mirrors the LZ4 block format: a stream of *sequences*, each
+//!
+//! ```text
+//! token(1) | [lit-len 255-run bytes] | literals | offset(2, LE) |
+//!           [match-len 255-run bytes]
+//! ```
+//!
+//! with the token's high nibble holding the literal length (15 escapes to
+//! 255-run extension bytes) and the low nibble `match_len - 4` (15 escapes
+//! likewise). The final sequence is literals-only. LZ4's signature
+//! property — decompression is a straight memcpy interpreter with no
+//! bit-twiddling — holds here too, which is why [`decompress`] is the
+//! fastest of the three (see the codec calibration bench).
+
+use super::CodecError;
+
+const HASH_LOG: usize = 16;
+const MIN_MATCH: usize = 4;
+const MAX_OFFSET: usize = 65535;
+/// LZ4 spec: the last 5 bytes are always literals, and the last match must
+/// start at least 12 bytes before the end of the block.
+const LAST_LITERALS: usize = 5;
+const MFLIMIT: usize = 12;
+
+
+/// Length of the common prefix of `a[ai..]` and `a[bi..]` up to `max`,
+/// compared 8 bytes at a time (§Perf optimization #3).
+#[inline]
+fn common_prefix(data: &[u8], ai: usize, bi: usize, max: usize) -> usize {
+    let mut len = 0;
+    while len + 8 <= max {
+        let x = u64::from_le_bytes(data[ai + len..ai + len + 8].try_into().unwrap());
+        let y = u64::from_le_bytes(data[bi + len..bi + len + 8].try_into().unwrap());
+        let diff = x ^ y;
+        if diff != 0 {
+            return len + (diff.trailing_zeros() / 8) as usize;
+        }
+        len += 8;
+    }
+    while len < max && data[ai + len] == data[bi + len] {
+        len += 1;
+    }
+    len
+}
+
+#[inline]
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_LOG)) as usize
+}
+
+fn write_len_ext(out: &mut Vec<u8>, mut v: usize) {
+    // 255-run extension encoding.
+    while v >= 255 {
+        out.push(255);
+        v -= 255;
+    }
+    out.push(v as u8);
+}
+
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], offset: usize, match_len: usize) {
+    debug_assert!(match_len == 0 || match_len >= MIN_MATCH);
+    let lit_len = literals.len();
+    let lit_nib = lit_len.min(15);
+    let match_nib = if match_len == 0 { 0 } else { (match_len - MIN_MATCH).min(15) };
+    out.push(((lit_nib as u8) << 4) | match_nib as u8);
+    if lit_nib == 15 {
+        write_len_ext(out, lit_len - 15);
+    }
+    out.extend_from_slice(literals);
+    if match_len > 0 {
+        out.extend_from_slice(&(offset as u16).to_le_bytes());
+        if match_nib == 15 {
+            write_len_ext(out, match_len - MIN_MATCH - 15);
+        }
+    }
+}
+
+/// Compress `input` into an LZ4-block-style sequence stream.
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let n = input.len();
+    let mut out = Vec::with_capacity(n / 2 + n / 32 + 16);
+    if n < MFLIMIT {
+        emit_sequence(&mut out, input, 0, 0);
+        return out;
+    }
+    let mut table = vec![0u32; 1 << HASH_LOG]; // pos+1; 0 = empty
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    let match_limit = n - MFLIMIT;
+
+    while i <= match_limit {
+        let h = hash4(input, i);
+        let cand = table[h] as usize;
+        table[h] = (i + 1) as u32;
+        if cand > 0 {
+            let c = cand - 1;
+            if i - c <= MAX_OFFSET && input[c..c + MIN_MATCH] == input[i..i + MIN_MATCH] {
+                let max = (n - LAST_LITERALS) - i; // keep the literal tail
+                let len = MIN_MATCH
+                    + common_prefix(input, c + MIN_MATCH, i + MIN_MATCH, max - MIN_MATCH);
+                emit_sequence(&mut out, &input[lit_start..i], i - c, len);
+                // Seed positions inside the match for better downstream
+                // matching (denser than the snappy-style codec: lz4 favors
+                // ratio slightly over compress speed here).
+                let end = i + len;
+                let seed_to = end.min(match_limit);
+                let mut j = i + 1;
+                while j < seed_to {
+                    table[hash4(input, j)] = (j + 1) as u32;
+                    j += 1;
+                }
+                i = end;
+                lit_start = i;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    emit_sequence(&mut out, &input[lit_start..n], 0, 0);
+    out
+}
+
+#[inline]
+fn read_len_ext(input: &[u8], i: &mut usize, base: usize) -> Result<usize, CodecError> {
+    let mut len = base;
+    loop {
+        if *i >= input.len() {
+            return Err(CodecError::Truncated("lz4 length extension"));
+        }
+        let b = input[*i];
+        *i += 1;
+        len += b as usize;
+        if b != 255 {
+            return Ok(len);
+        }
+    }
+}
+
+/// Decompress; `expected_len` bounds the output allocation.
+pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>, CodecError> {
+    if expected_len > super::MAX_BLOCK_LEN {
+        return Err(CodecError::TooLong { declared: expected_len, limit: super::MAX_BLOCK_LEN });
+    }
+    let mut out = Vec::with_capacity(expected_len);
+    let mut i = 0usize;
+    if input.is_empty() {
+        return Ok(out);
+    }
+    loop {
+        if i >= input.len() {
+            // A valid stream ends exactly after a literals-only sequence.
+            return Ok(out);
+        }
+        let token = input[i];
+        i += 1;
+        // Literals.
+        let mut lit_len = (token >> 4) as usize;
+        if lit_len == 15 {
+            lit_len = read_len_ext(input, &mut i, 15)?;
+        }
+        if i + lit_len > input.len() {
+            return Err(CodecError::Truncated("lz4 literals"));
+        }
+        if out.len() + lit_len > expected_len {
+            return Err(CodecError::TooLong { declared: out.len() + lit_len, limit: expected_len });
+        }
+        out.extend_from_slice(&input[i..i + lit_len]);
+        i += lit_len;
+        if i >= input.len() {
+            return Ok(out); // final literals-only sequence
+        }
+        // Match.
+        if i + 1 >= input.len() {
+            return Err(CodecError::Truncated("lz4 offset"));
+        }
+        let offset = u16::from_le_bytes([input[i], input[i + 1]]) as usize;
+        i += 2;
+        let mut match_len = (token & 0xf) as usize + MIN_MATCH;
+        if (token & 0xf) == 15 {
+            match_len = read_len_ext(input, &mut i, 15 + MIN_MATCH)?;
+        }
+        let pos = out.len();
+        if offset == 0 || offset > pos {
+            return Err(CodecError::BadBackref { offset, pos });
+        }
+        if pos + match_len > expected_len {
+            return Err(CodecError::TooLong { declared: pos + match_len, limit: expected_len });
+        }
+        let src = pos - offset;
+        if offset >= match_len {
+            // Non-overlapping: single extend_from_within (the memcpy path).
+            out.extend_from_within(src..src + match_len);
+        } else {
+            for j in 0..match_len {
+                let b = out[src + j];
+                out.push(b);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn round_trip_basics() {
+        for input in [
+            &b""[..],
+            b"z",
+            b"short",
+            b"lz4 lz4 lz4 lz4 lz4 lz4 lz4 lz4 lz4 lz4 lz4 lz4",
+            b"abcdefghijklmnopqrstuvwxyz0123456789",
+        ] {
+            let c = compress(input);
+            assert_eq!(decompress(&c, input.len()).unwrap(), input, "len {}", input.len());
+        }
+    }
+
+    #[test]
+    fn token_nibble_escape_boundaries() {
+        // Exercise lit_len and match_len around the 15-escape boundary.
+        let mut r = Prng::new(5);
+        for lit in [14usize, 15, 16, 270, 271] {
+            for mat in [4usize, 18, 19, 20, 280] {
+                let mut v = Vec::new();
+                let mut lits = vec![0u8; lit];
+                r.fill_bytes(&mut lits);
+                v.extend_from_slice(&lits);
+                let pattern = b"QWERTYUI";
+                // repeated pattern gives a long match
+                for _ in 0..(mat / pattern.len() + 2) {
+                    v.extend_from_slice(pattern);
+                }
+                v.extend_from_slice(b"endtail"); // literal tail
+                let c = compress(&v);
+                assert_eq!(decompress(&c, v.len()).unwrap(), v, "lit {lit} mat {mat}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_zeros_high_ratio() {
+        let input = vec![0u8; 100_000];
+        let c = compress(&input);
+        assert!(c.len() < 1000, "ratio too poor: {}", c.len());
+        assert_eq!(decompress(&c, input.len()).unwrap(), input);
+    }
+
+    #[test]
+    fn overlapping_match_path() {
+        let input: Vec<u8> = b"abc".iter().copied().cycle().take(5000).collect();
+        let c = compress(&input);
+        assert_eq!(decompress(&c, input.len()).unwrap(), input);
+    }
+
+    #[test]
+    fn entropy_sweep_round_trip() {
+        let mut r = Prng::new(21);
+        for e in [0.1, 0.35, 0.65, 0.95] {
+            let mut v = vec![0u8; 87_654];
+            r.fill_bytes_entropy(&mut v, e);
+            let c = compress(&v);
+            assert_eq!(decompress(&c, v.len()).unwrap(), v, "entropy {e}");
+        }
+    }
+
+    #[test]
+    fn truncation_errors() {
+        let input = b"data data data data data data data data".repeat(10);
+        let c = compress(&input);
+        for cut in 1..c.len().min(40) {
+            let _ = decompress(&c[..cut], input.len()); // no panic
+        }
+    }
+
+    #[test]
+    fn zero_offset_rejected() {
+        // token: 1 literal + match, offset 0
+        let enc = [0x10 | 0x0, b'a', 0, 0];
+        assert!(matches!(decompress(&enc, 100), Err(CodecError::BadBackref { .. })));
+    }
+}

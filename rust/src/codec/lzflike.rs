@@ -1,0 +1,228 @@
+//! LZF-style codec (`spark.io.compression.codec=lzf`).
+//!
+//! Mirrors the LibLZF very-fast-compressor design: a single-probe 3-byte
+//! hash table, a short (8 KiB) back-reference window and control-byte
+//! encoding:
+//!
+//! * control `c < 0x20` → literal run of `c+1` bytes follows;
+//! * control `c >= 0x20` → back-reference: `len3 = c >> 5` (if `len3 == 7`
+//!   an extra byte extends it), `match_len = len3 + 2`, and the distance is
+//!   `((c & 0x1f) << 8 | next_byte) + 1` (≤ 8192).
+//!
+//! Profile: compression is a bit slower than the snappy-style codec (no
+//! skip acceleration, shorter window → more probe misses on large inputs)
+//! with a similar ratio — matching lzf's real-world standing in Spark 1.5.
+
+use super::CodecError;
+
+const WINDOW: usize = 1 << 13; // 8 KiB max distance
+const HASH_LOG: usize = 14;
+const MAX_LIT: usize = 32;
+const MAX_MATCH: usize = 2 + 7 + 255; // control len bits + extension byte
+
+
+/// Length of the common prefix of `a[ai..]` and `a[bi..]` up to `max`,
+/// compared 8 bytes at a time (§Perf optimization #3).
+#[inline]
+fn common_prefix(data: &[u8], ai: usize, bi: usize, max: usize) -> usize {
+    let mut len = 0;
+    while len + 8 <= max {
+        let x = u64::from_le_bytes(data[ai + len..ai + len + 8].try_into().unwrap());
+        let y = u64::from_le_bytes(data[bi + len..bi + len + 8].try_into().unwrap());
+        let diff = x ^ y;
+        if diff != 0 {
+            return len + (diff.trailing_zeros() / 8) as usize;
+        }
+        len += 8;
+    }
+    while len < max && data[ai + len] == data[bi + len] {
+        len += 1;
+    }
+    len
+}
+
+#[inline]
+fn hash3(data: &[u8], i: usize) -> usize {
+    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+    ((v.wrapping_mul(0x9E37_79B1)) >> (32 - HASH_LOG)) as usize
+}
+
+/// Compress `input`; output is self-delimiting given the raw length.
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let n = input.len();
+    let mut out = Vec::with_capacity(n / 2 + n / 16 + 16);
+    if n == 0 {
+        return out;
+    }
+    let mut table = vec![usize::MAX; 1 << HASH_LOG];
+    let mut lit_start = 0usize; // start of the pending literal run
+    let mut i = 0usize;
+
+    // Helper to flush pending literals [lit_start, end).
+    let flush_literals = |out: &mut Vec<u8>, data: &[u8], from: usize, to: usize| {
+        let mut s = from;
+        while s < to {
+            let run = (to - s).min(MAX_LIT);
+            out.push((run - 1) as u8);
+            out.extend_from_slice(&data[s..s + run]);
+            s += run;
+        }
+    };
+
+    while i + 2 < n {
+        let h = hash3(input, i);
+        let cand = table[h];
+        table[h] = i;
+        if cand != usize::MAX
+            && i - cand <= WINDOW
+            && input[cand..cand + 3] == input[i..i + 3]
+        {
+            // Extend the match (word-wise).
+            let max = (n - i).min(MAX_MATCH);
+            let len = 3 + common_prefix(input, cand + 3, i + 3, max - 3);
+            flush_literals(&mut out, input, lit_start, i);
+            let dist = i - cand - 1; // encoded distance (0-based)
+            let len_code = len - 2; // 1..=262
+            if len_code < 7 {
+                out.push(((len_code as u8) << 5) | ((dist >> 8) as u8));
+            } else {
+                out.push((7u8 << 5) | ((dist >> 8) as u8));
+                out.push((len_code - 7) as u8);
+            }
+            out.push((dist & 0xff) as u8);
+            // Seed the table inside the match region (sparsely, like liblzf).
+            let end = i + len;
+            let mut j = i + 1;
+            while j + 2 < n && j < end {
+                table[hash3(input, j)] = j;
+                j += 2;
+            }
+            i = end;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, input, lit_start, n);
+    out
+}
+
+/// Decompress; `expected_len` bounds the output allocation.
+pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>, CodecError> {
+    if expected_len > super::MAX_BLOCK_LEN {
+        return Err(CodecError::TooLong { declared: expected_len, limit: super::MAX_BLOCK_LEN });
+    }
+    let mut out = Vec::with_capacity(expected_len);
+    let mut i = 0usize;
+    while i < input.len() {
+        let c = input[i] as usize;
+        i += 1;
+        if c < 0x20 {
+            // Literal run of c+1 bytes.
+            let run = c + 1;
+            if i + run > input.len() {
+                return Err(CodecError::Truncated("lzf literal run"));
+            }
+            if out.len() + run > expected_len {
+                return Err(CodecError::TooLong { declared: out.len() + run, limit: expected_len });
+            }
+            out.extend_from_slice(&input[i..i + run]);
+            i += run;
+        } else {
+            let mut len_code = c >> 5;
+            if len_code == 7 {
+                if i >= input.len() {
+                    return Err(CodecError::Truncated("lzf extended length"));
+                }
+                len_code += input[i] as usize;
+                i += 1;
+            }
+            let len = len_code + 2;
+            if i >= input.len() {
+                return Err(CodecError::Truncated("lzf offset low byte"));
+            }
+            let dist = ((c & 0x1f) << 8 | input[i] as usize) + 1;
+            i += 1;
+            let pos = out.len();
+            if dist > pos {
+                return Err(CodecError::BadBackref { offset: dist, pos });
+            }
+            if pos + len > expected_len {
+                return Err(CodecError::TooLong { declared: pos + len, limit: expected_len });
+            }
+            // Overlapping copies are legal (dist < len) → byte-by-byte.
+            let src = pos - dist;
+            for j in 0..len {
+                let b = out[src + j];
+                out.push(b);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn round_trip_simple() {
+        for input in [
+            &b""[..],
+            b"a",
+            b"aaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaaa",
+            b"abcdefgh",
+            b"the quick brown fox the quick brown fox the quick brown fox",
+        ] {
+            let c = compress(input);
+            let d = decompress(&c, input.len()).unwrap();
+            assert_eq!(d, input);
+        }
+    }
+
+    #[test]
+    fn round_trip_long_runs_cross_max_match() {
+        // A run longer than MAX_MATCH forces multiple back-references.
+        let input = vec![7u8; 10 * MAX_MATCH + 13];
+        let c = compress(&input);
+        assert!(c.len() < input.len() / 10);
+        assert_eq!(decompress(&c, input.len()).unwrap(), input);
+    }
+
+    #[test]
+    fn round_trip_beyond_window() {
+        // Repeats spaced wider than the 8 KiB window can't be matched;
+        // still must round-trip.
+        let mut input = vec![0u8; 40_000];
+        let mut r = Prng::new(1);
+        r.fill_bytes_entropy(&mut input, 0.4);
+        let c = compress(&input);
+        assert_eq!(decompress(&c, input.len()).unwrap(), input);
+    }
+
+    #[test]
+    fn overlapping_copy() {
+        // "ababab..." exercises dist < len copies.
+        let input: Vec<u8> = b"ab".iter().copied().cycle().take(999).collect();
+        let c = compress(&input);
+        assert_eq!(decompress(&c, input.len()).unwrap(), input);
+    }
+
+    #[test]
+    fn rejects_bad_backref() {
+        // control 0x20|.. references distance > produced output
+        let bad = [0xff, 0x10, 0x10];
+        assert!(matches!(
+            decompress(&bad, 1000),
+            Err(CodecError::Truncated(_)) | Err(CodecError::BadBackref { .. })
+        ));
+    }
+
+    #[test]
+    fn output_capped_by_expected_len() {
+        let input = vec![9u8; 1000];
+        let c = compress(&input);
+        assert!(decompress(&c, 10).is_err());
+    }
+}

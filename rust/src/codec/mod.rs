@@ -1,0 +1,354 @@
+//! Compression codecs — the real substrate behind
+//! `spark.io.compression.codec` and the `shuffle.compress` /
+//! `shuffle.spill.compress` / `rdd.compress` knobs.
+//!
+//! Spark 1.5 ships three codecs: **snappy** (default), **lz4**, **lzf**.
+//! This module implements from-scratch analogues of all three — real,
+//! round-trip-tested byte codecs with genuinely different speed/ratio
+//! profiles — plus adapters over `flate2` (deflate) and `zstd` as
+//! cross-check comparators used in ablations.
+//!
+//! Real-mode execution compresses actual shuffle/spill/RDD bytes with these
+//! codecs; Sim mode charges each codec's *calibrated profile*
+//! ([`profile::CodecProfile`]) so paper-scale runs stay deterministic and
+//! machine-independent.
+//!
+//! Framing: every compressed block is wrapped in a tiny header
+//! (magic, codec id, raw length, crc32 of the raw bytes) so that Real-mode
+//! shuffle files are self-describing and corruption is detected — the
+//! decompressors themselves are also hardened against malformed input
+//! (they return [`CodecError`], never panic or read out of bounds).
+
+pub mod lz4like;
+pub mod lzflike;
+pub mod profile;
+pub mod snappylike;
+
+use std::fmt;
+
+pub use profile::CodecProfile;
+
+/// Errors from decompression of malformed / truncated input.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum CodecError {
+    #[error("truncated input: {0}")]
+    Truncated(&'static str),
+    #[error("bad back-reference (offset {offset} at out position {pos})")]
+    BadBackref { offset: usize, pos: usize },
+    #[error("declared length {declared} exceeds limit {limit}")]
+    TooLong { declared: usize, limit: usize },
+    #[error("bad frame: {0}")]
+    BadFrame(&'static str),
+    #[error("crc mismatch (stored {stored:#010x}, computed {computed:#010x})")]
+    CrcMismatch { stored: u32, computed: u32 },
+    #[error("output length mismatch: declared {declared}, produced {produced}")]
+    LengthMismatch { declared: usize, produced: usize },
+    #[error("external codec failure: {0}")]
+    External(String),
+}
+
+/// The codec options of `spark.io.compression.codec`, plus cross-check
+/// codecs used only in ablation experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum CodecKind {
+    /// Snappy-style: greedy LZ77 with skip acceleration. Fastest compress,
+    /// moderate ratio. Spark 1.5's default.
+    Snappy,
+    /// LZ4-style: token/sequence format, hash-chain matcher. Fast, best
+    /// decompress speed, ratio close to snappy (slightly worse on short
+    /// low-entropy records — the paper's Fig. 2 regression).
+    Lz4,
+    /// LZF-style: 3-byte-hash single-probe matcher, short copy window.
+    /// Slower compress, similar ratio.
+    Lzf,
+    /// DEFLATE via `flate2` — ablation comparator only (not a Spark 1.5
+    /// shuffle codec).
+    Deflate,
+    /// Zstandard via `zstd` — ablation comparator only.
+    Zstd,
+}
+
+impl CodecKind {
+    /// All codecs selectable by `spark.io.compression.codec` in Spark 1.5.
+    pub const SPARK: [CodecKind; 3] = [CodecKind::Snappy, CodecKind::Lz4, CodecKind::Lzf];
+
+    /// Every codec in the registry (including ablation comparators).
+    pub const ALL: [CodecKind; 5] = [
+        CodecKind::Snappy,
+        CodecKind::Lz4,
+        CodecKind::Lzf,
+        CodecKind::Deflate,
+        CodecKind::Zstd,
+    ];
+
+    /// The Spark config value string.
+    pub fn config_name(self) -> &'static str {
+        match self {
+            CodecKind::Snappy => "snappy",
+            CodecKind::Lz4 => "lz4",
+            CodecKind::Lzf => "lzf",
+            CodecKind::Deflate => "deflate",
+            CodecKind::Zstd => "zstd",
+        }
+    }
+
+    /// Parse a `spark.io.compression.codec` value.
+    pub fn from_config_name(s: &str) -> Option<CodecKind> {
+        // Spark also accepts fully-qualified class names.
+        let t = s.trim().to_ascii_lowercase();
+        let t = t.rsplit('.').next().unwrap_or(&t);
+        match t.trim_end_matches("compressioncodec") {
+            "snappy" => Some(CodecKind::Snappy),
+            "lz4" => Some(CodecKind::Lz4),
+            "lzf" => Some(CodecKind::Lzf),
+            "deflate" => Some(CodecKind::Deflate),
+            "zstd" => Some(CodecKind::Zstd),
+            _ => None,
+        }
+    }
+
+    fn id_byte(self) -> u8 {
+        match self {
+            CodecKind::Snappy => 1,
+            CodecKind::Lz4 => 2,
+            CodecKind::Lzf => 3,
+            CodecKind::Deflate => 4,
+            CodecKind::Zstd => 5,
+        }
+    }
+
+    fn from_id_byte(b: u8) -> Option<CodecKind> {
+        Some(match b {
+            1 => CodecKind::Snappy,
+            2 => CodecKind::Lz4,
+            3 => CodecKind::Lzf,
+            4 => CodecKind::Deflate,
+            5 => CodecKind::Zstd,
+            _ => return None,
+        })
+    }
+
+    /// Compress a raw block (no frame) with this codec.
+    pub fn compress_raw(self, input: &[u8]) -> Vec<u8> {
+        match self {
+            CodecKind::Snappy => snappylike::compress(input),
+            CodecKind::Lz4 => lz4like::compress(input),
+            CodecKind::Lzf => lzflike::compress(input),
+            CodecKind::Deflate => {
+                use std::io::Write as _;
+                let mut enc = flate2::write::DeflateEncoder::new(
+                    Vec::with_capacity(input.len() / 2 + 16),
+                    flate2::Compression::fast(),
+                );
+                enc.write_all(input).expect("vec write");
+                enc.finish().expect("deflate finish")
+            }
+            CodecKind::Zstd => zstd::bulk::compress(input, 1).expect("zstd compress"),
+        }
+    }
+
+    /// Decompress a raw block (no frame); `expected_len` is the declared
+    /// raw length from the frame header (used to size the output and bound
+    /// adversarial inputs).
+    pub fn decompress_raw(self, input: &[u8], expected_len: usize) -> Result<Vec<u8>, CodecError> {
+        match self {
+            CodecKind::Snappy => snappylike::decompress(input, expected_len),
+            CodecKind::Lz4 => lz4like::decompress(input, expected_len),
+            CodecKind::Lzf => lzflike::decompress(input, expected_len),
+            CodecKind::Deflate => {
+                use std::io::Read as _;
+                let dec = flate2::read::DeflateDecoder::new(input);
+                let mut out = Vec::with_capacity(expected_len.min(MAX_BLOCK_LEN));
+                dec.take(expected_len as u64 + 1)
+                    .read_to_end(&mut out)
+                    .map_err(|e| CodecError::External(e.to_string()))?;
+                Ok(out)
+            }
+            CodecKind::Zstd => zstd::bulk::decompress(input, expected_len)
+                .map_err(|e| CodecError::External(e.to_string())),
+        }
+    }
+}
+
+impl fmt::Display for CodecKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.config_name())
+    }
+}
+
+/// Frame magic: "SPTN".
+const FRAME_MAGIC: [u8; 4] = *b"SPTN";
+/// Hard cap on a declared raw block length (guards adversarial frames).
+pub const MAX_BLOCK_LEN: usize = 1 << 30;
+
+/// Compress `input` into a self-describing frame:
+/// `magic(4) | codec(1) | raw_len(u32 LE) | crc32(u32 LE) | payload`.
+pub fn compress_framed(kind: CodecKind, input: &[u8]) -> Vec<u8> {
+    assert!(input.len() <= MAX_BLOCK_LEN, "block too large");
+    let payload = kind.compress_raw(input);
+    let mut out = Vec::with_capacity(payload.len() + 13);
+    out.extend_from_slice(&FRAME_MAGIC);
+    out.push(kind.id_byte());
+    out.extend_from_slice(&(input.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32fast::hash(input).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode a frame produced by [`compress_framed`]; verifies magic, codec id,
+/// length bound and crc32.
+pub fn decompress_framed(frame: &[u8]) -> Result<(CodecKind, Vec<u8>), CodecError> {
+    if frame.len() < 13 {
+        return Err(CodecError::BadFrame("shorter than header"));
+    }
+    if frame[0..4] != FRAME_MAGIC {
+        return Err(CodecError::BadFrame("bad magic"));
+    }
+    let kind = CodecKind::from_id_byte(frame[4]).ok_or(CodecError::BadFrame("unknown codec id"))?;
+    let raw_len = u32::from_le_bytes(frame[5..9].try_into().unwrap()) as usize;
+    if raw_len > MAX_BLOCK_LEN {
+        return Err(CodecError::TooLong { declared: raw_len, limit: MAX_BLOCK_LEN });
+    }
+    let stored_crc = u32::from_le_bytes(frame[9..13].try_into().unwrap());
+    let raw = kind.decompress_raw(&frame[13..], raw_len)?;
+    if raw.len() != raw_len {
+        return Err(CodecError::LengthMismatch { declared: raw_len, produced: raw.len() });
+    }
+    let computed = crc32fast::hash(&raw);
+    if computed != stored_crc {
+        return Err(CodecError::CrcMismatch { stored: stored_crc, computed });
+    }
+    Ok((kind, raw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn sample_inputs() -> Vec<Vec<u8>> {
+        let mut r = Prng::new(0xC0DEC);
+        let mut inputs = vec![
+            vec![],
+            b"a".to_vec(),
+            b"hello hello hello hello hello".to_vec(),
+            vec![0u8; 10_000],
+            (0..=255u8).cycle().take(8192).collect(),
+        ];
+        for &(len, e) in &[(1usize, 1.0), (64, 0.5), (4096, 0.3), (65536, 0.6), (300_000, 0.45)] {
+            let mut v = vec![0u8; len];
+            r.fill_bytes_entropy(&mut v, e);
+            inputs.push(v);
+        }
+        // fully random (incompressible) — codecs must not blow up badly
+        let mut v = vec![0u8; 50_000];
+        r.fill_bytes(&mut v);
+        inputs.push(v);
+        inputs
+    }
+
+    #[test]
+    fn all_codecs_round_trip_framed() {
+        for kind in CodecKind::ALL {
+            for input in sample_inputs() {
+                let frame = compress_framed(kind, &input);
+                let (k2, raw) = decompress_framed(&frame)
+                    .unwrap_or_else(|e| panic!("{kind}: {e} (len {})", input.len()));
+                assert_eq!(k2, kind);
+                assert_eq!(raw, input, "{kind} round-trip failed (len {})", input.len());
+            }
+        }
+    }
+
+    #[test]
+    fn compressible_data_actually_shrinks() {
+        let mut r = Prng::new(7);
+        let mut data = vec![0u8; 200_000];
+        r.fill_bytes_entropy(&mut data, 0.3);
+        for kind in CodecKind::SPARK {
+            let c = kind.compress_raw(&data);
+            assert!(
+                c.len() < data.len() * 8 / 10,
+                "{kind}: expected >20% shrink, got {} → {}",
+                data.len(),
+                c.len()
+            );
+        }
+    }
+
+    #[test]
+    fn incompressible_overhead_is_bounded() {
+        let mut r = Prng::new(8);
+        let mut data = vec![0u8; 100_000];
+        r.fill_bytes(&mut data);
+        for kind in CodecKind::SPARK {
+            let c = kind.compress_raw(&data);
+            assert!(
+                c.len() <= data.len() + data.len() / 16 + 64,
+                "{kind}: pathological expansion {} → {}",
+                data.len(),
+                c.len()
+            );
+        }
+    }
+
+    #[test]
+    fn frame_rejects_corruption() {
+        let input = b"the quick brown fox jumps over the lazy dog".repeat(20);
+        for kind in CodecKind::SPARK {
+            let mut frame = compress_framed(kind, &input);
+            // magic
+            let mut f = frame.clone();
+            f[0] ^= 0xff;
+            assert!(matches!(decompress_framed(&f), Err(CodecError::BadFrame(_))));
+            // codec id
+            let mut f = frame.clone();
+            f[4] = 99;
+            assert!(matches!(decompress_framed(&f), Err(CodecError::BadFrame(_))));
+            // crc over flipped payload byte (if any survives decompression)
+            if frame.len() > 20 {
+                let last = frame.len() - 1;
+                frame[last] ^= 0x55;
+                assert!(decompress_framed(&frame).is_err(), "{kind} accepted corrupt frame");
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error_not_panic() {
+        let input = b"abcabcabcabcabcabc".repeat(100);
+        for kind in CodecKind::SPARK {
+            let frame = compress_framed(kind, &input);
+            for cut in [0, 5, 12, 13, frame.len() / 2, frame.len() - 1] {
+                let _ = decompress_framed(&frame[..cut]); // must not panic
+            }
+        }
+    }
+
+    #[test]
+    fn random_garbage_never_panics() {
+        let mut r = Prng::new(0xBAD);
+        for kind in CodecKind::SPARK {
+            for len in [0usize, 1, 13, 64, 1024] {
+                for _ in 0..50 {
+                    let mut junk = vec![0u8; len];
+                    r.fill_bytes(&mut junk);
+                    let _ = kind.decompress_raw(&junk, 4096); // must not panic
+                    let _ = decompress_framed(&junk);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn config_name_round_trip() {
+        for kind in CodecKind::ALL {
+            assert_eq!(CodecKind::from_config_name(kind.config_name()), Some(kind));
+        }
+        assert_eq!(
+            CodecKind::from_config_name("org.apache.spark.io.SnappyCompressionCodec"),
+            Some(CodecKind::Snappy)
+        );
+        assert_eq!(CodecKind::from_config_name("nope"), None);
+    }
+}

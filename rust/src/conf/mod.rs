@@ -1,0 +1,477 @@
+//! `SparkConf` — the typed configuration system for the engine.
+//!
+//! Models Spark 1.5.2's configuration surface at three levels:
+//!
+//! * the paper's **12 application-instance-specific parameters** (Sec. 3)
+//!   as typed fields with the exact Spark keys and 1.5.2 defaults;
+//! * the **cluster-level** parameters the paper fixes per [8] (executor
+//!   cores/memory, parallelism) — application-independent on a given
+//!   cluster;
+//! * a string `set(key, value)` API mirroring `spark-submit --conf`, with
+//!   validation, plus an extras map for unmodeled keys (Table 1 has ~150;
+//!   they parse and carry through but don't affect the model).
+//!
+//! [`params`] carries the registry: every modeled key with its Table-1
+//! category, default, and documentation — the CLI's `--help-conf` and the
+//! report generator read it.
+
+pub mod params;
+
+use crate::codec::CodecKind;
+use crate::ser::SerKind;
+use crate::util::units::{parse_size, SizeUnit};
+use std::collections::BTreeMap;
+use std::fmt;
+
+pub use params::{Category, ParamDef, PARAMS};
+
+/// `spark.shuffle.manager` options in Spark 1.5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ShuffleManagerKind {
+    /// Sort-based shuffle (the 1.5 default).
+    Sort,
+    /// Hash-based shuffle: one file per (map task × reducer) unless
+    /// consolidation is on.
+    Hash,
+    /// Tungsten's serialized sort (`tungsten-sort`).
+    TungstenSort,
+}
+
+impl ShuffleManagerKind {
+    pub const ALL: [ShuffleManagerKind; 3] =
+        [ShuffleManagerKind::Sort, ShuffleManagerKind::Hash, ShuffleManagerKind::TungstenSort];
+
+    pub fn config_name(self) -> &'static str {
+        match self {
+            ShuffleManagerKind::Sort => "sort",
+            ShuffleManagerKind::Hash => "hash",
+            ShuffleManagerKind::TungstenSort => "tungsten-sort",
+        }
+    }
+
+    pub fn from_config_name(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sort" => Some(ShuffleManagerKind::Sort),
+            "hash" => Some(ShuffleManagerKind::Hash),
+            "tungsten-sort" | "tungsten_sort" | "tungstensort" => {
+                Some(ShuffleManagerKind::TungstenSort)
+            }
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ShuffleManagerKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.config_name())
+    }
+}
+
+/// Configuration error (unknown value, out-of-range fraction, …).
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ConfError {
+    #[error("invalid value {value:?} for {key}: {reason}")]
+    Invalid { key: String, value: String, reason: String },
+    #[error("fractions sum > 1.0: storage {storage} + shuffle {shuffle} (+0.2 reserved)")]
+    FractionSum { storage: String, shuffle: String },
+}
+
+/// Full engine configuration. `Default` is Spark 1.5.2's out-of-the-box
+/// configuration on the paper's cluster setup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparkConf {
+    // ---- The paper's 12 parameters (Sec. 3 numbering) ----
+    /// 1. `spark.reducer.maxSizeInFlight` (default 48m): max bytes of
+    /// in-flight fetched map output per reducer.
+    pub reducer_max_size_in_flight: u64,
+    /// 2. `spark.shuffle.compress` (default true).
+    pub shuffle_compress: bool,
+    /// 3. `spark.shuffle.file.buffer` (default 32k): in-memory buffer per
+    /// shuffle file output stream.
+    pub shuffle_file_buffer: u64,
+    /// 4. `spark.shuffle.manager` (default sort).
+    pub shuffle_manager: ShuffleManagerKind,
+    /// 5. `spark.io.compression.codec` (default snappy).
+    pub io_compression_codec: CodecKind,
+    /// 6. `spark.shuffle.io.preferDirectBufs` (default true).
+    pub shuffle_io_prefer_direct_bufs: bool,
+    /// 7. `spark.rdd.compress` (default false).
+    pub rdd_compress: bool,
+    /// 8. `spark.serializer` (default Java).
+    pub serializer: SerKind,
+    /// 9. `spark.shuffle.memoryFraction` (default 0.2, legacy manager).
+    pub shuffle_memory_fraction: f64,
+    /// 10. `spark.storage.memoryFraction` (default 0.6, legacy manager).
+    pub storage_memory_fraction: f64,
+    /// 11. `spark.shuffle.consolidateFiles` (default false; hash manager).
+    pub shuffle_consolidate_files: bool,
+    /// 12. `spark.shuffle.spill.compress` (default true).
+    pub shuffle_spill_compress: bool,
+
+    // ---- Cluster-level (fixed per [8], application-independent) ----
+    /// `spark.executor.cores` — cores per executor.
+    pub executor_cores: u32,
+    /// `spark.executor.memory` — heap per executor, bytes.
+    pub executor_memory: u64,
+    /// Number of executors in the cluster.
+    pub num_executors: u32,
+    /// `spark.default.parallelism` — partitions for wide operators when the
+    /// workload doesn't override it.
+    pub default_parallelism: u32,
+    /// `spark.shuffle.spill` (default true): allow spilling to disk; with
+    /// this off, exceeding shuffle memory is an immediate OOM.
+    pub shuffle_spill: bool,
+
+    /// Unmodeled `--conf` keys, carried through verbatim.
+    pub extras: BTreeMap<String, String>,
+}
+
+impl Default for SparkConf {
+    fn default() -> Self {
+        SparkConf {
+            reducer_max_size_in_flight: 48 * 1024 * 1024,
+            shuffle_compress: true,
+            shuffle_file_buffer: 32 * 1024,
+            shuffle_manager: ShuffleManagerKind::Sort,
+            io_compression_codec: CodecKind::Snappy,
+            shuffle_io_prefer_direct_bufs: true,
+            rdd_compress: false,
+            serializer: SerKind::Java,
+            shuffle_memory_fraction: 0.2,
+            storage_memory_fraction: 0.6,
+            shuffle_consolidate_files: false,
+            shuffle_spill_compress: true,
+            // MareNostrum setup from [8]: 20 nodes × 16 cores, 1.5 GB/core,
+            // 4 executors/node × 4 cores (the paper's app-independent
+            // baseline); here modeled as one 16-core executor per node with
+            // 24 GB heap — same cores and memory per node, fewer moving
+            // parts. See cluster::ClusterSpec::marenostrum().
+            executor_cores: 16,
+            executor_memory: 24 * 1024 * 1024 * 1024,
+            num_executors: 20,
+            default_parallelism: 640,
+            shuffle_spill: true,
+            extras: BTreeMap::new(),
+        }
+    }
+}
+
+impl SparkConf {
+    /// A fresh default configuration.
+    pub fn new() -> SparkConf {
+        SparkConf::default()
+    }
+
+    /// Set one parameter from its Spark key and string value (the
+    /// `--conf key=value` path). Unknown keys go to `extras`.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<&mut Self, ConfError> {
+        let v = value.trim();
+        match key {
+            "spark.reducer.maxSizeInFlight" => {
+                self.reducer_max_size_in_flight = parse_size(v, SizeUnit::Mib)
+                    .map_err(|e| invalid(key, v, e))?;
+            }
+            "spark.shuffle.compress" => self.shuffle_compress = parse_bool(key, v)?,
+            "spark.shuffle.file.buffer" => {
+                self.shuffle_file_buffer =
+                    parse_size(v, SizeUnit::Kib).map_err(|e| invalid(key, v, e))?;
+            }
+            "spark.shuffle.manager" => {
+                self.shuffle_manager = ShuffleManagerKind::from_config_name(v)
+                    .ok_or_else(|| invalid(key, v, "expected sort|hash|tungsten-sort".into()))?;
+            }
+            "spark.io.compression.codec" => {
+                self.io_compression_codec = CodecKind::from_config_name(v)
+                    .ok_or_else(|| invalid(key, v, "expected snappy|lz4|lzf".into()))?;
+            }
+            "spark.shuffle.io.preferDirectBufs" => {
+                self.shuffle_io_prefer_direct_bufs = parse_bool(key, v)?;
+            }
+            "spark.rdd.compress" => self.rdd_compress = parse_bool(key, v)?,
+            "spark.serializer" => {
+                self.serializer = SerKind::from_config_name(v)
+                    .ok_or_else(|| invalid(key, v, "expected Java or Kryo serializer".into()))?;
+            }
+            "spark.shuffle.memoryFraction" => {
+                self.shuffle_memory_fraction = parse_fraction(key, v)?;
+            }
+            "spark.storage.memoryFraction" => {
+                self.storage_memory_fraction = parse_fraction(key, v)?;
+            }
+            "spark.shuffle.consolidateFiles" => {
+                self.shuffle_consolidate_files = parse_bool(key, v)?;
+            }
+            "spark.shuffle.spill.compress" => self.shuffle_spill_compress = parse_bool(key, v)?,
+            "spark.executor.cores" => {
+                self.executor_cores =
+                    v.parse().map_err(|e| invalid(key, v, format!("{e}")))?;
+            }
+            "spark.executor.memory" => {
+                self.executor_memory =
+                    parse_size(v, SizeUnit::Mib).map_err(|e| invalid(key, v, e))?;
+            }
+            "spark.executor.instances" => {
+                self.num_executors = v.parse().map_err(|e| invalid(key, v, format!("{e}")))?;
+            }
+            "spark.default.parallelism" => {
+                self.default_parallelism =
+                    v.parse().map_err(|e| invalid(key, v, format!("{e}")))?;
+            }
+            "spark.shuffle.spill" => self.shuffle_spill = parse_bool(key, v)?,
+            _ => {
+                self.extras.insert(key.to_string(), v.to_string());
+            }
+        }
+        Ok(self)
+    }
+
+    /// Builder-style `set` that panics on error — for tests/examples.
+    pub fn with(mut self, key: &str, value: &str) -> SparkConf {
+        self.set(key, value).unwrap_or_else(|e| panic!("conf: {e}"));
+        self
+    }
+
+    /// Validate cross-parameter invariants (the legacy memory manager
+    /// reserves ~20 % of the heap outside both fractions).
+    pub fn validate(&self) -> Result<(), ConfError> {
+        if self.storage_memory_fraction + self.shuffle_memory_fraction > 0.8 + 1e-9 {
+            return Err(ConfError::FractionSum {
+                storage: format!("{}", self.storage_memory_fraction),
+                shuffle: format!("{}", self.shuffle_memory_fraction),
+            });
+        }
+        Ok(())
+    }
+
+    /// Parse `k=v` pairs (one per line / element), as from `--conf` flags
+    /// or a properties file.
+    pub fn from_pairs<'a>(pairs: impl IntoIterator<Item = &'a str>) -> Result<SparkConf, String> {
+        let mut conf = SparkConf::default();
+        for p in pairs {
+            let p = p.trim();
+            if p.is_empty() || p.starts_with('#') {
+                continue;
+            }
+            let (k, v) = p
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got {p:?}"))?;
+            conf.set(k.trim(), v).map_err(|e| e.to_string())?;
+        }
+        Ok(conf)
+    }
+
+    /// The non-default settings, as `(key, value)` strings — the paper's
+    /// "final configuration" lines in Sec. 5 are exactly this diff.
+    pub fn diff_from_default(&self) -> Vec<(String, String)> {
+        let d = SparkConf::default();
+        let mut out = Vec::new();
+        macro_rules! cmp {
+            ($field:ident, $key:expr, $fmt:expr) => {
+                if self.$field != d.$field {
+                    out.push(($key.to_string(), $fmt(&self.$field)));
+                }
+            };
+        }
+        cmp!(serializer, "spark.serializer", |v: &SerKind| v.config_name().to_string());
+        cmp!(shuffle_manager, "spark.shuffle.manager", |v: &ShuffleManagerKind| v
+            .config_name()
+            .to_string());
+        cmp!(shuffle_compress, "spark.shuffle.compress", |v: &bool| v.to_string());
+        cmp!(io_compression_codec, "spark.io.compression.codec", |v: &CodecKind| v
+            .config_name()
+            .to_string());
+        cmp!(shuffle_consolidate_files, "spark.shuffle.consolidateFiles", |v: &bool| v
+            .to_string());
+        cmp!(shuffle_memory_fraction, "spark.shuffle.memoryFraction", |v: &f64| format!("{v}"));
+        cmp!(storage_memory_fraction, "spark.storage.memoryFraction", |v: &f64| format!("{v}"));
+        cmp!(shuffle_spill_compress, "spark.shuffle.spill.compress", |v: &bool| v.to_string());
+        cmp!(reducer_max_size_in_flight, "spark.reducer.maxSizeInFlight", |v: &u64| format!(
+            "{}m",
+            v / (1024 * 1024)
+        ));
+        cmp!(shuffle_file_buffer, "spark.shuffle.file.buffer", |v: &u64| format!(
+            "{}k",
+            v / 1024
+        ));
+        cmp!(rdd_compress, "spark.rdd.compress", |v: &bool| v.to_string());
+        cmp!(shuffle_io_prefer_direct_bufs, "spark.shuffle.io.preferDirectBufs", |v: &bool| v
+            .to_string());
+        for (k, v) in &self.extras {
+            out.push((k.clone(), v.clone()));
+        }
+        out
+    }
+
+    /// Total heap across the cluster (bytes).
+    pub fn cluster_heap(&self) -> u64 {
+        self.executor_memory * self.num_executors as u64
+    }
+
+    /// Total cores across the cluster.
+    pub fn cluster_cores(&self) -> u32 {
+        self.executor_cores * self.num_executors
+    }
+}
+
+impl fmt::Display for SparkConf {
+    /// Renders the diff-from-default, or `<defaults>`.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let diff = self.diff_from_default();
+        if diff.is_empty() {
+            return f.write_str("<defaults>");
+        }
+        let mut first = true;
+        for (k, v) in diff {
+            if !first {
+                f.write_str(" ")?;
+            }
+            write!(f, "{k}={v}")?;
+            first = false;
+        }
+        Ok(())
+    }
+}
+
+fn invalid(key: &str, value: &str, reason: String) -> ConfError {
+    ConfError::Invalid { key: key.to_string(), value: value.to_string(), reason }
+}
+
+fn parse_bool(key: &str, v: &str) -> Result<bool, ConfError> {
+    match v.to_ascii_lowercase().as_str() {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => Err(invalid(key, v, "expected true/false".into())),
+    }
+}
+
+fn parse_fraction(key: &str, v: &str) -> Result<f64, ConfError> {
+    let x: f64 = v.parse().map_err(|e| invalid(key, v, format!("{e}")))?;
+    if !(0.0..=1.0).contains(&x) {
+        return Err(invalid(key, v, "fraction must be in [0,1]".into()));
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_spark_152() {
+        let c = SparkConf::default();
+        assert_eq!(c.reducer_max_size_in_flight, 48 * 1024 * 1024);
+        assert!(c.shuffle_compress);
+        assert_eq!(c.shuffle_file_buffer, 32 * 1024);
+        assert_eq!(c.shuffle_manager, ShuffleManagerKind::Sort);
+        assert_eq!(c.io_compression_codec, CodecKind::Snappy);
+        assert!(c.shuffle_io_prefer_direct_bufs);
+        assert!(!c.rdd_compress);
+        assert_eq!(c.serializer, SerKind::Java);
+        assert_eq!(c.shuffle_memory_fraction, 0.2);
+        assert_eq!(c.storage_memory_fraction, 0.6);
+        assert!(!c.shuffle_consolidate_files);
+        assert!(c.shuffle_spill_compress);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn set_all_twelve_params() {
+        let mut c = SparkConf::default();
+        c.set("spark.reducer.maxSizeInFlight", "96m").unwrap();
+        c.set("spark.shuffle.compress", "false").unwrap();
+        c.set("spark.shuffle.file.buffer", "64k").unwrap();
+        c.set("spark.shuffle.manager", "tungsten-sort").unwrap();
+        c.set("spark.io.compression.codec", "lzf").unwrap();
+        c.set("spark.shuffle.io.preferDirectBufs", "false").unwrap();
+        c.set("spark.rdd.compress", "true").unwrap();
+        c.set("spark.serializer", "org.apache.spark.serializer.KryoSerializer").unwrap();
+        c.set("spark.shuffle.memoryFraction", "0.4").unwrap();
+        c.set("spark.storage.memoryFraction", "0.4").unwrap();
+        c.set("spark.shuffle.consolidateFiles", "true").unwrap();
+        c.set("spark.shuffle.spill.compress", "false").unwrap();
+        assert_eq!(c.reducer_max_size_in_flight, 96 * 1024 * 1024);
+        assert!(!c.shuffle_compress);
+        assert_eq!(c.shuffle_file_buffer, 64 * 1024);
+        assert_eq!(c.shuffle_manager, ShuffleManagerKind::TungstenSort);
+        assert_eq!(c.io_compression_codec, CodecKind::Lzf);
+        assert_eq!(c.serializer, SerKind::Kryo);
+        assert_eq!(c.shuffle_memory_fraction, 0.4);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn bare_numbers_use_legacy_units() {
+        // Spark 1.5: maxSizeInFlight bare numbers are MB, file.buffer KB.
+        let mut c = SparkConf::default();
+        c.set("spark.reducer.maxSizeInFlight", "24").unwrap();
+        c.set("spark.shuffle.file.buffer", "15").unwrap();
+        assert_eq!(c.reducer_max_size_in_flight, 24 * 1024 * 1024);
+        assert_eq!(c.shuffle_file_buffer, 15 * 1024);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let mut c = SparkConf::default();
+        assert!(c.set("spark.shuffle.manager", "quantum").is_err());
+        assert!(c.set("spark.shuffle.compress", "maybe").is_err());
+        assert!(c.set("spark.shuffle.memoryFraction", "1.5").is_err());
+        assert!(c.set("spark.io.compression.codec", "brotli").is_err());
+        assert!(c.set("spark.serializer", "PickleSerializer").is_err());
+    }
+
+    #[test]
+    fn fraction_sum_guard() {
+        let c = SparkConf::default()
+            .with("spark.shuffle.memoryFraction", "0.5")
+            .with("spark.storage.memoryFraction", "0.6");
+        assert!(matches!(c.validate(), Err(ConfError::FractionSum { .. })));
+        // The paper's 0.1/0.7 split is legal (it crashes at *runtime* on
+        // shuffle-heavy apps, not at validation).
+        let c = SparkConf::default()
+            .with("spark.shuffle.memoryFraction", "0.1")
+            .with("spark.storage.memoryFraction", "0.7");
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn unknown_keys_carried_as_extras() {
+        let mut c = SparkConf::default();
+        c.set("spark.speculation", "true").unwrap();
+        assert_eq!(c.extras.get("spark.speculation").map(String::as_str), Some("true"));
+        assert!(c.diff_from_default().iter().any(|(k, _)| k == "spark.speculation"));
+    }
+
+    #[test]
+    fn diff_and_display() {
+        let c = SparkConf::default()
+            .with("spark.serializer", "kryo")
+            .with("spark.shuffle.manager", "hash")
+            .with("spark.shuffle.consolidateFiles", "true");
+        let diff = c.diff_from_default();
+        assert_eq!(diff.len(), 3);
+        let s = format!("{c}");
+        assert!(s.contains("spark.shuffle.manager=hash"), "{s}");
+        assert_eq!(format!("{}", SparkConf::default()), "<defaults>");
+    }
+
+    #[test]
+    fn from_pairs_parses_properties() {
+        let c = SparkConf::from_pairs([
+            "# comment",
+            "",
+            "spark.serializer=kryo",
+            "spark.shuffle.memoryFraction=0.4",
+        ])
+        .unwrap();
+        assert_eq!(c.serializer, SerKind::Kryo);
+        assert_eq!(c.shuffle_memory_fraction, 0.4);
+        assert!(SparkConf::from_pairs(["no-equals-sign"]).is_err());
+    }
+
+    #[test]
+    fn cluster_totals() {
+        let c = SparkConf::default();
+        assert_eq!(c.cluster_cores(), 320);
+        assert_eq!(c.cluster_heap(), 20 * 24 * 1024 * 1024 * 1024);
+    }
+}

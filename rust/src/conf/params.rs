@@ -1,0 +1,241 @@
+//! Parameter registry: every modeled Spark key with its Table-1 category,
+//! 1.5.2 default, and the paper's Sec.-3 rationale. Drives `--help-conf`,
+//! documentation generation, and the sensitivity sweep's variant lists.
+
+use std::fmt;
+
+/// Table 1's parameter categories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    ApplicationProperties,
+    RuntimeEnvironment,
+    ShuffleBehavior,
+    SparkUi,
+    CompressionSerialization,
+    MemoryManagement,
+    ExecutionBehavior,
+    Networking,
+    Scheduling,
+    DynamicAllocation,
+    Security,
+    Encryption,
+    StreamingSparkR,
+}
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::ApplicationProperties => "Application Properties",
+            Category::RuntimeEnvironment => "Runtime Environment",
+            Category::ShuffleBehavior => "Shuffle Behavior",
+            Category::SparkUi => "Spark UI",
+            Category::CompressionSerialization => "Compression and Serialization",
+            Category::MemoryManagement => "Memory Management",
+            Category::ExecutionBehavior => "Execution Behavior",
+            Category::Networking => "Networking",
+            Category::Scheduling => "Scheduling",
+            Category::DynamicAllocation => "Dynamic Allocation",
+            Category::Security => "Security",
+            Category::Encryption => "Encryption",
+            Category::StreamingSparkR => "Streaming / SparkR",
+        }
+    }
+}
+
+impl fmt::Display for Category {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One registered parameter.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamDef {
+    /// Spark key, e.g. `spark.shuffle.compress`.
+    pub key: &'static str,
+    pub category: Category,
+    /// 1.5.2 default, as the config string.
+    pub default: &'static str,
+    /// Is it one of the paper's 12 application-instance-specific params?
+    pub paper_param: bool,
+    /// The Sec.-3 (or docs) one-liner.
+    pub doc: &'static str,
+}
+
+/// The registry. The first 12 entries are the paper's Sec.-3 list, in the
+/// paper's order.
+pub const PARAMS: &[ParamDef] = &[
+    ParamDef {
+        key: "spark.reducer.maxSizeInFlight",
+        category: Category::ShuffleBehavior,
+        default: "48m",
+        paper_param: true,
+        doc: "Max in-flight fetched map output per reducer; bigger chunks help when memory \
+              is plentiful, hurt when it is scarce.",
+    },
+    ParamDef {
+        key: "spark.shuffle.compress",
+        category: Category::ShuffleBehavior,
+        default: "true",
+        paper_param: true,
+        doc: "Compress map outputs before network transfer; trades CPU for bytes on the wire — \
+              application-dependent (shuffle volume).",
+    },
+    ParamDef {
+        key: "spark.shuffle.file.buffer",
+        category: Category::ShuffleBehavior,
+        default: "32k",
+        paper_param: true,
+        doc: "In-memory buffer per shuffle-file output stream; reduces disk seeks and \
+              system calls while writing intermediate files.",
+    },
+    ParamDef {
+        key: "spark.shuffle.manager",
+        category: Category::ShuffleBehavior,
+        default: "sort",
+        paper_param: true,
+        doc: "sort | hash | tungsten-sort. Hash creates many files (mitigated by \
+              consolidateFiles); tungsten-sort operates on serialized data.",
+    },
+    ParamDef {
+        key: "spark.io.compression.codec",
+        category: Category::CompressionSerialization,
+        default: "snappy",
+        paper_param: true,
+        doc: "snappy | lz4 | lzf — best codec is application-dependent.",
+    },
+    ParamDef {
+        key: "spark.shuffle.io.preferDirectBufs",
+        category: Category::ShuffleBehavior,
+        default: "true",
+        paper_param: true,
+        doc: "Prefer off-heap (direct) buffers for shuffle network I/O.",
+    },
+    ParamDef {
+        key: "spark.rdd.compress",
+        category: Category::CompressionSerialization,
+        default: "false",
+        paper_param: true,
+        doc: "Compress serialized cached RDD partitions; CPU vs memory trade-off.",
+    },
+    ParamDef {
+        key: "spark.serializer",
+        category: Category::CompressionSerialization,
+        default: "org.apache.spark.serializer.JavaSerializer",
+        paper_param: true,
+        doc: "Java (default) or Kryo; Kryo is markedly faster and denser when applicable.",
+    },
+    ParamDef {
+        key: "spark.shuffle.memoryFraction",
+        category: Category::MemoryManagement,
+        default: "0.2",
+        paper_param: true,
+        doc: "Heap fraction for in-shuffle aggregation/sort buffers; raise when spills are \
+              frequent — at the expense of storage.memoryFraction.",
+    },
+    ParamDef {
+        key: "spark.storage.memoryFraction",
+        category: Category::MemoryManagement,
+        default: "0.6",
+        paper_param: true,
+        doc: "Heap fraction for the block-manager cache.",
+    },
+    ParamDef {
+        key: "spark.shuffle.consolidateFiles",
+        category: Category::ShuffleBehavior,
+        default: "false",
+        paper_param: true,
+        doc: "Consolidate hash-shuffle intermediate files (per core rather than per map task); \
+              filesystem-dependent.",
+    },
+    ParamDef {
+        key: "spark.shuffle.spill.compress",
+        category: Category::ShuffleBehavior,
+        default: "true",
+        paper_param: true,
+        doc: "Compress data spilled during shuffles; matters only when spills are plentiful.",
+    },
+    // ---- cluster-level (fixed per [8]) ----
+    ParamDef {
+        key: "spark.executor.cores",
+        category: Category::ExecutionBehavior,
+        default: "16",
+        paper_param: false,
+        doc: "Cores per executor — cluster-level per [8], not tuned per application.",
+    },
+    ParamDef {
+        key: "spark.executor.memory",
+        category: Category::ApplicationProperties,
+        default: "24g",
+        paper_param: false,
+        doc: "Executor heap (1.5 GB/core on MareNostrum).",
+    },
+    ParamDef {
+        key: "spark.executor.instances",
+        category: Category::ApplicationProperties,
+        default: "20",
+        paper_param: false,
+        doc: "Executor count (one per node in the modeled cluster).",
+    },
+    ParamDef {
+        key: "spark.default.parallelism",
+        category: Category::ExecutionBehavior,
+        default: "640",
+        paper_param: false,
+        doc: "Default partition count — per [8], 2 partitions/core suits shuffle-heavy apps.",
+    },
+    ParamDef {
+        key: "spark.shuffle.spill",
+        category: Category::ShuffleBehavior,
+        default: "true",
+        paper_param: false,
+        doc: "Allow spilling shuffle data to disk; disabling turns memory pressure into OOM.",
+    },
+];
+
+/// Look up a parameter by key.
+pub fn find(key: &str) -> Option<&'static ParamDef> {
+    PARAMS.iter().find(|p| p.key == key)
+}
+
+/// The paper's 12 parameters, in Sec.-3 order.
+pub fn paper_params() -> impl Iterator<Item = &'static ParamDef> {
+    PARAMS.iter().filter(|p| p.paper_param)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::SparkConf;
+
+    #[test]
+    fn exactly_twelve_paper_params() {
+        assert_eq!(paper_params().count(), 12);
+    }
+
+    #[test]
+    fn registry_defaults_agree_with_sparkconf_defaults() {
+        // Set every registered default onto a default conf — nothing may
+        // change (guards drift between PARAMS and SparkConf::default).
+        let mut c = SparkConf::default();
+        for p in PARAMS {
+            c.set(p.key, p.default).unwrap_or_else(|e| panic!("{}: {e}", p.key));
+        }
+        assert_eq!(c, SparkConf::default());
+    }
+
+    #[test]
+    fn find_works() {
+        assert!(find("spark.shuffle.manager").is_some());
+        assert!(find("spark.nonexistent").is_none());
+    }
+
+    #[test]
+    fn paper_params_span_the_three_target_categories() {
+        use std::collections::HashSet;
+        let cats: HashSet<_> = paper_params().map(|p| p.category).collect();
+        assert!(cats.contains(&Category::ShuffleBehavior));
+        assert!(cats.contains(&Category::CompressionSerialization));
+        assert!(cats.contains(&Category::MemoryManagement));
+    }
+}

@@ -1,0 +1,149 @@
+//! The RDD execution engine: datasets, operators, job plans, and the
+//! stage-by-stage runner that drives the discrete-event simulator.
+//!
+//! A [`Job`] is a chain of [`Op`]s over a [`Dataset`] (all of the paper's
+//! benchmarks are chains — generate → [cache] → transform* → wide-op →
+//! action, possibly iterated). The planner ([`plan`]) splits the chain
+//! into *stages* at wide (shuffle) boundaries, exactly like Spark's
+//! DAGScheduler; the runner ([`run`]) prices each stage's tasks through
+//! the shuffle/storage/memory cost models and executes them on the
+//! [`crate::sim`] event simulator, threading cache state and crash
+//! handling across stages.
+
+pub mod plan;
+pub mod run;
+
+pub use plan::{plan, Stage, StageInput, StageOutput};
+pub use run::{run, JobResult, StageReport};
+
+/// Statistical description of a distributed dataset (Sim mode never
+/// materializes records; it tracks their statistics).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    /// Total record count.
+    pub records: u64,
+    /// Total payload bytes (in-memory, deserialized-equivalent).
+    pub payload: u64,
+    /// Partition count.
+    pub partitions: u32,
+    /// Compressibility knob of the serialized form (0 = constant,
+    /// 1 = incompressible); drives codec ratios.
+    pub entropy: f64,
+    /// Number of distinct keys (for aggregations).
+    pub distinct_keys: u64,
+}
+
+impl Dataset {
+    /// Key-value records of `key_len + val_len` bytes each.
+    pub fn kv(records: u64, key_len: u32, val_len: u32, partitions: u32) -> Dataset {
+        Dataset {
+            records,
+            payload: records * (key_len + val_len) as u64,
+            partitions,
+            entropy: 0.45,
+            distinct_keys: records,
+        }
+    }
+
+    /// Dense f32 vectors of `dim` dimensions.
+    pub fn vectors(records: u64, dim: u32, partitions: u32) -> Dataset {
+        Dataset {
+            records,
+            payload: records * dim as u64 * 4,
+            partitions,
+            entropy: 0.9,
+            distinct_keys: records,
+        }
+    }
+
+    /// Payload bytes per partition (uniform partitioning).
+    pub fn payload_per_partition(&self) -> u64 {
+        self.payload / self.partitions.max(1) as u64
+    }
+
+    /// Records per partition.
+    pub fn records_per_partition(&self) -> u64 {
+        self.records / self.partitions.max(1) as u64
+    }
+
+    pub fn with_entropy(mut self, e: f64) -> Dataset {
+        self.entropy = e;
+        self
+    }
+
+    pub fn with_distinct_keys(mut self, k: u64) -> Dataset {
+        self.distinct_keys = k;
+        self
+    }
+}
+
+/// One operator in a job chain.
+#[derive(Clone, Debug)]
+pub enum Op {
+    /// Synthesize the base dataset at `cpu_ns_per_record` (the paper's
+    /// benchmarks all generate their input on the fly, §4).
+    Generate { out: Dataset, cpu_ns_per_record: f64 },
+    /// Narrow per-record transformation; output dataset may differ in
+    /// payload/records (e.g. projection, k-means assignment step).
+    MapRecords { cpu_ns_per_record: f64, out: Dataset },
+    /// Persist the current dataset MEMORY_ONLY (storage-pool semantics in
+    /// [`crate::storage`]). Later iterations read hits from cache and
+    /// recompute misses from lineage.
+    Cache,
+    /// Re-read the cached dataset (iteration boundary): cache hits scan
+    /// the store, misses recompute the lineage *up to the cache point*.
+    CacheRead,
+    /// Wide op: sort by key into `reducers` partitions (range partition +
+    /// reduce-side sort).
+    SortByKey { reducers: u32 },
+    /// Wide op: hash repartition, no sort, no aggregation (the paper's
+    /// "shuffling" benchmark).
+    Repartition { reducers: u32 },
+    /// Wide op: aggregate by key with map-side combine;
+    /// `combine_cpu_ns_per_record` prices the combiner, `out` describes
+    /// the post-aggregation dataset.
+    AggregateByKey { reducers: u32, combine_cpu_ns_per_record: f64, out: Dataset },
+    /// Terminal action (count/collect-small); negligible result traffic.
+    Action,
+}
+
+/// A runnable job: an operator chain and a human-readable name.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub name: String,
+    pub ops: Vec<Op>,
+}
+
+impl Job {
+    pub fn new(name: impl Into<String>) -> Job {
+        Job { name: name.into(), ops: Vec::new() }
+    }
+
+    pub fn op(mut self, op: Op) -> Job {
+        self.ops.push(op);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_constructors() {
+        let d = Dataset::kv(1_000_000_000, 10, 90, 640);
+        assert_eq!(d.payload, 100_000_000_000);
+        assert_eq!(d.payload_per_partition(), 156_250_000);
+        assert_eq!(d.records_per_partition(), 1_562_500);
+        let v = Dataset::vectors(100_000_000, 100, 640);
+        assert_eq!(v.payload, 40_000_000_000);
+        assert!(v.entropy > 0.8);
+    }
+
+    #[test]
+    fn builders_chain() {
+        let d = Dataset::kv(100, 10, 90, 4).with_entropy(0.3).with_distinct_keys(7);
+        assert_eq!(d.entropy, 0.3);
+        assert_eq!(d.distinct_keys, 7);
+    }
+}

@@ -1,0 +1,394 @@
+//! The DAG scheduler: splits an operator chain into stages at shuffle
+//! boundaries (Spark's `DAGScheduler.getShuffleDependencies` analogue for
+//! linear lineages).
+//!
+//! Each [`Stage`] is a pipelined run of narrow work with one input source
+//! and one output sink. `CacheRead` starts a new stage only when it
+//! follows a wide op (iteration boundary); narrow chains pipeline.
+
+use super::{Dataset, Job, Op};
+
+/// How a stage obtains its input records.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StageInput {
+    /// Synthesize records (`cpu_ns_per_record`).
+    Generate { cpu_ns_per_record: f64 },
+    /// Read the persisted dataset; misses recompute at
+    /// `recompute_cpu_ns_per_record` (the generate cost of the lineage).
+    CacheRead { recompute_cpu_ns_per_record: f64 },
+    /// Fetch the previous stage's shuffle output.
+    ShuffleRead {
+        /// Reduce side must sort (sortByKey)?
+        needs_sort: bool,
+        /// Reduce-side aggregation working payload per task, if any.
+        agg_working_payload: Option<u64>,
+    },
+}
+
+/// What a stage does with its output.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StageOutput {
+    /// Write shuffle files for `reducers` consumers.
+    ShuffleWrite {
+        reducers: u32,
+        /// Map-side combine (reduceByKey/aggregateByKey)?
+        map_side_combine: bool,
+        /// Dataset leaving the map side (post-combine).
+        out: Dataset,
+        /// Pre-combine working payload per task for the combiner's hash
+        /// map (None when no combine).
+        combine_working_payload: Option<u64>,
+    },
+    /// Terminal action.
+    Action,
+}
+
+/// One schedulable stage.
+#[derive(Clone, Debug)]
+pub struct Stage {
+    pub id: usize,
+    pub name: String,
+    pub input: StageInput,
+    /// Dataset flowing *into* the narrow pipeline.
+    pub in_data: Dataset,
+    /// Summed per-record CPU of the narrow pipeline (map/filter chain).
+    pub pipeline_cpu_ns_per_record: f64,
+    /// Persist the pipeline result into the block-manager cache?
+    pub cache_write: bool,
+    /// The dataset being persisted when `cache_write` (pipeline output).
+    pub cache_dataset: Option<Dataset>,
+    pub output: StageOutput,
+    /// Task count (input partitions for map stages, reducers for reduce
+    /// stages).
+    pub tasks: u32,
+}
+
+/// Planning failure: malformed op chains.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PlanError {
+    #[error("job must start with Generate")]
+    MissingSource,
+    #[error("CacheRead without a previous Cache")]
+    CacheReadWithoutCache,
+    #[error("empty job")]
+    Empty,
+    #[error("{0} after terminal Action")]
+    OpAfterAction(String),
+}
+
+/// Split a job into stages.
+pub fn plan(job: &Job) -> Result<Vec<Stage>, PlanError> {
+    if job.ops.is_empty() {
+        return Err(PlanError::Empty);
+    }
+    let mut stages: Vec<Stage> = Vec::new();
+    let mut cur_input: Option<StageInput> = None;
+    let mut cur_in_data: Option<Dataset> = None;
+    let mut cur_data: Option<Dataset> = None; // dataset at pipeline head
+    let mut cur_cpu = 0.0f64;
+    let mut cur_cache_write = false;
+    // Lineage info for cache recompute: generate cost up to the Cache op.
+    let mut gen_cpu: Option<f64> = None;
+    let mut cached: Option<Dataset> = None;
+    let mut done = false;
+
+    let flush = |input: StageInput,
+                     in_data: Dataset,
+                     cpu: f64,
+                     cache_write: bool,
+                     cache_dataset: Option<Dataset>,
+                     output: StageOutput,
+                     stages: &mut Vec<Stage>| {
+        let tasks = match &output {
+            StageOutput::ShuffleWrite { .. } | StageOutput::Action => in_data.partitions,
+        };
+        let id = stages.len();
+        stages.push(Stage {
+            id,
+            name: format!("stage-{id}"),
+            input,
+            in_data,
+            pipeline_cpu_ns_per_record: cpu,
+            cache_write,
+            cache_dataset,
+            output,
+            tasks,
+        });
+    };
+
+    for op in &job.ops {
+        if done {
+            return Err(PlanError::OpAfterAction(format!("{op:?}")));
+        }
+        match op {
+            Op::Generate { out, cpu_ns_per_record } => {
+                if cur_input.is_some() {
+                    return Err(PlanError::OpAfterAction("second Generate".into()));
+                }
+                cur_input = Some(StageInput::Generate { cpu_ns_per_record: *cpu_ns_per_record });
+                gen_cpu = Some(*cpu_ns_per_record);
+                cur_in_data = Some(out.clone());
+                cur_data = Some(out.clone());
+            }
+            Op::MapRecords { cpu_ns_per_record, out } => {
+                if cur_input.is_none() {
+                    return Err(PlanError::MissingSource);
+                }
+                cur_cpu += cpu_ns_per_record;
+                cur_data = Some(out.clone());
+            }
+            Op::Cache => {
+                if cur_input.is_none() {
+                    return Err(PlanError::MissingSource);
+                }
+                cur_cache_write = true;
+                cached = cur_data.clone();
+            }
+            Op::CacheRead => {
+                let Some(cd) = cached.clone() else {
+                    return Err(PlanError::CacheReadWithoutCache);
+                };
+                // Iteration boundary: flush any open stage as an Action-
+                // terminated stage only if it has pending work; otherwise
+                // just reset the pipeline to read from cache.
+                if let (Some(input), Some(in_data)) = (cur_input.take(), cur_in_data.take()) {
+                    if cur_cpu > 0.0 || cur_cache_write || must_keep(&input) {
+                        flush(
+                            input,
+                            in_data,
+                            cur_cpu,
+                            cur_cache_write,
+                            if cur_cache_write { cached.clone() } else { None },
+                            StageOutput::Action,
+                            &mut stages,
+                        );
+                    }
+                }
+                cur_input = Some(StageInput::CacheRead {
+                    recompute_cpu_ns_per_record: gen_cpu.unwrap_or(0.0),
+                });
+                cur_in_data = Some(cd.clone());
+                cur_data = Some(cd);
+                cur_cpu = 0.0;
+                cur_cache_write = false;
+            }
+            Op::SortByKey { reducers } | Op::Repartition { reducers } => {
+                let (input, in_data) = take_open(&mut cur_input, &mut cur_in_data)?;
+                let data = cur_data.clone().expect("dataset tracked");
+                let mut out = data.clone();
+                out.partitions = *reducers;
+                flush(
+                    input,
+                    in_data,
+                    cur_cpu,
+                    cur_cache_write,
+                    if cur_cache_write { cached.clone() } else { None },
+                    StageOutput::ShuffleWrite {
+                        reducers: *reducers,
+                        map_side_combine: false,
+                        out: out.clone(),
+                        combine_working_payload: None,
+                    },
+                    &mut stages,
+                );
+                cur_cpu = 0.0;
+                cur_cache_write = false;
+                cur_input = Some(StageInput::ShuffleRead {
+                    needs_sort: matches!(op, Op::SortByKey { .. }),
+                    agg_working_payload: None,
+                });
+                cur_in_data = Some(out.clone());
+                cur_data = Some(out);
+            }
+            Op::AggregateByKey { reducers, combine_cpu_ns_per_record, out } => {
+                let (input, in_data) = take_open(&mut cur_input, &mut cur_in_data)?;
+                let data = cur_data.clone().expect("dataset tracked");
+                // Map-side combine shrinks the map output: per map task
+                // at most `distinct_keys` records survive.
+                let maps = data.partitions.max(1) as u64;
+                let combined_records_per_map =
+                    (data.records / maps).min(data.distinct_keys);
+                let mean_rec = data.payload as f64 / data.records.max(1) as f64;
+                let combined = Dataset {
+                    records: combined_records_per_map * maps,
+                    payload: (combined_records_per_map as f64 * maps as f64 * mean_rec) as u64,
+                    partitions: data.partitions,
+                    entropy: data.entropy,
+                    distinct_keys: data.distinct_keys,
+                };
+                flush(
+                    input,
+                    in_data.clone(),
+                    cur_cpu + combine_cpu_ns_per_record,
+                    cur_cache_write,
+                    if cur_cache_write { cached.clone() } else { None },
+                    StageOutput::ShuffleWrite {
+                        reducers: *reducers,
+                        map_side_combine: true,
+                        out: combined.clone(),
+                        combine_working_payload: Some(
+                            (combined_records_per_map as f64 * mean_rec) as u64,
+                        ),
+                    },
+                    &mut stages,
+                );
+                cur_cpu = 0.0;
+                cur_cache_write = false;
+                let agg_out = out.clone();
+                let reduce_working = (agg_out.payload / (*reducers).max(1) as u64).max(1);
+                cur_input = Some(StageInput::ShuffleRead {
+                    needs_sort: false,
+                    agg_working_payload: Some(reduce_working),
+                });
+                let mut rd = combined;
+                rd.partitions = *reducers;
+                cur_in_data = Some(rd);
+                cur_data = Some(agg_out);
+            }
+            Op::Action => {
+                let (input, in_data) = take_open(&mut cur_input, &mut cur_in_data)?;
+                flush(
+                    input,
+                    in_data,
+                    cur_cpu,
+                    cur_cache_write,
+                    if cur_cache_write { cached.clone() } else { None },
+                    StageOutput::Action,
+                    &mut stages,
+                );
+                cur_cpu = 0.0;
+                cur_cache_write = false;
+                done = true;
+            }
+        }
+    }
+    if !done && cur_input.is_some() {
+        // Implicit action at the end of the chain.
+        let (input, in_data) = take_open(&mut cur_input, &mut cur_in_data)?;
+        let cd = if cur_cache_write { cached.clone() } else { None };
+        flush(input, in_data, cur_cpu, cur_cache_write, cd, StageOutput::Action, &mut stages);
+    }
+    Ok(stages)
+}
+
+fn take_open(
+    input: &mut Option<StageInput>,
+    data: &mut Option<Dataset>,
+) -> Result<(StageInput, Dataset), PlanError> {
+    match (input.take(), data.take()) {
+        (Some(i), Some(d)) => Ok((i, d)),
+        _ => Err(PlanError::MissingSource),
+    }
+}
+
+/// A fresh Generate input with no pipeline work can be dropped when a
+/// CacheRead resets the chain (nothing observable happened yet) — but a
+/// ShuffleRead input means a shuffle already ran and its reduce stage
+/// must be kept.
+fn must_keep(input: &StageInput) -> bool {
+    matches!(input, StageInput::ShuffleRead { .. })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sbk_job() -> Job {
+        let d = Dataset::kv(1_000_000_000, 10, 90, 640).with_distinct_keys(1_000_000);
+        Job::new("sort-by-key")
+            .op(Op::Generate { out: d, cpu_ns_per_record: 300.0 })
+            .op(Op::SortByKey { reducers: 640 })
+            .op(Op::Action)
+    }
+
+    #[test]
+    fn sort_by_key_is_two_stages() {
+        let stages = plan(&sbk_job()).unwrap();
+        assert_eq!(stages.len(), 2);
+        assert!(matches!(stages[0].input, StageInput::Generate { .. }));
+        assert!(matches!(
+            stages[0].output,
+            StageOutput::ShuffleWrite { reducers: 640, map_side_combine: false, .. }
+        ));
+        assert!(matches!(
+            stages[1].input,
+            StageInput::ShuffleRead { needs_sort: true, .. }
+        ));
+        assert_eq!(stages[1].output, StageOutput::Action);
+        assert_eq!(stages[0].tasks, 640);
+        assert_eq!(stages[1].tasks, 640);
+    }
+
+    #[test]
+    fn aggregate_by_key_combines_map_side() {
+        let d = Dataset::kv(2_000_000_000, 10, 90, 640).with_distinct_keys(1_000_000);
+        let out = Dataset::kv(1_000_000, 10, 90, 640);
+        let job = Job::new("agg")
+            .op(Op::Generate { out: d, cpu_ns_per_record: 300.0 })
+            .op(Op::AggregateByKey { reducers: 640, combine_cpu_ns_per_record: 500.0, out })
+            .op(Op::Action);
+        let stages = plan(&job).unwrap();
+        assert_eq!(stages.len(), 2);
+        match &stages[0].output {
+            StageOutput::ShuffleWrite { map_side_combine, out, .. } => {
+                assert!(map_side_combine);
+                // 2e9/640 = 3.125M records/map, capped at 1M distinct →
+                // 640M records total post-combine (< 2e9).
+                assert!(out.records < 2_000_000_000);
+                assert_eq!(out.records, 640 * 1_000_000);
+            }
+            other => panic!("{other:?}"),
+        }
+        match &stages[1].input {
+            StageInput::ShuffleRead { needs_sort: false, agg_working_payload: Some(w) } => {
+                assert!(*w > 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn kmeans_iterations_stage_per_iter() {
+        let pts = Dataset::vectors(100_000_000, 100, 640);
+        let partials = Dataset::vectors(640 * 10, 100, 640);
+        let mut job = Job::new("kmeans")
+            .op(Op::Generate { out: pts.clone(), cpu_ns_per_record: 2000.0 })
+            .op(Op::Cache);
+        for _ in 0..3 {
+            job = job
+                .op(Op::CacheRead)
+                .op(Op::MapRecords { cpu_ns_per_record: 3800.0, out: partials.clone() })
+                .op(Op::Repartition { reducers: 10 });
+        }
+        let stages = plan(&job).unwrap();
+        // Stage 0: generate+cache (flushed by first CacheRead);
+        // then per iteration: map+shuffle-write stage and a reduce stage
+        // (the last reduce becomes the implicit action) → 1 + 3×2 = 7.
+        assert_eq!(stages.len(), 7, "{stages:#?}");
+        assert!(stages[0].cache_write);
+        assert!(matches!(stages[1].input, StageInput::CacheRead { .. }));
+        assert!(matches!(stages[2].input, StageInput::ShuffleRead { .. }));
+    }
+
+    #[test]
+    fn malformed_jobs_rejected() {
+        assert!(matches!(plan(&Job::new("empty")), Err(PlanError::Empty)));
+        let j = Job::new("no-src").op(Op::SortByKey { reducers: 4 });
+        assert!(matches!(plan(&j), Err(PlanError::MissingSource)));
+        let j = Job::new("bad-cache").op(Op::Generate {
+            out: Dataset::kv(10, 1, 1, 1),
+            cpu_ns_per_record: 1.0,
+        });
+        let j = j.op(Op::CacheRead);
+        assert!(matches!(plan(&j), Err(PlanError::CacheReadWithoutCache)));
+    }
+
+    #[test]
+    fn implicit_action_flushes_tail() {
+        let d = Dataset::kv(1000, 10, 90, 8);
+        let job = Job::new("gen-only").op(Op::Generate { out: d, cpu_ns_per_record: 1.0 });
+        let stages = plan(&job).unwrap();
+        assert_eq!(stages.len(), 1);
+        assert_eq!(stages[0].output, StageOutput::Action);
+    }
+}

@@ -1,0 +1,452 @@
+//! The job runner: prices each planned stage through the cost models and
+//! executes it on the discrete-event simulator, threading cache state,
+//! GC pressure, and crash handling across stages.
+//!
+//! This is the Sim-mode execution path used by every experiment. The
+//! translation per task is:
+//!
+//! ```text
+//! [input: NetIn/DiskRead + Fixed (shuffle fetch) | Cpu (generate/cache)]
+//! [pipeline: Cpu]
+//! [cache write: Cpu]
+//! [output: Cpu (ser/compress/sort) + DiskWrite (+ spill read/write)]
+//! ```
+//!
+//! All CPU phases are scaled by the GC overhead factor implied by
+//! executor heap occupancy ([`crate::exec::MemoryModel::gc_overhead`]).
+//! A task whose memory plan comes back [`SpillPlan::Oom`] crashes the
+//! job — the result records which stage and why, and the tuner treats
+//! crashed configurations as unusable (as the paper does).
+
+use super::plan::{plan, Stage, StageInput, StageOutput};
+use super::Job;
+use crate::cluster::ClusterSpec;
+use crate::conf::SparkConf;
+use crate::exec::{MemoryModel, SpillPlan};
+use crate::shuffle::{self, IoProfiles, MapSideSpec, ReduceSideSpec};
+use crate::sim::{run_stage, Phase, SimOpts, TaskSpec};
+use crate::storage::{self, PersistLevel};
+
+/// Per-stage execution report.
+#[derive(Clone, Debug)]
+pub struct StageReport {
+    pub name: String,
+    pub duration: f64,
+    pub tasks: u32,
+    pub cpu_secs: f64,
+    pub disk_bytes: f64,
+    pub net_bytes: f64,
+    pub spilled_bytes: u64,
+    pub gc_factor: f64,
+    pub cache_hit_fraction: Option<f64>,
+}
+
+/// Outcome of one job run under one configuration.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub job: String,
+    /// Total simulated wall-clock seconds (sum of stage durations — stages
+    /// are barriers). Meaningless when `crashed`.
+    pub duration: f64,
+    /// Set when a stage OOMed: (stage name, message).
+    pub crashed: Option<String>,
+    pub stages: Vec<StageReport>,
+}
+
+impl JobResult {
+    /// Runtime usable for comparisons: crashed runs are infinitely bad.
+    pub fn effective_duration(&self) -> f64 {
+        if self.crashed.is_some() {
+            f64::INFINITY
+        } else {
+            self.duration
+        }
+    }
+
+    pub fn total_spilled(&self) -> u64 {
+        self.stages.iter().map(|s| s.spilled_bytes).sum()
+    }
+}
+
+/// Fixed unmanaged live bytes per executor (netty, user objects, Spark
+/// internals) used for GC occupancy.
+const UNMANAGED_LIVE: u64 = 1 << 31; // 2 GiB
+
+/// Single-threaded full-GC scan rate on 2013-era Xeons, bytes/s. When the
+/// storage pool is full and a partition fails to unroll, the allocation
+/// churn promotes into a fragmented old gen and triggers promotion-failure
+/// **full GCs** — on a ~15 GB live set these pause the executor for tens
+/// of seconds. This is the death-spiral regime behind the paper's k-means
+/// case study (654 s at storage.memoryFraction 0.6 vs 54 s at 0.7): each
+/// iteration re-attempts the failed unrolls and pays the storm again.
+const FULL_GC_SCAN_BW: f64 = 0.5e9;
+
+/// Run `job` under `conf` on `cluster`. Deterministic in `opts.seed`.
+pub fn run(job: &Job, conf: &SparkConf, cluster: &ClusterSpec, opts: &SimOpts) -> JobResult {
+    let stages = match plan(job) {
+        Ok(s) => s,
+        Err(e) => {
+            return JobResult {
+                job: job.name.clone(),
+                duration: 0.0,
+                crashed: Some(format!("plan error: {e}")),
+                stages: Vec::new(),
+            }
+        }
+    };
+    let mem = MemoryModel::new(conf, cluster);
+    let prof = IoProfiles::from_conf(conf);
+    let mut result = JobResult {
+        job: job.name.clone(),
+        duration: 0.0,
+        crashed: None,
+        stages: Vec::new(),
+    };
+
+    // Cross-stage state.
+    let mut cache_plan: Option<storage::CachePlan> = None;
+    let mut cached_data: Option<super::Dataset> = None;
+    // (blocks to fetch per reducer, previous map stage entropy)
+    let mut prev_shuffle: Option<ShuffleHandoff> = None;
+
+    for stage in &stages {
+        let tasks_u = stage.tasks.max(1);
+        let records_per_task = stage.in_data.records / tasks_u as u64;
+        let payload_per_task = stage.in_data.payload / tasks_u as u64;
+
+        let mut cpu = 0.0f64; // per-task CPU seconds (pre-GC scaling)
+        let mut disk_read = 0.0f64;
+        let mut disk_write = 0.0f64;
+        let mut net_in = 0.0f64;
+        let mut fixed = 0.0f64;
+        let mut spilled = 0u64;
+        let mut live_bytes = UNMANAGED_LIVE
+            + cache_plan.as_ref().map(|p| p.stored_bytes / cluster.nodes as u64).unwrap_or(0);
+        let mut cache_hit_fraction = None;
+
+        // ---- input ----
+        match &stage.input {
+            StageInput::Generate { cpu_ns_per_record } => {
+                cpu += records_per_task as f64 * cpu_ns_per_record * 1e-9;
+            }
+            StageInput::CacheRead { recompute_cpu_ns_per_record } => {
+                let hit = cache_plan.as_ref().map(|p| p.cached_fraction).unwrap_or(0.0);
+                cache_hit_fraction = Some(hit);
+                let hit_payload = (payload_per_task as f64 * hit) as u64;
+                let hit_records = (records_per_task as f64 * hit) as u64;
+                cpu += storage::cache_read_cpu(
+                    conf,
+                    &prof.ser,
+                    &prof.codec,
+                    PersistLevel::MemoryOnly,
+                    hit_payload,
+                    hit_records,
+                    stage.in_data.entropy,
+                );
+                // Misses recompute from lineage AND re-attempt the unroll
+                // (Spark retries caching every materialization).
+                let miss = 1.0 - hit;
+                if miss > 1e-9 {
+                    let miss_records = (records_per_task as f64 * miss) as u64;
+                    let miss_payload = (payload_per_task as f64 * miss) as u64;
+                    cpu += miss_records as f64 * recompute_cpu_ns_per_record * 1e-9;
+                    cpu += storage::cache_write_cpu(
+                        conf,
+                        &prof.ser,
+                        &prof.codec,
+                        PersistLevel::MemoryOnly,
+                        miss_payload,
+                        miss_records,
+                    );
+                    // GC storm: each failed re-unroll on a full storage
+                    // pool triggers a promotion-failure full GC stalling
+                    // the whole executor (see FULL_GC_SCAN_BW).
+                    let misses_per_node =
+                        stage.tasks as f64 * miss / cluster.nodes.max(1) as f64;
+                    let pause = live_bytes as f64 / FULL_GC_SCAN_BW;
+                    fixed += misses_per_node * pause;
+                }
+            }
+            StageInput::ShuffleRead { needs_sort, agg_working_payload } => {
+                let handoff = prev_shuffle.clone().unwrap_or(ShuffleHandoff {
+                    source_blocks: stage.in_data.partitions,
+                    entropy: stage.in_data.entropy,
+                });
+                let rs = ReduceSideSpec {
+                    in_payload: payload_per_task,
+                    in_records: records_per_task,
+                    entropy: handoff.entropy,
+                    source_blocks: handoff.source_blocks,
+                    needs_sort: *needs_sort,
+                    agg_working_payload: *agg_working_payload,
+                };
+                let io = shuffle::reduce_side(conf, cluster, &mem, &prof, &rs);
+                if let Some(SpillPlan::Oom { need, share }) = io.oom {
+                    result.crashed = Some(format!(
+                        "{}: reduce task OOM (needs {need} B, share {share} B)",
+                        stage.name
+                    ));
+                    result.stages.push(partial_report(stage, 0.0));
+                    return result;
+                }
+                cpu += io.cpu_secs;
+                disk_read += io.disk_read_bytes;
+                disk_write += io.disk_write_bytes;
+                net_in += io.net_in_bytes;
+                fixed += io.fixed_secs;
+                spilled += io.spilled_bytes;
+                live_bytes += mem.per_task_share();
+            }
+        }
+
+        // ---- narrow pipeline ----
+        cpu += records_per_task as f64 * stage.pipeline_cpu_ns_per_record * 1e-9;
+
+        // ---- cache write ----
+        if stage.cache_write {
+            let ds = stage.cache_dataset.clone().unwrap_or_else(|| stage.in_data.clone());
+            let pool_total = mem.storage_pool * cluster.nodes as u64;
+            let plan = storage::plan_cache(
+                conf,
+                &prof,
+                PersistLevel::MemoryOnly,
+                pool_total,
+                ds.payload,
+                ds.records,
+                ds.entropy,
+            );
+            cpu += storage::cache_write_cpu(
+                conf,
+                &prof.ser,
+                &prof.codec,
+                PersistLevel::MemoryOnly,
+                ds.payload / tasks_u as u64,
+                ds.records / tasks_u as u64,
+            );
+            live_bytes += plan.stored_bytes / cluster.nodes as u64;
+            cache_plan = Some(plan);
+            cached_data = Some(ds);
+        }
+        let _ = &cached_data; // retained for future multi-cache support
+
+        // ---- output ----
+        match &stage.output {
+            StageOutput::ShuffleWrite { reducers, map_side_combine, out, combine_working_payload } => {
+                let out_payload = out.payload / tasks_u as u64;
+                let out_records = out.records / tasks_u as u64;
+                let working = combine_working_payload.unwrap_or(out_payload);
+                // Page-cache pressure from this stage's concurrent writes.
+                let probe = MapSideSpec {
+                    out_payload,
+                    out_records,
+                    entropy: out.entropy,
+                    reducers: *reducers,
+                    map_tasks: stage.tasks,
+                    map_side_combine: *map_side_combine,
+                    working_payload: working,
+                    cache_pressure: 0.0,
+                };
+                let out_bytes = shuffle::map_output_bytes(conf, &prof, &probe);
+                let concurrent = cluster.cores_per_node.min(stage.tasks) as f64;
+                let page_cache =
+                    cluster.ram_per_node.saturating_sub(cluster.heap_per_node) as f64;
+                let raw = (concurrent * out_bytes * 2.0) / page_cache.max(1.0);
+                let pressure = shuffle::cache_pressure_knee(raw);
+                let spec = MapSideSpec { cache_pressure: pressure, ..probe };
+                let io = shuffle::map_side(conf, cluster, &mem, &prof, &spec);
+                if let Some(SpillPlan::Oom { need, share }) = io.oom {
+                    result.crashed = Some(format!(
+                        "{}: map task OOM (needs {need} B, share {share} B)",
+                        stage.name
+                    ));
+                    result.stages.push(partial_report(stage, 0.0));
+                    return result;
+                }
+                cpu += io.cpu_secs;
+                disk_read += io.disk_read_bytes;
+                disk_write += io.disk_write_bytes;
+                net_in += io.net_in_bytes;
+                fixed += io.fixed_secs;
+                spilled += io.spilled_bytes;
+                live_bytes += mem.per_task_share().min((working as f64 * 2.0) as u64);
+                prev_shuffle = Some(ShuffleHandoff {
+                    source_blocks: if conf.shuffle_consolidate_files
+                        && conf.shuffle_manager == crate::conf::ShuffleManagerKind::Hash
+                    {
+                        cluster.total_cores()
+                    } else {
+                        stage.tasks
+                    },
+                    entropy: out.entropy,
+                });
+            }
+            StageOutput::Action => {}
+        }
+
+        // ---- GC scaling ----
+        let gc = 1.0 + mem.gc_overhead(live_bytes);
+        let cpu = cpu * gc;
+
+        // ---- build tasks & simulate ----
+        let phases = vec![
+            Phase::Fixed { secs: fixed },
+            Phase::NetIn { bytes: net_in },
+            Phase::DiskRead { bytes: disk_read },
+            Phase::Cpu { secs: cpu },
+            Phase::DiskWrite { bytes: disk_write },
+        ];
+        let tasks: Vec<TaskSpec> =
+            (0..stage.tasks).map(|i| TaskSpec::new(phases.clone()).on(i % cluster.nodes)).collect();
+        let stage_opts = SimOpts { jitter: opts.jitter, seed: opts.seed ^ (stage.id as u64) << 32 };
+        let stats = run_stage(cluster, &tasks, &stage_opts);
+
+        result.duration += stats.duration;
+        result.stages.push(StageReport {
+            name: stage.name.clone(),
+            duration: stats.duration,
+            tasks: stage.tasks,
+            cpu_secs: stats.cpu_secs,
+            disk_bytes: stats.disk_bytes,
+            net_bytes: stats.net_bytes,
+            spilled_bytes: spilled * stage.tasks as u64,
+            gc_factor: gc,
+            cache_hit_fraction,
+        });
+    }
+    result
+}
+
+#[derive(Clone, Debug)]
+struct ShuffleHandoff {
+    source_blocks: u32,
+    entropy: f64,
+}
+
+fn partial_report(stage: &Stage, duration: f64) -> StageReport {
+    StageReport {
+        name: stage.name.clone(),
+        duration,
+        tasks: stage.tasks,
+        cpu_secs: 0.0,
+        disk_bytes: 0.0,
+        net_bytes: 0.0,
+        spilled_bytes: 0,
+        gc_factor: 1.0,
+        cache_hit_fraction: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Dataset, Op};
+
+    fn sbk_job(records: u64) -> Job {
+        let d = Dataset::kv(records, 10, 90, 640).with_distinct_keys(1_000_000);
+        Job::new("sort-by-key")
+            .op(Op::Generate { out: d, cpu_ns_per_record: 300.0 })
+            .op(Op::SortByKey { reducers: 640 })
+            .op(Op::Action)
+    }
+
+    fn mn() -> ClusterSpec {
+        ClusterSpec::marenostrum()
+    }
+
+    #[test]
+    fn sort_by_key_runs_and_is_deterministic() {
+        let conf = SparkConf::default().with("spark.serializer", "kryo");
+        let a = run(&sbk_job(1_000_000_000), &conf, &mn(), &SimOpts::default());
+        let b = run(&sbk_job(1_000_000_000), &conf, &mn(), &SimOpts::default());
+        assert!(a.crashed.is_none(), "{:?}", a.crashed);
+        assert_eq!(a.duration, b.duration);
+        assert_eq!(a.stages.len(), 2);
+        assert!(a.duration > 10.0 && a.duration < 1000.0, "duration {}", a.duration);
+    }
+
+    #[test]
+    fn kryo_beats_java_on_sort_by_key() {
+        let java = run(&sbk_job(1_000_000_000), &SparkConf::default(), &mn(), &SimOpts::default());
+        let kryo = run(
+            &sbk_job(1_000_000_000),
+            &SparkConf::default().with("spark.serializer", "kryo"),
+            &mn(),
+            &SimOpts::default(),
+        );
+        assert!(java.crashed.is_none() && kryo.crashed.is_none());
+        let gain = (java.duration - kryo.duration) / java.duration;
+        assert!(gain > 0.05, "kryo gain {gain:.3} (java {} kryo {})", java.duration, kryo.duration);
+    }
+
+    #[test]
+    fn memory_starvation_crashes_sort_by_key() {
+        let conf = SparkConf::default()
+            .with("spark.serializer", "kryo")
+            .with("spark.shuffle.memoryFraction", "0.1")
+            .with("spark.storage.memoryFraction", "0.7");
+        let r = run(&sbk_job(1_000_000_000), &conf, &mn(), &SimOpts::default());
+        assert!(r.crashed.is_some(), "0.1/0.7 must crash sort-by-key");
+        assert!(r.effective_duration().is_infinite());
+    }
+
+    #[test]
+    fn disabling_shuffle_compress_degrades_heavily() {
+        let on = SparkConf::default().with("spark.serializer", "kryo");
+        let off = on.clone().with("spark.shuffle.compress", "false");
+        let t_on = run(&sbk_job(1_000_000_000), &on, &mn(), &SimOpts::default());
+        let t_off = run(&sbk_job(1_000_000_000), &off, &mn(), &SimOpts::default());
+        assert!(
+            t_off.duration > t_on.duration * 1.5,
+            "no-compress {} vs compress {}",
+            t_off.duration,
+            t_on.duration
+        );
+    }
+
+    #[test]
+    fn kmeans_cache_cliff() {
+        // 100 M × 500-dim f32 points: fits at 0.7 storage fraction, not at
+        // the 0.6 default → the default recomputes misses every iteration.
+        let pts = Dataset::vectors(100_000_000, 500, 640);
+        let partials = Dataset::vectors(640 * 10, 500, 640).with_entropy(0.9);
+        let mut job = Job::new("kmeans-500d")
+            .op(Op::Generate { out: pts.clone(), cpu_ns_per_record: 25_000.0 })
+            .op(Op::Cache);
+        for _ in 0..10 {
+            job = job
+                .op(Op::CacheRead)
+                .op(Op::MapRecords { cpu_ns_per_record: 15_000.0, out: partials.clone() })
+                .op(Op::Repartition { reducers: 10 });
+        }
+        let cluster = mn();
+        let default = run(&job, &SparkConf::default(), &cluster, &SimOpts::default());
+        let tuned_conf = SparkConf::default()
+            .with("spark.storage.memoryFraction", "0.7")
+            .with("spark.shuffle.memoryFraction", "0.1");
+        let tuned = run(&job, &tuned_conf, &cluster, &SimOpts::default());
+        assert!(default.crashed.is_none() && tuned.crashed.is_none(), "{:?}", default.crashed);
+        // Cache-hit fractions differ across the cliff.
+        let hit_default = default.stages[1].cache_hit_fraction.unwrap();
+        let hit_tuned = tuned.stages[1].cache_hit_fraction.unwrap();
+        assert!(hit_default < 1.0, "default hit {hit_default}");
+        assert!((hit_tuned - 1.0).abs() < 1e-9, "tuned hit {hit_tuned}");
+        assert!(
+            tuned.duration < default.duration * 0.5,
+            "tuned {} vs default {}",
+            tuned.duration,
+            default.duration
+        );
+    }
+
+    #[test]
+    fn small_job_on_mini_cluster() {
+        let d = Dataset::kv(1_000_000, 10, 90, 16);
+        let job = Job::new("mini")
+            .op(Op::Generate { out: d, cpu_ns_per_record: 300.0 })
+            .op(Op::SortByKey { reducers: 16 })
+            .op(Op::Action);
+        let r = run(&job, &SparkConf::default(), &ClusterSpec::mini(), &SimOpts::default());
+        assert!(r.crashed.is_none());
+        assert!(r.duration > 0.0 && r.duration < 100.0);
+    }
+}

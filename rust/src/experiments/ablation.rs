@@ -1,0 +1,163 @@
+//! E8 — the ablation behind the paper's headline efficiency claim:
+//! "at most ten configurations … even if each parameter took only two
+//! values, exhaustively checking all combinations would result in 2⁹ =
+//! 512 runs". We measure what the ≤10-run decision list actually gives
+//! up against exhaustive grid search (216 value combinations) and random
+//! search at matched budgets.
+
+use crate::cluster::ClusterSpec;
+use crate::report::Table;
+use crate::tuner::baselines::{exhaustive, random_search};
+use crate::tuner::{tune, TuneOpts};
+use crate::workloads::Workload;
+
+/// One row of the ablation.
+#[derive(Clone, Debug)]
+pub struct AblationRow {
+    pub workload: &'static str,
+    pub method: &'static str,
+    pub runs: usize,
+    pub best: f64,
+    pub improvement_pct: f64,
+}
+
+/// Run methodology / exhaustive / random-search over `workloads`.
+/// Exhaustive is 216 simulated runs per workload — run in release mode.
+pub fn ablation(workloads: &[Workload], cluster: &ClusterSpec) -> Vec<AblationRow> {
+    let mut rows = Vec::new();
+    for &w in workloads {
+        let mut method_runner = super::cases::sim_runner(w, cluster);
+        let m = tune(&mut method_runner, &TuneOpts::default());
+        rows.push(AblationRow {
+            workload: w.name(),
+            method: "fig4-methodology",
+            runs: m.runs(),
+            best: m.best,
+            improvement_pct: 100.0 * m.total_improvement(),
+        });
+
+        let mut ex_runner = super::cases::sim_runner(w, cluster);
+        let e = exhaustive(&mut ex_runner);
+        rows.push(AblationRow {
+            workload: w.name(),
+            method: "exhaustive-grid",
+            runs: e.trials.len() + 1,
+            best: e.best,
+            improvement_pct: 100.0 * e.total_improvement(),
+        });
+
+        for budget in [10usize, 30] {
+            let mut r_runner = super::cases::sim_runner(w, cluster);
+            let r = random_search(&mut r_runner, budget, 0xAB1A ^ budget as u64);
+            rows.push(AblationRow {
+                workload: w.name(),
+                method: if budget == 10 { "random-10" } else { "random-30" },
+                runs: budget + 1,
+                best: r.best,
+                improvement_pct: 100.0 * r.total_improvement(),
+            });
+        }
+    }
+    rows
+}
+
+/// Threshold-sensitivity sweep (the paper: "the methodology can be
+/// employed in a less restrictive manner, where a configuration is
+/// chosen … if the improvement exceeds a threshold, e.g. 5% or 10%"):
+/// how do the kept-setting count and the final improvement move with the
+/// threshold?
+pub fn threshold_sweep(workload: Workload, cluster: &ClusterSpec) -> Table {
+    let mut t = Table {
+        title: format!("Threshold sensitivity — {} (Fig-4 methodology)", workload.name()),
+        header: vec![
+            "threshold".into(),
+            "kept settings".into(),
+            "best (s)".into(),
+            "improvement".into(),
+            "runs".into(),
+        ],
+        rows: Vec::new(),
+    };
+    for thr in [0.0, 0.02, 0.05, 0.10, 0.20] {
+        let mut runner = super::cases::sim_runner(workload, cluster);
+        let out = tune(&mut runner, &TuneOpts { threshold: thr, short_version: false });
+        t.rows.push(vec![
+            format!("{:.0}%", thr * 100.0),
+            out.trials.iter().filter(|x| x.kept).count().to_string(),
+            format!("{:.1}", out.best),
+            format!("{:.1}%", 100.0 * out.total_improvement()),
+            out.runs().to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render as markdown.
+pub fn ablation_table(rows: &[AblationRow]) -> Table {
+    Table {
+        title: "E8 — search-strategy ablation (lower best-runtime is better)".into(),
+        header: vec![
+            "workload".into(),
+            "method".into(),
+            "runs".into(),
+            "best (s)".into(),
+            "improvement".into(),
+        ],
+        rows: rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.workload.into(),
+                    r.method.into(),
+                    r.runs.to_string(),
+                    format!("{:.1}", r.best),
+                    format!("{:.1}%", r.improvement_pct),
+                ]
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Lower thresholds can only keep more (or equal) settings and can
+    /// only do as well or better.
+    #[test]
+    fn threshold_sweep_is_monotone() {
+        let cluster = ClusterSpec::mini();
+        let t = threshold_sweep(Workload::MiniSortByKey, &cluster);
+        assert_eq!(t.rows.len(), 5);
+        let best: Vec<f64> =
+            t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        let kept: Vec<u32> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        for w in best.windows(2) {
+            assert!(w[0] <= w[1] + 1e-6, "best must be monotone in threshold: {best:?}");
+        }
+        for w in kept.windows(2) {
+            assert!(w[0] >= w[1], "kept count must not grow with threshold: {kept:?}");
+        }
+    }
+
+    /// The headline property on the mini workload: the methodology's best
+    /// is within a modest factor of the exhaustive optimum at ~20× fewer
+    /// runs.
+    #[test]
+    fn methodology_close_to_exhaustive_on_mini() {
+        let cluster = ClusterSpec::mini();
+        let rows = ablation(&[Workload::MiniSortByKey], &cluster);
+        let method = rows.iter().find(|r| r.method == "fig4-methodology").unwrap();
+        let full = rows.iter().find(|r| r.method == "exhaustive-grid").unwrap();
+        assert!(method.runs <= 10);
+        assert!(full.runs >= 200);
+        assert!(
+            method.best <= full.best * 1.25,
+            "methodology {:.2}s vs exhaustive {:.2}s",
+            method.best,
+            full.best
+        );
+        let t = ablation_table(&rows);
+        assert_eq!(t.rows.len(), 4);
+    }
+}

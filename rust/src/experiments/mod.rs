@@ -1,0 +1,397 @@
+//! Experiment drivers: one entry per figure/table of the paper's
+//! evaluation (see DESIGN.md §3 for the experiment index).
+//!
+//! * [`sensitivity`] — the §4 parameter sweeps (Figs 1, 2, 3).
+//! * [`table2`] — mean |deviation| per parameter per benchmark.
+//! * [`cases`] — the §5 case studies (methodology end-to-end).
+//! * [`ablation`] — E8: methodology vs exhaustive vs random search.
+//!
+//! Protocol follows the paper: each configuration is run with ≥5
+//! repetition seeds and the **median** is reported; the baseline for the
+//! sweeps is the default configuration *with the KryoSerializer* ("the
+//! experiments that follow were conducted with the KryoSerializer"),
+//! except the serializer row itself which compares Java against it.
+
+pub mod ablation;
+pub mod cases;
+
+use crate::cluster::ClusterSpec;
+use crate::conf::SparkConf;
+use crate::engine::{run, Job};
+use crate::report::{Bar, Figure, Table};
+use crate::sim::SimOpts;
+use crate::util::stats::{mean_abs_deviation_pct, Summary};
+use crate::workloads::Workload;
+
+/// Repetitions per configuration ("at least five times … the median value
+/// is reported").
+pub const REPS: u64 = 5;
+
+/// Run `job` under `conf` for [`REPS`] seeds; returns the median runtime,
+/// or `None` if the configuration crashes (crashes are deterministic —
+/// they depend on memory geometry, not jitter).
+pub fn median_run(job: &Job, conf: &SparkConf, cluster: &ClusterSpec) -> Option<f64> {
+    let mut durations = Vec::with_capacity(REPS as usize);
+    for rep in 0..REPS {
+        let r = run(job, conf, cluster, &SimOpts { jitter: 0.04, seed: 0xA5EED + rep });
+        if r.crashed.is_some() {
+            return None;
+        }
+        durations.push(r.duration);
+    }
+    Some(Summary::from(durations).median())
+}
+
+/// One sweep variant: a parameter's test setting(s) applied on top of the
+/// Kryo baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct Variant {
+    /// Table-2 row this variant belongs to.
+    pub param: &'static str,
+    /// Bar label, e.g. `manager=hash`.
+    pub label: &'static str,
+    pub settings: &'static [(&'static str, &'static str)],
+}
+
+/// The §4 sweep: every tested value of the 12 parameters (Figs 1–3 bars),
+/// in the paper's bottom-to-top order for Fig 1.
+pub const VARIANTS: &[Variant] = &[
+    Variant {
+        param: "spark.shuffle.manager",
+        label: "manager=hash",
+        settings: &[("spark.shuffle.manager", "hash")],
+    },
+    Variant {
+        param: "spark.shuffle.manager",
+        label: "manager=tungsten-sort",
+        settings: &[("spark.shuffle.manager", "tungsten-sort")],
+    },
+    Variant {
+        param: "shuffle/storage.memoryFraction",
+        label: "memoryFraction=0.4/0.4",
+        settings: &[
+            ("spark.shuffle.memoryFraction", "0.4"),
+            ("spark.storage.memoryFraction", "0.4"),
+        ],
+    },
+    Variant {
+        param: "shuffle/storage.memoryFraction",
+        label: "memoryFraction=0.1/0.7",
+        settings: &[
+            ("spark.shuffle.memoryFraction", "0.1"),
+            ("spark.storage.memoryFraction", "0.7"),
+        ],
+    },
+    Variant {
+        param: "spark.reducer.maxSizeInFlight",
+        label: "maxSizeInFlight=96m",
+        settings: &[("spark.reducer.maxSizeInFlight", "96m")],
+    },
+    Variant {
+        param: "spark.reducer.maxSizeInFlight",
+        label: "maxSizeInFlight=24m",
+        settings: &[("spark.reducer.maxSizeInFlight", "24m")],
+    },
+    Variant {
+        param: "spark.shuffle.file.buffer",
+        label: "file.buffer=96k",
+        settings: &[("spark.shuffle.file.buffer", "96k")],
+    },
+    Variant {
+        param: "spark.shuffle.file.buffer",
+        label: "file.buffer=15k",
+        settings: &[("spark.shuffle.file.buffer", "15k")],
+    },
+    Variant {
+        param: "spark.shuffle.compress",
+        label: "shuffle.compress=false",
+        settings: &[("spark.shuffle.compress", "false")],
+    },
+    Variant {
+        param: "spark.io.compress.codec",
+        label: "codec=lzf",
+        settings: &[("spark.io.compression.codec", "lzf")],
+    },
+    Variant {
+        param: "spark.io.compress.codec",
+        label: "codec=lz4",
+        settings: &[("spark.io.compression.codec", "lz4")],
+    },
+    Variant {
+        param: "spark.shuffle.consolidateFiles",
+        label: "consolidateFiles=true",
+        settings: &[("spark.shuffle.consolidateFiles", "true")],
+    },
+    Variant {
+        param: "spark.rdd.compress",
+        label: "rdd.compress=true",
+        settings: &[("spark.rdd.compress", "true")],
+    },
+    Variant {
+        param: "spark.shuffle.io.preferDirectBufs",
+        label: "preferDirectBufs=false",
+        settings: &[("spark.shuffle.io.preferDirectBufs", "false")],
+    },
+    Variant {
+        param: "spark.shuffle.spill.compress",
+        label: "spill.compress=false",
+        settings: &[("spark.shuffle.spill.compress", "false")],
+    },
+];
+
+/// The Kryo baseline configuration of §4.
+pub fn kryo_baseline() -> SparkConf {
+    SparkConf::default().with("spark.serializer", "org.apache.spark.serializer.KryoSerializer")
+}
+
+/// Sensitivity sweep for one workload (Figs 1–3): every [`VARIANTS`] bar
+/// plus the Java-serializer bar, against the Kryo baseline.
+pub fn sensitivity(workload: Workload, cluster: &ClusterSpec) -> Figure {
+    let job = workload.job();
+    let base_conf = kryo_baseline();
+    let baseline = median_run(&job, &base_conf, cluster)
+        .expect("the Kryo default baseline must not crash");
+
+    let mut bars = Vec::with_capacity(VARIANTS.len() + 1);
+    // Serializer bar: Java vs the Kryo baseline.
+    bars.push(Bar {
+        label: "serializer=java (default)".into(),
+        value: median_run(&job, &SparkConf::default(), cluster),
+    });
+    for v in VARIANTS {
+        let mut conf = base_conf.clone();
+        for (k, val) in v.settings {
+            conf.set(k, val).expect("variant settings are valid");
+        }
+        bars.push(Bar { label: v.label.into(), value: median_run(&job, &conf, cluster) });
+    }
+    Figure {
+        id: figure_id(workload).into(),
+        title: format!("Impact of all parameters for {}", workload.name()),
+        baseline_label: "kryo default (baseline)".into(),
+        baseline,
+        bars,
+    }
+}
+
+fn figure_id(w: Workload) -> &'static str {
+    match w {
+        Workload::SortByKey1B => "fig1",
+        Workload::Shuffling400G => "fig2",
+        Workload::KMeans100M => "fig3-top",
+        Workload::KMeans200M => "fig3-bottom",
+        _ => "sweep",
+    }
+}
+
+/// Paper Table 2 reference values (percent mean |deviation|), for
+/// side-by-side reporting.
+pub const TABLE2_PAPER: &[(&str, [f64; 3])] = &[
+    ("spark.serializer", [26.6, 9.2, 2.5]),
+    ("shuffle/storage.memoryFraction", [13.1, 11.9, 8.3]),
+    ("spark.reducer.maxSizeInFlight", [5.5, 5.7, 11.5]),
+    ("spark.shuffle.file.buffer", [6.3, 11.6, 6.9]),
+    ("spark.shuffle.compress", [137.5, 182.0, 2.5]),
+    ("spark.io.compress.codec", [2.5, 18.0, 6.1]),
+    ("spark.shuffle.consolidateFiles", [13.0, 11.0, 7.7]),
+    ("spark.rdd.compress", [2.5, 2.5, 5.0]),
+    ("spark.shuffle.io.preferDirectBufs", [5.6, 9.9, 2.5]),
+    ("spark.shuffle.spill.compress", [2.5, 6.1, 2.5]),
+];
+
+/// Compute Table 2: mean |deviation| from the Kryo baseline per parameter
+/// per benchmark (sort-by-key, shuffling, k-means-100M), measured next to
+/// the paper's values. Crashed variants are excluded from the mean (the
+/// paper's 0.1/0.7 rows crashed too).
+pub fn table2(cluster: &ClusterSpec) -> Table {
+    let benches =
+        [Workload::SortByKey1B, Workload::Shuffling400G, Workload::KMeans100M];
+    // Collect per-bench (baseline, label→median) maps.
+    let mut per_bench: Vec<(f64, Vec<(&'static str, Option<f64>)>)> = Vec::new();
+    let mut java_devs: Vec<f64> = Vec::new();
+    for w in benches {
+        let job = w.job();
+        let base = median_run(&job, &kryo_baseline(), cluster).expect("baseline crash");
+        let mut rows = Vec::new();
+        for v in VARIANTS {
+            let mut conf = kryo_baseline();
+            for (k, val) in v.settings {
+                conf.set(k, val).unwrap();
+            }
+            rows.push((v.param, median_run(&job, &conf, cluster)));
+        }
+        let java = median_run(&job, &SparkConf::default(), cluster);
+        java_devs.push(match java {
+            Some(j) => 100.0 * ((j - base) / base).abs(),
+            None => f64::NAN,
+        });
+        per_bench.push((base, rows));
+    }
+
+    let mut table = Table {
+        title: "Table 2 — Average parameter impact (mean |deviation| from Kryo baseline, %)"
+            .into(),
+        header: vec![
+            "parameter".into(),
+            "sort-by-key".into(),
+            "shuffling".into(),
+            "k-means".into(),
+            "average".into(),
+            "paper avg".into(),
+        ],
+        rows: Vec::new(),
+    };
+
+    for (param, paper) in TABLE2_PAPER {
+        let mut measured = [0.0f64; 3];
+        if *param == "spark.serializer" {
+            for (i, d) in java_devs.iter().enumerate() {
+                measured[i] = *d;
+            }
+        } else {
+            for (i, (base, rows)) in per_bench.iter().enumerate() {
+                let vals: Vec<f64> = rows
+                    .iter()
+                    .filter(|(p, _)| p == param)
+                    .filter_map(|(_, v)| *v)
+                    .collect();
+                measured[i] = mean_abs_deviation_pct(*base, &vals);
+            }
+        }
+        let avg = measured.iter().copied().filter(|v| v.is_finite()).sum::<f64>()
+            / measured.iter().filter(|v| v.is_finite()).count().max(1) as f64;
+        let paper_avg = paper.iter().sum::<f64>() / 3.0;
+        table.rows.push(vec![
+            param.to_string(),
+            fmt_pct(measured[0]),
+            fmt_pct(measured[1]),
+            fmt_pct(measured[2]),
+            fmt_pct(avg),
+            format!("{paper_avg:.1}%"),
+        ]);
+    }
+    table
+}
+
+fn fmt_pct(v: f64) -> String {
+    if v.is_nan() {
+        "n/a".into()
+    } else if v < 5.0 {
+        format!("<5% ({v:.1}%)")
+    } else {
+        format!("{v:.1}%")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mn() -> ClusterSpec {
+        ClusterSpec::marenostrum()
+    }
+
+    /// Single-seed helper for shape tests (REPS medians are slow in debug).
+    fn once(job: &Job, conf: &SparkConf) -> Option<f64> {
+        let r = run(job, conf, &mn(), &SimOpts { jitter: 0.0, seed: 1 });
+        if r.crashed.is_some() {
+            None
+        } else {
+            Some(r.duration)
+        }
+    }
+
+    fn variant_conf(label: &str) -> SparkConf {
+        let v = VARIANTS.iter().find(|v| v.label == label).unwrap();
+        let mut conf = kryo_baseline();
+        for (k, val) in v.settings {
+            conf.set(k, val).unwrap();
+        }
+        conf
+    }
+
+    /// E1 shape assertions — who wins/loses on Fig 1 (sort-by-key).
+    #[test]
+    fn fig1_shapes() {
+        let job = Workload::SortByKey1B.job();
+        let base = once(&job, &kryo_baseline()).unwrap();
+        // Java serializer notably slower (paper: ~25%).
+        let java = once(&job, &SparkConf::default()).unwrap();
+        let java_gap = (java - base) / base;
+        assert!(java_gap > 0.10 && java_gap < 0.50, "java gap {java_gap:.3}");
+        // Both alternate managers beat sort.
+        let hash = once(&job, &variant_conf("manager=hash")).unwrap();
+        let tung = once(&job, &variant_conf("manager=tungsten-sort")).unwrap();
+        assert!(hash < base, "hash {hash} !< base {base}");
+        assert!(tung < base, "tungsten {tung} !< base {base}");
+        // 0.4/0.4 helps a little; 0.1/0.7 crashes.
+        let mf44 = once(&job, &variant_conf("memoryFraction=0.4/0.4")).unwrap();
+        assert!(mf44 < base, "0.4/0.4 {mf44} !< {base}");
+        assert!(once(&job, &variant_conf("memoryFraction=0.1/0.7")).is_none(), "0.1/0.7 must crash");
+        // Disabling shuffle compression degrades by >100%.
+        let nc = once(&job, &variant_conf("shuffle.compress=false")).unwrap();
+        assert!(nc > base * 1.9, "no-compress {nc} vs {base}");
+        // Codecs ≈ neutral on sort-by-key.
+        let lzf = once(&job, &variant_conf("codec=lzf")).unwrap();
+        assert!((lzf - base).abs() / base < 0.10, "lzf dev {}", (lzf - base) / base);
+    }
+
+    /// E2 shape assertions — Fig 2 (shuffling): hash loses, tungsten wins,
+    /// lz4 hurts, small file buffer hurts.
+    #[test]
+    fn fig2_shapes() {
+        let job = Workload::Shuffling400G.job();
+        let base = once(&job, &kryo_baseline()).unwrap();
+        let hash = once(&job, &variant_conf("manager=hash")).unwrap();
+        assert!(hash > base * 1.05, "hash should lose at 400GB: {hash} vs {base}");
+        let tung = once(&job, &variant_conf("manager=tungsten-sort")).unwrap();
+        assert!(tung < base, "tungsten {tung} !< {base}");
+        let lz4 = once(&job, &variant_conf("codec=lz4")).unwrap();
+        assert!(lz4 > base * 1.08, "lz4 {lz4} vs {base}");
+        let lzf = once(&job, &variant_conf("codec=lzf")).unwrap();
+        assert!((lzf - base).abs() / base < 0.10, "lzf ≈ baseline");
+        let small_buf = once(&job, &variant_conf("file.buffer=15k")).unwrap();
+        assert!(small_buf > base * 1.03, "15k buffer {small_buf} vs {base}");
+        assert!(once(&job, &variant_conf("memoryFraction=0.1/0.7")).is_none());
+    }
+
+    /// E3 shape assertions — Fig 3 (k-means): everything within ~10%.
+    #[test]
+    fn fig3_shapes() {
+        let job = Workload::KMeans100M.job();
+        let base = once(&job, &kryo_baseline()).unwrap();
+        for v in VARIANTS {
+            let mut conf = kryo_baseline();
+            for (k, val) in v.settings {
+                conf.set(k, val).unwrap();
+            }
+            if let Some(t) = once(&job, &conf) {
+                let dev = (t - base).abs() / base;
+                assert!(dev < 0.12, "{}: k-means dev {:.3} too large", v.label, dev);
+            }
+            // (0.1/0.7 may legitimately run OR crash the tiny k-means
+            // shuffle; the paper shows bars for it, so assert it runs:)
+        }
+        let mf17 = once(&job, &variant_conf("memoryFraction=0.1/0.7"));
+        assert!(mf17.is_some(), "k-means must survive 0.1/0.7");
+    }
+
+    #[test]
+    fn median_reps_are_deterministic() {
+        let job = Workload::MiniSortByKey.job();
+        let a = median_run(&job, &SparkConf::default(), &ClusterSpec::mini());
+        let b = median_run(&job, &SparkConf::default(), &ClusterSpec::mini());
+        assert_eq!(a, b);
+        assert!(a.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn sensitivity_figure_structure() {
+        // Mini workload keeps this fast; structural assertions only.
+        let fig = sensitivity(Workload::MiniSortByKey, &ClusterSpec::mini());
+        assert_eq!(fig.bars.len(), VARIANTS.len() + 1);
+        assert!(fig.baseline > 0.0);
+        let ascii = fig.to_ascii(100);
+        assert!(ascii.contains("baseline"));
+    }
+}

@@ -1,0 +1,44 @@
+//! # sparktune
+//!
+//! Reproduction of **“Spark Parameter Tuning via Trial-and-Error”**
+//! (Petridis, Gounaris, Torres — 2016) as a three-layer Rust + JAX + Pallas
+//! system.
+//!
+//! The crate contains:
+//!
+//! * `sparksim` — a from-scratch Spark-1.5-era execution-engine model:
+//!   RDD DAG → stages → tasks ([`engine`]), a discrete-event cluster
+//!   simulator ([`sim`], [`cluster`]), the legacy memory manager with
+//!   storage/shuffle fractions ([`exec`]), the block manager ([`storage`]),
+//!   and all three shuffle managers ([`shuffle`]).
+//! * Real substrates the model is calibrated against: from-scratch
+//!   compression codecs ([`codec`]) and serializers ([`ser`]).
+//! * The paper's 12 tunable parameters as a typed configuration system
+//!   ([`conf`]).
+//! * The paper's contribution — the trial-and-error tuning methodology of
+//!   Fig. 4 — plus exhaustive/random-search baselines ([`tuner`]).
+//! * Benchmarks from the paper's evaluation ([`workloads`]), experiment
+//!   drivers for every figure and table ([`experiments`]), and reporting
+//!   ([`metrics`], [`report`]).
+//! * The AOT compute path: a PJRT runtime ([`runtime`]) that loads the
+//!   JAX/Pallas-lowered k-means step from `artifacts/` and executes it from
+//!   the Rust hot path (Python is build-time only).
+
+pub mod cli;
+pub mod cluster;
+pub mod codec;
+pub mod conf;
+pub mod engine;
+pub mod experiments;
+pub mod real;
+pub mod report;
+pub mod runtime;
+pub mod exec;
+pub mod shuffle;
+pub mod sim;
+pub mod storage;
+pub mod testkit;
+pub mod tuner;
+pub mod ser;
+pub mod util;
+pub mod workloads;

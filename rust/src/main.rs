@@ -1,0 +1,16 @@
+//! `sparktune` CLI — leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser in [`sparktune::cli`]; the offline crate
+//! set has no `clap`):
+//!
+//! ```text
+//! sparktune run    --workload sort-by-key [--conf k=v ...] [--mode sim|real]
+//! sparktune tune   --workload kmeans --threshold 0.10
+//! sparktune sweep  --figure fig1|fig2|fig3|table2
+//! sparktune report --out experiments_out/
+//! ```
+
+fn main() {
+    let code = sparktune::cli::main(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

@@ -1,0 +1,188 @@
+//! Report rendering: ASCII horizontal bar charts (the Figs 1–3 format),
+//! markdown tables (Table 2, case studies) and CSV export.
+
+use std::fmt::Write as _;
+
+/// One bar of a figure.
+#[derive(Clone, Debug)]
+pub struct Bar {
+    /// Parameter label, e.g. `shuffle.manager=hash`.
+    pub label: String,
+    /// Runtime in seconds; `None` = crashed run (rendered as `CRASH`).
+    pub value: Option<f64>,
+}
+
+/// A Figs-1–3-style chart: runtime bars vs a baseline.
+#[derive(Clone, Debug)]
+pub struct Figure {
+    pub id: String,
+    pub title: String,
+    pub baseline_label: String,
+    pub baseline: f64,
+    pub bars: Vec<Bar>,
+}
+
+impl Figure {
+    /// Render as an ASCII horizontal bar chart; bar lengths proportional
+    /// to runtime, deviation-vs-baseline annotated per bar.
+    pub fn to_ascii(&self, width: usize) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "== {}: {} ==", self.id, self.title);
+        let label_w = self
+            .bars
+            .iter()
+            .map(|b| b.label.len())
+            .chain([self.baseline_label.len()])
+            .max()
+            .unwrap_or(10)
+            .min(48);
+        let max_v = self
+            .bars
+            .iter()
+            .filter_map(|b| b.value)
+            .chain([self.baseline])
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        let bar_w = width.saturating_sub(label_w + 24).max(10);
+        let mut render = |label: &str, value: Option<f64>, is_base: bool| {
+            let lab = format!("{label:<label_w$}");
+            match value {
+                Some(v) => {
+                    let n = ((v / max_v) * bar_w as f64).round() as usize;
+                    let dev = 100.0 * (v - self.baseline) / self.baseline;
+                    let tag = if is_base {
+                        " (baseline)".to_string()
+                    } else {
+                        format!(" ({dev:+.1}%)")
+                    };
+                    let _ = writeln!(out, "{lab} {:<bar_w$} {v:8.1}s{tag}", "#".repeat(n.max(1)));
+                }
+                None => {
+                    let _ = writeln!(out, "{lab} {:<bar_w$} {:>8}", "", "CRASH");
+                }
+            }
+        };
+        render(&self.baseline_label, Some(self.baseline), true);
+        for b in &self.bars.clone() {
+            render(&b.label, b.value, false);
+        }
+        out
+    }
+
+    /// CSV: `label,seconds,deviation_pct` (crashes: empty seconds).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("label,seconds,deviation_pct\n");
+        let _ = writeln!(out, "{},{:.3},0.0", csv_escape(&self.baseline_label), self.baseline);
+        for b in &self.bars {
+            match b.value {
+                Some(v) => {
+                    let dev = 100.0 * (v - self.baseline) / self.baseline;
+                    let _ = writeln!(out, "{},{v:.3},{dev:.2}", csv_escape(&b.label));
+                }
+                None => {
+                    let _ = writeln!(out, "{},,CRASH", csv_escape(&b.label));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A generic markdown table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "**{}**\n", self.title);
+        }
+        let _ = writeln!(out, "| {} |", self.header.join(" | "));
+        let _ = writeln!(out, "|{}|", self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for r in &self.rows {
+            let _ = writeln!(out, "| {} |", r.join(" | "));
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.iter().map(|h| csv_escape(h)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fig() -> Figure {
+        Figure {
+            id: "fig1".into(),
+            title: "sort-by-key".into(),
+            baseline_label: "kryo baseline".into(),
+            baseline: 150.0,
+            bars: vec![
+                Bar { label: "hash".into(), value: Some(127.0) },
+                Bar { label: "0.1/0.7".into(), value: None },
+            ],
+        }
+    }
+
+    #[test]
+    fn ascii_renders_bars_and_crash() {
+        let s = fig().to_ascii(100);
+        assert!(s.contains("kryo baseline"));
+        assert!(s.contains("(baseline)"));
+        assert!(s.contains("-15.3%"), "{s}");
+        assert!(s.contains("CRASH"));
+        // bar proportionality: baseline row has more # than hash row
+        let base_hashes = s.lines().find(|l| l.contains("(baseline)")).unwrap().matches('#').count();
+        let hash_hashes = s.lines().find(|l| l.contains("-15.3%")).unwrap().matches('#').count();
+        assert!(base_hashes > hash_hashes);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let csv = fig().to_csv();
+        assert_eq!(csv.lines().count(), 4);
+        assert!(csv.lines().last().unwrap().contains("CRASH"));
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let t = Table {
+            title: "Table 2".into(),
+            header: vec!["param".into(), "avg".into()],
+            rows: vec![vec!["spark.serializer".into(), "12.6%".into()]],
+        };
+        let md = t.to_markdown();
+        assert!(md.contains("| param | avg |"));
+        assert!(md.contains("| spark.serializer | 12.6% |"));
+        let csv = t.to_csv();
+        assert!(csv.contains("spark.serializer,12.6%"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        assert_eq!(csv_escape("a,b"), "\"a,b\"");
+        assert_eq!(csv_escape("plain"), "plain");
+        assert_eq!(csv_escape("say \"hi\""), "\"say \"\"hi\"\"\"");
+    }
+}

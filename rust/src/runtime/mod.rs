@@ -1,0 +1,300 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from the Rust hot path. Python never runs at request time.
+//!
+//! The interchange format is **HLO text**: `HloModuleProto::from_text_file`
+//! reassigns instruction ids, so jax ≥ 0.5 modules load cleanly on the
+//! `xla` crate's xla_extension 0.5.1 (serialized protos do not — see
+//! /opt/xla-example/README.md).
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape metadata emitted by `compile/aot.py` alongside the HLO.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KmeansMeta {
+    /// Points per partition the artifact was lowered for.
+    pub p: usize,
+    /// Dimensions.
+    pub d: usize,
+    /// Centroid count.
+    pub k: usize,
+    /// Pallas point-block (BlockSpec tile).
+    pub block_p: usize,
+    /// Estimated VMEM residency of one kernel grid step, bytes.
+    pub vmem_bytes: u64,
+    /// Estimated MXU utilization of the kernel's block shapes.
+    pub mxu_utilization: f64,
+}
+
+impl KmeansMeta {
+    /// Parse the `key=value` metadata file.
+    pub fn parse(text: &str) -> Result<KmeansMeta> {
+        let mut p = None;
+        let mut d = None;
+        let mut k = None;
+        let mut block_p = None;
+        let mut vmem = None;
+        let mut mxu = None;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) =
+                line.split_once('=').with_context(|| format!("bad meta line {line:?}"))?;
+            match key.trim() {
+                "p" => p = Some(value.trim().parse()?),
+                "d" => d = Some(value.trim().parse()?),
+                "k" => k = Some(value.trim().parse()?),
+                "block_p" => block_p = Some(value.trim().parse()?),
+                "vmem_bytes" => vmem = Some(value.trim().parse()?),
+                "mxu_utilization" => mxu = Some(value.trim().parse()?),
+                _ => {} // forward-compatible
+            }
+        }
+        Ok(KmeansMeta {
+            p: p.context("missing p")?,
+            d: d.context("missing d")?,
+            k: k.context("missing k")?,
+            block_p: block_p.context("missing block_p")?,
+            vmem_bytes: vmem.unwrap_or(0),
+            mxu_utilization: mxu.unwrap_or(0.0),
+        })
+    }
+}
+
+/// Result of one k-means partition step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// Per-centroid partial sums, row-major `(K, D)`.
+    pub sums: Vec<f32>,
+    /// Per-centroid point counts, `(K,)`.
+    pub counts: Vec<f32>,
+    /// Masked sum of squared distances to assigned centroids.
+    pub inertia: f32,
+}
+
+/// The compiled k-means executables, loaded once and reused across every
+/// task execution (one compile per model variant).
+pub struct KmeansRuntime {
+    client: xla::PjRtClient,
+    step_exe: xla::PjRtLoadedExecutable,
+    combine_exe: xla::PjRtLoadedExecutable,
+    pub meta: KmeansMeta,
+}
+
+impl KmeansRuntime {
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    /// True if the AOT artifacts exist (tests skip gracefully otherwise;
+    /// `make artifacts` builds them).
+    pub fn artifacts_present(dir: &Path) -> bool {
+        dir.join("kmeans_step.hlo.txt").exists()
+            && dir.join("new_centroids.hlo.txt").exists()
+            && dir.join("kmeans_step.meta").exists()
+    }
+
+    /// Load + compile the artifacts on the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<KmeansRuntime> {
+        if !Self::artifacts_present(dir) {
+            bail!(
+                "AOT artifacts not found in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let meta = KmeansMeta::parse(&std::fs::read_to_string(dir.join("kmeans_step.meta"))?)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        let step_exe = compile(&client, &dir.join("kmeans_step.hlo.txt"))?;
+        let combine_exe = compile(&client, &dir.join("new_centroids.hlo.txt"))?;
+        Ok(KmeansRuntime { client, step_exe, combine_exe, meta })
+    }
+
+    /// Execute one partition step. `points` is row-major `(P, D)` with
+    /// exactly `meta.p × meta.d` elements (pad + mask shorter partitions),
+    /// `centroids` is `(K, D)`, `mask` is `(P,)` of 0.0/1.0.
+    pub fn step(&self, points: &[f32], centroids: &[f32], mask: &[f32]) -> Result<StepOutput> {
+        let m = &self.meta;
+        if points.len() != m.p * m.d {
+            bail!("points len {} != P×D = {}", points.len(), m.p * m.d);
+        }
+        if centroids.len() != m.k * m.d {
+            bail!("centroids len {} != K×D = {}", centroids.len(), m.k * m.d);
+        }
+        if mask.len() != m.p {
+            bail!("mask len {} != P = {}", mask.len(), m.p);
+        }
+        let x = xla::Literal::vec1(points)
+            .reshape(&[m.p as i64, m.d as i64])
+            .map_err(to_anyhow)?;
+        let c = xla::Literal::vec1(centroids)
+            .reshape(&[m.k as i64, m.d as i64])
+            .map_err(to_anyhow)?;
+        let msk = xla::Literal::vec1(mask);
+        let result = self.step_exe.execute::<xla::Literal>(&[x, c, msk]).map_err(to_anyhow)?;
+        let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        // Lowered with return_tuple=True → 3-tuple.
+        let parts = tuple.to_tuple().map_err(to_anyhow)?;
+        if parts.len() != 3 {
+            bail!("expected 3 outputs, got {}", parts.len());
+        }
+        let sums = parts[0].to_vec::<f32>().map_err(to_anyhow)?;
+        let counts = parts[1].to_vec::<f32>().map_err(to_anyhow)?;
+        let inertia = parts[2].to_vec::<f32>().map_err(to_anyhow)?[0];
+        Ok(StepOutput { sums, counts, inertia })
+    }
+
+    /// Reduce-side combine: aggregated sums/counts → next centroids.
+    pub fn combine(&self, sums: &[f32], counts: &[f32], old: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        let s = xla::Literal::vec1(sums)
+            .reshape(&[m.k as i64, m.d as i64])
+            .map_err(to_anyhow)?;
+        let cnt = xla::Literal::vec1(counts);
+        let o = xla::Literal::vec1(old)
+            .reshape(&[m.k as i64, m.d as i64])
+            .map_err(to_anyhow)?;
+        let result =
+            self.combine_exe.execute::<xla::Literal>(&[s, cnt, o]).map_err(to_anyhow)?;
+        let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        let out = tuple.to_tuple1().map_err(to_anyhow)?;
+        out.to_vec::<f32>().map_err(to_anyhow)
+    }
+
+    /// PJRT platform (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Measure per-point wall time of the compiled step (ns/point) — the
+    /// calibration figure tying `workloads::KMEANS_*` constants to real
+    /// compiled code (EXPERIMENTS.md §Calibration).
+    pub fn measure_point_ns(&self, reps: usize) -> Result<f64> {
+        let m = &self.meta;
+        let points: Vec<f32> = (0..m.p * m.d).map(|i| (i % 97) as f32 * 0.01).collect();
+        let centroids: Vec<f32> = (0..m.k * m.d).map(|i| (i % 89) as f32 * 0.02).collect();
+        let mask = vec![1.0f32; m.p];
+        // Warm-up.
+        self.step(&points, &centroids, &mask)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            self.step(&points, &centroids, &mask)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1e9 / (reps as f64 * m.p as f64))
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path).map_err(to_anyhow)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).map_err(to_anyhow)
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_and_round_trips() {
+        let text = "p=16384\nd=64\nk=16\nblock_p=2048\nvmem_bytes=802880\nmxu_utilization=0.0606\n";
+        let m = KmeansMeta::parse(text).unwrap();
+        assert_eq!(m.p, 16384);
+        assert_eq!(m.d, 64);
+        assert_eq!(m.k, 16);
+        assert_eq!(m.block_p, 2048);
+        assert_eq!(m.vmem_bytes, 802_880);
+        assert!((m.mxu_utilization - 0.0606).abs() < 1e-9);
+    }
+
+    #[test]
+    fn meta_rejects_garbage() {
+        assert!(KmeansMeta::parse("p=16384").is_err()); // missing keys
+        assert!(KmeansMeta::parse("p=abc\nd=1\nk=1\nblock_p=1").is_err());
+        // unknown keys are forward-compatible
+        let m = KmeansMeta::parse("p=1\nd=1\nk=1\nblock_p=1\nfuture=42").unwrap();
+        assert_eq!(m.p, 1);
+    }
+
+    /// The L3→PJRT integration test: load the real artifacts, run a step,
+    /// and check against a Rust-side reference implementation. Skips (with
+    /// a notice) when artifacts haven't been built.
+    #[test]
+    fn pjrt_step_matches_rust_reference() {
+        let dir = KmeansRuntime::default_dir();
+        if !KmeansRuntime::artifacts_present(&dir) {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            return;
+        }
+        let rt = KmeansRuntime::load(&dir).expect("load artifacts");
+        let m = rt.meta.clone();
+        // Deterministic pseudo-random inputs.
+        let mut rng = crate::util::Prng::new(0xF00D);
+        let points: Vec<f32> = (0..m.p * m.d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let centroids: Vec<f32> = (0..m.k * m.d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let mut mask = vec![1.0f32; m.p];
+        for i in (m.p - 100)..m.p {
+            mask[i] = 0.0; // exercise padding
+        }
+        let out = rt.step(&points, &centroids, &mask).expect("execute");
+
+        // Rust reference.
+        let mut ref_sums = vec![0.0f64; m.k * m.d];
+        let mut ref_counts = vec![0.0f64; m.k];
+        let mut ref_inertia = 0.0f64;
+        for i in 0..m.p {
+            if mask[i] == 0.0 {
+                continue;
+            }
+            let x = &points[i * m.d..(i + 1) * m.d];
+            let mut best = (f64::INFINITY, 0usize);
+            for c in 0..m.k {
+                let cc = &centroids[c * m.d..(c + 1) * m.d];
+                let d2: f64 = x
+                    .iter()
+                    .zip(cc)
+                    .map(|(a, b)| (*a as f64 - *b as f64) * (*a as f64 - *b as f64))
+                    .sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            ref_counts[best.1] += 1.0;
+            ref_inertia += best.0;
+            for (j, v) in x.iter().enumerate() {
+                ref_sums[best.1 * m.d + j] += *v as f64;
+            }
+        }
+        for c in 0..m.k {
+            assert!(
+                (out.counts[c] as f64 - ref_counts[c]).abs() < 0.5,
+                "count[{c}]: pjrt {} vs ref {}",
+                out.counts[c],
+                ref_counts[c]
+            );
+        }
+        for (i, (a, b)) in out.sums.iter().zip(&ref_sums).enumerate() {
+            assert!(
+                (*a as f64 - b).abs() < 1e-2 * (1.0 + b.abs()),
+                "sums[{i}]: pjrt {a} vs ref {b}"
+            );
+        }
+        assert!(
+            (out.inertia as f64 - ref_inertia).abs() < 1e-2 * (1.0 + ref_inertia.abs()),
+            "inertia: pjrt {} vs ref {}",
+            out.inertia,
+            ref_inertia
+        );
+
+        // Combine path: produces finite centroids, empty clusters keep old.
+        let next = rt.combine(&out.sums, &out.counts, &centroids).expect("combine");
+        assert_eq!(next.len(), m.k * m.d);
+        assert!(next.iter().all(|v| v.is_finite()));
+    }
+}

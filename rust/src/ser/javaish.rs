@@ -1,0 +1,363 @@
+//! Java-ObjectOutputStream-style serializer (the Spark 1.5 default).
+//!
+//! Mirrors the *cost structure* of `java.io.ObjectOutputStream`:
+//!
+//! * 4-byte stream header (`STREAM_MAGIC`, `STREAM_VERSION`);
+//! * every record is a `TC_OBJECT` with a class descriptor — written in
+//!   full (UTF class name, 8-byte serialVersionUID, field table) on first
+//!   use, then referenced with `TC_REFERENCE` + 4-byte handle;
+//! * every byte array / float array is its own `TC_ARRAY` object with a
+//!   descriptor reference and a 4-byte length;
+//! * primitive fields are written at full width (8-byte longs).
+//!
+//! On 100-byte KV records this yields the ~1.2–1.4× size factor (and the
+//! per-record branching cost) that makes real Java serialization the
+//! paper's first knob to turn.
+
+use super::{Record, SerError};
+
+const STREAM_MAGIC: u16 = 0xACED;
+const STREAM_VERSION: u16 = 5;
+
+const TC_OBJECT: u8 = 0x73;
+const TC_CLASSDESC: u8 = 0x72;
+const TC_REFERENCE: u8 = 0x71;
+const TC_ARRAY: u8 = 0x75;
+const TC_ENDBLOCKDATA: u8 = 0x78;
+
+/// Class ids we "load" into the descriptor table. Order matters only for
+/// handle assignment within one stream.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Class {
+    KvRecord,
+    ByteArray,
+    VectorRecord,
+    FloatArray,
+    LongRecord,
+}
+
+impl Class {
+    fn name(self) -> &'static str {
+        match self {
+            Class::KvRecord => "sparktune.bench.KvRecord",
+            Class::ByteArray => "[B",
+            Class::VectorRecord => "sparktune.bench.VectorRecord",
+            Class::FloatArray => "[F",
+            Class::LongRecord => "sparktune.bench.LongRecord",
+        }
+    }
+
+    fn uid(self) -> u64 {
+        // Deterministic fake serialVersionUID per class.
+        let mut h = 0x9E3779B97F4A7C15u64;
+        for b in self.name().bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001B3);
+        }
+        h
+    }
+
+    fn fields(self) -> &'static [(&'static str, u8)] {
+        // (field name, JVM type tag)
+        match self {
+            Class::KvRecord => &[("key", b'['), ("value", b'[')],
+            Class::ByteArray | Class::FloatArray => &[],
+            Class::VectorRecord => &[("values", b'[')],
+            Class::LongRecord => &[("value", b'J')],
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Class::KvRecord => 0,
+            Class::ByteArray => 1,
+            Class::VectorRecord => 2,
+            Class::FloatArray => 3,
+            Class::LongRecord => 4,
+        }
+    }
+
+    fn from_name(name: &str) -> Option<Class> {
+        Some(match name {
+            "sparktune.bench.KvRecord" => Class::KvRecord,
+            "[B" => Class::ByteArray,
+            "sparktune.bench.VectorRecord" => Class::VectorRecord,
+            "[F" => Class::FloatArray,
+            "sparktune.bench.LongRecord" => Class::LongRecord,
+            _ => return None,
+        })
+    }
+}
+
+struct Writer {
+    out: Vec<u8>,
+    /// handle table: class index → assigned handle (0 = not yet written)
+    handles: [u32; 5],
+    next_handle: u32,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        let mut out = Vec::new();
+        out.extend_from_slice(&STREAM_MAGIC.to_be_bytes());
+        out.extend_from_slice(&STREAM_VERSION.to_be_bytes());
+        Writer { out, handles: [0; 5], next_handle: 0x7E0000 } // java baseWireHandle
+    }
+
+    fn class_desc(&mut self, class: Class) {
+        let slot = class.index();
+        if self.handles[slot] != 0 {
+            self.out.push(TC_REFERENCE);
+            self.out.extend_from_slice(&self.handles[slot].to_be_bytes());
+            return;
+        }
+        self.out.push(TC_CLASSDESC);
+        let name = class.name().as_bytes();
+        self.out.extend_from_slice(&(name.len() as u16).to_be_bytes());
+        self.out.extend_from_slice(name);
+        self.out.extend_from_slice(&class.uid().to_be_bytes());
+        self.out.push(0x02); // flags: SC_SERIALIZABLE
+        let fields = class.fields();
+        self.out.extend_from_slice(&(fields.len() as u16).to_be_bytes());
+        for (fname, tag) in fields {
+            self.out.push(*tag);
+            self.out.extend_from_slice(&(fname.len() as u16).to_be_bytes());
+            self.out.extend_from_slice(fname.as_bytes());
+        }
+        self.out.push(TC_ENDBLOCKDATA);
+        self.handles[slot] = self.next_handle;
+        self.next_handle += 1;
+    }
+
+    fn byte_array(&mut self, data: &[u8]) {
+        self.out.push(TC_ARRAY);
+        self.class_desc(Class::ByteArray);
+        self.out.extend_from_slice(&(data.len() as u32).to_be_bytes());
+        self.out.extend_from_slice(data);
+    }
+
+    fn float_array(&mut self, data: &[f32]) {
+        self.out.push(TC_ARRAY);
+        self.class_desc(Class::FloatArray);
+        self.out.extend_from_slice(&(data.len() as u32).to_be_bytes());
+        for v in data {
+            self.out.extend_from_slice(&v.to_be_bytes());
+        }
+    }
+
+    fn record(&mut self, r: &Record) {
+        self.out.push(TC_OBJECT);
+        match r {
+            Record::Kv { key, value } => {
+                self.class_desc(Class::KvRecord);
+                self.byte_array(key);
+                self.byte_array(value);
+            }
+            Record::Vector(values) => {
+                self.class_desc(Class::VectorRecord);
+                self.float_array(values);
+            }
+            Record::Long(v) => {
+                self.class_desc(Class::LongRecord);
+                self.out.extend_from_slice(&v.to_be_bytes());
+            }
+        }
+    }
+}
+
+/// Serialize a batch of records as one object stream.
+pub fn serialize(records: &[Record]) -> Vec<u8> {
+    let mut w = Writer::new();
+    for r in records {
+        w.record(r);
+    }
+    w.out
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    i: usize,
+    /// handle → class
+    table: Vec<Class>,
+}
+
+impl<'a> Reader<'a> {
+    fn u8(&mut self) -> Result<u8, SerError> {
+        if self.i >= self.bytes.len() {
+            return Err(SerError::Truncated("u8"));
+        }
+        let b = self.bytes[self.i];
+        self.i += 1;
+        Ok(b)
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], SerError> {
+        if self.i + n > self.bytes.len() {
+            return Err(SerError::Truncated("bytes"));
+        }
+        let s = &self.bytes[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16, SerError> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, SerError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, SerError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn class_desc(&mut self) -> Result<Class, SerError> {
+        match self.u8()? {
+            TC_REFERENCE => {
+                let handle = self.u32()? as usize;
+                let idx = handle.checked_sub(0x7E0000).ok_or(SerError::Bad("bad handle"))?;
+                self.table.get(idx).copied().ok_or(SerError::Bad("dangling handle"))
+            }
+            TC_CLASSDESC => {
+                let name_len = self.u16()? as usize;
+                let name_bytes = self.take(name_len)?;
+                let name =
+                    std::str::from_utf8(name_bytes).map_err(|_| SerError::Bad("class name utf8"))?;
+                let class = Class::from_name(name).ok_or(SerError::Bad("unknown class"))?;
+                let uid = self.u64()?;
+                if uid != class.uid() {
+                    return Err(SerError::Bad("serialVersionUID mismatch"));
+                }
+                let _flags = self.u8()?;
+                let nfields = self.u16()? as usize;
+                if nfields != class.fields().len() {
+                    return Err(SerError::Bad("field count mismatch"));
+                }
+                for (fname, tag) in class.fields() {
+                    if self.u8()? != *tag {
+                        return Err(SerError::Bad("field tag mismatch"));
+                    }
+                    let l = self.u16()? as usize;
+                    if self.take(l)? != fname.as_bytes() {
+                        return Err(SerError::Bad("field name mismatch"));
+                    }
+                }
+                if self.u8()? != TC_ENDBLOCKDATA {
+                    return Err(SerError::Bad("missing end of class desc"));
+                }
+                self.table.push(class);
+                Ok(class)
+            }
+            _ => Err(SerError::Bad("expected class descriptor")),
+        }
+    }
+
+    fn byte_array(&mut self) -> Result<Vec<u8>, SerError> {
+        if self.u8()? != TC_ARRAY {
+            return Err(SerError::Bad("expected TC_ARRAY"));
+        }
+        if self.class_desc()? != Class::ByteArray {
+            return Err(SerError::Bad("expected [B"));
+        }
+        let len = self.u32()? as usize;
+        if len > self.bytes.len() - self.i {
+            return Err(SerError::TooLong { declared: len, limit: self.bytes.len() - self.i });
+        }
+        Ok(self.take(len)?.to_vec())
+    }
+
+    fn float_array(&mut self) -> Result<Vec<f32>, SerError> {
+        if self.u8()? != TC_ARRAY {
+            return Err(SerError::Bad("expected TC_ARRAY"));
+        }
+        if self.class_desc()? != Class::FloatArray {
+            return Err(SerError::Bad("expected [F"));
+        }
+        let len = self.u32()? as usize;
+        if len.saturating_mul(4) > self.bytes.len() - self.i {
+            return Err(SerError::TooLong { declared: len * 4, limit: self.bytes.len() - self.i });
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(f32::from_be_bytes(self.take(4)?.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    fn record(&mut self) -> Result<Record, SerError> {
+        if self.u8()? != TC_OBJECT {
+            return Err(SerError::Bad("expected TC_OBJECT"));
+        }
+        match self.class_desc()? {
+            Class::KvRecord => {
+                let key = self.byte_array()?;
+                let value = self.byte_array()?;
+                Ok(Record::Kv { key, value })
+            }
+            Class::VectorRecord => Ok(Record::Vector(self.float_array()?)),
+            Class::LongRecord => Ok(Record::Long(self.u64()? as i64)),
+            _ => Err(SerError::Bad("array class at top level")),
+        }
+    }
+}
+
+/// Deserialize an object stream produced by [`serialize`].
+pub fn deserialize(bytes: &[u8]) -> Result<Vec<Record>, SerError> {
+    let mut r = Reader { bytes, i: 0, table: Vec::new() };
+    if r.u16()? != STREAM_MAGIC || r.u16()? != STREAM_VERSION {
+        return Err(SerError::Bad("bad stream header"));
+    }
+    let mut out = Vec::new();
+    while r.i < bytes.len() {
+        out.push(r.record()?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_record_carries_descriptor_later_ones_reference() {
+        let recs = vec![
+            Record::Kv { key: b"k1".to_vec(), value: b"v1".to_vec() },
+            Record::Kv { key: b"k2".to_vec(), value: b"v2".to_vec() },
+        ];
+        let one = serialize(&recs[..1]).len();
+        let two = serialize(&recs).len();
+        // Second record must be much cheaper than the first (descriptor
+        // amortization), but still carry per-object array framing.
+        let second_cost = two - one;
+        let first_cost = one - 4; // minus stream header
+        assert!(second_cost < first_cost / 2, "first {first_cost}, second {second_cost}");
+        assert!(second_cost > 20, "array framing should cost >20 B, got {second_cost}");
+    }
+
+    #[test]
+    fn long_records_are_full_width() {
+        let n = 100;
+        let recs: Vec<Record> = (0..n).map(|i| Record::Long(i)).collect();
+        let bytes = serialize(&recs);
+        // ≥ 8 payload + ≥6 framing per record after the first.
+        assert!(bytes.len() > n as usize * 14);
+        assert_eq!(deserialize(&bytes).unwrap(), recs);
+    }
+
+    #[test]
+    fn uid_mismatch_detected() {
+        let recs = vec![Record::Long(1)];
+        let mut bytes = serialize(&recs);
+        // Flip a byte inside the serialVersionUID region of the descriptor.
+        // Header(4) + TC_OBJECT(1) + TC_CLASSDESC(1) + name_len(2) + name(27).
+        let uid_pos = 4 + 1 + 1 + 2 + "sparktune.bench.LongRecord".len() + 1;
+        bytes[uid_pos] ^= 0xff;
+        assert!(deserialize(&bytes).is_err());
+    }
+
+    #[test]
+    fn stream_header_required() {
+        assert!(matches!(deserialize(&[]), Err(SerError::Truncated(_))));
+        assert!(deserialize(&[0, 0, 0, 5]).is_err());
+    }
+}

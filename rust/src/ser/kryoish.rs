@@ -1,0 +1,172 @@
+//! Kryo-style serializer (`spark.serializer=...KryoSerializer`).
+//!
+//! Mirrors Kryo-with-registration's cost structure: each record is a
+//! varint *registered class id* followed by varint lengths and raw
+//! payload bytes. No stream header beyond a 2-byte magic, no field names,
+//! no per-array object boxing — 2–4 bytes of framing per small record,
+//! which is where Kryo's size (and much of its speed) advantage over
+//! Java serialization comes from.
+
+use super::{read_varint, write_varint, Record, SerError};
+
+const MAGIC: u16 = 0x4B52; // "KR"
+
+const ID_KV: u64 = 1;
+const ID_VECTOR: u64 = 2;
+const ID_LONG: u64 = 3;
+
+/// Serialize a batch of records.
+pub fn serialize(records: &[Record]) -> Vec<u8> {
+    // Preallocate: payload + ~4 bytes/record framing + header.
+    let payload: usize = records.iter().map(|r| r.payload_bytes()).sum();
+    let mut out = Vec::with_capacity(payload + records.len() * 4 + 2);
+    out.extend_from_slice(&MAGIC.to_be_bytes());
+    for r in records {
+        match r {
+            Record::Kv { key, value } => {
+                write_varint(&mut out, ID_KV);
+                write_varint(&mut out, key.len() as u64);
+                out.extend_from_slice(key);
+                write_varint(&mut out, value.len() as u64);
+                out.extend_from_slice(value);
+            }
+            Record::Vector(values) => {
+                write_varint(&mut out, ID_VECTOR);
+                write_varint(&mut out, values.len() as u64);
+                for v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Record::Long(v) => {
+                write_varint(&mut out, ID_LONG);
+                // zigzag varint like Kryo's writeLong(optimizePositive=false)
+                write_varint(&mut out, zigzag(*v));
+            }
+        }
+    }
+    out
+}
+
+/// Deserialize a batch produced by [`serialize`].
+pub fn deserialize(bytes: &[u8]) -> Result<Vec<Record>, SerError> {
+    if bytes.len() < 2 {
+        return Err(SerError::Truncated("header"));
+    }
+    if u16::from_be_bytes([bytes[0], bytes[1]]) != MAGIC {
+        return Err(SerError::Bad("bad kryo magic"));
+    }
+    let mut i = 2usize;
+    let mut out = Vec::new();
+    while i < bytes.len() {
+        let id = read_varint(bytes, &mut i)?;
+        match id {
+            ID_KV => {
+                let klen = read_varint(bytes, &mut i)? as usize;
+                let key = take(bytes, &mut i, klen)?.to_vec();
+                let vlen = read_varint(bytes, &mut i)? as usize;
+                let value = take(bytes, &mut i, vlen)?.to_vec();
+                out.push(Record::Kv { key, value });
+            }
+            ID_VECTOR => {
+                let n = read_varint(bytes, &mut i)? as usize;
+                if n.saturating_mul(4) > bytes.len() - i {
+                    return Err(SerError::TooLong { declared: n * 4, limit: bytes.len() - i });
+                }
+                let mut values = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let s = take(bytes, &mut i, 4)?;
+                    values.push(f32::from_le_bytes(s.try_into().unwrap()));
+                }
+                out.push(Record::Vector(values));
+            }
+            ID_LONG => {
+                let v = read_varint(bytes, &mut i)?;
+                out.push(Record::Long(unzigzag(v)));
+            }
+            other => return Err(SerError::UnknownClass(other)),
+        }
+    }
+    Ok(out)
+}
+
+#[inline]
+fn take<'a>(bytes: &'a [u8], i: &mut usize, n: usize) -> Result<&'a [u8], SerError> {
+    if *i + n > bytes.len() {
+        return Err(SerError::Truncated("payload"));
+    }
+    let s = &bytes[*i..*i + n];
+    *i += n;
+    Ok(s)
+}
+
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_record_framing_is_tiny() {
+        let recs = vec![Record::Kv { key: vec![1; 10], value: vec![2; 90] }];
+        let bytes = serialize(&recs);
+        // header 2 + id 1 + len 1 + 10 + len 1 + 90 = 105
+        assert_eq!(bytes.len(), 105);
+        assert_eq!(deserialize(&bytes).unwrap(), recs);
+    }
+
+    #[test]
+    fn zigzag_longs() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN, 123456789, -987654321] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+            let bytes = serialize(&[Record::Long(v)]);
+            assert_eq!(deserialize(&bytes).unwrap(), vec![Record::Long(v)]);
+        }
+    }
+
+    #[test]
+    fn negative_longs_stay_small_on_wire() {
+        // zigzag keeps small negatives at 1 byte — unlike the java format's
+        // fixed 8 bytes.
+        let bytes = serialize(&[Record::Long(-2)]);
+        assert_eq!(bytes.len(), 2 + 1 + 1);
+    }
+
+    #[test]
+    fn vector_round_trip_preserves_bits() {
+        let v = vec![0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, 3.4e38, -7.25];
+        let recs = vec![Record::Vector(v.clone())];
+        let back = deserialize(&serialize(&recs)).unwrap();
+        match &back[0] {
+            Record::Vector(u) => {
+                assert_eq!(u.len(), v.len());
+                for (a, b) in u.iter().zip(&v) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            _ => panic!("wrong shape"),
+        }
+    }
+
+    #[test]
+    fn unknown_class_id_rejected() {
+        let mut bytes = serialize(&[]);
+        bytes.push(9); // bogus class id
+        assert_eq!(deserialize(&bytes), Err(SerError::UnknownClass(9)));
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let bytes = serialize(&[Record::Kv { key: vec![1; 10], value: vec![2; 90] }]);
+        for cut in [3, 5, 14, 50, bytes.len() - 1] {
+            assert!(deserialize(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+}

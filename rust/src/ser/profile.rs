@@ -1,0 +1,174 @@
+//! Serializer performance profiles — sim-side constants plus a
+//! measurement path over the real encoders, mirroring
+//! [`crate::codec::profile`].
+//!
+//! The sim charges `records × ns_per_record + bytes / mbps` per
+//! serialize/deserialize step and inflates on-wire sizes by the format's
+//! size factor. Canonical constants are set so that, combined with the
+//! workload mixes of Sec. 4, the serializer's end-to-end impact lands in
+//! the paper's bands (≈25 % sort-by-key, ≈10 % shuffling, <5 % k-means).
+
+use super::{Record, SerKind};
+use crate::util::Prng;
+
+/// Speed/size profile of one serializer on one core.
+#[derive(Clone, Debug)]
+pub struct SerProfile {
+    pub kind: SerKind,
+    /// Payload throughput while serializing, MB/s per core.
+    pub ser_mbps: f64,
+    /// Payload throughput while deserializing, MB/s per core.
+    pub deser_mbps: f64,
+    /// Fixed per-record CPU cost (object graph walk, dispatch), ns.
+    pub ns_per_record: f64,
+    /// On-wire bytes / payload bytes for small (~100 B) records.
+    pub size_factor_small: f64,
+    /// On-wire bytes / payload bytes for large (≥1 KiB) records.
+    pub size_factor_large: f64,
+}
+
+impl SerProfile {
+    /// Frozen MareNostrum-class (2015 Xeon, JVM) profile.
+    ///
+    /// Java serialization in that era benchmarked at roughly 3–4× slower
+    /// than Kryo on small records with ~1.3× the bytes; Kryo's registered
+    /// format is near-payload-size. (See e.g. the JVM serializer shootouts
+    /// the Spark docs cite when recommending Kryo.)
+    pub fn canonical(kind: SerKind) -> SerProfile {
+        match kind {
+            SerKind::Java => SerProfile {
+                kind,
+                ser_mbps: 120.0,
+                deser_mbps: 90.0,
+                ns_per_record: 450.0,
+                size_factor_small: 1.31,
+                size_factor_large: 1.05,
+            },
+            SerKind::Kryo => SerProfile {
+                kind,
+                ser_mbps: 350.0,
+                deser_mbps: 300.0,
+                ns_per_record: 90.0,
+                size_factor_small: 1.04,
+                size_factor_large: 1.005,
+            },
+        }
+    }
+
+    /// On-wire size for `payload` bytes split over `records` records
+    /// (interpolates the small/large size factors on mean record size).
+    pub fn wire_bytes(&self, payload: u64, records: u64) -> u64 {
+        if records == 0 || payload == 0 {
+            return 0;
+        }
+        let mean = payload as f64 / records as f64;
+        // 100 B → small factor; ≥1 KiB → large factor; log-linear between.
+        let t = ((mean.max(1.0).ln() - 100f64.ln()) / (1024f64.ln() - 100f64.ln())).clamp(0.0, 1.0);
+        let factor = self.size_factor_small + t * (self.size_factor_large - self.size_factor_small);
+        (payload as f64 * factor) as u64
+    }
+
+    /// CPU seconds to serialize `payload` bytes in `records` records.
+    pub fn serialize_secs(&self, payload: u64, records: u64) -> f64 {
+        payload as f64 / (self.ser_mbps * 1e6) + records as f64 * self.ns_per_record * 1e-9
+    }
+
+    /// CPU seconds to deserialize.
+    pub fn deserialize_secs(&self, payload: u64, records: u64) -> f64 {
+        payload as f64 / (self.deser_mbps * 1e6) + records as f64 * self.ns_per_record * 1e-9
+    }
+}
+
+/// Measure the real encoders on synthetic KV batches; used by the
+/// calibration test to tie canonical constants to running code.
+pub fn measure(kind: SerKind, records: usize, seed: u64) -> SerProfile {
+    let mut rng = Prng::new(seed);
+    let batch: Vec<Record> = (0..records)
+        .map(|_| {
+            let mut k = vec![0u8; 10];
+            let mut v = vec![0u8; 90];
+            rng.fill_bytes_entropy(&mut k, 0.6);
+            rng.fill_bytes_entropy(&mut v, 0.45);
+            Record::Kv { key: k, value: v }
+        })
+        .collect();
+    let payload: usize = batch.iter().map(|r| r.payload_bytes()).sum();
+
+    let t0 = std::time::Instant::now();
+    let bytes = kind.serialize(&batch);
+    let ser_secs = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let back = kind.deserialize(&bytes).expect("self round-trip");
+    let deser_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(back.len(), batch.len());
+
+    SerProfile {
+        kind,
+        ser_mbps: payload as f64 / 1e6 / ser_secs.max(1e-9),
+        deser_mbps: payload as f64 / 1e6 / deser_secs.max(1e-9),
+        ns_per_record: 0.0, // folded into throughput when measured
+        size_factor_small: bytes.len() as f64 / payload as f64,
+        size_factor_large: f64::NAN, // not measured here
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_java_slower_and_fatter() {
+        let j = SerProfile::canonical(SerKind::Java);
+        let k = SerProfile::canonical(SerKind::Kryo);
+        assert!(j.ser_mbps < k.ser_mbps);
+        assert!(j.size_factor_small > k.size_factor_small);
+        // ~100 B records: java ≈1.31×, kryo ≈1.04× — a ~26% wire gap, the
+        // paper's sort-by-key serializer effect.
+        let gap = j.wire_bytes(100_000_000, 1_000_000) as f64
+            / k.wire_bytes(100_000_000, 1_000_000) as f64;
+        assert!(gap > 1.2 && gap < 1.35, "wire gap {gap}");
+    }
+
+    #[test]
+    fn wire_bytes_interpolates_record_size() {
+        let j = SerProfile::canonical(SerKind::Java);
+        let small = j.wire_bytes(100, 1) as f64 / 100.0;
+        let large = j.wire_bytes(100 * 1024, 1) as f64 / (100.0 * 1024.0);
+        assert!(small > large, "framing should amortize with record size");
+        assert!((small - 1.31).abs() < 0.02);
+        assert!((large - 1.05).abs() < 0.02);
+    }
+
+    #[test]
+    fn zero_cases() {
+        let k = SerProfile::canonical(SerKind::Kryo);
+        assert_eq!(k.wire_bytes(0, 0), 0);
+        assert_eq!(k.serialize_secs(0, 0), 0.0);
+    }
+
+    /// Real-encoder calibration: measured size factors must bracket the
+    /// canonical ones and preserve the java-fatter-than-kryo ordering.
+    #[test]
+    fn measured_size_factors_match_canonical_ordering() {
+        let j = measure(SerKind::Java, 2000, 7);
+        let k = measure(SerKind::Kryo, 2000, 7);
+        assert!(
+            j.size_factor_small > 1.15 && j.size_factor_small < 1.6,
+            "java-ish measured size factor {}",
+            j.size_factor_small
+        );
+        assert!(
+            k.size_factor_small > 1.0 && k.size_factor_small < 1.10,
+            "kryo-ish measured size factor {}",
+            k.size_factor_small
+        );
+        assert!(j.size_factor_small > k.size_factor_small * 1.1);
+        // Speed ordering: the verbose format does strictly more work.
+        assert!(
+            j.ser_mbps < k.ser_mbps,
+            "java-ish ser {:.0} MB/s !< kryo-ish {:.0} MB/s",
+            j.ser_mbps,
+            k.ser_mbps
+        );
+    }
+}

@@ -1,0 +1,67 @@
+//! The record model shared by workloads and serializers.
+//!
+//! Three shapes cover the paper's benchmarks: byte-string key/value pairs
+//! (sort-by-key, shuffling, aggregate-by-key), dense f32 vectors (k-means
+//! points) and raw longs (counters / sampled keys).
+
+/// A single data record flowing through the engine in Real mode.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Record {
+    /// Key/value byte strings (terasort-style records).
+    Kv { key: Vec<u8>, value: Vec<u8> },
+    /// Dense vector (k-means point).
+    Vector(Vec<f32>),
+    /// A primitive long.
+    Long(i64),
+}
+
+impl Record {
+    /// Pure payload size in bytes (no framing) — the denominator for
+    /// serializer size-factor metrics.
+    pub fn payload_bytes(&self) -> usize {
+        match self {
+            Record::Kv { key, value } => key.len() + value.len(),
+            Record::Vector(v) => v.len() * 4,
+            Record::Long(_) => 8,
+        }
+    }
+
+    /// The key bytes used for partitioning/sorting (empty for non-KV).
+    pub fn key_bytes(&self) -> &[u8] {
+        match self {
+            Record::Kv { key, .. } => key,
+            _ => &[],
+        }
+    }
+
+    /// Stable 64-bit hash of the record key (hash partitioner).
+    pub fn key_hash(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a
+        for &b in self.key_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_bytes_per_shape() {
+        assert_eq!(Record::Kv { key: vec![0; 10], value: vec![0; 90] }.payload_bytes(), 100);
+        assert_eq!(Record::Vector(vec![0.0; 100]).payload_bytes(), 400);
+        assert_eq!(Record::Long(7).payload_bytes(), 8);
+    }
+
+    #[test]
+    fn key_hash_stable_and_key_dependent() {
+        let a = Record::Kv { key: b"alpha".to_vec(), value: b"1".to_vec() };
+        let a2 = Record::Kv { key: b"alpha".to_vec(), value: b"2".to_vec() };
+        let b = Record::Kv { key: b"beta".to_vec(), value: b"1".to_vec() };
+        assert_eq!(a.key_hash(), a2.key_hash(), "hash must ignore value");
+        assert_ne!(a.key_hash(), b.key_hash());
+    }
+}

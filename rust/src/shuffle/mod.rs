@@ -1,0 +1,621 @@
+//! Shuffle subsystem cost model: the three Spark 1.5 shuffle managers,
+//! file consolidation, file buffers, spills, and the fetch path.
+//!
+//! This module turns *one task's* shuffle work (map side or reduce side)
+//! into resource demands (`cpu_secs`, `disk_read/write` bytes, `net_in`
+//! bytes, fixed latency) that the engine hands to the discrete-event
+//! simulator. All of the paper's shuffle-behavior parameters act here:
+//!
+//! * **manager = sort** — map side buffers *deserialized* records
+//!   (×[`exec::JVM_OBJECT_FACTOR`]) and sorts by partition id; working
+//!   sets beyond the task's memory share spill serialized (+ optional
+//!   `spill.compress`) runs to disk and merge back. One data + one index
+//!   file per map task.
+//! * **manager = hash** — streams records straight to one file per
+//!   reducer: *no* sort working set (so no map-side spill — why hash wins
+//!   Fig 1), but `maps × reducers` files (`cores × reducers` with
+//!   `consolidateFiles`), each paying open cost, per-file buffer memory
+//!   and interleaved-stream flush penalties (why hash loses Fig 2).
+//! * **manager = tungsten-sort** — sorts *serialized* records (working
+//!   set ≈ payload × [`TUNGSTEN_WORKING_FACTOR`], cheaper compare), no
+//!   deser/reser on the spill path. Requires a relocatable serializer
+//!   (Kryo) and no map-side aggregation — otherwise Spark silently falls
+//!   back to sort, which [`effective_manager`] models.
+//! * **file.buffer** — every buffer flush pays a small-random-write
+//!   penalty ([`FLUSH_PENALTY_SECS`], charged as disk-byte equivalents);
+//!   hash's many interleaved streams pay [`HASH_INTERLEAVE_FACTOR`]× that.
+//! * **compress / codec / serializer** — bytes and CPU through the
+//!   calibrated [`CodecProfile`]/[`SerProfile`].
+//! * **reducer.maxSizeInFlight** — bounds fetch pipelining: the reduce
+//!   side pays one network round-trip of latency per in-flight window,
+//!   and the window is part of the task's irreducible memory.
+
+use crate::cluster::ClusterSpec;
+use crate::codec::CodecProfile;
+use crate::conf::{ShuffleManagerKind, SparkConf};
+use crate::exec::{MemoryModel, SpillPlan, JVM_OBJECT_FACTOR};
+use crate::ser::{SerKind, SerProfile};
+
+/// Tungsten sort buffers serialized bytes + an 8-byte pointer/prefix array
+/// entry per record; ≈1.15× payload for ~100 B records.
+pub const TUNGSTEN_WORKING_FACTOR: f64 = 1.15;
+
+/// Per-record CPU for the sort-manager's insertion+copy+merge path, ns.
+/// JVM-era constant: Spark 1.5's ExternalSorter costs µs-scale per record
+/// (object churn, comparator indirection, buffer growth) — the CPU gap
+/// behind hash beating sort on Fig 1.
+pub const SORT_INSERT_NS: f64 = 3000.0;
+/// Per-record CPU for tungsten's binary-prefix sort, ns (operates on
+/// serialized bytes, no per-record objects).
+pub const TUNGSTEN_INSERT_NS: f64 = 800.0;
+/// Per-record CPU for the hash writer's partitioner+stream dispatch, ns.
+pub const HASH_WRITE_NS: f64 = 500.0;
+/// Per-record CPU for reduce-side merge/aggregation, ns (scaled by log of
+/// run count for merges).
+pub const REDUCE_MERGE_NS: f64 = 1800.0;
+
+/// Effective small-random-write penalty per buffer flush, seconds, at
+/// full page-cache pressure (pressure 1.0). When the node's shuffle
+/// working set fits in the OS page cache the kernel coalesces the small
+/// writes and the penalty vanishes — which is why hash-shuffle's
+/// interleaved streams only hurt at Fig-2 scale (the paper's own reading:
+/// "the input [is] much larger than the available memory").
+pub const FLUSH_PENALTY_SECS: f64 = 0.4e-3;
+/// Hash-manager interleaved streams multiply the flush penalty.
+pub const HASH_INTERLEAVE_FACTOR: f64 = 7.0;
+
+/// Fraction of spill-file I/O that actually reaches the disk: spill files
+/// are written, merged back, and deleted within one task — most of the
+/// traffic never survives to writeback (the page cache absorbs ~70%).
+pub const SPILL_PAGE_CACHE_ABSORPTION: f64 = 0.3;
+
+/// Convert raw page-cache occupancy into an effective flush-penalty
+/// scale: below half-full the kernel absorbs and coalesces everything
+/// (penalty 0); beyond that the penalty ramps linearly to 1.
+pub fn cache_pressure_knee(raw: f64) -> f64 {
+    ((raw - 0.5) / 0.5).clamp(0.0, 1.0)
+}
+
+/// Per fetched block fixed overhead on the reduce side (request +
+/// bookkeeping), seconds. Blocks = map outputs (or consolidated outputs).
+pub const FETCH_BLOCK_SECS: f64 = 40.0e-6;
+
+/// Memory pinned by the fetch pipeline relative to
+/// `spark.reducer.maxSizeInFlight`: the requested window plus buffers
+/// already arriving ≈ 1.5× the configured limit (netty holds both).
+pub const FETCH_WINDOW_FACTOR: f64 = 1.5;
+
+/// Effective throughput of the on-heap fetch-buffer path when
+/// `spark.shuffle.io.preferDirectBufs=false`: netty copies every fetched
+/// byte into heap arrays and the allocation churn rides the GC — charged
+/// as extra CPU per fetched byte (bytes/s per core).
+pub const ONHEAP_FETCH_BW: f64 = 200.0e6;
+
+/// The I/O profiles implied by a configuration.
+#[derive(Clone, Debug)]
+pub struct IoProfiles {
+    pub ser: SerProfile,
+    pub codec: CodecProfile,
+}
+
+impl IoProfiles {
+    pub fn from_conf(conf: &SparkConf) -> IoProfiles {
+        IoProfiles {
+            ser: SerProfile::canonical(conf.serializer),
+            codec: CodecProfile::canonical(conf.io_compression_codec),
+        }
+    }
+}
+
+/// Resolve the manager that actually runs: tungsten-sort needs a
+/// relocatable serializer (Kryo) and no map-side aggregation (Spark 1.5's
+/// `SortShuffleManager.canUseSerializedShuffle` analogue).
+pub fn effective_manager(conf: &SparkConf, map_side_combine: bool) -> ShuffleManagerKind {
+    match conf.shuffle_manager {
+        ShuffleManagerKind::TungstenSort
+            if conf.serializer != SerKind::Kryo || map_side_combine =>
+        {
+            ShuffleManagerKind::Sort
+        }
+        m => m,
+    }
+}
+
+/// Per-task resource demands computed by this module.
+#[derive(Clone, Debug, Default)]
+pub struct ShuffleIo {
+    pub cpu_secs: f64,
+    pub disk_read_bytes: f64,
+    pub disk_write_bytes: f64,
+    pub net_in_bytes: f64,
+    pub fixed_secs: f64,
+    /// Bytes spilled (serialized form, before spill compression) — metric.
+    pub spilled_bytes: u64,
+    pub spill_files: u32,
+    /// Set when the task cannot fit its irreducible working memory.
+    pub oom: Option<SpillPlan>,
+    /// Memory this task pins for the stage's duration (buffers, windows).
+    pub pinned_bytes: u64,
+}
+
+/// Map-side description of one task of a shuffle-write stage.
+#[derive(Clone, Debug)]
+pub struct MapSideSpec {
+    /// Payload bytes this task writes into the shuffle (post-combine).
+    pub out_payload: u64,
+    /// Records written (post-combine).
+    pub out_records: u64,
+    /// Entropy knob of the outgoing bytes (drives codec ratio).
+    pub entropy: f64,
+    /// Reducer count.
+    pub reducers: u32,
+    /// Map task count in the stage.
+    pub map_tasks: u32,
+    /// Map-side combine present (reduceByKey/aggregateByKey)?
+    pub map_side_combine: bool,
+    /// In-memory working payload for sort/combine (pre-combine bytes if
+    /// combining, else == out_payload).
+    pub working_payload: u64,
+    /// OS page-cache pressure in [0,1]: scales buffer-flush penalties
+    /// (0 = shuffle writes fully absorbed by the page cache). Computed by
+    /// the engine from node-concurrent shuffle bytes vs free RAM.
+    pub cache_pressure: f64,
+}
+
+/// Compressed-and-serialized bytes per map task actually laid on disk /
+/// sent over the wire.
+pub fn map_output_bytes(conf: &SparkConf, prof: &IoProfiles, spec: &MapSideSpec) -> f64 {
+    let wire = prof.ser.wire_bytes(spec.out_payload, spec.out_records) as f64;
+    if conf.shuffle_compress {
+        wire * prof.codec.compressed_fraction(spec.entropy)
+    } else {
+        wire
+    }
+}
+
+/// Cost of the map (write) side of a shuffle for one task.
+pub fn map_side(
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    mem: &MemoryModel,
+    prof: &IoProfiles,
+    spec: &MapSideSpec,
+) -> ShuffleIo {
+    let mut io = ShuffleIo::default();
+    let manager = effective_manager(conf, spec.map_side_combine);
+
+    // Serialize everything that leaves the task.
+    io.cpu_secs += prof.ser.serialize_secs(spec.out_payload, spec.out_records);
+    let wire_bytes = prof.ser.wire_bytes(spec.out_payload, spec.out_records) as f64;
+    let out_bytes = if conf.shuffle_compress {
+        io.cpu_secs += prof.codec.compress_secs(wire_bytes as u64);
+        wire_bytes * prof.codec.compressed_fraction(spec.entropy)
+    } else {
+        wire_bytes
+    };
+    io.disk_write_bytes += out_bytes;
+
+    // Manager-specific working set, sort CPU, files and flush behavior.
+    let (files_this_task, flush_factor) = match manager {
+        ShuffleManagerKind::Sort | ShuffleManagerKind::TungstenSort => {
+            let (working, insert_ns) = if manager == ShuffleManagerKind::Sort {
+                (spec.working_payload as f64 * JVM_OBJECT_FACTOR, SORT_INSERT_NS)
+            } else {
+                (spec.working_payload as f64 * TUNGSTEN_WORKING_FACTOR, TUNGSTEN_INSERT_NS)
+            };
+            io.cpu_secs += spec.out_records as f64 * insert_ns * 1e-9;
+            let min_batch = if spec.map_side_combine {
+                crate::exec::MIN_AGG_BATCH
+            } else {
+                crate::exec::MIN_SPILL_BATCH
+            };
+            match mem.plan_task(working as u64, 0, min_batch, conf.shuffle_spill) {
+                SpillPlan::InMemory => {}
+                SpillPlan::Spill { spill_bytes, files } => {
+                    // Overflow cycles through disk in serialized form.
+                    let payload_overflow = spill_bytes as f64
+                        / if manager == ShuffleManagerKind::Sort {
+                            JVM_OBJECT_FACTOR
+                        } else {
+                            TUNGSTEN_WORKING_FACTOR
+                        };
+                    let frac_records =
+                        payload_overflow / spec.working_payload.max(1) as f64;
+                    let overflow_records =
+                        (spec.out_records as f64 * frac_records).ceil() as u64;
+                    let mut spill_disk =
+                        prof.ser.wire_bytes(payload_overflow as u64, overflow_records) as f64;
+                    // Sort manager re-serializes on spill and deserializes
+                    // on merge; tungsten spills the serialized pages as-is.
+                    if manager == ShuffleManagerKind::Sort {
+                        io.cpu_secs +=
+                            prof.ser.serialize_secs(payload_overflow as u64, overflow_records);
+                        io.cpu_secs +=
+                            prof.ser.deserialize_secs(payload_overflow as u64, overflow_records);
+                    }
+                    if conf.shuffle_spill_compress {
+                        io.cpu_secs += prof.codec.compress_secs(spill_disk as u64);
+                        io.cpu_secs += prof.codec.decompress_secs(spill_disk as u64);
+                        spill_disk *= prof.codec.compressed_fraction(spec.entropy);
+                    }
+                    let effective = spill_disk * SPILL_PAGE_CACHE_ABSORPTION;
+                    io.disk_write_bytes += effective;
+                    io.disk_read_bytes += effective;
+                    // Merge pass over all records.
+                    io.cpu_secs += spec.out_records as f64
+                        * REDUCE_MERGE_NS
+                        * (1.0 + (files as f64 + 1.0).log2() * 0.3)
+                        * 1e-9;
+                    io.spilled_bytes = spill_disk as u64;
+                    io.spill_files = files;
+                }
+                oom @ SpillPlan::Oom { .. } => {
+                    io.oom = Some(oom);
+                    return io;
+                }
+            }
+            // data file + index file
+            (2u64, 1.0)
+        }
+        ShuffleManagerKind::Hash => {
+            io.cpu_secs += spec.out_records as f64 * HASH_WRITE_NS * 1e-9;
+            let files = if conf.shuffle_consolidate_files {
+                // One file group per core: this task's share of opens.
+                let groups = cluster.total_cores() as f64;
+                (spec.reducers as f64 * groups / spec.map_tasks.max(1) as f64).ceil() as u64
+            } else {
+                spec.reducers as u64
+            };
+            io.pinned_bytes = spec.reducers as u64 * conf.shuffle_file_buffer;
+            (files, HASH_INTERLEAVE_FACTOR)
+        }
+    };
+
+    // File opens + buffer flush penalties, charged as disk-equivalents.
+    io.fixed_secs += files_this_task as f64 * cluster.file_open_cost;
+    let flushes = out_bytes / conf.shuffle_file_buffer.max(1) as f64;
+    io.disk_write_bytes +=
+        flushes * FLUSH_PENALTY_SECS * flush_factor * spec.cache_pressure * cluster.disk_bw;
+
+    io
+}
+
+/// Reduce-side description of one task of a shuffle-read stage.
+#[derive(Clone, Debug)]
+pub struct ReduceSideSpec {
+    /// Payload bytes this reducer consumes (its slice of the map output).
+    pub in_payload: u64,
+    pub in_records: u64,
+    pub entropy: f64,
+    /// Number of distinct source blocks to fetch (map tasks, or file
+    /// groups when the map side consolidated).
+    pub source_blocks: u32,
+    /// Does the reducer sort (sortByKey) or hash-aggregate?
+    pub needs_sort: bool,
+    /// Aggregation working payload (distinct keys × record size), if the
+    /// reducer aggregates; `None` for pure reshuffle/sort consumers that
+    /// stream.
+    pub agg_working_payload: Option<u64>,
+}
+
+/// Cost of the reduce (read) side of a shuffle for one task.
+pub fn reduce_side(
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    mem: &MemoryModel,
+    prof: &IoProfiles,
+    spec: &ReduceSideSpec,
+) -> ShuffleIo {
+    let mut io = ShuffleIo::default();
+    let wire = prof.ser.wire_bytes(spec.in_payload, spec.in_records) as f64;
+    let moved = if conf.shuffle_compress {
+        wire * prof.codec.compressed_fraction(spec.entropy)
+    } else {
+        wire
+    };
+
+    // Map outputs live on source-node disks; all-to-all means this node's
+    // disk serves (on average) what this reducer consumes.
+    io.disk_read_bytes += moved;
+    // (nodes-1)/nodes of the blocks cross the network.
+    let remote_frac = (cluster.nodes.saturating_sub(1)) as f64 / cluster.nodes.max(1) as f64;
+    io.net_in_bytes += moved * remote_frac;
+    // Fetch pipelining: one RTT per in-flight window + per-block overhead.
+    let windows = (moved / conf.reducer_max_size_in_flight.max(1) as f64).ceil().max(1.0);
+    io.fixed_secs += windows * cluster.net_latency;
+    io.fixed_secs += spec.source_blocks as f64 * FETCH_BLOCK_SECS;
+
+    // Decompress + deserialize everything.
+    if conf.shuffle_compress {
+        io.cpu_secs += prof.codec.decompress_secs(wire as u64);
+    }
+    io.cpu_secs += prof.ser.deserialize_secs(spec.in_payload, spec.in_records);
+    // On-heap fetch buffers: extra copy + GC churn per fetched byte.
+    if !conf.shuffle_io_prefer_direct_bufs {
+        io.cpu_secs += moved / ONHEAP_FETCH_BW;
+    }
+
+    // Reduce-side working set: sort buffers deserialized records; pure
+    // aggregation holds the distinct-key map.
+    let working_payload = if spec.needs_sort {
+        spec.in_payload
+    } else {
+        spec.agg_working_payload.unwrap_or(0)
+    };
+    if working_payload > 0 {
+        let working = (working_payload as f64 * JVM_OBJECT_FACTOR) as u64;
+        // The in-flight fetch window is pinned *on-heap* only when direct
+        // buffers are disabled; with the default preferDirectBufs=true it
+        // lives off-heap (netty) and doesn't count against the pool.
+        let irreducible = if conf.shuffle_io_prefer_direct_bufs {
+            0
+        } else {
+            (conf.reducer_max_size_in_flight as f64 * FETCH_WINDOW_FACTOR) as u64
+        };
+        let min_batch = if spec.needs_sort {
+            crate::exec::MIN_SPILL_BATCH
+        } else {
+            crate::exec::MIN_AGG_BATCH
+        };
+        match mem.plan_task(working, irreducible, min_batch, conf.shuffle_spill) {
+            SpillPlan::InMemory => {}
+            SpillPlan::Spill { spill_bytes, files } => {
+                let payload_overflow = spill_bytes as f64 / JVM_OBJECT_FACTOR;
+                let frac = payload_overflow / working_payload as f64;
+                let overflow_records = (spec.in_records as f64 * frac).ceil() as u64;
+                let mut spill_disk =
+                    prof.ser.wire_bytes(payload_overflow as u64, overflow_records) as f64;
+                io.cpu_secs += prof.ser.serialize_secs(payload_overflow as u64, overflow_records);
+                io.cpu_secs +=
+                    prof.ser.deserialize_secs(payload_overflow as u64, overflow_records);
+                if conf.shuffle_spill_compress {
+                    io.cpu_secs += prof.codec.compress_secs(spill_disk as u64);
+                    io.cpu_secs += prof.codec.decompress_secs(spill_disk as u64);
+                    spill_disk *= prof.codec.compressed_fraction(spec.entropy);
+                }
+                let effective = spill_disk * SPILL_PAGE_CACHE_ABSORPTION;
+                io.disk_write_bytes += effective;
+                io.disk_read_bytes += effective;
+                io.spilled_bytes = spill_disk as u64;
+                io.spill_files = files;
+            }
+            oom @ SpillPlan::Oom { .. } => {
+                io.oom = Some(oom);
+                return io;
+            }
+        }
+        let sort_factor = if spec.needs_sort {
+            1.0 + (spec.in_records.max(2) as f64).log2() * 0.12
+        } else {
+            1.0
+        };
+        io.cpu_secs += spec.in_records as f64 * REDUCE_MERGE_NS * sort_factor * 1e-9;
+    }
+    io
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conf::SparkConf;
+
+    fn setup(conf: &SparkConf) -> (ClusterSpec, MemoryModel, IoProfiles) {
+        let cluster = ClusterSpec::marenostrum();
+        let mem = MemoryModel::new(conf, &cluster);
+        let prof = IoProfiles::from_conf(conf);
+        (cluster, mem, prof)
+    }
+
+    /// Fig-1-scale map task: 1 B × 100 B records over 640 partitions.
+    fn sbk_map_spec() -> MapSideSpec {
+        let payload = 100_000_000_000u64 / 640; // ≈156 MB
+        MapSideSpec {
+            out_payload: payload,
+            out_records: 1_000_000_000 / 640,
+            entropy: 0.55,
+            reducers: 640,
+            map_tasks: 640,
+            map_side_combine: false,
+            working_payload: payload,
+            cache_pressure: 0.3,
+        }
+    }
+
+    /// Fig-2-scale map task: 400 GB over 640 partitions (640 MB each).
+    fn shuffling_map_spec() -> MapSideSpec {
+        let payload = 400_000_000_000u64 / 640;
+        MapSideSpec {
+            out_payload: payload,
+            out_records: 4_000_000_000 / 640,
+            entropy: 0.4,
+            reducers: 640,
+            map_tasks: 640,
+            map_side_combine: false,
+            working_payload: payload,
+            cache_pressure: 0.8,
+        }
+    }
+
+    #[test]
+    fn sort_manager_spills_at_fig2_scale_but_not_fig1() {
+        let conf = SparkConf::default().with("spark.serializer", "kryo");
+        let (cluster, mem, prof) = setup(&conf);
+        // Fig 1: 156 MB × 2.0 = 312 MB vs 245 MB share → a *small* spill
+        // (the paper: sort-by-key "the spills conducted are few").
+        let fig1_io = map_side(&conf, &cluster, &mem, &prof, &sbk_map_spec());
+        let fig1_out = map_output_bytes(&conf, &prof, &sbk_map_spec());
+        assert!(fig1_io.spilled_bytes > 0, "fig1 spills a little");
+        assert!(
+            (fig1_io.spilled_bytes as f64) < fig1_out * 0.5,
+            "fig1 spill {} should be small vs output {}",
+            fig1_io.spilled_bytes,
+            fig1_out
+        );
+        // Fig 2: 640 MB × 2.0 = 1.28 GB ≫ share → heavy spills.
+        let sort_io = map_side(&conf, &cluster, &mem, &prof, &shuffling_map_spec());
+        assert!(
+            sort_io.spilled_bytes > fig1_io.spilled_bytes * 4,
+            "fig2 spill {} ≫ fig1 spill {}",
+            sort_io.spilled_bytes,
+            fig1_io.spilled_bytes
+        );
+        assert!(sort_io.oom.is_none());
+
+        let conf_h = conf.clone().with("spark.shuffle.manager", "hash");
+        let (cluster, mem, prof) = setup(&conf_h);
+        let hash_io = map_side(&conf_h, &cluster, &mem, &prof, &shuffling_map_spec());
+        assert_eq!(hash_io.spilled_bytes, 0, "hash streams, never map-spills");
+        // Hash also skips the sorter's per-record CPU.
+        assert!(
+            hash_io.cpu_secs < sort_io.cpu_secs,
+            "hash cpu {} !< sort cpu {}",
+            hash_io.cpu_secs,
+            sort_io.cpu_secs
+        );
+        // ... but pays interleaved flush penalties on the disk at scale.
+        assert!(
+            hash_io.disk_write_bytes > sort_io.disk_write_bytes,
+            "hash disk {} !> sort disk {}",
+            hash_io.disk_write_bytes,
+            sort_io.disk_write_bytes
+        );
+    }
+
+    #[test]
+    fn tungsten_smaller_working_set_than_sort() {
+        let conf = SparkConf::default()
+            .with("spark.serializer", "kryo")
+            .with("spark.shuffle.manager", "tungsten-sort");
+        let (cluster, mem, prof) = setup(&conf);
+        // At fig-2 scale tungsten spills less than sort (1.15× vs 1.4×
+        // working factor) and skips the deser/reser CPU on the spill path.
+        let t = map_side(&conf, &cluster, &mem, &prof, &shuffling_map_spec());
+        let s_conf = SparkConf::default().with("spark.serializer", "kryo");
+        let (c2, m2, p2) = setup(&s_conf);
+        let s = map_side(&s_conf, &c2, &m2, &p2, &shuffling_map_spec());
+        assert!(t.spilled_bytes < s.spilled_bytes, "{} !< {}", t.spilled_bytes, s.spilled_bytes);
+        assert!(t.cpu_secs < s.cpu_secs);
+    }
+
+    #[test]
+    fn tungsten_falls_back_without_kryo_or_with_combine() {
+        let conf = SparkConf::default().with("spark.shuffle.manager", "tungsten-sort");
+        assert_eq!(effective_manager(&conf, false), ShuffleManagerKind::Sort);
+        let conf = conf.with("spark.serializer", "kryo");
+        assert_eq!(effective_manager(&conf, false), ShuffleManagerKind::TungstenSort);
+        assert_eq!(effective_manager(&conf, true), ShuffleManagerKind::Sort);
+    }
+
+    #[test]
+    fn disabling_shuffle_compress_moves_more_bytes() {
+        let on = SparkConf::default().with("spark.serializer", "kryo");
+        let off = on.clone().with("spark.shuffle.compress", "false");
+        let (cluster, mem, prof_on) = setup(&on);
+        let io_on = map_side(&on, &cluster, &mem, &prof_on, &sbk_map_spec());
+        let (cluster2, mem2, prof_off) = setup(&off);
+        let io_off = map_side(&off, &cluster2, &mem2, &prof_off, &sbk_map_spec());
+        // ≥2× the bytes on disk/wire, less CPU.
+        let spec = sbk_map_spec();
+        let rs = ReduceSideSpec {
+            in_payload: spec.out_payload,
+            in_records: spec.out_records,
+            entropy: spec.entropy,
+            source_blocks: 640,
+            needs_sort: true,
+            agg_working_payload: None,
+        };
+        let r_on = reduce_side(&on, &cluster, &mem, &prof_on, &rs);
+        let r_off = reduce_side(&off, &cluster2, &mem2, &prof_off, &rs);
+        assert!(r_off.net_in_bytes > r_on.net_in_bytes * 2.0);
+        assert!(io_off.cpu_secs < io_on.cpu_secs);
+        assert!(io_off.disk_write_bytes > io_on.disk_write_bytes * 1.5);
+    }
+
+    #[test]
+    fn smaller_file_buffer_more_flush_penalty() {
+        let base = SparkConf::default().with("spark.serializer", "kryo");
+        let small = base.clone().with("spark.shuffle.file.buffer", "15k");
+        let big = base.clone().with("spark.shuffle.file.buffer", "96k");
+        let (cluster, mem, prof) = setup(&base);
+        let spec = sbk_map_spec();
+        let d_base = map_side(&base, &cluster, &mem, &prof, &spec).disk_write_bytes;
+        let d_small = map_side(&small, &cluster, &mem, &prof, &spec).disk_write_bytes;
+        let d_big = map_side(&big, &cluster, &mem, &prof, &spec).disk_write_bytes;
+        assert!(d_small > d_base && d_base > d_big);
+    }
+
+    #[test]
+    fn starved_memory_fraction_ooms_reduce_side() {
+        // The paper's 0.1/0.7 crash on sort-by-key: reducer sorting
+        // ~156 MB payload with a 120 MB share (sorter floor 128 MB).
+        let conf = SparkConf::default()
+            .with("spark.serializer", "kryo")
+            .with("spark.shuffle.memoryFraction", "0.1")
+            .with("spark.storage.memoryFraction", "0.7");
+        let (cluster, mem, prof) = setup(&conf);
+        let rs = ReduceSideSpec {
+            in_payload: 156 << 20,
+            in_records: 1_562_500,
+            entropy: 0.55,
+            source_blocks: 640,
+            needs_sort: true,
+            agg_working_payload: None,
+        };
+        let io = reduce_side(&conf, &cluster, &mem, &prof, &rs);
+        assert!(io.oom.is_some(), "0.1/0.7 must OOM the sort-by-key reducer");
+        // Default fractions survive (spilling).
+        let conf2 = SparkConf::default().with("spark.serializer", "kryo");
+        let (cluster2, mem2, prof2) = setup(&conf2);
+        let io2 = reduce_side(&conf2, &cluster2, &mem2, &prof2, &rs);
+        assert!(io2.oom.is_none());
+    }
+
+    #[test]
+    fn consolidation_cuts_hash_file_opens() {
+        let conf = SparkConf::default()
+            .with("spark.serializer", "kryo")
+            .with("spark.shuffle.manager", "hash");
+        let consolidated = conf.clone().with("spark.shuffle.consolidateFiles", "true");
+        let (cluster, mem, prof) = setup(&conf);
+        let spec = sbk_map_spec();
+        let plain = map_side(&conf, &cluster, &mem, &prof, &spec);
+        let cons = map_side(&consolidated, &cluster, &mem, &prof, &spec);
+        assert!(
+            cons.fixed_secs < plain.fixed_secs,
+            "consolidated opens {} !< plain {}",
+            cons.fixed_secs,
+            plain.fixed_secs
+        );
+    }
+
+    #[test]
+    fn max_size_in_flight_windows_add_latency() {
+        let conf = SparkConf::default().with("spark.serializer", "kryo");
+        let small = conf.clone().with("spark.reducer.maxSizeInFlight", "1m");
+        let (cluster, mem, prof) = setup(&conf);
+        let rs = ReduceSideSpec {
+            in_payload: 156 << 20,
+            in_records: 1_562_500,
+            entropy: 0.55,
+            source_blocks: 640,
+            needs_sort: false,
+            agg_working_payload: None,
+        };
+        let big_io = reduce_side(&conf, &cluster, &mem, &prof, &rs);
+        let small_io = reduce_side(&small, &cluster, &mem, &prof, &rs);
+        assert!(small_io.fixed_secs > big_io.fixed_secs);
+    }
+
+    #[test]
+    fn kryo_moves_fewer_bytes_than_java() {
+        let j = SparkConf::default();
+        let k = j.clone().with("spark.serializer", "kryo");
+        let (cluster, mem, prof_j) = setup(&j);
+        let (_, _, prof_k) = setup(&k);
+        let spec = sbk_map_spec();
+        let io_j = map_side(&j, &cluster, &mem, &prof_j, &spec);
+        let io_k = map_side(&k, &cluster, &mem, &prof_k, &spec);
+        assert!(io_j.disk_write_bytes > io_k.disk_write_bytes * 1.1);
+        assert!(io_j.cpu_secs > io_k.cpu_secs);
+    }
+}

@@ -1,0 +1,213 @@
+//! Block-manager / RDD-cache model (`spark.storage.memoryFraction`,
+//! `spark.rdd.compress`).
+//!
+//! Spark 1.5 MEMORY_ONLY semantics: when an RDD is persisted, each
+//! computed partition is *unrolled* into the storage pool; partitions
+//! that don't fit are **dropped, not spilled** (blocks of an RDD never
+//! evict sibling blocks), and every later access recomputes them from
+//! lineage — and re-attempts the cache, churning allocations. So the
+//! cached fraction is simply `pool / dataset` (capped at 1) and the miss
+//! path costs recomputation every iteration — the mechanism behind the
+//! paper's k-means case study (654 s → 54 s by raising
+//! `storage.memoryFraction` from 0.6 to 0.7 so the points RDD fits).
+//!
+//! With `spark.rdd.compress=true` **and a serialized persistence level**
+//! (MEMORY_ONLY_SER), the cached form is serialized-then-compressed:
+//! ~2–4× more partitions fit, at decompress+deserialize CPU on *every*
+//! access — the CPU-vs-memory trade-off of Sec. 3 (7). With the plain
+//! MEMORY_ONLY level that all of the paper's benchmarks use,
+//! `rdd.compress` is a **no-op** (true Spark 1.5 semantics: the flag only
+//! governs serialized blocks) — which is exactly why Figs 1–3 show it
+//! within noise.
+
+use crate::codec::CodecProfile;
+use crate::conf::SparkConf;
+
+/// RDD persistence level (subset the benchmarks use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PersistLevel {
+    /// Deserialized objects in the storage pool (the benchmarks' level).
+    MemoryOnly,
+    /// Serialized (+ compressed when `spark.rdd.compress=true`) blocks.
+    MemoryOnlySer,
+}
+use crate::exec::CACHE_DESER_FACTOR;
+use crate::ser::SerProfile;
+use crate::shuffle::IoProfiles;
+
+/// Memory-bandwidth-class scan rate for cached deserialized partitions,
+/// bytes/s per core (object graph traversal, not memcpy).
+pub const CACHE_SCAN_BW: f64 = 4.0e9;
+
+/// How a persisted dataset fits in the cluster-wide storage pool.
+#[derive(Clone, Debug)]
+pub struct CachePlan {
+    /// Fraction of partitions that fit (Spark drops the rest).
+    pub cached_fraction: f64,
+    /// Bytes resident in the storage pool, cluster-wide.
+    pub stored_bytes: u64,
+    /// Stored form is serialized(+compressed)?
+    pub serialized: bool,
+}
+
+/// Size the cache for a dataset of `payload` bytes / `records` records.
+///
+/// `pool_total` is the cluster-wide storage pool
+/// (nodes × heap × storage.memoryFraction × safety).
+pub fn plan_cache(
+    conf: &SparkConf,
+    prof: &IoProfiles,
+    level: PersistLevel,
+    pool_total: u64,
+    payload: u64,
+    records: u64,
+    entropy: f64,
+) -> CachePlan {
+    let (stored_form_bytes, serialized) = if level == PersistLevel::MemoryOnlySer {
+        let wire = prof.ser.wire_bytes(payload, records) as f64;
+        let f = if conf.rdd_compress { prof.codec.compressed_fraction(entropy) } else { 1.0 };
+        (wire * f, true)
+    } else {
+        (payload as f64 * CACHE_DESER_FACTOR, false)
+    };
+    let cached_fraction = (pool_total as f64 / stored_form_bytes).min(1.0);
+    CachePlan {
+        cached_fraction,
+        stored_bytes: (stored_form_bytes * cached_fraction) as u64,
+        serialized,
+    }
+}
+
+/// CPU seconds for one task to materialize `payload` bytes / `records`
+/// records from cache (scan, plus decompress+deserialize if stored
+/// serialized).
+pub fn cache_read_cpu(
+    conf: &SparkConf,
+    ser: &SerProfile,
+    codec: &CodecProfile,
+    level: PersistLevel,
+    payload: u64,
+    records: u64,
+    entropy: f64,
+) -> f64 {
+    if level == PersistLevel::MemoryOnlySer {
+        let mut t = ser.deserialize_secs(payload, records);
+        if conf.rdd_compress {
+            let wire = ser.wire_bytes(payload, records);
+            t += codec
+                .decompress_secs((wire as f64 * codec.compressed_fraction(entropy)) as u64);
+        }
+        t
+    } else {
+        payload as f64 / CACHE_SCAN_BW
+    }
+}
+
+/// CPU seconds for one task to store `payload`/`records` into the cache.
+pub fn cache_write_cpu(
+    conf: &SparkConf,
+    ser: &SerProfile,
+    codec: &CodecProfile,
+    level: PersistLevel,
+    payload: u64,
+    records: u64,
+) -> f64 {
+    if level == PersistLevel::MemoryOnlySer {
+        let mut t = ser.serialize_secs(payload, records);
+        if conf.rdd_compress {
+            t += codec.compress_secs(ser.wire_bytes(payload, records));
+        }
+        t
+    } else {
+        // Unroll bookkeeping only.
+        payload as f64 / (4.0 * CACHE_SCAN_BW)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::exec::MemoryModel;
+
+    fn pool(conf: &SparkConf) -> u64 {
+        let cluster = ClusterSpec::marenostrum();
+        MemoryModel::new(conf, &cluster).storage_pool * cluster.nodes as u64
+    }
+
+    #[test]
+    fn small_dataset_fully_cached() {
+        let conf = SparkConf::default();
+        let prof = IoProfiles::from_conf(&conf);
+        // Fig-3 k-means: 100 M × 100 dims × 4 B = 40 GB, ×1.5 deser = 60 GB
+        // against a 259 GB pool.
+        let plan =
+            plan_cache(&conf, &prof, PersistLevel::MemoryOnly, pool(&conf), 40 << 30, 100_000_000, 0.9);
+        assert_eq!(plan.cached_fraction, 1.0);
+        assert!(!plan.serialized);
+        assert_eq!(plan.stored_bytes, (40u64 << 30) as u64 * 15 / 10);
+    }
+
+    #[test]
+    fn case_study_dataset_straddles_fractions() {
+        // 100 M × 500 dims × 4 B = 200 GB payload → 280 GB deserialized.
+        // 0.6 pool = 259 GB → partial; 0.7 pool = 302 GB → full. This is
+        // the paper's case-study-2 cliff.
+        let payload = 200u64 << 30;
+        let at06 = SparkConf::default();
+        let prof = IoProfiles::from_conf(&at06);
+        let p06 =
+            plan_cache(&at06, &prof, PersistLevel::MemoryOnly, pool(&at06), payload, 100_000_000, 0.9);
+        assert!(p06.cached_fraction < 0.95, "{}", p06.cached_fraction);
+        let at07 = SparkConf::default()
+            .with("spark.storage.memoryFraction", "0.7")
+            .with("spark.shuffle.memoryFraction", "0.1");
+        let p07 =
+            plan_cache(&at07, &prof, PersistLevel::MemoryOnly, pool(&at07), payload, 100_000_000, 0.9);
+        assert_eq!(p07.cached_fraction, 1.0);
+    }
+
+    #[test]
+    fn rdd_compress_is_noop_for_memory_only() {
+        // Spark 1.5 semantics: the flag only affects serialized levels.
+        let plain = SparkConf::default();
+        let flagged = plain.clone().with("spark.rdd.compress", "true");
+        let prof = IoProfiles::from_conf(&plain);
+        let a = plan_cache(&plain, &prof, PersistLevel::MemoryOnly, 1 << 40, 1 << 30, 1 << 20, 0.5);
+        let b =
+            plan_cache(&flagged, &prof, PersistLevel::MemoryOnly, 1 << 40, 1 << 30, 1 << 20, 0.5);
+        assert_eq!(a.stored_bytes, b.stored_bytes);
+        assert!(!b.serialized);
+        let ra = cache_read_cpu(&plain, &prof.ser, &prof.codec, PersistLevel::MemoryOnly, 1 << 30, 1 << 20, 0.5);
+        let rb = cache_read_cpu(&flagged, &prof.ser, &prof.codec, PersistLevel::MemoryOnly, 1 << 30, 1 << 20, 0.5);
+        assert_eq!(ra, rb);
+    }
+
+    #[test]
+    fn rdd_compress_fits_more_but_costs_cpu_when_serialized() {
+        let plain = SparkConf::default();
+        let compressed = plain.clone().with("spark.rdd.compress", "true");
+        let prof = IoProfiles::from_conf(&plain);
+        let payload = 400u64 << 30; // too big deserialized
+        let lvl = PersistLevel::MemoryOnlySer;
+        let p_ser = plan_cache(&plain, &prof, lvl, pool(&plain), payload, 1 << 30, 0.5);
+        let p_comp = plan_cache(&compressed, &prof, lvl, pool(&compressed), payload, 1 << 30, 0.5);
+        assert!(p_comp.cached_fraction > p_ser.cached_fraction);
+        assert!(p_comp.serialized);
+        let r_plain =
+            cache_read_cpu(&plain, &prof.ser, &prof.codec, PersistLevel::MemoryOnly, 1 << 30, 1 << 20, 0.5);
+        let r_comp =
+            cache_read_cpu(&compressed, &prof.ser, &prof.codec, lvl, 1 << 30, 1 << 20, 0.5);
+        assert!(r_comp > r_plain * 2.0, "compressed read {r_comp} vs plain {r_plain}");
+    }
+
+    #[test]
+    fn cache_write_costs_are_modest_when_plain() {
+        let conf = SparkConf::default();
+        let prof = IoProfiles::from_conf(&conf);
+        let lvl = PersistLevel::MemoryOnly;
+        let w = cache_write_cpu(&conf, &prof.ser, &prof.codec, lvl, 1 << 30, 1 << 20);
+        let r = cache_read_cpu(&conf, &prof.ser, &prof.codec, lvl, 1 << 30, 1 << 20, 0.5);
+        assert!(w < r, "unroll write {w} should be cheaper than scan read {r}");
+    }
+}

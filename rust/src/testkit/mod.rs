@@ -1,0 +1,181 @@
+//! Mini property-testing + benchmarking toolkit (the offline crate set
+//! has neither `proptest` nor `criterion`).
+//!
+//! [`forall`] runs a property over `n` seeded random cases; on failure it
+//! *shrinks* by replaying the failing seed with progressively smaller
+//! size hints and reports the smallest reproduction. [`Gen`] wraps the
+//! crate PRNG with size-aware helpers.
+//!
+//! [`bench`] is a minimal timing harness used by the `cargo bench`
+//! targets: warm-up, N timed iterations, median/min reporting.
+
+use crate::util::Prng;
+use crate::util::stats::Summary;
+
+/// Size-aware generator handle passed to properties.
+pub struct Gen {
+    pub rng: Prng,
+    /// Current size hint (shrinks on failure replay).
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]`, biased down by the size hint.
+    pub fn int(&mut self, lo: u64, hi: u64) -> u64 {
+        let span = (hi - lo).min(self.size as u64).max(1);
+        lo + self.rng.below(span + 1)
+    }
+
+    /// A length in `[0, max]` scaled by size.
+    pub fn len(&mut self, max: usize) -> usize {
+        self.rng.below((max.min(self.size) + 1) as u64) as usize
+    }
+
+    /// Bytes of a given length and entropy.
+    pub fn bytes(&mut self, len: usize, entropy: f64) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.rng.fill_bytes_entropy(&mut v, entropy);
+        v
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` over `n` random cases derived from `seed`. On failure,
+/// replays the failing seed at smaller sizes to find a minimal-ish
+/// reproduction, then panics with the case seed (re-runnable).
+pub fn forall(name: &str, seed: u64, n: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let mut root = Prng::new(seed);
+    for case in 0..n {
+        let case_seed = root.next_u64();
+        let full_size = 1 + case * 97 / n.max(1) * 11; // grows with case index
+        let mut g = Gen { rng: Prng::new(case_seed), size: full_size.max(4) };
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: replay same seed with smaller sizes.
+            let mut best = (full_size.max(4), msg);
+            let mut size = best.0 / 2;
+            while size >= 1 {
+                let mut g = Gen { rng: Prng::new(case_seed), size };
+                match prop(&mut g) {
+                    Err(m) => {
+                        best = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property {name:?} failed (case {case}, seed {case_seed:#x}, \
+                 minimal size {}): {}",
+                best.0, best.1,
+            );
+        }
+    }
+}
+
+/// Timing record from [`bench`].
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_secs: f64,
+    pub min_secs: f64,
+    /// Optional work units per iteration (bytes, runs, …) for throughput.
+    pub units_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        if self.units_per_iter > 0.0 {
+            println!(
+                "bench {:<44} {:>10.3} ms/iter  (min {:>9.3} ms, {:>8.1} Munits/s)",
+                self.name,
+                self.median_secs * 1e3,
+                self.min_secs * 1e3,
+                self.units_per_iter / self.median_secs / 1e6
+            );
+        } else {
+            println!(
+                "bench {:<44} {:>10.3} ms/iter  (min {:>9.3} ms, {} iters)",
+                self.name,
+                self.median_secs * 1e3,
+                self.min_secs * 1e3,
+                self.iters
+            );
+        }
+    }
+}
+
+/// Minimal bench loop: 1 warm-up + `iters` timed runs; median reported.
+pub fn bench(name: &str, iters: usize, units_per_iter: f64, mut f: impl FnMut()) -> BenchResult {
+    f(); // warm-up
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let s = Summary::from(times);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_secs: s.median(),
+        min_secs: s.min(),
+        units_per_iter,
+    };
+    r.print();
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_good_property() {
+        forall("sum-commutes", 1, 200, |g| {
+            let a = g.int(0, 1000);
+            let b = g.int(0, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failures_with_seed() {
+        forall("always-small", 2, 100, |g| {
+            let v = g.int(0, 100);
+            if v < 5 {
+                Ok(())
+            } else {
+                Err(format!("{v} too big"))
+            }
+        });
+    }
+
+    #[test]
+    fn bench_returns_sane_timing() {
+        let r = bench("noop-spin", 5, 1000.0, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.median_secs >= 0.0 && r.median_secs < 1.0);
+        assert_eq!(r.iters, 5);
+    }
+}

@@ -1,0 +1,185 @@
+//! Search baselines over the methodology's parameter space, for the
+//! ablation experiment (E8): how close does the ≤10-run decision list get
+//! to the optimum that exhaustive search finds in hundreds of runs?
+//!
+//! The space is the cross-product of the values the methodology ever
+//! considers (the paper frames it as 2⁹ = 512 binary combinations; the
+//! actual value grid below has 2×3×2×3×2×3 = 216 points).
+
+use super::{Runner, TuneOutcome, Trial};
+use crate::conf::SparkConf;
+use crate::util::Prng;
+
+/// The value grid, one axis per methodology knob.
+pub const AXES: &[&[&[(&str, &str)]]] = &[
+    // serializer
+    &[
+        &[],
+        &[("spark.serializer", "org.apache.spark.serializer.KryoSerializer")],
+    ],
+    // shuffle manager (with the methodology's companion settings)
+    &[
+        &[],
+        &[("spark.shuffle.manager", "tungsten-sort"), ("spark.io.compression.codec", "lzf")],
+        &[("spark.shuffle.manager", "hash"), ("spark.shuffle.consolidateFiles", "true")],
+    ],
+    // shuffle compression
+    &[&[], &[("spark.shuffle.compress", "false")]],
+    // memory fractions
+    &[
+        &[],
+        &[("spark.shuffle.memoryFraction", "0.4"), ("spark.storage.memoryFraction", "0.4")],
+        &[("spark.shuffle.memoryFraction", "0.1"), ("spark.storage.memoryFraction", "0.7")],
+    ],
+    // spill compression
+    &[&[], &[("spark.shuffle.spill.compress", "false")]],
+    // file buffer
+    &[&[], &[("spark.shuffle.file.buffer", "96k")], &[("spark.shuffle.file.buffer", "15k")]],
+];
+
+/// Total number of grid points.
+pub fn grid_size() -> usize {
+    AXES.iter().map(|a| a.len()).product()
+}
+
+/// Materialize grid point `idx` (mixed-radix decode).
+pub fn grid_conf(mut idx: usize) -> SparkConf {
+    let mut conf = SparkConf::default();
+    for axis in AXES {
+        let v = idx % axis.len();
+        idx /= axis.len();
+        for (k, val) in axis[v] {
+            conf.set(k, val).expect("grid values are valid");
+        }
+    }
+    conf
+}
+
+/// Exhaustively evaluate the full grid. Returns the best configuration
+/// and a [`TuneOutcome`]-shaped record (every grid point is a "trial").
+pub fn exhaustive(runner: &mut dyn Runner) -> TuneOutcome {
+    let baseline = runner.run(&SparkConf::default());
+    let mut best = baseline;
+    let mut best_conf = SparkConf::default();
+    let mut trials = Vec::with_capacity(grid_size());
+    for idx in 0..grid_size() {
+        let conf = grid_conf(idx);
+        if conf == SparkConf::default() {
+            continue; // already measured as baseline
+        }
+        let t = runner.run(&conf);
+        let improvement = if t.is_finite() { (best - t) / best } else { 0.0 };
+        let kept = t < best;
+        if kept {
+            best = t;
+            best_conf = conf.clone();
+        }
+        trials.push(Trial { step: "grid", delta: Vec::new(), duration: t, improvement, kept });
+    }
+    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0 }
+}
+
+/// Uniform random search over the grid with `budget` evaluations.
+pub fn random_search(runner: &mut dyn Runner, budget: usize, seed: u64) -> TuneOutcome {
+    let mut rng = Prng::new(seed);
+    let baseline = runner.run(&SparkConf::default());
+    let mut best = baseline;
+    let mut best_conf = SparkConf::default();
+    let mut trials = Vec::with_capacity(budget);
+    for _ in 0..budget {
+        let conf = grid_conf(rng.below(grid_size() as u64) as usize);
+        let t = runner.run(&conf);
+        let improvement = if t.is_finite() { (best - t) / best } else { 0.0 };
+        let kept = t < best;
+        if kept {
+            best = t;
+            best_conf = conf.clone();
+        }
+        trials.push(Trial { step: "random", delta: Vec::new(), duration: t, improvement, kept });
+    }
+    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ser::SerKind;
+
+    #[test]
+    fn grid_has_216_points_and_decodes_uniquely() {
+        assert_eq!(grid_size(), 216);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..grid_size() {
+            let c = grid_conf(i);
+            seen.insert(format!("{c}"));
+        }
+        assert_eq!(seen.len(), 216, "grid points must be distinct");
+    }
+
+    #[test]
+    fn exhaustive_finds_the_global_optimum() {
+        // Surface with a known optimum: kryo + no-compress interact.
+        let mut runner = |c: &SparkConf| {
+            let mut t = 100.0;
+            if c.serializer == SerKind::Kryo {
+                t -= 10.0;
+            }
+            if !c.shuffle_compress {
+                t -= 5.0;
+            }
+            if c.shuffle_file_buffer == 96 * 1024 {
+                t -= 1.0;
+            }
+            t
+        };
+        let out = exhaustive(&mut runner);
+        assert_eq!(out.best, 84.0);
+        assert_eq!(out.best_conf.serializer, SerKind::Kryo);
+        assert!(!out.best_conf.shuffle_compress);
+        assert_eq!(out.trials.len(), 215);
+    }
+
+    #[test]
+    fn random_search_improves_with_budget() {
+        let mut evals = 0usize;
+        let mut runner = |c: &SparkConf| {
+            evals += 1;
+            let mut t = 100.0;
+            if c.serializer == SerKind::Kryo {
+                t -= 20.0;
+            }
+            t
+        };
+        let small = random_search(&mut runner, 3, 7);
+        let big = random_search(&mut runner, 60, 7);
+        assert!(big.best <= small.best);
+        assert!(big.best == 80.0, "60 draws should find kryo: {}", big.best);
+        let _ = evals;
+    }
+
+    #[test]
+    fn methodology_is_near_exhaustive_on_separable_surfaces() {
+        // Separable (no interactions) surface: the greedy decision list
+        // must reach the exhaustive optimum with ~20× fewer runs.
+        let surf = |c: &SparkConf| {
+            let mut t = 100.0;
+            if c.serializer == SerKind::Kryo {
+                t *= 0.8;
+            }
+            if c.shuffle_memory_fraction == 0.4 {
+                t *= 0.93;
+            }
+            if c.shuffle_file_buffer == 96 * 1024 {
+                t *= 0.99;
+            }
+            t
+        };
+        let mut r1 = |c: &SparkConf| surf(c);
+        let method = super::super::tune(&mut r1, &super::super::TuneOpts::default());
+        let mut r2 = |c: &SparkConf| surf(c);
+        let full = exhaustive(&mut r2);
+        assert!((method.best - full.best).abs() < 1e-9);
+        assert!(method.runs() <= 10);
+        assert!(full.trials.len() >= 200);
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared utilities: deterministic PRNG, data generators, size/duration
+//! units, and streaming statistics.
+//!
+//! The offline crate set has no `rand`, so [`prng`] provides a small,
+//! well-tested xoshiro256** generator plus the distributions the workload
+//! generators need (uniform, zipf, normal, byte-strings with controlled
+//! entropy — entropy control matters because codec ratios depend on it).
+
+pub mod prng;
+pub mod stats;
+pub mod units;
+
+pub use prng::Prng;
+pub use stats::Summary;

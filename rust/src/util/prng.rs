@@ -1,0 +1,352 @@
+//! Deterministic pseudo-random generation (xoshiro256** seeded via
+//! splitmix64) and the distributions used by the workload generators.
+//!
+//! Everything in the simulator must be reproducible from a single `u64`
+//! seed: experiment tables in EXPERIMENTS.md are regenerated bit-identically.
+
+/// Xoshiro256** PRNG (Blackman & Vigna). Not cryptographic; fast, 256-bit
+/// state, passes BigCrush — more than enough for workload synthesis.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+/// splitmix64 step — used to expand a 64-bit seed into xoshiro state.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9e3779b97f4a7c15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl Prng {
+    /// Create a generator from a 64-bit seed.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Prng { s }
+    }
+
+    /// Derive an independent child generator (for per-partition streams).
+    pub fn fork(&mut self, stream: u64) -> Prng {
+        let mut sm = self.next_u64() ^ stream.wrapping_mul(0x9e3779b97f4a7c15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Prng { s }
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Next 32 bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's method, unbiased enough for
+    /// workload synthesis; exact rejection not needed here).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE); // avoid ln(0)
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fill a byte slice with uniform random bytes (incompressible data).
+    pub fn fill_bytes(&mut self, out: &mut [u8]) {
+        let mut chunks = out.chunks_exact_mut(8);
+        for c in &mut chunks {
+            c.copy_from_slice(&self.next_u64().to_le_bytes());
+        }
+        let rem = chunks.into_remainder();
+        if !rem.is_empty() {
+            let b = self.next_u64().to_le_bytes();
+            rem.copy_from_slice(&b[..rem.len()]);
+        }
+    }
+
+    /// Bytes with controlled redundancy: `entropy` in `[0,1]` — 1.0 is
+    /// uniform random (incompressible), 0.0 is drawn from a single symbol.
+    /// Implemented by restricting the alphabet size to `2 + entropy*254`
+    /// symbols and injecting short repeats; gives codecs a realistic,
+    /// tunable compression ratio (terasort-style records sit near ~0.5).
+    pub fn fill_bytes_entropy(&mut self, out: &mut [u8], entropy: f64) {
+        let e = entropy.clamp(0.0, 1.0);
+        if e >= 0.999 {
+            self.fill_bytes(out);
+            return;
+        }
+        let alphabet = 2 + (e * 254.0) as u64;
+        let mut i = 0;
+        while i < out.len() {
+            // With probability (1-e)/2, copy a short earlier run (LZ fodder).
+            if i > 8 && self.f64() < (1.0 - e) * 0.5 {
+                let back = self.range(1, i.min(255) as u64) as usize;
+                let len = (self.range(4, 24) as usize).min(out.len() - i);
+                let src = i - back;
+                for j in 0..len {
+                    out[i + j] = out[src + (j % back)];
+                }
+                i += len;
+            } else {
+                out[i] = self.below(alphabet) as u8;
+                i += 1;
+            }
+        }
+    }
+
+    /// Shuffle a slice in place (Fisher–Yates).
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Pick a uniformly random element.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Zipf(θ) sampler over `[0, n)` via the rejection-inversion method of
+/// Hörmann & Derflinger — O(1) per sample, used for skewed key draws.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    h_integral_x1: f64,
+    h_integral_num: f64,
+    s: f64,
+}
+
+impl Zipf {
+    /// `n` distinct items, exponent `theta > 0` (θ→0 is uniform-ish).
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0 && theta > 0.0);
+        let h_integral = |x: f64| -> f64 {
+            let log_x = x.ln();
+            helper2((1.0 - theta) * log_x) * log_x
+        };
+        let h_integral_x1 = h_integral(1.5) - 1.0;
+        let h_integral_num = h_integral(n as f64 + 0.5);
+        let s = 2.0 - h_integral_inverse(h_integral(2.5) - (2.0f64).powf(-theta), theta);
+        Zipf { n, theta, h_integral_x1, h_integral_num, s }
+    }
+
+    /// Draw a sample in `[0, n)`; rank 0 is the most frequent.
+    pub fn sample(&self, rng: &mut Prng) -> u64 {
+        loop {
+            let u = self.h_integral_num + rng.f64() * (self.h_integral_x1 - self.h_integral_num);
+            let x = h_integral_inverse(u, self.theta);
+            let k = x.round().clamp(1.0, self.n as f64);
+            if (k - x).abs() <= self.s
+                || u >= h_integral_fn(k + 0.5, self.theta) - (-k.ln() * self.theta).exp()
+            {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+fn h_integral_fn(x: f64, theta: f64) -> f64 {
+    let log_x = x.ln();
+    helper2((1.0 - theta) * log_x) * log_x
+}
+
+fn h_integral_inverse(x: f64, theta: f64) -> f64 {
+    let mut t = x * (1.0 - theta);
+    if t < -1.0 {
+        t = -1.0;
+    }
+    (helper1(t) * x).exp()
+}
+
+/// `(exp(x)-1)/x` with series fallback near 0.
+fn helper2(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.exp_m1() / x
+    } else {
+        1.0 + x * 0.5 * (1.0 + x / 3.0 * (1.0 + 0.25 * x))
+    }
+}
+
+/// `ln(1+x)/x` with series fallback near 0.
+fn helper1(x: f64) -> f64 {
+    if x.abs() > 1e-8 {
+        x.ln_1p() / x
+    } else {
+        1.0 - x * (0.5 - x * (1.0 / 3.0 - 0.25 * x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Prng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Prng::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let v = r.below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Prng::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut r = Prng::new(13);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut root = Prng::new(5);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fill_bytes_entropy_extremes() {
+        let mut r = Prng::new(3);
+        let mut hi = vec![0u8; 4096];
+        let mut lo = vec![0u8; 4096];
+        r.fill_bytes_entropy(&mut hi, 1.0);
+        r.fill_bytes_entropy(&mut lo, 0.0);
+        let distinct_hi = hi.iter().collect::<std::collections::HashSet<_>>().len();
+        let distinct_lo = lo.iter().collect::<std::collections::HashSet<_>>().len();
+        assert!(distinct_hi > 200, "high entropy should span the byte space");
+        assert!(distinct_lo <= 4, "low entropy should use a tiny alphabet");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Prng::new(17);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_rank0_most_frequent() {
+        let z = Zipf::new(1000, 1.0);
+        let mut r = Prng::new(23);
+        let mut counts = vec![0u32; 1000];
+        for _ in 0..200_000 {
+            let s = z.sample(&mut r) as usize;
+            assert!(s < 1000);
+            counts[s] += 1;
+        }
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[500]);
+    }
+
+    #[test]
+    fn zipf_low_theta_flat() {
+        let z = Zipf::new(100, 0.01);
+        let mut r = Prng::new(29);
+        let mut counts = vec![0u32; 100];
+        for _ in 0..100_000 {
+            counts[z.sample(&mut r) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min < 2.0, "near-uniform expected: max {max} min {min}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Streaming and batch statistics used by metrics collection and the
+//! experiment harness (the paper reports medians of ≥5 runs and mean
+//! |deviation| percentages in Table 2).
+
+/// Batch summary of a sample: mean / median / percentiles / stddev.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    sorted: Vec<f64>,
+    pub mean: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    /// Build from raw samples (NaNs rejected by debug assert).
+    pub fn from(mut xs: Vec<f64>) -> Summary {
+        debug_assert!(xs.iter().all(|x| x.is_finite()));
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        Summary { sorted: xs, mean, stddev: var.sqrt() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    /// Median (the paper's reported statistic for each configuration).
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// Linear-interpolated percentile, `p` in `[0,100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.sorted.is_empty() {
+            return f64::NAN;
+        }
+        let n = self.sorted.len();
+        if n == 1 {
+            return self.sorted[0];
+        }
+        let rank = (p.clamp(0.0, 100.0) / 100.0) * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted.first().copied().unwrap_or(f64::NAN)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sorted.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Welford online mean/variance accumulator — used on task-level metrics
+/// streams where storing every sample would be wasteful.
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.mean }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { f64::NAN } else { self.max }
+    }
+}
+
+/// Mean absolute deviation (%) of a set of variant runtimes from a baseline
+/// — exactly the statistic of the paper's Table 2 ("mean deviation from the
+/// default runtime, regardless of whether the deviation is for the better
+/// or worse performance").
+pub fn mean_abs_deviation_pct(baseline: f64, variants: &[f64]) -> f64 {
+    if variants.is_empty() || baseline <= 0.0 {
+        return f64::NAN;
+    }
+    let s: f64 = variants
+        .iter()
+        .map(|v| ((v - baseline) / baseline).abs())
+        .sum();
+    100.0 * s / variants.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = Summary::from(vec![4.0, 1.0, 3.0, 2.0, 5.0]);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_even_median_interpolates() {
+        let s = Summary::from(vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.median(), 2.5);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 4.0);
+    }
+
+    #[test]
+    fn summary_empty_and_single() {
+        assert!(Summary::from(vec![]).median().is_nan());
+        assert_eq!(Summary::from(vec![7.0]).median(), 7.0);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = vec![2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut o = Online::default();
+        for &x in &xs {
+            o.push(x);
+        }
+        let s = Summary::from(xs);
+        assert!((o.mean() - s.mean).abs() < 1e-12);
+        assert!((o.stddev() - s.stddev).abs() < 1e-12);
+        assert_eq!(o.count(), 8);
+        assert_eq!(o.min(), 2.0);
+        assert_eq!(o.max(), 9.0);
+    }
+
+    #[test]
+    fn table2_statistic() {
+        // baseline 100, variants 75 and 125 → mean |dev| = 25%.
+        let d = mean_abs_deviation_pct(100.0, &[75.0, 125.0]);
+        assert!((d - 25.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,128 @@
+//! Size and duration units in Spark-config notation.
+//!
+//! Spark 1.5 config values use suffixed byte sizes (`48m`, `32k`, `1g`) with
+//! 1024-based multipliers; this module parses and formats them, plus
+//! human-readable simulated durations.
+
+use std::fmt;
+
+/// Parse a Spark-style size string (`"48m"`, `"32k"`, `"400gb"`, `"123"`,
+/// bare numbers are bytes unless `default_unit` says otherwise).
+pub fn parse_size(s: &str, default_unit: SizeUnit) -> Result<u64, String> {
+    let t = s.trim().to_ascii_lowercase();
+    if t.is_empty() {
+        return Err("empty size".into());
+    }
+    let digits_end = t
+        .find(|c: char| !c.is_ascii_digit() && c != '.')
+        .unwrap_or(t.len());
+    let (num, suffix) = t.split_at(digits_end);
+    let value: f64 = num
+        .parse()
+        .map_err(|e| format!("bad size number {s:?}: {e}"))?;
+    let mult = match suffix.trim() {
+        "" => default_unit.bytes() as f64,
+        "b" => 1.0,
+        "k" | "kb" => 1024.0,
+        "m" | "mb" => 1024.0 * 1024.0,
+        "g" | "gb" => 1024.0 * 1024.0 * 1024.0,
+        "t" | "tb" => 1024.0f64.powi(4),
+        other => return Err(format!("unknown size suffix {other:?} in {s:?}")),
+    };
+    Ok((value * mult) as u64)
+}
+
+/// Default unit for a bare number in [`parse_size`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SizeUnit {
+    Bytes,
+    Kib,
+    Mib,
+}
+
+impl SizeUnit {
+    fn bytes(self) -> u64 {
+        match self {
+            SizeUnit::Bytes => 1,
+            SizeUnit::Kib => 1024,
+            SizeUnit::Mib => 1024 * 1024,
+        }
+    }
+}
+
+/// Format a byte count with a binary-prefix suffix (`1.5 GiB`).
+pub fn fmt_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// A simulated duration in seconds (f64 — the sim clock unit).
+#[derive(Clone, Copy, Debug, PartialEq, PartialOrd, Default)]
+pub struct SimSecs(pub f64);
+
+impl SimSecs {
+    pub const ZERO: SimSecs = SimSecs(0.0);
+}
+
+impl fmt::Display for SimSecs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.0;
+        if s < 1e-3 {
+            write!(f, "{:.1} µs", s * 1e6)
+        } else if s < 1.0 {
+            write!(f, "{:.1} ms", s * 1e3)
+        } else if s < 120.0 {
+            write!(f, "{s:.1} s")
+        } else {
+            write!(f, "{:.0} min {:.0} s", (s / 60.0).floor(), s % 60.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_spark_sizes() {
+        assert_eq!(parse_size("48m", SizeUnit::Bytes).unwrap(), 48 * 1024 * 1024);
+        assert_eq!(parse_size("32k", SizeUnit::Bytes).unwrap(), 32 * 1024);
+        assert_eq!(parse_size("1g", SizeUnit::Bytes).unwrap(), 1 << 30);
+        assert_eq!(parse_size("15kb", SizeUnit::Bytes).unwrap(), 15 * 1024);
+        assert_eq!(parse_size("123", SizeUnit::Bytes).unwrap(), 123);
+        assert_eq!(parse_size("123", SizeUnit::Kib).unwrap(), 123 * 1024);
+        assert_eq!(parse_size(" 1.5g ", SizeUnit::Bytes).unwrap(), (1.5 * (1u64 << 30) as f64) as u64);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_size("", SizeUnit::Bytes).is_err());
+        assert!(parse_size("abc", SizeUnit::Bytes).is_err());
+        assert!(parse_size("12q", SizeUnit::Bytes).is_err());
+    }
+
+    #[test]
+    fn formats_bytes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(48 * 1024 * 1024), "48.00 MiB");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+    }
+
+    #[test]
+    fn formats_durations() {
+        assert_eq!(format!("{}", SimSecs(0.0005)), "500.0 µs");
+        assert_eq!(format!("{}", SimSecs(0.25)), "250.0 ms");
+        assert_eq!(format!("{}", SimSecs(42.0)), "42.0 s");
+        assert_eq!(format!("{}", SimSecs(150.0)), "2 min 30 s");
+    }
+}

@@ -1,0 +1,268 @@
+//! The paper's benchmark workloads (§4) and case-study instances (§5) as
+//! engine jobs, plus the calibration constants that price their
+//! per-record JVM work.
+//!
+//! All instances follow the paper's setups exactly:
+//!
+//! * **sort-by-key** — 1 B key/value pairs, 10 B keys / 90 B values, 1 M
+//!   distinct keys and values, 640 partitions (the optimum from [8]).
+//! * **shuffling** — terasort-format data generated on the fly (400 GB),
+//!   shuffled without sorting, "to stress the shuffling component".
+//! * **k-means** — 100 M / 200 M points × 100 dims, k = 10, 10 fixed
+//!   iterations; the case-study instance uses 500 columns (the
+//!   cache-straddling input that made the paper's methodology shine).
+//! * **aggregate-by-key** — 2 B pairs, 10 B/90 B, 5 % threshold case study.
+//!
+//! Per-record CPU constants are *JVM-era* calibrated: Spark 1.5 Scala
+//! closures over boxed tuples ran at microseconds per record, not
+//! nanoseconds (cf. Ousterhout et al. [6]: many workloads CPU-bound).
+
+use crate::engine::{Dataset, Job, Op};
+
+/// Per-record cost of synthesizing a terasort-style KV record (random
+/// string building + tuple allocation), ns.
+pub const GEN_KV_NS: f64 = 2200.0;
+/// Per-dimension cost of synthesizing a gaussian point coordinate, ns
+/// (Box–Muller + array store in the JVM).
+pub const GEN_POINT_NS_PER_DIM: f64 = 95.0;
+/// k-means assignment+partial-sum cost per point: `k × dim` fused
+/// multiply-adds at JVM throughput, plus fixed per-point overhead, ns.
+/// Calibrated against the real Pallas kernel through
+/// `runtime::KMEANS_POINT_NS` (see EXPERIMENTS.md §Calibration).
+pub const KMEANS_FLOP_NS: f64 = 2.6;
+pub const KMEANS_POINT_BASE_NS: f64 = 700.0;
+/// Map-side combine (hash insert + merge closure) per record, ns.
+pub const COMBINE_NS: f64 = 1500.0;
+
+/// Entropy knobs: the paper's KV benchmarks draw keys AND values from
+/// 1 M distinct byte-strings — highly repetitive data, low-mid entropy
+/// (snappy leaves ~30% of the bytes); k-means f32 coordinates are close
+/// to incompressible.
+pub const KV_ENTROPY: f64 = 0.38;
+pub const POINT_ENTROPY: f64 = 0.9;
+
+/// sort-by-key at paper scale (Fig 1 / case study 1).
+pub fn sort_by_key(records: u64, partitions: u32) -> Job {
+    let d = Dataset::kv(records, 10, 90, partitions)
+        .with_distinct_keys(1_000_000)
+        .with_entropy(KV_ENTROPY);
+    Job::new("sort-by-key")
+        .op(Op::Generate { out: d, cpu_ns_per_record: GEN_KV_NS })
+        .op(Op::SortByKey { reducers: partitions })
+        .op(Op::Action)
+}
+
+/// The shuffling benchmark: terasort-gen data, all-to-all repartition, no
+/// sorting (Fig 2). `bytes` is the raw dataset size (the paper: 400 GB).
+pub fn shuffling(bytes: u64, partitions: u32) -> Job {
+    let records = bytes / 100;
+    let d = Dataset::kv(records, 10, 90, partitions)
+        .with_distinct_keys(records)
+        .with_entropy(KV_ENTROPY);
+    Job::new("shuffling")
+        .op(Op::Generate { out: d, cpu_ns_per_record: GEN_KV_NS })
+        .op(Op::Repartition { reducers: partitions })
+        .op(Op::Action)
+}
+
+/// k-means: generate → cache → `iters` × (assign+partial-sums → tiny
+/// shuffle → new centroids). Fig 3 uses `dims = 100`; case study 2 uses
+/// the 500-column instance.
+pub fn kmeans(points: u64, dims: u32, k: u32, iters: u32, partitions: u32) -> Job {
+    let pts = Dataset::vectors(points, dims, partitions).with_entropy(POINT_ENTROPY);
+    // Each map task emits k partial centroids (sum + count) — k × dims
+    // floats per partition.
+    let partials = Dataset::vectors(partitions as u64 * k as u64, dims, partitions)
+        .with_entropy(POINT_ENTROPY)
+        .with_distinct_keys(k as u64);
+    let assign_ns = k as f64 * dims as f64 * KMEANS_FLOP_NS + KMEANS_POINT_BASE_NS;
+    let mut job = Job::new(format!("kmeans-{}m-{}d", points / 1_000_000, dims))
+        .op(Op::Generate {
+            out: pts,
+            cpu_ns_per_record: dims as f64 * GEN_POINT_NS_PER_DIM,
+        })
+        .op(Op::Cache);
+    for _ in 0..iters {
+        job = job
+            .op(Op::CacheRead)
+            .op(Op::MapRecords { cpu_ns_per_record: assign_ns, out: partials.clone() })
+            .op(Op::Repartition { reducers: k.min(partitions) });
+    }
+    job
+}
+
+/// aggregate-by-key with map-side combine (case study 3): 2 B pairs, 1 M
+/// distinct keys.
+pub fn aggregate_by_key(records: u64, distinct_keys: u64, partitions: u32) -> Job {
+    let d = Dataset::kv(records, 10, 90, partitions)
+        .with_distinct_keys(distinct_keys)
+        .with_entropy(KV_ENTROPY);
+    let out = Dataset::kv(distinct_keys, 10, 90, partitions).with_distinct_keys(distinct_keys);
+    Job::new("aggregate-by-key")
+        .op(Op::Generate { out: d, cpu_ns_per_record: GEN_KV_NS })
+        .op(Op::AggregateByKey {
+            reducers: partitions,
+            combine_cpu_ns_per_record: COMBINE_NS,
+            out,
+        })
+        .op(Op::Action)
+}
+
+/// Named paper workload instances — everything the experiments reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Workload {
+    /// Fig 1 / case study 1: 1 B × 100 B sort-by-key.
+    SortByKey1B,
+    /// Fig 2: 400 GB shuffling.
+    Shuffling400G,
+    /// Fig 3 top: k-means 100 M × 100 d.
+    KMeans100M,
+    /// Fig 3 bottom: k-means 200 M × 100 d.
+    KMeans200M,
+    /// Case study 2: k-means 100 M × 500 d (cache-straddling instance).
+    KMeans500D,
+    /// Case study 3: 2 B × 100 B aggregate-by-key.
+    AggregateByKey2B,
+    /// Mini instances for tests/examples.
+    MiniSortByKey,
+}
+
+impl Workload {
+    pub const PAPER: [Workload; 6] = [
+        Workload::SortByKey1B,
+        Workload::Shuffling400G,
+        Workload::KMeans100M,
+        Workload::KMeans200M,
+        Workload::KMeans500D,
+        Workload::AggregateByKey2B,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::SortByKey1B => "sort-by-key",
+            Workload::Shuffling400G => "shuffling",
+            Workload::KMeans100M => "kmeans-100m",
+            Workload::KMeans200M => "kmeans-200m",
+            Workload::KMeans500D => "kmeans-500d",
+            Workload::AggregateByKey2B => "aggregate-by-key",
+            Workload::MiniSortByKey => "mini-sort-by-key",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Workload> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sort-by-key" | "sortbykey" | "sbk" => Some(Workload::SortByKey1B),
+            "shuffling" | "shuffle" => Some(Workload::Shuffling400G),
+            "kmeans" | "kmeans-100m" => Some(Workload::KMeans100M),
+            "kmeans-200m" => Some(Workload::KMeans200M),
+            "kmeans-500d" => Some(Workload::KMeans500D),
+            "aggregate-by-key" | "aggregatebykey" | "abk" => Some(Workload::AggregateByKey2B),
+            "mini-sort-by-key" | "mini" => Some(Workload::MiniSortByKey),
+            _ => None,
+        }
+    }
+
+    /// Build the job for this instance.
+    pub fn job(self) -> Job {
+        match self {
+            Workload::SortByKey1B => sort_by_key(1_000_000_000, 640),
+            Workload::Shuffling400G => shuffling(400_000_000_000, 640),
+            Workload::KMeans100M => kmeans(100_000_000, 100, 10, 10, 640),
+            Workload::KMeans200M => kmeans(200_000_000, 100, 10, 10, 640),
+            Workload::KMeans500D => kmeans(100_000_000, 500, 10, 10, 640),
+            Workload::AggregateByKey2B => aggregate_by_key(2_000_000_000, 1_000_000, 640),
+            Workload::MiniSortByKey => sort_by_key(1_000_000, 16),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+    use crate::conf::SparkConf;
+    use crate::engine::run;
+    use crate::sim::SimOpts;
+
+    fn mn() -> ClusterSpec {
+        ClusterSpec::marenostrum()
+    }
+
+    #[test]
+    fn all_paper_workloads_run_on_defaults() {
+        for w in Workload::PAPER {
+            let r = run(&w.job(), &SparkConf::default(), &mn(), &SimOpts::default());
+            assert!(r.crashed.is_none(), "{}: {:?}", w.name(), r.crashed);
+            assert!(
+                r.duration > 1.0 && r.duration < 5000.0,
+                "{}: implausible duration {}",
+                w.name(),
+                r.duration
+            );
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for w in Workload::PAPER {
+            assert_eq!(Workload::from_name(w.name()), Some(w), "{}", w.name());
+        }
+        assert_eq!(Workload::from_name("nope"), None);
+    }
+
+    #[test]
+    fn kmeans_shuffle_volume_is_tiny() {
+        // The paper's Fig-3 explanation: shuffling "plays a small,
+        // non-dominant role in k-means" — shuffle.compress must not matter.
+        let on = SparkConf::default();
+        let off = on.clone().with("spark.shuffle.compress", "false");
+        let job = Workload::KMeans100M.job();
+        let a = run(&job, &on, &mn(), &SimOpts::default());
+        let b = run(&job, &off, &mn(), &SimOpts::default());
+        let dev = (b.duration - a.duration).abs() / a.duration;
+        assert!(dev < 0.05, "shuffle.compress moved k-means by {:.1}%", dev * 100.0);
+    }
+
+    #[test]
+    fn shuffling_heavier_than_sort_by_key() {
+        // 400 GB shuffled vs 100 GB: the shuffling benchmark must be the
+        // slower one under defaults (paper: 815 s vs 150 s baselines).
+        let conf = SparkConf::default().with("spark.serializer", "kryo");
+        let sbk = run(&Workload::SortByKey1B.job(), &conf, &mn(), &SimOpts::default());
+        let shf = run(&Workload::Shuffling400G.job(), &conf, &mn(), &SimOpts::default());
+        assert!(
+            shf.duration > sbk.duration * 2.0,
+            "shuffling {} vs sort-by-key {}",
+            shf.duration,
+            sbk.duration
+        );
+    }
+
+    #[test]
+    fn kmeans_200m_scales_from_100m() {
+        let conf = SparkConf::default();
+        let a = run(&Workload::KMeans100M.job(), &conf, &mn(), &SimOpts::default());
+        let b = run(&Workload::KMeans200M.job(), &conf, &mn(), &SimOpts::default());
+        let ratio = b.duration / a.duration;
+        assert!(ratio > 1.5 && ratio < 2.6, "200M/100M ratio {ratio}");
+    }
+
+    #[test]
+    fn case_study_kmeans_straddles_cache() {
+        let job = Workload::KMeans500D.job();
+        let default = run(&job, &SparkConf::default(), &mn(), &SimOpts::default());
+        let tuned = SparkConf::default()
+            .with("spark.storage.memoryFraction", "0.7")
+            .with("spark.shuffle.memoryFraction", "0.1");
+        let t = run(&job, &tuned, &mn(), &SimOpts::default());
+        assert!(default.crashed.is_none() && t.crashed.is_none());
+        let improvement = (default.duration - t.duration) / default.duration;
+        assert!(
+            improvement > 0.5,
+            "case-study-2 improvement {:.2} (default {:.0}s tuned {:.0}s)",
+            improvement,
+            default.duration,
+            t.duration
+        );
+    }
+}

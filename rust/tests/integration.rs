@@ -1,0 +1,362 @@
+//! Cross-module integration and property tests (the `testkit::forall`
+//! harness stands in for proptest on this offline image).
+//!
+//! Invariant families:
+//! * substrates — codec/serializer round-trips over arbitrary inputs;
+//! * simulator — work conservation, core-capacity limits, determinism;
+//! * engine — resource monotonicity, crash monotonicity in memory
+//!   fractions, stage accounting;
+//! * tuner — never worse than baseline, threshold discipline, run budget;
+//! * configuration — parse/diff round-trips over the whole grid.
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::codec::{compress_framed, decompress_framed, CodecKind};
+use sparktune::conf::SparkConf;
+use sparktune::engine::{run, Dataset, Job, Op};
+use sparktune::ser::{Record, SerKind};
+use sparktune::sim::{run_stage, Phase, SimOpts, TaskSpec};
+use sparktune::testkit::forall;
+use sparktune::tuner::baselines::{grid_conf, grid_size};
+use sparktune::tuner::{tune, TuneOpts};
+use sparktune::workloads::{self, Workload};
+
+// ---------- substrates ----------
+
+#[test]
+fn prop_codec_round_trip_arbitrary() {
+    forall("codec round-trip", 0xC0DE, 150, |g| {
+        let kind = *g.choose(&CodecKind::SPARK);
+        let len = g.len(200_000);
+        let entropy = g.f64();
+        let data = { let l = len; g.bytes(l, entropy) };
+        let frame = compress_framed(kind, &data);
+        match decompress_framed(&frame) {
+            Ok((k, back)) if k == kind && back == data => Ok(()),
+            Ok(_) => Err(format!("{kind}: round-trip mismatch at len {len}")),
+            Err(e) => Err(format!("{kind}: {e} at len {len} entropy {entropy:.2}")),
+        }
+    });
+}
+
+#[test]
+fn prop_codec_rejects_any_single_byte_corruption() {
+    forall("codec corruption detection", 0xDEAD, 80, |g| {
+        let kind = *g.choose(&CodecKind::SPARK);
+        let dlen = g.len(5_000) + 13;
+        let data = g.bytes(dlen, 0.4);
+        let mut frame = compress_framed(kind, &data);
+        let pos = g.rng.below(frame.len() as u64) as usize;
+        let bit = 1u8 << g.rng.below(8);
+        frame[pos] ^= bit;
+        // Either an error, or (if the flip hit redundant codec padding)
+        // the data still decodes *identically* — silent corruption of the
+        // payload is the failure mode.
+        match decompress_framed(&frame) {
+            Err(_) => Ok(()),
+            Ok((_, back)) if back == data => Ok(()),
+            Ok(_) => Err(format!("{kind}: silent corruption at byte {pos} bit {bit}")),
+        }
+    });
+}
+
+#[test]
+fn prop_serializers_round_trip_arbitrary_batches() {
+    forall("serializer round-trip", 0x5E2, 120, |g| {
+        let kind = if g.bool() { SerKind::Java } else { SerKind::Kryo };
+        let n = g.len(60);
+        let records: Vec<Record> = (0..n)
+            .map(|_| match g.rng.below(3) {
+                0 => {
+                    let klen = g.len(40);
+                    let vlen = g.len(300);
+                    Record::Kv { key: g.bytes(klen, 0.7), value: g.bytes(vlen, 0.5) }
+                }
+                1 => {
+                    let d = g.len(64);
+                    Record::Vector((0..d).map(|_| g.rng.f32() * 100.0 - 50.0).collect())
+                }
+                _ => Record::Long(g.rng.next_u64() as i64),
+            })
+            .collect();
+        let bytes = kind.serialize(&records);
+        match kind.deserialize(&bytes) {
+            Ok(back) if back == records => Ok(()),
+            Ok(_) => Err(format!("{kind}: batch mismatch (n={n})")),
+            Err(e) => Err(format!("{kind}: {e} (n={n})")),
+        }
+    });
+}
+
+// ---------- simulator ----------
+
+#[test]
+fn prop_sim_conserves_work() {
+    forall("sim work conservation", 0x51A, 60, |g| {
+        let mut cluster = ClusterSpec::mini();
+        cluster.task_overhead = 0.0;
+        let n = g.len(60) + 1;
+        let mut total_cpu = 0.0;
+        let mut total_disk = 0.0;
+        let mut total_net = 0.0;
+        let tasks: Vec<TaskSpec> = (0..n)
+            .map(|_| {
+                let cpu = g.f64() * 0.2;
+                let dr = g.f64() * 5e6;
+                let dw = g.f64() * 5e6;
+                let ni = g.f64() * 5e6;
+                total_cpu += cpu;
+                total_disk += dr + dw;
+                total_net += ni;
+                TaskSpec::new(vec![
+                    Phase::Cpu { secs: cpu },
+                    Phase::DiskRead { bytes: dr },
+                    Phase::DiskWrite { bytes: dw },
+                    Phase::NetIn { bytes: ni },
+                ])
+            })
+            .collect();
+        let s = run_stage(&cluster, &tasks, &SimOpts { jitter: 0.0, seed: 1 });
+        let ok = (s.cpu_secs - total_cpu).abs() < 1e-6
+            && (s.disk_bytes - total_disk).abs() < 1.0
+            && (s.net_bytes - total_net).abs() < 1.0
+            && s.task_time.len() == n;
+        if !ok {
+            return Err(format!(
+                "conservation broke: cpu {} vs {total_cpu}, disk {} vs {total_disk}",
+                s.cpu_secs, s.disk_bytes
+            ));
+        }
+        // Lower bound: aggregate work / aggregate capacity.
+        let lb = (total_cpu / cluster.total_cores() as f64)
+            .max(total_disk / cluster.total_disk_bw())
+            .max(total_net / cluster.total_net_bw());
+        if s.duration + 1e-9 < lb {
+            return Err(format!("duration {} below roofline {lb}", s.duration));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_respects_core_capacity() {
+    forall("core capacity", 0xC04E, 40, |g| {
+        let mut cluster = ClusterSpec::mini();
+        cluster.task_overhead = 0.0;
+        let cores = cluster.total_cores() as usize;
+        let n = g.len(40) + cores;
+        let secs = 0.1 + g.f64();
+        let tasks: Vec<TaskSpec> =
+            (0..n).map(|_| TaskSpec::new(vec![Phase::Cpu { secs }])).collect();
+        let s = run_stage(&cluster, &tasks, &SimOpts { jitter: 0.0, seed: 2 });
+        let waves = (n as f64 / cores as f64).ceil();
+        let expect = waves * secs;
+        if (s.duration - expect).abs() > 1e-6 {
+            return Err(format!("{n} tasks on {cores} cores: {} vs {expect}", s.duration));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_deterministic_across_runs() {
+    let cluster = ClusterSpec::marenostrum();
+    let job = Workload::SortByKey1B.job();
+    let conf = SparkConf::default();
+    let a = run(&job, &conf, &cluster, &SimOpts::default());
+    let b = run(&job, &conf, &cluster, &SimOpts::default());
+    assert_eq!(a.duration, b.duration);
+    assert_eq!(a.stages.len(), b.stages.len());
+}
+
+// ---------- engine ----------
+
+#[test]
+fn prop_engine_duration_monotone_in_records() {
+    forall("engine monotone in records", 0xE17, 12, |g| {
+        let cluster = ClusterSpec::marenostrum();
+        let conf = SparkConf::default();
+        let base = 50_000_000 + g.int(0, 100_000_000);
+        let small = workloads::sort_by_key(base, 640);
+        let big = workloads::sort_by_key(base * 2, 640);
+        let t_small =
+            run(&small, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 3 }).effective_duration();
+        let t_big =
+            run(&big, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 3 }).effective_duration();
+        if t_big <= t_small {
+            return Err(format!("2× records not slower: {t_small} vs {t_big} (base {base})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_crash_monotone_in_shuffle_fraction() {
+    // If sort-by-key crashes at fraction f, it must crash at every
+    // fraction below f too (the OOM floor only tightens).
+    let cluster = ClusterSpec::marenostrum();
+    let job = Workload::SortByKey1B.job();
+    let mut crashed_above = false;
+    for f in ["0.30", "0.20", "0.12", "0.08", "0.05"] {
+        let conf = SparkConf::default()
+            .with("spark.shuffle.memoryFraction", f)
+            .with("spark.storage.memoryFraction", "0.5");
+        let r = run(&job, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 1 });
+        if crashed_above {
+            assert!(
+                r.crashed.is_some(),
+                "crashed at a higher fraction but survived at {f}"
+            );
+        }
+        crashed_above = crashed_above || r.crashed.is_some();
+    }
+    assert!(crashed_above, "no fraction crashed — the OOM mechanism is dead");
+}
+
+#[test]
+fn engine_stage_accounting_sums_to_job() {
+    let cluster = ClusterSpec::marenostrum();
+    let r = run(
+        &Workload::KMeans100M.job(),
+        &SparkConf::default(),
+        &cluster,
+        &SimOpts::default(),
+    );
+    assert!(r.crashed.is_none());
+    let sum: f64 = r.stages.iter().map(|s| s.duration).sum();
+    assert!((sum - r.duration).abs() < 1e-9 * r.duration.max(1.0));
+    assert_eq!(r.stages.len(), 21); // gen+cache + 10 × (map, reduce)
+}
+
+#[test]
+fn engine_rejects_malformed_jobs_gracefully() {
+    let cluster = ClusterSpec::mini();
+    let bad = Job::new("no-source").op(Op::SortByKey { reducers: 4 });
+    let r = run(&bad, &SparkConf::default(), &cluster, &SimOpts::default());
+    assert!(r.crashed.is_some());
+    assert!(r.crashed.unwrap().contains("plan error"));
+}
+
+#[test]
+fn engine_zero_sized_dataset_runs() {
+    let cluster = ClusterSpec::mini();
+    let d = Dataset::kv(0, 10, 90, 4);
+    let job = Job::new("empty")
+        .op(Op::Generate { out: d, cpu_ns_per_record: 100.0 })
+        .op(Op::SortByKey { reducers: 4 })
+        .op(Op::Action);
+    let r = run(&job, &SparkConf::default(), &cluster, &SimOpts::default());
+    assert!(r.crashed.is_none());
+    assert!(r.duration >= 0.0 && r.duration.is_finite());
+}
+
+// ---------- tuner ----------
+
+#[test]
+fn prop_tuner_never_worse_than_baseline_and_within_budget() {
+    forall("tuner invariants", 0x7E57, 60, |g| {
+        // Random synthetic response surface over the 6 methodology axes.
+        let effects: Vec<f64> = (0..12).map(|_| 0.6 + g.f64() * 0.9).collect();
+        let crash_mf17 = g.bool();
+        let threshold = if g.bool() { 0.0 } else { 0.1 };
+        let mut runner = |c: &SparkConf| -> f64 {
+            if crash_mf17 && c.shuffle_memory_fraction == 0.1 {
+                return f64::INFINITY;
+            }
+            let mut t = 100.0;
+            if c.serializer == SerKind::Kryo {
+                t *= effects[0];
+            }
+            match c.shuffle_manager {
+                sparktune::conf::ShuffleManagerKind::Hash => t *= effects[1],
+                sparktune::conf::ShuffleManagerKind::TungstenSort => t *= effects[2],
+                _ => {}
+            }
+            if !c.shuffle_compress {
+                t *= effects[3];
+            }
+            if c.shuffle_memory_fraction == 0.4 {
+                t *= effects[4];
+            }
+            if c.shuffle_memory_fraction == 0.1 {
+                t *= effects[5];
+            }
+            if !c.shuffle_spill_compress {
+                t *= effects[6];
+            }
+            if c.shuffle_file_buffer == 96 * 1024 {
+                t *= effects[7];
+            }
+            if c.shuffle_file_buffer == 15 * 1024 {
+                t *= effects[8];
+            }
+            t
+        };
+        let out = tune(&mut runner, &TuneOpts { threshold, short_version: false });
+        if out.best > out.baseline + 1e-9 {
+            return Err(format!("best {} worse than baseline {}", out.best, out.baseline));
+        }
+        if out.runs() > 10 {
+            return Err(format!("{} runs > 10", out.runs()));
+        }
+        for t in &out.trials {
+            if t.kept && !(t.improvement > threshold) {
+                return Err(format!("kept {:?} with improvement {}", t.step, t.improvement));
+            }
+            if t.kept && t.duration.is_infinite() {
+                return Err("kept a crashed configuration".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_decode_total_and_valid() {
+    assert_eq!(grid_size(), 216);
+    forall("grid decode valid", 0x64D, 216, |g| {
+        let idx = g.rng.below(216) as usize;
+        let conf = grid_conf(idx);
+        conf.validate().map_err(|e| format!("grid {idx}: {e}"))
+    });
+}
+
+// ---------- cross-layer: tuner drives the real engine ----------
+
+#[test]
+fn tuned_configuration_reproduces_when_replayed() {
+    // The tuner's reported best time must match an independent run of the
+    // final configuration (no hidden state in the runner).
+    let cluster = ClusterSpec::marenostrum();
+    let job = Workload::SortByKey1B.job();
+    let mut runner = |c: &SparkConf| {
+        run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 }).effective_duration()
+    };
+    let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false });
+    let replay = run(&job, &out.best_conf, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 });
+    assert!(replay.crashed.is_none());
+    assert!((replay.duration - out.best).abs() < 1e-9, "{} vs {}", replay.duration, out.best);
+}
+
+#[test]
+fn threshold_zero_keeps_at_least_as_much_as_threshold_ten() {
+    let cluster = ClusterSpec::marenostrum();
+    for w in [Workload::SortByKey1B, Workload::AggregateByKey2B] {
+        let job = w.job();
+        let mk = |thr: f64| {
+            let mut runner = |c: &SparkConf| {
+                run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 })
+                    .effective_duration()
+            };
+            tune(&mut runner, &TuneOpts { threshold: thr, short_version: false })
+        };
+        let loose = mk(0.0);
+        let strict = mk(0.10);
+        assert!(
+            loose.best <= strict.best + 1e-9,
+            "{}: threshold 0 best {} worse than threshold 10% best {}",
+            w.name(),
+            loose.best,
+            strict.best
+        );
+    }
+}
