@@ -1,0 +1,65 @@
+//! Bench: simulated-jobs-per-second through the scheduler core — the
+//! perf trajectory of the EventSim refactor.
+//!
+//! Three execution shapes over the same batch of jobs:
+//!
+//! * **barrier-equivalent** — jobs run one after another through `run`
+//!   (each job alone in a fresh event core; on linear DAGs this equals
+//!   the retired per-stage barrier path);
+//! * **event-core batch** — the whole batch submitted into ONE core via
+//!   `run_all` (stage overlap across jobs, FIFO and FAIR);
+//! * **parallel trials** — independent `(job, conf)` trials fanned over
+//!   OS threads with `TrialExecutor` (every run pure in `(conf, seed)`).
+//!
+//! Uses the in-tree `testkit::bench` harness (no criterion in the
+//! offline crate set).
+//!
+//! `cargo bench --bench sched_throughput`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::conf::SparkConf;
+use sparktune::engine::{run, run_all};
+use sparktune::sim::SimOpts;
+use sparktune::testkit::bench;
+use sparktune::tuner::baselines::grid_conf;
+use sparktune::tuner::TrialExecutor;
+use sparktune::workloads;
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+    let n_jobs = 8usize;
+    let jobs = workloads::multi_tenant(n_jobs as u32, 100_000_000, 640);
+    let conf = SparkConf::default().with("spark.serializer", "kryo");
+    let opts = SimOpts::default();
+
+    // ---- barrier-equivalent: jobs strictly one at a time ----
+    bench(&format!("sched/sequential run ×{n_jobs} jobs"), 7, n_jobs as f64, || {
+        for job in &jobs {
+            std::hint::black_box(run(job, &conf, &cluster, &opts));
+        }
+    });
+
+    // ---- event core: the whole batch in one simulation ----
+    for mode in ["FIFO", "FAIR"] {
+        let c = conf.clone().with("spark.scheduler.mode", mode);
+        bench(&format!("sched/run_all {mode} ×{n_jobs} jobs"), 7, n_jobs as f64, || {
+            std::hint::black_box(run_all(&jobs, &c, &cluster, &opts));
+        });
+    }
+
+    // ---- parallel trials: independent configurations across threads ----
+    let trial_confs: Vec<SparkConf> = (0..32).map(|i| grid_conf(i * 5 % 216)).collect();
+    let job = &jobs[0];
+    let eval = |c: &SparkConf| run(job, c, &cluster, &opts).effective_duration();
+    for threads in [1usize, 4, 8] {
+        let exec = TrialExecutor::new(threads);
+        bench(
+            &format!("sched/trials ×{} on {threads} thread(s)", trial_confs.len()),
+            5,
+            trial_confs.len() as f64,
+            || {
+                std::hint::black_box(exec.evaluate(&trial_confs, eval));
+            },
+        );
+    }
+}

@@ -8,6 +8,7 @@
 //! sparktune sweep  --figure fig1|fig2|fig3|table2 [--out-dir DIR]
 //! sparktune cases  [--out-dir DIR]
 //! sparktune ablation [--workload <name>]
+//! sparktune tenancy [--jobs N] [--records N]
 //! sparktune help-conf
 //! ```
 
@@ -95,6 +96,7 @@ USAGE:
   sparktune sweep    --figure fig1|fig2|fig3|table2 [--out-dir DIR]
   sparktune cases    [--out-dir DIR]
   sparktune ablation [--workload <name>]
+  sparktune tenancy  [--jobs N] [--records N]   (FIFO vs FAIR on N concurrent jobs)
   sparktune help-conf
 
 WORKLOADS: sort-by-key | shuffling | kmeans-100m | kmeans-200m |
@@ -242,6 +244,20 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             let w = args.workload()?;
             let rows = experiments::ablation::ablation(&[w], &cluster);
             println!("{}", experiments::ablation::ablation_table(&rows).to_markdown());
+            Ok(())
+        }
+        "tenancy" => {
+            let n: u32 = args.flag("jobs").unwrap_or("4").parse().map_err(|e| format!("{e}"))?;
+            if n == 0 {
+                return Err("--jobs must be >= 1".into());
+            }
+            let records: u64 = args
+                .flag("records")
+                .unwrap_or("100000000")
+                .parse()
+                .map_err(|e| format!("{e}"))?;
+            let outcomes = experiments::tenancy::tenancy_experiment(n, records, &cluster);
+            println!("{}", experiments::tenancy::tenancy_table(&outcomes).to_markdown());
             Ok(())
         }
         "help-conf" => {

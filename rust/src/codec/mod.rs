@@ -29,23 +29,40 @@ use std::fmt;
 pub use profile::CodecProfile;
 
 /// Errors from decompression of malformed / truncated input.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum CodecError {
-    #[error("truncated input: {0}")]
     Truncated(&'static str),
-    #[error("bad back-reference (offset {offset} at out position {pos})")]
     BadBackref { offset: usize, pos: usize },
-    #[error("declared length {declared} exceeds limit {limit}")]
     TooLong { declared: usize, limit: usize },
-    #[error("bad frame: {0}")]
     BadFrame(&'static str),
-    #[error("crc mismatch (stored {stored:#010x}, computed {computed:#010x})")]
     CrcMismatch { stored: u32, computed: u32 },
-    #[error("output length mismatch: declared {declared}, produced {produced}")]
     LengthMismatch { declared: usize, produced: usize },
-    #[error("external codec failure: {0}")]
     External(String),
 }
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated(what) => write!(f, "truncated input: {what}"),
+            CodecError::BadBackref { offset, pos } => {
+                write!(f, "bad back-reference (offset {offset} at out position {pos})")
+            }
+            CodecError::TooLong { declared, limit } => {
+                write!(f, "declared length {declared} exceeds limit {limit}")
+            }
+            CodecError::BadFrame(what) => write!(f, "bad frame: {what}"),
+            CodecError::CrcMismatch { stored, computed } => {
+                write!(f, "crc mismatch (stored {stored:#010x}, computed {computed:#010x})")
+            }
+            CodecError::LengthMismatch { declared, produced } => {
+                write!(f, "output length mismatch: declared {declared}, produced {produced}")
+            }
+            CodecError::External(msg) => write!(f, "external codec failure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
 
 /// The codec options of `spark.io.compression.codec`, plus cross-check
 /// codecs used only in ablation experiments.

@@ -19,6 +19,7 @@ pub mod params;
 
 use crate::codec::CodecKind;
 use crate::ser::SerKind;
+use crate::sim::SchedulerMode;
 use crate::util::units::{parse_size, SizeUnit};
 use std::collections::BTreeMap;
 use std::fmt;
@@ -68,13 +69,29 @@ impl fmt::Display for ShuffleManagerKind {
 }
 
 /// Configuration error (unknown value, out-of-range fraction, …).
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum ConfError {
-    #[error("invalid value {value:?} for {key}: {reason}")]
     Invalid { key: String, value: String, reason: String },
-    #[error("fractions sum > 1.0: storage {storage} + shuffle {shuffle} (+0.2 reserved)")]
     FractionSum { storage: String, shuffle: String },
 }
+
+impl fmt::Display for ConfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfError::Invalid { key, value, reason } => {
+                write!(f, "invalid value {value:?} for {key}: {reason}")
+            }
+            ConfError::FractionSum { storage, shuffle } => {
+                write!(
+                    f,
+                    "fractions sum > 1.0: storage {storage} + shuffle {shuffle} (+0.2 reserved)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfError {}
 
 /// Full engine configuration. `Default` is Spark 1.5.2's out-of-the-box
 /// configuration on the paper's cluster setup.
@@ -121,6 +138,11 @@ pub struct SparkConf {
     /// `spark.shuffle.spill` (default true): allow spilling to disk; with
     /// this off, exceeding shuffle memory is an immediate OOM.
     pub shuffle_spill: bool,
+    /// `spark.scheduler.mode` (default FIFO): how concurrently submitted
+    /// jobs share the cluster's cores — FIFO (submission-order priority)
+    /// or FAIR (even running-task shares). Drives the event core's
+    /// [`SchedulerMode`] policy; only observable with > 1 concurrent job.
+    pub scheduler_mode: SchedulerMode,
 
     /// Unmodeled `--conf` keys, carried through verbatim.
     pub extras: BTreeMap<String, String>,
@@ -151,6 +173,7 @@ impl Default for SparkConf {
             num_executors: 20,
             default_parallelism: 640,
             shuffle_spill: true,
+            scheduler_mode: SchedulerMode::Fifo,
             extras: BTreeMap::new(),
         }
     }
@@ -218,6 +241,10 @@ impl SparkConf {
                     v.parse().map_err(|e| invalid(key, v, format!("{e}")))?;
             }
             "spark.shuffle.spill" => self.shuffle_spill = parse_bool(key, v)?,
+            "spark.scheduler.mode" => {
+                self.scheduler_mode = SchedulerMode::from_config_name(v)
+                    .ok_or_else(|| invalid(key, v, "expected FIFO|FAIR".into()))?;
+            }
             _ => {
                 self.extras.insert(key.to_string(), v.to_string());
             }
@@ -295,6 +322,9 @@ impl SparkConf {
         ));
         cmp!(rdd_compress, "spark.rdd.compress", |v: &bool| v.to_string());
         cmp!(shuffle_io_prefer_direct_bufs, "spark.shuffle.io.preferDirectBufs", |v: &bool| v
+            .to_string());
+        cmp!(scheduler_mode, "spark.scheduler.mode", |v: &SchedulerMode| v
+            .config_name()
             .to_string());
         for (k, v) in &self.extras {
             out.push((k.clone(), v.clone()));
@@ -431,6 +461,21 @@ mod tests {
             .with("spark.shuffle.memoryFraction", "0.1")
             .with("spark.storage.memoryFraction", "0.7");
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn scheduler_mode_knob() {
+        let mut c = SparkConf::default();
+        assert_eq!(c.scheduler_mode, SchedulerMode::Fifo);
+        c.set("spark.scheduler.mode", "FAIR").unwrap();
+        assert_eq!(c.scheduler_mode, SchedulerMode::Fair);
+        c.set("spark.scheduler.mode", "fifo").unwrap();
+        assert_eq!(c.scheduler_mode, SchedulerMode::Fifo);
+        assert!(c.set("spark.scheduler.mode", "lottery").is_err());
+        let fair = SparkConf::default().with("spark.scheduler.mode", "FAIR");
+        let diff = fair.diff_from_default();
+        assert_eq!(diff, vec![("spark.scheduler.mode".to_string(), "FAIR".to_string())]);
+        assert!(format!("{fair}").contains("spark.scheduler.mode=FAIR"));
     }
 
     #[test]

@@ -191,6 +191,14 @@ pub const PARAMS: &[ParamDef] = &[
         paper_param: false,
         doc: "Allow spilling shuffle data to disk; disabling turns memory pressure into OOM.",
     },
+    ParamDef {
+        key: "spark.scheduler.mode",
+        category: Category::Scheduling,
+        default: "FIFO",
+        paper_param: false,
+        doc: "FIFO | FAIR — how concurrently submitted jobs share the cluster's cores \
+              (observable in multi-tenant runs; single jobs are unaffected).",
+    },
 ];
 
 /// Look up a parameter by key.

@@ -1,20 +1,24 @@
-//! The RDD execution engine: datasets, operators, job plans, and the
-//! stage-by-stage runner that drives the discrete-event simulator.
+//! The RDD execution engine: datasets, operators, stage DAGs, and the
+//! event-driven runner that executes whole jobs — concurrently — on the
+//! persistent simulator core.
 //!
 //! A [`Job`] is a chain of [`Op`]s over a [`Dataset`] (all of the paper's
 //! benchmarks are chains — generate → [cache] → transform* → wide-op →
 //! action, possibly iterated). The planner ([`plan`]) splits the chain
 //! into *stages* at wide (shuffle) boundaries, exactly like Spark's
-//! DAGScheduler; the runner ([`run`]) prices each stage's tasks through
-//! the shuffle/storage/memory cost models and executes them on the
-//! [`crate::sim`] event simulator, threading cache state and crash
-//! handling across stages.
+//! DAGScheduler, and wires explicit `parents` dependency edges between
+//! them. The runner ([`run`] / [`run_all`]) prices each stage's tasks
+//! through the shuffle/storage/memory cost models and submits them to
+//! the [`crate::sim::EventSim`] event core the moment their parents
+//! complete; cache state, GC pressure, and crash handling thread along
+//! the DAG, and multiple jobs contend for one cluster under the
+//! `spark.scheduler.mode` policy.
 
 pub mod plan;
 pub mod run;
 
 pub use plan::{plan, Stage, StageInput, StageOutput};
-pub use run::{run, JobResult, StageReport};
+pub use run::{run, run_all, JobResult, MultiJobResult, StageReport};
 
 /// Statistical description of a distributed dataset (Sim mode never
 /// materializes records; it tracks their statistics).

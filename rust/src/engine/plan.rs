@@ -1,10 +1,21 @@
 //! The DAG scheduler: splits an operator chain into stages at shuffle
 //! boundaries (Spark's `DAGScheduler.getShuffleDependencies` analogue for
-//! linear lineages).
+//! linear lineages) and wires the resulting stages into an explicit
+//! dependency DAG.
 //!
 //! Each [`Stage`] is a pipelined run of narrow work with one input source
 //! and one output sink. `CacheRead` starts a new stage only when it
 //! follows a wide op (iteration boundary); narrow chains pipeline.
+//!
+//! Every stage carries its **`parents` edges** — the stages whose
+//! outputs it consumes: a shuffle-read stage depends on the map stage
+//! that wrote its blocks, and a cache-read stage depends on the stage
+//! that populated the cache *and* on the previous iteration (whose
+//! reduce output — centroids, aggregates — feeds the next map closure,
+//! exactly like Spark's broadcast-variable dependence between
+//! iterations). The event-driven runner ([`super::run`]) submits a stage
+//! the moment all of its parents complete; the planner no longer implies
+//! any execution order beyond these edges.
 
 use super::{Dataset, Job, Op};
 
@@ -48,6 +59,9 @@ pub enum StageOutput {
 pub struct Stage {
     pub id: usize,
     pub name: String,
+    /// Ids of the stages whose outputs this stage consumes. A stage is
+    /// runnable once every parent has completed; roots have no parents.
+    pub parents: Vec<usize>,
     pub input: StageInput,
     /// Dataset flowing *into* the narrow pipeline.
     pub in_data: Dataset,
@@ -64,17 +78,26 @@ pub struct Stage {
 }
 
 /// Planning failure: malformed op chains.
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, PartialEq)]
 pub enum PlanError {
-    #[error("job must start with Generate")]
     MissingSource,
-    #[error("CacheRead without a previous Cache")]
     CacheReadWithoutCache,
-    #[error("empty job")]
     Empty,
-    #[error("{0} after terminal Action")]
     OpAfterAction(String),
 }
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::MissingSource => f.write_str("job must start with Generate"),
+            PlanError::CacheReadWithoutCache => f.write_str("CacheRead without a previous Cache"),
+            PlanError::Empty => f.write_str("empty job"),
+            PlanError::OpAfterAction(op) => write!(f, "{op} after terminal Action"),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
 
 /// Split a job into stages.
 pub fn plan(job: &Job) -> Result<Vec<Stage>, PlanError> {
@@ -106,6 +129,7 @@ pub fn plan(job: &Job) -> Result<Vec<Stage>, PlanError> {
         stages.push(Stage {
             id,
             name: format!("stage-{id}"),
+            parents: Vec::new(), // wired by `wire_dag` once the chain is split
             input,
             in_data,
             pipeline_cpu_ns_per_record: cpu,
@@ -268,7 +292,37 @@ pub fn plan(job: &Job) -> Result<Vec<Stage>, PlanError> {
         let cd = if cur_cache_write { cached.clone() } else { None };
         flush(input, in_data, cur_cpu, cur_cache_write, cd, StageOutput::Action, &mut stages);
     }
+    wire_dag(&mut stages);
     Ok(stages)
+}
+
+/// Assign `parents` edges from data dependencies:
+///
+/// * a shuffle-read stage consumes the blocks of the stage flushed just
+///   before it (its map side);
+/// * a cache-read stage consumes the persisted blocks of the stage that
+///   wrote the cache **and** the result of the previous stage (the
+///   iteration's reduce output feeds the next map closure);
+/// * the chain head is the DAG root.
+fn wire_dag(stages: &mut [Stage]) {
+    let mut cache_writer: Option<usize> = None;
+    for i in 0..stages.len() {
+        let mut parents = Vec::new();
+        if i > 0 {
+            if let StageInput::CacheRead { .. } = stages[i].input {
+                if let Some(cw) = cache_writer {
+                    if cw != i - 1 {
+                        parents.push(cw);
+                    }
+                }
+            }
+            parents.push(i - 1);
+        }
+        stages[i].parents = parents;
+        if stages[i].cache_write {
+            cache_writer = Some(i);
+        }
+    }
 }
 
 fn take_open(
@@ -368,6 +422,45 @@ mod tests {
         assert!(stages[0].cache_write);
         assert!(matches!(stages[1].input, StageInput::CacheRead { .. }));
         assert!(matches!(stages[2].input, StageInput::ShuffleRead { .. }));
+    }
+
+    #[test]
+    fn dag_edges_linear_for_sort_by_key() {
+        let stages = plan(&sbk_job()).unwrap();
+        assert!(stages[0].parents.is_empty(), "{:?}", stages[0].parents);
+        assert_eq!(stages[1].parents, vec![0]);
+    }
+
+    #[test]
+    fn dag_edges_cache_read_depends_on_cache_writer() {
+        let pts = Dataset::vectors(1_000_000, 100, 64);
+        let partials = Dataset::vectors(64 * 10, 100, 64);
+        let mut job = Job::new("kmeans")
+            .op(Op::Generate { out: pts.clone(), cpu_ns_per_record: 2000.0 })
+            .op(Op::Cache);
+        for _ in 0..2 {
+            job = job
+                .op(Op::CacheRead)
+                .op(Op::MapRecords { cpu_ns_per_record: 3800.0, out: partials.clone() })
+                .op(Op::Repartition { reducers: 10 });
+        }
+        let stages = plan(&job).unwrap();
+        // Layout: 0 gen+cache, 1 map (CacheRead), 2 reduce, 3 map, 4 reduce.
+        assert_eq!(stages.len(), 5);
+        assert!(stages[0].cache_write);
+        // First iteration's map reads the cache written by stage 0.
+        assert_eq!(stages[1].parents, vec![0]);
+        // Reduce depends on its map.
+        assert_eq!(stages[2].parents, vec![1]);
+        // Second iteration's map depends on BOTH the cache writer and the
+        // previous iteration's reduce (new centroids).
+        assert_eq!(stages[3].parents, vec![0, 2]);
+        // Every parent id precedes the stage (acyclic by construction).
+        for s in &stages {
+            for &p in &s.parents {
+                assert!(p < s.id, "stage {} lists non-ancestor parent {}", s.id, p);
+            }
+        }
     }
 
     #[test]

@@ -73,9 +73,7 @@ pub enum SpillPlan {
 }
 
 /// Error carried up through job execution when a stage OOMs.
-#[derive(Debug, Clone, thiserror::Error, PartialEq)]
-#[error("OOM: stage {stage} task working set needs {need} B but per-task share is {share} B \
-         (shuffle pool {pool} B / {concurrent} concurrent tasks)")]
+#[derive(Debug, Clone, PartialEq)]
 pub struct OomError {
     pub stage: String,
     pub need: u64,
@@ -83,6 +81,19 @@ pub struct OomError {
     pub pool: u64,
     pub concurrent: u32,
 }
+
+impl std::fmt::Display for OomError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "OOM: stage {} task working set needs {} B but per-task share is {} B \
+             (shuffle pool {} B / {} concurrent tasks)",
+            self.stage, self.need, self.share, self.pool, self.concurrent
+        )
+    }
+}
+
+impl std::error::Error for OomError {}
 
 /// The per-executor memory pools implied by a configuration.
 #[derive(Clone, Copy, Debug)]

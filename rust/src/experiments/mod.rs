@@ -5,6 +5,8 @@
 //! * [`table2`] — mean |deviation| per parameter per benchmark.
 //! * [`cases`] — the §5 case studies (methodology end-to-end).
 //! * [`ablation`] — E8: methodology vs exhaustive vs random search.
+//! * [`tenancy`] — N concurrent jobs on one cluster, FIFO vs FAIR
+//!   (`spark.scheduler.mode` through the event core).
 //!
 //! Protocol follows the paper: each configuration is run with ≥5
 //! repetition seeds and the **median** is reported; the baseline for the
@@ -14,6 +16,7 @@
 
 pub mod ablation;
 pub mod cases;
+pub mod tenancy;
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;

@@ -1,0 +1,223 @@
+//! Multi-tenant experiment: N concurrent jobs on one cluster, FIFO vs
+//! FAIR (`spark.scheduler.mode`).
+//!
+//! The paper tunes one application at a time on an otherwise idle
+//! cluster; production clusters run many. This driver submits a batch of
+//! jobs at `t = 0` through the event core ([`crate::engine::run_all`])
+//! and reports per-job completion times, makespan, and completion-time
+//! *spread* under both scheduling policies. The characteristic shapes:
+//!
+//! * **FIFO** — earlier-submitted jobs monopolize cores, so completion
+//!   times stagger by submission order (first job ≈ its solo time, last
+//!   job ≈ makespan; large spread);
+//! * **FAIR** — running-task shares are balanced, so identical jobs
+//!   finish bunched together near the makespan (small spread), each one
+//!   individually slower than under FIFO.
+//!
+//! Makespan is work-conserving either way — the policies redistribute
+//! latency, not throughput.
+
+use crate::cluster::ClusterSpec;
+use crate::conf::SparkConf;
+use crate::engine::{run_all, Job, MultiJobResult};
+use crate::report::Table;
+use crate::sim::{SchedulerMode, SimOpts};
+use crate::workloads;
+
+/// One policy's outcome on a job batch.
+#[derive(Clone, Debug)]
+pub struct TenancyOutcome {
+    pub mode: SchedulerMode,
+    pub batch: MultiJobResult,
+}
+
+impl TenancyOutcome {
+    /// Completion times of uncrashed jobs, in submission order.
+    pub fn completions(&self) -> Vec<f64> {
+        self.batch
+            .results
+            .iter()
+            .filter(|r| r.crashed.is_none())
+            .map(|r| r.duration)
+            .collect()
+    }
+
+    /// Max − min completion time across uncrashed jobs (the fairness
+    /// signature: large under FIFO, small under FAIR for identical jobs).
+    pub fn spread(&self) -> f64 {
+        let c = self.completions();
+        let max = c.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let min = c.iter().copied().fold(f64::INFINITY, f64::min);
+        if c.is_empty() {
+            0.0
+        } else {
+            max - min
+        }
+    }
+}
+
+/// Run `jobs` concurrently under `mode` (overriding the configuration's
+/// scheduler mode). Deterministic in `(conf, seed)`.
+pub fn run_tenancy(
+    jobs: &[Job],
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    mode: SchedulerMode,
+    opts: &SimOpts,
+) -> TenancyOutcome {
+    let mut conf = conf.clone();
+    conf.scheduler_mode = mode;
+    TenancyOutcome { mode, batch: run_all(jobs, &conf, cluster, opts) }
+}
+
+/// The standard scenario: `n` concurrent tenants on the paper's cluster,
+/// both policies.
+pub fn tenancy_experiment(
+    n: u32,
+    records_per_job: u64,
+    cluster: &ClusterSpec,
+) -> Vec<TenancyOutcome> {
+    let jobs = workloads::multi_tenant(n, records_per_job, 640);
+    let conf = SparkConf::default().with("spark.serializer", "kryo");
+    SchedulerMode::ALL
+        .iter()
+        .map(|&mode| run_tenancy(&jobs, &conf, cluster, mode, &SimOpts::default()))
+        .collect()
+}
+
+/// Render outcomes as a markdown table.
+pub fn tenancy_table(outcomes: &[TenancyOutcome]) -> Table {
+    let mut t = Table {
+        title: "Multi-tenant scheduling — N concurrent jobs, FIFO vs FAIR".into(),
+        header: vec![
+            "mode".into(),
+            "job".into(),
+            "completion (s)".into(),
+            "makespan (s)".into(),
+            "spread (s)".into(),
+        ],
+        rows: Vec::new(),
+    };
+    for o in outcomes {
+        for r in &o.batch.results {
+            t.rows.push(vec![
+                o.mode.to_string(),
+                r.job.clone(),
+                match &r.crashed {
+                    None => format!("{:.1}", r.duration),
+                    Some(c) => format!("CRASH ({c})"),
+                },
+                format!("{:.1}", o.batch.makespan),
+                format!("{:.1}", o.spread()),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::run;
+
+    /// 4 identical small tenants on the mini cluster under both modes.
+    fn mini_outcomes() -> (TenancyOutcome, TenancyOutcome, f64) {
+        let cluster = ClusterSpec::mini();
+        let jobs = workloads::multi_tenant(4, 2_000_000, 16);
+        let conf = SparkConf::default();
+        let opts = SimOpts::default();
+        let solo = run(&jobs[0], &conf, &cluster, &opts);
+        assert!(solo.crashed.is_none());
+        let fifo = run_tenancy(&jobs, &conf, &cluster, SchedulerMode::Fifo, &opts);
+        let fair = run_tenancy(&jobs, &conf, &cluster, SchedulerMode::Fair, &opts);
+        (fifo, fair, solo.duration)
+    }
+
+    #[test]
+    fn both_modes_run_four_tenants_uncrashed() {
+        let (fifo, fair, _) = mini_outcomes();
+        assert_eq!(fifo.completions().len(), 4);
+        assert_eq!(fair.completions().len(), 4);
+        assert!(fifo.batch.makespan > 0.0 && fair.batch.makespan > 0.0);
+    }
+
+    #[test]
+    fn fifo_staggers_by_submission_order() {
+        let (fifo, _, solo) = mini_outcomes();
+        let c = fifo.completions();
+        for w in c.windows(2) {
+            assert!(
+                w[0] <= w[1] + 1e-9,
+                "FIFO completions must be ordered by submission: {c:?}"
+            );
+        }
+        // The first tenant is barely slowed: FIFO gives it the cluster.
+        assert!(
+            c[0] < solo * 1.6,
+            "FIFO first job {:.2}s vs solo {:.2}s — should be near-solo",
+            c[0],
+            solo
+        );
+    }
+
+    #[test]
+    fn fair_bunches_fifo_spreads() {
+        let (fifo, fair, _) = mini_outcomes();
+        // FAIR slows every individual job relative to FIFO's front-runner…
+        assert!(
+            fair.completions()[0] > fifo.completions()[0] * 1.3,
+            "FAIR first job {:.2}s should be well above FIFO's {:.2}s",
+            fair.completions()[0],
+            fifo.completions()[0]
+        );
+        // …but evens them out: identical jobs finish bunched together.
+        assert!(
+            fair.spread() < fifo.spread() * 0.5,
+            "FAIR spread {:.2}s !< half of FIFO spread {:.2}s",
+            fair.spread(),
+            fifo.spread()
+        );
+    }
+
+    #[test]
+    fn policies_are_work_conserving() {
+        let (fifo, fair, solo) = mini_outcomes();
+        // Same total work → comparable makespans (latency is
+        // redistributed, not created), and neither beats 4× the solo
+        // lower bound by much nor blows far past it.
+        let ratio = fair.batch.makespan / fifo.batch.makespan;
+        assert!(
+            (0.6..1.7).contains(&ratio),
+            "makespans diverged: fifo {:.2}s fair {:.2}s",
+            fifo.batch.makespan,
+            fair.batch.makespan
+        );
+        assert!(fifo.batch.makespan > solo * 1.5, "4 tenants must cost more than ~1 solo run");
+    }
+
+    #[test]
+    fn table_renders_both_modes() {
+        let cluster = ClusterSpec::mini();
+        let jobs = workloads::multi_tenant(2, 1_000_000, 16);
+        let conf = SparkConf::default();
+        let outs: Vec<TenancyOutcome> = SchedulerMode::ALL
+            .iter()
+            .map(|&m| run_tenancy(&jobs, &conf, &cluster, m, &SimOpts::default()))
+            .collect();
+        let md = tenancy_table(&outs).to_markdown();
+        assert!(md.contains("FIFO"));
+        assert!(md.contains("FAIR"));
+        assert!(md.contains("tenant0-"));
+    }
+
+    #[test]
+    fn tenancy_is_deterministic() {
+        let cluster = ClusterSpec::mini();
+        let jobs = workloads::multi_tenant(3, 1_000_000, 16);
+        let conf = SparkConf::default();
+        let a = run_tenancy(&jobs, &conf, &cluster, SchedulerMode::Fair, &SimOpts::default());
+        let b = run_tenancy(&jobs, &conf, &cluster, SchedulerMode::Fair, &SimOpts::default());
+        assert_eq!(a.completions(), b.completions());
+        assert_eq!(a.batch.makespan, b.batch.makespan);
+    }
+}

@@ -1,44 +1,56 @@
 //! # sparktune
 //!
 //! Reproduction of **“Spark Parameter Tuning via Trial-and-Error”**
-//! (Petridis, Gounaris, Torres — 2016) as a three-layer Rust + JAX + Pallas
-//! system.
+//! (Petridis, Gounaris, Torres — 2016) as a three-layer Rust + JAX +
+//! Pallas system, built around a whole-job, multi-job **event-driven
+//! scheduler core** (see `ARCHITECTURE.md` for the layering sketch).
 //!
 //! The crate contains:
 //!
 //! * `sparksim` — a from-scratch Spark-1.5-era execution-engine model:
-//!   RDD DAG → stages → tasks ([`engine`]), a discrete-event cluster
-//!   simulator ([`sim`], [`cluster`]), the legacy memory manager with
-//!   storage/shuffle fractions ([`exec`]), the block manager ([`storage`]),
-//!   and all three shuffle managers ([`shuffle`]).
+//!   RDD DAG → stages with explicit dependency edges → tasks
+//!   ([`engine`]), the persistent discrete-event cluster core with
+//!   pluggable FIFO/FAIR scheduling ([`sim::EventSim`], [`cluster`]),
+//!   the legacy memory manager with storage/shuffle fractions
+//!   ([`exec`]), the block manager ([`storage`]), and all three shuffle
+//!   managers ([`shuffle`]). Multiple jobs contend for one simulated
+//!   cluster under `spark.scheduler.mode` ([`engine::run_all`]).
 //! * Real substrates the model is calibrated against: from-scratch
-//!   compression codecs ([`codec`]) and serializers ([`ser`]).
-//! * The paper's 12 tunable parameters as a typed configuration system
-//!   ([`conf`]).
-//! * The paper's contribution — the trial-and-error tuning methodology of
-//!   Fig. 4 — plus exhaustive/random-search baselines ([`tuner`]).
-//! * Benchmarks from the paper's evaluation ([`workloads`]), experiment
-//!   drivers for every figure and table ([`experiments`]), and reporting
-//!   ([`metrics`], [`report`]).
-//! * The AOT compute path: a PJRT runtime ([`runtime`]) that loads the
-//!   JAX/Pallas-lowered k-means step from `artifacts/` and executes it from
-//!   the Rust hot path (Python is build-time only).
+//!   compression codecs ([`codec`]) and serializers ([`ser`]), plus the
+//!   Real-mode operators with actual shuffle files on disk ([`real`]).
+//! * The paper's 12 tunable parameters (plus scheduling) as a typed
+//!   configuration system ([`conf`]).
+//! * The paper's contribution — the trial-and-error tuning methodology
+//!   of Fig. 4 — plus exhaustive/random-search baselines and the
+//!   multi-threaded [`tuner::TrialExecutor`] that evaluates independent
+//!   trials in parallel with bit-identical results ([`tuner`]).
+//! * Benchmarks from the paper's evaluation and the multi-tenant
+//!   scenario ([`workloads`]), experiment drivers for every figure and
+//!   table plus FIFO-vs-FAIR tenancy ([`experiments`]), and reporting
+//!   ([`report`]).
+//! * The AOT compute path: a PJRT runtime ([`runtime`], behind the
+//!   `pjrt` cargo feature) that loads the JAX/Pallas-lowered k-means
+//!   step from `artifacts/` and executes it from the Rust hot path
+//!   (Python is build-time only).
+//!
+//! The build is fully self-contained — no external crates; see
+//! `Cargo.toml` for the offline-build discipline.
 
 pub mod cli;
 pub mod cluster;
 pub mod codec;
 pub mod conf;
 pub mod engine;
+pub mod exec;
 pub mod experiments;
 pub mod real;
 pub mod report;
 pub mod runtime;
-pub mod exec;
+pub mod ser;
 pub mod shuffle;
 pub mod sim;
 pub mod storage;
 pub mod testkit;
 pub mod tuner;
-pub mod ser;
 pub mod util;
 pub mod workloads;

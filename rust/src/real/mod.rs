@@ -18,8 +18,8 @@ pub mod shuffle;
 
 use crate::conf::SparkConf;
 use crate::ser::Record;
+use crate::util::err::Result;
 use crate::util::{Prng, prng::Zipf};
-use anyhow::Result;
 
 pub use shuffle::{RealShuffle, ShuffleMetrics};
 

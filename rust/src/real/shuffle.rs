@@ -18,7 +18,7 @@
 use crate::codec::{compress_framed, decompress_framed};
 use crate::conf::{ShuffleManagerKind, SparkConf};
 use crate::ser::Record;
-use anyhow::{Context, Result};
+use crate::util::err::{err, Result};
 use std::fs;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::PathBuf;
@@ -71,7 +71,7 @@ impl RealShuffle {
                 .unwrap()
                 .as_nanos() as u64
         ));
-        fs::create_dir_all(&dir).context("create shuffle dir")?;
+        fs::create_dir_all(&dir).map_err(|e| err(format!("create shuffle dir: {e}")))?;
         Ok(RealShuffle {
             conf: conf.clone(),
             dir,
@@ -103,12 +103,12 @@ impl RealShuffle {
 
     fn decode(&self, block: &[u8]) -> Result<Vec<Record>> {
         let payload = if self.conf.shuffle_compress {
-            let (_, raw) = decompress_framed(block).map_err(|e| anyhow::anyhow!("{e}"))?;
+            let (_, raw) = decompress_framed(block).map_err(err)?;
             raw
         } else {
             block.to_vec()
         };
-        self.conf.serializer.deserialize(&payload).map_err(|e| anyhow::anyhow!("{e}"))
+        self.conf.serializer.deserialize(&payload).map_err(err)
     }
 
     /// Append `bytes` to file `fid` (buffered at `shuffle.file.buffer`),

@@ -6,8 +6,16 @@
 //! reassigns instruction ids, so jax ≥ 0.5 modules load cleanly on the
 //! `xla` crate's xla_extension 0.5.1 (serialized protos do not — see
 //! /opt/xla-example/README.md).
+//!
+//! The `xla` bindings crate is **not** in the offline crate set, so the
+//! executing half of this module is gated behind the `pjrt` cargo
+//! feature: the default build ships a stub [`KmeansRuntime`] with the
+//! same API whose `load` reports the runtime as unavailable (callers —
+//! `kmeans_e2e`, the L3 integration test — already skip when artifacts
+//! can't be executed). [`KmeansMeta`] parsing is pure Rust and always
+//! available.
 
-use anyhow::{bail, Context, Result};
+use crate::util::err::{err, Result};
 use std::path::{Path, PathBuf};
 
 /// Shape metadata emitted by `compile/aot.py` alongside the HLO.
@@ -42,22 +50,22 @@ impl KmeansMeta {
                 continue;
             }
             let (key, value) =
-                line.split_once('=').with_context(|| format!("bad meta line {line:?}"))?;
+                line.split_once('=').ok_or_else(|| err(format!("bad meta line {line:?}")))?;
             match key.trim() {
-                "p" => p = Some(value.trim().parse()?),
-                "d" => d = Some(value.trim().parse()?),
-                "k" => k = Some(value.trim().parse()?),
-                "block_p" => block_p = Some(value.trim().parse()?),
-                "vmem_bytes" => vmem = Some(value.trim().parse()?),
-                "mxu_utilization" => mxu = Some(value.trim().parse()?),
+                "p" => p = Some(value.trim().parse::<usize>()?),
+                "d" => d = Some(value.trim().parse::<usize>()?),
+                "k" => k = Some(value.trim().parse::<usize>()?),
+                "block_p" => block_p = Some(value.trim().parse::<usize>()?),
+                "vmem_bytes" => vmem = Some(value.trim().parse::<u64>()?),
+                "mxu_utilization" => mxu = Some(value.trim().parse::<f64>()?),
                 _ => {} // forward-compatible
             }
         }
         Ok(KmeansMeta {
-            p: p.context("missing p")?,
-            d: d.context("missing d")?,
-            k: k.context("missing k")?,
-            block_p: block_p.context("missing block_p")?,
+            p: p.ok_or_else(|| err("missing p"))?,
+            d: d.ok_or_else(|| err("missing d"))?,
+            k: k.ok_or_else(|| err("missing k"))?,
+            block_p: block_p.ok_or_else(|| err("missing block_p"))?,
             vmem_bytes: vmem.unwrap_or(0),
             mxu_utilization: mxu.unwrap_or(0.0),
         })
@@ -75,127 +83,213 @@ pub struct StepOutput {
     pub inertia: f32,
 }
 
-/// The compiled k-means executables, loaded once and reused across every
-/// task execution (one compile per model variant).
-pub struct KmeansRuntime {
-    client: xla::PjRtClient,
-    step_exe: xla::PjRtLoadedExecutable,
-    combine_exe: xla::PjRtLoadedExecutable,
-    pub meta: KmeansMeta,
+/// Expected artifact file names inside the artifact directory.
+fn artifact_files(dir: &Path) -> [PathBuf; 3] {
+    [
+        dir.join("kmeans_step.hlo.txt"),
+        dir.join("new_centroids.hlo.txt"),
+        dir.join("kmeans_step.meta"),
+    ]
 }
 
-impl KmeansRuntime {
-    /// Default artifact location relative to the repo root.
-    pub fn default_dir() -> PathBuf {
-        PathBuf::from("artifacts")
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+
+    /// The compiled k-means executables, loaded once and reused across
+    /// every task execution (one compile per model variant).
+    pub struct KmeansRuntime {
+        client: xla::PjRtClient,
+        step_exe: xla::PjRtLoadedExecutable,
+        combine_exe: xla::PjRtLoadedExecutable,
+        pub meta: KmeansMeta,
     }
 
-    /// True if the AOT artifacts exist (tests skip gracefully otherwise;
-    /// `make artifacts` builds them).
-    pub fn artifacts_present(dir: &Path) -> bool {
-        dir.join("kmeans_step.hlo.txt").exists()
-            && dir.join("new_centroids.hlo.txt").exists()
-            && dir.join("kmeans_step.meta").exists()
-    }
-
-    /// Load + compile the artifacts on the PJRT CPU client.
-    pub fn load(dir: &Path) -> Result<KmeansRuntime> {
-        if !Self::artifacts_present(dir) {
-            bail!(
-                "AOT artifacts not found in {} — run `make artifacts` first",
-                dir.display()
-            );
+    impl KmeansRuntime {
+        /// Default artifact location relative to the repo root.
+        pub fn default_dir() -> PathBuf {
+            PathBuf::from("artifacts")
         }
-        let meta = KmeansMeta::parse(&std::fs::read_to_string(dir.join("kmeans_step.meta"))?)?;
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        let step_exe = compile(&client, &dir.join("kmeans_step.hlo.txt"))?;
-        let combine_exe = compile(&client, &dir.join("new_centroids.hlo.txt"))?;
-        Ok(KmeansRuntime { client, step_exe, combine_exe, meta })
-    }
 
-    /// Execute one partition step. `points` is row-major `(P, D)` with
-    /// exactly `meta.p × meta.d` elements (pad + mask shorter partitions),
-    /// `centroids` is `(K, D)`, `mask` is `(P,)` of 0.0/1.0.
-    pub fn step(&self, points: &[f32], centroids: &[f32], mask: &[f32]) -> Result<StepOutput> {
-        let m = &self.meta;
-        if points.len() != m.p * m.d {
-            bail!("points len {} != P×D = {}", points.len(), m.p * m.d);
+        /// True if the AOT artifacts exist (tests skip gracefully
+        /// otherwise; `make artifacts` builds them).
+        pub fn artifacts_present(dir: &Path) -> bool {
+            artifact_files(dir).iter().all(|f| f.exists())
         }
-        if centroids.len() != m.k * m.d {
-            bail!("centroids len {} != K×D = {}", centroids.len(), m.k * m.d);
-        }
-        if mask.len() != m.p {
-            bail!("mask len {} != P = {}", mask.len(), m.p);
-        }
-        let x = xla::Literal::vec1(points)
-            .reshape(&[m.p as i64, m.d as i64])
-            .map_err(to_anyhow)?;
-        let c = xla::Literal::vec1(centroids)
-            .reshape(&[m.k as i64, m.d as i64])
-            .map_err(to_anyhow)?;
-        let msk = xla::Literal::vec1(mask);
-        let result = self.step_exe.execute::<xla::Literal>(&[x, c, msk]).map_err(to_anyhow)?;
-        let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
-        // Lowered with return_tuple=True → 3-tuple.
-        let parts = tuple.to_tuple().map_err(to_anyhow)?;
-        if parts.len() != 3 {
-            bail!("expected 3 outputs, got {}", parts.len());
-        }
-        let sums = parts[0].to_vec::<f32>().map_err(to_anyhow)?;
-        let counts = parts[1].to_vec::<f32>().map_err(to_anyhow)?;
-        let inertia = parts[2].to_vec::<f32>().map_err(to_anyhow)?[0];
-        Ok(StepOutput { sums, counts, inertia })
-    }
 
-    /// Reduce-side combine: aggregated sums/counts → next centroids.
-    pub fn combine(&self, sums: &[f32], counts: &[f32], old: &[f32]) -> Result<Vec<f32>> {
-        let m = &self.meta;
-        let s = xla::Literal::vec1(sums)
-            .reshape(&[m.k as i64, m.d as i64])
-            .map_err(to_anyhow)?;
-        let cnt = xla::Literal::vec1(counts);
-        let o = xla::Literal::vec1(old)
-            .reshape(&[m.k as i64, m.d as i64])
-            .map_err(to_anyhow)?;
-        let result =
-            self.combine_exe.execute::<xla::Literal>(&[s, cnt, o]).map_err(to_anyhow)?;
-        let tuple = result[0][0].to_literal_sync().map_err(to_anyhow)?;
-        let out = tuple.to_tuple1().map_err(to_anyhow)?;
-        out.to_vec::<f32>().map_err(to_anyhow)
-    }
+        /// Load + compile the artifacts on the PJRT CPU client.
+        pub fn load(dir: &Path) -> Result<KmeansRuntime> {
+            if !Self::artifacts_present(dir) {
+                return Err(err(format!(
+                    "AOT artifacts not found in {} — run `make artifacts` first",
+                    dir.display()
+                )));
+            }
+            let meta =
+                KmeansMeta::parse(&std::fs::read_to_string(dir.join("kmeans_step.meta"))?)?;
+            let client = xla::PjRtClient::cpu().map_err(err)?;
+            let step_exe = compile(&client, &dir.join("kmeans_step.hlo.txt"))?;
+            let combine_exe = compile(&client, &dir.join("new_centroids.hlo.txt"))?;
+            Ok(KmeansRuntime { client, step_exe, combine_exe, meta })
+        }
 
-    /// PJRT platform (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+        /// Execute one partition step. `points` is row-major `(P, D)` with
+        /// exactly `meta.p × meta.d` elements (pad + mask shorter
+        /// partitions), `centroids` is `(K, D)`, `mask` is `(P,)` of
+        /// 0.0/1.0.
+        pub fn step(
+            &self,
+            points: &[f32],
+            centroids: &[f32],
+            mask: &[f32],
+        ) -> Result<StepOutput> {
+            let m = &self.meta;
+            if points.len() != m.p * m.d {
+                return Err(err(format!("points len {} != P×D = {}", points.len(), m.p * m.d)));
+            }
+            if centroids.len() != m.k * m.d {
+                return Err(err(format!(
+                    "centroids len {} != K×D = {}",
+                    centroids.len(),
+                    m.k * m.d
+                )));
+            }
+            if mask.len() != m.p {
+                return Err(err(format!("mask len {} != P = {}", mask.len(), m.p)));
+            }
+            let x = xla::Literal::vec1(points)
+                .reshape(&[m.p as i64, m.d as i64])
+                .map_err(err)?;
+            let c = xla::Literal::vec1(centroids)
+                .reshape(&[m.k as i64, m.d as i64])
+                .map_err(err)?;
+            let msk = xla::Literal::vec1(mask);
+            let result =
+                self.step_exe.execute::<xla::Literal>(&[x, c, msk]).map_err(err)?;
+            let tuple = result[0][0].to_literal_sync().map_err(err)?;
+            // Lowered with return_tuple=True → 3-tuple.
+            let parts = tuple.to_tuple().map_err(err)?;
+            if parts.len() != 3 {
+                return Err(err(format!("expected 3 outputs, got {}", parts.len())));
+            }
+            let sums = parts[0].to_vec::<f32>().map_err(err)?;
+            let counts = parts[1].to_vec::<f32>().map_err(err)?;
+            let inertia = parts[2].to_vec::<f32>().map_err(err)?[0];
+            Ok(StepOutput { sums, counts, inertia })
+        }
 
-    /// Measure per-point wall time of the compiled step (ns/point) — the
-    /// calibration figure tying `workloads::KMEANS_*` constants to real
-    /// compiled code (EXPERIMENTS.md §Calibration).
-    pub fn measure_point_ns(&self, reps: usize) -> Result<f64> {
-        let m = &self.meta;
-        let points: Vec<f32> = (0..m.p * m.d).map(|i| (i % 97) as f32 * 0.01).collect();
-        let centroids: Vec<f32> = (0..m.k * m.d).map(|i| (i % 89) as f32 * 0.02).collect();
-        let mask = vec![1.0f32; m.p];
-        // Warm-up.
-        self.step(&points, &centroids, &mask)?;
-        let t0 = std::time::Instant::now();
-        for _ in 0..reps {
+        /// Reduce-side combine: aggregated sums/counts → next centroids.
+        pub fn combine(&self, sums: &[f32], counts: &[f32], old: &[f32]) -> Result<Vec<f32>> {
+            let m = &self.meta;
+            let s = xla::Literal::vec1(sums)
+                .reshape(&[m.k as i64, m.d as i64])
+                .map_err(err)?;
+            let cnt = xla::Literal::vec1(counts);
+            let o = xla::Literal::vec1(old)
+                .reshape(&[m.k as i64, m.d as i64])
+                .map_err(err)?;
+            let result =
+                self.combine_exe.execute::<xla::Literal>(&[s, cnt, o]).map_err(err)?;
+            let tuple = result[0][0].to_literal_sync().map_err(err)?;
+            let out = tuple.to_tuple1().map_err(err)?;
+            out.to_vec::<f32>().map_err(err)
+        }
+
+        /// PJRT platform (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Measure per-point wall time of the compiled step (ns/point) —
+        /// the calibration figure tying `workloads::KMEANS_*` constants to
+        /// real compiled code (EXPERIMENTS.md §Calibration).
+        pub fn measure_point_ns(&self, reps: usize) -> Result<f64> {
+            let m = &self.meta;
+            let points: Vec<f32> = (0..m.p * m.d).map(|i| (i % 97) as f32 * 0.01).collect();
+            let centroids: Vec<f32> = (0..m.k * m.d).map(|i| (i % 89) as f32 * 0.02).collect();
+            let mask = vec![1.0f32; m.p];
+            // Warm-up.
             self.step(&points, &centroids, &mask)?;
+            let t0 = std::time::Instant::now();
+            for _ in 0..reps {
+                self.step(&points, &centroids, &mask)?;
+            }
+            Ok(t0.elapsed().as_secs_f64() * 1e9 / (reps as f64 * m.p as f64))
         }
-        Ok(t0.elapsed().as_secs_f64() * 1e9 / (reps as f64 * m.p as f64))
+    }
+
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(err)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(err)
     }
 }
 
-fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path).map_err(to_anyhow)?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client.compile(&comp).map_err(to_anyhow)
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::KmeansRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use super::*;
+
+    const UNAVAILABLE: &str =
+        "built without the `pjrt` feature — the XLA/PJRT runtime is unavailable in this build";
+
+    /// Stub runtime for builds without the `pjrt` feature: same API, but
+    /// `artifacts_present` is always false (nothing can execute them) and
+    /// `load` reports the runtime as unavailable.
+    pub struct KmeansRuntime {
+        pub meta: KmeansMeta,
+    }
+
+    impl KmeansRuntime {
+        /// Default artifact location relative to the repo root.
+        pub fn default_dir() -> PathBuf {
+            PathBuf::from("artifacts")
+        }
+
+        /// Always false in a stub build: even if the HLO files exist on
+        /// disk, this build cannot execute them, so callers take their
+        /// skip path.
+        pub fn artifacts_present(dir: &Path) -> bool {
+            let _ = artifact_files(dir);
+            false
+        }
+
+        pub fn load(_dir: &Path) -> Result<KmeansRuntime> {
+            Err(err(UNAVAILABLE))
+        }
+
+        pub fn step(
+            &self,
+            _points: &[f32],
+            _centroids: &[f32],
+            _mask: &[f32],
+        ) -> Result<StepOutput> {
+            Err(err(UNAVAILABLE))
+        }
+
+        pub fn combine(
+            &self,
+            _sums: &[f32],
+            _counts: &[f32],
+            _old: &[f32],
+        ) -> Result<Vec<f32>> {
+            Err(err(UNAVAILABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (stub)".to_string()
+        }
+
+        pub fn measure_point_ns(&self, _reps: usize) -> Result<f64> {
+            Err(err(UNAVAILABLE))
+        }
+    }
 }
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("{e}")
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::KmeansRuntime;
 
 #[cfg(test)]
 mod tests {
@@ -224,12 +318,13 @@ mod tests {
 
     /// The L3→PJRT integration test: load the real artifacts, run a step,
     /// and check against a Rust-side reference implementation. Skips (with
-    /// a notice) when artifacts haven't been built.
+    /// a notice) when artifacts can't be executed — always the case in a
+    /// stub (no-`pjrt`) build.
     #[test]
     fn pjrt_step_matches_rust_reference() {
         let dir = KmeansRuntime::default_dir();
         if !KmeansRuntime::artifacts_present(&dir) {
-            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            eprintln!("SKIP: artifacts missing or runtime unavailable — run `make artifacts`");
             return;
         }
         let rt = KmeansRuntime::load(&dir).expect("load artifacts");

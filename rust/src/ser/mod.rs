@@ -31,17 +31,28 @@ pub use profile::SerProfile;
 pub use record::Record;
 
 /// Deserialization errors (malformed or truncated streams).
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum SerError {
-    #[error("truncated stream: {0}")]
     Truncated(&'static str),
-    #[error("bad stream: {0}")]
     Bad(&'static str),
-    #[error("unknown class id {0}")]
     UnknownClass(u64),
-    #[error("declared length {declared} exceeds limit {limit}")]
     TooLong { declared: usize, limit: usize },
 }
+
+impl fmt::Display for SerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SerError::Truncated(what) => write!(f, "truncated stream: {what}"),
+            SerError::Bad(what) => write!(f, "bad stream: {what}"),
+            SerError::UnknownClass(id) => write!(f, "unknown class id {id}"),
+            SerError::TooLong { declared, limit } => {
+                write!(f, "declared length {declared} exceeds limit {limit}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SerError {}
 
 /// The `spark.serializer` options.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]

@@ -1,0 +1,779 @@
+//! The persistent event core: a single global event queue scheduling
+//! tasks from **many stages of many jobs at once** over the modeled
+//! cluster.
+//!
+//! [`EventSim`] owns the cluster's contended state — per-node core slots
+//! and the processor-shared disk/NIC flow sets — for the whole lifetime
+//! of a simulation. Stages are [`submit`](EventSim::submit)ted as they
+//! become runnable (the engine submits a stage the moment its DAG
+//! parents complete) and the core interleaves their tasks freely: a
+//! reduce stage of job A shares disks and NICs with a map stage of job B
+//! at fair fluid-flow rates, exactly as concurrent Spark jobs contend on
+//! one cluster.
+//!
+//! **Which** pending task gets a freed core is delegated to a pluggable
+//! [`Scheduler`] — the analogue of Spark's `spark.scheduler.mode`:
+//!
+//! * [`FifoScheduler`] — earlier-submitted jobs win; within a job,
+//!   earlier-submitted stages win (Spark's default FIFO pool ordering by
+//!   job submission time).
+//! * [`FairScheduler`] — the job with the fewest currently running tasks
+//!   wins (the even-share steady state of Spark's fair scheduler pools).
+//!
+//! Time only moves at events (task phase completions and stage
+//! completion barriers); between events every processor-shared flow
+//! progresses at its cached fair-share rate — the standard fluid-flow
+//! DES. Everything is deterministic in `(submission order, SimOpts
+//! seed)`: repeated runs produce bit-identical clocks.
+//!
+//! A stage *completes* `waves × task_overhead` after its last task
+//! finishes (the per-wave scheduling/launch overhead the barrier model
+//! charged at stage granularity); its [`StageCompletion`] is surfaced to
+//! the driver from [`advance`](EventSim::advance), which is the hook the
+//! engine uses to unlock DAG children.
+
+use super::{Phase, SimOpts, StageStats, TaskSpec};
+use crate::cluster::{ClusterSpec, NodeId};
+use crate::util::stats::Summary;
+use crate::util::Prng;
+use std::collections::VecDeque;
+use std::fmt;
+
+/// Identifies one submitting job within an [`EventSim`] (the engine uses
+/// the job's index in the submission batch).
+pub type JobId = usize;
+
+/// Handle for a submitted stage, unique within one [`EventSim`].
+pub type StageHandle = usize;
+
+/// `spark.scheduler.mode` — how concurrently runnable tasks from
+/// different jobs are ordered onto free cores.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SchedulerMode {
+    /// Jobs get cores in submission order (Spark's default).
+    #[default]
+    Fifo,
+    /// Running-task counts are balanced across jobs.
+    Fair,
+}
+
+impl SchedulerMode {
+    pub const ALL: [SchedulerMode; 2] = [SchedulerMode::Fifo, SchedulerMode::Fair];
+
+    pub fn config_name(self) -> &'static str {
+        match self {
+            SchedulerMode::Fifo => "FIFO",
+            SchedulerMode::Fair => "FAIR",
+        }
+    }
+
+    pub fn from_config_name(s: &str) -> Option<SchedulerMode> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "FIFO" => Some(SchedulerMode::Fifo),
+            "FAIR" => Some(SchedulerMode::Fair),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for SchedulerMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.config_name())
+    }
+}
+
+/// What a [`Scheduler`] sees of one runnable stage when picking the next
+/// task to admit.
+#[derive(Clone, Copy, Debug)]
+pub struct StageView {
+    /// Handle of the stage (return this from [`Scheduler::pick`]).
+    pub handle: StageHandle,
+    /// Submitting job.
+    pub job: JobId,
+    /// Global submission sequence number of the stage.
+    pub seq: usize,
+    /// Tasks of this stage still waiting for a core.
+    pub pending: usize,
+    /// Tasks of this stage's *job* currently holding cores.
+    pub job_running: usize,
+}
+
+/// Task-admission policy: given the stages that currently have pending
+/// tasks, choose the stage whose next task gets the free core.
+///
+/// Implementations must be deterministic functions of the view (the
+/// event core's reproducibility guarantee depends on it).
+pub trait Scheduler {
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Pick a stage from `candidates` (all have `pending > 0`; the slice
+    /// is ordered by handle). Returning `None` leaves the cores idle
+    /// until the next submission.
+    fn pick(&mut self, candidates: &[StageView]) -> Option<StageHandle>;
+}
+
+/// FIFO: lowest job id first (jobs are numbered in submission order),
+/// then lowest stage submission sequence.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FifoScheduler;
+
+impl Scheduler for FifoScheduler {
+    fn name(&self) -> &'static str {
+        "FIFO"
+    }
+
+    fn pick(&mut self, candidates: &[StageView]) -> Option<StageHandle> {
+        candidates.iter().min_by_key(|s| (s.job, s.seq)).map(|s| s.handle)
+    }
+}
+
+/// FAIR: the job with the fewest running tasks first (ties: lowest job
+/// id, then submission sequence) — jobs converge to even core shares.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FairScheduler;
+
+impl Scheduler for FairScheduler {
+    fn name(&self) -> &'static str {
+        "FAIR"
+    }
+
+    fn pick(&mut self, candidates: &[StageView]) -> Option<StageHandle> {
+        candidates.iter().min_by_key(|s| (s.job_running, s.job, s.seq)).map(|s| s.handle)
+    }
+}
+
+/// Instantiate the scheduler for a mode.
+pub fn scheduler_for(mode: SchedulerMode) -> Box<dyn Scheduler> {
+    match mode {
+        SchedulerMode::Fifo => Box::new(FifoScheduler),
+        SchedulerMode::Fair => Box::new(FairScheduler),
+    }
+}
+
+/// Emitted by [`EventSim::advance`] when a submitted stage has fully
+/// finished (all tasks done + the stage's wave overhead elapsed).
+#[derive(Clone, Debug)]
+pub struct StageCompletion {
+    pub handle: StageHandle,
+    pub job: JobId,
+    /// Event-clock time of the completion.
+    pub at: f64,
+    pub stats: StageStats,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ResKind {
+    Disk,
+    Nic,
+}
+
+/// Per-task run state.
+struct Running {
+    stage: StageHandle,
+    task_idx: usize,
+    node: NodeId,
+    phase_idx: usize,
+    /// For PS phases: remaining bytes.
+    remaining: f64,
+    /// For fixed-rate phases: absolute end time.
+    end_time: f64,
+    is_ps: bool,
+    res: ResKind,
+    started: f64,
+    /// Rate computed during the event scan, reused by the advance pass
+    /// (rates only change at events).
+    rate: f64,
+}
+
+/// Resource metering accumulated while a task enters phases.
+#[derive(Default)]
+struct Meter {
+    cpu_secs: f64,
+    disk_bytes: f64,
+    net_bytes: f64,
+}
+
+/// Per-stage runtime state inside the core.
+struct StageRt {
+    job: JobId,
+    seq: usize,
+    /// Jittered phase lists, one per task.
+    phases: Vec<Vec<Phase>>,
+    preferred: Vec<Option<NodeId>>,
+    pending: VecDeque<usize>,
+    /// Tasks not yet finished.
+    unfinished: usize,
+    submitted_at: f64,
+    task_durations: Vec<f64>,
+    cpu_secs: f64,
+    disk_bytes: f64,
+    net_bytes: f64,
+    /// `waves × task_overhead`, charged between the last task finish and
+    /// the stage's completion event.
+    completion_overhead: f64,
+    /// Absolute completion time, set when `unfinished` reaches zero.
+    completion_due: Option<f64>,
+    /// The completion event has been surfaced to the driver.
+    emitted: bool,
+}
+
+/// The persistent, multi-stage, multi-job discrete-event simulator core
+/// (see module docs).
+pub struct EventSim<'a> {
+    cluster: &'a ClusterSpec,
+    scheduler: Box<dyn Scheduler>,
+    now: f64,
+    free_cores: Vec<i64>,
+    disk_active: Vec<u32>,
+    nic_active: Vec<u32>,
+    running: Vec<Running>,
+    stages: Vec<StageRt>,
+    /// Running task count per job (indexed by `JobId`).
+    jobs_running: Vec<usize>,
+    /// Round-robin cursor for locality-free placement.
+    rr: usize,
+    /// Admission gate: only rescan pending work when cores were freed (or
+    /// stages submitted) since the last pass.
+    cores_freed: bool,
+}
+
+const EPS: f64 = 1e-9;
+
+impl<'a> EventSim<'a> {
+    pub fn new(cluster: &'a ClusterSpec, scheduler: Box<dyn Scheduler>) -> EventSim<'a> {
+        let nodes = cluster.nodes as usize;
+        EventSim {
+            cluster,
+            scheduler,
+            now: 0.0,
+            free_cores: vec![cluster.cores_per_node as i64; nodes],
+            disk_active: vec![0u32; nodes],
+            nic_active: vec![0u32; nodes],
+            running: Vec::with_capacity(cluster.total_cores() as usize),
+            stages: Vec::new(),
+            jobs_running: Vec::new(),
+            rr: 0,
+            cores_freed: false,
+        }
+    }
+
+    /// Current event-clock time (seconds, simulated).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// The scheduling policy in force.
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler.name()
+    }
+
+    /// Submit a stage of `tasks` on behalf of `job`. CPU jitter is drawn
+    /// per task, in task order, from a stream seeded by `opts.seed` —
+    /// identical to the historical per-stage barrier runner, so a linear
+    /// DAG under FIFO reproduces the barrier path bit for bit.
+    pub fn submit(&mut self, job: JobId, tasks: &[TaskSpec], opts: &SimOpts) -> StageHandle {
+        let mut rng = Prng::new(opts.seed ^ 0xD15C0);
+        let phases: Vec<Vec<Phase>> = tasks
+            .iter()
+            .map(|t| {
+                let factor = 1.0 + opts.jitter * (rng.f64() - 0.5) * 2.0;
+                t.phases
+                    .iter()
+                    .map(|p| match *p {
+                        Phase::Cpu { secs } => Phase::Cpu { secs: secs * factor },
+                        other => other,
+                    })
+                    .collect()
+            })
+            .collect();
+        let preferred: Vec<Option<NodeId>> = tasks.iter().map(|t| t.preferred_node).collect();
+
+        // One wave overhead per `total_cores` tasks, charged between the
+        // last task finish and the completion event (the engine's
+        // downstream stages unlock only then).
+        let waves =
+            (tasks.len() as f64 / self.cluster.total_cores() as f64).ceil().max(1.0);
+        let completion_overhead = waves * self.cluster.task_overhead;
+
+        let handle = self.stages.len();
+        let n = tasks.len();
+        if job >= self.jobs_running.len() {
+            self.jobs_running.resize(job + 1, 0);
+        }
+        self.stages.push(StageRt {
+            job,
+            seq: handle,
+            phases,
+            preferred,
+            pending: (0..n).collect(),
+            unfinished: n,
+            submitted_at: self.now,
+            task_durations: Vec::with_capacity(n),
+            cpu_secs: 0.0,
+            disk_bytes: 0.0,
+            net_bytes: 0.0,
+            completion_overhead,
+            completion_due: if n == 0 { Some(self.now + completion_overhead) } else { None },
+            emitted: false,
+        });
+        self.cores_freed = true;
+        handle
+    }
+
+    /// Advance the clock until the next stage completes; `None` once all
+    /// submitted stages have completed (the sim stays usable — submit
+    /// more and call again).
+    pub fn advance(&mut self) -> Option<StageCompletion> {
+        loop {
+            if let Some(c) = self.pop_due_completion() {
+                return Some(c);
+            }
+            self.admit();
+
+            // ---- Find the next event (task phase end or stage
+            // completion barrier), caching PS fair-share rates ----
+            let mut dt = f64::INFINITY;
+            for r in &mut self.running {
+                let t = if r.is_ps {
+                    let active = match r.res {
+                        ResKind::Disk => self.disk_active[r.node as usize],
+                        ResKind::Nic => self.nic_active[r.node as usize],
+                    } as f64;
+                    let cap = match r.res {
+                        ResKind::Disk => self.cluster.disk_bw,
+                        ResKind::Nic => self.cluster.net_bw,
+                    };
+                    r.rate = cap / active.max(1.0);
+                    r.remaining / r.rate
+                } else {
+                    r.end_time - self.now
+                };
+                if t < dt {
+                    dt = t;
+                }
+            }
+            for s in &self.stages {
+                if let Some(due) = s.completion_due {
+                    if !s.emitted {
+                        let t = due - self.now;
+                        if t < dt {
+                            dt = t;
+                        }
+                    }
+                }
+            }
+            if dt == f64::INFINITY {
+                debug_assert!(self.running.is_empty());
+                return None; // fully idle
+            }
+            let dt = dt.max(0.0);
+            self.now += dt;
+
+            // ---- Advance all active flows by dt (cached pre-event
+            // rates), then extract completions, then start successor
+            // phases. Three separate passes so a phase that starts at
+            // this event is never credited progress for the interval that
+            // just elapsed. ----
+            for r in &mut self.running {
+                if r.is_ps {
+                    r.remaining -= r.rate * dt;
+                }
+            }
+            let mut finished: Vec<Running> = Vec::new();
+            let mut i = 0;
+            while i < self.running.len() {
+                let done = {
+                    let r = &self.running[i];
+                    if r.is_ps { r.remaining <= EPS } else { r.end_time - self.now <= EPS }
+                };
+                if done {
+                    finished.push(self.running.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            for mut r in finished {
+                // Release PS membership for the finished phase.
+                if r.is_ps {
+                    match r.res {
+                        ResKind::Disk => self.disk_active[r.node as usize] -= 1,
+                        ResKind::Nic => self.nic_active[r.node as usize] -= 1,
+                    }
+                }
+                r.phase_idx += 1;
+                let (stage, node, started) = (r.stage, r.node, r.started);
+                let mut meter = Meter::default();
+                let entered = {
+                    let st = &self.stages[stage];
+                    enter_phase(
+                        self.cluster,
+                        &st.phases[r.task_idx],
+                        r,
+                        self.now,
+                        &mut self.disk_active,
+                        &mut self.nic_active,
+                        &mut meter,
+                    )
+                };
+                self.apply_meter(stage, &meter);
+                match entered {
+                    Some(run) => self.running.push(run),
+                    None => self.finish_task(stage, node, started),
+                }
+            }
+        }
+    }
+
+    /// Run every submitted stage to completion, returning completions in
+    /// event order.
+    pub fn drain(&mut self) -> Vec<StageCompletion> {
+        let mut out = Vec::new();
+        while let Some(c) = self.advance() {
+            out.push(c);
+        }
+        out
+    }
+
+    // ---- internals ----
+
+    fn apply_meter(&mut self, stage: StageHandle, meter: &Meter) {
+        let st = &mut self.stages[stage];
+        st.cpu_secs += meter.cpu_secs;
+        st.disk_bytes += meter.disk_bytes;
+        st.net_bytes += meter.net_bytes;
+    }
+
+    /// A task of `stage` finished on `node` (started at `started`).
+    fn finish_task(&mut self, stage: StageHandle, node: NodeId, started: f64) {
+        self.free_cores[node as usize] += 1;
+        self.cores_freed = true;
+        let job = self.stages[stage].job;
+        self.jobs_running[job] -= 1;
+        let st = &mut self.stages[stage];
+        st.task_durations.push(self.now - started + self.cluster.task_overhead);
+        st.unfinished -= 1;
+        if st.unfinished == 0 {
+            st.completion_due = Some(self.now + st.completion_overhead);
+        }
+    }
+
+    fn any_free_core(&self) -> bool {
+        self.free_cores.iter().any(|&c| c > 0)
+    }
+
+    /// Emit the earliest stage completion that is due at the current
+    /// clock (ties: lowest handle).
+    fn pop_due_completion(&mut self) -> Option<StageCompletion> {
+        let mut best: Option<(f64, StageHandle)> = None;
+        for (h, s) in self.stages.iter().enumerate() {
+            if s.emitted {
+                continue;
+            }
+            if let Some(due) = s.completion_due {
+                if due <= self.now + EPS && best.map(|(bd, _)| due < bd).unwrap_or(true) {
+                    best = Some((due, h));
+                }
+            }
+        }
+        let (due, h) = best?;
+        let st = &mut self.stages[h];
+        st.emitted = true;
+        let stats = StageStats {
+            duration: due - st.submitted_at,
+            task_time: Summary::from(std::mem::take(&mut st.task_durations)),
+            cpu_secs: st.cpu_secs,
+            disk_bytes: st.disk_bytes,
+            net_bytes: st.net_bytes,
+            tasks: st.phases.len(),
+        };
+        Some(StageCompletion { handle: h, job: st.job, at: due, stats })
+    }
+
+    /// Fill free cores from pending stages, in scheduler order.
+    fn admit(&mut self) {
+        if !self.cores_freed {
+            return;
+        }
+        self.cores_freed = false;
+        loop {
+            if !self.any_free_core() {
+                break;
+            }
+            let candidates: Vec<StageView> = self
+                .stages
+                .iter()
+                .enumerate()
+                .filter(|(_, s)| !s.pending.is_empty())
+                .map(|(h, s)| StageView {
+                    handle: h,
+                    job: s.job,
+                    seq: s.seq,
+                    pending: s.pending.len(),
+                    job_running: self.jobs_running[s.job],
+                })
+                .collect();
+            if candidates.is_empty() {
+                break;
+            }
+            let Some(h) = self.scheduler.pick(&candidates) else {
+                break;
+            };
+            debug_assert!(!self.stages[h].pending.is_empty(), "scheduler picked an idle stage");
+            let ti = self.stages[h].pending.pop_front().expect("candidate has pending tasks");
+            let node = self.pick_node(self.stages[h].preferred[ti]);
+            self.free_cores[node as usize] -= 1;
+            self.jobs_running[self.stages[h].job] += 1;
+            let r = Running {
+                stage: h,
+                task_idx: ti,
+                node,
+                phase_idx: 0,
+                remaining: 0.0,
+                end_time: 0.0,
+                is_ps: false,
+                res: ResKind::Disk,
+                started: self.now,
+                rate: 0.0,
+            };
+            let mut meter = Meter::default();
+            let entered = {
+                let st = &self.stages[h];
+                enter_phase(
+                    self.cluster,
+                    &st.phases[ti],
+                    r,
+                    self.now,
+                    &mut self.disk_active,
+                    &mut self.nic_active,
+                    &mut meter,
+                )
+            };
+            self.apply_meter(h, &meter);
+            match entered {
+                Some(run) => self.running.push(run),
+                None => self.finish_task(h, node, self.now), // zero-work task
+            }
+        }
+    }
+
+    /// Preferred node if it has a free core, else round-robin scan. Call
+    /// only when some core is free.
+    fn pick_node(&mut self, preferred: Option<NodeId>) -> NodeId {
+        let nodes = self.free_cores.len();
+        if let Some(p) = preferred {
+            let p = p as usize % nodes;
+            if self.free_cores[p] > 0 {
+                return p as NodeId;
+            }
+        }
+        for k in 0..nodes {
+            let cand = (self.rr + k) % nodes;
+            if self.free_cores[cand] > 0 {
+                self.rr = (cand + 1) % nodes;
+                return cand as NodeId;
+            }
+        }
+        unreachable!("pick_node called with no free core")
+    }
+}
+
+/// Start the task's next non-noop phase (or return `None` when all
+/// phases are done). NaN-valued phases are treated as noops — see
+/// [`Phase::is_noop`].
+fn enter_phase(
+    cluster: &ClusterSpec,
+    phases: &[Phase],
+    mut r: Running,
+    now: f64,
+    disk_active: &mut [u32],
+    nic_active: &mut [u32],
+    meter: &mut Meter,
+) -> Option<Running> {
+    loop {
+        let Some(p) = phases.get(r.phase_idx) else {
+            return None; // all phases done
+        };
+        if p.is_noop() {
+            r.phase_idx += 1;
+            continue;
+        }
+        match *p {
+            Phase::Cpu { secs } => {
+                let d = secs / cluster.cpu_speed;
+                meter.cpu_secs += d;
+                r.is_ps = false;
+                r.end_time = now + d;
+            }
+            Phase::Fixed { secs } => {
+                r.is_ps = false;
+                r.end_time = now + secs;
+            }
+            Phase::DiskRead { bytes } | Phase::DiskWrite { bytes } => {
+                meter.disk_bytes += bytes;
+                r.is_ps = true;
+                r.res = ResKind::Disk;
+                r.remaining = bytes;
+                disk_active[r.node as usize] += 1;
+            }
+            Phase::NetIn { bytes } => {
+                meter.net_bytes += bytes;
+                r.is_ps = true;
+                r.res = ResKind::Nic;
+                r.remaining = bytes;
+                nic_active[r.node as usize] += 1;
+            }
+        }
+        return Some(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quiet() -> ClusterSpec {
+        let mut c = ClusterSpec::mini();
+        c.task_overhead = 0.0;
+        c
+    }
+
+    fn opts0() -> SimOpts {
+        SimOpts { jitter: 0.0, seed: 1 }
+    }
+
+    fn cpu_tasks(n: usize, secs: f64) -> Vec<TaskSpec> {
+        (0..n).map(|_| TaskSpec::new(vec![Phase::Cpu { secs }])).collect()
+    }
+
+    #[test]
+    fn two_stages_interleave_on_shared_cores() {
+        // 8 cores; two stages of 8 × 1 s submitted together under FAIR:
+        // each job gets 4 cores → both finish at t = 2.
+        let c = quiet();
+        let mut sim = EventSim::new(&c, Box::new(FairScheduler));
+        sim.submit(0, &cpu_tasks(8, 1.0), &opts0());
+        sim.submit(1, &cpu_tasks(8, 1.0), &opts0());
+        let done = sim.drain();
+        assert_eq!(done.len(), 2);
+        for d in &done {
+            assert!((d.at - 2.0).abs() < 1e-9, "fair finish at {}", d.at);
+        }
+    }
+
+    #[test]
+    fn fifo_prioritizes_the_earlier_job() {
+        // Same two stages under FIFO: job 0 takes all 8 cores and
+        // finishes at t = 1; job 1 runs after, finishing at t = 2.
+        let c = quiet();
+        let mut sim = EventSim::new(&c, Box::new(FifoScheduler));
+        sim.submit(0, &cpu_tasks(8, 1.0), &opts0());
+        sim.submit(1, &cpu_tasks(8, 1.0), &opts0());
+        let done = sim.drain();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].job, 0);
+        assert!((done[0].at - 1.0).abs() < 1e-9, "{}", done[0].at);
+        assert_eq!(done[1].job, 1);
+        assert!((done[1].at - 2.0).abs() < 1e-9, "{}", done[1].at);
+    }
+
+    #[test]
+    fn submission_mid_flight_shares_the_disk() {
+        // Job 0 writes 100 MB alone on node 0 (disk 100 MB/s). Drain it,
+        // then submit two concurrent writers on the same node: they share
+        // the disk and take 2 s.
+        let mut c = quiet();
+        c.disk_bw = 100.0e6;
+        let mut sim = EventSim::new(&c, Box::new(FifoScheduler));
+        sim.submit(0, &[TaskSpec::new(vec![Phase::DiskWrite { bytes: 100e6 }]).on(0)], &opts0());
+        let first = sim.advance().unwrap();
+        assert!((first.at - 1.0).abs() < 1e-6);
+        sim.submit(
+            1,
+            &[
+                TaskSpec::new(vec![Phase::DiskWrite { bytes: 100e6 }]).on(0),
+                TaskSpec::new(vec![Phase::DiskWrite { bytes: 100e6 }]).on(0),
+            ],
+            &opts0(),
+        );
+        let second = sim.advance().unwrap();
+        assert!((second.at - 3.0).abs() < 1e-6, "{}", second.at);
+        assert!(sim.advance().is_none());
+    }
+
+    #[test]
+    fn completion_waits_for_wave_overhead() {
+        let mut c = quiet();
+        c.task_overhead = 0.5;
+        // 16 tasks on 8 cores → 2 waves → completion at 2×1s + 2×0.5s.
+        let mut sim = EventSim::new(&c, Box::new(FifoScheduler));
+        sim.submit(0, &cpu_tasks(16, 1.0), &opts0());
+        let done = sim.advance().unwrap();
+        assert!((done.at - 3.0).abs() < 1e-9, "{}", done.at);
+        assert!((done.stats.duration - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stage_completes_immediately() {
+        let c = quiet();
+        let mut sim = EventSim::new(&c, Box::new(FifoScheduler));
+        let h = sim.submit(0, &[], &opts0());
+        let done = sim.advance().unwrap();
+        assert_eq!(done.handle, h);
+        assert!(done.at < 1e-9);
+        assert_eq!(done.stats.tasks, 0);
+        assert!(sim.advance().is_none());
+    }
+
+    #[test]
+    fn scheduler_mode_parses() {
+        assert_eq!(SchedulerMode::from_config_name("fifo"), Some(SchedulerMode::Fifo));
+        assert_eq!(SchedulerMode::from_config_name("FAIR"), Some(SchedulerMode::Fair));
+        assert_eq!(SchedulerMode::from_config_name("fair "), Some(SchedulerMode::Fair));
+        assert_eq!(SchedulerMode::from_config_name("lottery"), None);
+        assert_eq!(SchedulerMode::Fifo.config_name(), "FIFO");
+        assert_eq!(scheduler_for(SchedulerMode::Fair).name(), "FAIR");
+    }
+
+    #[test]
+    fn event_core_is_deterministic_across_runs() {
+        let c = ClusterSpec::mini();
+        let mk = || {
+            let mut sim = EventSim::new(&c, Box::new(FairScheduler));
+            for j in 0..3usize {
+                let tasks: Vec<TaskSpec> = (0..10)
+                    .map(|i| {
+                        TaskSpec::new(vec![
+                            Phase::Cpu { secs: 0.1 + (i % 3) as f64 * 0.05 },
+                            Phase::DiskWrite { bytes: 2e6 },
+                            Phase::NetIn { bytes: 1e6 },
+                        ])
+                    })
+                    .collect();
+                sim.submit(j, &tasks, &SimOpts { jitter: 0.08, seed: 7 + j as u64 });
+            }
+            sim.drain().iter().map(|d| (d.handle, d.at)).collect::<Vec<_>>()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "event core must reproduce bit-identically");
+    }
+
+    #[test]
+    fn nan_phases_are_noops() {
+        let c = quiet();
+        let mut sim = EventSim::new(&c, Box::new(FifoScheduler));
+        sim.submit(
+            0,
+            &[TaskSpec::new(vec![
+                Phase::Cpu { secs: f64::NAN },
+                Phase::DiskRead { bytes: f64::NAN },
+                Phase::Cpu { secs: 1.0 },
+            ])],
+            &opts0(),
+        );
+        let done = sim.advance().unwrap();
+        assert!(done.at.is_finite(), "NaN phases must not poison the clock");
+        assert!((done.at - 1.0).abs() < 1e-9, "{}", done.at);
+    }
+}

@@ -1,7 +1,14 @@
 //! Discrete-event cluster simulator.
 //!
-//! Executes one *stage* (a set of independent tasks, as produced by the
-//! DAG scheduler) over the modeled cluster:
+//! The heart of the module is the **persistent event core**
+//! ([`event::EventSim`]): a single global event queue that owns per-node
+//! core slots and processor-shared disk/NIC state and schedules task
+//! submissions from **multiple stages and multiple jobs at once**. Which
+//! pending task gets a freed core is decided by a pluggable
+//! [`Scheduler`] policy — [`FifoScheduler`] and [`FairScheduler`] model
+//! Spark's `spark.scheduler.mode`.
+//!
+//! Resource model (unchanged from the original per-stage simulator):
 //!
 //! * **cores are slots** — each node admits at most `cores_per_node`
 //!   concurrent tasks, and a task holds its core for its entire lifetime
@@ -20,11 +27,20 @@
 //! modules) translates workload × `SparkConf` into these phase lists;
 //! this module knows nothing about Spark semantics — it only schedules
 //! and meters.
+//!
+//! [`run_stage`] survives as a convenience wrapper that submits one
+//! stage into a fresh event core and drains it — exactly the historical
+//! barrier behavior, now a special case of the general core.
+
+pub mod event;
+
+pub use event::{
+    scheduler_for, EventSim, FairScheduler, FifoScheduler, JobId, Scheduler, SchedulerMode,
+    StageCompletion, StageHandle, StageView,
+};
 
 use crate::cluster::{ClusterSpec, NodeId};
 use crate::util::stats::Summary;
-use crate::util::Prng;
-use std::collections::VecDeque;
 
 /// One step in a task's lifecycle.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -43,11 +59,16 @@ pub enum Phase {
 }
 
 impl Phase {
-    fn is_noop(&self) -> bool {
+    /// True when the phase carries no work — including **NaN** values: a
+    /// malformed cost model must degrade to a skipped phase, not poison
+    /// the event clock (`now + NaN` would wedge the whole simulation).
+    pub(crate) fn is_noop(&self) -> bool {
         match *self {
-            Phase::Cpu { secs } | Phase::Fixed { secs } => secs <= 0.0,
+            // NOTE: `!(x > 0.0)` is deliberately NaN-safe — it treats
+            // NaN like 0, where `x <= 0.0` would treat NaN as real work.
+            Phase::Cpu { secs } | Phase::Fixed { secs } => !(secs > 0.0),
             Phase::DiskRead { bytes } | Phase::DiskWrite { bytes } | Phase::NetIn { bytes } => {
-                bytes <= 0.0
+                !(bytes > 0.0)
             }
         }
     }
@@ -58,8 +79,7 @@ impl Phase {
 pub struct TaskSpec {
     pub phases: Vec<Phase>,
     /// Preferred node (data locality); the scheduler honors it when that
-    /// node has a free core at admission time (Spark's locality-wait
-    /// behavior collapses to this under a barrier scheduler).
+    /// node has a free core at admission time.
     pub preferred_node: Option<NodeId>,
 }
 
@@ -77,7 +97,8 @@ impl TaskSpec {
 /// Aggregated result of running one stage.
 #[derive(Clone, Debug)]
 pub struct StageStats {
-    /// Wall-clock stage duration (seconds, simulated).
+    /// Wall-clock stage duration (seconds, simulated): submission to
+    /// completion, including the stage's wave overhead.
     pub duration: f64,
     /// Per-task durations.
     pub task_time: Summary,
@@ -107,288 +128,20 @@ impl Default for SimOpts {
     }
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum ResKind {
-    Disk,
-    Nic,
-}
-
-/// Per-task run state.
-struct Running {
-    task_idx: usize,
-    node: NodeId,
-    phase_idx: usize,
-    /// For PS phases: remaining bytes. For fixed-rate phases: end time.
-    remaining: f64,
-    end_time: f64,
-    is_ps: bool,
-    res: ResKind,
-    started: f64,
-    /// Rate computed during the event scan, reused by the advance pass
-    /// (rates only change at events — §Perf optimization #2).
-    rate: f64,
-}
-
-/// Run a stage of `tasks` on `cluster`; returns aggregate stats.
+/// Run one stage of `tasks` on `cluster` to completion; returns its
+/// aggregate stats.
 ///
-/// The caller is responsible for splitting a job into stages (barriers)
-/// and for translating Spark semantics into phases.
+/// Convenience wrapper over [`EventSim`]: a fresh core, one submitted
+/// stage, drained — the historical barrier-execution behavior. Callers
+/// that need stage overlap, multiple jobs, or scheduling policies drive
+/// [`EventSim`] directly (as `engine::run` does).
 pub fn run_stage(cluster: &ClusterSpec, tasks: &[TaskSpec], opts: &SimOpts) -> StageStats {
-    let mut rng = Prng::new(opts.seed ^ 0xD15C0);
-    // Pre-jitter CPU phases per task (deterministic in seed + index).
-    let jittered: Vec<Vec<Phase>> = tasks
-        .iter()
-        .map(|t| {
-            let factor = 1.0 + opts.jitter * (rng.f64() - 0.5) * 2.0;
-            t.phases
-                .iter()
-                .map(|p| match *p {
-                    Phase::Cpu { secs } => Phase::Cpu { secs: secs * factor },
-                    other => other,
-                })
-                .collect()
-        })
-        .collect();
-
-    let nodes = cluster.nodes as usize;
-    let mut free_cores = vec![cluster.cores_per_node as i64; nodes];
-    let mut disk_active = vec![0u32; nodes];
-    let mut nic_active = vec![0u32; nodes];
-
-    let mut pending: VecDeque<usize> = (0..tasks.len()).collect();
-    let mut running: Vec<Running> = Vec::with_capacity(cluster.total_cores() as usize);
-    let mut now = 0.0f64;
-
-    let mut task_durations = Vec::with_capacity(tasks.len());
-    let mut cpu_secs = 0.0;
-    let mut disk_bytes = 0.0;
-    let mut net_bytes = 0.0;
-    // Round-robin cursor for locality-free placement.
-    let mut rr: usize = 0;
-    // Admission gate: only rescan the pending queue when cores were freed
-    // since the last pass (keeps the event loop O(events × flows) instead
-    // of O(events × pending)). §Perf optimization #1.
-    let mut cores_freed = true;
-
-    // Start the first phase of a task (or finish it if it has none).
-    // Returns Some(run state) or None when the task completed instantly.
-    fn enter_phase(
-        cluster: &ClusterSpec,
-        phases: &[Phase],
-        mut r: Running,
-        now: f64,
-        disk_active: &mut [u32],
-        nic_active: &mut [u32],
-        cpu_secs: &mut f64,
-        disk_bytes: &mut f64,
-        net_bytes: &mut f64,
-    ) -> Option<Running> {
-        loop {
-            let Some(p) = phases.get(r.phase_idx) else {
-                return None; // all phases done
-            };
-            if p.is_noop() {
-                r.phase_idx += 1;
-                continue;
-            }
-            match *p {
-                Phase::Cpu { secs } => {
-                    let d = secs / cluster.cpu_speed;
-                    *cpu_secs += d;
-                    r.is_ps = false;
-                    r.end_time = now + d;
-                }
-                Phase::Fixed { secs } => {
-                    r.is_ps = false;
-                    r.end_time = now + secs;
-                }
-                Phase::DiskRead { bytes } | Phase::DiskWrite { bytes } => {
-                    *disk_bytes += bytes;
-                    r.is_ps = true;
-                    r.res = ResKind::Disk;
-                    r.remaining = bytes;
-                    disk_active[r.node as usize] += 1;
-                }
-                Phase::NetIn { bytes } => {
-                    *net_bytes += bytes;
-                    r.is_ps = true;
-                    r.res = ResKind::Nic;
-                    r.remaining = bytes;
-                    nic_active[r.node as usize] += 1;
-                }
-            }
-            return Some(r);
-        }
-    }
-
-    loop {
-        // ---- Admission: fill free cores from the pending queue ----
-        let mut admitted_any = cores_freed;
-        cores_freed = false;
-        while admitted_any && !pending.is_empty() {
-            admitted_any = false;
-            let n_pending = pending.len();
-            for _ in 0..n_pending {
-                let ti = pending.pop_front().unwrap();
-                // Choose node: preferred if free, else round-robin scan.
-                let node = match tasks[ti].preferred_node {
-                    Some(p) if free_cores[p as usize % nodes] > 0 => p % nodes as u32,
-                    _ => {
-                        let mut chosen = None;
-                        for k in 0..nodes {
-                            let cand = (rr + k) % nodes;
-                            if free_cores[cand] > 0 {
-                                chosen = Some(cand as u32);
-                                break;
-                            }
-                        }
-                        match chosen {
-                            Some(c) => {
-                                rr = (c as usize + 1) % nodes;
-                                c
-                            }
-                            None => {
-                                pending.push_front(ti);
-                                break;
-                            }
-                        }
-                    }
-                };
-                free_cores[node as usize] -= 1;
-                let r = Running {
-                    task_idx: ti,
-                    node,
-                    phase_idx: 0,
-                    remaining: 0.0,
-                    end_time: 0.0,
-                    is_ps: false,
-                    res: ResKind::Disk,
-                    started: now,
-                    rate: 0.0,
-                };
-                match enter_phase(
-                    cluster,
-                    &jittered[ti],
-                    r,
-                    now,
-                    &mut disk_active,
-                    &mut nic_active,
-                    &mut cpu_secs,
-                    &mut disk_bytes,
-                    &mut net_bytes,
-                ) {
-                    Some(run) => running.push(run),
-                    None => {
-                        // Zero-work task: completes instantly.
-                        task_durations.push(cluster.task_overhead);
-                        free_cores[node as usize] += 1;
-                        cores_freed = true;
-                    }
-                }
-                admitted_any = true;
-            }
-        }
-
-        if running.is_empty() {
-            debug_assert!(pending.is_empty());
-            break;
-        }
-
-        // ---- Find the next completion event (computing and caching each
-        // PS flow's current fair-share rate on the way) ----
-        let mut dt = f64::INFINITY;
-        for r in &mut running {
-            let t = if r.is_ps {
-                let active = match r.res {
-                    ResKind::Disk => disk_active[r.node as usize],
-                    ResKind::Nic => nic_active[r.node as usize],
-                } as f64;
-                let cap = match r.res {
-                    ResKind::Disk => cluster.disk_bw,
-                    ResKind::Nic => cluster.net_bw,
-                };
-                r.rate = cap / active.max(1.0);
-                r.remaining / r.rate
-            } else {
-                r.end_time - now
-            };
-            if t < dt {
-                dt = t;
-            }
-        }
-        let dt = dt.max(0.0);
-        now += dt;
-
-        // ---- Advance all active flows by dt (cached pre-event rates),
-        // then extract completions, then start successor phases. Three
-        // separate passes so a phase that starts at this event is never
-        // credited progress for the interval that just elapsed.
-        const EPS: f64 = 1e-9;
-        for r in &mut running {
-            if r.is_ps {
-                r.remaining -= r.rate * dt;
-            }
-        }
-        let mut finished: Vec<Running> = Vec::new();
-        let mut i = 0;
-        while i < running.len() {
-            let done = {
-                let r = &running[i];
-                if r.is_ps { r.remaining <= EPS } else { r.end_time - now <= EPS }
-            };
-            if done {
-                finished.push(running.swap_remove(i));
-            } else {
-                i += 1;
-            }
-        }
-        for mut r in finished {
-            // Release PS membership for the finished phase.
-            if r.is_ps {
-                match r.res {
-                    ResKind::Disk => disk_active[r.node as usize] -= 1,
-                    ResKind::Nic => nic_active[r.node as usize] -= 1,
-                }
-            }
-            r.phase_idx += 1;
-            let (node, started) = (r.node, r.started);
-            match enter_phase(
-                cluster,
-                &jittered[r.task_idx],
-                r,
-                now,
-                &mut disk_active,
-                &mut nic_active,
-                &mut cpu_secs,
-                &mut disk_bytes,
-                &mut net_bytes,
-            ) {
-                Some(run) => running.push(run),
-                None => {
-                    // Task finished → free its core.
-                    task_durations.push(now - started + cluster.task_overhead);
-                    free_cores[node as usize] += 1;
-                    cores_freed = true;
-                }
-            }
-        }
-    }
-
-    // Stage ends when the last task finishes, plus per-task overhead
-    // amortized at stage level: overhead delays each wave's start; model
-    // as one overhead per wave (tasks / cores rounded up).
-    let waves =
-        (tasks.len() as f64 / cluster.total_cores() as f64).ceil().max(1.0);
-    let duration = now + waves * cluster.task_overhead;
-
-    StageStats {
-        duration,
-        task_time: Summary::from(task_durations),
-        cpu_secs,
-        disk_bytes,
-        net_bytes,
-        tasks: tasks.len(),
-    }
+    let mut sim = EventSim::new(cluster, Box::new(FifoScheduler));
+    let handle = sim.submit(0, tasks, opts);
+    let done = sim.advance().expect("a submitted stage always completes");
+    debug_assert_eq!(done.handle, handle);
+    debug_assert!(sim.advance().is_none());
+    done.stats
 }
 
 #[cfg(test)]
@@ -512,6 +265,24 @@ mod tests {
         assert!(s.duration < 1e-9);
         let s = run_stage(&c, &[], &opts0());
         assert_eq!(s.tasks, 0);
+    }
+
+    #[test]
+    fn nan_phase_values_cannot_hang_the_loop() {
+        // A malformed cost model handing NaN bytes/seconds degrades to a
+        // skipped phase (satellite guard), never a wedged event loop.
+        let mut c = ClusterSpec::mini();
+        quiet(&mut c);
+        let tasks = vec![TaskSpec::new(vec![
+            Phase::Cpu { secs: f64::NAN },
+            Phase::DiskWrite { bytes: f64::NAN },
+            Phase::NetIn { bytes: f64::NAN },
+            Phase::Fixed { secs: f64::NAN },
+            Phase::Cpu { secs: 0.25 },
+        ])];
+        let s = run_stage(&c, &tasks, &opts0());
+        assert!(s.duration.is_finite());
+        assert!((s.duration - 0.25).abs() < 1e-9, "{}", s.duration);
     }
 
     #[test]

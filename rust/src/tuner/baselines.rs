@@ -6,6 +6,7 @@
 //! considers (the paper frames it as 2⁹ = 512 binary combinations; the
 //! actual value grid below has 2×3×2×3×2×3 = 216 points).
 
+use super::parallel::TrialExecutor;
 use super::{Runner, TuneOutcome, Trial};
 use crate::conf::SparkConf;
 use crate::util::Prng;
@@ -75,6 +76,58 @@ pub fn exhaustive(runner: &mut dyn Runner) -> TuneOutcome {
             best_conf = conf.clone();
         }
         trials.push(Trial { step: "grid", delta: Vec::new(), duration: t, improvement, kept });
+    }
+    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0 }
+}
+
+/// [`exhaustive`] with the trial runs fanned out over `exec`'s threads.
+/// Every simulated run is pure in `(conf, seed)`, so the outcome is
+/// identical to the sequential fold — only wall-clock changes.
+pub fn exhaustive_parallel<F>(eval: F, exec: &TrialExecutor) -> TuneOutcome
+where
+    F: Fn(&SparkConf) -> f64 + Sync,
+{
+    let default = SparkConf::default();
+    let mut confs = vec![default.clone()];
+    confs.extend((0..grid_size()).map(grid_conf).filter(|c| *c != default));
+    let results = exec.evaluate(&confs, eval);
+    fold_trials(confs, results, "grid")
+}
+
+/// [`random_search`] with the trial runs fanned out over `exec`'s
+/// threads; same draw sequence, identical outcome.
+pub fn random_search_parallel<F>(
+    eval: F,
+    budget: usize,
+    seed: u64,
+    exec: &TrialExecutor,
+) -> TuneOutcome
+where
+    F: Fn(&SparkConf) -> f64 + Sync,
+{
+    let mut rng = Prng::new(seed);
+    let mut confs = vec![SparkConf::default()];
+    confs.extend((0..budget).map(|_| grid_conf(rng.below(grid_size() as u64) as usize)));
+    let results = exec.evaluate(&confs, eval);
+    fold_trials(confs, results, "random")
+}
+
+/// Sequential incumbent fold shared by the parallel baselines: entry 0
+/// is the default-configuration baseline, the rest are trials — the
+/// exact fold `exhaustive`/`random_search` perform while running.
+fn fold_trials(confs: Vec<SparkConf>, results: Vec<f64>, step: &'static str) -> TuneOutcome {
+    let baseline = results[0];
+    let mut best = baseline;
+    let mut best_conf = confs[0].clone();
+    let mut trials = Vec::with_capacity(results.len().saturating_sub(1));
+    for (conf, &t) in confs.iter().zip(results.iter()).skip(1) {
+        let improvement = if t.is_finite() { (best - t) / best } else { 0.0 };
+        let kept = t < best;
+        if kept {
+            best = t;
+            best_conf = conf.clone();
+        }
+        trials.push(Trial { step, delta: Vec::new(), duration: t, improvement, kept });
     }
     TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0 }
 }
@@ -155,6 +208,40 @@ mod tests {
         assert!(big.best <= small.best);
         assert!(big.best == 80.0, "60 draws should find kryo: {}", big.best);
         let _ = evals;
+    }
+
+    #[test]
+    fn parallel_baselines_match_sequential() {
+        use crate::cluster::ClusterSpec;
+        use crate::engine::run;
+        use crate::sim::SimOpts;
+        use crate::workloads::Workload;
+
+        let cluster = ClusterSpec::mini();
+        let job = Workload::MiniSortByKey.job();
+        let eval = |c: &SparkConf| {
+            run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 }).effective_duration()
+        };
+        let exec = TrialExecutor::new(4);
+
+        let mut seq_runner = |c: &SparkConf| eval(c);
+        let seq = exhaustive(&mut seq_runner);
+        let par = exhaustive_parallel(eval, &exec);
+        assert_eq!(seq.baseline, par.baseline);
+        assert_eq!(seq.best, par.best, "parallel grid must find the identical optimum");
+        assert_eq!(seq.best_conf, par.best_conf);
+        assert_eq!(seq.trials.len(), par.trials.len());
+        for (a, b) in seq.trials.iter().zip(&par.trials) {
+            assert_eq!(a.duration, b.duration);
+            assert_eq!(a.kept, b.kept);
+        }
+
+        let mut seq_runner = |c: &SparkConf| eval(c);
+        let seq = random_search(&mut seq_runner, 25, 0xAB1A);
+        let par = random_search_parallel(eval, 25, 0xAB1A, &exec);
+        assert_eq!(seq.best, par.best);
+        assert_eq!(seq.best_conf, par.best_conf);
+        assert_eq!(seq.trials.len(), par.trials.len());
     }
 
     #[test]

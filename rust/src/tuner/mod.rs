@@ -27,9 +27,16 @@
 //! The tuner is generic over a [`Runner`] (configuration → effective
 //! runtime) so it drives the simulator in production and synthetic
 //! response surfaces in tests; [`baselines`] provides exhaustive-grid and
-//! random search over the same space for experiment E8.
+//! random search over the same space for experiment E8, and
+//! [`parallel::TrialExecutor`] fans independent trials (grid/random, and
+//! the methodology's step-3/4 siblings) out over OS threads — simulated
+//! runs are pure in `(conf, seed)`, so the results are bit-identical to
+//! sequential evaluation.
 
 pub mod baselines;
+pub mod parallel;
+
+pub use parallel::TrialExecutor;
 
 use crate::conf::SparkConf;
 

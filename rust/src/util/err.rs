@@ -1,0 +1,33 @@
+//! Minimal error plumbing (the offline crate set has no `anyhow`).
+//!
+//! [`DynError`] is the crate's catch-all error for fallible I/O-heavy
+//! paths (Real mode, the PJRT runtime): any `std::error::Error` converts
+//! via `?`, and [`err`] builds one from a message or a foreign
+//! displayable error.
+
+/// Boxed dynamic error, `Send + Sync` so results cross threads.
+pub type DynError = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Crate-wide result alias with a [`DynError`] default.
+pub type Result<T, E = DynError> = std::result::Result<T, E>;
+
+/// Build a [`DynError`] from anything displayable.
+pub fn err(msg: impl std::fmt::Display) -> DynError {
+    msg.to_string().into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_and_converts() {
+        let e = err("boom");
+        assert_eq!(e.to_string(), "boom");
+        fn io_path() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+            Ok(())
+        }
+        assert!(io_path().unwrap_err().to_string().contains("disk on fire"));
+    }
+}

@@ -6,6 +6,7 @@
 //! generators need (uniform, zipf, normal, byte-strings with controlled
 //! entropy — entropy control matters because codec ratios depend on it).
 
+pub mod err;
 pub mod prng;
 pub mod stats;
 pub mod units;

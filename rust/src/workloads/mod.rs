@@ -108,6 +108,21 @@ pub fn aggregate_by_key(records: u64, distinct_keys: u64, partitions: u32) -> Jo
         .op(Op::Action)
 }
 
+/// A multi-tenant scenario: `n` identical sort-by-key jobs submitted to
+/// one cluster at `t = 0`, contending for cores under the configured
+/// `spark.scheduler.mode` (see [`crate::engine::run_all`]). Identical
+/// jobs keep the FIFO-vs-FAIR comparison clean: under FIFO completion
+/// times stagger by submission order, under FAIR they bunch together.
+pub fn multi_tenant(n: u32, records_per_job: u64, partitions: u32) -> Vec<Job> {
+    (0..n)
+        .map(|i| {
+            let mut job = sort_by_key(records_per_job, partitions);
+            job.name = format!("tenant{i}-{}", job.name);
+            job
+        })
+        .collect()
+}
+
 /// Named paper workload instances — everything the experiments reference.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Workload {
