@@ -10,7 +10,7 @@ use sparktune::sim::SimOpts;
 use sparktune::workloads::Workload;
 
 fn once(w: Workload, conf: &SparkConf) -> Option<(f64, Vec<(String, f64)>)> {
-    let r = run(&w.job(), conf, &ClusterSpec::marenostrum(), &SimOpts { jitter: 0.0, seed: 1 });
+    let r = run(&w.job(), conf, &ClusterSpec::marenostrum(), &SimOpts { jitter: 0.0, seed: 1, straggler: None });
     if r.crashed.is_some() {
         return None;
     }

@@ -7,7 +7,10 @@
 //! ```
 
 use sparktune::cluster::ClusterSpec;
+use sparktune::conf::SparkConf;
+use sparktune::engine::run;
 use sparktune::experiments::cases::sim_runner;
+use sparktune::sim::{SimOpts, Straggler};
 use sparktune::tuner::{tune, TuneOpts};
 use sparktune::workloads::Workload;
 
@@ -21,7 +24,7 @@ fn main() {
 
     let cluster = ClusterSpec::marenostrum();
     let mut runner = sim_runner(workload, &cluster);
-    let out = tune(&mut runner, &TuneOpts { threshold, short_version: false });
+    let out = tune(&mut runner, &TuneOpts { threshold, short_version: false, straggler_aware: false });
 
     println!(
         "Fig-4 methodology on {} (keep-if-improves-by > {:.0}%):\n",
@@ -53,5 +56,31 @@ fn main() {
     }
     if out.final_settings().is_empty() {
         println!("  <defaults — nothing cleared the threshold>");
+    }
+
+    // The task-granular knobs ride the same trial loop: re-run the
+    // decision list with the straggler-aware steps on a *jittered*
+    // cluster (2 % of tasks 8× slower) — `spark.speculation` and
+    // `spark.locality.wait` become discoverable settings.
+    let job = workload.job();
+    let opts = SimOpts {
+        jitter: 0.04,
+        seed: 0x7E57,
+        straggler: Some(Straggler { prob: 0.02, factor: 8.0 }),
+    };
+    let mut jittered =
+        |conf: &SparkConf| run(&job, conf, &cluster, &opts).effective_duration();
+    let strag = tune(
+        &mut jittered,
+        &TuneOpts { threshold, short_version: false, straggler_aware: true },
+    );
+    println!(
+        "\nstraggler-aware list on a jittered cluster ({} runs): {:.1}s -> {:.1}s",
+        strag.runs(),
+        strag.baseline,
+        strag.best
+    );
+    for (k, v) in strag.final_settings() {
+        println!("  {k}={v}");
     }
 }

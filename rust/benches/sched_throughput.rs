@@ -19,7 +19,7 @@
 use sparktune::cluster::ClusterSpec;
 use sparktune::conf::SparkConf;
 use sparktune::engine::{run, run_all};
-use sparktune::sim::SimOpts;
+use sparktune::sim::{SimOpts, Straggler};
 use sparktune::testkit::bench;
 use sparktune::tuner::baselines::grid_conf;
 use sparktune::tuner::TrialExecutor;
@@ -44,6 +44,24 @@ fn main() {
         let c = conf.clone().with("spark.scheduler.mode", mode);
         bench(&format!("sched/run_all {mode} ×{n_jobs} jobs"), 7, n_jobs as f64, || {
             std::hint::black_box(run_all(&jobs, &c, &cluster, &opts));
+        });
+    }
+
+    // ---- straggler scenario: jittered cluster, clone/cancel hot path ----
+    // Speculation adds per-event threshold scans plus clone bookkeeping;
+    // this tracks what that costs against the same jittered baseline.
+    let probe = workloads::straggler_probe(320_000_000, 640);
+    let jittered = SimOpts {
+        jitter: 0.04,
+        seed: 0x57A6,
+        straggler: Some(Straggler { prob: 0.02, factor: 8.0 }),
+    };
+    for (label, sconf) in [
+        ("speculation off", conf.clone()),
+        ("speculation on", conf.clone().with("spark.speculation", "true")),
+    ] {
+        bench(&format!("sched/straggler probe ({label})"), 7, 1.0, || {
+            std::hint::black_box(run(&probe, &sconf, &cluster, &jittered));
         });
     }
 

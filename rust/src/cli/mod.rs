@@ -5,18 +5,20 @@
 //! ```text
 //! sparktune run    --workload <name> [--conf k=v]... [--seed N] [--reps N]
 //! sparktune tune   --workload <name> [--threshold 0.10] [--short]
+//!                  [--straggler-steps] [--background N]
 //! sparktune sweep  --figure fig1|fig2|fig3|table2 [--out-dir DIR]
 //! sparktune cases  [--out-dir DIR]
 //! sparktune ablation [--workload <name>]
-//! sparktune tenancy [--jobs N] [--records N]
+//! sparktune tenancy [--jobs N] [--records N] [--mixed]
+//! sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
 //! sparktune help-conf
 //! ```
 
 use crate::cluster::ClusterSpec;
 use crate::conf::{params, SparkConf};
 use crate::engine::run;
-use crate::experiments::{self, cases, sensitivity};
-use crate::sim::SimOpts;
+use crate::experiments::{self, cases, sensitivity, straggler, tenancy};
+use crate::sim::{SimOpts, Straggler};
 use crate::tuner::{tune, TuneOpts};
 use crate::util::stats::Summary;
 use crate::workloads::Workload;
@@ -45,7 +47,7 @@ fn parse_args(argv: &[String]) -> Result<Args, String> {
                 confs.push(
                     argv.get(i).ok_or_else(|| "missing value after --conf".to_string())?.clone(),
                 );
-            } else if matches!(name, "short" | "verbose") {
+            } else if matches!(name, "short" | "verbose" | "mixed" | "straggler-steps") {
                 bools.push(name.to_string());
             } else {
                 i += 1;
@@ -93,10 +95,13 @@ const USAGE: &str = "sparktune — Spark-1.5 parameter-tuning reproduction (Petr
 USAGE:
   sparktune run      --workload <name> [--conf k=v]... [--reps N] [--seed N]
   sparktune tune     --workload <name> [--threshold 0.10] [--short]
+                     [--straggler-steps] [--background N] [--background-records N]
   sparktune sweep    --figure fig1|fig2|fig3|table2 [--out-dir DIR]
   sparktune cases    [--out-dir DIR]
   sparktune ablation [--workload <name>]
-  sparktune tenancy  [--jobs N] [--records N]   (FIFO vs FAIR on N concurrent jobs)
+  sparktune tenancy  [--jobs N] [--records N] [--mixed]  (FIFO vs FAIR, identical or mixed tenants)
+  sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
+                     (jittered cluster: spark.speculation off vs on)
   sparktune help-conf
 
 WORKLOADS: sort-by-key | shuffling | kmeans-100m | kmeans-200m |
@@ -126,12 +131,15 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             let w = args.workload()?;
             let conf = args.conf()?;
             conf.validate().map_err(|e| e.to_string())?;
+            for warn in &conf.warnings {
+                eprintln!("warning: {warn}");
+            }
             let reps: u64 = args.flag("reps").unwrap_or("5").parse().map_err(|e| format!("{e}"))?;
             let seed: u64 = args.flag("seed").unwrap_or("42").parse().map_err(|e| format!("{e}"))?;
             let job = w.job();
             let mut durations = Vec::new();
             for rep in 0..reps {
-                let r = run(&job, &conf, &cluster, &SimOpts { jitter: 0.04, seed: seed + rep });
+                let r = run(&job, &conf, &cluster, &SimOpts { jitter: 0.04, seed: seed + rep, straggler: None });
                 if let Some(c) = r.crashed {
                     println!("run {rep}: CRASH — {c}");
                     return Ok(());
@@ -140,13 +148,16 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 if args.has("verbose") {
                     for s in &r.stages {
                         println!(
-                            "    {:<10} {:>8.2}s  cpu {:>8.1}s  disk {:>7.1} GB  net {:>6.1} GB  gc ×{:.3}",
+                            "    {:<10} {:>8.2}s  cpu {:>8.1}s  disk {:>7.1} GB  net {:>6.1} GB  gc ×{:.3}  local {:>4}/{:<4} spec {}",
                             s.name,
                             s.duration,
                             s.cpu_secs,
                             s.disk_bytes / 1e9,
                             s.net_bytes / 1e9,
-                            s.gc_factor
+                            s.gc_factor,
+                            s.locality_hits,
+                            s.tasks,
+                            s.speculated
                         );
                     }
                 }
@@ -167,9 +178,32 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             let w = args.workload()?;
             let threshold: f64 =
                 args.flag("threshold").unwrap_or("0.0").parse().map_err(|e| format!("{e}"))?;
-            let mut runner = cases::sim_runner(w, &cluster);
-            let out =
-                tune(&mut runner, &TuneOpts { threshold, short_version: args.has("short") });
+            let background: u32 =
+                args.flag("background").unwrap_or("0").parse().map_err(|e| format!("{e}"))?;
+            let opts = TuneOpts {
+                threshold,
+                short_version: args.has("short"),
+                straggler_aware: args.has("straggler-steps"),
+            };
+            let out = if background > 0 {
+                // Tuner × tenancy: price every trial on a busy cluster
+                // (mixed background tenants submitted alongside).
+                let bg_records: u64 = args
+                    .flag("background-records")
+                    .unwrap_or("100000000")
+                    .parse()
+                    .map_err(|e| format!("{e}"))?;
+                let bg = tenancy::background_jobs(background, bg_records, 640);
+                println!(
+                    "background: {} mixed tenants × {} records each",
+                    background, bg_records
+                );
+                let mut runner = tenancy::busy_runner(w.job(), bg, &cluster);
+                tune(&mut runner, &opts)
+            } else {
+                let mut runner = cases::sim_runner(w, &cluster);
+                tune(&mut runner, &opts)
+            };
             println!("tuning {} (threshold {:.0}%):", w.name(), threshold * 100.0);
             println!("  baseline (defaults): {:.1}s", out.baseline);
             for t in &out.trials {
@@ -256,8 +290,49 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 .unwrap_or("100000000")
                 .parse()
                 .map_err(|e| format!("{e}"))?;
-            let outcomes = experiments::tenancy::tenancy_experiment(n, records, &cluster);
+            let outcomes =
+                experiments::tenancy::tenancy_experiment(n, records, args.has("mixed"), &cluster);
             println!("{}", experiments::tenancy::tenancy_table(&outcomes).to_markdown());
+            Ok(())
+        }
+        "straggler" => {
+            let records: u64 = args
+                .flag("records")
+                .unwrap_or("320000000")
+                .parse()
+                .map_err(|e| format!("{e}"))?;
+            let tasks: u32 =
+                args.flag("tasks").unwrap_or("640").parse().map_err(|e| format!("{e}"))?;
+            let prob: f64 =
+                args.flag("prob").unwrap_or("0.02").parse().map_err(|e| format!("{e}"))?;
+            let factor: f64 =
+                args.flag("factor").unwrap_or("8").parse().map_err(|e| format!("{e}"))?;
+            if !(0.0..=1.0).contains(&prob) {
+                return Err("--prob must be in [0,1]".into());
+            }
+            if !(factor.is_finite() && factor >= 1.0) {
+                return Err("--factor must be a finite slowdown >= 1".into());
+            }
+            let model = Straggler { prob, factor };
+            let o = straggler::straggler_experiment(records, tasks, model, &cluster);
+            println!("{}", straggler::straggler_table(&o).to_markdown());
+            let tuned = straggler::tune_under_stragglers(records, tasks, model, &cluster);
+            println!(
+                "straggler-aware tuner: {:.1}s -> {:.1}s in {} runs; kept: {}",
+                tuned.baseline,
+                tuned.best,
+                tuned.runs(),
+                if tuned.final_settings().is_empty() {
+                    "<defaults>".to_string()
+                } else {
+                    tuned
+                        .final_settings()
+                        .iter()
+                        .map(|(k, v)| format!("{k}={v}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                }
+            );
             Ok(())
         }
         "help-conf" => {
@@ -317,7 +392,30 @@ mod tests {
     fn run_and_tune_mini_through_dispatch() {
         assert_eq!(main(argv("run --workload mini --reps 2 --seed 7")), 0);
         assert_eq!(main(argv("tune --workload mini --short")), 0);
+        assert_eq!(main(argv("tune --workload mini --short --straggler-steps")), 0);
         assert_eq!(main(argv("help-conf")), 0);
         assert_eq!(main(argv("nope")), 2);
+    }
+
+    #[test]
+    fn straggler_subcommand_smoke() {
+        // Tiny sizes: exercises the event core's clone/cancel path end
+        // to end (the same invocation CI smoke-runs on every push).
+        assert_eq!(
+            main(argv("straggler --records 2000000 --tasks 64 --prob 0.2 --factor 8")),
+            0
+        );
+        assert_eq!(main(argv("straggler --prob 1.5")), 2, "prob out of range rejected");
+        assert_eq!(main(argv("straggler --factor 0.5")), 2, "sub-1 factor rejected");
+    }
+
+    #[test]
+    fn new_bool_flags_parse() {
+        let a = parse_args(&argv("tenancy --jobs 2 --mixed")).unwrap();
+        assert!(a.has("mixed"));
+        let a = parse_args(&argv("tune --workload mini --straggler-steps --background 2"))
+            .unwrap();
+        assert!(a.has("straggler-steps"));
+        assert_eq!(a.flag("background"), Some("2"));
     }
 }

@@ -100,6 +100,15 @@ impl ClusterSpec {
         s
     }
 
+    /// HDFS-style block placement: block/partition `i` of a generated or
+    /// cached dataset lives on node `i % nodes` (round-robin block
+    /// layout). `engine::run` derives task preferred locations from this
+    /// for stages whose input is node-local data (generate, cache read);
+    /// shuffle-read stages fetch from every node and get no preference.
+    pub fn block_node(&self, block: u32) -> NodeId {
+        block % self.nodes.max(1)
+    }
+
     /// Total cores.
     pub fn total_cores(&self) -> u32 {
         self.nodes * self.cores_per_node
@@ -134,6 +143,16 @@ mod tests {
         // ~1.5 GB per core
         let per_core = c.heap_per_node as f64 / c.cores_per_node as f64;
         assert!((per_core / (1 << 30) as f64 - 1.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn block_placement_round_robins() {
+        let c = ClusterSpec::mini();
+        assert_eq!(c.block_node(0), 0);
+        assert_eq!(c.block_node(5), 1);
+        assert_eq!(c.block_node(4), 0);
+        let m = ClusterSpec::marenostrum();
+        assert_eq!(m.block_node(21), 1);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod params;
 use crate::codec::CodecKind;
 use crate::ser::SerKind;
 use crate::sim::SchedulerMode;
-use crate::util::units::{parse_size, SizeUnit};
+use crate::util::units::{fmt_duration_secs, parse_duration_secs, parse_size, SizeUnit, TimeUnit};
 use std::collections::BTreeMap;
 use std::fmt;
 
@@ -95,7 +95,12 @@ impl std::error::Error for ConfError {}
 
 /// Full engine configuration. `Default` is Spark 1.5.2's out-of-the-box
 /// configuration on the paper's cluster setup.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// Equality compares **effective settings only** — the collected
+/// [`warnings`](SparkConf::warnings) are diagnostics, not configuration,
+/// and two confs that price identically always compare equal (see the
+/// manual [`PartialEq`] impl below).
+#[derive(Clone, Debug)]
 pub struct SparkConf {
     // ---- The paper's 12 parameters (Sec. 3 numbering) ----
     /// 1. `spark.reducer.maxSizeInFlight` (default 48m): max bytes of
@@ -143,9 +148,55 @@ pub struct SparkConf {
     /// or FAIR (even running-task shares). Drives the event core's
     /// [`SchedulerMode`] policy; only observable with > 1 concurrent job.
     pub scheduler_mode: SchedulerMode,
+    /// `spark.locality.wait` (default 3s), in seconds: delay scheduling —
+    /// how long a task holds for a core on one of its preferred
+    /// (data-local) nodes before degrading to any free core.
+    pub locality_wait_secs: f64,
+    /// `spark.speculation` (default false): launch backup copies of
+    /// straggling tasks and take the first finisher.
+    pub speculation: bool,
+    /// `spark.speculation.multiplier` (default 1.5): a task must run this
+    /// many times longer than the median successful task to be speculated.
+    pub speculation_multiplier: f64,
+    /// `spark.speculation.quantile` (default 0.75): fraction of a stage's
+    /// tasks that must complete before speculation kicks in.
+    pub speculation_quantile: f64,
 
     /// Unmodeled `--conf` keys, carried through verbatim.
     pub extras: BTreeMap<String, String>,
+    /// Warnings collected while setting keys the model does not cover —
+    /// unknown keys are carried through but no longer silently accepted.
+    pub warnings: Vec<String>,
+}
+
+impl PartialEq for SparkConf {
+    /// Field-wise equality over every *effective* setting; `warnings`
+    /// (diagnostics accumulated while parsing) are deliberately excluded.
+    fn eq(&self, other: &SparkConf) -> bool {
+        self.reducer_max_size_in_flight == other.reducer_max_size_in_flight
+            && self.shuffle_compress == other.shuffle_compress
+            && self.shuffle_file_buffer == other.shuffle_file_buffer
+            && self.shuffle_manager == other.shuffle_manager
+            && self.io_compression_codec == other.io_compression_codec
+            && self.shuffle_io_prefer_direct_bufs == other.shuffle_io_prefer_direct_bufs
+            && self.rdd_compress == other.rdd_compress
+            && self.serializer == other.serializer
+            && self.shuffle_memory_fraction == other.shuffle_memory_fraction
+            && self.storage_memory_fraction == other.storage_memory_fraction
+            && self.shuffle_consolidate_files == other.shuffle_consolidate_files
+            && self.shuffle_spill_compress == other.shuffle_spill_compress
+            && self.executor_cores == other.executor_cores
+            && self.executor_memory == other.executor_memory
+            && self.num_executors == other.num_executors
+            && self.default_parallelism == other.default_parallelism
+            && self.shuffle_spill == other.shuffle_spill
+            && self.scheduler_mode == other.scheduler_mode
+            && self.locality_wait_secs == other.locality_wait_secs
+            && self.speculation == other.speculation
+            && self.speculation_multiplier == other.speculation_multiplier
+            && self.speculation_quantile == other.speculation_quantile
+            && self.extras == other.extras
+    }
 }
 
 impl Default for SparkConf {
@@ -174,7 +225,12 @@ impl Default for SparkConf {
             default_parallelism: 640,
             shuffle_spill: true,
             scheduler_mode: SchedulerMode::Fifo,
+            locality_wait_secs: 3.0,
+            speculation: false,
+            speculation_multiplier: 1.5,
+            speculation_quantile: 0.75,
             extras: BTreeMap::new(),
+            warnings: Vec::new(),
         }
     }
 }
@@ -245,8 +301,34 @@ impl SparkConf {
                 self.scheduler_mode = SchedulerMode::from_config_name(v)
                     .ok_or_else(|| invalid(key, v, "expected FIFO|FAIR".into()))?;
             }
+            // Spark's getTimeAsMs semantics: bare numbers are milliseconds.
+            "spark.locality.wait" => {
+                self.locality_wait_secs = parse_duration_secs(v, TimeUnit::Millis)
+                    .map_err(|e| invalid(key, v, e))?;
+            }
+            "spark.speculation" => self.speculation = parse_bool(key, v)?,
+            "spark.speculation.multiplier" => {
+                let x: f64 = v.parse().map_err(|e| invalid(key, v, format!("{e}")))?;
+                if !(x.is_finite() && x > 0.0) {
+                    return Err(invalid(key, v, "multiplier must be > 0".into()));
+                }
+                self.speculation_multiplier = x;
+            }
+            "spark.speculation.quantile" => {
+                self.speculation_quantile = parse_fraction(key, v)?;
+            }
             _ => {
-                self.extras.insert(key.to_string(), v.to_string());
+                // Unknown-but-carried key: Table 1 has ~150 parameters the
+                // model doesn't price. Keep the round-trip, but surface a
+                // warning instead of silently accepting a possible typo
+                // (once per key — overrides don't repeat it).
+                let prior = self.extras.insert(key.to_string(), v.to_string());
+                if prior.is_none() {
+                    self.warnings.push(format!(
+                        "unmodeled configuration key {key:?}: carried through verbatim, \
+                         no effect on the simulation"
+                    ));
+                }
             }
         }
         Ok(self)
@@ -326,6 +408,10 @@ impl SparkConf {
         cmp!(scheduler_mode, "spark.scheduler.mode", |v: &SchedulerMode| v
             .config_name()
             .to_string());
+        cmp!(locality_wait_secs, "spark.locality.wait", |v: &f64| fmt_duration_secs(*v));
+        cmp!(speculation, "spark.speculation", |v: &bool| v.to_string());
+        cmp!(speculation_multiplier, "spark.speculation.multiplier", |v: &f64| format!("{v}"));
+        cmp!(speculation_quantile, "spark.speculation.quantile", |v: &f64| format!("{v}"));
         for (k, v) in &self.extras {
             out.push((k.clone(), v.clone()));
         }
@@ -479,11 +565,66 @@ mod tests {
     }
 
     #[test]
-    fn unknown_keys_carried_as_extras() {
+    fn speculation_keys_are_typed_not_extras() {
+        // Satellite bugfix: `spark.speculation` used to land in the
+        // untyped extras map; it now parse-validates and round-trips
+        // through typed params.
         let mut c = SparkConf::default();
+        assert!(!c.speculation);
         c.set("spark.speculation", "true").unwrap();
-        assert_eq!(c.extras.get("spark.speculation").map(String::as_str), Some("true"));
-        assert!(c.diff_from_default().iter().any(|(k, _)| k == "spark.speculation"));
+        c.set("spark.speculation.multiplier", "2.5").unwrap();
+        c.set("spark.speculation.quantile", "0.9").unwrap();
+        assert!(c.speculation);
+        assert_eq!(c.speculation_multiplier, 2.5);
+        assert_eq!(c.speculation_quantile, 0.9);
+        assert!(c.extras.is_empty(), "typed keys must not leak into extras: {:?}", c.extras);
+        assert!(c.warnings.is_empty(), "typed keys must not warn: {:?}", c.warnings);
+        let diff = c.diff_from_default();
+        assert!(diff.iter().any(|(k, v)| k == "spark.speculation" && v == "true"));
+        assert!(diff.iter().any(|(k, v)| k == "spark.speculation.multiplier" && v == "2.5"));
+        // Bad values are rejected, not swallowed.
+        assert!(c.set("spark.speculation", "maybe").is_err());
+        assert!(c.set("spark.speculation.multiplier", "-1").is_err());
+        assert!(c.set("spark.speculation.quantile", "1.5").is_err());
+    }
+
+    #[test]
+    fn locality_wait_parses_spark_durations() {
+        let mut c = SparkConf::default();
+        assert_eq!(c.locality_wait_secs, 3.0, "Spark 1.5.2 default is 3s");
+        c.set("spark.locality.wait", "0s").unwrap();
+        assert_eq!(c.locality_wait_secs, 0.0);
+        c.set("spark.locality.wait", "300ms").unwrap();
+        assert_eq!(c.locality_wait_secs, 0.3);
+        // Bare numbers are milliseconds (Spark's getTimeAsMs).
+        c.set("spark.locality.wait", "6000").unwrap();
+        assert_eq!(c.locality_wait_secs, 6.0);
+        assert!(c.set("spark.locality.wait", "-3s").is_err());
+        let diff = SparkConf::default().with("spark.locality.wait", "10s").diff_from_default();
+        assert_eq!(
+            diff,
+            vec![("spark.locality.wait".to_string(), "10s".to_string())]
+        );
+    }
+
+    #[test]
+    fn unknown_keys_warn_but_round_trip() {
+        // Satellite: unknown keys are still carried through (Table 1 has
+        // ~150 unmodeled parameters) but now collect a warning instead of
+        // being silently accepted.
+        let mut c = SparkConf::default();
+        c.set("spark.yarn.queue", "prod").unwrap();
+        assert_eq!(c.extras.get("spark.yarn.queue").map(String::as_str), Some("prod"));
+        assert_eq!(c.warnings.len(), 1);
+        assert!(c.warnings[0].contains("spark.yarn.queue"), "{:?}", c.warnings);
+        assert!(c.diff_from_default().iter().any(|(k, _)| k == "spark.yarn.queue"));
+        // Overriding the same unknown key doesn't repeat the warning…
+        c.set("spark.yarn.queue", "batch").unwrap();
+        assert_eq!(c.warnings.len(), 1);
+        // …and warnings are diagnostics: they never break conf equality.
+        let mut d = SparkConf::default();
+        d.set("spark.yarn.queue", "batch").unwrap();
+        assert_eq!(c, d, "effective settings equal ⇒ confs equal, warnings aside");
     }
 
     #[test]

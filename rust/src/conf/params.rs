@@ -199,6 +199,37 @@ pub const PARAMS: &[ParamDef] = &[
         doc: "FIFO | FAIR — how concurrently submitted jobs share the cluster's cores \
               (observable in multi-tenant runs; single jobs are unaffected).",
     },
+    ParamDef {
+        key: "spark.locality.wait",
+        category: Category::Scheduling,
+        default: "3s",
+        paper_param: false,
+        doc: "Delay scheduling: how long a task holds for a core on one of its preferred \
+              (data-local) nodes before degrading to any free core. 0 disables holding.",
+    },
+    ParamDef {
+        key: "spark.speculation",
+        category: Category::Scheduling,
+        default: "false",
+        paper_param: false,
+        doc: "Launch backup copies of straggling tasks on another node and take the first \
+              finisher (the loser is killed and its resource flows cancelled).",
+    },
+    ParamDef {
+        key: "spark.speculation.multiplier",
+        category: Category::Scheduling,
+        default: "1.5",
+        paper_param: false,
+        doc: "How many times slower than the median successful task a running task must be \
+              before it is eligible for speculation.",
+    },
+    ParamDef {
+        key: "spark.speculation.quantile",
+        category: Category::Scheduling,
+        default: "0.75",
+        paper_param: false,
+        doc: "Fraction of a stage's tasks that must be complete before speculation kicks in.",
+    },
 ];
 
 /// Look up a parameter by key.
@@ -230,6 +261,21 @@ mod tests {
             c.set(p.key, p.default).unwrap_or_else(|e| panic!("{}: {e}", p.key));
         }
         assert_eq!(c, SparkConf::default());
+    }
+
+    #[test]
+    fn scheduling_knobs_are_registered() {
+        for key in [
+            "spark.scheduler.mode",
+            "spark.locality.wait",
+            "spark.speculation",
+            "spark.speculation.multiplier",
+            "spark.speculation.quantile",
+        ] {
+            let p = find(key).unwrap_or_else(|| panic!("{key} missing from registry"));
+            assert_eq!(p.category, Category::Scheduling, "{key}");
+            assert!(!p.paper_param, "{key} is not one of the paper's 12");
+        }
     }
 
     #[test]

@@ -111,20 +111,30 @@ pub enum Op {
     Action,
 }
 
-/// A runnable job: an operator chain and a human-readable name.
+/// A runnable job: an operator chain, a human-readable name, and the
+/// FAIR pool it is submitted to (weight 1 / minShare 0 unless set —
+/// Spark's `spark.scheduler.pool` with a fair-scheduler allocation file).
 #[derive(Clone, Debug)]
 pub struct Job {
     pub name: String,
     pub ops: Vec<Op>,
+    pub pool: crate::sim::PoolSpec,
 }
 
 impl Job {
     pub fn new(name: impl Into<String>) -> Job {
-        Job { name: name.into(), ops: Vec::new() }
+        Job { name: name.into(), ops: Vec::new(), pool: crate::sim::PoolSpec::default() }
     }
 
     pub fn op(mut self, op: Op) -> Job {
         self.ops.push(op);
+        self
+    }
+
+    /// Submit this job in a weighted FAIR pool (only observable under
+    /// `spark.scheduler.mode=FAIR` with concurrent jobs).
+    pub fn in_pool(mut self, weight: f64, min_share: u32) -> Job {
+        self.pool = crate::sim::PoolSpec { weight, min_share };
         self
     }
 }

@@ -54,6 +54,25 @@ pub enum StageOutput {
     Action,
 }
 
+/// Where a stage's input blocks live — the planner's locality
+/// provenance, from which the runner derives per-task preferred nodes
+/// (delay scheduling then holds tasks for those nodes up to
+/// `spark.locality.wait`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Locality {
+    /// Input blocks are placed by the storage layer (HDFS-style
+    /// round-robin over nodes): task `i` prefers
+    /// [`crate::cluster::ClusterSpec::block_node`]`(i)`.
+    Blocks,
+    /// Input is the cached output of stage `.0`: task `i` prefers the
+    /// node where that stage's task `i` *actually ran* (the block
+    /// manager stores partitions on their writer's node).
+    CachedParent(usize),
+    /// Shuffle fetch from every map node: no locality preference, as in
+    /// Spark's reduce tasks.
+    ShuffleAll,
+}
+
 /// One schedulable stage.
 #[derive(Clone, Debug)]
 pub struct Stage {
@@ -62,6 +81,8 @@ pub struct Stage {
     /// Ids of the stages whose outputs this stage consumes. A stage is
     /// runnable once every parent has completed; roots have no parents.
     pub parents: Vec<usize>,
+    /// Locality provenance of the stage's input (see [`Locality`]).
+    pub locality: Locality,
     pub input: StageInput,
     /// Dataset flowing *into* the narrow pipeline.
     pub in_data: Dataset,
@@ -125,11 +146,17 @@ pub fn plan(job: &Job) -> Result<Vec<Stage>, PlanError> {
         let tasks = match &output {
             StageOutput::ShuffleWrite { .. } | StageOutput::Action => in_data.partitions,
         };
+        // CacheRead is refined to CachedParent(writer) by `wire_dag`.
+        let locality = match &input {
+            StageInput::Generate { .. } | StageInput::CacheRead { .. } => Locality::Blocks,
+            StageInput::ShuffleRead { .. } => Locality::ShuffleAll,
+        };
         let id = stages.len();
         stages.push(Stage {
             id,
             name: format!("stage-{id}"),
             parents: Vec::new(), // wired by `wire_dag` once the chain is split
+            locality,
             input,
             in_data,
             pipeline_cpu_ns_per_record: cpu,
@@ -314,6 +341,9 @@ fn wire_dag(stages: &mut [Stage]) {
                     if cw != i - 1 {
                         parents.push(cw);
                     }
+                    // Cache-read locality: the cached partitions live
+                    // where the writer's tasks ran.
+                    stages[i].locality = Locality::CachedParent(cw);
                 }
             }
             parents.push(i - 1);
@@ -461,6 +491,34 @@ mod tests {
                 assert!(p < s.id, "stage {} lists non-ancestor parent {}", s.id, p);
             }
         }
+    }
+
+    #[test]
+    fn locality_provenance_follows_data_placement() {
+        // sort-by-key: map reads generated blocks, reduce fetches from
+        // every node (no preference).
+        let stages = plan(&sbk_job()).unwrap();
+        assert_eq!(stages[0].locality, Locality::Blocks);
+        assert_eq!(stages[1].locality, Locality::ShuffleAll);
+
+        // k-means: every iteration's map stage prefers the nodes where
+        // the cache writer (stage 0) actually ran its partitions.
+        let pts = Dataset::vectors(1_000_000, 100, 64);
+        let partials = Dataset::vectors(64 * 10, 100, 64);
+        let mut job = Job::new("kmeans")
+            .op(Op::Generate { out: pts, cpu_ns_per_record: 2000.0 })
+            .op(Op::Cache);
+        for _ in 0..2 {
+            job = job
+                .op(Op::CacheRead)
+                .op(Op::MapRecords { cpu_ns_per_record: 3800.0, out: partials.clone() })
+                .op(Op::Repartition { reducers: 10 });
+        }
+        let stages = plan(&job).unwrap();
+        assert_eq!(stages[0].locality, Locality::Blocks);
+        assert_eq!(stages[1].locality, Locality::CachedParent(0));
+        assert_eq!(stages[2].locality, Locality::ShuffleAll);
+        assert_eq!(stages[3].locality, Locality::CachedParent(0));
     }
 
     #[test]

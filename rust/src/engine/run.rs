@@ -28,13 +28,13 @@
 //! crashed configurations as unusable (as the paper does). Other jobs in
 //! the same batch keep running.
 
-use super::plan::{plan, Stage, StageInput, StageOutput};
+use super::plan::{plan, Locality, Stage, StageInput, StageOutput};
 use super::Job;
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, NodeId};
 use crate::conf::SparkConf;
 use crate::exec::{MemoryModel, SpillPlan};
 use crate::shuffle::{self, IoProfiles, MapSideSpec, ReduceSideSpec};
-use crate::sim::{scheduler_for, EventSim, Phase, SimOpts, TaskSpec};
+use crate::sim::{scheduler_for, EventSim, Phase, SimOpts, SimPolicy, SpecPolicy, TaskSpec};
 use crate::storage::{self, PersistLevel};
 use std::collections::HashMap;
 
@@ -50,6 +50,10 @@ pub struct StageReport {
     pub spilled_bytes: u64,
     pub gc_factor: f64,
     pub cache_hit_fraction: Option<f64>,
+    /// Tasks launched on one of their preferred nodes (NODE_LOCAL).
+    pub locality_hits: usize,
+    /// Speculative backup copies launched (`spark.speculation`).
+    pub speculated: usize,
 }
 
 /// Outcome of one job run under one configuration.
@@ -124,11 +128,26 @@ pub fn run_all(
 ) -> MultiJobResult {
     let mem = MemoryModel::new(conf, cluster);
     let prof = IoProfiles::from_conf(conf);
-    let mut sim = EventSim::new(cluster, scheduler_for(conf.scheduler_mode));
+    // Delay scheduling + speculation flow from the typed configuration
+    // into the event core's policy.
+    let policy = SimPolicy {
+        locality_wait: conf.locality_wait_secs,
+        speculation: if conf.speculation {
+            Some(SpecPolicy {
+                quantile: conf.speculation_quantile,
+                multiplier: conf.speculation_multiplier,
+            })
+        } else {
+            None
+        },
+    };
+    let mut sim = EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), policy);
 
     // ---- plan every job and build its DAG bookkeeping ----
     let mut jobs_rt: Vec<JobRt> = Vec::with_capacity(jobs.len());
     for (ji, job) in jobs.iter().enumerate() {
+        // FAIR pools (weight / minShare) per submitting job.
+        sim.set_pool(ji, job.pool);
         // Job 0 keeps the historical seed derivation bit-for-bit.
         let job_seed = opts.seed ^ (ji as u64).wrapping_mul(0xA24B_AED4_963E_E407);
         match plan(job) {
@@ -222,7 +241,12 @@ pub fn run_all(
             spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
             gc_factor: meta.gc,
             cache_hit_fraction: meta.cache_hit_fraction,
+            locality_hits: done.stats.locality_hits,
+            speculated: done.stats.speculated,
         });
+        // Record where each task actually ran: cache-read children derive
+        // their preferred nodes from the writer's real placement.
+        jr.pricing.placements.insert(sid, done.task_nodes);
         jr.finish = done.at;
         for k in 0..jobs_rt[ji].children[sid].len() {
             let ch = jobs_rt[ji].children[sid][k];
@@ -297,6 +321,9 @@ struct PricingState {
     cache_plan: Option<storage::CachePlan>,
     /// Shuffle handoff recorded under the *producer* stage id.
     handoffs: HashMap<usize, ShuffleHandoff>,
+    /// Actual node of each completed stage's tasks (by stage id, indexed
+    /// by task) — the source of cache-read locality preferences.
+    placements: HashMap<usize, Vec<NodeId>>,
 }
 
 #[derive(Clone, Debug)]
@@ -330,12 +357,34 @@ fn submit_stage(
     let stage = &jr.stages[sid];
     match price_stage(stage, conf, cluster, mem, prof, &mut jr.pricing) {
         Priced::Tasks { phases, meta } => {
+            // Preferred locations from the planner's locality provenance:
+            // generated input reads storage-layer block placement;
+            // cache reads prefer the nodes the writer's tasks actually
+            // ran on; shuffle reads fetch from everywhere (no preference,
+            // as in Spark's reduce tasks).
+            let placed = match stage.locality {
+                Locality::CachedParent(p) => jr.pricing.placements.get(&p),
+                _ => None,
+            };
             let tasks: Vec<TaskSpec> = (0..stage.tasks)
-                .map(|i| TaskSpec::new(phases.clone()).on(i % cluster.nodes))
+                .map(|i| {
+                    let t = TaskSpec::new(phases.clone());
+                    match stage.locality {
+                        Locality::ShuffleAll => t,
+                        Locality::Blocks => t.on(cluster.block_node(i)),
+                        Locality::CachedParent(_) => {
+                            let node = placed
+                                .and_then(|ns| ns.get(i as usize).copied())
+                                .unwrap_or_else(|| cluster.block_node(i));
+                            t.on(node)
+                        }
+                    }
+                })
                 .collect();
             let stage_opts = SimOpts {
                 jitter: opts.jitter,
                 seed: jr.job_seed ^ (stage.id as u64) << 32,
+                straggler: opts.straggler,
             };
             let handle = sim.submit(ji, &tasks, &stage_opts);
             by_handle.insert(handle, (ji, sid, meta));
@@ -567,6 +616,8 @@ fn partial_report(stage: &Stage, duration: f64) -> StageReport {
         spilled_bytes: 0,
         gc_factor: 1.0,
         cache_hit_fraction: None,
+        locality_hits: 0,
+        speculated: 0,
     }
 }
 
@@ -698,6 +749,25 @@ mod tests {
             "stage sum {sum} vs makespan {}",
             r.duration
         );
+    }
+
+    #[test]
+    fn generate_stage_runs_node_local_on_an_idle_cluster() {
+        // Block-placed tasks (HDFS-style i % nodes) all launch
+        // NODE_LOCAL on an idle cluster at zero jitter, wave after wave.
+        let d = Dataset::kv(1_000_000, 10, 90, 16);
+        let job = Job::new("local")
+            .op(Op::Generate { out: d, cpu_ns_per_record: 300.0 })
+            .op(Op::Action);
+        let r = run(
+            &job,
+            &SparkConf::default(),
+            &ClusterSpec::mini(),
+            &SimOpts { jitter: 0.0, seed: 1, straggler: None },
+        );
+        assert!(r.crashed.is_none());
+        assert_eq!(r.stages[0].locality_hits, 16);
+        assert_eq!(r.stages[0].speculated, 0, "no stragglers, no clones");
     }
 
     #[test]

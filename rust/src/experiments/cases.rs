@@ -41,7 +41,7 @@ pub fn sim_runner<'a>(
 ) -> impl FnMut(&SparkConf) -> f64 + 'a {
     let job = workload.job();
     move |conf: &SparkConf| {
-        run(&job, conf, cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 }).effective_duration()
+        run(&job, conf, cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }).effective_duration()
     }
 }
 
@@ -69,7 +69,7 @@ pub fn case_studies(cluster: &ClusterSpec) -> Vec<CaseStudy> {
         .into_iter()
         .map(|(w, threshold, paper)| {
             let mut runner = sim_runner(w, cluster);
-            let outcome = tune(&mut runner, &TuneOpts { threshold, short_version: false });
+            let outcome = tune(&mut runner, &TuneOpts { threshold, short_version: false, straggler_aware: false });
             CaseStudy { workload: w, threshold, outcome, paper }
         })
         .collect()
@@ -130,7 +130,7 @@ mod tests {
     fn case_study_sort_by_key() {
         let cluster = mn();
         let mut runner = sim_runner(Workload::SortByKey1B, &cluster);
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false });
+        let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false, straggler_aware: false });
         assert_eq!(out.best_conf.serializer, SerKind::Kryo, "{:?}", out.trials);
         assert!(out.runs() <= 10);
         let improvement = out.total_improvement();
@@ -151,7 +151,7 @@ mod tests {
     fn case_study_kmeans_500d() {
         let cluster = mn();
         let mut runner = sim_runner(Workload::KMeans500D, &cluster);
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.05, short_version: false });
+        let out = tune(&mut runner, &TuneOpts { threshold: 0.05, short_version: false, straggler_aware: false });
         assert_eq!(out.best_conf.storage_memory_fraction, 0.7, "{:?}", out.final_settings());
         assert_eq!(out.best_conf.shuffle_memory_fraction, 0.1);
         let improvement = out.total_improvement();
@@ -168,7 +168,7 @@ mod tests {
     fn case_study_aggregate_by_key() {
         let cluster = mn();
         let mut runner = sim_runner(Workload::AggregateByKey2B, &cluster);
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.05, short_version: false });
+        let out = tune(&mut runner, &TuneOpts { threshold: 0.05, short_version: false, straggler_aware: false });
         let improvement = out.total_improvement();
         assert!(
             improvement > 0.08,

@@ -5,8 +5,11 @@
 //! * [`table2`] — mean |deviation| per parameter per benchmark.
 //! * [`cases`] — the §5 case studies (methodology end-to-end).
 //! * [`ablation`] — E8: methodology vs exhaustive vs random search.
-//! * [`tenancy`] — N concurrent jobs on one cluster, FIFO vs FAIR
-//!   (`spark.scheduler.mode` through the event core).
+//! * [`tenancy`] — N concurrent (identical or mixed) jobs on one
+//!   cluster, FIFO vs FAIR with weighted pools, plus the busy-cluster
+//!   tuning runner (`spark.scheduler.mode` through the event core).
+//! * [`straggler`] — jittered-cluster speculation experiment
+//!   (`spark.speculation` off vs on, and the straggler-aware tuner).
 //!
 //! Protocol follows the paper: each configuration is run with ≥5
 //! repetition seeds and the **median** is reported; the baseline for the
@@ -16,6 +19,7 @@
 
 pub mod ablation;
 pub mod cases;
+pub mod straggler;
 pub mod tenancy;
 
 use crate::cluster::ClusterSpec;
@@ -36,7 +40,7 @@ pub const REPS: u64 = 5;
 pub fn median_run(job: &Job, conf: &SparkConf, cluster: &ClusterSpec) -> Option<f64> {
     let mut durations = Vec::with_capacity(REPS as usize);
     for rep in 0..REPS {
-        let r = run(job, conf, cluster, &SimOpts { jitter: 0.04, seed: 0xA5EED + rep });
+        let r = run(job, conf, cluster, &SimOpts { jitter: 0.04, seed: 0xA5EED + rep, straggler: None });
         if r.crashed.is_some() {
             return None;
         }
@@ -296,7 +300,7 @@ mod tests {
 
     /// Single-seed helper for shape tests (REPS medians are slow in debug).
     fn once(job: &Job, conf: &SparkConf) -> Option<f64> {
-        let r = run(job, conf, &mn(), &SimOpts { jitter: 0.0, seed: 1 });
+        let r = run(job, conf, &mn(), &SimOpts { jitter: 0.0, seed: 1, straggler: None });
         if r.crashed.is_some() {
             None
         } else {

@@ -71,18 +71,50 @@ pub fn run_tenancy(
 }
 
 /// The standard scenario: `n` concurrent tenants on the paper's cluster,
-/// both policies.
+/// both policies. `mixed` swaps the identical sort-by-key tenants for
+/// the heterogeneous sbk/k-means/agg batch.
 pub fn tenancy_experiment(
     n: u32,
     records_per_job: u64,
+    mixed: bool,
     cluster: &ClusterSpec,
 ) -> Vec<TenancyOutcome> {
-    let jobs = workloads::multi_tenant(n, records_per_job, 640);
+    let jobs = if mixed {
+        workloads::mixed_tenants(n, records_per_job, 640)
+    } else {
+        workloads::multi_tenant(n, records_per_job, 640)
+    };
     let conf = SparkConf::default().with("spark.serializer", "kryo");
     SchedulerMode::ALL
         .iter()
         .map(|&mode| run_tenancy(&jobs, &conf, cluster, mode, &SimOpts::default()))
         .collect()
+}
+
+/// The background batch for tuner × tenancy: heterogeneous mixed tenants
+/// at `records_per_job` scale (see [`busy_runner`]).
+pub fn background_jobs(n: u32, records_per_job: u64, partitions: u32) -> Vec<Job> {
+    workloads::mixed_tenants(n, records_per_job, partitions)
+}
+
+/// A tuning [`crate::tuner::Runner`] that prices each candidate on a
+/// **busy** cluster: the target job is submitted at `t = 0` alongside
+/// `background`, all under the candidate configuration (one shared conf
+/// — the scheduler-mode knob therefore also shapes how the target
+/// competes), and the target's effective duration is returned. Job 0 is
+/// the target, so its jitter stream matches a solo run exactly.
+pub fn busy_runner<'a>(
+    target: Job,
+    background: Vec<Job>,
+    cluster: &'a ClusterSpec,
+) -> impl FnMut(&SparkConf) -> f64 + 'a {
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    move |conf: &SparkConf| {
+        let mut jobs = Vec::with_capacity(1 + background.len());
+        jobs.push(target.clone());
+        jobs.extend(background.iter().cloned());
+        run_all(&jobs, conf, cluster, &opts).results[0].effective_duration()
+    }
 }
 
 /// Render outcomes as a markdown table.
@@ -208,6 +240,70 @@ mod tests {
         assert!(md.contains("FIFO"));
         assert!(md.contains("FAIR"));
         assert!(md.contains("tenant0-"));
+    }
+
+    #[test]
+    fn weighted_pools_bias_fair_completion_order() {
+        // Two identical tenants under FAIR; giving tenant 0 weight 4
+        // must finish it well before tenant 1, and before its own
+        // completion in the even-share run.
+        let cluster = ClusterSpec::mini();
+        let conf = SparkConf::default();
+        let opts = SimOpts::default();
+        let even_jobs = workloads::multi_tenant(2, 2_000_000, 16);
+        let mut weighted_jobs = even_jobs.clone();
+        weighted_jobs[0] = weighted_jobs[0].clone().in_pool(4.0, 0);
+
+        let even = run_tenancy(&even_jobs, &conf, &cluster, SchedulerMode::Fair, &opts);
+        let weighted =
+            run_tenancy(&weighted_jobs, &conf, &cluster, SchedulerMode::Fair, &opts);
+        let wc = weighted.completions();
+        assert!(
+            wc[0] < wc[1] * 0.8,
+            "weight-4 tenant must finish well first: {:.2}s vs {:.2}s",
+            wc[0],
+            wc[1]
+        );
+        assert!(
+            wc[0] < even.completions()[0] * 0.9,
+            "weight-4 beats its even-share self: {:.2}s vs {:.2}s",
+            wc[0],
+            even.completions()[0]
+        );
+    }
+
+    #[test]
+    fn mixed_tenancy_runs_both_modes() {
+        let cluster = ClusterSpec::mini();
+        let jobs = workloads::mixed_tenants(3, 1_000_000, 16);
+        for mode in SchedulerMode::ALL {
+            let o = run_tenancy(&jobs, &SparkConf::default(), &cluster, mode, &SimOpts::default());
+            assert_eq!(o.completions().len(), 3, "{mode}: all mixed tenants finish");
+        }
+    }
+
+    #[test]
+    fn busy_runner_prices_a_busy_cluster() {
+        use crate::tuner::{tune, TuneOpts};
+        use crate::workloads::Workload;
+
+        let cluster = ClusterSpec::mini();
+        let target = Workload::MiniSortByKey.job();
+        let background = background_jobs(2, 1_000_000, 16);
+
+        let d = SparkConf::default();
+        let mut busy = busy_runner(target.clone(), background.clone(), &cluster);
+        let mut idle = busy_runner(target.clone(), Vec::new(), &cluster);
+        let (b, i) = (busy(&d), idle(&d));
+        assert!(b.is_finite() && i.is_finite());
+        assert!(b >= i * 0.98, "contention must not speed the target up: busy {b:.2}s idle {i:.2}s");
+
+        // The Fig-4 loop runs end-to-end against the busy cluster.
+        let mut runner = busy_runner(target, background, &cluster);
+        let out = tune(&mut runner, &TuneOpts::default());
+        assert!(out.baseline.is_finite());
+        assert!(out.best <= out.baseline);
+        assert!(out.runs() <= 10);
     }
 
     #[test]

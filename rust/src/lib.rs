@@ -8,9 +8,12 @@
 //! The crate contains:
 //!
 //! * `sparksim` — a from-scratch Spark-1.5-era execution-engine model:
-//!   RDD DAG → stages with explicit dependency edges → tasks
-//!   ([`engine`]), the persistent discrete-event cluster core with
-//!   pluggable FIFO/FAIR scheduling ([`sim::EventSim`], [`cluster`]),
+//!   RDD DAG → stages with explicit dependency edges → **task-granular
+//!   scheduling** ([`engine`]): per-task preferred locations, delay
+//!   scheduling (`spark.locality.wait`), and speculative execution
+//!   (`spark.speculation`) on the persistent discrete-event cluster core
+//!   with pluggable FIFO/FAIR (weighted-pool) scheduling
+//!   ([`sim::EventSim`], [`cluster`]),
 //!   the legacy memory manager with storage/shuffle fractions
 //!   ([`exec`]), the block manager ([`storage`]), and all three shuffle
 //!   managers ([`shuffle`]). Multiple jobs contend for one simulated

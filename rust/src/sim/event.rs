@@ -1,6 +1,6 @@
 //! The persistent event core: a single global event queue scheduling
-//! tasks from **many stages of many jobs at once** over the modeled
-//! cluster.
+//! **individual tasks** from many stages of many jobs at once over the
+//! modeled cluster.
 //!
 //! [`EventSim`] owns the cluster's contended state — per-node core slots
 //! and the processor-shared disk/NIC flow sets — for the whole lifetime
@@ -11,31 +11,55 @@
 //! at fair fluid-flow rates, exactly as concurrent Spark jobs contend on
 //! one cluster.
 //!
+//! Tasks are first-class schedulable units, each with its own launch and
+//! finish events:
+//!
+//! * **Delay scheduling** (`spark.locality.wait`, [`SimPolicy`]): a task
+//!   with preferred nodes *holds* for up to `locality_wait` simulated
+//!   seconds (from its stage's submission) for a free core on one of
+//!   them, then degrades to ANY placement. A stage whose pending tasks
+//!   are all holding is skipped by admission entirely — later stages and
+//!   other jobs take the cores, as in Zaharia's delay scheduler.
+//! * **Speculative execution** (`spark.speculation`, [`SpecPolicy`]):
+//!   once a stage has at least `quantile` of its tasks done, any running
+//!   task whose elapsed time exceeds `multiplier` × the median successful
+//!   duration is cloned onto a *different* node. The first finisher wins;
+//!   the loser is cancelled — its core freed, its processor-shared flow
+//!   withdrawn mid-stream, and the stage's resource meters refunded for
+//!   the work it never completed.
+//!
 //! **Which** pending task gets a freed core is delegated to a pluggable
 //! [`Scheduler`] — the analogue of Spark's `spark.scheduler.mode`:
 //!
 //! * [`FifoScheduler`] — earlier-submitted jobs win; within a job,
 //!   earlier-submitted stages win (Spark's default FIFO pool ordering by
 //!   job submission time).
-//! * [`FairScheduler`] — the job with the fewest currently running tasks
-//!   wins (the even-share steady state of Spark's fair scheduler pools).
+//! * [`FairScheduler`] — Spark's fair-scheduling algorithm over per-job
+//!   [`PoolSpec`]s: pools below their `minShare` first (by
+//!   running/minShare), then by running/`weight`. With default pools it
+//!   reduces to fewest-running-tasks-first.
 //!
-//! Time only moves at events (task phase completions and stage
-//! completion barriers); between events every processor-shared flow
-//! progresses at its cached fair-share rate — the standard fluid-flow
-//! DES. Everything is deterministic in `(submission order, SimOpts
-//! seed)`: repeated runs produce bit-identical clocks.
+//! Time only moves at events (task phase completions, stage completion
+//! barriers, locality-hold expiries, and speculation deadlines); between
+//! events every processor-shared flow progresses at its cached fair-share
+//! rate — the standard fluid-flow DES. Everything is deterministic in
+//! `(submission order, SimOpts seed)`: repeated runs produce bit-identical
+//! clocks, and with `locality_wait == 0`, speculation off, and no
+//! straggler model the core reproduces the PR-1 stage-granular behavior
+//! bit for bit.
 //!
 //! A stage *completes* `waves × task_overhead` after its last task
 //! finishes (the per-wave scheduling/launch overhead the barrier model
-//! charged at stage granularity); its [`StageCompletion`] is surfaced to
-//! the driver from [`advance`](EventSim::advance), which is the hook the
-//! engine uses to unlock DAG children.
+//! charged at stage granularity); its [`StageCompletion`] — which also
+//! carries the node every task actually ran on, so the engine can derive
+//! cache-locality preferences for child stages — is surfaced to the
+//! driver from [`advance`](EventSim::advance).
 
 use super::{Phase, SimOpts, StageStats, TaskSpec};
 use crate::cluster::{ClusterSpec, NodeId};
 use crate::util::stats::Summary;
 use crate::util::Prng;
+use std::cmp::Ordering;
 use std::collections::VecDeque;
 use std::fmt;
 
@@ -53,7 +77,8 @@ pub enum SchedulerMode {
     /// Jobs get cores in submission order (Spark's default).
     #[default]
     Fifo,
-    /// Running-task counts are balanced across jobs.
+    /// Running-task counts are balanced across jobs, honoring per-pool
+    /// `weight` / `minShare`.
     Fair,
 }
 
@@ -82,8 +107,55 @@ impl fmt::Display for SchedulerMode {
     }
 }
 
+/// FAIR-pool configuration for one job — Spark's per-pool `weight` /
+/// `minShare` from the fair-scheduler allocation file.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PoolSpec {
+    /// Relative core share once no pool is below its minimum.
+    pub weight: f64,
+    /// Cores this pool is entitled to before weighted sharing applies.
+    pub min_share: u32,
+}
+
+impl Default for PoolSpec {
+    fn default() -> PoolSpec {
+        PoolSpec { weight: 1.0, min_share: 0 }
+    }
+}
+
+/// `spark.speculation.*`: once a stage has at least `quantile` of its
+/// tasks finished, tasks running longer than `multiplier` × the median
+/// successful task duration get a backup copy on another node; the first
+/// finisher wins and the loser's resource flows are cancelled.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpecPolicy {
+    /// Fraction of the stage's tasks that must be complete before
+    /// speculation kicks in (Spark default 0.75).
+    pub quantile: f64,
+    /// How many times slower than the median a task must be to get a
+    /// backup (Spark default 1.5).
+    pub multiplier: f64,
+}
+
+/// Core-wide scheduling policy beyond the [`Scheduler`] trait: delay
+/// scheduling and speculative execution. `Default` disables both — the
+/// PR-1 stage-granular behavior, bit for bit.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SimPolicy {
+    /// `spark.locality.wait` in simulated seconds: how long a task with
+    /// preferred nodes holds for a local core before degrading to ANY.
+    /// The hold window is measured from its stage's submission — a
+    /// deterministic simplification of Spark's per-level reset timer.
+    pub locality_wait: f64,
+    /// `spark.speculation` (`None` = off).
+    pub speculation: Option<SpecPolicy>,
+}
+
 /// What a [`Scheduler`] sees of one runnable stage when picking the next
-/// task to admit.
+/// task to admit. Candidates are stages with at least one *admissible*
+/// pending task under the current free cores and locality state — a
+/// stage whose pending tasks are all holding for busy local nodes is not
+/// offered (delay scheduling).
 #[derive(Clone, Copy, Debug)]
 pub struct StageView {
     /// Handle of the stage (return this from [`Scheduler::pick`]).
@@ -96,10 +168,14 @@ pub struct StageView {
     pub pending: usize,
     /// Tasks of this stage's *job* currently holding cores.
     pub job_running: usize,
+    /// FAIR-pool weight of the job (1.0 unless configured).
+    pub weight: f64,
+    /// FAIR-pool minimum core share of the job (0 unless configured).
+    pub min_share: u32,
 }
 
-/// Task-admission policy: given the stages that currently have pending
-/// tasks, choose the stage whose next task gets the free core.
+/// Task-admission policy: given the stages that currently have admissible
+/// pending tasks, choose the stage whose next task gets the free core.
 ///
 /// Implementations must be deterministic functions of the view (the
 /// event core's reproducibility guarantee depends on it).
@@ -107,9 +183,9 @@ pub trait Scheduler {
     /// Policy name for reports.
     fn name(&self) -> &'static str;
 
-    /// Pick a stage from `candidates` (all have `pending > 0`; the slice
-    /// is ordered by handle). Returning `None` leaves the cores idle
-    /// until the next submission.
+    /// Pick a stage from `candidates` (all have an admissible pending
+    /// task; the slice is ordered by handle). Returning `None` leaves the
+    /// cores idle until the next submission.
     fn pick(&mut self, candidates: &[StageView]) -> Option<StageHandle>;
 }
 
@@ -128,8 +204,8 @@ impl Scheduler for FifoScheduler {
     }
 }
 
-/// FAIR: the job with the fewest running tasks first (ties: lowest job
-/// id, then submission sequence) — jobs converge to even core shares.
+/// FAIR: Spark's `FairSchedulingAlgorithm` over per-job pools — see
+/// [`fair_order`].
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FairScheduler;
 
@@ -139,8 +215,38 @@ impl Scheduler for FairScheduler {
     }
 
     fn pick(&mut self, candidates: &[StageView]) -> Option<StageHandle> {
-        candidates.iter().min_by_key(|s| (s.job_running, s.job, s.seq)).map(|s| s.handle)
+        candidates.iter().min_by(|a, b| fair_order(a, b)).map(|s| s.handle)
     }
+}
+
+/// Spark's fair comparator: pools below their `minShare` come first
+/// (ordered by running/minShare); otherwise pools order by
+/// running/`weight`. Ties break on (job, seq), making the order total
+/// and deterministic. With default pools (weight 1, minShare 0) this
+/// reduces to fewest-running-tasks-first — the historical FAIR behavior,
+/// bit for bit.
+fn fair_order(a: &StageView, b: &StageView) -> Ordering {
+    let a_needy = (a.job_running as u32) < a.min_share;
+    let b_needy = (b.job_running as u32) < b.min_share;
+    match (a_needy, b_needy) {
+        (true, false) => return Ordering::Less,
+        (false, true) => return Ordering::Greater,
+        _ => {}
+    }
+    let (ra, rb) = if a_needy {
+        (
+            a.job_running as f64 / a.min_share.max(1) as f64,
+            b.job_running as f64 / b.min_share.max(1) as f64,
+        )
+    } else {
+        (
+            a.job_running as f64 / a.weight.max(f64::MIN_POSITIVE),
+            b.job_running as f64 / b.weight.max(f64::MIN_POSITIVE),
+        )
+    };
+    ra.partial_cmp(&rb)
+        .unwrap_or(Ordering::Equal)
+        .then_with(|| (a.job, a.seq).cmp(&(b.job, b.seq)))
 }
 
 /// Instantiate the scheduler for a mode.
@@ -160,6 +266,10 @@ pub struct StageCompletion {
     /// Event-clock time of the completion.
     pub at: f64,
     pub stats: StageStats,
+    /// The node each task's *winning* copy ran on, indexed by task — the
+    /// engine derives cache-read locality preferences for child stages
+    /// from this (cached blocks live where their writer actually ran).
+    pub task_nodes: Vec<NodeId>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -168,7 +278,7 @@ enum ResKind {
     Nic,
 }
 
-/// Per-task run state.
+/// Per-task-copy run state.
 struct Running {
     stage: StageHandle,
     task_idx: usize,
@@ -184,6 +294,10 @@ struct Running {
     /// Rate computed during the event scan, reused by the advance pass
     /// (rates only change at events).
     rate: f64,
+    /// Current phase is a metered CPU phase (for cancellation refunds).
+    is_cpu: bool,
+    /// This entry is a speculative backup copy.
+    is_clone: bool,
 }
 
 /// Resource metering accumulated while a task enters phases.
@@ -198,14 +312,32 @@ struct Meter {
 struct StageRt {
     job: JobId,
     seq: usize,
-    /// Jittered phase lists, one per task.
+    /// Jittered (and possibly straggler-scaled) phase lists, one per task.
     phases: Vec<Vec<Phase>>,
-    preferred: Vec<Option<NodeId>>,
+    /// Re-jittered phase lists for speculative copies — no straggler
+    /// factor, the backup lands on a healthy node. Empty when speculation
+    /// is off.
+    clone_phases: Vec<Vec<Phase>>,
+    /// Preferred nodes per task (empty = ANY).
+    preferred: Vec<Vec<NodeId>>,
     pending: VecDeque<usize>,
+    /// How many pending tasks still carry a locality preference (drives
+    /// the hold-expiry event scan).
+    pending_pref: usize,
+    /// Task finished (winning copy completed).
+    done: Vec<bool>,
+    /// Task has a speculative backup copy (launched at most once).
+    cloned: Vec<bool>,
     /// Tasks not yet finished.
     unfinished: usize,
     submitted_at: f64,
     task_durations: Vec<f64>,
+    /// Node the winning copy of each task ran on.
+    task_nodes: Vec<NodeId>,
+    /// Tasks launched on one of their preferred nodes.
+    locality_hits: usize,
+    /// Speculative copies launched.
+    speculated: usize,
     cpu_secs: f64,
     disk_bytes: f64,
     net_bytes: f64,
@@ -223,29 +355,45 @@ struct StageRt {
 pub struct EventSim<'a> {
     cluster: &'a ClusterSpec,
     scheduler: Box<dyn Scheduler>,
+    policy: SimPolicy,
     now: f64,
     free_cores: Vec<i64>,
     disk_active: Vec<u32>,
     nic_active: Vec<u32>,
     running: Vec<Running>,
     stages: Vec<StageRt>,
-    /// Running task count per job (indexed by `JobId`).
+    /// Running task-copy count per job (indexed by `JobId`).
     jobs_running: Vec<usize>,
+    /// FAIR pool per job (default weight 1 / minShare 0).
+    pools: Vec<PoolSpec>,
     /// Round-robin cursor for locality-free placement.
     rr: usize,
-    /// Admission gate: only rescan pending work when cores were freed (or
-    /// stages submitted) since the last pass.
-    cores_freed: bool,
+    /// Admission gate: only rescan pending work when cores were freed,
+    /// stages were submitted, or a locality/speculation deadline passed
+    /// since the last pass.
+    admit_dirty: bool,
 }
 
 const EPS: f64 = 1e-9;
 
 impl<'a> EventSim<'a> {
+    /// A core with the default policy (no locality wait, no speculation)
+    /// — the PR-1 stage-granular behavior.
     pub fn new(cluster: &'a ClusterSpec, scheduler: Box<dyn Scheduler>) -> EventSim<'a> {
+        EventSim::with_policy(cluster, scheduler, SimPolicy::default())
+    }
+
+    /// A core with explicit delay-scheduling / speculation policy.
+    pub fn with_policy(
+        cluster: &'a ClusterSpec,
+        scheduler: Box<dyn Scheduler>,
+        policy: SimPolicy,
+    ) -> EventSim<'a> {
         let nodes = cluster.nodes as usize;
         EventSim {
             cluster,
             scheduler,
+            policy,
             now: 0.0,
             free_cores: vec![cluster.cores_per_node as i64; nodes],
             disk_active: vec![0u32; nodes],
@@ -253,8 +401,9 @@ impl<'a> EventSim<'a> {
             running: Vec::with_capacity(cluster.total_cores() as usize),
             stages: Vec::new(),
             jobs_running: Vec::new(),
+            pools: Vec::new(),
             rr: 0,
-            cores_freed: false,
+            admit_dirty: false,
         }
     }
 
@@ -268,26 +417,53 @@ impl<'a> EventSim<'a> {
         self.scheduler.name()
     }
 
+    /// The delay-scheduling / speculation policy in force.
+    pub fn policy(&self) -> &SimPolicy {
+        &self.policy
+    }
+
+    /// Assign `job` to a FAIR pool (weight / minShare). May be called
+    /// before or after the job's first submission; jobs default to
+    /// weight 1 / minShare 0.
+    pub fn set_pool(&mut self, job: JobId, pool: PoolSpec) {
+        if job >= self.pools.len() {
+            self.pools.resize(job + 1, PoolSpec::default());
+        }
+        self.pools[job] = pool;
+    }
+
     /// Submit a stage of `tasks` on behalf of `job`. CPU jitter is drawn
     /// per task, in task order, from a stream seeded by `opts.seed` —
     /// identical to the historical per-stage barrier runner, so a linear
-    /// DAG under FIFO reproduces the barrier path bit for bit.
+    /// DAG under FIFO reproduces the barrier path bit for bit. The
+    /// straggler tail (`opts.straggler`) and the speculative-copy
+    /// re-jitter draw from their own dedicated streams, so enabling
+    /// either never perturbs the base draws.
     pub fn submit(&mut self, job: JobId, tasks: &[TaskSpec], opts: &SimOpts) -> StageHandle {
         let mut rng = Prng::new(opts.seed ^ 0xD15C0);
-        let phases: Vec<Vec<Phase>> = tasks
-            .iter()
-            .map(|t| {
-                let factor = 1.0 + opts.jitter * (rng.f64() - 0.5) * 2.0;
-                t.phases
-                    .iter()
-                    .map(|p| match *p {
-                        Phase::Cpu { secs } => Phase::Cpu { secs: secs * factor },
-                        other => other,
-                    })
-                    .collect()
-            })
-            .collect();
-        let preferred: Vec<Option<NodeId>> = tasks.iter().map(|t| t.preferred_node).collect();
+        let mut srng = Prng::new(opts.seed ^ 0x57A6_61E5);
+        let mut crng = if self.policy.speculation.is_some() {
+            Some(Prng::new(opts.seed ^ 0xC1_0E5))
+        } else {
+            None
+        };
+        let mut phases: Vec<Vec<Phase>> = Vec::with_capacity(tasks.len());
+        let mut clone_phases: Vec<Vec<Phase>> = Vec::new();
+        for t in tasks {
+            let mut factor = 1.0 + opts.jitter * (rng.f64() - 0.5) * 2.0;
+            if let Some(s) = &opts.straggler {
+                if s.prob > 0.0 && srng.f64() < s.prob {
+                    factor *= s.factor.max(1.0);
+                }
+            }
+            phases.push(scale_cpu(&t.phases, factor));
+            if let Some(crng) = crng.as_mut() {
+                let cf = 1.0 + opts.jitter * (crng.f64() - 0.5) * 2.0;
+                clone_phases.push(scale_cpu(&t.phases, cf));
+            }
+        }
+        let preferred: Vec<Vec<NodeId>> = tasks.iter().map(|t| t.preferred_nodes.clone()).collect();
+        let pending_pref = preferred.iter().filter(|p| !p.is_empty()).count();
 
         // One wave overhead per `total_cores` tasks, charged between the
         // last task finish and the completion event (the engine's
@@ -301,15 +477,25 @@ impl<'a> EventSim<'a> {
         if job >= self.jobs_running.len() {
             self.jobs_running.resize(job + 1, 0);
         }
+        if job >= self.pools.len() {
+            self.pools.resize(job + 1, PoolSpec::default());
+        }
         self.stages.push(StageRt {
             job,
             seq: handle,
             phases,
+            clone_phases,
             preferred,
             pending: (0..n).collect(),
+            pending_pref,
+            done: vec![false; n],
+            cloned: vec![false; n],
             unfinished: n,
             submitted_at: self.now,
             task_durations: Vec::with_capacity(n),
+            task_nodes: vec![0; n],
+            locality_hits: 0,
+            speculated: 0,
             cpu_secs: 0.0,
             disk_bytes: 0.0,
             net_bytes: 0.0,
@@ -317,7 +503,7 @@ impl<'a> EventSim<'a> {
             completion_due: if n == 0 { Some(self.now + completion_overhead) } else { None },
             emitted: false,
         });
-        self.cores_freed = true;
+        self.admit_dirty = true;
         handle
     }
 
@@ -330,9 +516,11 @@ impl<'a> EventSim<'a> {
                 return Some(c);
             }
             self.admit();
+            self.speculate();
 
-            // ---- Find the next event (task phase end or stage
-            // completion barrier), caching PS fair-share rates ----
+            // ---- Find the next event (task phase end, stage completion
+            // barrier, locality-hold expiry, or speculation deadline),
+            // caching PS fair-share rates ----
             let mut dt = f64::INFINITY;
             for r in &mut self.running {
                 let t = if r.is_ps {
@@ -363,12 +551,64 @@ impl<'a> EventSim<'a> {
                     }
                 }
             }
+            if self.policy.locality_wait > 0.0 {
+                // A held task's hold expiry is an event: the admission
+                // scan must rerun when a stage degrades to ANY.
+                for s in &self.stages {
+                    if s.pending_pref > 0 && !s.pending.is_empty() {
+                        let t = s.submitted_at + self.policy.locality_wait - self.now;
+                        if t > EPS && t < dt {
+                            dt = t;
+                        }
+                    }
+                }
+            }
+            if let Some(spec) = self.policy.speculation {
+                // The instant a running task crosses multiplier × median
+                // is an event (the median only moves at completions, which
+                // are themselves events — so this scan is exact).
+                let overhead = self.cluster.task_overhead;
+                let mut memo: Vec<Option<Option<f64>>> = vec![None; self.stages.len()];
+                for r in &self.running {
+                    if r.is_clone {
+                        continue;
+                    }
+                    let st = &self.stages[r.stage];
+                    if st.done[r.task_idx] || st.cloned[r.task_idx] {
+                        continue;
+                    }
+                    let th = *memo[r.stage].get_or_insert_with(|| spec_threshold(st, &spec));
+                    let Some(th) = th else { continue };
+                    let t = r.started + th - overhead - self.now;
+                    if t > EPS && t < dt {
+                        dt = t;
+                    }
+                }
+            }
             if dt == f64::INFINITY {
                 debug_assert!(self.running.is_empty());
                 return None; // fully idle
             }
             let dt = dt.max(0.0);
+            let prev_now = self.now;
             self.now += dt;
+            if self.policy.locality_wait > 0.0 && !self.admit_dirty {
+                // A hold expiry frees no cores but must re-trigger the
+                // admission scan. Only mark dirty when this event actually
+                // crossed a stage's hold deadline, so the core-freed
+                // admission gate keeps its bite on the common path.
+                // (Speculation deadlines need no admission rescan —
+                // `speculate` runs every iteration regardless.)
+                for s in &self.stages {
+                    if s.pending_pref > 0 && !s.pending.is_empty() {
+                        let dl = s.submitted_at + self.policy.locality_wait;
+                        if dl <= self.now + EPS && dl > prev_now + EPS {
+                            self.admit_dirty = true;
+                            break;
+                        }
+                    }
+                }
+            }
 
             // ---- Advance all active flows by dt (cached pre-event
             // rates), then extract completions, then start successor
@@ -401,14 +641,23 @@ impl<'a> EventSim<'a> {
                         ResKind::Nic => self.nic_active[r.node as usize] -= 1,
                     }
                 }
+                // A sibling copy may have won at this very event; this
+                // copy is then moot — release its core and drop it.
+                if self.stages[r.stage].done[r.task_idx] {
+                    self.release_core(r.stage, r.node);
+                    continue;
+                }
                 r.phase_idx += 1;
-                let (stage, node, started) = (r.stage, r.node, r.started);
+                let (stage, task_idx, node, started) = (r.stage, r.task_idx, r.node, r.started);
+                let is_clone = r.is_clone;
                 let mut meter = Meter::default();
                 let entered = {
                     let st = &self.stages[stage];
+                    let plan =
+                        if is_clone { &st.clone_phases[task_idx] } else { &st.phases[task_idx] };
                     enter_phase(
                         self.cluster,
-                        &st.phases[r.task_idx],
+                        plan,
                         r,
                         self.now,
                         &mut self.disk_active,
@@ -419,7 +668,7 @@ impl<'a> EventSim<'a> {
                 self.apply_meter(stage, &meter);
                 match entered {
                     Some(run) => self.running.push(run),
-                    None => self.finish_task(stage, node, started),
+                    None => self.finish_task(stage, task_idx, node, started),
                 }
             }
         }
@@ -444,18 +693,65 @@ impl<'a> EventSim<'a> {
         st.net_bytes += meter.net_bytes;
     }
 
-    /// A task of `stage` finished on `node` (started at `started`).
-    fn finish_task(&mut self, stage: StageHandle, node: NodeId, started: f64) {
+    /// A copy released its core without finishing its task (moot or
+    /// cancelled sibling of an already-won speculation race).
+    fn release_core(&mut self, stage: StageHandle, node: NodeId) {
         self.free_cores[node as usize] += 1;
-        self.cores_freed = true;
+        self.admit_dirty = true;
         let job = self.stages[stage].job;
         self.jobs_running[job] -= 1;
-        let st = &mut self.stages[stage];
-        st.task_durations.push(self.now - started + self.cluster.task_overhead);
-        st.unfinished -= 1;
-        if st.unfinished == 0 {
-            st.completion_due = Some(self.now + st.completion_overhead);
+    }
+
+    /// The winning copy of `stage`'s task `task_idx` finished on `node`
+    /// (started at `started`). Cancels the losing sibling, if any.
+    fn finish_task(&mut self, stage: StageHandle, task_idx: usize, node: NodeId, started: f64) {
+        self.free_cores[node as usize] += 1;
+        self.admit_dirty = true;
+        let job = self.stages[stage].job;
+        self.jobs_running[job] -= 1;
+        let overhead = self.cluster.task_overhead;
+        let had_clone = {
+            let st = &mut self.stages[stage];
+            st.done[task_idx] = true;
+            st.task_nodes[task_idx] = node;
+            st.task_durations.push(self.now - started + overhead);
+            st.unfinished -= 1;
+            if st.unfinished == 0 {
+                st.completion_due = Some(self.now + st.completion_overhead);
+            }
+            st.cloned[task_idx]
+        };
+        if had_clone {
+            self.cancel_sibling(stage, task_idx);
         }
+    }
+
+    /// First-finisher-wins: cancel the still-running sibling copy of a
+    /// speculated task — free its core, withdraw its processor-shared
+    /// flow mid-stream, and refund the stage's meters for the work the
+    /// loser never completed (phases it never entered were never metered).
+    fn cancel_sibling(&mut self, stage: StageHandle, task_idx: usize) {
+        let Some(j) =
+            self.running.iter().position(|r| r.stage == stage && r.task_idx == task_idx)
+        else {
+            return; // the sibling finished at this same event: handled as moot
+        };
+        let r = self.running.swap_remove(j);
+        if r.is_ps {
+            match r.res {
+                ResKind::Disk => {
+                    self.disk_active[r.node as usize] -= 1;
+                    self.stages[stage].disk_bytes -= r.remaining.max(0.0);
+                }
+                ResKind::Nic => {
+                    self.nic_active[r.node as usize] -= 1;
+                    self.stages[stage].net_bytes -= r.remaining.max(0.0);
+                }
+            }
+        } else if r.is_cpu {
+            self.stages[stage].cpu_secs -= (r.end_time - self.now).max(0.0);
+        }
+        self.release_core(stage, r.node);
     }
 
     fn any_free_core(&self) -> bool {
@@ -486,42 +782,99 @@ impl<'a> EventSim<'a> {
             disk_bytes: st.disk_bytes,
             net_bytes: st.net_bytes,
             tasks: st.phases.len(),
+            locality_hits: st.locality_hits,
+            speculated: st.speculated,
         };
-        Some(StageCompletion { handle: h, job: st.job, at: due, stats })
+        Some(StageCompletion {
+            handle: h,
+            job: st.job,
+            at: due,
+            stats,
+            task_nodes: std::mem::take(&mut st.task_nodes),
+        })
     }
 
-    /// Fill free cores from pending stages, in scheduler order.
+    /// The stage's first admissible pending task under the current free
+    /// cores: a task launches NODE_LOCAL when one of its preferred nodes
+    /// has a free core; a task with no preference — or one whose stage's
+    /// locality hold has expired — takes any free core (the caller
+    /// guarantees one exists). Tasks still holding for busy local nodes
+    /// are skipped: that is delay scheduling. Returns
+    /// `(queue position, task index, Some(local node) | None for ANY)`.
+    fn find_admissible(&self, st: &StageRt) -> Option<(usize, usize, Option<NodeId>)> {
+        let nodes = self.free_cores.len();
+        let expired = self.policy.locality_wait <= 0.0
+            || self.now + EPS >= st.submitted_at + self.policy.locality_wait;
+        for (pos, &ti) in st.pending.iter().enumerate() {
+            let prefs = &st.preferred[ti];
+            if let Some(&n) = prefs.iter().find(|&&n| self.free_cores[n as usize % nodes] > 0) {
+                return Some((pos, ti, Some((n as usize % nodes) as NodeId)));
+            }
+            if prefs.is_empty() || expired {
+                return Some((pos, ti, None));
+            }
+        }
+        None
+    }
+
+    /// Fill free cores from pending stages, in scheduler order, honoring
+    /// per-task locality (delay scheduling).
     fn admit(&mut self) {
-        if !self.cores_freed {
+        if !self.admit_dirty {
             return;
         }
-        self.cores_freed = false;
+        self.admit_dirty = false;
         loop {
             if !self.any_free_core() {
                 break;
             }
-            let candidates: Vec<StageView> = self
-                .stages
-                .iter()
-                .enumerate()
-                .filter(|(_, s)| !s.pending.is_empty())
-                .map(|(h, s)| StageView {
+            // Per-stage admissible picks under the current free cores and
+            // locality state.
+            let mut candidates: Vec<StageView> = Vec::new();
+            let mut picks: Vec<(usize, usize, Option<NodeId>)> = Vec::new();
+            for (h, s) in self.stages.iter().enumerate() {
+                if s.pending.is_empty() {
+                    continue;
+                }
+                let Some(pick) = self.find_admissible(s) else { continue };
+                let pool = self.pools.get(s.job).copied().unwrap_or_default();
+                candidates.push(StageView {
                     handle: h,
                     job: s.job,
                     seq: s.seq,
                     pending: s.pending.len(),
                     job_running: self.jobs_running[s.job],
-                })
-                .collect();
+                    weight: pool.weight,
+                    min_share: pool.min_share,
+                });
+                picks.push(pick);
+            }
             if candidates.is_empty() {
                 break;
             }
             let Some(h) = self.scheduler.pick(&candidates) else {
                 break;
             };
-            debug_assert!(!self.stages[h].pending.is_empty(), "scheduler picked an idle stage");
-            let ti = self.stages[h].pending.pop_front().expect("candidate has pending tasks");
-            let node = self.pick_node(self.stages[h].preferred[ti]);
+            let ci = candidates
+                .iter()
+                .position(|c| c.handle == h)
+                .expect("scheduler picked a non-candidate stage");
+            let (pos, ti, local) = picks[ci];
+            {
+                let st = &mut self.stages[h];
+                let removed = st.pending.remove(pos).expect("pick position is valid");
+                debug_assert_eq!(removed, ti);
+                if !st.preferred[ti].is_empty() {
+                    st.pending_pref -= 1;
+                }
+            }
+            let (node, is_local) = match local {
+                Some(n) => (n, true),
+                None => (self.pick_node_any(), false),
+            };
+            if is_local {
+                self.stages[h].locality_hits += 1;
+            }
             self.free_cores[node as usize] -= 1;
             self.jobs_running[self.stages[h].job] += 1;
             let r = Running {
@@ -535,6 +888,8 @@ impl<'a> EventSim<'a> {
                 res: ResKind::Disk,
                 started: self.now,
                 rate: 0.0,
+                is_cpu: false,
+                is_clone: false,
             };
             let mut meter = Meter::default();
             let entered = {
@@ -552,21 +907,91 @@ impl<'a> EventSim<'a> {
             self.apply_meter(h, &meter);
             match entered {
                 Some(run) => self.running.push(run),
-                None => self.finish_task(h, node, self.now), // zero-work task
+                None => self.finish_task(h, ti, node, self.now), // zero-work task
             }
         }
     }
 
-    /// Preferred node if it has a free core, else round-robin scan. Call
-    /// only when some core is free.
-    fn pick_node(&mut self, preferred: Option<NodeId>) -> NodeId {
-        let nodes = self.free_cores.len();
-        if let Some(p) = preferred {
-            let p = p as usize % nodes;
-            if self.free_cores[p] > 0 {
-                return p as NodeId;
+    /// Launch backup copies of stragglers: for every stage past its
+    /// speculation quantile, any running original whose elapsed time
+    /// exceeds multiplier × the median successful duration is cloned onto
+    /// a *different* node (first finisher wins; see `cancel_sibling`).
+    /// At most one backup per task.
+    fn speculate(&mut self) {
+        let Some(spec) = self.policy.speculation else { return };
+        if !self.any_free_core() {
+            return;
+        }
+        let overhead = self.cluster.task_overhead;
+        let mut memo: Vec<Option<Option<f64>>> = vec![None; self.stages.len()];
+        let mut cands: Vec<(StageHandle, usize, NodeId)> = Vec::new();
+        for r in &self.running {
+            if r.is_clone {
+                continue;
+            }
+            let st = &self.stages[r.stage];
+            if st.done[r.task_idx] || st.cloned[r.task_idx] {
+                continue;
+            }
+            let th = *memo[r.stage].get_or_insert_with(|| spec_threshold(st, &spec));
+            let Some(th) = th else { continue };
+            if self.now - r.started + overhead >= th - EPS {
+                cands.push((r.stage, r.task_idx, r.node));
             }
         }
+        cands.sort_unstable();
+        for (h, ti, orig) in cands {
+            // A backup must land on a different machine than the copy it
+            // races; if none has a free core, retry at a later event.
+            let Some(node) = self.pick_node_excluding(orig) else { continue };
+            self.free_cores[node as usize] -= 1;
+            self.jobs_running[self.stages[h].job] += 1;
+            {
+                let st = &mut self.stages[h];
+                st.cloned[ti] = true;
+                st.speculated += 1;
+            }
+            let r = Running {
+                stage: h,
+                task_idx: ti,
+                node,
+                phase_idx: 0,
+                remaining: 0.0,
+                end_time: 0.0,
+                is_ps: false,
+                res: ResKind::Disk,
+                started: self.now,
+                rate: 0.0,
+                is_cpu: false,
+                is_clone: true,
+            };
+            let mut meter = Meter::default();
+            let entered = {
+                let st = &self.stages[h];
+                enter_phase(
+                    self.cluster,
+                    &st.clone_phases[ti],
+                    r,
+                    self.now,
+                    &mut self.disk_active,
+                    &mut self.nic_active,
+                    &mut meter,
+                )
+            };
+            self.apply_meter(h, &meter);
+            match entered {
+                Some(run) => self.running.push(run),
+                None => self.finish_task(h, ti, node, self.now), // zero-work clone wins
+            }
+            if !self.any_free_core() {
+                break;
+            }
+        }
+    }
+
+    /// Round-robin scan for any free core. Call only when one exists.
+    fn pick_node_any(&mut self) -> NodeId {
+        let nodes = self.free_cores.len();
         for k in 0..nodes {
             let cand = (self.rr + k) % nodes;
             if self.free_cores[cand] > 0 {
@@ -574,8 +999,60 @@ impl<'a> EventSim<'a> {
                 return cand as NodeId;
             }
         }
-        unreachable!("pick_node called with no free core")
+        unreachable!("pick_node_any called with no free core")
     }
+
+    /// Round-robin scan for a free core on any node other than `exclude`
+    /// (speculative copies must race from a different machine).
+    fn pick_node_excluding(&mut self, exclude: NodeId) -> Option<NodeId> {
+        let nodes = self.free_cores.len();
+        for k in 0..nodes {
+            let cand = (self.rr + k) % nodes;
+            if cand as NodeId != exclude && self.free_cores[cand] > 0 {
+                self.rr = (cand + 1) % nodes;
+                return Some(cand as NodeId);
+            }
+        }
+        None
+    }
+}
+
+/// Scale the CPU phases of a task's plan by `factor` (jitter and the
+/// straggler tail apply to compute, not to I/O volumes — bytes moved are
+/// a property of the data, not of the executor's health).
+fn scale_cpu(phases: &[Phase], factor: f64) -> Vec<Phase> {
+    phases
+        .iter()
+        .map(|p| match *p {
+            Phase::Cpu { secs } => Phase::Cpu { secs: secs * factor },
+            other => other,
+        })
+        .collect()
+}
+
+/// The stage's speculation threshold: `multiplier × median successful
+/// duration`, or `None` while fewer than `quantile` of its tasks are
+/// done (Spark's `minFinishedForSpeculation`).
+fn spec_threshold(st: &StageRt, spec: &SpecPolicy) -> Option<f64> {
+    let n = st.phases.len();
+    if n == 0 || st.clone_phases.is_empty() {
+        return None;
+    }
+    let done = n - st.unfinished;
+    let min_done = ((spec.quantile * n as f64).ceil() as usize).max(1);
+    if done < min_done {
+        return None;
+    }
+    Some(spec.multiplier * median(&st.task_durations))
+}
+
+/// Upper median (Spark's `durations(medianIndex)`); `xs` must be
+/// non-empty.
+fn median(xs: &[f64]) -> f64 {
+    debug_assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));
+    v[v.len() / 2]
 }
 
 /// Start the task's next non-noop phase (or return `None` when all
@@ -603,15 +1080,18 @@ fn enter_phase(
                 let d = secs / cluster.cpu_speed;
                 meter.cpu_secs += d;
                 r.is_ps = false;
+                r.is_cpu = true;
                 r.end_time = now + d;
             }
             Phase::Fixed { secs } => {
                 r.is_ps = false;
+                r.is_cpu = false;
                 r.end_time = now + secs;
             }
             Phase::DiskRead { bytes } | Phase::DiskWrite { bytes } => {
                 meter.disk_bytes += bytes;
                 r.is_ps = true;
+                r.is_cpu = false;
                 r.res = ResKind::Disk;
                 r.remaining = bytes;
                 disk_active[r.node as usize] += 1;
@@ -619,6 +1099,7 @@ fn enter_phase(
             Phase::NetIn { bytes } => {
                 meter.net_bytes += bytes;
                 r.is_ps = true;
+                r.is_cpu = false;
                 r.res = ResKind::Nic;
                 r.remaining = bytes;
                 nic_active[r.node as usize] += 1;
@@ -639,7 +1120,7 @@ mod tests {
     }
 
     fn opts0() -> SimOpts {
-        SimOpts { jitter: 0.0, seed: 1 }
+        SimOpts { jitter: 0.0, seed: 1, straggler: None }
     }
 
     fn cpu_tasks(n: usize, secs: f64) -> Vec<TaskSpec> {
@@ -722,6 +1203,7 @@ mod tests {
         assert_eq!(done.handle, h);
         assert!(done.at < 1e-9);
         assert_eq!(done.stats.tasks, 0);
+        assert!(done.task_nodes.is_empty());
         assert!(sim.advance().is_none());
     }
 
@@ -750,7 +1232,11 @@ mod tests {
                         ])
                     })
                     .collect();
-                sim.submit(j, &tasks, &SimOpts { jitter: 0.08, seed: 7 + j as u64 });
+                sim.submit(
+                    j,
+                    &tasks,
+                    &SimOpts { jitter: 0.08, seed: 7 + j as u64, straggler: None },
+                );
             }
             sim.drain().iter().map(|d| (d.handle, d.at)).collect::<Vec<_>>()
         };
@@ -775,5 +1261,275 @@ mod tests {
         let done = sim.advance().unwrap();
         assert!(done.at.is_finite(), "NaN phases must not poison the clock");
         assert!((done.at - 1.0).abs() < 1e-9, "{}", done.at);
+    }
+
+    // ---- task-granular features: delay scheduling ----
+
+    #[test]
+    fn delay_scheduling_holds_then_degrades() {
+        // 3 × 1 s CPU tasks all preferring node 0 (2 cores). Two run
+        // locally at t=0; the third:
+        //   wait=0   → degrades immediately, runs remotely, stage = 1.0 s
+        //   wait=0.5 → holds 0.5 s, then runs remotely, stage = 1.5 s
+        //   wait=2   → holds until a local core frees at t=1, stage = 2.0 s
+        let c = quiet();
+        let run_with = |wait: f64| {
+            let mut sim = EventSim::with_policy(
+                &c,
+                Box::new(FifoScheduler),
+                SimPolicy { locality_wait: wait, speculation: None },
+            );
+            let tasks: Vec<TaskSpec> =
+                (0..3).map(|_| TaskSpec::new(vec![Phase::Cpu { secs: 1.0 }]).on(0)).collect();
+            sim.submit(0, &tasks, &opts0());
+            let done = sim.advance().unwrap();
+            assert!(sim.advance().is_none());
+            (done.at, done.stats.locality_hits)
+        };
+        let (t0, h0) = run_with(0.0);
+        assert!((t0 - 1.0).abs() < 1e-9, "wait=0 must not hold: {t0}");
+        assert_eq!(h0, 2);
+        let (t1, h1) = run_with(0.5);
+        assert!((t1 - 1.5).abs() < 1e-9, "held 0.5 s then ran remotely: {t1}");
+        assert_eq!(h1, 2);
+        let (t2, h2) = run_with(2.0);
+        assert!((t2 - 2.0).abs() < 1e-9, "patient wait keeps the task local: {t2}");
+        assert_eq!(h2, 3, "all three tasks NODE_LOCAL under a patient wait");
+    }
+
+    #[test]
+    fn held_stage_cedes_cores_to_other_jobs() {
+        // Job 0 hogs node 0; job 1's task holds for node 0 under a long
+        // locality wait, so job 2's preference-free task must take the
+        // idle node-1 core instead of queuing behind job 1's FIFO
+        // priority — the point of delay scheduling.
+        let mut c = quiet();
+        c.nodes = 2;
+        c.cores_per_node = 1;
+        let mut sim = EventSim::with_policy(
+            &c,
+            Box::new(FifoScheduler),
+            SimPolicy { locality_wait: 10.0, speculation: None },
+        );
+        sim.submit(0, &[TaskSpec::new(vec![Phase::Cpu { secs: 5.0 }]).on(0)], &opts0());
+        sim.submit(1, &[TaskSpec::new(vec![Phase::Cpu { secs: 1.0 }]).on(0)], &opts0());
+        sim.submit(2, &[TaskSpec::new(vec![Phase::Cpu { secs: 1.0 }])], &opts0());
+        let done = sim.drain();
+        let j2 = done.iter().find(|d| d.job == 2).unwrap();
+        assert!((j2.at - 1.0).abs() < 1e-9, "job 2 must take the idle node at t=0: {}", j2.at);
+        let j0 = done.iter().find(|d| d.job == 0).unwrap();
+        assert!((j0.at - 5.0).abs() < 1e-9, "{}", j0.at);
+        let j1 = done.iter().find(|d| d.job == 1).unwrap();
+        assert!((j1.at - 6.0).abs() < 1e-9, "job 1 holds for its local core: {}", j1.at);
+        assert_eq!(j1.stats.locality_hits, 1, "the held task launches NODE_LOCAL");
+    }
+
+    // ---- task-granular features: speculative execution ----
+
+    #[test]
+    fn speculative_copy_escapes_a_contended_disk() {
+        // Node 0's disk (100 MB/s) is hogged by a 1 GB reader (job 1).
+        // Job 0 has a quick CPU task and a 100 MB read pinned to node 0.
+        // Without speculation the read shares the disk at 50 MB/s and
+        // takes 2 s; with speculation a backup copy launches on another
+        // node at t=0.2 (median 0.1 s × multiplier 2), reads alone at
+        // 100 MB/s, and wins at t=1.2. The loser's flow is cancelled, so
+        // the hog accelerates (10.6 s vs 11.0 s) and job 0's disk meter
+        // is refunded for the 40 MB the loser never read.
+        let mut c = quiet();
+        c.disk_bw = 100.0e6;
+        let run_with = |spec_on: bool| {
+            let policy = SimPolicy {
+                locality_wait: 0.0,
+                speculation: spec_on
+                    .then_some(SpecPolicy { quantile: 0.5, multiplier: 2.0 }),
+            };
+            let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+            sim.submit(
+                1,
+                &[TaskSpec::new(vec![Phase::DiskRead { bytes: 1000e6 }]).on(0)],
+                &opts0(),
+            );
+            sim.submit(
+                0,
+                &[
+                    TaskSpec::new(vec![Phase::Cpu { secs: 0.1 }]).on(1),
+                    TaskSpec::new(vec![Phase::DiskRead { bytes: 100e6 }]).on(0),
+                ],
+                &opts0(),
+            );
+            sim.drain()
+        };
+
+        let off = run_with(false);
+        let off0 = off.iter().find(|d| d.job == 0).unwrap();
+        let off1 = off.iter().find(|d| d.job == 1).unwrap();
+        assert!((off0.at - 2.0).abs() < 1e-6, "shared read: {}", off0.at);
+        assert!((off1.at - 11.0).abs() < 1e-6, "hog without cancel: {}", off1.at);
+        assert_eq!(off0.stats.speculated, 0);
+
+        let on = run_with(true);
+        let on0 = on.iter().find(|d| d.job == 0).unwrap();
+        let on1 = on.iter().find(|d| d.job == 1).unwrap();
+        assert!((on0.at - 1.2).abs() < 1e-6, "backup copy wins at 1.2 s: {}", on0.at);
+        assert_eq!(on0.stats.speculated, 1);
+        assert!((on1.at - 10.6).abs() < 1e-6, "hog accelerates after cancel: {}", on1.at);
+        // Meter refund: 100 MB original − 40 MB never read + 100 MB clone.
+        assert!(
+            (on0.stats.disk_bytes - 160e6).abs() < 1.0,
+            "loser's unread bytes refunded: {}",
+            on0.stats.disk_bytes
+        );
+        // The winning copy's node is recorded for locality parentage.
+        assert_ne!(on0.task_nodes[1], 0, "winner ran off node 0");
+    }
+
+    #[test]
+    fn speculation_is_a_noop_without_stragglers() {
+        // Healthy cluster, ±4 % jitter: no task exceeds 1.5 × median, so
+        // enabling speculation changes nothing — same clock, no clones.
+        let c = ClusterSpec::mini();
+        let opts = SimOpts { jitter: 0.04, seed: 42, straggler: None };
+        let mk = |policy: SimPolicy| {
+            let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+            sim.submit(0, &cpu_tasks(16, 1.0), &opts);
+            let done = sim.advance().unwrap();
+            (done.at, done.stats.speculated)
+        };
+        let (off, _) = mk(SimPolicy::default());
+        let (on, clones) = mk(SimPolicy {
+            locality_wait: 0.0,
+            speculation: Some(SpecPolicy { quantile: 0.75, multiplier: 1.5 }),
+        });
+        assert_eq!(clones, 0);
+        assert!((on - off).abs() < 1e-12, "speculation must be free on a healthy stage");
+    }
+
+    #[test]
+    fn straggler_tail_triggers_clones_and_recovers() {
+        // All-straggler probability on one task out of 16: prob high
+        // enough that the tail exists, speculation on → the stage must
+        // beat the speculation-off run and launch at least one clone.
+        let c = quiet();
+        let opts = SimOpts {
+            jitter: 0.02,
+            seed: 7,
+            straggler: Some(super::super::Straggler { prob: 0.5, factor: 10.0 }),
+        };
+        // A low quantile so healthy finishers unlock speculation even
+        // when around half the tasks straggle.
+        let mk = |spec: Option<SpecPolicy>| {
+            let mut sim = EventSim::with_policy(
+                &c,
+                Box::new(FifoScheduler),
+                SimPolicy { locality_wait: 0.0, speculation: spec },
+            );
+            sim.submit(0, &cpu_tasks(16, 1.0), &opts);
+            let done = sim.advance().unwrap();
+            (done.at, done.stats.speculated)
+        };
+        let (off, _) = mk(None);
+        let (on, clones) = mk(Some(SpecPolicy { quantile: 0.12, multiplier: 1.5 }));
+        assert!(clones > 0, "stragglers must be speculated");
+        assert!(
+            on < off * 0.6,
+            "speculation must recover the straggler tail: on {on:.2}s vs off {off:.2}s"
+        );
+        // Determinism: repeat bit-identically.
+        let (on2, clones2) = mk(Some(SpecPolicy { quantile: 0.12, multiplier: 1.5 }));
+        assert_eq!(on, on2);
+        assert_eq!(clones, clones2);
+    }
+
+    // ---- task-granular features: weighted FAIR pools ----
+
+    #[test]
+    fn fair_pools_honor_weight() {
+        // 8 cores, 16 × 1 s tasks per job; weight 3 vs 1 → 6/2 core
+        // split → weighted job at t=3, the other at t=4 (hand-traced).
+        let c = quiet();
+        let mut sim = EventSim::new(&c, Box::new(FairScheduler));
+        sim.set_pool(0, PoolSpec { weight: 3.0, min_share: 0 });
+        sim.submit(0, &cpu_tasks(16, 1.0), &opts0());
+        sim.submit(1, &cpu_tasks(16, 1.0), &opts0());
+        let done = sim.drain();
+        let j0 = done.iter().find(|d| d.job == 0).unwrap().at;
+        let j1 = done.iter().find(|d| d.job == 1).unwrap().at;
+        assert!((j0 - 3.0).abs() < 1e-9, "weight-3 pool finishes at {j0}");
+        assert!((j1 - 4.0).abs() < 1e-9, "weight-1 pool finishes at {j1}");
+    }
+
+    #[test]
+    fn fair_pools_honor_min_share() {
+        // Job 1 holds minShare 6 of the 8 cores: it is "needy" until it
+        // runs 6 tasks, mirroring the weight trace → j1 at t=3, j0 at t=4.
+        let c = quiet();
+        let mut sim = EventSim::new(&c, Box::new(FairScheduler));
+        sim.set_pool(1, PoolSpec { weight: 1.0, min_share: 6 });
+        sim.submit(0, &cpu_tasks(16, 1.0), &opts0());
+        sim.submit(1, &cpu_tasks(16, 1.0), &opts0());
+        let done = sim.drain();
+        let j0 = done.iter().find(|d| d.job == 0).unwrap().at;
+        let j1 = done.iter().find(|d| d.job == 1).unwrap().at;
+        assert!((j1 - 3.0).abs() < 1e-9, "minShare-6 pool finishes at {j1}");
+        assert!((j0 - 4.0).abs() < 1e-9, "default pool finishes at {j0}");
+    }
+
+    #[test]
+    fn default_pools_reduce_to_even_shares() {
+        // Without explicit pools the weighted comparator must reproduce
+        // fewest-running-first: two identical jobs split 4/4 and tie.
+        let c = quiet();
+        let mut sim = EventSim::new(&c, Box::new(FairScheduler));
+        sim.submit(0, &cpu_tasks(8, 1.0), &opts0());
+        sim.submit(1, &cpu_tasks(8, 1.0), &opts0());
+        for d in sim.drain() {
+            assert!((d.at - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn task_granular_features_compose_deterministically() {
+        // Locality wait + speculation + stragglers + FAIR pools, three
+        // jobs: two runs must agree bit for bit.
+        let c = ClusterSpec::mini();
+        let mk = || {
+            let mut sim = EventSim::with_policy(
+                &c,
+                Box::new(FairScheduler),
+                SimPolicy {
+                    locality_wait: 0.3,
+                    speculation: Some(SpecPolicy { quantile: 0.6, multiplier: 1.3 }),
+                },
+            );
+            sim.set_pool(1, PoolSpec { weight: 2.0, min_share: 2 });
+            for j in 0..3usize {
+                let tasks: Vec<TaskSpec> = (0..12)
+                    .map(|i| {
+                        TaskSpec::new(vec![
+                            Phase::Cpu { secs: 0.2 + (i % 4) as f64 * 0.03 },
+                            Phase::DiskWrite { bytes: 3e6 },
+                        ])
+                        .on((i % 4) as NodeId)
+                    })
+                    .collect();
+                sim.submit(
+                    j,
+                    &tasks,
+                    &SimOpts {
+                        jitter: 0.05,
+                        seed: 11 + j as u64,
+                        straggler: Some(super::super::Straggler { prob: 0.2, factor: 6.0 }),
+                    },
+                );
+            }
+            sim.drain()
+                .iter()
+                .map(|d| (d.handle, d.at, d.stats.speculated, d.stats.locality_hits))
+                .collect::<Vec<_>>()
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a, b, "composed features must reproduce bit-identically");
     }
 }

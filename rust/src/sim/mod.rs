@@ -35,8 +35,8 @@
 pub mod event;
 
 pub use event::{
-    scheduler_for, EventSim, FairScheduler, FifoScheduler, JobId, Scheduler, SchedulerMode,
-    StageCompletion, StageHandle, StageView,
+    scheduler_for, EventSim, FairScheduler, FifoScheduler, JobId, PoolSpec, Scheduler,
+    SchedulerMode, SimPolicy, SpecPolicy, StageCompletion, StageHandle, StageView,
 };
 
 use crate::cluster::{ClusterSpec, NodeId};
@@ -74,22 +74,31 @@ impl Phase {
     }
 }
 
-/// A schedulable task: its phases plus optional locality preference.
+/// A schedulable task: its phases plus optional locality preferences.
 #[derive(Clone, Debug, Default)]
 pub struct TaskSpec {
     pub phases: Vec<Phase>,
-    /// Preferred node (data locality); the scheduler honors it when that
-    /// node has a free core at admission time.
-    pub preferred_node: Option<NodeId>,
+    /// Preferred nodes (data locality), in preference order; empty = no
+    /// preference (ANY). A task launches NODE_LOCAL when one of these has
+    /// a free core at admission time; otherwise it *holds* for up to the
+    /// core's `locality_wait` (delay scheduling) before degrading to ANY.
+    pub preferred_nodes: Vec<NodeId>,
 }
 
 impl TaskSpec {
     pub fn new(phases: Vec<Phase>) -> TaskSpec {
-        TaskSpec { phases, preferred_node: None }
+        TaskSpec { phases, preferred_nodes: Vec::new() }
     }
 
+    /// Prefer a single node (the common block-placement case).
     pub fn on(mut self, node: NodeId) -> TaskSpec {
-        self.preferred_node = Some(node);
+        self.preferred_nodes = vec![node];
+        self
+    }
+
+    /// Prefer any of `nodes`, in order (replicated blocks).
+    pub fn on_any_of(mut self, nodes: &[NodeId]) -> TaskSpec {
+        self.preferred_nodes = nodes.to_vec();
         self
     }
 }
@@ -110,6 +119,24 @@ pub struct StageStats {
     pub net_bytes: f64,
     /// Number of tasks executed.
     pub tasks: usize,
+    /// Tasks launched on one of their preferred nodes (NODE_LOCAL).
+    pub locality_hits: usize,
+    /// Speculative backup copies launched (`spark.speculation`).
+    pub speculated: usize,
+}
+
+/// Heavy-tailed per-task slowdown model: with probability `prob` a task's
+/// CPU phases run `factor`× slower — a degraded executor (thermal
+/// throttling, noisy neighbor, failing disk-controller cache). Drawn from
+/// a dedicated seeded stream, so enabling stragglers never perturbs the
+/// base jitter draws; a speculative backup copy re-prices the task
+/// *without* the straggler factor (the clone lands on a healthy node).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Straggler {
+    /// Probability a given task straggles (e.g. 0.02).
+    pub prob: f64,
+    /// Slowdown multiplier for a straggling task (e.g. 8.0).
+    pub factor: f64,
 }
 
 /// Simulator configuration knobs independent of cluster hardware.
@@ -120,11 +147,14 @@ pub struct SimOpts {
     pub jitter: f64,
     /// Seed for the jitter stream (vary per repetition).
     pub seed: u64,
+    /// Optional straggler tail on top of the uniform jitter (`None` = a
+    /// healthy cluster — the historical behavior, bit for bit).
+    pub straggler: Option<Straggler>,
 }
 
 impl Default for SimOpts {
     fn default() -> Self {
-        SimOpts { jitter: 0.04, seed: 0x5EED }
+        SimOpts { jitter: 0.04, seed: 0x5EED, straggler: None }
     }
 }
 
@@ -153,7 +183,7 @@ mod tests {
     }
 
     fn opts0() -> SimOpts {
-        SimOpts { jitter: 0.0, seed: 1 }
+        SimOpts { jitter: 0.0, seed: 1, straggler: None }
     }
 
     #[test]
@@ -290,13 +320,35 @@ mod tests {
         let c = ClusterSpec::mini();
         let tasks: Vec<_> =
             (0..8).map(|_| TaskSpec::new(vec![Phase::Cpu { secs: 1.0 }])).collect();
-        let a = run_stage(&c, &tasks, &SimOpts { jitter: 0.1, seed: 1 });
-        let b = run_stage(&c, &tasks, &SimOpts { jitter: 0.1, seed: 1 });
-        let d = run_stage(&c, &tasks, &SimOpts { jitter: 0.1, seed: 2 });
+        let a = run_stage(&c, &tasks, &SimOpts { jitter: 0.1, seed: 1, straggler: None });
+        let b = run_stage(&c, &tasks, &SimOpts { jitter: 0.1, seed: 1, straggler: None });
+        let d = run_stage(&c, &tasks, &SimOpts { jitter: 0.1, seed: 2, straggler: None });
         assert_eq!(a.duration, b.duration, "same seed must reproduce");
         assert_ne!(a.duration, d.duration, "different seed must vary");
         // Jitter is bounded: ±10 %.
         assert!((a.duration - 1.0).abs() < 0.11 + c.task_overhead);
+    }
+
+    #[test]
+    fn straggler_tail_is_deterministic_and_gated() {
+        let c = ClusterSpec::mini();
+        let tasks: Vec<_> =
+            (0..8).map(|_| TaskSpec::new(vec![Phase::Cpu { secs: 1.0 }])).collect();
+        let base = run_stage(&c, &tasks, &SimOpts { jitter: 0.04, seed: 9, straggler: None });
+        let strag = SimOpts {
+            jitter: 0.04,
+            seed: 9,
+            straggler: Some(Straggler { prob: 1.0, factor: 4.0 }),
+        };
+        let a = run_stage(&c, &tasks, &strag);
+        let b = run_stage(&c, &tasks, &strag);
+        assert_eq!(a.duration, b.duration, "straggler draws must reproduce");
+        assert!(
+            a.duration > base.duration * 3.0,
+            "all-straggler stage must slow ~4x: {} vs {}",
+            a.duration,
+            base.duration
+        );
     }
 
     #[test]

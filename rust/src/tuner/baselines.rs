@@ -220,7 +220,7 @@ mod tests {
         let cluster = ClusterSpec::mini();
         let job = Workload::MiniSortByKey.job();
         let eval = |c: &SparkConf| {
-            run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 }).effective_duration()
+            run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }).effective_duration()
         };
         let exec = TrialExecutor::new(4);
 

@@ -114,11 +114,17 @@ pub struct TuneOpts {
     /// Skip the two `shuffle.file.buffer` runs ("a shorter version of our
     /// methodology with two required runs less", §5).
     pub short_version: bool,
+    /// Append the straggler-robustness dimensions to the decision list:
+    /// `spark.speculation` (default-strength and aggressive siblings)
+    /// and `spark.locality.wait` (0s / 10s siblings) — at most 4 extra
+    /// trials on top of the paper's ≤ 10. Off by default, preserving the
+    /// paper's exact budget.
+    pub straggler_aware: bool,
 }
 
 impl Default for TuneOpts {
     fn default() -> Self {
-        TuneOpts { threshold: 0.0, short_version: false }
+        TuneOpts { threshold: 0.0, short_version: false, straggler_aware: false }
     }
 }
 
@@ -191,25 +197,70 @@ const STEPS: &[StepDef] = &[
     },
 ];
 
+/// The `shuffle.file.buffer` sibling group — the two runs the paper's
+/// "shorter version" (§5) omits.
+const FILE_BUFFER_GROUP: u8 = 6;
+
+/// Straggler-robustness extension of the decision list
+/// (`TuneOpts::straggler_aware`): speculative execution and delay
+/// scheduling, each as a sibling pair — Fig-4-style trials can discover
+/// locality/speculation settings on jittered clusters.
+const STRAGGLER_STEPS: &[StepDef] = &[
+    StepDef {
+        step: "enable speculation",
+        delta: &[("spark.speculation", "true")],
+        group: 7,
+    },
+    StepDef {
+        step: "aggressive speculation",
+        delta: &[
+            ("spark.speculation", "true"),
+            ("spark.speculation.quantile", "0.5"),
+            ("spark.speculation.multiplier", "1.2"),
+        ],
+        group: 7,
+    },
+    StepDef {
+        step: "no locality wait",
+        delta: &[("spark.locality.wait", "0s")],
+        group: 8,
+    },
+    StepDef {
+        step: "patient locality wait",
+        delta: &[("spark.locality.wait", "10s")],
+        group: 8,
+    },
+];
+
 /// Run the Fig-4 trial-and-error methodology.
 pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
+    let steps: Vec<&StepDef> = if opts.straggler_aware {
+        STEPS.iter().chain(STRAGGLER_STEPS.iter()).collect()
+    } else {
+        STEPS.iter().collect()
+    };
     let mut best_conf = SparkConf::default();
     let baseline = runner.run(&best_conf);
     let mut best = baseline;
     let mut trials = Vec::new();
 
     let mut i = 0;
-    while i < STEPS.len() {
-        let group = STEPS[i].group;
-        if opts.short_version && group == 6 {
-            break;
+    while i < steps.len() {
+        let group = steps[i].group;
+        if opts.short_version && group == FILE_BUFFER_GROUP {
+            // Skip this sibling group only — straggler-aware groups (if
+            // enabled) still run after it.
+            while i < steps.len() && steps[i].group == group {
+                i += 1;
+            }
+            continue;
         }
         // Evaluate the whole sibling group against the same incumbent.
         let mut group_best: Option<(usize, f64)> = None;
         let mut group_trials = Vec::new();
         let mut j = i;
-        while j < STEPS.len() && STEPS[j].group == group {
-            let sd = &STEPS[j];
+        while j < steps.len() && steps[j].group == group {
+            let sd = steps[j];
             let mut cand = best_conf.clone();
             for (k, v) in sd.delta {
                 cand.set(k, v).expect("methodology deltas are valid");
@@ -234,7 +285,7 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
         }
         if let Some((win_idx, t)) = group_best {
             group_trials[win_idx].kept = true;
-            for (k, v) in STEPS[i + win_idx].delta {
+            for (k, v) in steps[i + win_idx].delta {
                 best_conf.set(k, v).expect("valid");
             }
             best = t;
@@ -315,7 +366,7 @@ mod tests {
         // With a 10 % threshold the 5 % memoryFraction gain and the hash
         // win of 10 % (not > 10 %) are rejected; only kryo (20 %) stays.
         let mut runner = |c: &SparkConf| surface(c);
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false });
+        let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false, straggler_aware: false });
         assert_eq!(out.best_conf.serializer, SerKind::Kryo);
         assert_eq!(out.best_conf.shuffle_manager, ShuffleManagerKind::Sort);
         assert_eq!(out.best_conf.shuffle_memory_fraction, 0.2);
@@ -329,7 +380,7 @@ mod tests {
             calls += 1;
             surface(c)
         };
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.0, short_version: true });
+        let out = tune(&mut runner, &TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false });
         assert_eq!(out.runs(), 8, "shorter version is two runs less");
         assert!(!out.trials.iter().any(|t| t.step.starts_with("file buffer")));
         let _ = out;
@@ -367,6 +418,52 @@ mod tests {
             assert!(t.improvement > 0.0);
         }
         assert!((out.total_improvement() - 0.316).abs() < 1e-3);
+    }
+
+    #[test]
+    fn straggler_aware_steps_discover_speculation() {
+        // Surface of a jittered cluster: speculation halves the runtime,
+        // the aggressive variant shaves a bit more, and dropping the
+        // locality wait hurts (cache locality lost).
+        let mut runner = |c: &SparkConf| {
+            let mut t = 100.0;
+            if c.speculation {
+                t *= 0.45;
+                if c.speculation_quantile < 0.75 {
+                    t *= 0.95;
+                }
+            }
+            if c.locality_wait_secs == 0.0 {
+                t *= 1.1;
+            }
+            t
+        };
+        let out = tune(&mut runner, &TuneOpts { straggler_aware: true, ..TuneOpts::default() });
+        assert!(out.best_conf.speculation, "{:?}", out.final_settings());
+        assert!(out.best_conf.speculation_quantile < 0.75, "aggressive sibling wins");
+        assert_eq!(out.best_conf.locality_wait_secs, 3.0, "wait-0 regression rejected");
+        assert!(out.runs() <= 14, "Fig-4 budget + 4 straggler trials, used {}", out.runs());
+        assert!(out.best <= out.baseline);
+        assert!(out.trials.iter().any(|t| t.step == "enable speculation"));
+    }
+
+    #[test]
+    fn default_budget_untouched_without_straggler_flag() {
+        let mut runner = |c: &SparkConf| surface(c);
+        let out = tune(&mut runner, &TuneOpts::default());
+        assert!(out.runs() <= 10);
+        assert!(
+            !out.trials.iter().any(|t| t.step.contains("speculation")),
+            "straggler steps must be opt-in"
+        );
+        // Short version still skips only the file-buffer group.
+        let mut runner = |c: &SparkConf| surface(c);
+        let short = tune(
+            &mut runner,
+            &TuneOpts { short_version: true, straggler_aware: true, ..TuneOpts::default() },
+        );
+        assert!(!short.trials.iter().any(|t| t.step.starts_with("file buffer")));
+        assert!(short.trials.iter().any(|t| t.step == "enable speculation"));
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! bottleneck).
 
 use crate::conf::SparkConf;
+use crate::engine::Job;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Evaluates batches of independent trials on a fixed number of OS
@@ -79,6 +80,33 @@ impl TrialExecutor {
         });
         out
     }
+
+    /// Evaluate trials against a fixed **background workload** — tuning a
+    /// job while the cluster is busy (ROADMAP: tuner × tenancy). `eval`
+    /// receives each candidate configuration together with `background`,
+    /// typically pricing the target job submitted at `t = 0` alongside
+    /// the background jobs through [`crate::engine::run_all`] and
+    /// returning the target's effective duration. Purity and ordering
+    /// guarantees are as for [`evaluate`](TrialExecutor::evaluate): the
+    /// result is bit-identical across thread counts.
+    ///
+    /// Division of labor with
+    /// [`experiments::tenancy::busy_runner`](crate::experiments::tenancy::busy_runner):
+    /// the Fig-4 decision list is inherently *sequential* (each step
+    /// builds on the incumbent) and uses `busy_runner`; this method is
+    /// the busy-cluster path for *independent* trial batches — grid and
+    /// random baselines fanned over threads.
+    pub fn evaluate_against<F>(
+        &self,
+        confs: &[SparkConf],
+        background: &[Job],
+        eval: F,
+    ) -> Vec<f64>
+    where
+        F: Fn(&SparkConf, &[Job]) -> f64 + Sync,
+    {
+        self.evaluate(confs, |c| eval(c, background))
+    }
 }
 
 #[cfg(test)]
@@ -95,7 +123,7 @@ mod tests {
         let cluster = ClusterSpec::mini();
         let job = Workload::MiniSortByKey.job();
         let eval = |c: &SparkConf| {
-            run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 }).effective_duration()
+            run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }).effective_duration()
         };
         let confs: Vec<SparkConf> = (0..24).map(|i| grid_conf(i * 7 % grid_size())).collect();
         let seq = TrialExecutor::new(1).evaluate(&confs, eval);
@@ -115,6 +143,46 @@ mod tests {
         let seq: Vec<f64> = confs.iter().map(eval).collect();
         let par = TrialExecutor::new(6).evaluate(&confs, eval);
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn busy_cluster_trials_are_thread_invariant_and_slower() {
+        // Tuner × tenancy: trials priced against a background workload
+        // must stay bit-identical across thread counts, and a busy
+        // cluster can only slow the target job down.
+        use crate::engine::run_all;
+        use crate::workloads;
+
+        let cluster = ClusterSpec::mini();
+        let target = Workload::MiniSortByKey.job();
+        let background = workloads::mixed_tenants(2, 1_000_000, 16);
+        let eval = |c: &SparkConf, bg: &[crate::engine::Job]| {
+            let mut jobs = vec![target.clone()];
+            jobs.extend(bg.iter().cloned());
+            run_all(&jobs, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None })
+                .results[0]
+                .effective_duration()
+        };
+        let confs: Vec<SparkConf> = (0..12).map(|i| grid_conf(i * 11 % grid_size())).collect();
+        let seq = TrialExecutor::new(1).evaluate_against(&confs, &background, eval);
+        let par = TrialExecutor::new(4).evaluate_against(&confs, &background, eval);
+        assert_eq!(seq, par, "busy trials must be bit-identical across thread counts");
+
+        let idle = TrialExecutor::new(1).evaluate_against(&confs, &[], eval);
+        let pairs: Vec<(f64, f64)> = seq
+            .iter()
+            .zip(&idle)
+            .filter(|(b, i)| b.is_finite() && i.is_finite())
+            .map(|(b, i)| (*b, *i))
+            .collect();
+        assert!(!pairs.is_empty());
+        let busy_mean: f64 = pairs.iter().map(|(b, _)| b).sum::<f64>() / pairs.len() as f64;
+        let idle_mean: f64 = pairs.iter().map(|(_, i)| i).sum::<f64>() / pairs.len() as f64;
+        assert!(
+            busy_mean > idle_mean,
+            "background contention must slow the target on average: busy {busy_mean:.3}s vs \
+             idle {idle_mean:.3}s"
+        );
     }
 
     #[test]

@@ -50,6 +50,59 @@ impl SizeUnit {
     }
 }
 
+/// Default unit for a bare number in [`parse_duration_secs`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeUnit {
+    Millis,
+    Secs,
+}
+
+/// Parse a Spark-style duration string (`"3s"`, `"300ms"`, `"5m"`, `"1h"`;
+/// bare numbers are interpreted in `default_unit`, matching Spark's
+/// `timeStringAs*` helpers) into **seconds**.
+pub fn parse_duration_secs(s: &str, default_unit: TimeUnit) -> Result<f64, String> {
+    let t = s.trim().to_ascii_lowercase();
+    if t.is_empty() {
+        return Err("empty duration".into());
+    }
+    let (num, mult) = if let Some(n) = t.strip_suffix("ms") {
+        (n, 1e-3)
+    } else if let Some(n) = t.strip_suffix('s') {
+        (n, 1.0)
+    } else if let Some(n) = t.strip_suffix('m') {
+        (n, 60.0)
+    } else if let Some(n) = t.strip_suffix('h') {
+        (n, 3600.0)
+    } else {
+        let unit = match default_unit {
+            TimeUnit::Millis => 1e-3,
+            TimeUnit::Secs => 1.0,
+        };
+        (t.as_str(), unit)
+    };
+    let x: f64 = num
+        .trim()
+        .parse()
+        .map_err(|e| format!("bad duration {s:?}: {e}"))?;
+    if !x.is_finite() || x < 0.0 {
+        return Err(format!("duration must be finite and >= 0, got {s:?}"));
+    }
+    Ok(x * mult)
+}
+
+/// Render a duration in seconds with the coarsest exact Spark suffix
+/// (`3.0 → "3s"`, `0.3 → "300ms"`).
+pub fn fmt_duration_secs(secs: f64) -> String {
+    let ms = secs * 1e3;
+    if (ms - ms.round()).abs() < 1e-9 && (ms.round() as i64) % 1000 != 0 {
+        format!("{}ms", ms.round() as i64)
+    } else if (secs - secs.round()).abs() < 1e-9 {
+        format!("{}s", secs.round() as i64)
+    } else {
+        format!("{secs}s")
+    }
+}
+
 /// Format a byte count with a binary-prefix suffix (`1.5 GiB`).
 pub fn fmt_bytes(n: u64) -> String {
     const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
@@ -116,6 +169,29 @@ mod tests {
         assert_eq!(fmt_bytes(512), "512 B");
         assert_eq!(fmt_bytes(48 * 1024 * 1024), "48.00 MiB");
         assert_eq!(fmt_bytes(1536), "1.50 KiB");
+    }
+
+    #[test]
+    fn parses_spark_durations() {
+        assert_eq!(parse_duration_secs("3s", TimeUnit::Millis).unwrap(), 3.0);
+        assert_eq!(parse_duration_secs("300ms", TimeUnit::Millis).unwrap(), 0.3);
+        assert_eq!(parse_duration_secs("5m", TimeUnit::Millis).unwrap(), 300.0);
+        assert_eq!(parse_duration_secs("1h", TimeUnit::Millis).unwrap(), 3600.0);
+        // Bare numbers follow the default unit (Spark: ms for locality.wait).
+        assert_eq!(parse_duration_secs("3000", TimeUnit::Millis).unwrap(), 3.0);
+        assert_eq!(parse_duration_secs("3", TimeUnit::Secs).unwrap(), 3.0);
+        assert_eq!(parse_duration_secs("0s", TimeUnit::Millis).unwrap(), 0.0);
+        assert!(parse_duration_secs("", TimeUnit::Millis).is_err());
+        assert!(parse_duration_secs("-3s", TimeUnit::Millis).is_err());
+        assert!(parse_duration_secs("3q", TimeUnit::Millis).is_err());
+    }
+
+    #[test]
+    fn formats_spark_durations() {
+        assert_eq!(fmt_duration_secs(3.0), "3s");
+        assert_eq!(fmt_duration_secs(0.3), "300ms");
+        assert_eq!(fmt_duration_secs(0.0), "0s");
+        assert_eq!(fmt_duration_secs(10.0), "10s");
     }
 
     #[test]

@@ -123,6 +123,62 @@ pub fn multi_tenant(n: u32, records_per_job: u64, partitions: u32) -> Vec<Job> {
         .collect()
 }
 
+/// A **heterogeneous** multi-tenant batch (ROADMAP: beyond N identical
+/// jobs): tenants cycle through sort-by-key, a small k-means, and
+/// aggregate-by-key, so the batch mixes shuffle-heavy, CPU/cache-heavy,
+/// and combine-heavy jobs on one cluster. `records_per_job` scales every
+/// tenant (k-means points are derived so its payload stays comparable).
+pub fn mixed_tenants(n: u32, records_per_job: u64, partitions: u32) -> Vec<Job> {
+    (0..n)
+        .map(|i| {
+            let mut job = match i % 3 {
+                0 => sort_by_key(records_per_job, partitions),
+                1 => kmeans((records_per_job / 25).max(1000), 50, 8, 3, partitions),
+                _ => aggregate_by_key(
+                    records_per_job,
+                    (records_per_job / 20).max(1),
+                    partitions,
+                ),
+            };
+            job.name = format!("tenant{i}-{}", job.name);
+            job
+        })
+        .collect()
+}
+
+/// [`mixed_tenants`] with per-tenant FAIR pools: tenant `i` gets
+/// `pools[i % pools.len()]` as its `(weight, minShare)` — honored by the
+/// event core's `FairScheduler` under `spark.scheduler.mode=FAIR`.
+pub fn weighted_mixed_tenants(
+    n: u32,
+    records_per_job: u64,
+    partitions: u32,
+    pools: &[(f64, u32)],
+) -> Vec<Job> {
+    let jobs = mixed_tenants(n, records_per_job, partitions);
+    if pools.is_empty() {
+        return jobs;
+    }
+    jobs.into_iter()
+        .enumerate()
+        .map(|(i, job)| {
+            let (w, ms) = pools[i % pools.len()];
+            job.in_pool(w, ms)
+        })
+        .collect()
+}
+
+/// A pure-CPU probe job for the straggler experiment: one generate
+/// stage of `partitions` tasks — no shuffle, no cache — so the stage's
+/// makespan is dominated by the straggler tail, the regime where
+/// `spark.speculation` pays.
+pub fn straggler_probe(records: u64, partitions: u32) -> Job {
+    let d = Dataset::kv(records, 10, 90, partitions).with_entropy(KV_ENTROPY);
+    Job::new("straggler-probe")
+        .op(Op::Generate { out: d, cpu_ns_per_record: GEN_KV_NS })
+        .op(Op::Action)
+}
+
 /// Named paper workload instances — everything the experiments reference.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Workload {
@@ -215,6 +271,47 @@ mod tests {
                 r.duration
             );
         }
+    }
+
+    #[test]
+    fn mixed_tenants_are_heterogeneous_and_run() {
+        let jobs = mixed_tenants(3, 2_000_000, 16);
+        assert_eq!(jobs.len(), 3);
+        assert!(jobs[0].name.contains("sort-by-key"));
+        assert!(jobs[1].name.contains("kmeans"));
+        assert!(jobs[2].name.contains("aggregate-by-key"));
+        let batch = crate::engine::run_all(
+            &jobs,
+            &SparkConf::default(),
+            &ClusterSpec::mini(),
+            &SimOpts::default(),
+        );
+        for r in &batch.results {
+            assert!(r.crashed.is_none(), "{}: {:?}", r.job, r.crashed);
+            assert!(r.duration > 0.0);
+        }
+    }
+
+    #[test]
+    fn weighted_mixed_tenants_carry_pools() {
+        let jobs = weighted_mixed_tenants(4, 1_000_000, 16, &[(3.0, 0), (1.0, 2)]);
+        assert_eq!(jobs[0].pool.weight, 3.0);
+        assert_eq!(jobs[1].pool.min_share, 2);
+        assert_eq!(jobs[2].pool.weight, 3.0);
+        assert_eq!(jobs[3].pool.min_share, 2);
+        // Empty pool list leaves defaults.
+        let plain = weighted_mixed_tenants(2, 1_000_000, 16, &[]);
+        assert_eq!(plain[0].pool.weight, 1.0);
+    }
+
+    #[test]
+    fn straggler_probe_is_one_cpu_stage() {
+        let job = straggler_probe(1_000_000, 16);
+        let stages = crate::engine::plan(&job).unwrap();
+        assert_eq!(stages.len(), 1);
+        let r = run(&job, &SparkConf::default(), &ClusterSpec::mini(), &SimOpts::default());
+        assert!(r.crashed.is_none());
+        assert!(r.stages[0].disk_bytes == 0.0 && r.stages[0].net_bytes == 0.0);
     }
 
     #[test]

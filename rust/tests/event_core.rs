@@ -1,13 +1,16 @@
-//! Integration tests for the event-driven scheduler core (the tentpole
-//! of the EventSim refactor):
+//! Integration tests for the task-granular event-driven scheduler core:
 //!
 //! * **determinism** — same `(conf, seed)` produces bit-identical
 //!   `JobResult`s across repeated runs and across `TrialExecutor` thread
-//!   counts;
+//!   counts, including with delay scheduling, speculation, and the
+//!   straggler model all enabled;
 //! * **barrier equivalence** — on a linear stage DAG under FIFO the
 //!   event clock reproduces the legacy barrier accounting (makespan ==
 //!   sum of stage durations; absolute magnitudes match the seed test
 //!   expectations, which were calibrated on the barrier path);
+//! * **golden zero-jitter path** — with jitter off, the task-granular
+//!   knobs (`spark.locality.wait`, `spark.speculation`) are exact no-ops
+//!   on the PR-1 stage-granular numbers;
 //! * **multi-tenancy** — ≥ 4 concurrent jobs run under both FIFO and
 //!   FAIR with the policies' characteristic completion orderings.
 
@@ -15,7 +18,7 @@ use sparktune::cluster::ClusterSpec;
 use sparktune::conf::SparkConf;
 use sparktune::engine::{run, run_all};
 use sparktune::experiments::tenancy::run_tenancy;
-use sparktune::sim::{SchedulerMode, SimOpts};
+use sparktune::sim::{SchedulerMode, SimOpts, Straggler};
 use sparktune::tuner::baselines::{exhaustive, exhaustive_parallel, grid_conf};
 use sparktune::tuner::TrialExecutor;
 use sparktune::workloads::{self, Workload};
@@ -48,7 +51,7 @@ fn trial_results_bit_identical_across_thread_counts() {
     let cluster = ClusterSpec::mini();
     let job = Workload::MiniSortByKey.job();
     let eval = |c: &SparkConf| {
-        run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 }).effective_duration()
+        run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }).effective_duration()
     };
     let confs: Vec<SparkConf> = (0..40).map(grid_conf).collect();
     let seq = TrialExecutor::new(1).evaluate(&confs, eval);
@@ -64,6 +67,113 @@ fn trial_results_bit_identical_across_thread_counts() {
     assert_eq!(sequential.best, parallel.best);
     assert_eq!(sequential.best_conf, parallel.best_conf);
     assert_eq!(sequential.trials.len(), parallel.trials.len());
+}
+
+#[test]
+fn speculation_and_locality_runs_bit_identical() {
+    // Everything on at once — delay scheduling, speculation, stragglers —
+    // must still reproduce bit for bit across repeated runs.
+    let cluster = ClusterSpec::marenostrum();
+    let conf = SparkConf::default()
+        .with("spark.speculation", "true")
+        .with("spark.locality.wait", "1s");
+    let opts = SimOpts {
+        jitter: 0.04,
+        seed: 0xBEEF,
+        straggler: Some(Straggler { prob: 0.03, factor: 8.0 }),
+    };
+    let job = Workload::KMeans100M.job();
+    let a = run(&job, &conf, &cluster, &opts);
+    let b = run(&job, &conf, &cluster, &opts);
+    assert!(a.crashed.is_none());
+    assert_eq!(a.duration, b.duration);
+    for (x, y) in a.stages.iter().zip(&b.stages) {
+        assert_eq!(x.duration, y.duration, "stage {}", x.name);
+        assert_eq!(x.speculated, y.speculated);
+        assert_eq!(x.locality_hits, y.locality_hits);
+        assert_eq!(x.cpu_secs, y.cpu_secs);
+    }
+}
+
+#[test]
+fn straggler_trials_bit_identical_across_thread_counts() {
+    // TrialExecutor thread-count invariance must survive the new
+    // code paths: speculation + locality + straggler jitter per trial.
+    let cluster = ClusterSpec::mini();
+    let job = workloads::straggler_probe(2_000_000, 32);
+    let eval = |c: &SparkConf| {
+        run(
+            &job,
+            c,
+            &cluster,
+            &SimOpts {
+                jitter: 0.04,
+                seed: 0x7E57,
+                straggler: Some(Straggler { prob: 0.1, factor: 6.0 }),
+            },
+        )
+        .effective_duration()
+    };
+    let confs: Vec<SparkConf> = (0..16)
+        .map(|i| {
+            let mut c = grid_conf(i * 13 % 216);
+            if i % 2 == 0 {
+                c.set("spark.speculation", "true").unwrap();
+            }
+            if i % 3 == 0 {
+                c.set("spark.locality.wait", "0s").unwrap();
+            }
+            c
+        })
+        .collect();
+    let seq = TrialExecutor::new(1).evaluate(&confs, eval);
+    for threads in [2usize, 4, 8] {
+        let par = TrialExecutor::new(threads).evaluate(&confs, eval);
+        assert_eq!(seq, par, "{threads}-thread straggler trials diverged from sequential");
+    }
+}
+
+// ---------- golden: zero-jitter path pins the PR-1 numbers ----------
+
+#[test]
+fn zero_jitter_golden_knobs_are_noops() {
+    // With jitter off and no stragglers, wave completions are
+    // simultaneous, so delay scheduling never holds (every preferred
+    // node has a free core at each admission instant) and no task ever
+    // exceeds the speculation threshold. The golden contract: the
+    // locality/speculation knobs leave every makespan of the PR-1
+    // stage-granular core untouched.
+    let cluster = ClusterSpec::marenostrum();
+    let opts = SimOpts { jitter: 0.0, seed: 0x90_1D, straggler: None };
+    let golden = SparkConf::default().with("spark.locality.wait", "0s");
+    for w in [Workload::SortByKey1B, Workload::KMeans100M, Workload::AggregateByKey2B] {
+        let job = w.job();
+        let base = run(&job, &golden, &cluster, &opts);
+        assert!(base.crashed.is_none(), "{}", w.name());
+        // Default 3s wait — identical.
+        let waited = run(&job, &SparkConf::default(), &cluster, &opts);
+        assert_eq!(
+            base.duration,
+            waited.duration,
+            "{}: locality.wait must be a no-op at zero jitter",
+            w.name()
+        );
+        // Speculation on — identical, zero clones.
+        let spec_conf = SparkConf::default()
+            .with("spark.locality.wait", "0s")
+            .with("spark.speculation", "true");
+        let spec = run(&job, &spec_conf, &cluster, &opts);
+        assert_eq!(
+            base.duration,
+            spec.duration,
+            "{}: speculation must be a no-op at zero jitter",
+            w.name()
+        );
+        assert_eq!(spec.stages.iter().map(|s| s.speculated).sum::<usize>(), 0);
+        // And the stage sum still telescopes (barrier equivalence).
+        let sum: f64 = base.stages.iter().map(|s| s.duration).sum();
+        assert!((sum - base.duration).abs() < 1e-9 * base.duration.max(1.0));
+    }
 }
 
 // ---------- barrier equivalence on linear DAGs ----------

@@ -115,7 +115,7 @@ fn prop_sim_conserves_work() {
                 ])
             })
             .collect();
-        let s = run_stage(&cluster, &tasks, &SimOpts { jitter: 0.0, seed: 1 });
+        let s = run_stage(&cluster, &tasks, &SimOpts { jitter: 0.0, seed: 1, straggler: None });
         let ok = (s.cpu_secs - total_cpu).abs() < 1e-6
             && (s.disk_bytes - total_disk).abs() < 1.0
             && (s.net_bytes - total_net).abs() < 1.0
@@ -147,7 +147,7 @@ fn prop_sim_respects_core_capacity() {
         let secs = 0.1 + g.f64();
         let tasks: Vec<TaskSpec> =
             (0..n).map(|_| TaskSpec::new(vec![Phase::Cpu { secs }])).collect();
-        let s = run_stage(&cluster, &tasks, &SimOpts { jitter: 0.0, seed: 2 });
+        let s = run_stage(&cluster, &tasks, &SimOpts { jitter: 0.0, seed: 2, straggler: None });
         let waves = (n as f64 / cores as f64).ceil();
         let expect = waves * secs;
         if (s.duration - expect).abs() > 1e-6 {
@@ -179,9 +179,9 @@ fn prop_engine_duration_monotone_in_records() {
         let small = workloads::sort_by_key(base, 640);
         let big = workloads::sort_by_key(base * 2, 640);
         let t_small =
-            run(&small, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 3 }).effective_duration();
+            run(&small, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 3, straggler: None }).effective_duration();
         let t_big =
-            run(&big, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 3 }).effective_duration();
+            run(&big, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 3, straggler: None }).effective_duration();
         if t_big <= t_small {
             return Err(format!("2× records not slower: {t_small} vs {t_big} (base {base})"));
         }
@@ -200,7 +200,7 @@ fn engine_crash_monotone_in_shuffle_fraction() {
         let conf = SparkConf::default()
             .with("spark.shuffle.memoryFraction", f)
             .with("spark.storage.memoryFraction", "0.5");
-        let r = run(&job, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 1 });
+        let r = run(&job, &conf, &cluster, &SimOpts { jitter: 0.0, seed: 1, straggler: None });
         if crashed_above {
             assert!(
                 r.crashed.is_some(),
@@ -291,7 +291,7 @@ fn prop_tuner_never_worse_than_baseline_and_within_budget() {
             }
             t
         };
-        let out = tune(&mut runner, &TuneOpts { threshold, short_version: false });
+        let out = tune(&mut runner, &TuneOpts { threshold, short_version: false, straggler_aware: false });
         if out.best > out.baseline + 1e-9 {
             return Err(format!("best {} worse than baseline {}", out.best, out.baseline));
         }
@@ -329,10 +329,10 @@ fn tuned_configuration_reproduces_when_replayed() {
     let cluster = ClusterSpec::marenostrum();
     let job = Workload::SortByKey1B.job();
     let mut runner = |c: &SparkConf| {
-        run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 }).effective_duration()
+        run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }).effective_duration()
     };
-    let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false });
-    let replay = run(&job, &out.best_conf, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 });
+    let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false, straggler_aware: false });
+    let replay = run(&job, &out.best_conf, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None });
     assert!(replay.crashed.is_none());
     assert!((replay.duration - out.best).abs() < 1e-9, "{} vs {}", replay.duration, out.best);
 }
@@ -344,10 +344,10 @@ fn threshold_zero_keeps_at_least_as_much_as_threshold_ten() {
         let job = w.job();
         let mk = |thr: f64| {
             let mut runner = |c: &SparkConf| {
-                run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57 })
+                run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None })
                     .effective_duration()
             };
-            tune(&mut runner, &TuneOpts { threshold: thr, short_version: false })
+            tune(&mut runner, &TuneOpts { threshold: thr, short_version: false, straggler_aware: false })
         };
         let loose = mk(0.0);
         let strict = mk(0.10);
