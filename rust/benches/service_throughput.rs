@@ -1,0 +1,78 @@
+//! Bench: tuning-sessions-per-second through the service layer — what
+//! memoization buys over direct tuning.
+//!
+//! Three shapes over the same M-tenants × N-apps batch of overlapping
+//! sessions, all on the same 4-thread pool so the deltas isolate
+//! memoization (not parallelism):
+//!
+//! * **direct** — sessions fan over `TrialExecutor::map` with a plain
+//!   simulator runner (no service): every trial runs;
+//! * **service cold** — a fresh `TuningService` per iteration: sessions
+//!   overlap, so the cache + single-flight already dedupe within the
+//!   batch (simulated-trial count strictly below requested);
+//! * **service warm** — the same service re-serves the batch: every
+//!   trial is a cache hit, the jobs/sec ceiling of the serving layer.
+//!
+//! After the timed runs the dedup counters and cache hit rate are
+//! printed and sanity-asserted (requested > simulated on overlap).
+//!
+//! `cargo bench --bench service_throughput`
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::conf::SparkConf;
+use sparktune::engine::run;
+use sparktune::experiments::service::stress_requests;
+use sparktune::service::{ServiceOpts, TuningService};
+use sparktune::testkit::bench;
+use sparktune::tuner::{tune, TrialExecutor};
+
+fn main() {
+    let cluster = ClusterSpec::marenostrum();
+
+    for (tenants, apps) in [(4u32, 3u32), (8, 4)] {
+        let reqs = stress_requests(tenants, apps);
+        let sessions = reqs.len() as f64;
+        let svc_opts = ServiceOpts { workers: 4, shards: 8, capacity: 65_536 };
+
+        // ---- direct: same worker pool, no memoization ----
+        let pool = TrialExecutor::new(svc_opts.workers);
+        bench(&format!("service/direct tune {tenants}×{apps}"), 3, sessions, || {
+            let outcomes = pool.map(&reqs, |req| {
+                let mut runner = |conf: &SparkConf| {
+                    run(&req.job, conf, &cluster, &req.sim).effective_duration()
+                };
+                tune(&mut runner, &req.tune)
+            });
+            std::hint::black_box(outcomes);
+        });
+
+        // ---- cold service: fresh cache each iteration ----
+        bench(&format!("service/cold serve {tenants}×{apps}"), 3, sessions, || {
+            let svc = TuningService::new(cluster.clone(), svc_opts);
+            std::hint::black_box(svc.serve(&reqs));
+        });
+
+        // ---- warm service: the steady-state serving path ----
+        let svc = TuningService::new(cluster.clone(), svc_opts);
+        svc.serve(&reqs); // warm it
+        bench(&format!("service/warm serve {tenants}×{apps}"), 5, sessions, || {
+            std::hint::black_box(svc.serve(&reqs));
+        });
+
+        let s = svc.stats();
+        println!(
+            "stats {tenants}×{apps}: {} trials requested, {} simulated, \
+             service hit rate {:.1}%, cache hit rate {:.1}%",
+            s.trials_requested,
+            s.trials_simulated,
+            100.0 * s.hit_rate(),
+            100.0 * s.cache.hit_rate()
+        );
+        assert!(
+            s.trials_simulated < s.trials_requested,
+            "overlapping sessions must dedupe: {} simulated of {} requested",
+            s.trials_simulated,
+            s.trials_requested
+        );
+    }
+}

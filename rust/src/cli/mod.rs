@@ -11,6 +11,7 @@
 //! sparktune ablation [--workload <name>]
 //! sparktune tenancy [--jobs N] [--records N] [--mixed]
 //! sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
+//! sparktune serve  [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
 //! sparktune help-conf
 //! ```
 
@@ -102,6 +103,10 @@ USAGE:
   sparktune tenancy  [--jobs N] [--records N] [--mixed]  (FIFO vs FAIR, identical or mixed tenants)
   sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
                      (jittered cluster: spark.speculation off vs on)
+  sparktune serve    [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
+                     (tuning service: M×N overlapping sessions, memoized trials;
+                      exits non-zero unless trials dedupe and the fully-warm
+                      rerun is bit-identical to the cold pass)
   sparktune help-conf
 
 WORKLOADS: sort-by-key | shuffling | kmeans-100m | kmeans-200m |
@@ -335,6 +340,55 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             );
             Ok(())
         }
+        "serve" => {
+            let tenants: u32 =
+                args.flag("tenants").unwrap_or("4").parse().map_err(|e| format!("{e}"))?;
+            let apps: u32 =
+                args.flag("apps").unwrap_or("3").parse().map_err(|e| format!("{e}"))?;
+            let workers: usize =
+                args.flag("workers").unwrap_or("4").parse().map_err(|e| format!("{e}"))?;
+            let capacity: usize =
+                args.flag("capacity").unwrap_or("4096").parse().map_err(|e| format!("{e}"))?;
+            let shards: usize =
+                args.flag("shards").unwrap_or("8").parse().map_err(|e| format!("{e}"))?;
+            if tenants == 0 || apps == 0 {
+                return Err("--tenants and --apps must be >= 1".into());
+            }
+            let opts = experiments::service::StressOpts {
+                tenants,
+                apps,
+                workers,
+                capacity,
+                shards,
+            };
+            let r = experiments::service::service_stress(&opts, &cluster);
+            println!("{}", experiments::service::service_table(&r).to_markdown());
+            // The CI smoke step relies on these two assertions: the
+            // service must actually dedupe, and warm-cache results must
+            // be bit-identical to cold ones.
+            if r.stats.hit_rate() <= 0.0 {
+                return Err("service hit rate is zero — memoization is not engaging".into());
+            }
+            // Cross-session dedup must show up in the COLD pass already:
+            // tenants share the app catalog, so with > 1 tenant the
+            // simulated-trial count must be strictly below requested
+            // (the warm rerun's all-hit pass can't mask a regression).
+            if tenants > 1 && r.cold_stats.trials_simulated >= r.cold_stats.trials_requested {
+                return Err("cold pass did not dedupe across overlapping sessions".into());
+            }
+            if !r.deterministic() {
+                return Err("warm rerun diverged from the cold pass".into());
+            }
+            println!(
+                "ok: {} sessions/pass; cold pass simulated {} of {} requested trials; \
+                 cumulative hit rate {:.1}%; warm rerun bit-identical",
+                r.cold.len(),
+                r.cold_stats.trials_simulated,
+                r.cold_stats.trials_requested,
+                100.0 * r.stats.hit_rate()
+            );
+            Ok(())
+        }
         "help-conf" => {
             println!("Modeled Spark 1.5.2 parameters (★ = the paper's 12):\n");
             for p in params::PARAMS {
@@ -407,6 +461,19 @@ mod tests {
         );
         assert_eq!(main(argv("straggler --prob 1.5")), 2, "prob out of range rejected");
         assert_eq!(main(argv("straggler --factor 0.5")), 2, "sub-1 factor rejected");
+    }
+
+    #[test]
+    fn serve_subcommand_smoke() {
+        // Overlapping tenants on the shared service; the subcommand
+        // itself asserts dedup + cold/warm bit-identity (exit 0 ⇔ both
+        // held) — the same invocation shape CI smoke-runs.
+        assert_eq!(
+            main(argv("serve --tenants 2 --apps 1 --workers 2 --capacity 256 --shards 2")),
+            0
+        );
+        assert_eq!(main(argv("serve --tenants 0")), 2, "zero tenants rejected");
+        assert_eq!(main(argv("serve --apps 0")), 2, "zero apps rejected");
     }
 
     #[test]

@@ -98,8 +98,13 @@ impl std::error::Error for ConfError {}
 ///
 /// Equality compares **effective settings only** — the collected
 /// [`warnings`](SparkConf::warnings) are diagnostics, not configuration,
-/// and two confs that price identically always compare equal (see the
-/// manual [`PartialEq`] impl below).
+/// and two confs that price identically always compare equal. The
+/// [`PartialEq`] impl and the service layer's trial fingerprint both
+/// read the same [`canonical_settings`](SparkConf::canonical_settings)
+/// listing, so equality and trial identity cannot drift from each other
+/// when parameters are added. (The `Display` diff still enumerates
+/// fields by hand in [`diff_from_default`](SparkConf::diff_from_default);
+/// it renders Spark-flavored value spellings, not the canonical ones.)
 #[derive(Clone, Debug)]
 pub struct SparkConf {
     // ---- The paper's 12 parameters (Sec. 3 numbering) ----
@@ -170,32 +175,17 @@ pub struct SparkConf {
 }
 
 impl PartialEq for SparkConf {
-    /// Field-wise equality over every *effective* setting; `warnings`
-    /// (diagnostics accumulated while parsing) are deliberately excluded.
+    /// Equality over every *effective* setting, via the canonical listing;
+    /// `warnings` (diagnostics accumulated while parsing) are deliberately
+    /// excluded. Two confs are equal iff they price identically.
+    ///
+    /// Collecting the listings allocates, which is fine here: equality
+    /// runs in tests and per-outcome comparisons, never per-trial — the
+    /// trial hot path hashes through the allocation-free
+    /// [`visit_canonical_settings`](SparkConf::visit_canonical_settings)
+    /// instead, and both stay drift-proof by reading the same listing.
     fn eq(&self, other: &SparkConf) -> bool {
-        self.reducer_max_size_in_flight == other.reducer_max_size_in_flight
-            && self.shuffle_compress == other.shuffle_compress
-            && self.shuffle_file_buffer == other.shuffle_file_buffer
-            && self.shuffle_manager == other.shuffle_manager
-            && self.io_compression_codec == other.io_compression_codec
-            && self.shuffle_io_prefer_direct_bufs == other.shuffle_io_prefer_direct_bufs
-            && self.rdd_compress == other.rdd_compress
-            && self.serializer == other.serializer
-            && self.shuffle_memory_fraction == other.shuffle_memory_fraction
-            && self.storage_memory_fraction == other.storage_memory_fraction
-            && self.shuffle_consolidate_files == other.shuffle_consolidate_files
-            && self.shuffle_spill_compress == other.shuffle_spill_compress
-            && self.executor_cores == other.executor_cores
-            && self.executor_memory == other.executor_memory
-            && self.num_executors == other.num_executors
-            && self.default_parallelism == other.default_parallelism
-            && self.shuffle_spill == other.shuffle_spill
-            && self.scheduler_mode == other.scheduler_mode
-            && self.locality_wait_secs == other.locality_wait_secs
-            && self.speculation == other.speculation
-            && self.speculation_multiplier == other.speculation_multiplier
-            && self.speculation_quantile == other.speculation_quantile
-            && self.extras == other.extras
+        self.canonical_settings() == other.canonical_settings()
     }
 }
 
@@ -367,6 +357,71 @@ impl SparkConf {
             conf.set(k.trim(), v).map_err(|e| e.to_string())?;
         }
         Ok(conf)
+    }
+
+    /// Visit every **effective** setting as `(key, value)` string
+    /// slices, in a fixed canonical order: the modeled keys in registry
+    /// order (see [`params::PARAMS`]), then the `extras` in their
+    /// sorted map order.
+    ///
+    /// This is the single source of truth that equality ([`PartialEq`])
+    /// and the service layer's trial fingerprint
+    /// (`service::fingerprint`) are built on: value strings are exact —
+    /// integers in their base unit (bytes), floats in Rust's shortest
+    /// round-trip form — so listing equality coincides with field-wise
+    /// equality, and two confs built through different `set()` orders
+    /// canonicalize identically. `warnings` never appear here. The
+    /// visitor form reuses one scratch buffer (no per-setting
+    /// allocations — this sits on the memo cache's lookup hot path);
+    /// [`canonical_settings`](SparkConf::canonical_settings) collects
+    /// it when owned pairs are more convenient.
+    pub fn visit_canonical_settings(&self, mut visit: impl FnMut(&str, &str)) {
+        use std::fmt::Write as _;
+        let mut buf = String::with_capacity(24);
+        // Rust's `{}` for f64 prints the shortest string that
+        // round-trips, so distinct finite values always render
+        // distinctly; `+ 0.0` folds -0.0 into 0.0 (they price
+        // identically).
+        macro_rules! emit {
+            ($key:expr, $value:expr) => {{
+                buf.clear();
+                let _ = write!(buf, "{}", $value);
+                visit($key, &buf);
+            }};
+        }
+        emit!("spark.reducer.maxSizeInFlight", self.reducer_max_size_in_flight);
+        emit!("spark.shuffle.compress", self.shuffle_compress);
+        emit!("spark.shuffle.file.buffer", self.shuffle_file_buffer);
+        visit("spark.shuffle.manager", self.shuffle_manager.config_name());
+        visit("spark.io.compression.codec", self.io_compression_codec.config_name());
+        emit!("spark.shuffle.io.preferDirectBufs", self.shuffle_io_prefer_direct_bufs);
+        emit!("spark.rdd.compress", self.rdd_compress);
+        visit("spark.serializer", self.serializer.config_name());
+        emit!("spark.shuffle.memoryFraction", self.shuffle_memory_fraction + 0.0);
+        emit!("spark.storage.memoryFraction", self.storage_memory_fraction + 0.0);
+        emit!("spark.shuffle.consolidateFiles", self.shuffle_consolidate_files);
+        emit!("spark.shuffle.spill.compress", self.shuffle_spill_compress);
+        emit!("spark.executor.cores", self.executor_cores);
+        emit!("spark.executor.memory", self.executor_memory);
+        emit!("spark.executor.instances", self.num_executors);
+        emit!("spark.default.parallelism", self.default_parallelism);
+        emit!("spark.shuffle.spill", self.shuffle_spill);
+        visit("spark.scheduler.mode", self.scheduler_mode.config_name());
+        emit!("spark.locality.wait", self.locality_wait_secs + 0.0);
+        emit!("spark.speculation", self.speculation);
+        emit!("spark.speculation.multiplier", self.speculation_multiplier + 0.0);
+        emit!("spark.speculation.quantile", self.speculation_quantile + 0.0);
+        for (k, v) in &self.extras {
+            visit(k, v);
+        }
+    }
+
+    /// [`visit_canonical_settings`](SparkConf::visit_canonical_settings)
+    /// collected into owned `(key, value)` pairs.
+    pub fn canonical_settings(&self) -> Vec<(String, String)> {
+        let mut out = Vec::with_capacity(24 + self.extras.len());
+        self.visit_canonical_settings(|k, v| out.push((k.to_string(), v.to_string())));
+        out
     }
 
     /// The non-default settings, as `(key, value)` strings — the paper's
@@ -625,6 +680,61 @@ mod tests {
         let mut d = SparkConf::default();
         d.set("spark.yarn.queue", "batch").unwrap();
         assert_eq!(c, d, "effective settings equal ⇒ confs equal, warnings aside");
+    }
+
+    #[test]
+    fn canonical_settings_cover_every_modeled_param() {
+        // Drift guard: every key in the PARAMS registry must appear in the
+        // canonical listing (and with no extras, nothing else does) — a
+        // newly added parameter that misses `canonical_settings` would
+        // silently escape equality AND the service fingerprint.
+        let listing = SparkConf::default().canonical_settings();
+        for p in PARAMS {
+            assert!(
+                listing.iter().any(|(k, _)| k == p.key),
+                "{} missing from canonical_settings",
+                p.key
+            );
+        }
+        assert_eq!(listing.len(), PARAMS.len(), "unexpected extra canonical entries");
+        // Registry defaults canonicalize to the default listing.
+        let mut from_registry = SparkConf::default();
+        for p in PARAMS {
+            from_registry.set(p.key, p.default).unwrap();
+        }
+        assert_eq!(from_registry.canonical_settings(), listing);
+    }
+
+    #[test]
+    fn canonical_settings_are_set_order_invariant() {
+        let a = SparkConf::default()
+            .with("spark.serializer", "kryo")
+            .with("spark.shuffle.memoryFraction", "0.4")
+            .with("spark.yarn.queue", "prod");
+        let b = SparkConf::default()
+            .with("spark.yarn.queue", "prod")
+            .with("spark.shuffle.memoryFraction", "0.4")
+            .with("spark.serializer", "kryo");
+        assert_eq!(a.canonical_settings(), b.canonical_settings());
+        assert_eq!(a, b, "PartialEq rides on the canonical listing");
+        // Any effective change shows up in the listing (and breaks eq).
+        let c = b.clone().with("spark.shuffle.memoryFraction", "0.5");
+        assert_ne!(a.canonical_settings(), c.canonical_settings());
+        assert_ne!(a, c);
+        // Extras participate in equality too.
+        let d = a.clone().with("spark.yarn.queue", "batch");
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn canonical_float_values_round_trip() {
+        // Exact float rendering: a fraction that isn't representable in
+        // one decimal place must still round-trip through the listing.
+        let c = SparkConf::default().with("spark.speculation.multiplier", "1.3000000000000001");
+        let listing = c.canonical_settings();
+        let (_, v) =
+            listing.iter().find(|(k, _)| k == "spark.speculation.multiplier").unwrap();
+        assert_eq!(v.parse::<f64>().unwrap().to_bits(), c.speculation_multiplier.to_bits());
     }
 
     #[test]

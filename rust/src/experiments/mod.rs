@@ -10,6 +10,9 @@
 //!   tuning runner (`spark.scheduler.mode` through the event core).
 //! * [`straggler`] — jittered-cluster speculation experiment
 //!   (`spark.speculation` off vs on, and the straggler-aware tuner).
+//! * [`service`] — the tuning-service stress scenario: M tenants × N
+//!   apps through the memoized session server (cold vs warm, dedup and
+//!   bit-identical-outcome checks).
 //!
 //! Protocol follows the paper: each configuration is run with ≥5
 //! repetition seeds and the **median** is reported; the baseline for the
@@ -19,6 +22,7 @@
 
 pub mod ablation;
 pub mod cases;
+pub mod service;
 pub mod straggler;
 pub mod tenancy;
 

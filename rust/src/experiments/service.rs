@@ -1,0 +1,221 @@
+//! The tuning-service stress scenario: M tenants × N apps against one
+//! shared [`TuningService`], cold then fully warm.
+//!
+//! Every tenant tunes the same small app catalog (overlapping
+//! workloads are exactly what a shared tuning service sees in
+//! production), so identical trials across tenants dedupe through the
+//! memo cache and the single-flight table: the simulated-trial count
+//! must come out strictly below the requested-trial count. A second,
+//! fully-warm pass re-serves the identical batch — every trial hits the
+//! cache — and the outcomes must stay bit-identical to the cold pass,
+//! which [`StressReport::deterministic`] checks and the CLI `serve`
+//! subcommand (CI smoke) enforces.
+
+use crate::cluster::ClusterSpec;
+use crate::engine::Job;
+use crate::report::Table;
+use crate::service::{
+    outcomes_identical, ServiceOpts, ServiceStats, SessionOutcome, SessionRequest, TuningService,
+};
+use crate::sim::SimOpts;
+use crate::tuner::TuneOpts;
+use crate::workloads;
+
+/// Stress-scenario sizing.
+#[derive(Clone, Copy, Debug)]
+pub struct StressOpts {
+    /// Concurrent tenants (each runs the whole app catalog).
+    pub tenants: u32,
+    /// Apps per tenant (cycling through the catalog).
+    pub apps: u32,
+    /// Service worker threads.
+    pub workers: usize,
+    /// Memo-cache capacity in trials.
+    pub capacity: usize,
+    /// Memo-cache lock stripes.
+    pub shards: usize,
+}
+
+impl Default for StressOpts {
+    fn default() -> Self {
+        StressOpts { tenants: 4, apps: 3, workers: 4, capacity: 4096, shards: 8 }
+    }
+}
+
+/// Small-scale app catalog entry `a`: shuffle-heavy, CPU/cache-heavy and
+/// combine-heavy apps alternate; sizes grow every full cycle so distinct
+/// apps stay distinct trials.
+fn catalog(a: u32) -> Job {
+    let scale = 1 + a as u64 / 3;
+    match a % 3 {
+        0 => workloads::sort_by_key(2_000_000 * scale, 16),
+        1 => workloads::kmeans(100_000 * scale, 20, 4, 2, 16),
+        _ => workloads::aggregate_by_key(2_000_000 * scale, 50_000, 16),
+    }
+}
+
+/// Build the M×N session batch. Tenants share apps *and* seeds — tenant
+/// `t`'s app `a` is the same trial stream as every other tenant's app
+/// `a`, so the overlap is maximal by construction.
+pub fn stress_requests(tenants: u32, apps: u32) -> Vec<SessionRequest> {
+    let mut reqs = Vec::with_capacity(tenants as usize * apps as usize);
+    for t in 0..tenants {
+        for a in 0..apps {
+            reqs.push(SessionRequest {
+                name: format!("tenant{t}/app{a}"),
+                job: catalog(a),
+                tune: TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false },
+                sim: SimOpts { jitter: 0.04, seed: 0x5E21E + a as u64, straggler: None },
+            });
+        }
+    }
+    reqs
+}
+
+/// Outcome of the stress scenario: the cold pass, the fully-warm rerun,
+/// and counter snapshots after each.
+#[derive(Clone, Debug)]
+pub struct StressReport {
+    pub opts: StressOpts,
+    pub cold: Vec<SessionOutcome>,
+    pub warm: Vec<SessionOutcome>,
+    /// Counters after the cold pass only.
+    pub cold_stats: ServiceStats,
+    /// Cumulative counters after both passes.
+    pub stats: ServiceStats,
+    pub cold_wall_secs: f64,
+    pub warm_wall_secs: f64,
+}
+
+impl StressReport {
+    /// Bitwise parity between the cold pass and the warm rerun — the
+    /// service's core correctness claim.
+    pub fn deterministic(&self) -> bool {
+        self.cold.len() == self.warm.len()
+            && self
+                .cold
+                .iter()
+                .zip(&self.warm)
+                .all(|(c, w)| outcomes_identical(&c.outcome, &w.outcome))
+    }
+
+    /// Sessions per wall-clock second in the cold pass.
+    pub fn cold_jobs_per_sec(&self) -> f64 {
+        self.cold.len() as f64 / self.cold_wall_secs.max(1e-9)
+    }
+
+    /// Sessions per wall-clock second in the warm pass.
+    pub fn warm_jobs_per_sec(&self) -> f64 {
+        self.warm.len() as f64 / self.warm_wall_secs.max(1e-9)
+    }
+}
+
+/// Run the stress scenario: serve the batch cold, then re-serve it
+/// fully warm on the same service.
+pub fn service_stress(o: &StressOpts, cluster: &ClusterSpec) -> StressReport {
+    let reqs = stress_requests(o.tenants, o.apps);
+    let svc = TuningService::new(
+        cluster.clone(),
+        ServiceOpts { workers: o.workers, shards: o.shards, capacity: o.capacity },
+    );
+    let t0 = std::time::Instant::now();
+    let cold = svc.serve(&reqs);
+    let cold_wall_secs = t0.elapsed().as_secs_f64();
+    let cold_stats = svc.stats();
+    let t1 = std::time::Instant::now();
+    let warm = svc.serve(&reqs);
+    let warm_wall_secs = t1.elapsed().as_secs_f64();
+    StressReport {
+        opts: *o,
+        cold,
+        warm,
+        cold_stats,
+        stats: svc.stats(),
+        cold_wall_secs,
+        warm_wall_secs,
+    }
+}
+
+/// Render the service stats as a markdown/CSV table (the `serve` CLI
+/// emits this; wall-clock rows vary run to run, counters don't).
+pub fn service_table(r: &StressReport) -> Table {
+    let s = &r.stats;
+    let c = &r.cold_stats;
+    Table::two_col(
+        format!(
+            "Tuning service — {} tenants × {} apps, {} workers",
+            r.opts.tenants, r.opts.apps, r.opts.workers
+        ),
+        &[
+            ("sessions served (cold + warm)", s.sessions.to_string()),
+            ("trials requested", s.trials_requested.to_string()),
+            ("trials simulated", s.trials_simulated.to_string()),
+            (
+                "cold-pass dedup (simulated / requested)",
+                format!("{} / {}", c.trials_simulated, c.trials_requested),
+            ),
+            ("in-flight coalesced", s.coalesced.to_string()),
+            ("service hit rate", format!("{:.1}%", 100.0 * s.hit_rate())),
+            ("cache hit rate (raw lookups)", format!("{:.1}%", 100.0 * s.cache.hit_rate())),
+            ("cache evictions", s.cache.evictions.to_string()),
+            (
+                "cold pass",
+                format!("{:.3}s ({:.1} jobs/sec)", r.cold_wall_secs, r.cold_jobs_per_sec()),
+            ),
+            (
+                "warm pass",
+                format!("{:.3}s ({:.1} jobs/sec)", r.warm_wall_secs, r.warm_jobs_per_sec()),
+            ),
+            ("cold ≡ warm (bit-identical)", r.deterministic().to_string()),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stress_dedupes_and_stays_deterministic() {
+        let o = StressOpts { tenants: 3, apps: 2, workers: 4, capacity: 1024, shards: 4 };
+        let r = service_stress(&o, &ClusterSpec::mini());
+        assert_eq!(r.cold.len(), 6);
+        assert!(r.deterministic(), "warm rerun must be bit-identical to the cold pass");
+        // Overlapping tenants: strictly fewer simulations than requests
+        // already in the COLD pass.
+        assert!(
+            r.cold_stats.trials_simulated < r.cold_stats.trials_requested,
+            "{} simulated of {} requested",
+            r.cold_stats.trials_simulated,
+            r.cold_stats.trials_requested
+        );
+        // The warm pass simulates nothing new.
+        assert_eq!(r.stats.trials_simulated, r.cold_stats.trials_simulated);
+        assert!(r.stats.hit_rate() > 0.0);
+        // Two sessions of the same app across tenants agree exactly.
+        assert!(outcomes_identical(&r.cold[0].outcome, &r.cold[2].outcome));
+    }
+
+    #[test]
+    fn stress_is_reproducible_across_services() {
+        // A fresh service (fresh cache, different thread interleavings)
+        // reaches identical outcomes: purity end to end.
+        let o = StressOpts { tenants: 2, apps: 2, workers: 3, capacity: 512, shards: 2 };
+        let a = service_stress(&o, &ClusterSpec::mini());
+        let b = service_stress(&o, &ClusterSpec::mini());
+        for (x, y) in a.cold.iter().zip(&b.cold) {
+            assert!(outcomes_identical(&x.outcome, &y.outcome), "{} diverged", x.name);
+        }
+    }
+
+    #[test]
+    fn table_reports_the_headline_counters() {
+        let o = StressOpts { tenants: 2, apps: 1, workers: 2, capacity: 256, shards: 2 };
+        let r = service_stress(&o, &ClusterSpec::mini());
+        let md = service_table(&r).to_markdown();
+        assert!(md.contains("trials requested"), "{md}");
+        assert!(md.contains("trials simulated"), "{md}");
+        assert!(md.contains("jobs/sec"), "{md}");
+        assert!(md.contains("| cold ≡ warm (bit-identical) | true |"), "{md}");
+    }
+}

@@ -27,10 +27,15 @@
 //!   of Fig. 4 — plus exhaustive/random-search baselines and the
 //!   multi-threaded [`tuner::TrialExecutor`] that evaluates independent
 //!   trials in parallel with bit-identical results ([`tuner`]).
+//! * A **tuning-as-a-service core** ([`service`]): canonical trial
+//!   fingerprints, a sharded LRU memo cache, and a single-flight
+//!   session server that serves many concurrent tuning sessions
+//!   without ever simulating the same trial twice — bit-identical to
+//!   direct tuning.
 //! * Benchmarks from the paper's evaluation and the multi-tenant
 //!   scenario ([`workloads`]), experiment drivers for every figure and
-//!   table plus FIFO-vs-FAIR tenancy ([`experiments`]), and reporting
-//!   ([`report`]).
+//!   table plus FIFO-vs-FAIR tenancy and the service stress scenario
+//!   ([`experiments`]), and reporting ([`report`]).
 //! * The AOT compute path: a PJRT runtime ([`runtime`], behind the
 //!   `pjrt` cargo feature) that loads the JAX/Pallas-lowered k-means
 //!   step from `artifacts/` and executes it from the Rust hot path
@@ -50,6 +55,7 @@ pub mod real;
 pub mod report;
 pub mod runtime;
 pub mod ser;
+pub mod service;
 pub mod shuffle;
 pub mod sim;
 pub mod storage;

@@ -97,6 +97,17 @@ pub struct Table {
 }
 
 impl Table {
+    /// Convenience constructor for metric tables: two columns, one
+    /// `metric | value` row per entry (the service stats report and
+    /// similar counter dumps use it, through the same renderers).
+    pub fn two_col(title: impl Into<String>, rows: &[(&str, String)]) -> Table {
+        Table {
+            title: title.into(),
+            header: vec!["metric".into(), "value".into()],
+            rows: rows.iter().map(|(k, v)| vec![k.to_string(), v.clone()]).collect(),
+        }
+    }
+
     pub fn to_markdown(&self) -> String {
         let mut out = String::new();
         if !self.title.is_empty() {
@@ -177,6 +188,19 @@ mod tests {
         assert!(md.contains("| spark.serializer | 12.6% |"));
         let csv = t.to_csv();
         assert!(csv.contains("spark.serializer,12.6%"));
+    }
+
+    #[test]
+    fn two_col_builds_metric_tables() {
+        let t = Table::two_col(
+            "Service stats",
+            &[("sessions", "12".to_string()), ("hit rate", "83.3%".to_string())],
+        );
+        assert_eq!(t.header, vec!["metric".to_string(), "value".to_string()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| sessions | 12 |"), "{md}");
+        assert!(md.contains("| hit rate | 83.3% |"), "{md}");
+        assert!(t.to_csv().contains("hit rate,83.3%"));
     }
 
     #[test]

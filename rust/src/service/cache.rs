@@ -1,0 +1,264 @@
+//! Sharded, LRU-bounded memoization cache for trial results.
+//!
+//! [`ShardedCache`] is a lock-striped hash map keyed by
+//! [`Fingerprint`]: the key space is split across `shards` independent
+//! mutexes (a trial's top hash lane picks its shard), so concurrent
+//! tuning sessions contend only when they touch the same stripe — the
+//! classic Guava-/Caffeine-style striped cache, hand-rolled because the
+//! offline crate set has no concurrency crates.
+//!
+//! Each shard is bounded: entries carry a last-touch tick and a
+//! `BTreeMap` recency index, so eviction removes the least-recently-used
+//! entry in `O(log n)`. Hit/miss/insert/evict counters are process-wide
+//! atomics, cheap enough to leave on in production; [`CacheStats`] is a
+//! coherent-enough snapshot for reporting.
+//!
+//! The cache stores **values, not computations** — single-flight
+//! deduplication of concurrent identical trials lives one layer up, in
+//! [`super::server`].
+
+use super::fingerprint::Fingerprint;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Counter snapshot. `hits`/`misses` count [`ShardedCache::get`] calls;
+/// `inserts`/`evictions` count entries added and LRU-dropped.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0 when untouched).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Shard<V> {
+    /// fingerprint → (value, last-touch tick).
+    map: HashMap<u128, (V, u64)>,
+    /// last-touch tick → fingerprint; the smallest tick is the LRU entry.
+    recency: BTreeMap<u64, u128>,
+    /// Monotone per-shard clock, bumped on every touch.
+    tick: u64,
+}
+
+/// Lock-striped memo cache keyed by [`Fingerprint`], LRU-bounded per
+/// shard. `V` is cloned out on hits — trial results are small (an
+/// effective duration, or a compact result struct).
+pub struct ShardedCache<V> {
+    shards: Vec<Mutex<Shard<V>>>,
+    cap_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<V: Clone> ShardedCache<V> {
+    /// A cache with `shards` lock stripes holding at most ~`capacity`
+    /// entries in total (rounded up to a whole number per shard; floors
+    /// of 1 apply to both arguments).
+    pub fn new(shards: usize, capacity: usize) -> ShardedCache<V> {
+        let shards = shards.max(1);
+        let cap_per_shard = capacity.max(1).div_ceil(shards);
+        ShardedCache {
+            shards: (0..shards)
+                .map(|_| {
+                    Mutex::new(Shard { map: HashMap::new(), recency: BTreeMap::new(), tick: 0 })
+                })
+                .collect(),
+            cap_per_shard,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, fp: Fingerprint) -> usize {
+        // The top lane picks the stripe; the full 128 bits stay the key.
+        ((fp.0 >> 64) as u64 % self.shards.len() as u64) as usize
+    }
+
+    /// Look up a trial result, refreshing its recency on a hit.
+    pub fn get(&self, fp: Fingerprint) -> Option<V> {
+        self.lookup(fp, true)
+    }
+
+    /// [`get`](ShardedCache::get) without touching the hit/miss
+    /// counters — for internal re-checks that would otherwise count one
+    /// logical lookup twice (recency is still refreshed).
+    pub fn peek(&self, fp: Fingerprint) -> Option<V> {
+        self.lookup(fp, false)
+    }
+
+    fn lookup(&self, fp: Fingerprint, count: bool) -> Option<V> {
+        let mut guard = self.shards[self.shard_of(fp)].lock().expect("cache shard poisoned");
+        let shard = &mut *guard;
+        match shard.map.get_mut(&fp.0) {
+            Some((value, tick)) => {
+                let stale = *tick;
+                shard.tick += 1;
+                *tick = shard.tick;
+                shard.recency.remove(&stale);
+                shard.recency.insert(shard.tick, fp.0);
+                if count {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(value.clone())
+            }
+            None => {
+                if count {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                }
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a trial result, evicting LRU entries if the
+    /// shard exceeds its capacity.
+    pub fn insert(&self, fp: Fingerprint, value: V) {
+        let mut guard = self.shards[self.shard_of(fp)].lock().expect("cache shard poisoned");
+        let shard = &mut *guard;
+        shard.tick += 1;
+        let tick = shard.tick;
+        if let Some((_, stale)) = shard.map.insert(fp.0, (value, tick)) {
+            shard.recency.remove(&stale);
+        }
+        shard.recency.insert(tick, fp.0);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        while shard.map.len() > self.cap_per_shard {
+            let (&lru_tick, &lru_key) =
+                shard.recency.first_key_value().expect("recency tracks every entry");
+            shard.recency.remove(&lru_tick);
+            shard.map.remove(&lru_key);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Entries currently cached (sums shard sizes; a racy but consistent
+    /// upper/lower bound under concurrency).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().expect("cache shard poisoned").map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fp(n: u128) -> Fingerprint {
+        // Spread across shards via the top lane, like real fingerprints.
+        Fingerprint((n << 64) | n)
+    }
+
+    #[test]
+    fn get_insert_and_counters() {
+        let c: ShardedCache<f64> = ShardedCache::new(4, 64);
+        assert_eq!(c.get(fp(1)), None);
+        c.insert(fp(1), 42.0);
+        assert_eq!(c.get(fp(1)), Some(42.0));
+        assert_eq!(c.len(), 1);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.inserts, s.evictions), (1, 1, 1, 0));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        // Re-insert overwrites without growing.
+        c.insert(fp(1), 43.0);
+        assert_eq!(c.get(fp(1)), Some(43.0));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn peek_refreshes_recency_without_counting() {
+        let c: ShardedCache<u64> = ShardedCache::new(1, 2);
+        c.insert(fp(1), 1);
+        assert_eq!(c.peek(fp(1)), Some(1));
+        assert_eq!(c.peek(fp(9)), None);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (0, 0), "peek must not count");
+        // But it does refresh recency: 1 survives the next eviction.
+        c.insert(fp(2), 2);
+        assert_eq!(c.peek(fp(1)), Some(1));
+        c.insert(fp(3), 3);
+        assert_eq!(c.peek(fp(2)), None, "2 was the LRU entry");
+        assert_eq!(c.peek(fp(1)), Some(1));
+    }
+
+    #[test]
+    fn lru_eviction_is_touch_ordered() {
+        // One shard, capacity 2 → strict LRU semantics are observable.
+        let c: ShardedCache<u64> = ShardedCache::new(1, 2);
+        c.insert(fp(1), 1);
+        c.insert(fp(2), 2);
+        // Touch 1 so 2 becomes the LRU entry…
+        assert_eq!(c.get(fp(1)), Some(1));
+        c.insert(fp(3), 3);
+        // …and is the one evicted.
+        assert_eq!(c.get(fp(2)), None, "LRU entry must be evicted");
+        assert_eq!(c.get(fp(1)), Some(1));
+        assert_eq!(c.get(fp(3)), Some(3));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn capacity_splits_across_shards() {
+        let c: ShardedCache<u64> = ShardedCache::new(4, 8);
+        for i in 0..64u128 {
+            c.insert(fp(i), i as u64);
+        }
+        // ≤ ceil(8/4) = 2 entries per shard survive.
+        assert!(c.len() <= 8, "{} entries survived", c.len());
+        assert!(c.stats().evictions >= 56);
+        // Floors: zero shards / zero capacity are clamped to 1.
+        let tiny: ShardedCache<u64> = ShardedCache::new(0, 0);
+        tiny.insert(fp(9), 9);
+        assert_eq!(tiny.get(fp(9)), Some(9));
+        assert!(!tiny.is_empty());
+    }
+
+    #[test]
+    fn shards_are_independent_under_threads() {
+        let c: ShardedCache<u64> = ShardedCache::new(8, 1024);
+        std::thread::scope(|scope| {
+            for t in 0..4u128 {
+                let c = &c;
+                scope.spawn(move || {
+                    for i in 0..100u128 {
+                        let k = fp(t * 1000 + i);
+                        c.insert(k, i as u64);
+                        assert_eq!(c.get(k), Some(i as u64));
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 400);
+        assert_eq!(c.stats().hits, 400);
+    }
+}

@@ -1,0 +1,340 @@
+//! Canonical, collision-resistant trial fingerprints.
+//!
+//! A **trial** is the unit of work the tuning service memoizes: one
+//! simulated execution of a `(job, conf, cluster, sim-opts)` quadruple.
+//! Every simulated run is a pure function of that key (see
+//! [`crate::tuner::parallel`]), so two trials with equal fingerprints
+//! have bit-identical outcomes and the second one never needs to run.
+//!
+//! The fingerprint is a 128-bit hash ([`Fingerprint`]) produced by
+//! [`Fp128`], a two-lane splitmix-style absorber (the offline crate set
+//! has no hashing crates). Crucially, the configuration is hashed
+//! through [`SparkConf::canonical_settings`] — the same ordered listing
+//! the manual `PartialEq` reads — so *conf equality ⇔ equal conf
+//! digest* by construction, and a newly added parameter can't drift out
+//! of the fingerprint without also escaping equality (which the conf
+//! tests guard). All numeric fields are framed with type tags and
+//! length prefixes, so field boundaries are unambiguous.
+
+use crate::cluster::ClusterSpec;
+use crate::conf::SparkConf;
+use crate::engine::{Dataset, Job, Op};
+use crate::sim::SimOpts;
+use std::fmt;
+
+/// A 128-bit trial fingerprint. With ~2⁶⁴ trials in a cache you'd expect
+/// the first collision — far beyond any tuning workload; treat equal
+/// fingerprints as equal trials.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u128);
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+/// splitmix64's finalizer: a full-avalanche 64-bit mix.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Streaming 128-bit hasher: two decorrelated 64-bit lanes, each fed the
+/// input words through a different odd multiplier and a full avalanche
+/// mix per word. Not cryptographic — built for memoization keys, where
+/// the inputs are not adversarial but collisions must be negligible.
+#[derive(Clone, Debug)]
+pub struct Fp128 {
+    a: u64,
+    b: u64,
+    words: u64,
+}
+
+impl Fp128 {
+    /// A fresh hasher, domain-separated by `domain` (different uses of
+    /// the hash can never collide with each other).
+    pub fn new(domain: &str) -> Fp128 {
+        // First 128 bits of the hex expansion of π — nothing-up-my-sleeve.
+        let mut h = Fp128 { a: 0x243f6a8885a308d3, b: 0x13198a2e0370_7344, words: 0 };
+        h.write_str(domain);
+        h
+    }
+
+    /// Absorb one 64-bit word into both lanes.
+    pub fn write_u64(&mut self, x: u64) {
+        self.words = self.words.wrapping_add(1);
+        self.a = mix64(self.a ^ x.wrapping_mul(0x9e3779b97f4a7c15));
+        self.b = mix64(self.b.rotate_left(32) ^ x.wrapping_mul(0xc2b2ae3d27d4eb4f));
+    }
+
+    /// Absorb raw bytes with a length prefix (unambiguous framing:
+    /// `"ab" + "c"` never hashes like `"a" + "bc"`).
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        self.write_u64(bytes.len() as u64);
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.write_u64(u64::from_le_bytes(buf));
+        }
+    }
+
+    /// Absorb a UTF-8 string (length-prefixed).
+    pub fn write_str(&mut self, s: &str) {
+        self.write_bytes(s.as_bytes());
+    }
+
+    /// Absorb an `f64` by bit pattern (exact: distinct floats hash
+    /// distinctly, including the sign of zero and every NaN payload).
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_u64(x.to_bits());
+    }
+
+    pub fn write_bool(&mut self, x: bool) {
+        self.write_u64(x as u64);
+    }
+
+    /// Close the stream (the word count is folded in, so a truncated
+    /// input can't alias a padded one) and return the fingerprint.
+    pub fn finish(mut self) -> Fingerprint {
+        let n = self.words;
+        self.write_u64(n ^ 0x5ca1ab1e_0ddba11);
+        Fingerprint(((self.a as u128) << 64) | self.b as u128)
+    }
+}
+
+/// Fingerprint one trial: the job (plan identity), the configuration's
+/// canonical effective settings, the cluster hardware, and the simulator
+/// options. Equal fingerprints ⇒ bit-identical simulated outcomes.
+pub fn fingerprint_trial(
+    job: &Job,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> Fingerprint {
+    let mut h = Fp128::new("sparktune.trial.v1");
+    write_job(&mut h, job);
+    write_conf(&mut h, conf);
+    write_cluster(&mut h, cluster);
+    write_sim_opts(&mut h, opts);
+    h.finish()
+}
+
+/// Digest of just the configuration's canonical settings — the conf part
+/// of a trial key, exposed for tests and diagnostics.
+pub fn fingerprint_conf(conf: &SparkConf) -> Fingerprint {
+    let mut h = Fp128::new("sparktune.conf.v1");
+    conf.visit_canonical_settings(|k, v| {
+        h.write_str(k);
+        h.write_str(v);
+    });
+    h.finish()
+}
+
+fn write_conf(h: &mut Fp128, conf: &SparkConf) {
+    // The conf is hashed through the allocation-free canonical visitor
+    // into its own *closed* sub-digest (its `finish` folds the word
+    // count, so the trial stream stays unambiguously framed without a
+    // counting pre-pass), which the trial hash then absorbs. This is
+    // the memo cache's lookup hot path — no per-setting `String`s.
+    let d = fingerprint_conf(conf);
+    h.write_u64((d.0 >> 64) as u64);
+    h.write_u64(d.0 as u64);
+}
+
+fn write_job(h: &mut Fp128, job: &Job) {
+    h.write_str(&job.name);
+    h.write_f64(job.pool.weight);
+    h.write_u64(job.pool.min_share as u64);
+    h.write_u64(job.ops.len() as u64);
+    for op in &job.ops {
+        write_op(h, op);
+    }
+}
+
+fn write_op(h: &mut Fp128, op: &Op) {
+    match op {
+        Op::Generate { out, cpu_ns_per_record } => {
+            h.write_u64(1);
+            write_dataset(h, out);
+            h.write_f64(*cpu_ns_per_record);
+        }
+        Op::MapRecords { cpu_ns_per_record, out } => {
+            h.write_u64(2);
+            h.write_f64(*cpu_ns_per_record);
+            write_dataset(h, out);
+        }
+        Op::Cache => h.write_u64(3),
+        Op::CacheRead => h.write_u64(4),
+        Op::SortByKey { reducers } => {
+            h.write_u64(5);
+            h.write_u64(*reducers as u64);
+        }
+        Op::Repartition { reducers } => {
+            h.write_u64(6);
+            h.write_u64(*reducers as u64);
+        }
+        Op::AggregateByKey { reducers, combine_cpu_ns_per_record, out } => {
+            h.write_u64(7);
+            h.write_u64(*reducers as u64);
+            h.write_f64(*combine_cpu_ns_per_record);
+            write_dataset(h, out);
+        }
+        Op::Action => h.write_u64(8),
+    }
+}
+
+fn write_dataset(h: &mut Fp128, d: &Dataset) {
+    h.write_u64(d.records);
+    h.write_u64(d.payload);
+    h.write_u64(d.partitions as u64);
+    h.write_f64(d.entropy);
+    h.write_u64(d.distinct_keys);
+}
+
+fn write_cluster(h: &mut Fp128, c: &ClusterSpec) {
+    h.write_u64(c.nodes as u64);
+    h.write_u64(c.cores_per_node as u64);
+    h.write_u64(c.heap_per_node);
+    h.write_u64(c.ram_per_node);
+    h.write_f64(c.disk_bw);
+    h.write_f64(c.disk_seek);
+    h.write_f64(c.file_open_cost);
+    h.write_f64(c.net_bw);
+    h.write_f64(c.net_latency);
+    h.write_f64(c.cpu_speed);
+    h.write_f64(c.task_overhead);
+}
+
+fn write_sim_opts(h: &mut Fp128, o: &SimOpts) {
+    h.write_f64(o.jitter);
+    h.write_u64(o.seed);
+    match &o.straggler {
+        None => h.write_u64(0),
+        Some(s) => {
+            h.write_u64(1);
+            h.write_f64(s.prob);
+            h.write_f64(s.factor);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Straggler;
+    use crate::workloads::Workload;
+
+    fn base_key() -> (Job, SparkConf, ClusterSpec, SimOpts) {
+        (
+            Workload::MiniSortByKey.job(),
+            SparkConf::default(),
+            ClusterSpec::mini(),
+            SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None },
+        )
+    }
+
+    fn fp(k: &(Job, SparkConf, ClusterSpec, SimOpts)) -> Fingerprint {
+        fingerprint_trial(&k.0, &k.1, &k.2, &k.3)
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_set_order_invariant() {
+        let key = base_key();
+        assert_eq!(fp(&key), fp(&key), "same key must reproduce");
+        // The same effective conf reached through different set() orders
+        // fingerprints identically (golden stability requirement).
+        let mut k1 = base_key();
+        k1.1.set("spark.serializer", "kryo").unwrap();
+        k1.1.set("spark.shuffle.memoryFraction", "0.4").unwrap();
+        k1.1.set("spark.locality.wait", "6s").unwrap();
+        let mut k2 = base_key();
+        k2.1.set("spark.locality.wait", "6000").unwrap(); // bare ms == 6s
+        k2.1.set("spark.shuffle.memoryFraction", "0.4").unwrap();
+        k2.1.set("spark.serializer", "org.apache.spark.serializer.KryoSerializer").unwrap();
+        assert_eq!(fp(&k1), fp(&k2));
+        // Warnings are diagnostics, never part of the fingerprint.
+        let mut k3 = base_key();
+        k3.1.set("spark.yarn.queue", "prod").unwrap();
+        let mut k4 = base_key();
+        k4.1.set("spark.yarn.queue", "prod").unwrap();
+        k4.1.warnings.clear();
+        assert_eq!(fp(&k3), fp(&k4));
+    }
+
+    #[test]
+    fn any_effective_change_changes_the_fingerprint() {
+        let base = base_key();
+        let reference = fp(&base);
+        // One perturbation per component of the trial key.
+        let mut confd = base_key();
+        confd.1.set("spark.shuffle.compress", "false").unwrap();
+        let mut extra = base_key();
+        extra.1.set("spark.yarn.queue", "prod").unwrap();
+        let mut seed = base_key();
+        seed.3.seed ^= 1;
+        let mut jitter = base_key();
+        jitter.3.jitter = 0.05;
+        let mut strag = base_key();
+        strag.3.straggler = Some(Straggler { prob: 0.02, factor: 8.0 });
+        let mut job = base_key();
+        job.0 = Workload::KMeans100M.job();
+        let mut cluster = base_key();
+        cluster.2.nodes += 1;
+        let mut pool = base_key();
+        pool.0 = pool.0.in_pool(2.0, 1);
+        for (what, k) in [
+            ("typed conf key", &confd),
+            ("extras key", &extra),
+            ("sim seed", &seed),
+            ("sim jitter", &jitter),
+            ("straggler model", &strag),
+            ("job plan", &job),
+            ("cluster spec", &cluster),
+            ("fair pool", &pool),
+        ] {
+            assert_ne!(fp(k), reference, "perturbing {what} must change the fingerprint");
+        }
+    }
+
+    #[test]
+    fn conf_digest_matches_equality() {
+        // conf equality ⇔ equal conf digest, both via canonical_settings.
+        let a = SparkConf::default().with("spark.serializer", "kryo");
+        let b = SparkConf::default()
+            .with("spark.serializer", "org.apache.spark.serializer.KryoSerializer");
+        assert_eq!(a, b);
+        assert_eq!(fingerprint_conf(&a), fingerprint_conf(&b));
+        let c = a.clone().with("spark.rdd.compress", "true");
+        assert_ne!(a, c);
+        assert_ne!(fingerprint_conf(&a), fingerprint_conf(&c));
+    }
+
+    #[test]
+    fn framing_is_unambiguous() {
+        // Length-prefixed strings: shifting a byte across a field
+        // boundary must change the hash.
+        let mut h1 = Fp128::new("t");
+        h1.write_str("ab");
+        h1.write_str("c");
+        let mut h2 = Fp128::new("t");
+        h2.write_str("a");
+        h2.write_str("bc");
+        assert_ne!(h1.finish(), h2.finish());
+        // Domain separation.
+        assert_ne!(Fp128::new("x").finish(), Fp128::new("y").finish());
+        // Zero-word vs one-zero-word streams differ.
+        let mut h3 = Fp128::new("t");
+        h3.write_u64(0);
+        assert_ne!(h3.finish(), Fp128::new("t").finish());
+    }
+
+    #[test]
+    fn display_is_32_hex_chars() {
+        let s = format!("{}", fp(&base_key()));
+        assert_eq!(s.len(), 32);
+        assert!(s.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+}

@@ -1,0 +1,35 @@
+//! Tuning-as-a-service: sessions, trial fingerprints, and a sharded
+//! memoized evaluation cache.
+//!
+//! The paper prices every trial by actually running it — exactly what
+//! makes trial-and-error tuning expensive at scale. Production tuning
+//! services (Li et al., "Towards General and Efficient Online Tuning
+//! for Spark"; retrieval-based tuners, see PAPERS.md) win by **reusing
+//! evidence** across applications and sessions. This module is that
+//! serving layer for the simulator-backed tuner:
+//!
+//! * [`fingerprint`] — canonical 128-bit identity of a trial
+//!   (`job × conf × cluster × sim-opts`), built on
+//!   [`SparkConf::canonical_settings`](crate::conf::SparkConf::canonical_settings)
+//!   so the fingerprint and conf equality share one source of truth;
+//! * [`cache`] — a lock-striped, LRU-bounded memo cache of trial
+//!   results with hit/miss/evict counters;
+//! * [`server`] — the session manager: queues tuning requests, dedupes
+//!   identical in-flight trials across sessions (single-flight), and
+//!   fans sessions out over an OS-thread pool reusing
+//!   [`TrialExecutor`](crate::tuner::TrialExecutor).
+//!
+//! Invariant pinned by the tests: serving a session through the cache
+//! is **bit-identical** to a direct [`tune`](crate::tuner::tune) call —
+//! for any worker count and any cache warmth — because every simulated
+//! trial is a pure function of its fingerprinted key.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod server;
+
+pub use cache::{CacheStats, ShardedCache};
+pub use fingerprint::{fingerprint_conf, fingerprint_trial, Fingerprint, Fp128};
+pub use server::{
+    outcomes_identical, ServiceOpts, ServiceStats, SessionOutcome, SessionRequest, TuningService,
+};

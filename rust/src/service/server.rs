@@ -1,0 +1,426 @@
+//! The tuning-as-a-service session manager.
+//!
+//! [`TuningService`] accepts many concurrent **tuning sessions** (one
+//! Fig-4 trial-and-error run per application, per tenant) and guarantees
+//! the cluster never simulates the same trial twice:
+//!
+//! ```text
+//!   session ──► tune() ──► evaluate(job, conf, sim)
+//!                              │ fingerprint_trial          (identity)
+//!                              ├─ ShardedCache::get         (memo)
+//!                              ├─ in-flight table + condvar (single-flight)
+//!                              └─ engine::run               (simulate once)
+//! ```
+//!
+//! Sessions fan out over an OS-thread worker pool (reusing
+//! [`TrialExecutor`]'s order-preserving work-stealing loop); trials that
+//! miss the cache but are already being simulated by another session
+//! **coalesce** onto the in-flight computation instead of duplicating
+//! it. Because every simulated run is a pure function of the trial key,
+//! serving a session through the cache is *bit-identical* to calling
+//! [`tune`] directly — regardless of worker count, cache warmth, or
+//! which session happened to simulate a shared trial first. The
+//! integration tests pin exactly that.
+
+use super::cache::{CacheStats, ShardedCache};
+use super::fingerprint::{fingerprint_trial, Fingerprint};
+use crate::cluster::ClusterSpec;
+use crate::conf::SparkConf;
+use crate::engine::{run, Job};
+use crate::sim::SimOpts;
+use crate::tuner::{tune, TrialExecutor, TuneOpts, TuneOutcome};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Service sizing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceOpts {
+    /// OS threads serving sessions concurrently (min 1).
+    pub workers: usize,
+    /// Lock stripes in the memo cache.
+    pub shards: usize,
+    /// Total memo-cache capacity, in trials.
+    pub capacity: usize,
+}
+
+impl Default for ServiceOpts {
+    fn default() -> Self {
+        ServiceOpts { workers: 4, shards: 8, capacity: 4096 }
+    }
+}
+
+/// One tuning request: tune `job` with the Fig-4 methodology under
+/// `tune` options, pricing trials with `sim`.
+#[derive(Clone, Debug)]
+pub struct SessionRequest {
+    /// Display name, e.g. `"tenant3/app1"`.
+    pub name: String,
+    pub job: Job,
+    pub tune: TuneOpts,
+    pub sim: SimOpts,
+}
+
+/// A served session: the request's index and name plus the tuning
+/// outcome (bit-identical to a direct [`tune`] call).
+#[derive(Clone, Debug)]
+pub struct SessionOutcome {
+    pub session: usize,
+    pub name: String,
+    pub outcome: TuneOutcome,
+}
+
+/// Service-level counters. `trials_requested` counts every trial any
+/// session asked for; of those, `trials_simulated` actually ran the
+/// simulator, `coalesced` waited on another session's identical
+/// in-flight trial, and the rest were cache hits.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    pub sessions: u64,
+    pub trials_requested: u64,
+    pub trials_simulated: u64,
+    pub coalesced: u64,
+    pub cache: CacheStats,
+}
+
+impl ServiceStats {
+    /// Fraction of requested trials that never touched the simulator
+    /// (cache hits + coalesced in-flight joins). Saturating: a snapshot
+    /// taken mid-evaluation can transiently observe `simulated` ahead
+    /// of `requested`.
+    pub fn hit_rate(&self) -> f64 {
+        if self.trials_requested == 0 {
+            0.0
+        } else {
+            self.trials_requested.saturating_sub(self.trials_simulated) as f64
+                / self.trials_requested as f64
+        }
+    }
+}
+
+/// Lifecycle of an in-flight trial's result slot.
+enum FlightState {
+    /// The leader is still simulating.
+    Pending,
+    /// The leader published its result.
+    Done(f64),
+    /// The leader's computation panicked; waiters must propagate, not
+    /// block forever.
+    Poisoned,
+}
+
+/// An in-flight trial: the leader publishes into `slot` and signals
+/// `done`; followers wait instead of re-simulating.
+struct InFlight {
+    slot: Mutex<FlightState>,
+    done: Condvar,
+}
+
+/// Shared tuning service: memo cache + single-flight table + worker
+/// pool over one fixed cluster. `&TuningService` is `Sync`; one
+/// instance serves any number of concurrent `serve` batches.
+///
+/// The in-flight table is one mutex (unlike the striped cache): its
+/// critical sections are a hash-map probe per *miss*, microseconds
+/// against the milliseconds-to-seconds a simulation holds the slot, so
+/// striping it would buy nothing measurable today. Revisit if trials
+/// ever become cheap relative to registration.
+pub struct TuningService {
+    cluster: ClusterSpec,
+    cache: ShardedCache<f64>,
+    inflight: Mutex<HashMap<Fingerprint, Arc<InFlight>>>,
+    workers: usize,
+    sessions: AtomicU64,
+    requested: AtomicU64,
+    simulated: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+impl TuningService {
+    pub fn new(cluster: ClusterSpec, opts: ServiceOpts) -> TuningService {
+        TuningService {
+            cluster,
+            cache: ShardedCache::new(opts.shards, opts.capacity),
+            inflight: Mutex::new(HashMap::new()),
+            workers: opts.workers.max(1),
+            sessions: AtomicU64::new(0),
+            requested: AtomicU64::new(0),
+            simulated: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    /// The cluster all sessions are priced against.
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    /// Serve a batch of sessions over the worker pool; outcomes come
+    /// back in request order. Each session runs the sequential Fig-4
+    /// methodology, but every trial it prices goes through the memoized
+    /// [`evaluate`](TuningService::evaluate) path, so overlapping
+    /// sessions share simulations.
+    pub fn serve(&self, requests: &[SessionRequest]) -> Vec<SessionOutcome> {
+        self.sessions.fetch_add(requests.len() as u64, Ordering::Relaxed);
+        let pool = TrialExecutor::new(self.workers);
+        let outcomes = pool.map(requests, |req| {
+            let mut runner = |conf: &SparkConf| self.evaluate(&req.job, conf, &req.sim);
+            tune(&mut runner, &req.tune)
+        });
+        outcomes
+            .into_iter()
+            .enumerate()
+            .map(|(i, outcome)| SessionOutcome {
+                session: i,
+                name: requests[i].name.clone(),
+                outcome,
+            })
+            .collect()
+    }
+
+    /// Price one trial through the memo layers: fingerprint → cache →
+    /// single-flight → simulate. Pure in the trial key, so the returned
+    /// duration is bit-identical to a direct `run(..)` whatever path
+    /// served it.
+    pub fn evaluate(&self, job: &Job, conf: &SparkConf, sim: &SimOpts) -> f64 {
+        let fp = fingerprint_trial(job, conf, &self.cluster, sim);
+        self.memoized(fp, || run(job, conf, &self.cluster, sim).effective_duration())
+    }
+
+    /// The memoization core, generic over the computation so tests can
+    /// inject slow/counting closures. Exactly one caller per fingerprint
+    /// runs `compute` (modulo eviction); everyone else gets the cached
+    /// or in-flight value.
+    pub fn memoized(&self, fp: Fingerprint, compute: impl FnOnce() -> f64) -> f64 {
+        self.requested.fetch_add(1, Ordering::Relaxed);
+        if let Some(v) = self.cache.get(fp) {
+            return v;
+        }
+        // Miss: join the in-flight computation if one exists, else lead.
+        let (flight, leader) = {
+            let mut inflight = self.inflight.lock().expect("in-flight table poisoned");
+            if let Some(f) = inflight.get(&fp) {
+                (Arc::clone(f), false)
+            } else {
+                // Re-check under the lock: a leader that finished between
+                // our miss above and this lock has already cached the
+                // value (leaders cache *before* deregistering, so this
+                // re-check cannot miss a completed trial). Uncounted —
+                // the probe above already recorded this logical lookup.
+                if let Some(v) = self.cache.peek(fp) {
+                    return v;
+                }
+                let f = Arc::new(InFlight {
+                    slot: Mutex::new(FlightState::Pending),
+                    done: Condvar::new(),
+                });
+                inflight.insert(fp, Arc::clone(&f));
+                (f, true)
+            }
+        };
+        if leader {
+            // Unwind guard: if `compute` panics, deregister the flight
+            // and poison the slot so coalesced waiters propagate the
+            // failure instead of blocking forever (and later callers of
+            // this fingerprint start a fresh computation).
+            struct Abort<'a> {
+                svc: &'a TuningService,
+                fp: Fingerprint,
+                flight: &'a Arc<InFlight>,
+                armed: bool,
+            }
+            impl Drop for Abort<'_> {
+                fn drop(&mut self) {
+                    if !self.armed {
+                        return;
+                    }
+                    // Best-effort during unwind: never double-panic.
+                    if let Ok(mut map) = self.svc.inflight.lock() {
+                        map.remove(&self.fp);
+                    }
+                    if let Ok(mut slot) = self.flight.slot.lock() {
+                        *slot = FlightState::Poisoned;
+                        self.flight.done.notify_all();
+                    }
+                }
+            }
+            let mut abort = Abort { svc: self, fp, flight: &flight, armed: true };
+            let v = compute();
+            abort.armed = false;
+            drop(abort);
+            self.simulated.fetch_add(1, Ordering::Relaxed);
+            // Cache strictly before deregistering: the re-check above
+            // relies on completed trials being visible in the cache by
+            // the time their in-flight entry disappears.
+            self.cache.insert(fp, v);
+            self.inflight.lock().expect("in-flight table poisoned").remove(&fp);
+            let mut slot = flight.slot.lock().expect("in-flight slot poisoned");
+            *slot = FlightState::Done(v);
+            flight.done.notify_all();
+            v
+        } else {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            let mut slot = flight.slot.lock().expect("in-flight slot poisoned");
+            loop {
+                match *slot {
+                    FlightState::Done(v) => break v,
+                    FlightState::Poisoned => {
+                        panic!("in-flight leader panicked while simulating this trial")
+                    }
+                    FlightState::Pending => {
+                        slot = flight.done.wait(slot).expect("in-flight slot poisoned");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Snapshot of the service counters. `simulated`/`coalesced` are
+    /// loaded *before* `requested` — each increments only after its
+    /// request was counted, so a mid-evaluation snapshot stays
+    /// consistent (and [`ServiceStats::hit_rate`] saturates against any
+    /// residual relaxed-ordering skew).
+    pub fn stats(&self) -> ServiceStats {
+        let trials_simulated = self.simulated.load(Ordering::Relaxed);
+        let coalesced = self.coalesced.load(Ordering::Relaxed);
+        ServiceStats {
+            sessions: self.sessions.load(Ordering::Relaxed),
+            trials_requested: self.requested.load(Ordering::Relaxed),
+            trials_simulated,
+            coalesced,
+            cache: self.cache.stats(),
+        }
+    }
+
+    /// Trials currently memoized.
+    pub fn cached_trials(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Bitwise comparison of two tuning outcomes — the service's parity
+/// criterion (`==` on f64 would already be bitwise for finite values,
+/// but comparing bit patterns also equates the INFINITY crash marker
+/// and documents the intent).
+pub fn outcomes_identical(a: &TuneOutcome, b: &TuneOutcome) -> bool {
+    a.baseline.to_bits() == b.baseline.to_bits()
+        && a.best.to_bits() == b.best.to_bits()
+        && a.threshold.to_bits() == b.threshold.to_bits()
+        && a.best_conf == b.best_conf
+        && a.trials.len() == b.trials.len()
+        && a.trials.iter().zip(&b.trials).all(|(x, y)| {
+            x.step == y.step
+                && x.delta == y.delta
+                && x.duration.to_bits() == y.duration.to_bits()
+                && x.improvement.to_bits() == y.improvement.to_bits()
+                && x.kept == y.kept
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::fingerprint::Fp128;
+    use crate::workloads::Workload;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+
+    fn mini_request(name: &str, seed: u64) -> SessionRequest {
+        SessionRequest {
+            name: name.into(),
+            job: Workload::MiniSortByKey.job(),
+            tune: TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false },
+            sim: SimOpts { jitter: 0.04, seed, straggler: None },
+        }
+    }
+
+    #[test]
+    fn single_flight_computes_exactly_once() {
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let fp = Fp128::new("test.single-flight").finish();
+        let computed = AtomicUsize::new(0);
+        let n = 8;
+        let barrier = Barrier::new(n);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    let (svc, computed, barrier) = (&svc, &computed, &barrier);
+                    scope.spawn(move || {
+                        barrier.wait();
+                        svc.memoized(fp, || {
+                            computed.fetch_add(1, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_millis(25));
+                            123.5
+                        })
+                    })
+                })
+                .collect();
+            for h in handles {
+                assert_eq!(h.join().expect("waiter panicked"), 123.5);
+            }
+        });
+        assert_eq!(computed.load(Ordering::SeqCst), 1, "single-flight must dedupe");
+        let s = svc.stats();
+        assert_eq!(s.trials_requested, n as u64);
+        assert_eq!(s.trials_simulated, 1);
+    }
+
+    #[test]
+    fn leader_panic_deregisters_the_flight() {
+        // A panicking compute (malformed cost model) must not wedge its
+        // fingerprint: the flight deregisters on unwind and the next
+        // caller leads afresh instead of waiting forever.
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let fp = Fp128::new("test.unwind").finish();
+        let boom = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            svc.memoized(fp, || panic!("cost model exploded"))
+        }));
+        assert!(boom.is_err());
+        assert_eq!(svc.memoized(fp, || 9.25), 9.25);
+        assert_eq!(svc.stats().trials_simulated, 1, "panicked compute never counted");
+    }
+
+    #[test]
+    fn memoized_serves_repeats_from_cache() {
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let fp = Fp128::new("test.memo").finish();
+        assert_eq!(svc.memoized(fp, || 7.0), 7.0);
+        // A second computation for the same fingerprint never runs.
+        assert_eq!(svc.memoized(fp, || unreachable!("memoized twice")), 7.0);
+        assert_eq!(svc.cached_trials(), 1);
+        assert_eq!(svc.stats().trials_simulated, 1);
+    }
+
+    #[test]
+    fn serve_preserves_request_order_and_counts_sessions() {
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let reqs = vec![mini_request("a", 1), mini_request("b", 2), mini_request("c", 1)];
+        let out = svc.serve(&reqs);
+        assert_eq!(out.len(), 3);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.session, i);
+            assert_eq!(o.name, reqs[i].name);
+        }
+        // Sessions "a" and "c" are identical → their trials fully dedupe.
+        assert!(outcomes_identical(&out[0].outcome, &out[2].outcome));
+        let s = svc.stats();
+        assert_eq!(s.sessions, 3);
+        assert!(
+            s.trials_simulated < s.trials_requested,
+            "overlap must dedupe: {} simulated of {} requested",
+            s.trials_simulated,
+            s.trials_requested
+        );
+        assert!(s.hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn outcomes_identical_discriminates() {
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let a = svc.serve(&[mini_request("a", 1)]).remove(0).outcome;
+        let b = svc.serve(&[mini_request("b", 1)]).remove(0).outcome;
+        let c = svc.serve(&[mini_request("c", 9)]).remove(0).outcome;
+        assert!(outcomes_identical(&a, &b));
+        assert!(!outcomes_identical(&a, &c), "different seed ⇒ different trials");
+    }
+}

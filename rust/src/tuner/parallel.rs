@@ -10,7 +10,9 @@
 //! OS threads and returns results in input order, bit-identical to a
 //! sequential evaluation (cf. Li et al., "Towards General and Efficient
 //! Online Tuning for Spark": trial cost, not search logic, is the
-//! bottleneck).
+//! bottleneck). The generic [`map`](TrialExecutor::map) core also
+//! serves as the worker pool of the tuning service
+//! (`service::server`), which fans whole sessions over it.
 
 use crate::conf::SparkConf;
 use crate::engine::Job;
@@ -40,6 +42,52 @@ impl TrialExecutor {
         self.threads
     }
 
+    /// Apply `f` to every item on the worker pool, returning results in
+    /// input order. `f` must be a pure function of its argument, which
+    /// makes the output independent of the thread count. This is the
+    /// generic core behind [`evaluate`](TrialExecutor::evaluate); the
+    /// service layer (`service::server`) reuses it to fan whole tuning
+    /// *sessions* — not just single configurations — over the pool.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        let n = items.len();
+        if self.threads == 1 || n <= 1 {
+            return items.iter().map(&f).collect();
+        }
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let next = AtomicUsize::new(0);
+        let f_ref = &f;
+        std::thread::scope(|scope| {
+            let workers: Vec<_> = (0..self.threads.min(n))
+                .map(|_| {
+                    let next = &next;
+                    scope.spawn(move || {
+                        let mut local: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f_ref(&items[i])));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for w in workers {
+                for (i, v) in w.join().expect("trial worker panicked") {
+                    out[i] = Some(v);
+                }
+            }
+        });
+        out.into_iter().map(|v| v.expect("every index claimed exactly once")).collect()
+    }
+
     /// Evaluate `eval` over every configuration, returning results in
     /// input order. `eval` must be a pure function of its argument
     /// (simulated runs are — deterministic in `(conf, seed)`), which
@@ -48,37 +96,7 @@ impl TrialExecutor {
     where
         F: Fn(&SparkConf) -> f64 + Sync,
     {
-        let n = confs.len();
-        if self.threads == 1 || n <= 1 {
-            return confs.iter().map(|c| eval(c)).collect();
-        }
-        let mut out = vec![0.0f64; n];
-        let next = AtomicUsize::new(0);
-        let eval_ref = &eval;
-        std::thread::scope(|scope| {
-            let workers: Vec<_> = (0..self.threads.min(n))
-                .map(|_| {
-                    let next = &next;
-                    scope.spawn(move || {
-                        let mut local: Vec<(usize, f64)> = Vec::new();
-                        loop {
-                            let i = next.fetch_add(1, Ordering::Relaxed);
-                            if i >= n {
-                                break;
-                            }
-                            local.push((i, eval_ref(&confs[i])));
-                        }
-                        local
-                    })
-                })
-                .collect();
-            for w in workers {
-                for (i, v) in w.join().expect("trial worker panicked") {
-                    out[i] = v;
-                }
-            }
-        });
-        out
+        self.map(confs, eval)
     }
 
     /// Evaluate trials against a fixed **background workload** — tuning a
@@ -143,6 +161,18 @@ mod tests {
         let seq: Vec<f64> = confs.iter().map(eval).collect();
         let par = TrialExecutor::new(6).evaluate(&confs, eval);
         assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn generic_map_handles_non_float_results() {
+        // The service layer maps whole sessions (rich result types) over
+        // the pool; ordering and thread-invariance must hold for any R.
+        let items: Vec<u64> = (0..97).collect();
+        let f = |x: &u64| (format!("item{x}"), *x * 2);
+        let seq = TrialExecutor::new(1).map(&items, f);
+        let par = TrialExecutor::new(5).map(&items, f);
+        assert_eq!(seq, par);
+        assert_eq!(par[41], ("item41".to_string(), 82));
     }
 
     #[test]

@@ -187,6 +187,41 @@ mod tests {
     }
 
     #[test]
+    fn duration_edge_cases() {
+        // Bare numbers follow the caller's default unit — and nothing else.
+        assert_eq!(parse_duration_secs("0", TimeUnit::Millis).unwrap(), 0.0);
+        assert_eq!(parse_duration_secs("1", TimeUnit::Millis).unwrap(), 1e-3);
+        assert_eq!(parse_duration_secs("1", TimeUnit::Secs).unwrap(), 1.0);
+        // Fractional quantities with every suffix.
+        assert_eq!(parse_duration_secs("1.5s", TimeUnit::Millis).unwrap(), 1.5);
+        assert_eq!(parse_duration_secs("2.5m", TimeUnit::Millis).unwrap(), 150.0);
+        assert_eq!(parse_duration_secs("0.5ms", TimeUnit::Millis).unwrap(), 0.5e-3);
+        // `m` is minutes (Spark), never milli — 300s, not 0.005s.
+        assert_eq!(parse_duration_secs("5m", TimeUnit::Millis).unwrap(), 300.0);
+        // Whitespace around the value and between number and suffix.
+        assert_eq!(parse_duration_secs("  300ms  ", TimeUnit::Millis).unwrap(), 0.3);
+        assert_eq!(parse_duration_secs("3 s", TimeUnit::Millis).unwrap(), 3.0);
+        assert_eq!(parse_duration_secs("\t3s", TimeUnit::Millis).unwrap(), 3.0);
+        // Case-insensitive suffixes (Spark lowercases too).
+        assert_eq!(parse_duration_secs("300MS", TimeUnit::Millis).unwrap(), 0.3);
+        assert_eq!(parse_duration_secs("3S", TimeUnit::Millis).unwrap(), 3.0);
+        // Negatives are rejected with every suffix and bare.
+        for bad in ["-1", "-3s", "-300ms", "-5m", "-2h"] {
+            assert!(
+                parse_duration_secs(bad, TimeUnit::Millis).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+        // Garbage: missing number, double suffix, infinities, NaN.
+        for bad in ["ms", "s", "3ss", "3sms", "inf", "NaN", "1e999", "--3s", "3 q s"] {
+            assert!(
+                parse_duration_secs(bad, TimeUnit::Millis).is_err(),
+                "{bad:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
     fn formats_spark_durations() {
         assert_eq!(fmt_duration_secs(3.0), "3s");
         assert_eq!(fmt_duration_secs(0.3), "300ms");

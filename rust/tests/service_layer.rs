@@ -1,0 +1,158 @@
+//! Integration tests for the tuning-as-a-service core: the acceptance
+//! criteria of the service layer, pinned end to end.
+//!
+//! * **Parity** — `serve`-mediated outcomes are bit-identical to a
+//!   direct `tuner::tune` call, for any worker count and any cache
+//!   warmth (cold run vs fully-warm rerun).
+//! * **Dedup** — overlapping sessions simulate strictly fewer trials
+//!   than they request.
+//! * **Fingerprint goldens** — set-order invariance and sensitivity of
+//!   the trial fingerprint across every component of the trial key.
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::conf::SparkConf;
+use sparktune::engine::run;
+use sparktune::service::{
+    fingerprint_trial, outcomes_identical, ServiceOpts, SessionRequest, TuningService,
+};
+use sparktune::sim::SimOpts;
+use sparktune::tuner::{tune, TuneOpts};
+use sparktune::workloads::Workload;
+
+fn sim() -> SimOpts {
+    SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }
+}
+
+fn request(name: &str, w: Workload, tune: TuneOpts) -> SessionRequest {
+    SessionRequest { name: name.into(), job: w.job(), tune, sim: sim() }
+}
+
+#[test]
+fn served_outcome_is_bit_identical_to_direct_tune() {
+    let cluster = ClusterSpec::mini();
+    let topts = TuneOpts { threshold: 0.0, short_version: false, straggler_aware: false };
+
+    // Ground truth: the tuner driving the simulator directly.
+    let job = Workload::MiniSortByKey.job();
+    let mut direct_runner =
+        |conf: &SparkConf| run(&job, conf, &cluster, &sim()).effective_duration();
+    let direct = tune(&mut direct_runner, &topts);
+
+    for workers in [1usize, 4, 8] {
+        let svc = TuningService::new(
+            cluster.clone(),
+            ServiceOpts { workers, shards: 4, capacity: 1024 },
+        );
+        let req = request("solo", Workload::MiniSortByKey, topts.clone());
+        // Cold pass.
+        let cold = svc.serve(std::slice::from_ref(&req)).remove(0).outcome;
+        assert!(
+            outcomes_identical(&cold, &direct),
+            "cold serve (workers={workers}) diverged from direct tune"
+        );
+        // Fully-warm rerun on the same service.
+        let warm = svc.serve(std::slice::from_ref(&req)).remove(0).outcome;
+        assert!(
+            outcomes_identical(&warm, &direct),
+            "warm serve (workers={workers}) diverged from direct tune"
+        );
+        // The warm pass must not have simulated anything new.
+        let s = svc.stats();
+        assert_eq!(s.trials_simulated, direct.runs() as u64, "workers={workers}");
+        assert_eq!(s.trials_requested, 2 * direct.runs() as u64, "workers={workers}");
+    }
+}
+
+#[test]
+fn overlapping_sessions_simulate_strictly_fewer_trials() {
+    let cluster = ClusterSpec::mini();
+    let topts = TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false };
+    // 5 tenants tuning the same app: 5× the requests, 1× the simulations.
+    let reqs: Vec<SessionRequest> = (0..5)
+        .map(|t| request(&format!("tenant{t}"), Workload::MiniSortByKey, topts.clone()))
+        .collect();
+    let svc =
+        TuningService::new(cluster.clone(), ServiceOpts { workers: 4, shards: 4, capacity: 1024 });
+    let out = svc.serve(&reqs);
+    let s = svc.stats();
+    assert_eq!(s.sessions, 5);
+    assert_eq!(
+        s.trials_simulated,
+        out[0].outcome.runs() as u64,
+        "identical sessions must collapse to one simulation per trial"
+    );
+    assert_eq!(s.trials_requested, 5 * out[0].outcome.runs() as u64);
+    assert!(s.hit_rate() > 0.0);
+    for o in &out[1..] {
+        assert!(outcomes_identical(&out[0].outcome, &o.outcome), "{} diverged", o.name);
+    }
+}
+
+#[test]
+fn golden_fingerprint_stability() {
+    // Same effective trial key through different construction orders →
+    // the same fingerprint, run after run.
+    let cluster = ClusterSpec::mini();
+    let job = Workload::MiniSortByKey.job();
+    let a = SparkConf::default()
+        .with("spark.serializer", "kryo")
+        .with("spark.shuffle.file.buffer", "96k")
+        .with("spark.locality.wait", "300ms");
+    let b = SparkConf::default()
+        .with("spark.locality.wait", "0.3s")
+        .with("spark.serializer", "org.apache.spark.serializer.KryoSerializer")
+        .with("spark.shuffle.file.buffer", "96k");
+    let fa = fingerprint_trial(&job, &a, &cluster, &sim());
+    let fb = fingerprint_trial(&job, &b, &cluster, &sim());
+    assert_eq!(fa, fb, "set order and value spellings must canonicalize away");
+    assert_eq!(fa, fingerprint_trial(&job, &a, &cluster, &sim()), "stable across calls");
+
+    // Any effective change flips it.
+    let c = a.clone().with("spark.shuffle.file.buffer", "64k");
+    assert_ne!(fa, fingerprint_trial(&job, &c, &cluster, &sim()));
+    let mut other_sim = sim();
+    other_sim.seed += 1;
+    assert_ne!(fa, fingerprint_trial(&job, &a, &cluster, &other_sim));
+    let other_job = Workload::KMeans100M.job();
+    assert_ne!(fa, fingerprint_trial(&other_job, &a, &cluster, &sim()));
+    let mut other_cluster = cluster.clone();
+    other_cluster.disk_bw *= 2.0;
+    assert_ne!(fa, fingerprint_trial(&job, &a, &other_cluster, &sim()));
+}
+
+#[test]
+fn service_handles_crashing_configurations() {
+    // The 0.1/0.7 OOM regime returns INFINITY through the cache exactly
+    // like it does directly; crashes memoize as crashes.
+    let cluster = ClusterSpec::marenostrum();
+    let svc =
+        TuningService::new(cluster.clone(), ServiceOpts { workers: 2, shards: 2, capacity: 64 });
+    let job = Workload::SortByKey1B.job();
+    let crashing = SparkConf::default()
+        .with("spark.shuffle.memoryFraction", "0.1")
+        .with("spark.storage.memoryFraction", "0.7");
+    let first = svc.evaluate(&job, &crashing, &sim());
+    let second = svc.evaluate(&job, &crashing, &sim());
+    assert!(first.is_infinite(), "0.1/0.7 must crash sort-by-key");
+    assert_eq!(first.to_bits(), second.to_bits());
+    let s = svc.stats();
+    assert_eq!((s.trials_requested, s.trials_simulated), (2, 1));
+}
+
+#[test]
+fn tiny_cache_still_serves_correctly() {
+    // With capacity 1 the cache thrashes, but purity keeps results
+    // exact — memoization is an optimization, never a semantic.
+    let cluster = ClusterSpec::mini();
+    let topts = TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false };
+    let svc =
+        TuningService::new(cluster.clone(), ServiceOpts { workers: 2, shards: 1, capacity: 1 });
+    let req = request("thrash", Workload::MiniSortByKey, topts.clone());
+    let served = svc.serve(std::slice::from_ref(&req)).remove(0).outcome;
+    let job = Workload::MiniSortByKey.job();
+    let mut direct_runner =
+        |conf: &SparkConf| run(&job, conf, &cluster, &sim()).effective_duration();
+    let direct = tune(&mut direct_runner, &topts);
+    assert!(outcomes_identical(&served, &direct));
+    assert!(svc.stats().cache.evictions > 0, "capacity 1 must evict");
+}
