@@ -14,7 +14,7 @@ fn once(w: Workload, conf: &SparkConf) -> Option<(f64, Vec<(String, f64)>)> {
     if r.crashed.is_some() {
         return None;
     }
-    let stages = r.stages.iter().map(|s| (s.name.clone(), s.duration)).collect();
+    let stages = r.stages.iter().map(|s| (s.name.to_string(), s.duration)).collect();
     Some((r.duration, stages))
 }
 

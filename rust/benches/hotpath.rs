@@ -7,9 +7,9 @@
 use sparktune::cluster::ClusterSpec;
 use sparktune::codec::CodecKind;
 use sparktune::conf::SparkConf;
-use sparktune::engine::run;
+use sparktune::engine::{prepare, run, run_planned};
 use sparktune::ser::{Record, SerKind};
-use sparktune::sim::{run_stage, Phase, SimOpts, TaskSpec};
+use sparktune::sim::{run_stage, EventSim, FifoScheduler, Phase, SimOpts, TaskSpec};
 use sparktune::testkit::bench;
 use sparktune::util::Prng;
 use sparktune::workloads::Workload;
@@ -66,6 +66,22 @@ fn main() {
         std::hint::black_box(run_stage(&cluster, &tasks, &SimOpts::default()));
     });
 
+    // ---- events/sec through the indexed event queue ----
+    // Same 2000-task stage, but the unit is *events*: the discovery +
+    // dirty-roll + heap cost per event is the number the indexed-queue
+    // overhaul moves.
+    let events = {
+        let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.submit(0, &tasks, &SimOpts::default());
+        sim.drain();
+        sim.stats().events
+    };
+    bench("sim/event core 2000-task stage (events/sec)", 9, events as f64, || {
+        let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.submit(0, &tasks, &SimOpts::default());
+        std::hint::black_box(sim.drain());
+    });
+
     // ---- full simulated jobs (the unit of every experiment) ----
     for (name, w) in [
         ("sort-by-key", Workload::SortByKey1B),
@@ -76,6 +92,10 @@ fn main() {
         let conf = SparkConf::default();
         bench(&format!("engine/run {name}"), 9, 1.0, || {
             std::hint::black_box(run(&job, &conf, &cluster, &SimOpts::default()));
+        });
+        let plan = prepare(&job).expect("bench workloads plan cleanly");
+        bench(&format!("engine/run_planned {name}"), 9, 1.0, || {
+            std::hint::black_box(run_planned(&plan, &conf, &cluster, &SimOpts::default()));
         });
     }
 }

@@ -11,6 +11,11 @@
 //! * **parallel trials** — independent `(job, conf)` trials fanned over
 //!   OS threads with `TrialExecutor` (every run pure in `(conf, seed)`).
 //!
+//! Plus the trial-pipeline tentpole scenario: one job priced under 64
+//! conf candidates, **re-plan-per-trial vs plan-once** side by side
+//! (trials/sec), and the indexed event core's events/sec with its
+//! scan-work counters.
+//!
 //! Uses the in-tree `testkit::bench` harness (no criterion in the
 //! offline crate set).
 //!
@@ -18,10 +23,10 @@
 
 use sparktune::cluster::ClusterSpec;
 use sparktune::conf::SparkConf;
-use sparktune::engine::{run, run_all};
+use sparktune::engine::{prepare, run, run_all, run_planned};
 use sparktune::sim::{SimOpts, Straggler};
 use sparktune::testkit::bench;
-use sparktune::tuner::baselines::grid_conf;
+use sparktune::tuner::baselines::{grid_conf, grid_size};
 use sparktune::tuner::TrialExecutor;
 use sparktune::workloads;
 
@@ -65,10 +70,46 @@ fn main() {
         });
     }
 
+    // ---- plan once, price many: one job under 64 conf candidates ----
+    // The trial pipeline's tentpole scenario: identical candidate sets,
+    // re-planning the job per trial vs sharing one Arc<JobPlan>. The
+    // jobs/sec delta is the cost of redundant planning; outcomes are
+    // bit-identical (asserted by tests/hotpath_equiv.rs and CI's
+    // perf-smoke).
+    let job = &jobs[0];
+    let candidates: Vec<SparkConf> = (0..64).map(|i| grid_conf(i * 7 % grid_size())).collect();
+    bench("sched/64-conf trials (re-plan per trial)", 5, candidates.len() as f64, || {
+        for c in &candidates {
+            std::hint::black_box(run(job, c, &cluster, &opts));
+        }
+    });
+    let plan = prepare(job).expect("bench job plans cleanly");
+    bench("sched/64-conf trials (plan-once)", 5, candidates.len() as f64, || {
+        for c in &candidates {
+            std::hint::black_box(run_planned(&plan, c, &cluster, &opts));
+        }
+    });
+    // Events/sec through the indexed core on this scenario (one trial).
+    let probe_run = run_planned(&plan, &candidates[0], &cluster, &opts);
+    bench(
+        "sched/event core (events/sec, 1 trial)",
+        5,
+        probe_run.sim.events as f64,
+        || {
+            std::hint::black_box(run_planned(&plan, &candidates[0], &cluster, &opts));
+        },
+    );
+    println!(
+        "hot path: {} events/trial, {} flow rolls vs {} rescan-equivalent (saved {})",
+        probe_run.sim.events,
+        probe_run.sim.flow_rolls,
+        probe_run.sim.live_copy_event_sum,
+        probe_run.sim.scan_work_saved()
+    );
+
     // ---- parallel trials: independent configurations across threads ----
     let trial_confs: Vec<SparkConf> = (0..32).map(|i| grid_conf(i * 5 % 216)).collect();
-    let job = &jobs[0];
-    let eval = |c: &SparkConf| run(job, c, &cluster, &opts).effective_duration();
+    let eval = |c: &SparkConf| run_planned(&plan, c, &cluster, &opts).effective_duration();
     for threads in [1usize, 4, 8] {
         let exec = TrialExecutor::new(threads);
         bench(

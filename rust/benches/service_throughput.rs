@@ -20,7 +20,7 @@
 
 use sparktune::cluster::ClusterSpec;
 use sparktune::conf::SparkConf;
-use sparktune::engine::run;
+use sparktune::engine::{prepare, run_planned};
 use sparktune::experiments::service::stress_requests;
 use sparktune::service::{ServiceOpts, TuningService};
 use sparktune::testkit::bench;
@@ -34,12 +34,13 @@ fn main() {
         let sessions = reqs.len() as f64;
         let svc_opts = ServiceOpts { workers: 4, shards: 8, capacity: 65_536 };
 
-        // ---- direct: same worker pool, no memoization ----
+        // ---- direct: same worker pool, plan-once, no memoization ----
         let pool = TrialExecutor::new(svc_opts.workers);
         bench(&format!("service/direct tune {tenants}×{apps}"), 3, sessions, || {
             let outcomes = pool.map(&reqs, |req| {
+                let plan = prepare(&req.job).expect("catalog jobs plan cleanly");
                 let mut runner = |conf: &SparkConf| {
-                    run(&req.job, conf, &cluster, &req.sim).effective_duration()
+                    run_planned(&plan, conf, &cluster, &req.sim).effective_duration()
                 };
                 tune(&mut runner, &req.tune)
             });

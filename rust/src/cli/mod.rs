@@ -12,14 +12,17 @@
 //! sparktune tenancy [--jobs N] [--records N] [--mixed]
 //! sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
 //! sparktune serve  [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
+//! sparktune perf-smoke [--workload <name>] [--trials N]
 //! sparktune help-conf
 //! ```
 
 use crate::cluster::ClusterSpec;
 use crate::conf::{params, SparkConf};
-use crate::engine::run;
+use crate::engine::{prepare, run, run_planned};
 use crate::experiments::{self, cases, sensitivity, straggler, tenancy};
-use crate::sim::{SimOpts, Straggler};
+use crate::report::sim_stats_table;
+use crate::sim::{SimOpts, SimStats, Straggler};
+use crate::tuner::baselines::{grid_conf, grid_size};
 use crate::tuner::{tune, TuneOpts};
 use crate::util::stats::Summary;
 use crate::workloads::Workload;
@@ -107,6 +110,10 @@ USAGE:
                      (tuning service: M×N overlapping sessions, memoized trials;
                       exits non-zero unless trials dedupe and the fully-warm
                       rerun is bit-identical to the cold pass)
+  sparktune perf-smoke [--workload <name>] [--trials N]
+                     (hot-path regression guard: plan-once pricing must be
+                      bit-identical to re-planning and the indexed event core
+                      must do strictly less flow work than per-event rescans)
   sparktune help-conf
 
 WORKLOADS: sort-by-key | shuffling | kmeans-100m | kmeans-200m |
@@ -142,9 +149,13 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             let reps: u64 = args.flag("reps").unwrap_or("5").parse().map_err(|e| format!("{e}"))?;
             let seed: u64 = args.flag("seed").unwrap_or("42").parse().map_err(|e| format!("{e}"))?;
             let job = w.job();
+            // Plan once; each repetition only re-prices the shared plan.
+            let plan = prepare(&job).map_err(|e| e.to_string())?;
             let mut durations = Vec::new();
+            let mut last_sim: Option<SimStats> = None;
             for rep in 0..reps {
-                let r = run(&job, &conf, &cluster, &SimOpts { jitter: 0.04, seed: seed + rep, straggler: None });
+                let r = run_planned(&plan, &conf, &cluster, &SimOpts { jitter: 0.04, seed: seed + rep, straggler: None });
+                last_sim = Some(r.sim);
                 if let Some(c) = r.crashed {
                     println!("run {rep}: CRASH — {c}");
                     return Ok(());
@@ -177,6 +188,11 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 s.max(),
                 conf
             );
+            if args.has("verbose") {
+                if let Some(sim) = last_sim {
+                    println!("{}", sim_stats_table(&sim).to_markdown());
+                }
+            }
             Ok(())
         }
         "tune" => {
@@ -389,6 +405,60 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             );
             Ok(())
         }
+        "perf-smoke" => {
+            // The CI hot-path regression guard: evaluate one job under a
+            // grid of conf candidates twice — plan-once vs re-plan per
+            // trial — and require (a) bit-identical outcomes and (b) the
+            // indexed event core's dirty-resource flow rolls to stay
+            // strictly below the rescan-equivalent work (events × live
+            // copies) a scanning core would have performed.
+            let name = args.flag("workload").unwrap_or("mini-sort-by-key");
+            let w = Workload::from_name(name).ok_or_else(|| format!("unknown workload {name:?}"))?;
+            let trials: usize =
+                args.flag("trials").unwrap_or("64").parse().map_err(|e| format!("{e}"))?;
+            if trials == 0 {
+                return Err("--trials must be >= 1".into());
+            }
+            let job = w.job();
+            let plan = prepare(&job).map_err(|e| e.to_string())?;
+            let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+            let mut total = SimStats::default();
+            for i in 0..trials {
+                let conf = grid_conf(i * 7 % grid_size());
+                let fresh = run(&job, &conf, &cluster, &opts);
+                let shared = run_planned(&plan, &conf, &cluster, &opts);
+                if fresh.duration.to_bits() != shared.duration.to_bits()
+                    || fresh.crashed != shared.crashed
+                {
+                    return Err(format!(
+                        "plan-once diverged from re-plan on trial {i} [{conf}]: \
+                         {} vs {}",
+                        fresh.duration, shared.duration
+                    ));
+                }
+                total.absorb(&shared.sim);
+            }
+            println!("{}", sim_stats_table(&total).to_markdown());
+            if total.events == 0 {
+                return Err("no events simulated — smoke scenario is empty".into());
+            }
+            if total.flow_rolls >= total.live_copy_event_sum {
+                return Err(format!(
+                    "indexed core did {} flow rolls vs {} rescan-equivalent — \
+                     the dirty-resource rule is not saving scan work",
+                    total.flow_rolls, total.live_copy_event_sum
+                ));
+            }
+            println!(
+                "ok: {} trials plan-once ≡ re-plan; {} flow rolls vs {} rescan-equivalent \
+                 ({}x scan-work reduction)",
+                trials,
+                total.flow_rolls,
+                total.live_copy_event_sum,
+                total.live_copy_event_sum / total.flow_rolls.max(1)
+            );
+            Ok(())
+        }
         "help-conf" => {
             println!("Modeled Spark 1.5.2 parameters (★ = the paper's 12):\n");
             for p in params::PARAMS {
@@ -461,6 +531,15 @@ mod tests {
         );
         assert_eq!(main(argv("straggler --prob 1.5")), 2, "prob out of range rejected");
         assert_eq!(main(argv("straggler --factor 0.5")), 2, "sub-1 factor rejected");
+    }
+
+    #[test]
+    fn perf_smoke_subcommand_passes() {
+        // The same invocation shape CI runs: plan-once parity + the
+        // scan-work counter assertion, on the mini workload.
+        assert_eq!(main(argv("perf-smoke --trials 6")), 0);
+        assert_eq!(main(argv("perf-smoke --trials 0")), 2, "zero trials rejected");
+        assert_eq!(main(argv("perf-smoke --workload quantum")), 2, "unknown workload rejected");
     }
 
     #[test]

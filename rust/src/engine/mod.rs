@@ -7,7 +7,10 @@
 //! action, possibly iterated). The planner ([`plan`]) splits the chain
 //! into *stages* at wide (shuffle) boundaries, exactly like Spark's
 //! DAGScheduler, and wires explicit `parents` dependency edges between
-//! them. The runner ([`run`] / [`run_all`]) prices each stage's tasks
+//! them; [`prepare`] captures that planning output once as a shared
+//! [`JobPlan`] so trial loops plan a job a single time and price it
+//! under many configurations ([`run_planned`] / [`run_all_planned`]).
+//! The runner ([`run`] / [`run_all`]) prices each stage's tasks
 //! through the shuffle/storage/memory cost models and submits them to
 //! the [`crate::sim::EventSim`] event core the moment their parents
 //! complete; cache state, GC pressure, and crash handling thread along
@@ -18,7 +21,10 @@ pub mod plan;
 pub mod run;
 
 pub use plan::{plan, Stage, StageInput, StageOutput};
-pub use run::{run, run_all, JobResult, MultiJobResult, StageReport};
+pub use run::{
+    prepare, run, run_all, run_all_planned, run_planned, JobPlan, JobResult, MultiJobResult,
+    StageReport,
+};
 
 /// Statistical description of a distributed dataset (Sim mode never
 /// materializes records; it tracks their statistics).

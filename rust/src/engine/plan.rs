@@ -18,6 +18,7 @@
 //! any execution order beyond these edges.
 
 use super::{Dataset, Job, Op};
+use std::sync::Arc;
 
 /// How a stage obtains its input records.
 #[derive(Clone, Debug, PartialEq)]
@@ -77,7 +78,11 @@ pub enum Locality {
 #[derive(Clone, Debug)]
 pub struct Stage {
     pub id: usize,
-    pub name: String,
+    /// Interned display name: the plan is computed once per job and
+    /// shared across every conf candidate (`Arc<JobPlan>`), so reports
+    /// borrow this by refcount instead of re-cloning a `String` on the
+    /// pricing path.
+    pub name: Arc<str>,
     /// Ids of the stages whose outputs this stage consumes. A stage is
     /// runnable once every parent has completed; roots have no parents.
     pub parents: Vec<usize>,
@@ -154,7 +159,7 @@ pub fn plan(job: &Job) -> Result<Vec<Stage>, PlanError> {
         let id = stages.len();
         stages.push(Stage {
             id,
-            name: format!("stage-{id}"),
+            name: format!("stage-{id}").into(),
             parents: Vec::new(), // wired by `wire_dag` once the chain is split
             locality,
             input,

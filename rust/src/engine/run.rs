@@ -3,14 +3,29 @@
 //! ([`crate::sim::EventSim`]), threading cache state, GC pressure, and
 //! crash handling along the stage DAG.
 //!
-//! Execution is event-driven, not barriered: each job's stage DAG (from
-//! [`plan`]) is walked by completion events — a stage is priced and
-//! submitted the moment its last parent completes, and tasks from every
-//! runnable stage of every submitted job contend for the same cores,
-//! disks and NICs under the configured `spark.scheduler.mode` policy
-//! (FIFO or FAIR). [`run`] executes a single job; [`run_all`] submits a
-//! whole batch at `t = 0` and lets them share the cluster — the
-//! multi-tenant scenario.
+//! # Plan once, price many
+//!
+//! Planning (splitting the op chain into a stage DAG) depends only on
+//! the *job*; pricing (translating stages into phase lists) depends on
+//! the job **and** the configuration. The trial-and-error loop — the
+//! paper's core — evaluates one job under many configurations, so the
+//! runner splits the two: [`JobPlan`] is the immutable planning output
+//! (stages, DAG edges, interned names), computed once via [`prepare`]
+//! and shared across every conf candidate and worker thread behind an
+//! `Arc`; [`run_planned`] / [`run_all_planned`] price and execute
+//! against a shared plan, and [`run`] / [`run_all`] remain the
+//! plan-inclusive conveniences (bit-identical — planning is pure).
+//!
+//! Execution is event-driven, not barriered: each job's stage DAG is
+//! walked by completion events — a stage is priced and submitted the
+//! moment its last parent completes, and tasks from every runnable stage
+//! of every submitted job contend for the same cores, disks and NICs
+//! under the configured `spark.scheduler.mode` policy (FIFO or FAIR).
+//! Stages submit through the event core's uniform fast path
+//! ([`crate::sim::StageSpec`]): one phase template plus a per-task
+//! preferred-node table, no per-task `TaskSpec` materialization. All
+//! handle-keyed runtime tables are dense `Vec`s indexed by the core's
+//! sequential stage handles.
 //!
 //! The per-task cost translation is unchanged:
 //!
@@ -28,20 +43,78 @@
 //! crashed configurations as unusable (as the paper does). Other jobs in
 //! the same batch keep running.
 
-use super::plan::{plan, Locality, Stage, StageInput, StageOutput};
+use super::plan::{plan, Locality, PlanError, Stage, StageInput, StageOutput};
 use super::Job;
 use crate::cluster::{ClusterSpec, NodeId};
 use crate::conf::SparkConf;
 use crate::exec::{MemoryModel, SpillPlan};
 use crate::shuffle::{self, IoProfiles, MapSideSpec, ReduceSideSpec};
-use crate::sim::{scheduler_for, EventSim, Phase, SimOpts, SimPolicy, SpecPolicy, TaskSpec};
+use crate::sim::{
+    scheduler_for, EventSim, Phase, PoolSpec, SimOpts, SimPolicy, SimStats, SpecPolicy, StageSpec,
+};
 use crate::storage::{self, PersistLevel};
-use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Immutable planning output for one job: the stage DAG plus the
+/// bookkeeping the runner needs to walk it (children lists, unfinished
+/// parent counts, roots), computed once and shared — across conf
+/// candidates, worker threads, and service sessions — behind an `Arc`.
+#[derive(Clone, Debug)]
+pub struct JobPlan {
+    /// Interned job name; results hand out refcounts, not copies.
+    pub name: Arc<str>,
+    /// FAIR pool the job submits into.
+    pub pool: PoolSpec,
+    /// The planned stages, in id order (see [`plan`]).
+    pub stages: Vec<Stage>,
+    /// DAG children per stage id.
+    children: Vec<Vec<usize>>,
+    /// Unfinished-parent counts per stage id (template, cloned per run).
+    parents_left: Vec<usize>,
+    /// Stages with no parents, in id order.
+    roots: Vec<usize>,
+}
+
+impl JobPlan {
+    /// Plan `job` and precompute the DAG walk tables.
+    pub fn new(job: &Job) -> Result<JobPlan, PlanError> {
+        let stages = plan(job)?;
+        let n = stages.len();
+        let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+        let mut parents_left: Vec<usize> = vec![0; n];
+        let mut roots: Vec<usize> = Vec::new();
+        for s in &stages {
+            parents_left[s.id] = s.parents.len();
+            if s.parents.is_empty() {
+                roots.push(s.id);
+            }
+            for &p in &s.parents {
+                children[p].push(s.id);
+            }
+        }
+        Ok(JobPlan {
+            name: job.name.as_str().into(),
+            pool: job.pool,
+            stages,
+            children,
+            parents_left,
+            roots,
+        })
+    }
+}
+
+/// Plan `job` once for sharing across trials ([`JobPlan`] behind an
+/// `Arc`). The price-many counterpart is [`run_planned`] /
+/// [`run_all_planned`].
+pub fn prepare(job: &Job) -> Result<Arc<JobPlan>, PlanError> {
+    JobPlan::new(job).map(Arc::new)
+}
 
 /// Per-stage execution report.
 #[derive(Clone, Debug)]
 pub struct StageReport {
-    pub name: String,
+    /// Stage display name — a refcount on the plan's interned name.
+    pub name: Arc<str>,
     pub duration: f64,
     pub tasks: u32,
     pub cpu_secs: f64,
@@ -59,7 +132,8 @@ pub struct StageReport {
 /// Outcome of one job run under one configuration.
 #[derive(Clone, Debug)]
 pub struct JobResult {
-    pub job: String,
+    /// Job display name — a refcount on the plan's interned name.
+    pub job: Arc<str>,
     /// Simulated wall-clock seconds on the event clock: time from job
     /// submission to the completion of its last stage. Stages are *not*
     /// barriers — when several stages (or jobs) are runnable they share
@@ -69,6 +143,10 @@ pub struct JobResult {
     /// Set when a stage OOMed: (stage name, message).
     pub crashed: Option<String>,
     pub stages: Vec<StageReport>,
+    /// Event-core work counters for the simulation this job ran in. For
+    /// a batch run the core is shared, so every job of the batch carries
+    /// the same core-wide snapshot (see [`MultiJobResult::sim`]).
+    pub sim: SimStats,
 }
 
 impl JobResult {
@@ -93,6 +171,8 @@ pub struct MultiJobResult {
     pub results: Vec<JobResult>,
     /// Event-clock time at which the last job finished.
     pub makespan: f64,
+    /// Event-core work counters for the shared simulation.
+    pub sim: SimStats,
 }
 
 /// Fixed unmanaged live bytes per executor (netty, user objects, Spark
@@ -108,20 +188,74 @@ const UNMANAGED_LIVE: u64 = 1 << 31; // 2 GiB
 /// iteration re-attempts the failed unrolls and pays the storm again.
 const FULL_GC_SCAN_BW: f64 = 0.5e9;
 
-/// Run `job` alone on the cluster under `conf`. Deterministic in
-/// `opts.seed`.
+/// Run `job` alone on the cluster under `conf`, planning it on the spot.
+/// Deterministic in `opts.seed`.
 pub fn run(job: &Job, conf: &SparkConf, cluster: &ClusterSpec, opts: &SimOpts) -> JobResult {
     let mut all = run_all(std::slice::from_ref(job), conf, cluster, opts);
     all.results.pop().expect("one job in, one result out")
 }
 
-/// Run a batch of jobs **concurrently** on one cluster: every job's root
-/// stage is submitted at `t = 0` and the `spark.scheduler.mode` policy
-/// (`conf.scheduler_mode`) arbitrates cores between runnable stages.
-/// Deterministic in `(conf, opts.seed)`; job index `i` derives its own
-/// jitter stream (index 0 matches a solo [`run`] exactly).
+/// Price and run one prepared plan — the hot path of the trial loop.
+/// Bit-identical to [`run`] of the job the plan came from.
+pub fn run_planned(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> JobResult {
+    let mut all =
+        run_all_planned(std::slice::from_ref(plan), conf, cluster, opts);
+    all.results.pop().expect("one plan in, one result out")
+}
+
+/// Run a batch of jobs **concurrently** on one cluster, planning each on
+/// the spot: every job's root stages are submitted at `t = 0` and the
+/// `spark.scheduler.mode` policy (`conf.scheduler_mode`) arbitrates
+/// cores between runnable stages. Deterministic in `(conf, opts.seed)`;
+/// job index `i` derives its own jitter stream (index 0 matches a solo
+/// [`run`] exactly). A job whose plan fails is reported crashed; the
+/// rest of the batch runs.
 pub fn run_all(
     jobs: &[Job],
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> MultiJobResult {
+    let entries: Vec<PlanEntry> = jobs
+        .iter()
+        .map(|job| match prepare(job) {
+            Ok(plan) => PlanEntry::Planned(plan),
+            Err(e) => PlanEntry::Failed {
+                name: job.name.as_str().into(),
+                msg: format!("plan error: {e}"),
+            },
+        })
+        .collect();
+    run_all_entries(&entries, conf, cluster, opts)
+}
+
+/// Run a batch of **prepared** plans concurrently — the price-many path:
+/// the plans are shared (`Arc`), only pricing and execution happen per
+/// call. Bit-identical to [`run_all`] of the originating jobs.
+pub fn run_all_planned(
+    plans: &[Arc<JobPlan>],
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> MultiJobResult {
+    let entries: Vec<PlanEntry> =
+        plans.iter().map(|p| PlanEntry::Planned(Arc::clone(p))).collect();
+    run_all_entries(&entries, conf, cluster, opts)
+}
+
+/// One job's planning outcome entering the runner.
+enum PlanEntry {
+    Planned(Arc<JobPlan>),
+    Failed { name: Arc<str>, msg: String },
+}
+
+fn run_all_entries(
+    entries: &[PlanEntry],
     conf: &SparkConf,
     cluster: &ClusterSpec,
     opts: &SimOpts,
@@ -143,30 +277,21 @@ pub fn run_all(
     };
     let mut sim = EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), policy);
 
-    // ---- plan every job and build its DAG bookkeeping ----
-    let mut jobs_rt: Vec<JobRt> = Vec::with_capacity(jobs.len());
-    for (ji, job) in jobs.iter().enumerate() {
-        // FAIR pools (weight / minShare) per submitting job.
-        sim.set_pool(ji, job.pool);
+    // ---- per-job runtime bookkeeping over the shared plans ----
+    let mut jobs_rt: Vec<JobRt<'_>> = Vec::with_capacity(entries.len());
+    for (ji, entry) in entries.iter().enumerate() {
         // Job 0 keeps the historical seed derivation bit-for-bit.
         let job_seed = opts.seed ^ (ji as u64).wrapping_mul(0xA24B_AED4_963E_E407);
-        match plan(job) {
-            Ok(stages) => {
-                let n = stages.len();
-                let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
-                let mut parents_left: Vec<usize> = vec![0; n];
-                for s in &stages {
-                    parents_left[s.id] = s.parents.len();
-                    for &p in &s.parents {
-                        children[p].push(s.id);
-                    }
-                }
+        match entry {
+            PlanEntry::Planned(plan) => {
+                // FAIR pools (weight / minShare) per submitting job.
+                sim.set_pool(ji, plan.pool);
+                let n = plan.stages.len();
                 jobs_rt.push(JobRt {
-                    name: job.name.clone(),
-                    stages,
-                    children,
-                    parents_left,
-                    pricing: PricingState::default(),
+                    plan: Some(plan.as_ref()),
+                    name: Arc::clone(&plan.name),
+                    parents_left: plan.parents_left.clone(),
+                    pricing: PricingState::new(n),
                     reports: vec![None; n],
                     crash: None,
                     crash_report: None,
@@ -174,15 +299,14 @@ pub fn run_all(
                     job_seed,
                 });
             }
-            Err(e) => {
+            PlanEntry::Failed { name, msg } => {
                 jobs_rt.push(JobRt {
-                    name: job.name.clone(),
-                    stages: Vec::new(),
-                    children: Vec::new(),
+                    plan: None,
+                    name: Arc::clone(name),
                     parents_left: Vec::new(),
-                    pricing: PricingState::default(),
+                    pricing: PricingState::new(0),
                     reports: Vec::new(),
-                    crash: Some(format!("plan error: {e}")),
+                    crash: Some(msg.clone()),
                     crash_report: None,
                     finish: 0.0,
                     job_seed,
@@ -191,20 +315,16 @@ pub fn run_all(
         }
     }
 
-    // handle → (job index, stage id, pricing metadata)
-    let mut by_handle: HashMap<usize, (usize, usize, PricedMeta)> = HashMap::new();
+    // handle → (job index, stage id, pricing metadata); handles are
+    // sequential, so the table is a dense Vec, not a hash map.
+    let mut by_handle: Vec<(usize, usize, PricedMeta)> = Vec::new();
 
     // ---- submit every root at t = 0, in job order ----
     for ji in 0..jobs_rt.len() {
         if jobs_rt[ji].crash.is_some() {
             continue;
         }
-        let roots: Vec<usize> = jobs_rt[ji]
-            .stages
-            .iter()
-            .filter(|s| s.parents.is_empty())
-            .map(|s| s.id)
-            .collect();
+        let roots = jobs_rt[ji].plan.expect("non-crashed job has a plan").roots.clone();
         for sid in roots {
             submit_stage(
                 ji,
@@ -226,13 +346,14 @@ pub fn run_all(
 
     // ---- pump completion events; unlock DAG children as they land ----
     while let Some(done) = sim.advance() {
-        let (ji, sid, meta) = by_handle
-            .remove(&done.handle)
-            .expect("every submitted stage was registered");
+        debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
+        let (ji, sid) = (by_handle[done.handle].0, by_handle[done.handle].1);
+        let meta = &by_handle[done.handle].2;
         let jr = &mut jobs_rt[ji];
-        let stage_tasks = jr.stages[sid].tasks;
+        let plan = jr.plan.expect("submitted stage belongs to a planned job");
+        let stage_tasks = plan.stages[sid].tasks;
         jr.reports[sid] = Some(StageReport {
-            name: jr.stages[sid].name.clone(),
+            name: Arc::clone(&plan.stages[sid].name),
             duration: done.stats.duration,
             tasks: stage_tasks,
             cpu_secs: done.stats.cpu_secs,
@@ -246,10 +367,9 @@ pub fn run_all(
         });
         // Record where each task actually ran: cache-read children derive
         // their preferred nodes from the writer's real placement.
-        jr.pricing.placements.insert(sid, done.task_nodes);
+        jr.pricing.placements[sid] = Some(done.task_nodes);
         jr.finish = done.at;
-        for k in 0..jobs_rt[ji].children[sid].len() {
-            let ch = jobs_rt[ji].children[sid][k];
+        for &ch in &plan.children[sid] {
             let jr = &mut jobs_rt[ji];
             jr.parents_left[ch] -= 1;
             if jr.parents_left[ch] == 0 && jr.crash.is_none() {
@@ -271,13 +391,14 @@ pub fn run_all(
     // Every registered stage must have completed: a custom Scheduler that
     // stalls the core (see `Scheduler::pick`) would otherwise silently
     // drop stages from the reports.
-    debug_assert!(
-        by_handle.is_empty(),
-        "event core went idle with {} stages still registered",
-        by_handle.len()
+    debug_assert_eq!(
+        by_handle.len() as u64,
+        sim.stats().completions,
+        "event core went idle with registered stages incomplete"
     );
 
     // ---- assemble per-job results ----
+    let sim_stats = sim.stats();
     let results: Vec<JobResult> = jobs_rt
         .into_iter()
         .map(|jr| {
@@ -285,7 +406,13 @@ pub fn run_all(
             if let Some(cr) = jr.crash_report {
                 stages.push(cr);
             }
-            JobResult { job: jr.name, duration: jr.finish, crashed: jr.crash, stages }
+            JobResult {
+                job: jr.name,
+                duration: jr.finish,
+                crashed: jr.crash,
+                stages,
+                sim: sim_stats,
+            }
         })
         .collect();
     let makespan = results
@@ -293,16 +420,17 @@ pub fn run_all(
         .filter(|r| r.crashed.is_none())
         .map(|r| r.duration)
         .fold(0.0f64, f64::max);
-    MultiJobResult { results, makespan }
+    MultiJobResult { results, makespan, sim: sim_stats }
 }
 
-/// Runtime bookkeeping for one job inside [`run_all`].
-struct JobRt {
-    name: String,
-    stages: Vec<Stage>,
-    /// DAG children per stage id.
-    children: Vec<Vec<usize>>,
-    /// Unfinished parent count per stage id (0 = runnable).
+/// Runtime bookkeeping for one job inside the batch runner; the plan
+/// itself is borrowed from the shared `Arc`.
+struct JobRt<'p> {
+    /// `None` when planning failed (the job is reported crashed).
+    plan: Option<&'p JobPlan>,
+    name: Arc<str>,
+    /// Unfinished parent count per stage id (0 = runnable) — the one
+    /// piece of DAG state that mutates per run.
     parents_left: Vec<usize>,
     pricing: PricingState,
     /// Completed stage reports by stage id.
@@ -314,16 +442,31 @@ struct JobRt {
     job_seed: u64,
 }
 
+impl<'p> JobRt<'p> {
+    fn plan(&self) -> &'p JobPlan {
+        self.plan.expect("pricing only runs on planned jobs")
+    }
+}
+
 /// Cross-stage pricing state, threaded along the DAG in submission
-/// (topological) order.
-#[derive(Default)]
+/// (topological) order. All tables are dense, indexed by stage id.
 struct PricingState {
     cache_plan: Option<storage::CachePlan>,
     /// Shuffle handoff recorded under the *producer* stage id.
-    handoffs: HashMap<usize, ShuffleHandoff>,
+    handoffs: Vec<Option<ShuffleHandoff>>,
     /// Actual node of each completed stage's tasks (by stage id, indexed
     /// by task) — the source of cache-read locality preferences.
-    placements: HashMap<usize, Vec<NodeId>>,
+    placements: Vec<Option<Vec<NodeId>>>,
+}
+
+impl PricingState {
+    fn new(stages: usize) -> PricingState {
+        PricingState {
+            cache_plan: None,
+            handoffs: vec![None; stages],
+            placements: vec![None; stages],
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -345,16 +488,17 @@ struct PricedMeta {
 fn submit_stage(
     ji: usize,
     sid: usize,
-    jr: &mut JobRt,
+    jr: &mut JobRt<'_>,
     sim: &mut EventSim<'_>,
-    by_handle: &mut HashMap<usize, (usize, usize, PricedMeta)>,
+    by_handle: &mut Vec<(usize, usize, PricedMeta)>,
     conf: &SparkConf,
     cluster: &ClusterSpec,
     mem: &MemoryModel,
     prof: &IoProfiles,
     opts: &SimOpts,
 ) {
-    let stage = &jr.stages[sid];
+    let plan = jr.plan();
+    let stage = &plan.stages[sid];
     match price_stage(stage, conf, cluster, mem, prof, &mut jr.pricing) {
         Priced::Tasks { phases, meta } => {
             // Preferred locations from the planner's locality provenance:
@@ -362,32 +506,38 @@ fn submit_stage(
             // cache reads prefer the nodes the writer's tasks actually
             // ran on; shuffle reads fetch from everywhere (no preference,
             // as in Spark's reduce tasks).
-            let placed = match stage.locality {
-                Locality::CachedParent(p) => jr.pricing.placements.get(&p),
-                _ => None,
-            };
-            let tasks: Vec<TaskSpec> = (0..stage.tasks)
-                .map(|i| {
-                    let t = TaskSpec::new(phases.clone());
-                    match stage.locality {
-                        Locality::ShuffleAll => t,
-                        Locality::Blocks => t.on(cluster.block_node(i)),
-                        Locality::CachedParent(_) => {
-                            let node = placed
+            let preferred: Vec<NodeId> = match stage.locality {
+                Locality::ShuffleAll => Vec::new(),
+                Locality::Blocks => {
+                    (0..stage.tasks).map(|i| cluster.block_node(i)).collect()
+                }
+                Locality::CachedParent(p) => {
+                    let placed = jr.pricing.placements[p].as_deref();
+                    (0..stage.tasks)
+                        .map(|i| {
+                            placed
                                 .and_then(|ns| ns.get(i as usize).copied())
-                                .unwrap_or_else(|| cluster.block_node(i));
-                            t.on(node)
-                        }
-                    }
-                })
-                .collect();
+                                .unwrap_or_else(|| cluster.block_node(i))
+                        })
+                        .collect()
+                }
+            };
             let stage_opts = SimOpts {
                 jitter: opts.jitter,
                 seed: jr.job_seed ^ (stage.id as u64) << 32,
                 straggler: opts.straggler,
             };
-            let handle = sim.submit(ji, &tasks, &stage_opts);
-            by_handle.insert(handle, (ji, sid, meta));
+            let handle = sim.submit_shaped(
+                ji,
+                &StageSpec {
+                    template: &phases,
+                    preferred: &preferred,
+                    tasks: stage.tasks as usize,
+                },
+                &stage_opts,
+            );
+            debug_assert_eq!(handle, by_handle.len(), "stage handles are sequential");
+            by_handle.push((ji, sid, meta));
         }
         Priced::Crash(msg) => {
             jr.crash = Some(msg);
@@ -397,13 +547,15 @@ fn submit_stage(
     }
 }
 
-/// Result of pricing one stage.
+/// Result of pricing one stage: the uniform per-task phase template
+/// (submitted via [`StageSpec`] without per-task materialization) or a
+/// crash.
 enum Priced {
-    Tasks { phases: Vec<Phase>, meta: PricedMeta },
+    Tasks { phases: [Phase; 5], meta: PricedMeta },
     Crash(String),
 }
 
-/// Translate one stage into its per-task phase list (the cost model —
+/// Translate one stage into its per-task phase template (the cost model —
 /// unchanged from the barrier-era runner, but callable in DAG order).
 fn price_stage(
     stage: &Stage,
@@ -476,8 +628,7 @@ fn price_stage(
                 .parents
                 .iter()
                 .rev()
-                .find_map(|p| state.handoffs.get(p))
-                .cloned()
+                .find_map(|p| state.handoffs[*p].clone())
                 .unwrap_or(ShuffleHandoff {
                     source_blocks: stage.in_data.partitions,
                     entropy: stage.in_data.entropy,
@@ -572,19 +723,16 @@ fn price_stage(
             fixed += io.fixed_secs;
             spilled += io.spilled_bytes;
             live_bytes += mem.per_task_share().min((working as f64 * 2.0) as u64);
-            state.handoffs.insert(
-                stage.id,
-                ShuffleHandoff {
-                    source_blocks: if conf.shuffle_consolidate_files
-                        && conf.shuffle_manager == crate::conf::ShuffleManagerKind::Hash
-                    {
-                        cluster.total_cores()
-                    } else {
-                        stage.tasks
-                    },
-                    entropy: out.entropy,
+            state.handoffs[stage.id] = Some(ShuffleHandoff {
+                source_blocks: if conf.shuffle_consolidate_files
+                    && conf.shuffle_manager == crate::conf::ShuffleManagerKind::Hash
+                {
+                    cluster.total_cores()
+                } else {
+                    stage.tasks
                 },
-            );
+                entropy: out.entropy,
+            });
         }
         StageOutput::Action => {}
     }
@@ -594,7 +742,7 @@ fn price_stage(
     let cpu = cpu * gc;
 
     Priced::Tasks {
-        phases: vec![
+        phases: [
             Phase::Fixed { secs: fixed },
             Phase::NetIn { bytes: net_in },
             Phase::DiskRead { bytes: disk_read },
@@ -607,7 +755,7 @@ fn price_stage(
 
 fn partial_report(stage: &Stage, duration: f64) -> StageReport {
     StageReport {
-        name: stage.name.clone(),
+        name: Arc::clone(&stage.name),
         duration,
         tasks: stage.tasks,
         cpu_secs: 0.0,
@@ -793,5 +941,106 @@ mod tests {
         // ... but the cluster is work-conserving: 4 jobs cost well under
         // 4 × solo + slack would if they serialized with idle gaps.
         assert!(batch.makespan < solo.duration * 8.0, "makespan {}", batch.makespan);
+    }
+
+    // ---- plan once, price many ----
+
+    fn results_identical(a: &JobResult, b: &JobResult) -> bool {
+        a.job == b.job
+            && a.duration.to_bits() == b.duration.to_bits()
+            && a.crashed == b.crashed
+            && a.stages.len() == b.stages.len()
+            && a.stages.iter().zip(&b.stages).all(|(x, y)| {
+                x.name == y.name
+                    && x.duration.to_bits() == y.duration.to_bits()
+                    && x.cpu_secs.to_bits() == y.cpu_secs.to_bits()
+                    && x.disk_bytes.to_bits() == y.disk_bytes.to_bits()
+                    && x.net_bytes.to_bits() == y.net_bytes.to_bits()
+                    && x.spilled_bytes == y.spilled_bytes
+                    && x.gc_factor.to_bits() == y.gc_factor.to_bits()
+                    && x.locality_hits == y.locality_hits
+                    && x.speculated == y.speculated
+            })
+    }
+
+    #[test]
+    fn planned_run_is_bit_identical_to_replanning() {
+        // The whole point of the split: sharing one Arc<JobPlan> across
+        // trials must not change a single bit of any outcome.
+        let cluster = ClusterSpec::mini();
+        let job = {
+            let d = Dataset::kv(2_000_000, 10, 90, 16);
+            Job::new("planned")
+                .op(Op::Generate { out: d, cpu_ns_per_record: 300.0 })
+                .op(Op::SortByKey { reducers: 16 })
+                .op(Op::Action)
+        };
+        let plan = prepare(&job).unwrap();
+        let confs = [
+            SparkConf::default(),
+            SparkConf::default().with("spark.serializer", "kryo"),
+            SparkConf::default().with("spark.shuffle.compress", "false"),
+            SparkConf::default()
+                .with("spark.speculation", "true")
+                .with("spark.locality.wait", "1s"),
+        ];
+        for conf in &confs {
+            let opts = SimOpts::default();
+            let fresh = run(&job, conf, &cluster, &opts);
+            let shared = run_planned(&plan, conf, &cluster, &opts);
+            assert!(results_identical(&fresh, &shared), "conf [{conf}] diverged");
+        }
+    }
+
+    #[test]
+    fn planned_batch_matches_replanned_batch() {
+        let cluster = ClusterSpec::mini();
+        let d = Dataset::kv(1_000_000, 10, 90, 16);
+        let jobs: Vec<Job> = (0..3)
+            .map(|i| {
+                Job::new(format!("t{i}"))
+                    .op(Op::Generate { out: d.clone(), cpu_ns_per_record: 300.0 })
+                    .op(Op::SortByKey { reducers: 16 })
+                    .op(Op::Action)
+            })
+            .collect();
+        let plans: Vec<Arc<JobPlan>> =
+            jobs.iter().map(|j| prepare(j).unwrap()).collect();
+        let conf = SparkConf::default().with("spark.scheduler.mode", "FAIR");
+        let a = run_all(&jobs, &conf, &cluster, &SimOpts::default());
+        let b = run_all_planned(&plans, &conf, &cluster, &SimOpts::default());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert!(results_identical(x, y), "{} diverged", x.job);
+        }
+        assert_eq!(a.sim, b.sim, "work counters must agree too");
+    }
+
+    #[test]
+    fn plan_errors_surface_as_crashes_in_both_paths() {
+        let bad = Job::new("no-source").op(Op::SortByKey { reducers: 4 });
+        assert!(prepare(&bad).is_err());
+        let r = run(&bad, &SparkConf::default(), &ClusterSpec::mini(), &SimOpts::default());
+        assert!(r.crashed.as_deref().unwrap_or("").contains("plan error"));
+        assert!(r.effective_duration().is_infinite());
+    }
+
+    #[test]
+    fn job_results_carry_event_core_counters() {
+        let r = run(
+            &sbk_job(1_000_000_000),
+            &SparkConf::default(),
+            &mn(),
+            &SimOpts::default(),
+        );
+        assert!(r.sim.events > 0);
+        assert!(r.sim.task_launches >= 1280, "two 640-task stages launched");
+        assert_eq!(r.sim.completions, 2);
+        assert!(
+            r.sim.flow_rolls < r.sim.live_copy_event_sum,
+            "indexed pricing run must beat per-event rescans: {} vs {}",
+            r.sim.flow_rolls,
+            r.sim.live_copy_event_sum
+        );
     }
 }

@@ -4,7 +4,7 @@
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
-use crate::engine::run;
+use crate::engine::{prepare, run_planned};
 use crate::report::Table;
 use crate::sim::SimOpts;
 use crate::tuner::{tune, TuneOpts, TuneOutcome};
@@ -34,14 +34,17 @@ impl CaseStudy {
 }
 
 /// Tuning runner: one simulated run per candidate configuration (the
-/// methodology is explicitly a *low-number-of-runs* protocol).
+/// methodology is explicitly a *low-number-of-runs* protocol). The job
+/// is planned once up front; every trial only re-prices it
+/// (plan-once / price-many).
 pub fn sim_runner<'a>(
     workload: Workload,
     cluster: &'a ClusterSpec,
 ) -> impl FnMut(&SparkConf) -> f64 + 'a {
-    let job = workload.job();
+    let plan = prepare(&workload.job()).expect("catalog workloads plan cleanly");
     move |conf: &SparkConf| {
-        run(&job, conf, cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }).effective_duration()
+        run_planned(&plan, conf, cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None })
+            .effective_duration()
     }
 }
 

@@ -28,11 +28,12 @@ pub mod tenancy;
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
-use crate::engine::{run, Job};
+use crate::engine::{prepare, run_planned, Job, JobPlan};
 use crate::report::{Bar, Figure, Table};
 use crate::sim::SimOpts;
 use crate::util::stats::{mean_abs_deviation_pct, Summary};
 use crate::workloads::Workload;
+use std::sync::Arc;
 
 /// Repetitions per configuration ("at least five times … the median value
 /// is reported").
@@ -40,11 +41,28 @@ pub const REPS: u64 = 5;
 
 /// Run `job` under `conf` for [`REPS`] seeds; returns the median runtime,
 /// or `None` if the configuration crashes (crashes are deterministic —
-/// they depend on memory geometry, not jitter).
+/// they depend on memory geometry, not jitter). Sweeps that evaluate one
+/// job under many configurations should [`prepare`] once and call
+/// [`median_run_planned`].
 pub fn median_run(job: &Job, conf: &SparkConf, cluster: &ClusterSpec) -> Option<f64> {
+    let plan = prepare(job).ok()?;
+    median_run_planned(&plan, conf, cluster)
+}
+
+/// [`median_run`] over a shared plan (plan-once / price-many).
+pub fn median_run_planned(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+) -> Option<f64> {
     let mut durations = Vec::with_capacity(REPS as usize);
     for rep in 0..REPS {
-        let r = run(job, conf, cluster, &SimOpts { jitter: 0.04, seed: 0xA5EED + rep, straggler: None });
+        let r = run_planned(
+            plan,
+            conf,
+            cluster,
+            &SimOpts { jitter: 0.04, seed: 0xA5EED + rep, straggler: None },
+        );
         if r.crashed.is_some() {
             return None;
         }
@@ -158,23 +176,23 @@ pub fn kryo_baseline() -> SparkConf {
 /// Sensitivity sweep for one workload (Figs 1–3): every [`VARIANTS`] bar
 /// plus the Java-serializer bar, against the Kryo baseline.
 pub fn sensitivity(workload: Workload, cluster: &ClusterSpec) -> Figure {
-    let job = workload.job();
+    let plan = prepare(&workload.job()).expect("sweep workloads plan cleanly");
     let base_conf = kryo_baseline();
-    let baseline = median_run(&job, &base_conf, cluster)
+    let baseline = median_run_planned(&plan, &base_conf, cluster)
         .expect("the Kryo default baseline must not crash");
 
     let mut bars = Vec::with_capacity(VARIANTS.len() + 1);
     // Serializer bar: Java vs the Kryo baseline.
     bars.push(Bar {
         label: "serializer=java (default)".into(),
-        value: median_run(&job, &SparkConf::default(), cluster),
+        value: median_run_planned(&plan, &SparkConf::default(), cluster),
     });
     for v in VARIANTS {
         let mut conf = base_conf.clone();
         for (k, val) in v.settings {
             conf.set(k, val).expect("variant settings are valid");
         }
-        bars.push(Bar { label: v.label.into(), value: median_run(&job, &conf, cluster) });
+        bars.push(Bar { label: v.label.into(), value: median_run_planned(&plan, &conf, cluster) });
     }
     Figure {
         id: figure_id(workload).into(),
@@ -221,17 +239,18 @@ pub fn table2(cluster: &ClusterSpec) -> Table {
     let mut per_bench: Vec<(f64, Vec<(&'static str, Option<f64>)>)> = Vec::new();
     let mut java_devs: Vec<f64> = Vec::new();
     for w in benches {
-        let job = w.job();
-        let base = median_run(&job, &kryo_baseline(), cluster).expect("baseline crash");
+        let plan = prepare(&w.job()).expect("table-2 workloads plan cleanly");
+        let base =
+            median_run_planned(&plan, &kryo_baseline(), cluster).expect("baseline crash");
         let mut rows = Vec::new();
         for v in VARIANTS {
             let mut conf = kryo_baseline();
             for (k, val) in v.settings {
                 conf.set(k, val).unwrap();
             }
-            rows.push((v.param, median_run(&job, &conf, cluster)));
+            rows.push((v.param, median_run_planned(&plan, &conf, cluster)));
         }
-        let java = median_run(&job, &SparkConf::default(), cluster);
+        let java = median_run_planned(&plan, &SparkConf::default(), cluster);
         java_devs.push(match java {
             Some(j) => 100.0 * ((j - base) / base).abs(),
             None => f64::NAN,
@@ -297,6 +316,7 @@ fn fmt_pct(v: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::run;
 
     fn mn() -> ClusterSpec {
         ClusterSpec::marenostrum()

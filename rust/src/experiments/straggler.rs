@@ -13,7 +13,7 @@
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
-use crate::engine::{run, JobResult};
+use crate::engine::{prepare, run_planned, JobResult};
 use crate::report::Table;
 use crate::sim::{SimOpts, Straggler};
 use crate::tuner::{tune, TuneOpts, TuneOutcome};
@@ -60,11 +60,12 @@ pub fn straggler_experiment(
     straggler: Straggler,
     cluster: &ClusterSpec,
 ) -> StragglerOutcome {
-    let job = workloads::straggler_probe(records, partitions);
+    let plan = prepare(&workloads::straggler_probe(records, partitions))
+        .expect("straggler probe plans cleanly");
     let opts = SimOpts { jitter: 0.04, seed: SEED, straggler: Some(straggler) };
-    let off = run(&job, &SparkConf::default(), cluster, &opts);
+    let off = run_planned(&plan, &SparkConf::default(), cluster, &opts);
     let on_conf = SparkConf::default().with("spark.speculation", "true");
-    let on = run(&job, &on_conf, cluster, &opts);
+    let on = run_planned(&plan, &on_conf, cluster, &opts);
     StragglerOutcome { straggler, off, on }
 }
 
@@ -77,10 +78,11 @@ pub fn tune_under_stragglers(
     straggler: Straggler,
     cluster: &ClusterSpec,
 ) -> TuneOutcome {
-    let job = workloads::straggler_probe(records, partitions);
+    let plan = prepare(&workloads::straggler_probe(records, partitions))
+        .expect("straggler probe plans cleanly");
     let opts = SimOpts { jitter: 0.04, seed: SEED, straggler: Some(straggler) };
     let mut runner =
-        move |conf: &SparkConf| run(&job, conf, cluster, &opts).effective_duration();
+        move |conf: &SparkConf| run_planned(&plan, conf, cluster, &opts).effective_duration();
     tune(&mut runner, &TuneOpts { straggler_aware: true, ..TuneOpts::default() })
 }
 
@@ -118,6 +120,7 @@ pub fn straggler_table(o: &StragglerOutcome) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::run;
 
     /// Paper-scale sizing: ~1 s tasks, 2 waves over the 320-core
     /// testbed, ~2 % of tasks 8x slower.

@@ -19,10 +19,11 @@
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
-use crate::engine::{run_all, Job, MultiJobResult};
+use crate::engine::{prepare, run_all, run_all_planned, Job, JobPlan, MultiJobResult};
 use crate::report::Table;
 use crate::sim::{SchedulerMode, SimOpts};
 use crate::workloads;
+use std::sync::Arc;
 
 /// One policy's outcome on a job batch.
 #[derive(Clone, Debug)]
@@ -109,11 +110,26 @@ pub fn busy_runner<'a>(
     cluster: &'a ClusterSpec,
 ) -> impl FnMut(&SparkConf) -> f64 + 'a {
     let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
-    move |conf: &SparkConf| {
-        let mut jobs = Vec::with_capacity(1 + background.len());
-        jobs.push(target.clone());
-        jobs.extend(background.iter().cloned());
-        run_all(&jobs, conf, cluster, &opts).results[0].effective_duration()
+    // Plan once, price many: the target and every background tenant are
+    // planned a single time; each trial shares the `Arc<JobPlan>`s and
+    // only re-prices them under the candidate configuration. If any job
+    // is unplannable, fall back to the plan-per-trial path, which
+    // reports the failure as a crash (INFINITY) instead of panicking —
+    // the behavior tuners already handle.
+    let plans: Option<Vec<Arc<JobPlan>>> = std::iter::once(&target)
+        .chain(background.iter())
+        .map(|j| prepare(j).ok())
+        .collect();
+    move |conf: &SparkConf| match &plans {
+        Some(plans) => {
+            run_all_planned(plans, conf, cluster, &opts).results[0].effective_duration()
+        }
+        None => {
+            let mut jobs = Vec::with_capacity(1 + background.len());
+            jobs.push(target.clone());
+            jobs.extend(background.iter().cloned());
+            run_all(&jobs, conf, cluster, &opts).results[0].effective_duration()
+        }
     }
 }
 
@@ -134,7 +150,7 @@ pub fn tenancy_table(outcomes: &[TenancyOutcome]) -> Table {
         for r in &o.batch.results {
             t.rows.push(vec![
                 o.mode.to_string(),
-                r.job.clone(),
+                r.job.to_string(),
                 match &r.crashed {
                     None => format!("{:.1}", r.duration),
                     Some(c) => format!("CRASH ({c})"),

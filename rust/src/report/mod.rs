@@ -1,6 +1,8 @@
 //! Report rendering: ASCII horizontal bar charts (the Figs 1–3 format),
-//! markdown tables (Table 2, case studies) and CSV export.
+//! markdown tables (Table 2, case studies, event-core hot-path counters)
+//! and CSV export.
 
+use crate::sim::SimStats;
 use std::fmt::Write as _;
 
 /// One bar of a figure.
@@ -131,6 +133,30 @@ impl Table {
     }
 }
 
+/// Render event-core work counters ([`SimStats`]) as a metric table —
+/// the "why is it fast" companion to a run report: the indexed event
+/// queue's speedup shows up as `PS flow rolls` (dirty-resource touches)
+/// undercutting `rescan-equivalent work` (live copies × events, what a
+/// per-event rescan would have touched).
+pub fn sim_stats_table(s: &SimStats) -> Table {
+    Table::two_col(
+        "Event-core hot path",
+        &[
+            ("events processed", s.events.to_string()),
+            ("stage completions", s.completions.to_string()),
+            ("task copies launched", s.task_launches.to_string()),
+            ("phase transitions", s.phase_transitions.to_string()),
+            (
+                "heap ops (push / pop / re-key)",
+                format!("{} / {} / {}", s.heap_pushes, s.heap_pops, s.heap_updates),
+            ),
+            ("PS flow rolls (dirty touches)", s.flow_rolls.to_string()),
+            ("rescan-equivalent work", s.live_copy_event_sum.to_string()),
+            ("scan work saved", s.scan_work_saved().to_string()),
+        ],
+    )
+}
+
 fn csv_escape(s: &str) -> String {
     if s.contains(',') || s.contains('"') || s.contains('\n') {
         format!("\"{}\"", s.replace('"', "\"\""))
@@ -201,6 +227,25 @@ mod tests {
         assert!(md.contains("| sessions | 12 |"), "{md}");
         assert!(md.contains("| hit rate | 83.3% |"), "{md}");
         assert!(t.to_csv().contains("hit rate,83.3%"));
+    }
+
+    #[test]
+    fn sim_stats_table_reports_the_savings() {
+        let s = SimStats {
+            events: 100,
+            completions: 2,
+            task_launches: 40,
+            phase_transitions: 120,
+            heap_pushes: 40,
+            heap_pops: 40,
+            heap_updates: 70,
+            flow_rolls: 90,
+            live_copy_event_sum: 800,
+        };
+        let md = sim_stats_table(&s).to_markdown();
+        assert!(md.contains("| events processed | 100 |"), "{md}");
+        assert!(md.contains("| 40 / 40 / 70 |"), "{md}");
+        assert!(md.contains("| scan work saved | 710 |"), "{md}");
     }
 
     #[test]

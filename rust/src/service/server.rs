@@ -5,11 +5,11 @@
 //! the cluster never simulates the same trial twice:
 //!
 //! ```text
-//!   session ──► tune() ──► evaluate(job, conf, sim)
-//!                              │ fingerprint_trial          (identity)
-//!                              ├─ ShardedCache::get         (memo)
-//!                              ├─ in-flight table + condvar (single-flight)
-//!                              └─ engine::run               (simulate once)
+//!   session ──► prepare(job) ──► tune() ──► evaluate_planned(job, plan, conf, sim)
+//!               (plan once)                     │ fingerprint_trial          (identity)
+//!                                              ├─ ShardedCache::get         (memo)
+//!                                              ├─ in-flight table + condvar (single-flight)
+//!                                              └─ engine::run_planned       (price once)
 //! ```
 //!
 //! Sessions fan out over an OS-thread worker pool (reusing
@@ -26,7 +26,7 @@ use super::cache::{CacheStats, ShardedCache};
 use super::fingerprint::{fingerprint_trial, Fingerprint};
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
-use crate::engine::{run, Job};
+use crate::engine::{prepare, run, run_planned, Job, JobPlan};
 use crate::sim::SimOpts;
 use crate::tuner::{tune, TrialExecutor, TuneOpts, TuneOutcome};
 use std::collections::HashMap;
@@ -157,14 +157,23 @@ impl TuningService {
 
     /// Serve a batch of sessions over the worker pool; outcomes come
     /// back in request order. Each session runs the sequential Fig-4
-    /// methodology, but every trial it prices goes through the memoized
-    /// [`evaluate`](TuningService::evaluate) path, so overlapping
-    /// sessions share simulations.
+    /// methodology over a **once-planned** job (`Arc<JobPlan>` shared by
+    /// all of its trials — plan-once / price-many), and every trial it
+    /// prices goes through the memoized
+    /// [`evaluate_planned`](TuningService::evaluate_planned) path, so
+    /// overlapping sessions share simulations.
     pub fn serve(&self, requests: &[SessionRequest]) -> Vec<SessionOutcome> {
         self.sessions.fetch_add(requests.len() as u64, Ordering::Relaxed);
         let pool = TrialExecutor::new(self.workers);
         let outcomes = pool.map(requests, |req| {
-            let mut runner = |conf: &SparkConf| self.evaluate(&req.job, conf, &req.sim);
+            let plan = prepare(&req.job).ok();
+            let mut runner = |conf: &SparkConf| match &plan {
+                Some(plan) => self.evaluate_planned(&req.job, plan, conf, &req.sim),
+                // Unplannable jobs fall back to the plan-per-trial path,
+                // which prices the failure as a crash (INFINITY) — the
+                // same outcome a direct `tune` would see.
+                None => self.evaluate(&req.job, conf, &req.sim),
+            };
             tune(&mut runner, &req.tune)
         });
         outcomes
@@ -181,10 +190,28 @@ impl TuningService {
     /// Price one trial through the memo layers: fingerprint → cache →
     /// single-flight → simulate. Pure in the trial key, so the returned
     /// duration is bit-identical to a direct `run(..)` whatever path
-    /// served it.
+    /// served it. Plans the job on the spot; session loops use
+    /// [`evaluate_planned`](TuningService::evaluate_planned) to share
+    /// one plan across all of a job's trials.
     pub fn evaluate(&self, job: &Job, conf: &SparkConf, sim: &SimOpts) -> f64 {
         let fp = fingerprint_trial(job, conf, &self.cluster, sim);
         self.memoized(fp, || run(job, conf, &self.cluster, sim).effective_duration())
+    }
+
+    /// [`evaluate`](TuningService::evaluate) with a pre-planned job: the
+    /// trial *identity* (fingerprint) still derives from the job itself,
+    /// but a cache/coalescing miss prices the shared `Arc<JobPlan>`
+    /// instead of re-planning — bit-identical (planning is pure), just
+    /// cheaper.
+    pub fn evaluate_planned(
+        &self,
+        job: &Job,
+        plan: &Arc<JobPlan>,
+        conf: &SparkConf,
+        sim: &SimOpts,
+    ) -> f64 {
+        let fp = fingerprint_trial(job, conf, &self.cluster, sim);
+        self.memoized(fp, || run_planned(plan, conf, &self.cluster, sim).effective_duration())
     }
 
     /// The memoization core, generic over the computation so tests can

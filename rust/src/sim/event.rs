@@ -11,6 +11,40 @@
 //! at fair fluid-flow rates, exactly as concurrent Spark jobs contend on
 //! one cluster.
 //!
+//! # The hot path: indexed event discovery
+//!
+//! Time only moves at events, and between events every quantity the core
+//! tracks is either constant or linear in time. The core exploits that
+//! end to end — no per-event rescans of the running set:
+//!
+//! * every running task copy carries an **absolute predicted finish
+//!   time** (its *deadline*), kept in a hand-rolled indexed min-heap
+//!   ([`TimeHeap`]) with O(log n) decrease/increase-key;
+//! * processor-shared disk/NIC flows progress at their cached fair-share
+//!   rate. Rates only change when a flow enters or leaves a resource —
+//!   which only happens at events — so the core marks exactly the
+//!   touched resources **dirty** and re-rolls *only their* flows
+//!   (`remaining`, `rate`, deadline) before the next event is chosen.
+//!   This dirty-set propagation is exact, not an approximation;
+//! * stage completions sit in their own min-heap; locality-hold expiries
+//!   live in a monotone deque (one deadline per stage, all sharing the
+//!   same `locality_wait`); speculation-threshold crossings are derived
+//!   from per-stage launch-ordered queues of running originals (earliest
+//!   launch ⇒ earliest threshold crossing) plus a per-stage cached
+//!   threshold invalidated when a task of the stage finishes.
+//!
+//! A reference **scan core** ([`Discovery::Scan`]) shares every byte of
+//! this state and processing code but discovers the next event by
+//! scanning all live copies — and *asserts*, every event, that the
+//! cached fair-share rates match a fresh recomputation (so a missed
+//! dirty mark fails loudly). Scan and indexed cores produce bit-identical
+//! [`StageCompletion`] streams; the golden equivalence suite pins that.
+//! [`SimStats`] counts the work each core did, so speedups are
+//! explainable: `live_copy_event_sum` is what per-event rescans would
+//! have touched, `flow_rolls` is what the dirty rule actually touched.
+//!
+//! # Task-granular scheduling features
+//!
 //! Tasks are first-class schedulable units, each with its own launch and
 //! finish events:
 //!
@@ -39,21 +73,21 @@
 //!   running/minShare), then by running/`weight`. With default pools it
 //!   reduces to fewest-running-tasks-first.
 //!
-//! Time only moves at events (task phase completions, stage completion
-//! barriers, locality-hold expiries, and speculation deadlines); between
-//! events every processor-shared flow progresses at its cached fair-share
-//! rate — the standard fluid-flow DES. Everything is deterministic in
-//! `(submission order, SimOpts seed)`: repeated runs produce bit-identical
-//! clocks, and with `locality_wait == 0`, speculation off, and no
-//! straggler model the core reproduces the PR-1 stage-granular behavior
-//! bit for bit.
+//! Per-task state lives in **flat arenas**: one phase arena + offset
+//! table per stage (jittered originals and re-jittered speculative
+//! clones side by side), one preferred-node arena, and a slot arena of
+//! running copies with a LIFO free list — stage submission performs a
+//! constant number of allocations however many tasks it carries, and the
+//! engine's uniform stages submit through [`StageSpec`] without
+//! materializing per-task [`TaskSpec`]s at all.
 //!
-//! A stage *completes* `waves × task_overhead` after its last task
-//! finishes (the per-wave scheduling/launch overhead the barrier model
-//! charged at stage granularity); its [`StageCompletion`] — which also
-//! carries the node every task actually ran on, so the engine can derive
-//! cache-locality preferences for child stages — is surfaced to the
-//! driver from [`advance`](EventSim::advance).
+//! Everything is deterministic in `(submission order, SimOpts seed)`:
+//! repeated runs produce bit-identical clocks regardless of discovery
+//! mode. A stage *completes* `waves × task_overhead` after its last task
+//! finishes; its [`StageCompletion`] — which also carries the node every
+//! task actually ran on, so the engine can derive cache-locality
+//! preferences for child stages — is surfaced to the driver from
+//! [`advance`](EventSim::advance).
 
 use super::{Phase, SimOpts, StageStats, TaskSpec};
 use crate::cluster::{ClusterSpec, NodeId};
@@ -138,8 +172,7 @@ pub struct SpecPolicy {
 }
 
 /// Core-wide scheduling policy beyond the [`Scheduler`] trait: delay
-/// scheduling and speculative execution. `Default` disables both — the
-/// PR-1 stage-granular behavior, bit for bit.
+/// scheduling and speculative execution. `Default` disables both.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct SimPolicy {
     /// `spark.locality.wait` in simulated seconds: how long a task with
@@ -149,6 +182,92 @@ pub struct SimPolicy {
     pub locality_wait: f64,
     /// `spark.speculation` (`None` = off).
     pub speculation: Option<SpecPolicy>,
+}
+
+/// How the core finds the next event.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Discovery {
+    /// Reference mode: scan every live task copy at every event, and
+    /// assert the indexed bookkeeping invariants (cached fair-share
+    /// rates fresh, flow lists consistent). Used by the golden
+    /// equivalence tests; O(running) per event.
+    Scan,
+    /// Production mode: indexed min-heaps + dirty-resource propagation;
+    /// O(log n) per event plus O(touched flows).
+    #[default]
+    Indexed,
+}
+
+/// Event-core work counters: what the simulation did and — the point of
+/// the indexed queue — what it *avoided* doing. Snapshot via
+/// [`EventSim::stats`]; the engine surfaces the final snapshot on
+/// `JobResult`/`MultiJobResult` and the report layer renders it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimStats {
+    /// Clock-advancing events processed.
+    pub events: u64,
+    /// Stage completions emitted.
+    pub completions: u64,
+    /// Task copies launched (originals + speculative clones).
+    pub task_launches: u64,
+    /// Non-noop phase entries.
+    pub phase_transitions: u64,
+    /// Task-event heap insertions (zero in [`Discovery::Scan`]).
+    pub heap_pushes: u64,
+    /// Task-event heap pops (zero in [`Discovery::Scan`]).
+    pub heap_pops: u64,
+    /// Task-event heap re-keys — decrease/increase-key operations
+    /// (zero in [`Discovery::Scan`]).
+    pub heap_updates: u64,
+    /// Processor-shared flow rolls: deadline/rate recomputations actually
+    /// performed under the dirty-resource rule.
+    pub flow_rolls: u64,
+    /// Σ over events of live running copies — the per-event scan work a
+    /// rescanning core would have performed.
+    pub live_copy_event_sum: u64,
+}
+
+impl SimStats {
+    /// Scan work the dirty-resource rule avoided: live copies per event
+    /// a rescanning discovery would have touched, minus the flow rolls
+    /// actually performed. (In [`Discovery::Scan`] the discovery itself
+    /// still touches every live copy; this counter then reports what the
+    /// indexed core *would* have saved on the same run.)
+    pub fn scan_work_saved(&self) -> u64 {
+        self.live_copy_event_sum.saturating_sub(self.flow_rolls)
+    }
+
+    /// Total task-event heap operations.
+    pub fn heap_ops(&self) -> u64 {
+        self.heap_pushes + self.heap_pops + self.heap_updates
+    }
+
+    /// Fold another snapshot into this one (aggregating across runs —
+    /// the CLI's `perf-smoke` totals, for example). Destructures
+    /// exhaustively so adding a counter without summing it here is a
+    /// compile error, not a silently-zero report row.
+    pub fn absorb(&mut self, other: &SimStats) {
+        let SimStats {
+            events,
+            completions,
+            task_launches,
+            phase_transitions,
+            heap_pushes,
+            heap_pops,
+            heap_updates,
+            flow_rolls,
+            live_copy_event_sum,
+        } = *other;
+        self.events += events;
+        self.completions += completions;
+        self.task_launches += task_launches;
+        self.phase_transitions += phase_transitions;
+        self.heap_pushes += heap_pushes;
+        self.heap_pops += heap_pops;
+        self.heap_updates += heap_updates;
+        self.flow_rolls += flow_rolls;
+        self.live_copy_event_sum += live_copy_event_sum;
+    }
 }
 
 /// What a [`Scheduler`] sees of one runnable stage when picking the next
@@ -272,57 +391,237 @@ pub struct StageCompletion {
     pub task_nodes: Vec<NodeId>,
 }
 
+/// A uniform stage for the fast submission path: every task shares one
+/// phase template and carries at most one preferred node. The engine's
+/// priced stages are exactly this shape; submitting through
+/// [`EventSim::submit_shaped`] skips the per-task [`TaskSpec`]
+/// materialization (and its per-task `Vec` allocations) entirely.
+/// Results are bit-identical to the equivalent [`EventSim::submit`].
+#[derive(Clone, Copy, Debug)]
+pub struct StageSpec<'a> {
+    /// Phase template shared by every task (jitter is applied per task).
+    pub template: &'a [Phase],
+    /// Preferred node per task: either empty (no task has a preference)
+    /// or exactly `tasks` long.
+    pub preferred: &'a [NodeId],
+    /// Task count.
+    pub tasks: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Indexed min-heap
+// ---------------------------------------------------------------------------
+
+/// Slot id marker for "not in the heap".
+const ABSENT: u32 = u32::MAX;
+
+/// Hand-rolled indexed binary min-heap over `(time, id)` keys: `set`
+/// inserts or re-keys (decrease- *and* increase-key) in O(log n), and
+/// `remove` deletes by id in O(log n) via a position table. Ties break
+/// on the id, making peek/pop order a total, deterministic function of
+/// the contents. Keys must not be NaN (the phase translator's
+/// `Phase::is_noop` NaN guard upholds this).
+struct TimeHeap {
+    /// `(key, id)` pairs in heap order (minimum at index 0).
+    items: Vec<(f64, u32)>,
+    /// id → index in `items` (`ABSENT` when the id is not queued).
+    pos: Vec<u32>,
+}
+
+impl TimeHeap {
+    fn new() -> TimeHeap {
+        TimeHeap { items: Vec::new(), pos: Vec::new() }
+    }
+
+    fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    fn contains(&self, id: u32) -> bool {
+        (id as usize) < self.pos.len() && self.pos[id as usize] != ABSENT
+    }
+
+    fn peek(&self) -> Option<(f64, u32)> {
+        self.items.first().copied()
+    }
+
+    /// Insert `id` with `key`, or re-key it if already queued. Returns
+    /// `true` when the id was inserted fresh.
+    fn set(&mut self, id: u32, key: f64) -> bool {
+        debug_assert!(!key.is_nan(), "NaN event time would poison the queue");
+        if id as usize >= self.pos.len() {
+            self.pos.resize(id as usize + 1, ABSENT);
+        }
+        let p = self.pos[id as usize];
+        if p == ABSENT {
+            self.items.push((key, id));
+            let i = self.items.len() - 1;
+            self.pos[id as usize] = i as u32;
+            self.sift_up(i);
+            true
+        } else {
+            self.items[p as usize].0 = key;
+            self.fix(p as usize);
+            false
+        }
+    }
+
+    fn pop(&mut self) -> Option<(f64, u32)> {
+        let top = *self.items.first()?;
+        self.remove_at(0);
+        Some(top)
+    }
+
+    /// Remove `id` if queued (no-op otherwise).
+    fn remove(&mut self, id: u32) {
+        if self.contains(id) {
+            let p = self.pos[id as usize] as usize;
+            self.remove_at(p);
+        }
+    }
+
+    fn remove_at(&mut self, p: usize) {
+        let (_, id) = self.items[p];
+        self.pos[id as usize] = ABSENT;
+        let last = self.items.len() - 1;
+        self.items.swap(p, last);
+        self.items.pop();
+        if p < self.items.len() {
+            // The displaced ex-last element may need to move either way.
+            self.pos[self.items[p].1 as usize] = p as u32;
+            self.fix(p);
+        }
+    }
+
+    /// Restore the heap property around `p` after its key changed.
+    fn fix(&mut self, p: usize) {
+        if p > 0 && self.less(p, (p - 1) / 2) {
+            self.sift_up(p);
+        } else {
+            self.sift_down(p);
+        }
+    }
+
+    fn less(&self, a: usize, b: usize) -> bool {
+        let (ka, ia) = self.items[a];
+        let (kb, ib) = self.items[b];
+        ka < kb || (ka == kb && ia < ib)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.less(i, parent) {
+                self.swap_items(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let l = 2 * i + 1;
+            let r = l + 1;
+            let mut m = i;
+            if l < self.items.len() && self.less(l, m) {
+                m = l;
+            }
+            if r < self.items.len() && self.less(r, m) {
+                m = r;
+            }
+            if m == i {
+                break;
+            }
+            self.swap_items(i, m);
+            i = m;
+        }
+    }
+
+    fn swap_items(&mut self, a: usize, b: usize) {
+        self.items.swap(a, b);
+        self.pos[self.items[a].1 as usize] = a as u32;
+        self.pos[self.items[b].1 as usize] = b as u32;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime state
+// ---------------------------------------------------------------------------
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum ResKind {
     Disk,
     Nic,
 }
 
-/// Per-task-copy run state.
+/// One running task copy in the slot arena. A copy keeps its slot for
+/// its whole lifetime (all phases); the slot is recycled through a LIFO
+/// free list when the copy finishes, is cancelled, or goes moot.
 struct Running {
-    stage: StageHandle,
-    task_idx: usize,
+    stage: u32,
+    task_idx: u32,
     node: NodeId,
-    phase_idx: usize,
-    /// For PS phases: remaining bytes.
+    phase_idx: u32,
+    /// Position in its resource's flow list (PS phases only).
+    res_pos: u32,
+    /// Launch time of this copy.
+    started: f64,
+    /// Absolute predicted finish time of the current phase — the heap
+    /// key. Exact for fixed-rate phases; for PS phases it is valid
+    /// whenever the resource is clean (rates change only at events, and
+    /// dirty resources are re-rolled before discovery).
+    deadline: f64,
+    /// PS phases: bytes left as of `updated_at`.
     remaining: f64,
-    /// For fixed-rate phases: absolute end time.
-    end_time: f64,
+    /// PS phases: time of the last roll (rate change on this resource).
+    updated_at: f64,
+    /// PS phases: cached fair-share rate since `updated_at`.
+    rate: f64,
     is_ps: bool,
     res: ResKind,
-    started: f64,
-    /// Rate computed during the event scan, reused by the advance pass
-    /// (rates only change at events).
-    rate: f64,
     /// Current phase is a metered CPU phase (for cancellation refunds).
     is_cpu: bool,
-    /// This entry is a speculative backup copy.
+    /// This copy is a speculative backup.
     is_clone: bool,
+    alive: bool,
+    /// Pulled out of the event queue for the event being processed right
+    /// now. A sibling in this state is about to be handled as a moot
+    /// finisher — `cancel_sibling` must not touch it (first-finisher
+    /// ties resolve through the moot path, with no refunds).
+    collected: bool,
+    /// Slot of this copy's speculation sibling (`SLOT_NONE` until a
+    /// backup is launched): the racing pair link each other so the
+    /// winner cancels the loser in O(1) instead of scanning the arena.
+    sibling: u32,
 }
 
-/// Resource metering accumulated while a task enters phases.
-#[derive(Default)]
-struct Meter {
-    cpu_secs: f64,
-    disk_bytes: f64,
-    net_bytes: f64,
-}
+/// "No slot" marker for [`Running::sibling`].
+const SLOT_NONE: u32 = u32::MAX;
 
-/// Per-stage runtime state inside the core.
+/// Per-stage runtime state: flat arenas + offset tables, so submission
+/// allocates a constant number of vectors however many tasks the stage
+/// carries.
 struct StageRt {
     job: JobId,
     seq: usize,
-    /// Jittered (and possibly straggler-scaled) phase lists, one per task.
-    phases: Vec<Vec<Phase>>,
-    /// Re-jittered phase lists for speculative copies — no straggler
-    /// factor, the backup lands on a healthy node. Empty when speculation
-    /// is off.
-    clone_phases: Vec<Vec<Phase>>,
-    /// Preferred nodes per task (empty = ANY).
-    preferred: Vec<Vec<NodeId>>,
-    pending: VecDeque<usize>,
+    /// Task count.
+    tasks: usize,
+    /// Jittered (and possibly straggler-scaled) phases, all tasks
+    /// back-to-back; task `t` owns `phases[phase_off[t]..phase_off[t+1]]`.
+    phases: Vec<Phase>,
+    /// Re-jittered phases for speculative copies (no straggler factor —
+    /// the backup lands on a healthy node). Shares `phase_off`; empty
+    /// when speculation is off.
+    clone_phases: Vec<Phase>,
+    phase_off: Vec<u32>,
+    /// Preferred nodes, all tasks back-to-back (empty slice = ANY).
+    preferred: Vec<NodeId>,
+    pref_off: Vec<u32>,
+    pending: VecDeque<u32>,
     /// How many pending tasks still carry a locality preference (drives
-    /// the hold-expiry event scan).
+    /// hold-expiry bookkeeping).
     pending_pref: usize,
     /// Task finished (winning copy completed).
     done: Vec<bool>,
@@ -332,6 +631,22 @@ struct StageRt {
     unfinished: usize,
     submitted_at: f64,
     task_durations: Vec<f64>,
+    /// `task_durations` kept sorted incrementally — the speculation
+    /// median without per-event re-sorts. Maintained only under an
+    /// active speculation policy.
+    durations_sorted: Vec<f64>,
+    /// Cached speculation threshold (`multiplier × median`), invalidated
+    /// by `spec_dirty` whenever a task of this stage finishes.
+    spec_th: Option<f64>,
+    spec_dirty: bool,
+    /// Stage is registered in the core's speculation list.
+    in_spec_list: bool,
+    /// Running *original* copies in launch order (`started`
+    /// non-decreasing): the front is always the earliest-launched — and
+    /// therefore first-to-cross-the-threshold — candidate. Entries go
+    /// stale when their task finishes/clones or the slot is recycled;
+    /// they are validated lazily and pruned from the front.
+    orig_queue: VecDeque<(u32, u32)>,
     /// Node the winning copy of each task ran on.
     task_nodes: Vec<NodeId>,
     /// Tasks launched on one of their preferred nodes.
@@ -344,10 +659,20 @@ struct StageRt {
     /// `waves × task_overhead`, charged between the last task finish and
     /// the stage's completion event.
     completion_overhead: f64,
-    /// Absolute completion time, set when `unfinished` reaches zero.
-    completion_due: Option<f64>,
-    /// The completion event has been surfaced to the driver.
-    emitted: bool,
+}
+
+impl StageRt {
+    fn task_phases(&self, t: usize) -> &[Phase] {
+        &self.phases[self.phase_off[t] as usize..self.phase_off[t + 1] as usize]
+    }
+
+    fn clone_task_phases(&self, t: usize) -> &[Phase] {
+        &self.clone_phases[self.phase_off[t] as usize..self.phase_off[t + 1] as usize]
+    }
+
+    fn task_prefs(&self, t: usize) -> &[NodeId] {
+        &self.preferred[self.pref_off[t] as usize..self.pref_off[t + 1] as usize]
+    }
 }
 
 /// The persistent, multi-stage, multi-job discrete-event simulator core
@@ -356,12 +681,36 @@ pub struct EventSim<'a> {
     cluster: &'a ClusterSpec,
     scheduler: Box<dyn Scheduler>,
     policy: SimPolicy,
+    discovery: Discovery,
     now: f64,
     free_cores: Vec<i64>,
-    disk_active: Vec<u32>,
-    nic_active: Vec<u32>,
-    running: Vec<Running>,
+    /// Σ `free_cores` — the O(1) "any core free?" probe.
+    free_core_total: i64,
+    /// Live flow slots per resource; disks first, then NICs
+    /// (`res = node` / `res = nodes + node`). The list length *is* the
+    /// active-flow count that sets the fair-share rate.
+    flows: Vec<Vec<u32>>,
+    res_dirty: Vec<bool>,
+    /// Dirty resource indices awaiting a roll.
+    dirty: Vec<u32>,
+    /// Slot arena of running copies + LIFO free list.
+    slots: Vec<Running>,
+    free_slots: Vec<u32>,
+    live: usize,
+    /// Task phase-end events ([`Discovery::Indexed`] only).
+    task_heap: TimeHeap,
+    /// Stage completion events, keyed `(due, handle)`.
+    completions: TimeHeap,
+    /// Locality-hold expiries `(deadline, handle)` — deadlines are
+    /// monotone in submission order (one shared `locality_wait`), so a
+    /// deque with lazy front-pruning replaces a per-event stage scan.
+    holds: VecDeque<(f64, u32)>,
+    /// Stages with running originals under an active speculation policy
+    /// (lazily compacted).
+    spec_list: Vec<u32>,
     stages: Vec<StageRt>,
+    /// Stages with pending tasks, ascending by handle (lazily compacted).
+    pending_list: Vec<u32>,
     /// Running task-copy count per job (indexed by `JobId`).
     jobs_running: Vec<usize>,
     /// FAIR pool per job (default weight 1 / minShare 0).
@@ -369,41 +718,69 @@ pub struct EventSim<'a> {
     /// Round-robin cursor for locality-free placement.
     rr: usize,
     /// Admission gate: only rescan pending work when cores were freed,
-    /// stages were submitted, or a locality/speculation deadline passed
-    /// since the last pass.
+    /// stages were submitted, or a locality deadline passed since the
+    /// last pass.
     admit_dirty: bool,
+    stats: SimStats,
+    /// Reused scratch for same-event finisher collection.
+    finished_scratch: Vec<u32>,
 }
 
 const EPS: f64 = 1e-9;
 
 impl<'a> EventSim<'a> {
     /// A core with the default policy (no locality wait, no speculation)
-    /// — the PR-1 stage-granular behavior.
+    /// and indexed discovery.
     pub fn new(cluster: &'a ClusterSpec, scheduler: Box<dyn Scheduler>) -> EventSim<'a> {
         EventSim::with_policy(cluster, scheduler, SimPolicy::default())
     }
 
-    /// A core with explicit delay-scheduling / speculation policy.
+    /// A core with explicit delay-scheduling / speculation policy and
+    /// indexed discovery.
     pub fn with_policy(
         cluster: &'a ClusterSpec,
         scheduler: Box<dyn Scheduler>,
         policy: SimPolicy,
+    ) -> EventSim<'a> {
+        EventSim::with_discovery(cluster, scheduler, policy, Discovery::Indexed)
+    }
+
+    /// A core with an explicit [`Discovery`] mode — `Scan` is the
+    /// self-verifying reference the golden equivalence tests compare
+    /// against.
+    pub fn with_discovery(
+        cluster: &'a ClusterSpec,
+        scheduler: Box<dyn Scheduler>,
+        policy: SimPolicy,
+        discovery: Discovery,
     ) -> EventSim<'a> {
         let nodes = cluster.nodes as usize;
         EventSim {
             cluster,
             scheduler,
             policy,
+            discovery,
             now: 0.0,
             free_cores: vec![cluster.cores_per_node as i64; nodes],
-            disk_active: vec![0u32; nodes],
-            nic_active: vec![0u32; nodes],
-            running: Vec::with_capacity(cluster.total_cores() as usize),
+            free_core_total: cluster.total_cores() as i64,
+            flows: vec![Vec::new(); 2 * nodes],
+            res_dirty: vec![false; 2 * nodes],
+            dirty: Vec::new(),
+            slots: Vec::with_capacity(cluster.total_cores() as usize),
+            free_slots: Vec::new(),
+            live: 0,
+            task_heap: TimeHeap::new(),
+            completions: TimeHeap::new(),
+            holds: VecDeque::new(),
+            spec_list: Vec::new(),
             stages: Vec::new(),
+            pending_list: Vec::new(),
             jobs_running: Vec::new(),
             pools: Vec::new(),
             rr: 0,
             admit_dirty: false,
+            stats: SimStats::default(),
+            finished_scratch: Vec::new(),
         }
     }
 
@@ -422,6 +799,16 @@ impl<'a> EventSim<'a> {
         &self.policy
     }
 
+    /// The event-discovery mode in force.
+    pub fn discovery(&self) -> Discovery {
+        self.discovery
+    }
+
+    /// Snapshot of the core's work counters.
+    pub fn stats(&self) -> SimStats {
+        self.stats
+    }
+
     /// Assign `job` to a FAIR pool (weight / minShare). May be called
     /// before or after the job's first submission; jobs default to
     /// weight 1 / minShare 0.
@@ -432,48 +819,106 @@ impl<'a> EventSim<'a> {
         self.pools[job] = pool;
     }
 
-    /// Submit a stage of `tasks` on behalf of `job`. CPU jitter is drawn
-    /// per task, in task order, from a stream seeded by `opts.seed` —
-    /// identical to the historical per-stage barrier runner, so a linear
-    /// DAG under FIFO reproduces the barrier path bit for bit. The
-    /// straggler tail (`opts.straggler`) and the speculative-copy
-    /// re-jitter draw from their own dedicated streams, so enabling
-    /// either never perturbs the base draws.
+    /// Submit a stage of heterogeneous `tasks` on behalf of `job`. CPU
+    /// jitter is drawn per task, in task order, from a stream seeded by
+    /// `opts.seed`; the straggler tail (`opts.straggler`) and the
+    /// speculative-copy re-jitter draw from their own dedicated streams,
+    /// so enabling either never perturbs the base draws. Uniform stages
+    /// can use the allocation-light [`submit_shaped`](Self::submit_shaped)
+    /// instead — the two are bit-identical for equivalent inputs.
     pub fn submit(&mut self, job: JobId, tasks: &[TaskSpec], opts: &SimOpts) -> StageHandle {
+        let n = tasks.len();
+        let total: usize = tasks.iter().map(|t| t.phases.len()).sum();
+        let mut phases = Vec::with_capacity(total);
+        let mut phase_off = Vec::with_capacity(n + 1);
+        phase_off.push(0u32);
+        for t in tasks {
+            phases.extend_from_slice(&t.phases);
+            phase_off.push(phases.len() as u32);
+        }
+        let pref_total: usize = tasks.iter().map(|t| t.preferred_nodes.len()).sum();
+        let mut preferred = Vec::with_capacity(pref_total);
+        let mut pref_off = Vec::with_capacity(n + 1);
+        pref_off.push(0u32);
+        for t in tasks {
+            preferred.extend_from_slice(&t.preferred_nodes);
+            pref_off.push(preferred.len() as u32);
+        }
+        self.submit_arena(job, phases, phase_off, preferred, pref_off, n, opts)
+    }
+
+    /// Fast-path submission for uniform stages (see [`StageSpec`]): one
+    /// shared phase template, at most one preferred node per task, and a
+    /// constant number of allocations regardless of task count.
+    pub fn submit_shaped(
+        &mut self,
+        job: JobId,
+        spec: &StageSpec<'_>,
+        opts: &SimOpts,
+    ) -> StageHandle {
+        let n = spec.tasks;
+        let p = spec.template.len();
+        let mut phases = Vec::with_capacity(n * p);
+        for _ in 0..n {
+            phases.extend_from_slice(spec.template);
+        }
+        let phase_off: Vec<u32> = (0..=n).map(|i| (i * p) as u32).collect();
+        let (preferred, pref_off) = if spec.preferred.is_empty() {
+            (Vec::new(), vec![0u32; n + 1])
+        } else {
+            // A real assert (not debug-only): a short preference table
+            // would otherwise surface as an out-of-bounds slice deep in
+            // the admission scan, far from the misuse site.
+            assert_eq!(spec.preferred.len(), n, "StageSpec: one preferred node per task");
+            (spec.preferred.to_vec(), (0..=n).map(|i| i as u32).collect())
+        };
+        self.submit_arena(job, phases, phase_off, preferred, pref_off, n, opts)
+    }
+
+    /// Shared submission core: applies the jitter/straggler/clone draws
+    /// to the flat phase arena and registers the stage.
+    #[allow(clippy::too_many_arguments)]
+    fn submit_arena(
+        &mut self,
+        job: JobId,
+        mut phases: Vec<Phase>,
+        phase_off: Vec<u32>,
+        preferred: Vec<NodeId>,
+        pref_off: Vec<u32>,
+        n: usize,
+        opts: &SimOpts,
+    ) -> StageHandle {
         let mut rng = Prng::new(opts.seed ^ 0xD15C0);
         let mut srng = Prng::new(opts.seed ^ 0x57A6_61E5);
-        let mut crng = if self.policy.speculation.is_some() {
-            Some(Prng::new(opts.seed ^ 0xC1_0E5))
-        } else {
-            None
-        };
-        let mut phases: Vec<Vec<Phase>> = Vec::with_capacity(tasks.len());
-        let mut clone_phases: Vec<Vec<Phase>> = Vec::new();
-        for t in tasks {
+        let spec_on = self.policy.speculation.is_some();
+        let mut crng = if spec_on { Some(Prng::new(opts.seed ^ 0xC1_0E5)) } else { None };
+        // Clones re-jitter the *unjittered* template (no straggler
+        // factor: the backup lands on a healthy node).
+        let mut clone_phases: Vec<Phase> = if spec_on { phases.clone() } else { Vec::new() };
+        for t in 0..n {
+            let range = phase_off[t] as usize..phase_off[t + 1] as usize;
             let mut factor = 1.0 + opts.jitter * (rng.f64() - 0.5) * 2.0;
             if let Some(s) = &opts.straggler {
                 if s.prob > 0.0 && srng.f64() < s.prob {
                     factor *= s.factor.max(1.0);
                 }
             }
-            phases.push(scale_cpu(&t.phases, factor));
+            scale_cpu_in_place(&mut phases[range.clone()], factor);
             if let Some(crng) = crng.as_mut() {
                 let cf = 1.0 + opts.jitter * (crng.f64() - 0.5) * 2.0;
-                clone_phases.push(scale_cpu(&t.phases, cf));
+                scale_cpu_in_place(&mut clone_phases[range], cf);
             }
         }
-        let preferred: Vec<Vec<NodeId>> = tasks.iter().map(|t| t.preferred_nodes.clone()).collect();
-        let pending_pref = preferred.iter().filter(|p| !p.is_empty()).count();
+        let pending_pref =
+            (0..n).filter(|&t| pref_off[t + 1] > pref_off[t]).count();
 
         // One wave overhead per `total_cores` tasks, charged between the
         // last task finish and the completion event (the engine's
         // downstream stages unlock only then).
-        let waves =
-            (tasks.len() as f64 / self.cluster.total_cores() as f64).ceil().max(1.0);
+        let waves = (n as f64 / self.cluster.total_cores() as f64).ceil().max(1.0);
         let completion_overhead = waves * self.cluster.task_overhead;
 
         let handle = self.stages.len();
-        let n = tasks.len();
         if job >= self.jobs_running.len() {
             self.jobs_running.resize(job + 1, 0);
         }
@@ -483,16 +928,24 @@ impl<'a> EventSim<'a> {
         self.stages.push(StageRt {
             job,
             seq: handle,
+            tasks: n,
             phases,
             clone_phases,
+            phase_off,
             preferred,
-            pending: (0..n).collect(),
+            pref_off,
+            pending: (0..n as u32).collect(),
             pending_pref,
             done: vec![false; n],
             cloned: vec![false; n],
             unfinished: n,
             submitted_at: self.now,
             task_durations: Vec::with_capacity(n),
+            durations_sorted: if spec_on { Vec::with_capacity(n) } else { Vec::new() },
+            spec_th: None,
+            spec_dirty: true,
+            in_spec_list: false,
+            orig_queue: VecDeque::new(),
             task_nodes: vec![0; n],
             locality_hits: 0,
             speculated: 0,
@@ -500,9 +953,17 @@ impl<'a> EventSim<'a> {
             disk_bytes: 0.0,
             net_bytes: 0.0,
             completion_overhead,
-            completion_due: if n == 0 { Some(self.now + completion_overhead) } else { None },
-            emitted: false,
         });
+        if n == 0 {
+            self.completions.set(handle as u32, self.now + completion_overhead);
+        } else {
+            self.pending_list.push(handle as u32);
+            if self.policy.locality_wait > 0.0 && pending_pref > 0 {
+                // Deadlines are pushed in submission order and `now`
+                // never decreases, so the deque stays sorted.
+                self.holds.push_back((self.now + self.policy.locality_wait, handle as u32));
+            }
+        }
         self.admit_dirty = true;
         handle
     }
@@ -517,160 +978,20 @@ impl<'a> EventSim<'a> {
             }
             self.admit();
             self.speculate();
-
-            // ---- Find the next event (task phase end, stage completion
-            // barrier, locality-hold expiry, or speculation deadline),
-            // caching PS fair-share rates ----
-            let mut dt = f64::INFINITY;
-            for r in &mut self.running {
-                let t = if r.is_ps {
-                    let active = match r.res {
-                        ResKind::Disk => self.disk_active[r.node as usize],
-                        ResKind::Nic => self.nic_active[r.node as usize],
-                    } as f64;
-                    let cap = match r.res {
-                        ResKind::Disk => self.cluster.disk_bw,
-                        ResKind::Nic => self.cluster.net_bw,
-                    };
-                    r.rate = cap / active.max(1.0);
-                    r.remaining / r.rate
-                } else {
-                    r.end_time - self.now
-                };
-                if t < dt {
-                    dt = t;
-                }
+            // Roll dirty resources so every deadline is fresh, then pick
+            // the earliest event across the four queues.
+            self.sweep_dirty();
+            let next = self.next_event_time();
+            if next == f64::INFINITY {
+                debug_assert!(self.live == 0, "idle core with {} copies still running", self.live);
+                return None;
             }
-            for s in &self.stages {
-                if let Some(due) = s.completion_due {
-                    if !s.emitted {
-                        let t = due - self.now;
-                        if t < dt {
-                            dt = t;
-                        }
-                    }
-                }
-            }
-            if self.policy.locality_wait > 0.0 {
-                // A held task's hold expiry is an event: the admission
-                // scan must rerun when a stage degrades to ANY.
-                for s in &self.stages {
-                    if s.pending_pref > 0 && !s.pending.is_empty() {
-                        let t = s.submitted_at + self.policy.locality_wait - self.now;
-                        if t > EPS && t < dt {
-                            dt = t;
-                        }
-                    }
-                }
-            }
-            if let Some(spec) = self.policy.speculation {
-                // The instant a running task crosses multiplier × median
-                // is an event (the median only moves at completions, which
-                // are themselves events — so this scan is exact).
-                let overhead = self.cluster.task_overhead;
-                let mut memo: Vec<Option<Option<f64>>> = vec![None; self.stages.len()];
-                for r in &self.running {
-                    if r.is_clone {
-                        continue;
-                    }
-                    let st = &self.stages[r.stage];
-                    if st.done[r.task_idx] || st.cloned[r.task_idx] {
-                        continue;
-                    }
-                    let th = *memo[r.stage].get_or_insert_with(|| spec_threshold(st, &spec));
-                    let Some(th) = th else { continue };
-                    let t = r.started + th - overhead - self.now;
-                    if t > EPS && t < dt {
-                        dt = t;
-                    }
-                }
-            }
-            if dt == f64::INFINITY {
-                debug_assert!(self.running.is_empty());
-                return None; // fully idle
-            }
-            let dt = dt.max(0.0);
             let prev_now = self.now;
-            self.now += dt;
-            if self.policy.locality_wait > 0.0 && !self.admit_dirty {
-                // A hold expiry frees no cores but must re-trigger the
-                // admission scan. Only mark dirty when this event actually
-                // crossed a stage's hold deadline, so the core-freed
-                // admission gate keeps its bite on the common path.
-                // (Speculation deadlines need no admission rescan —
-                // `speculate` runs every iteration regardless.)
-                for s in &self.stages {
-                    if s.pending_pref > 0 && !s.pending.is_empty() {
-                        let dl = s.submitted_at + self.policy.locality_wait;
-                        if dl <= self.now + EPS && dl > prev_now + EPS {
-                            self.admit_dirty = true;
-                            break;
-                        }
-                    }
-                }
-            }
-
-            // ---- Advance all active flows by dt (cached pre-event
-            // rates), then extract completions, then start successor
-            // phases. Three separate passes so a phase that starts at
-            // this event is never credited progress for the interval that
-            // just elapsed. ----
-            for r in &mut self.running {
-                if r.is_ps {
-                    r.remaining -= r.rate * dt;
-                }
-            }
-            let mut finished: Vec<Running> = Vec::new();
-            let mut i = 0;
-            while i < self.running.len() {
-                let done = {
-                    let r = &self.running[i];
-                    if r.is_ps { r.remaining <= EPS } else { r.end_time - self.now <= EPS }
-                };
-                if done {
-                    finished.push(self.running.swap_remove(i));
-                } else {
-                    i += 1;
-                }
-            }
-            for mut r in finished {
-                // Release PS membership for the finished phase.
-                if r.is_ps {
-                    match r.res {
-                        ResKind::Disk => self.disk_active[r.node as usize] -= 1,
-                        ResKind::Nic => self.nic_active[r.node as usize] -= 1,
-                    }
-                }
-                // A sibling copy may have won at this very event; this
-                // copy is then moot — release its core and drop it.
-                if self.stages[r.stage].done[r.task_idx] {
-                    self.release_core(r.stage, r.node);
-                    continue;
-                }
-                r.phase_idx += 1;
-                let (stage, task_idx, node, started) = (r.stage, r.task_idx, r.node, r.started);
-                let is_clone = r.is_clone;
-                let mut meter = Meter::default();
-                let entered = {
-                    let st = &self.stages[stage];
-                    let plan =
-                        if is_clone { &st.clone_phases[task_idx] } else { &st.phases[task_idx] };
-                    enter_phase(
-                        self.cluster,
-                        plan,
-                        r,
-                        self.now,
-                        &mut self.disk_active,
-                        &mut self.nic_active,
-                        &mut meter,
-                    )
-                };
-                self.apply_meter(stage, &meter);
-                match entered {
-                    Some(run) => self.running.push(run),
-                    None => self.finish_task(stage, task_idx, node, started),
-                }
-            }
+            self.now = next.max(self.now);
+            self.stats.events += 1;
+            self.stats.live_copy_event_sum += self.live as u64;
+            self.drain_holds(prev_now);
+            self.collect_and_process();
         }
     }
 
@@ -684,115 +1005,494 @@ impl<'a> EventSim<'a> {
         out
     }
 
-    // ---- internals ----
+    // ---- event discovery ----
 
-    fn apply_meter(&mut self, stage: StageHandle, meter: &Meter) {
-        let st = &mut self.stages[stage];
-        st.cpu_secs += meter.cpu_secs;
-        st.disk_bytes += meter.disk_bytes;
-        st.net_bytes += meter.net_bytes;
-    }
-
-    /// A copy released its core without finishing its task (moot or
-    /// cancelled sibling of an already-won speculation race).
-    fn release_core(&mut self, stage: StageHandle, node: NodeId) {
-        self.free_cores[node as usize] += 1;
-        self.admit_dirty = true;
-        let job = self.stages[stage].job;
-        self.jobs_running[job] -= 1;
-    }
-
-    /// The winning copy of `stage`'s task `task_idx` finished on `node`
-    /// (started at `started`). Cancels the losing sibling, if any.
-    fn finish_task(&mut self, stage: StageHandle, task_idx: usize, node: NodeId, started: f64) {
-        self.free_cores[node as usize] += 1;
-        self.admit_dirty = true;
-        let job = self.stages[stage].job;
-        self.jobs_running[job] -= 1;
-        let overhead = self.cluster.task_overhead;
-        let had_clone = {
-            let st = &mut self.stages[stage];
-            st.done[task_idx] = true;
-            st.task_nodes[task_idx] = node;
-            st.task_durations.push(self.now - started + overhead);
-            st.unfinished -= 1;
-            if st.unfinished == 0 {
-                st.completion_due = Some(self.now + st.completion_overhead);
+    /// Re-roll every flow on a dirty resource: advance `remaining` under
+    /// the old cached rate, install the new fair-share rate, and re-key
+    /// the predicted finish time. Exact — rates only change at events,
+    /// and every membership change marks its resource dirty.
+    fn sweep_dirty(&mut self) {
+        while let Some(res) = self.dirty.pop() {
+            let res = res as usize;
+            self.res_dirty[res] = false;
+            let count = self.flows[res].len();
+            if count == 0 {
+                continue;
             }
-            st.cloned[task_idx]
+            let rate = self.res_cap(res) / count as f64;
+            for k in 0..count {
+                let slot = self.flows[res][k];
+                let r = &mut self.slots[slot as usize];
+                r.remaining -= r.rate * (self.now - r.updated_at);
+                r.updated_at = self.now;
+                r.rate = rate;
+                let dl = self.now + r.remaining / rate;
+                r.deadline = dl;
+                self.stats.flow_rolls += 1;
+                if self.discovery == Discovery::Indexed {
+                    if self.task_heap.set(slot, dl) {
+                        self.stats.heap_pushes += 1;
+                    } else {
+                        self.stats.heap_updates += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Earliest upcoming event time across task deadlines, stage
+    /// completions, hold expiries, and speculation-threshold crossings;
+    /// `INFINITY` when fully idle.
+    fn next_event_time(&mut self) -> f64 {
+        let mut next = f64::INFINITY;
+        match self.discovery {
+            Discovery::Indexed => {
+                if let Some((t, _)) = self.task_heap.peek() {
+                    next = t;
+                }
+            }
+            Discovery::Scan => {
+                self.verify_flow_invariants();
+                for r in &self.slots {
+                    if r.alive && r.deadline < next {
+                        next = r.deadline;
+                    }
+                }
+            }
+        }
+        if let Some((t, _)) = self.completions.peek() {
+            if t < next {
+                next = t;
+            }
+        }
+        if self.policy.locality_wait > 0.0 {
+            // Front entries that are stage-stale (nothing pending, or no
+            // pending task still carries a preference) or already crossed
+            // can never set `admit_dirty` again — prune them for good.
+            while let Some(&(dl, h)) = self.holds.front() {
+                let s = &self.stages[h as usize];
+                if s.pending_pref == 0 || s.pending.is_empty() || dl <= self.now + EPS {
+                    self.holds.pop_front();
+                    continue;
+                }
+                if dl < next {
+                    next = dl;
+                }
+                break;
+            }
+        }
+        let spec_next = self.next_spec_event();
+        if spec_next < next {
+            next = spec_next;
+        }
+        next
+    }
+
+    /// Earliest future speculation-threshold crossing. Within a stage,
+    /// crossings (`started + th − overhead`) are non-decreasing along
+    /// the launch-ordered original queue, so the walk skips stale
+    /// entries and originals that have *already* crossed (they are
+    /// standing candidates awaiting a foreign free core, not future
+    /// events) and stops at the first future crossing — the stage's
+    /// minimum.
+    fn next_spec_event(&mut self) -> f64 {
+        let Some(spec) = self.policy.speculation else { return f64::INFINITY };
+        let overhead = self.cluster.task_overhead;
+        let mut best = f64::INFINITY;
+        let mut i = 0;
+        while i < self.spec_list.len() {
+            let h = self.spec_list[i] as usize;
+            self.prune_orig_queue(h);
+            if self.stages[h].orig_queue.is_empty() {
+                self.stages[h].in_spec_list = false;
+                self.spec_list.swap_remove(i);
+                continue;
+            }
+            if let Some(th) = self.stage_spec_threshold(h, &spec) {
+                let st = &self.stages[h];
+                for &(slot, ti) in st.orig_queue.iter() {
+                    if !self.orig_entry_live(h, slot, ti) {
+                        continue; // stale mid-queue entry
+                    }
+                    let t = self.slots[slot as usize].started + th - overhead;
+                    if t > self.now + EPS {
+                        if t < best {
+                            best = t;
+                        }
+                        break; // deeper originals cross even later
+                    }
+                    // Already crossed: a standing clone candidate, not a
+                    // future event — keep looking for the next crossing.
+                }
+            }
+            i += 1;
+        }
+        best
+    }
+
+    /// The stage's cached speculation threshold, recomputed only when a
+    /// task of the stage finished since the last read. In `Scan` mode
+    /// the cache is cross-checked against a fresh computation.
+    fn stage_spec_threshold(&mut self, h: usize, spec: &SpecPolicy) -> Option<f64> {
+        let st = &mut self.stages[h];
+        if st.spec_dirty {
+            st.spec_dirty = false;
+            st.spec_th = compute_spec_threshold(st, spec);
+        }
+        let th = st.spec_th;
+        if self.discovery == Discovery::Scan {
+            let fresh = compute_spec_threshold(&self.stages[h], spec);
+            assert_eq!(
+                fresh.map(f64::to_bits),
+                th.map(f64::to_bits),
+                "stale speculation-threshold cache on stage {h}"
+            );
+        }
+        th
+    }
+
+    /// Drop stale front entries of a stage's original queue: finished or
+    /// cloned tasks, and recycled slots (validated against the slot's
+    /// current occupant).
+    fn prune_orig_queue(&mut self, h: usize) {
+        loop {
+            let Some(&(slot, ti)) = self.stages[h].orig_queue.front() else { return };
+            if self.orig_entry_live(h, slot, ti) {
+                return;
+            }
+            self.stages[h].orig_queue.pop_front();
+        }
+    }
+
+    /// A queue entry is live while its slot still holds the same
+    /// original copy and the task is neither done nor cloned.
+    fn orig_entry_live(&self, h: usize, slot: u32, ti: u32) -> bool {
+        let r = &self.slots[slot as usize];
+        r.alive
+            && r.stage as usize == h
+            && r.task_idx == ti
+            && !r.is_clone
+            && !self.stages[h].done[ti as usize]
+            && !self.stages[h].cloned[ti as usize]
+    }
+
+    /// Scan-mode cross-check of the dirty-resource rule: after the
+    /// sweep, every live flow's cached rate must equal a fresh
+    /// fair-share recomputation, bit for bit.
+    fn verify_flow_invariants(&self) {
+        for res in 0..self.flows.len() {
+            let count = self.flows[res].len();
+            if count == 0 {
+                continue;
+            }
+            let rate = self.res_cap(res) / count as f64;
+            for (k, &slot) in self.flows[res].iter().enumerate() {
+                let r = &self.slots[slot as usize];
+                assert!(r.alive && r.is_ps, "flow list holds a dead or non-PS slot {slot}");
+                assert_eq!(r.res_pos as usize, k, "flow back-pointer out of sync");
+                assert_eq!(
+                    r.rate.to_bits(),
+                    rate.to_bits(),
+                    "stale fair-share rate on res {res}: a membership change missed its dirty mark"
+                );
+            }
+        }
+    }
+
+    /// After the clock moved, consume hold deadlines crossed by this
+    /// event; a crossed hold on a stage that is still holding tasks
+    /// re-triggers the admission scan (the stage just degraded to ANY).
+    fn drain_holds(&mut self, prev_now: f64) {
+        if self.policy.locality_wait <= 0.0 {
+            return;
+        }
+        while let Some(&(dl, h)) = self.holds.front() {
+            if dl > self.now + EPS {
+                break;
+            }
+            self.holds.pop_front();
+            let s = &self.stages[h as usize];
+            if dl > prev_now + EPS && s.pending_pref > 0 && !s.pending.is_empty() {
+                self.admit_dirty = true;
+            }
+        }
+    }
+
+    // ---- event processing ----
+
+    /// Collect every copy whose deadline is due and process it (phase
+    /// transition or task finish), in ascending slot order — the
+    /// canonical same-event processing order shared by both discovery
+    /// modes.
+    fn collect_and_process(&mut self) {
+        let cutoff = self.now + EPS;
+        let mut finished = std::mem::take(&mut self.finished_scratch);
+        finished.clear();
+        match self.discovery {
+            Discovery::Indexed => {
+                while let Some((t, slot)) = self.task_heap.peek() {
+                    if t > cutoff {
+                        break;
+                    }
+                    self.task_heap.pop();
+                    self.stats.heap_pops += 1;
+                    finished.push(slot);
+                }
+                finished.sort_unstable();
+            }
+            Discovery::Scan => {
+                for (id, r) in self.slots.iter().enumerate() {
+                    if r.alive && r.deadline <= cutoff {
+                        finished.push(id as u32);
+                    }
+                }
+            }
+        }
+        // Mark the whole batch before processing: a same-event sibling
+        // tie must resolve through the moot path (the first-processed
+        // copy wins; `cancel_sibling` skips collected slots).
+        for &slot in &finished {
+            self.slots[slot as usize].collected = true;
+        }
+        for &slot in &finished {
+            self.process_finished(slot);
+        }
+        self.finished_scratch = finished;
+    }
+
+    /// One copy's current phase ended: release its PS membership, detect
+    /// moot copies (the sibling won at this very event), then enter the
+    /// next phase or finish the task.
+    fn process_finished(&mut self, slot: u32) {
+        self.slots[slot as usize].collected = false;
+        self.end_flow(slot);
+        let (h, ti, node, started) = {
+            let r = &self.slots[slot as usize];
+            (r.stage as usize, r.task_idx as usize, r.node, r.started)
         };
+        if self.stages[h].done[ti] {
+            self.free_slot(slot);
+            self.give_core(node);
+            self.jobs_running[self.stages[h].job] -= 1;
+            return;
+        }
+        self.slots[slot as usize].phase_idx += 1;
+        if !self.enter_next_phase(slot) {
+            let sibling = self.slots[slot as usize].sibling;
+            self.free_slot(slot);
+            self.finish_task(h, ti, node, started, sibling);
+        }
+    }
+
+    /// Start the copy's next non-noop phase; `false` when its phases are
+    /// exhausted. NaN-valued phases are treated as noops — see
+    /// [`Phase::is_noop`].
+    fn enter_next_phase(&mut self, slot: u32) -> bool {
+        loop {
+            let (h, ti, pi, is_clone) = {
+                let r = &self.slots[slot as usize];
+                (r.stage as usize, r.task_idx as usize, r.phase_idx as usize, r.is_clone)
+            };
+            let p = {
+                let st = &self.stages[h];
+                let phases =
+                    if is_clone { st.clone_task_phases(ti) } else { st.task_phases(ti) };
+                match phases.get(pi) {
+                    Some(p) => *p,
+                    None => return false,
+                }
+            };
+            if p.is_noop() {
+                self.slots[slot as usize].phase_idx += 1;
+                continue;
+            }
+            self.stats.phase_transitions += 1;
+            match p {
+                Phase::Cpu { secs } => {
+                    let d = secs / self.cluster.cpu_speed;
+                    self.stages[h].cpu_secs += d;
+                    let dl = self.now + d;
+                    let r = &mut self.slots[slot as usize];
+                    r.is_ps = false;
+                    r.is_cpu = true;
+                    r.deadline = dl;
+                    self.heap_set(slot, dl);
+                }
+                Phase::Fixed { secs } => {
+                    let dl = self.now + secs;
+                    let r = &mut self.slots[slot as usize];
+                    r.is_ps = false;
+                    r.is_cpu = false;
+                    r.deadline = dl;
+                    self.heap_set(slot, dl);
+                }
+                Phase::DiskRead { bytes } | Phase::DiskWrite { bytes } => {
+                    self.start_flow(slot, ResKind::Disk, bytes);
+                }
+                Phase::NetIn { bytes } => {
+                    self.start_flow(slot, ResKind::Nic, bytes);
+                }
+            }
+            return true;
+        }
+    }
+
+    /// Join the slot's node-local resource as a new PS flow. The flow's
+    /// rate and deadline are installed by the dirty sweep before the
+    /// next discovery.
+    fn start_flow(&mut self, slot: u32, kind: ResKind, bytes: f64) {
+        let (node, h) = {
+            let r = &self.slots[slot as usize];
+            (r.node as usize, r.stage as usize)
+        };
+        match kind {
+            ResKind::Disk => self.stages[h].disk_bytes += bytes,
+            ResKind::Nic => self.stages[h].net_bytes += bytes,
+        }
+        let res = self.res_index(node, kind);
+        let pos = self.flows[res].len() as u32;
+        self.flows[res].push(slot);
+        {
+            let r = &mut self.slots[slot as usize];
+            r.is_ps = true;
+            r.is_cpu = false;
+            r.res = kind;
+            r.remaining = bytes;
+            r.updated_at = self.now;
+            r.rate = 0.0;
+            r.deadline = f64::INFINITY;
+            r.res_pos = pos;
+        }
+        self.mark_dirty(res);
+        self.heap_set(slot, f64::INFINITY);
+    }
+
+    /// Withdraw the slot from its resource's flow list (no-op for
+    /// fixed-rate phases) and mark the resource dirty.
+    fn end_flow(&mut self, slot: u32) {
+        let (is_ps, node, kind, pos) = {
+            let r = &self.slots[slot as usize];
+            (r.is_ps, r.node as usize, r.res, r.res_pos as usize)
+        };
+        if !is_ps {
+            return;
+        }
+        self.slots[slot as usize].is_ps = false;
+        let res = self.res_index(node, kind);
+        debug_assert_eq!(self.flows[res][pos], slot);
+        self.flows[res].swap_remove(pos);
+        if let Some(&moved) = self.flows[res].get(pos) {
+            self.slots[moved as usize].res_pos = pos as u32;
+        }
+        self.mark_dirty(res);
+    }
+
+    /// The winning copy of `stage`'s task `ti` finished on `node`
+    /// (started at `started`; `sibling` is the winner's recorded racing
+    /// partner, if a backup was launched). Cancels the losing sibling,
+    /// if it is still running.
+    fn finish_task(&mut self, h: usize, ti: usize, node: NodeId, started: f64, sibling: u32) {
+        self.give_core(node);
+        let job = self.stages[h].job;
+        self.jobs_running[job] -= 1;
+        let dur = self.now - started + self.cluster.task_overhead;
+        let spec_on = self.policy.speculation.is_some();
+        let had_clone = {
+            let st = &mut self.stages[h];
+            st.done[ti] = true;
+            st.task_nodes[ti] = node;
+            st.task_durations.push(dur);
+            if spec_on {
+                let i = st.durations_sorted.partition_point(|&x| x < dur);
+                st.durations_sorted.insert(i, dur);
+                st.spec_dirty = true;
+            }
+            st.unfinished -= 1;
+            st.cloned[ti]
+        };
+        if self.stages[h].unfinished == 0 {
+            let due = self.now + self.stages[h].completion_overhead;
+            self.completions.set(h as u32, due);
+        }
         if had_clone {
-            self.cancel_sibling(stage, task_idx);
+            self.cancel_sibling(h, ti, sibling);
         }
     }
 
     /// First-finisher-wins: cancel the still-running sibling copy of a
     /// speculated task — free its core, withdraw its processor-shared
     /// flow mid-stream, and refund the stage's meters for the work the
-    /// loser never completed (phases it never entered were never metered).
-    fn cancel_sibling(&mut self, stage: StageHandle, task_idx: usize) {
-        let Some(j) =
-            self.running.iter().position(|r| r.stage == stage && r.task_idx == task_idx)
-        else {
-            return; // the sibling finished at this same event: handled as moot
+    /// loser never completed (phases it never entered were never
+    /// metered). `slot` is the winner's recorded sibling link, validated
+    /// here because the loser may have finished at this very event
+    /// (collected ⇒ handled as a moot finisher, no refunds) or already
+    /// been recycled.
+    fn cancel_sibling(&mut self, h: usize, ti: usize, slot: u32) {
+        if slot == SLOT_NONE {
+            return;
+        }
+        {
+            let r = &self.slots[slot as usize];
+            if !r.alive || r.collected || r.stage as usize != h || r.task_idx as usize != ti {
+                return; // the sibling finished at this same event: moot
+            }
+        }
+        let (is_ps, is_cpu, kind, node, left) = {
+            let r = &self.slots[slot as usize];
+            let left = if r.is_ps {
+                // Roll the loser's flow to now before refunding (its
+                // resource may have been clean — and unrolled — for a
+                // while).
+                (r.remaining - r.rate * (self.now - r.updated_at)).max(0.0)
+            } else {
+                (r.deadline - self.now).max(0.0)
+            };
+            (r.is_ps, r.is_cpu, r.res, r.node, left)
         };
-        let r = self.running.swap_remove(j);
-        if r.is_ps {
-            match r.res {
-                ResKind::Disk => {
-                    self.disk_active[r.node as usize] -= 1;
-                    self.stages[stage].disk_bytes -= r.remaining.max(0.0);
-                }
-                ResKind::Nic => {
-                    self.nic_active[r.node as usize] -= 1;
-                    self.stages[stage].net_bytes -= r.remaining.max(0.0);
-                }
+        if is_ps {
+            match kind {
+                ResKind::Disk => self.stages[h].disk_bytes -= left,
+                ResKind::Nic => self.stages[h].net_bytes -= left,
             }
-        } else if r.is_cpu {
-            self.stages[stage].cpu_secs -= (r.end_time - self.now).max(0.0);
+            self.end_flow(slot);
+        } else if is_cpu {
+            self.stages[h].cpu_secs -= left;
         }
-        self.release_core(stage, r.node);
+        self.free_slot(slot);
+        self.give_core(node);
+        self.jobs_running[self.stages[h].job] -= 1;
     }
 
-    fn any_free_core(&self) -> bool {
-        self.free_cores.iter().any(|&c| c > 0)
-    }
-
-    /// Emit the earliest stage completion that is due at the current
-    /// clock (ties: lowest handle).
+    /// Emit the earliest stage completion due at the current clock
+    /// (ties: lowest handle, by the heap's id tie-break).
     fn pop_due_completion(&mut self) -> Option<StageCompletion> {
-        let mut best: Option<(f64, StageHandle)> = None;
-        for (h, s) in self.stages.iter().enumerate() {
-            if s.emitted {
-                continue;
-            }
-            if let Some(due) = s.completion_due {
-                if due <= self.now + EPS && best.map(|(bd, _)| due < bd).unwrap_or(true) {
-                    best = Some((due, h));
-                }
-            }
+        let (due, h) = self.completions.peek()?;
+        if due > self.now + EPS {
+            return None;
         }
-        let (due, h) = best?;
-        let st = &mut self.stages[h];
-        st.emitted = true;
+        self.completions.pop();
+        self.stats.completions += 1;
+        let st = &mut self.stages[h as usize];
         let stats = StageStats {
             duration: due - st.submitted_at,
             task_time: Summary::from(std::mem::take(&mut st.task_durations)),
             cpu_secs: st.cpu_secs,
             disk_bytes: st.disk_bytes,
             net_bytes: st.net_bytes,
-            tasks: st.phases.len(),
+            tasks: st.tasks,
             locality_hits: st.locality_hits,
             speculated: st.speculated,
         };
         Some(StageCompletion {
-            handle: h,
+            handle: h as usize,
             job: st.job,
             at: due,
             stats,
             task_nodes: std::mem::take(&mut st.task_nodes),
         })
     }
+
+    // ---- admission & speculation ----
 
     /// The stage's first admissible pending task under the current free
     /// cores: a task launches NODE_LOCAL when one of its preferred nodes
@@ -806,12 +1506,12 @@ impl<'a> EventSim<'a> {
         let expired = self.policy.locality_wait <= 0.0
             || self.now + EPS >= st.submitted_at + self.policy.locality_wait;
         for (pos, &ti) in st.pending.iter().enumerate() {
-            let prefs = &st.preferred[ti];
+            let prefs = st.task_prefs(ti as usize);
             if let Some(&n) = prefs.iter().find(|&&n| self.free_cores[n as usize % nodes] > 0) {
-                return Some((pos, ti, Some((n as usize % nodes) as NodeId)));
+                return Some((pos, ti as usize, Some((n as usize % nodes) as NodeId)));
             }
             if prefs.is_empty() || expired {
-                return Some((pos, ti, None));
+                return Some((pos, ti as usize, None));
             }
         }
         None
@@ -825,29 +1525,36 @@ impl<'a> EventSim<'a> {
         }
         self.admit_dirty = false;
         loop {
-            if !self.any_free_core() {
+            if self.free_core_total <= 0 {
                 break;
             }
             // Per-stage admissible picks under the current free cores and
-            // locality state.
+            // locality state; `pending_list` keeps the scan to stages
+            // that still have pending tasks.
             let mut candidates: Vec<StageView> = Vec::new();
             let mut picks: Vec<(usize, usize, Option<NodeId>)> = Vec::new();
-            for (h, s) in self.stages.iter().enumerate() {
-                if s.pending.is_empty() {
+            let mut i = 0;
+            while i < self.pending_list.len() {
+                let h = self.pending_list[i] as usize;
+                if self.stages[h].pending.is_empty() {
+                    self.pending_list.remove(i); // keeps ascending handle order
                     continue;
                 }
-                let Some(pick) = self.find_admissible(s) else { continue };
-                let pool = self.pools.get(s.job).copied().unwrap_or_default();
-                candidates.push(StageView {
-                    handle: h,
-                    job: s.job,
-                    seq: s.seq,
-                    pending: s.pending.len(),
-                    job_running: self.jobs_running[s.job],
-                    weight: pool.weight,
-                    min_share: pool.min_share,
-                });
-                picks.push(pick);
+                let s = &self.stages[h];
+                if let Some(pick) = self.find_admissible(s) {
+                    let pool = self.pools.get(s.job).copied().unwrap_or_default();
+                    candidates.push(StageView {
+                        handle: h,
+                        job: s.job,
+                        seq: s.seq,
+                        pending: s.pending.len(),
+                        job_running: self.jobs_running[s.job],
+                        weight: pool.weight,
+                        min_share: pool.min_share,
+                    });
+                    picks.push(pick);
+                }
+                i += 1;
             }
             if candidates.is_empty() {
                 break;
@@ -863,8 +1570,8 @@ impl<'a> EventSim<'a> {
             {
                 let st = &mut self.stages[h];
                 let removed = st.pending.remove(pos).expect("pick position is valid");
-                debug_assert_eq!(removed, ti);
-                if !st.preferred[ti].is_empty() {
+                debug_assert_eq!(removed as usize, ti);
+                if st.pref_off[ti + 1] > st.pref_off[ti] {
                     st.pending_pref -= 1;
                 }
             }
@@ -875,40 +1582,57 @@ impl<'a> EventSim<'a> {
             if is_local {
                 self.stages[h].locality_hits += 1;
             }
-            self.free_cores[node as usize] -= 1;
-            self.jobs_running[self.stages[h].job] += 1;
-            let r = Running {
-                stage: h,
-                task_idx: ti,
-                node,
-                phase_idx: 0,
-                remaining: 0.0,
-                end_time: 0.0,
-                is_ps: false,
-                res: ResKind::Disk,
-                started: self.now,
-                rate: 0.0,
-                is_cpu: false,
-                is_clone: false,
-            };
-            let mut meter = Meter::default();
-            let entered = {
-                let st = &self.stages[h];
-                enter_phase(
-                    self.cluster,
-                    &st.phases[ti],
-                    r,
-                    self.now,
-                    &mut self.disk_active,
-                    &mut self.nic_active,
-                    &mut meter,
-                )
-            };
-            self.apply_meter(h, &meter);
-            match entered {
-                Some(run) => self.running.push(run),
-                None => self.finish_task(h, ti, node, self.now), // zero-work task
+            self.launch_copy(h, ti, node, false, SLOT_NONE);
+        }
+    }
+
+    /// Launch one task copy (original or speculative clone) on `node`:
+    /// takes the core, allocates a slot, links the speculation-race
+    /// sibling (clones pass the original's slot in `sibling`), registers
+    /// speculation bookkeeping, and enters the first phase. Zero-work
+    /// copies finish on the spot.
+    fn launch_copy(&mut self, h: usize, ti: usize, node: NodeId, is_clone: bool, sibling: u32) {
+        self.free_cores[node as usize] -= 1;
+        self.free_core_total -= 1;
+        self.jobs_running[self.stages[h].job] += 1;
+        self.stats.task_launches += 1;
+        let slot = self.alloc_slot(Running {
+            stage: h as u32,
+            task_idx: ti as u32,
+            node,
+            phase_idx: 0,
+            res_pos: 0,
+            started: self.now,
+            deadline: f64::INFINITY,
+            remaining: 0.0,
+            updated_at: self.now,
+            rate: 0.0,
+            is_ps: false,
+            res: ResKind::Disk,
+            is_cpu: false,
+            is_clone,
+            alive: true,
+            collected: false,
+            sibling,
+        });
+        if sibling != SLOT_NONE {
+            // Back-link the original so whichever copy wins can cancel
+            // the other in O(1).
+            self.slots[sibling as usize].sibling = slot;
+        }
+        if !is_clone && self.policy.speculation.is_some() {
+            let st = &mut self.stages[h];
+            st.orig_queue.push_back((slot, ti as u32));
+            if !st.in_spec_list {
+                st.in_spec_list = true;
+                self.spec_list.push(h as u32);
             }
+        }
+        if !self.enter_next_phase(slot) {
+            // Zero-work copy: wins (or finishes) immediately.
+            let sib = self.slots[slot as usize].sibling;
+            self.free_slot(slot);
+            self.finish_task(h, ti, node, self.now, sib);
         }
     }
 
@@ -916,76 +1640,128 @@ impl<'a> EventSim<'a> {
     /// speculation quantile, any running original whose elapsed time
     /// exceeds multiplier × the median successful duration is cloned onto
     /// a *different* node (first finisher wins; see `cancel_sibling`).
-    /// At most one backup per task.
+    /// At most one backup per task. The launch-ordered original queues
+    /// make candidate discovery O(candidates) instead of O(running).
     fn speculate(&mut self) {
         let Some(spec) = self.policy.speculation else { return };
-        if !self.any_free_core() {
+        if self.free_core_total <= 0 {
             return;
         }
         let overhead = self.cluster.task_overhead;
-        let mut memo: Vec<Option<Option<f64>>> = vec![None; self.stages.len()];
-        let mut cands: Vec<(StageHandle, usize, NodeId)> = Vec::new();
-        for r in &self.running {
-            if r.is_clone {
+        let mut cands: Vec<(usize, usize, NodeId, u32)> = Vec::new();
+        let mut i = 0;
+        while i < self.spec_list.len() {
+            let h = self.spec_list[i] as usize;
+            self.prune_orig_queue(h);
+            if self.stages[h].orig_queue.is_empty() {
+                self.stages[h].in_spec_list = false;
+                self.spec_list.swap_remove(i);
                 continue;
             }
-            let st = &self.stages[r.stage];
-            if st.done[r.task_idx] || st.cloned[r.task_idx] {
-                continue;
+            if let Some(th) = self.stage_spec_threshold(h, &spec) {
+                let st = &self.stages[h];
+                for &(slot, ti) in st.orig_queue.iter() {
+                    let r = &self.slots[slot as usize];
+                    let live = r.alive
+                        && r.stage as usize == h
+                        && r.task_idx == ti
+                        && !r.is_clone
+                        && !st.done[ti as usize]
+                        && !st.cloned[ti as usize];
+                    if !live {
+                        continue; // stale mid-queue entry
+                    }
+                    if self.now - r.started + overhead >= th - EPS {
+                        cands.push((h, ti as usize, r.node, slot));
+                    } else {
+                        // `started` is non-decreasing along the queue, so
+                        // every deeper original is younger — none past
+                        // the threshold.
+                        break;
+                    }
+                }
             }
-            let th = *memo[r.stage].get_or_insert_with(|| spec_threshold(st, &spec));
-            let Some(th) = th else { continue };
-            if self.now - r.started + overhead >= th - EPS {
-                cands.push((r.stage, r.task_idx, r.node));
-            }
+            i += 1;
         }
+        // (h, ti) is unique per candidate, so the node/slot tail of the
+        // sort key never decides an ordering.
         cands.sort_unstable();
-        for (h, ti, orig) in cands {
+        for (h, ti, orig_node, orig_slot) in cands {
             // A backup must land on a different machine than the copy it
             // races; if none has a free core, retry at a later event.
-            let Some(node) = self.pick_node_excluding(orig) else { continue };
-            self.free_cores[node as usize] -= 1;
-            self.jobs_running[self.stages[h].job] += 1;
+            let Some(node) = self.pick_node_excluding(orig_node) else { continue };
             {
                 let st = &mut self.stages[h];
                 st.cloned[ti] = true;
                 st.speculated += 1;
             }
-            let r = Running {
-                stage: h,
-                task_idx: ti,
-                node,
-                phase_idx: 0,
-                remaining: 0.0,
-                end_time: 0.0,
-                is_ps: false,
-                res: ResKind::Disk,
-                started: self.now,
-                rate: 0.0,
-                is_cpu: false,
-                is_clone: true,
-            };
-            let mut meter = Meter::default();
-            let entered = {
-                let st = &self.stages[h];
-                enter_phase(
-                    self.cluster,
-                    &st.clone_phases[ti],
-                    r,
-                    self.now,
-                    &mut self.disk_active,
-                    &mut self.nic_active,
-                    &mut meter,
-                )
-            };
-            self.apply_meter(h, &meter);
-            match entered {
-                Some(run) => self.running.push(run),
-                None => self.finish_task(h, ti, node, self.now), // zero-work clone wins
-            }
-            if !self.any_free_core() {
+            self.launch_copy(h, ti, node, true, orig_slot);
+            if self.free_core_total <= 0 {
                 break;
             }
+        }
+    }
+
+    // ---- slots, cores, resources ----
+
+    fn alloc_slot(&mut self, r: Running) -> u32 {
+        self.live += 1;
+        if let Some(slot) = self.free_slots.pop() {
+            self.slots[slot as usize] = r;
+            slot
+        } else {
+            self.slots.push(r);
+            (self.slots.len() - 1) as u32
+        }
+    }
+
+    fn free_slot(&mut self, slot: u32) {
+        debug_assert!(self.slots[slot as usize].alive);
+        self.slots[slot as usize].alive = false;
+        self.free_slots.push(slot);
+        self.live -= 1;
+        if self.discovery == Discovery::Indexed {
+            self.task_heap.remove(slot);
+        }
+    }
+
+    /// Return a core to `node` and re-arm the admission scan.
+    fn give_core(&mut self, node: NodeId) {
+        self.free_cores[node as usize] += 1;
+        self.free_core_total += 1;
+        self.admit_dirty = true;
+    }
+
+    fn heap_set(&mut self, slot: u32, key: f64) {
+        if self.discovery != Discovery::Indexed {
+            return;
+        }
+        if self.task_heap.set(slot, key) {
+            self.stats.heap_pushes += 1;
+        } else {
+            self.stats.heap_updates += 1;
+        }
+    }
+
+    fn res_index(&self, node: usize, kind: ResKind) -> usize {
+        match kind {
+            ResKind::Disk => node,
+            ResKind::Nic => self.free_cores.len() + node,
+        }
+    }
+
+    fn res_cap(&self, res: usize) -> f64 {
+        if res < self.free_cores.len() {
+            self.cluster.disk_bw
+        } else {
+            self.cluster.net_bw
+        }
+    }
+
+    fn mark_dirty(&mut self, res: usize) {
+        if !self.res_dirty[res] {
+            self.res_dirty[res] = true;
+            self.dirty.push(res as u32);
         }
     }
 
@@ -1017,24 +1793,25 @@ impl<'a> EventSim<'a> {
     }
 }
 
-/// Scale the CPU phases of a task's plan by `factor` (jitter and the
-/// straggler tail apply to compute, not to I/O volumes — bytes moved are
-/// a property of the data, not of the executor's health).
-fn scale_cpu(phases: &[Phase], factor: f64) -> Vec<Phase> {
-    phases
-        .iter()
-        .map(|p| match *p {
-            Phase::Cpu { secs } => Phase::Cpu { secs: secs * factor },
-            other => other,
-        })
-        .collect()
+/// Scale the CPU phases of one task's slice of the phase arena by
+/// `factor` (jitter and the straggler tail apply to compute, not to I/O
+/// volumes — bytes moved are a property of the data, not of the
+/// executor's health).
+fn scale_cpu_in_place(phases: &mut [Phase], factor: f64) {
+    for p in phases {
+        if let Phase::Cpu { secs } = p {
+            *secs *= factor;
+        }
+    }
 }
 
 /// The stage's speculation threshold: `multiplier × median successful
 /// duration`, or `None` while fewer than `quantile` of its tasks are
-/// done (Spark's `minFinishedForSpeculation`).
-fn spec_threshold(st: &StageRt, spec: &SpecPolicy) -> Option<f64> {
-    let n = st.phases.len();
+/// done (Spark's `minFinishedForSpeculation`). The median is the upper
+/// median (Spark's `durations(medianIndex)`), read off the incrementally
+/// sorted duration list.
+fn compute_spec_threshold(st: &StageRt, spec: &SpecPolicy) -> Option<f64> {
+    let n = st.tasks;
     if n == 0 || st.clone_phases.is_empty() {
         return None;
     }
@@ -1043,70 +1820,8 @@ fn spec_threshold(st: &StageRt, spec: &SpecPolicy) -> Option<f64> {
     if done < min_done {
         return None;
     }
-    Some(spec.multiplier * median(&st.task_durations))
-}
-
-/// Upper median (Spark's `durations(medianIndex)`); `xs` must be
-/// non-empty.
-fn median(xs: &[f64]) -> f64 {
-    debug_assert!(!xs.is_empty());
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(Ordering::Equal));
-    v[v.len() / 2]
-}
-
-/// Start the task's next non-noop phase (or return `None` when all
-/// phases are done). NaN-valued phases are treated as noops — see
-/// [`Phase::is_noop`].
-fn enter_phase(
-    cluster: &ClusterSpec,
-    phases: &[Phase],
-    mut r: Running,
-    now: f64,
-    disk_active: &mut [u32],
-    nic_active: &mut [u32],
-    meter: &mut Meter,
-) -> Option<Running> {
-    loop {
-        let Some(p) = phases.get(r.phase_idx) else {
-            return None; // all phases done
-        };
-        if p.is_noop() {
-            r.phase_idx += 1;
-            continue;
-        }
-        match *p {
-            Phase::Cpu { secs } => {
-                let d = secs / cluster.cpu_speed;
-                meter.cpu_secs += d;
-                r.is_ps = false;
-                r.is_cpu = true;
-                r.end_time = now + d;
-            }
-            Phase::Fixed { secs } => {
-                r.is_ps = false;
-                r.is_cpu = false;
-                r.end_time = now + secs;
-            }
-            Phase::DiskRead { bytes } | Phase::DiskWrite { bytes } => {
-                meter.disk_bytes += bytes;
-                r.is_ps = true;
-                r.is_cpu = false;
-                r.res = ResKind::Disk;
-                r.remaining = bytes;
-                disk_active[r.node as usize] += 1;
-            }
-            Phase::NetIn { bytes } => {
-                meter.net_bytes += bytes;
-                r.is_ps = true;
-                r.is_cpu = false;
-                r.res = ResKind::Nic;
-                r.remaining = bytes;
-                nic_active[r.node as usize] += 1;
-            }
-        }
-        return Some(r);
-    }
+    debug_assert_eq!(st.durations_sorted.len(), done);
+    Some(spec.multiplier * st.durations_sorted[st.durations_sorted.len() / 2])
 }
 
 #[cfg(test)]
@@ -1126,6 +1841,75 @@ mod tests {
     fn cpu_tasks(n: usize, secs: f64) -> Vec<TaskSpec> {
         (0..n).map(|_| TaskSpec::new(vec![Phase::Cpu { secs }])).collect()
     }
+
+    // ---- the indexed queue itself ----
+
+    #[test]
+    fn time_heap_orders_updates_and_removals() {
+        let mut h = TimeHeap::new();
+        assert!(h.peek().is_none());
+        assert!(h.set(3, 5.0));
+        assert!(h.set(1, 2.0));
+        assert!(h.set(7, 9.0));
+        assert_eq!(h.peek(), Some((2.0, 1)));
+        // decrease-key moves an entry to the front...
+        assert!(!h.set(7, 1.0));
+        assert_eq!(h.peek(), Some((1.0, 7)));
+        // ...increase-key pushes it back down.
+        assert!(!h.set(7, 10.0));
+        assert_eq!(h.pop(), Some((2.0, 1)));
+        h.remove(3);
+        h.remove(3); // double-remove is a no-op
+        assert_eq!(h.pop(), Some((10.0, 7)));
+        assert!(h.pop().is_none());
+        assert_eq!(h.len(), 0);
+    }
+
+    #[test]
+    fn time_heap_ties_break_on_id() {
+        let mut h = TimeHeap::new();
+        for id in [9u32, 4, 6, 1] {
+            h.set(id, 3.25);
+        }
+        let order: Vec<u32> = std::iter::from_fn(|| h.pop().map(|(_, id)| id)).collect();
+        assert_eq!(order, vec![1, 4, 6, 9], "equal keys must pop in id order");
+    }
+
+    #[test]
+    fn time_heap_matches_naive_min_under_random_ops() {
+        let mut h = TimeHeap::new();
+        let mut naive: Vec<(u32, f64)> = Vec::new();
+        let mut rng = Prng::new(0xBEEF);
+        for _ in 0..2000 {
+            let id = rng.below(64) as u32;
+            match rng.below(3) {
+                0 | 1 => {
+                    let key = rng.f64() * 100.0;
+                    h.set(id, key);
+                    if let Some(e) = naive.iter_mut().find(|(i, _)| *i == id) {
+                        e.1 = key;
+                    } else {
+                        naive.push((id, key));
+                    }
+                }
+                _ => {
+                    h.remove(id);
+                    naive.retain(|(i, _)| *i != id);
+                }
+            }
+            let expect = naive
+                .iter()
+                .map(|&(i, k)| (k, i))
+                .min_by(|a, b| {
+                    a.0.partial_cmp(&b.0).unwrap().then_with(|| a.1.cmp(&b.1))
+                });
+            assert_eq!(h.peek(), expect);
+            assert_eq!(h.len(), naive.len());
+            assert!(naive.iter().all(|&(i, _)| h.contains(i)));
+        }
+    }
+
+    // ---- scheduling semantics (indexed core) ----
 
     #[test]
     fn two_stages_interleave_on_shared_cores() {
@@ -1441,6 +2225,64 @@ mod tests {
         assert_eq!(clones, clones2);
     }
 
+    #[test]
+    fn crossing_behind_a_blocked_front_original_still_fires() {
+        // Regression: speculation events must not stop at the front of
+        // the launch-ordered queue. Setup (2 nodes × 2 cores, all
+        // originals straggle 4×, clones healthy): a blocker job pins one
+        // node-1 core for 100 s; the main job runs two 1 s quorum tasks,
+        // straggler A (100 s, node 0) and straggler B (10 s, node 1,
+        // launched at t=1). A crosses the 2 s threshold at t=2 but can
+        // never clone (the only free core is on its own node); B crosses
+        // at t=3 — that crossing must fire as an event even though A
+        // sits uncloneable at the queue front. Then: B's healthy clone
+        // (2.5 s) wins at 5.5, freeing a node-1 core, A's clone wins at
+        // 30.5, and the stage completes at 30.5 with 2 clones. A core
+        // that only watches queue fronts idles until B's original
+        // finishes at t=11 and completes at 36 instead.
+        let mut c = quiet();
+        c.nodes = 2;
+        c.cores_per_node = 2;
+        let opts = SimOpts {
+            jitter: 0.0,
+            seed: 5,
+            straggler: Some(super::super::Straggler { prob: 1.0, factor: 4.0 }),
+        };
+        for discovery in [Discovery::Scan, Discovery::Indexed] {
+            let mut sim = EventSim::with_discovery(
+                &c,
+                Box::new(FifoScheduler),
+                SimPolicy {
+                    locality_wait: 0.0,
+                    speculation: Some(SpecPolicy { quantile: 0.4, multiplier: 2.0 }),
+                },
+                discovery,
+            );
+            sim.submit(0, &[TaskSpec::new(vec![Phase::Cpu { secs: 25.0 }]).on(1)], &opts);
+            sim.submit(
+                1,
+                &[
+                    TaskSpec::new(vec![Phase::Cpu { secs: 0.25 }]).on(0),
+                    TaskSpec::new(vec![Phase::Cpu { secs: 0.25 }]).on(1),
+                    TaskSpec::new(vec![Phase::Cpu { secs: 25.0 }]).on(0), // A
+                    TaskSpec::new(vec![Phase::Cpu { secs: 2.5 }]).on(1),  // B
+                ],
+                &opts,
+            );
+            let done = sim.drain();
+            let main = done.iter().find(|d| d.job == 1).unwrap();
+            assert_eq!(main.stats.speculated, 2, "{discovery:?}: both stragglers clone");
+            assert!(
+                (main.at - 30.5).abs() < 1e-9,
+                "{discovery:?}: B's masked crossing must fire at t=3 \
+                 (clone chain completes at 30.5, not 36): {}",
+                main.at
+            );
+            let blocker = done.iter().find(|d| d.job == 0).unwrap();
+            assert!((blocker.at - 100.0).abs() < 1e-9, "{}", blocker.at);
+        }
+    }
+
     // ---- task-granular features: weighted FAIR pools ----
 
     #[test]
@@ -1531,5 +2373,175 @@ mod tests {
         let a = mk();
         let b = mk();
         assert_eq!(a, b, "composed features must reproduce bit-identically");
+    }
+
+    // ---- the hot-path overhaul's own contracts ----
+
+    /// Drain a core in each discovery mode over the same submissions and
+    /// compare the full completion streams bitwise.
+    fn drain_both(
+        c: &ClusterSpec,
+        policy: SimPolicy,
+        fair: bool,
+        submit: impl Fn(&mut EventSim<'_>),
+    ) -> (Vec<StageCompletion>, SimStats, Vec<StageCompletion>, SimStats) {
+        let mk = || -> Box<dyn Scheduler> {
+            if fair { Box::new(FairScheduler) } else { Box::new(FifoScheduler) }
+        };
+        let mut scan = EventSim::with_discovery(c, mk(), policy, Discovery::Scan);
+        submit(&mut scan);
+        let scan_done = scan.drain();
+        let scan_stats = scan.stats();
+        let mut idx = EventSim::with_discovery(c, mk(), policy, Discovery::Indexed);
+        submit(&mut idx);
+        let idx_done = idx.drain();
+        let idx_stats = idx.stats();
+        (scan_done, scan_stats, idx_done, idx_stats)
+    }
+
+    fn assert_streams_identical(a: &[StageCompletion], b: &[StageCompletion]) {
+        assert_eq!(a.len(), b.len(), "completion counts diverged");
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.handle, y.handle);
+            assert_eq!(x.job, y.job);
+            assert_eq!(x.at.to_bits(), y.at.to_bits(), "stage {} clock diverged", x.handle);
+            assert_eq!(x.stats.duration.to_bits(), y.stats.duration.to_bits());
+            assert_eq!(x.stats.cpu_secs.to_bits(), y.stats.cpu_secs.to_bits());
+            assert_eq!(x.stats.disk_bytes.to_bits(), y.stats.disk_bytes.to_bits());
+            assert_eq!(x.stats.net_bytes.to_bits(), y.stats.net_bytes.to_bits());
+            assert_eq!(x.stats.locality_hits, y.stats.locality_hits);
+            assert_eq!(x.stats.speculated, y.stats.speculated);
+            assert_eq!(x.task_nodes, y.task_nodes);
+        }
+    }
+
+    #[test]
+    fn indexed_discovery_matches_scan_reference_bitwise() {
+        // Everything on at once: locality holds, speculation, straggler
+        // tail, FAIR pools, mixed CPU/disk/NIC phases across three jobs.
+        let c = ClusterSpec::mini();
+        let policy = SimPolicy {
+            locality_wait: 0.3,
+            speculation: Some(SpecPolicy { quantile: 0.5, multiplier: 1.4 }),
+        };
+        let (s, ss, i, is) = drain_both(&c, policy, true, |sim| {
+            sim.set_pool(2, PoolSpec { weight: 2.0, min_share: 1 });
+            for j in 0..3usize {
+                let tasks: Vec<TaskSpec> = (0..14)
+                    .map(|k| {
+                        TaskSpec::new(vec![
+                            Phase::Cpu { secs: 0.1 + (k % 5) as f64 * 0.04 },
+                            Phase::DiskRead { bytes: 2e6 * (1 + k % 3) as f64 },
+                            Phase::NetIn { bytes: 1e6 },
+                            Phase::DiskWrite { bytes: 1.5e6 },
+                        ])
+                        .on((k % 4) as NodeId)
+                    })
+                    .collect();
+                sim.submit(
+                    j,
+                    &tasks,
+                    &SimOpts {
+                        jitter: 0.06,
+                        seed: 100 + j as u64,
+                        straggler: Some(super::super::Straggler { prob: 0.25, factor: 7.0 }),
+                    },
+                );
+            }
+        });
+        assert_streams_identical(&s, &i);
+        // Same events, same work — different discovery costs.
+        assert_eq!(ss.events, is.events);
+        assert_eq!(ss.task_launches, is.task_launches);
+        assert_eq!(ss.flow_rolls, is.flow_rolls);
+        assert_eq!(ss.heap_ops(), 0, "scan mode must not touch the heap");
+        assert!(is.heap_ops() > 0, "indexed mode must use the heap");
+    }
+
+    #[test]
+    fn indexed_core_saves_scan_work() {
+        // A disk-heavy many-wave stage: most events touch one node's
+        // flows, so the dirty rule must roll far fewer flows than a
+        // per-event rescan of every live copy would.
+        let c = ClusterSpec::mini();
+        let mut sim = EventSim::new(&c, Box::new(FifoScheduler));
+        let tasks: Vec<TaskSpec> = (0..64)
+            .map(|k| {
+                TaskSpec::new(vec![
+                    Phase::Cpu { secs: 0.02 + (k % 7) as f64 * 0.01 },
+                    Phase::DiskWrite { bytes: 4e6 },
+                ])
+            })
+            .collect();
+        sim.submit(0, &tasks, &SimOpts { jitter: 0.05, seed: 3, straggler: None });
+        sim.drain();
+        let st = sim.stats();
+        assert!(st.events > 0);
+        assert!(
+            st.flow_rolls < st.live_copy_event_sum,
+            "dirty-resource rolls ({}) must undercut events × running ({})",
+            st.flow_rolls,
+            st.live_copy_event_sum
+        );
+        assert!(st.scan_work_saved() > 0);
+    }
+
+    #[test]
+    fn shaped_submission_matches_taskspec_submission() {
+        // The engine's fast path (shared template + one preferred node
+        // per task) must reproduce the generic TaskSpec path bit for bit,
+        // jitter, stragglers and speculation included.
+        let c = ClusterSpec::mini();
+        let policy = SimPolicy {
+            locality_wait: 0.2,
+            speculation: Some(SpecPolicy { quantile: 0.5, multiplier: 1.5 }),
+        };
+        let template = [
+            Phase::Fixed { secs: 0.01 },
+            Phase::NetIn { bytes: 1e6 },
+            Phase::Cpu { secs: 0.15 },
+            Phase::DiskWrite { bytes: 2e6 },
+        ];
+        let prefs: Vec<NodeId> = (0..20).map(|k| (k % 4) as NodeId).collect();
+        let opts = SimOpts {
+            jitter: 0.07,
+            seed: 0xAB,
+            straggler: Some(super::super::Straggler { prob: 0.3, factor: 5.0 }),
+        };
+        let via_tasks = {
+            let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+            let tasks: Vec<TaskSpec> = prefs
+                .iter()
+                .map(|&n| TaskSpec::new(template.to_vec()).on(n))
+                .collect();
+            sim.submit(0, &tasks, &opts);
+            sim.drain()
+        };
+        let via_shape = {
+            let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+            sim.submit_shaped(
+                0,
+                &StageSpec { template: &template, preferred: &prefs, tasks: prefs.len() },
+                &opts,
+            );
+            sim.drain()
+        };
+        assert_streams_identical(&via_tasks, &via_shape);
+        // And without preferences.
+        let a = {
+            let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+            sim.submit(0, &cpu_tasks(9, 0.3), &opts);
+            sim.drain()
+        };
+        let b = {
+            let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+            sim.submit_shaped(
+                0,
+                &StageSpec { template: &[Phase::Cpu { secs: 0.3 }], preferred: &[], tasks: 9 },
+                &opts,
+            );
+            sim.drain()
+        };
+        assert_streams_identical(&a, &b);
     }
 }

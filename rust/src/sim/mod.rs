@@ -14,9 +14,11 @@
 //!   concurrent tasks, and a task holds its core for its entire lifetime
 //!   (Spark task threads block on I/O);
 //! * **disk and NIC are processor-sharing resources** — all flows active
-//!   on a node's disk (or receive NIC) share its bandwidth equally, and
-//!   rates are recomputed at every admission/completion event (a standard
-//!   fluid-flow DES);
+//!   on a node's disk (or receive NIC) share its bandwidth equally; rates
+//!   only change when a flow enters or leaves the resource, so the core
+//!   re-rolls exactly the flows on resources an event touched (the
+//!   dirty-resource rule of the indexed event queue — a standard
+//!   fluid-flow DES, discovered in O(log n));
 //! * **CPU phases run at a fixed rate** (one dedicated core, scaled by
 //!   `cpu_speed`);
 //! * a deterministic per-task **jitter** models run-to-run variance so the
@@ -35,8 +37,9 @@
 pub mod event;
 
 pub use event::{
-    scheduler_for, EventSim, FairScheduler, FifoScheduler, JobId, PoolSpec, Scheduler,
-    SchedulerMode, SimPolicy, SpecPolicy, StageCompletion, StageHandle, StageView,
+    scheduler_for, Discovery, EventSim, FairScheduler, FifoScheduler, JobId, PoolSpec, Scheduler,
+    SchedulerMode, SimPolicy, SimStats, SpecPolicy, StageCompletion, StageHandle, StageSpec,
+    StageView,
 };
 
 use crate::cluster::{ClusterSpec, NodeId};

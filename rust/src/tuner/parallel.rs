@@ -13,6 +13,14 @@
 //! bottleneck). The generic [`map`](TrialExecutor::map) core also
 //! serves as the worker pool of the tuning service
 //! (`service::server`), which fans whole sessions over it.
+//!
+//! Plan-once / price-many: `eval` closures should capture a shared
+//! [`Arc<JobPlan>`](crate::engine::JobPlan) (via
+//! [`crate::engine::prepare`]) and price it with
+//! [`crate::engine::run_planned`] — the plan is immutable and `Sync`, so
+//! every worker thread prices the same planning output instead of
+//! re-planning the job per trial. All in-tree callers (experiment
+//! drivers, the service layer, the benches) are wired this way.
 
 use crate::conf::SparkConf;
 use crate::engine::Job;

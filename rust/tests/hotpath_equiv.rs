@@ -1,0 +1,337 @@
+//! Golden equivalence suite for the event-core hot-path overhaul.
+//!
+//! The indexed event queue (hand-rolled min-heap + dirty-resource rate
+//! propagation + launch-ordered speculation queues) must be a pure
+//! *performance* change: for any scenario, the [`Discovery::Indexed`]
+//! core reproduces the self-verifying [`Discovery::Scan`] reference —
+//! which rescans every live copy per event and asserts the cached
+//! fair-share rates fresh — **bit for bit**, across FIFO/FAIR,
+//! delay scheduling, speculation, the straggler model, mid-flight
+//! submission, and degenerate stages. Likewise, plan-once pricing
+//! (`prepare` + `run_planned`) must be bit-identical to re-planning per
+//! trial, for solo runs, multi-tenant batches, and crashing confs.
+
+use sparktune::cluster::{ClusterSpec, NodeId};
+use sparktune::conf::SparkConf;
+use sparktune::engine::{prepare, run, run_all, run_all_planned, run_planned, Job, JobPlan};
+use sparktune::sim::{
+    scheduler_for, Discovery, EventSim, PoolSpec, SchedulerMode, SimOpts, SimPolicy, SimStats,
+    SpecPolicy, StageCompletion, Straggler, TaskSpec,
+};
+use sparktune::sim::Phase;
+use sparktune::tuner::baselines::{grid_conf, grid_size};
+use sparktune::workloads::{self, Workload};
+use std::sync::Arc;
+
+/// Bitwise comparison of two completion streams: event order, clocks,
+/// meters, locality/speculation counters, and winning-node placements.
+fn assert_streams_identical(scan: &[StageCompletion], indexed: &[StageCompletion], what: &str) {
+    assert_eq!(scan.len(), indexed.len(), "{what}: completion counts diverged");
+    for (x, y) in scan.iter().zip(indexed) {
+        assert_eq!(x.handle, y.handle, "{what}: emission order diverged");
+        assert_eq!(x.job, y.job, "{what}");
+        assert_eq!(x.at.to_bits(), y.at.to_bits(), "{what}: clock diverged at stage {}", x.handle);
+        assert_eq!(x.stats.duration.to_bits(), y.stats.duration.to_bits(), "{what}");
+        assert_eq!(x.stats.cpu_secs.to_bits(), y.stats.cpu_secs.to_bits(), "{what}");
+        assert_eq!(x.stats.disk_bytes.to_bits(), y.stats.disk_bytes.to_bits(), "{what}");
+        assert_eq!(x.stats.net_bytes.to_bits(), y.stats.net_bytes.to_bits(), "{what}");
+        assert_eq!(x.stats.tasks, y.stats.tasks, "{what}");
+        assert_eq!(x.stats.locality_hits, y.stats.locality_hits, "{what}");
+        assert_eq!(x.stats.speculated, y.stats.speculated, "{what}");
+        assert_eq!(x.task_nodes, y.task_nodes, "{what}: winning placements diverged");
+    }
+}
+
+/// Run the same scripted scenario on both cores and compare streams.
+fn both_cores(
+    cluster: &ClusterSpec,
+    mode: SchedulerMode,
+    policy: SimPolicy,
+    what: &str,
+    script: impl Fn(&mut EventSim<'_>) -> Vec<StageCompletion>,
+) -> (SimStats, SimStats) {
+    let mut scan = EventSim::with_discovery(cluster, scheduler_for(mode), policy, Discovery::Scan);
+    let scan_out = script(&mut scan);
+    let mut idx =
+        EventSim::with_discovery(cluster, scheduler_for(mode), policy, Discovery::Indexed);
+    let idx_out = script(&mut idx);
+    assert_streams_identical(&scan_out, &idx_out, what);
+    (scan.stats(), idx.stats())
+}
+
+/// A mixed-phase task set exercising every phase kind and node.
+fn mixed_tasks(n: usize, nodes: u32, pin: bool) -> Vec<TaskSpec> {
+    (0..n)
+        .map(|k| {
+            let t = TaskSpec::new(vec![
+                Phase::Fixed { secs: 0.002 * (1 + k % 3) as f64 },
+                Phase::NetIn { bytes: 0.5e6 * (1 + k % 5) as f64 },
+                Phase::DiskRead { bytes: 1e6 * (1 + k % 4) as f64 },
+                Phase::Cpu { secs: 0.05 + (k % 7) as f64 * 0.02 },
+                Phase::DiskWrite { bytes: 2e6 },
+            ]);
+            if pin {
+                t.on((k as u32 % nodes) as NodeId)
+            } else {
+                t
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fifo_and_fair_multi_job_streams_match() {
+    let cluster = ClusterSpec::mini();
+    for mode in SchedulerMode::ALL {
+        let (ss, is) = both_cores(
+            &cluster,
+            mode,
+            SimPolicy::default(),
+            &format!("{mode} multi-job"),
+            |sim| {
+                for j in 0..4usize {
+                    sim.submit(
+                        j,
+                        &mixed_tasks(18, 4, j % 2 == 0),
+                        &SimOpts { jitter: 0.06, seed: 40 + j as u64, straggler: None },
+                    );
+                }
+                sim.drain()
+            },
+        );
+        assert_eq!(ss.events, is.events, "{mode}: event counts diverged");
+        assert_eq!(ss.heap_ops(), 0);
+        assert!(is.heap_ops() > 0);
+    }
+}
+
+#[test]
+fn locality_wait_hold_and_expiry_streams_match() {
+    // Pinned tasks contend for two nodes under a range of waits: holds,
+    // hold-expiry events, and degradation to ANY all cross the cores.
+    let mut cluster = ClusterSpec::mini();
+    cluster.nodes = 2;
+    cluster.cores_per_node = 2;
+    for wait in [0.0, 0.05, 0.4, 5.0] {
+        both_cores(
+            &cluster,
+            SchedulerMode::Fifo,
+            SimPolicy { locality_wait: wait, speculation: None },
+            &format!("locality wait {wait}"),
+            |sim| {
+                for j in 0..3usize {
+                    let tasks: Vec<TaskSpec> = (0..8)
+                        .map(|k| {
+                            TaskSpec::new(vec![Phase::Cpu { secs: 0.2 + (k % 3) as f64 * 0.05 }])
+                                .on(0)
+                        })
+                        .collect();
+                    sim.submit(
+                        j,
+                        &tasks,
+                        &SimOpts { jitter: 0.03, seed: 9 + j as u64, straggler: None },
+                    );
+                }
+                sim.drain()
+            },
+        );
+    }
+}
+
+#[test]
+fn speculation_and_straggler_streams_match() {
+    // Clone launches, first-finisher-wins races, sibling cancellation
+    // with mid-stream flow withdrawal and meter refunds.
+    let cluster = ClusterSpec::mini();
+    for (quantile, multiplier) in [(0.75, 1.5), (0.3, 1.2)] {
+        both_cores(
+            &cluster,
+            SchedulerMode::Fair,
+            SimPolicy {
+                locality_wait: 0.1,
+                speculation: Some(SpecPolicy { quantile, multiplier }),
+            },
+            &format!("speculation q={quantile} m={multiplier}"),
+            |sim| {
+                sim.set_pool(1, PoolSpec { weight: 2.0, min_share: 1 });
+                for j in 0..3usize {
+                    sim.submit(
+                        j,
+                        &mixed_tasks(16, 4, true),
+                        &SimOpts {
+                            jitter: 0.05,
+                            seed: 77 + j as u64,
+                            straggler: Some(Straggler { prob: 0.3, factor: 8.0 }),
+                        },
+                    );
+                }
+                sim.drain()
+            },
+        );
+    }
+}
+
+#[test]
+fn mid_flight_submission_streams_match() {
+    // Stages arriving while the core is busy (the engine's DAG-walk
+    // pattern): drain one completion, submit more, repeat.
+    let cluster = ClusterSpec::mini();
+    both_cores(
+        &cluster,
+        SchedulerMode::Fifo,
+        SimPolicy { locality_wait: 0.2, speculation: None },
+        "mid-flight submission",
+        |sim| {
+            let mut out = Vec::new();
+            let o = |seed: u64| SimOpts { jitter: 0.04, seed, straggler: None };
+            sim.submit(0, &mixed_tasks(10, 4, true), &o(1));
+            sim.submit(1, &[], &o(2));
+            out.push(sim.advance().expect("empty stage completes"));
+            // Submit against a busy cluster, including a NaN-phase task
+            // (must degrade to a noop, not wedge either core).
+            sim.submit(
+                2,
+                &[
+                    TaskSpec::new(vec![Phase::Cpu { secs: f64::NAN }, Phase::Cpu { secs: 0.3 }]),
+                    TaskSpec::new(vec![Phase::DiskWrite { bytes: 5e6 }]).on(1),
+                ],
+                &o(3),
+            );
+            out.push(sim.advance().expect("more work pending"));
+            sim.submit(0, &mixed_tasks(6, 4, false), &o(4));
+            out.extend(sim.drain());
+            assert!(sim.advance().is_none());
+            out
+        },
+    );
+}
+
+#[test]
+fn indexed_core_does_strictly_less_scan_work() {
+    // The CI acceptance counter: on a real multi-wave scenario the
+    // indexed core's dirty-resource flow rolls must be strictly fewer
+    // than events × live copies (what per-event rescans would touch).
+    let cluster = ClusterSpec::mini();
+    let (ss, is) = both_cores(
+        &cluster,
+        SchedulerMode::Fifo,
+        SimPolicy::default(),
+        "scan-work budget",
+        |sim| {
+            for j in 0..2usize {
+                sim.submit(
+                    j,
+                    &mixed_tasks(64, 4, false),
+                    &SimOpts { jitter: 0.05, seed: 5 + j as u64, straggler: None },
+                );
+            }
+            sim.drain()
+        },
+    );
+    // Both cores rolled the same flows (shared dirty rule)...
+    assert_eq!(ss.flow_rolls, is.flow_rolls);
+    // ...and that is strictly below the rescan-equivalent work.
+    assert!(is.events > 0);
+    assert!(
+        is.flow_rolls < is.live_copy_event_sum,
+        "indexed core rolled {} flows vs {} rescan-equivalent",
+        is.flow_rolls,
+        is.live_copy_event_sum
+    );
+    assert!(is.scan_work_saved() > 0);
+}
+
+// ---------- plan once / price many ----------
+
+type EngineResult = sparktune::engine::JobResult;
+
+fn job_results_identical(a: &EngineResult, b: &EngineResult) -> bool {
+    a.job == b.job
+        && a.duration.to_bits() == b.duration.to_bits()
+        && a.crashed == b.crashed
+        && a.stages.len() == b.stages.len()
+        && a.stages.iter().zip(&b.stages).all(|(x, y)| {
+            x.name == y.name
+                && x.duration.to_bits() == y.duration.to_bits()
+                && x.cpu_secs.to_bits() == y.cpu_secs.to_bits()
+                && x.disk_bytes.to_bits() == y.disk_bytes.to_bits()
+                && x.net_bytes.to_bits() == y.net_bytes.to_bits()
+                && x.spilled_bytes == y.spilled_bytes
+                && x.gc_factor.to_bits() == y.gc_factor.to_bits()
+                && x.cache_hit_fraction.map(f64::to_bits) == y.cache_hit_fraction.map(f64::to_bits)
+                && x.locality_hits == y.locality_hits
+                && x.speculated == y.speculated
+        })
+}
+
+#[test]
+fn plan_once_matches_replanning_across_the_grid() {
+    // One job, a spread of grid candidates (including crashing memory
+    // geometries): sharing the plan must not change a bit of any result.
+    let cluster = ClusterSpec::mini();
+    let job = Workload::MiniSortByKey.job();
+    let plan = prepare(&job).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    for i in 0..24 {
+        let conf = grid_conf(i * 9 % grid_size());
+        let fresh = run(&job, &conf, &cluster, &opts);
+        let shared = run_planned(&plan, &conf, &cluster, &opts);
+        assert!(job_results_identical(&fresh, &shared), "grid conf {i} diverged");
+    }
+}
+
+#[test]
+fn plan_once_matches_replanning_for_kmeans_and_speculation() {
+    // The iterative DAG (cache writer + per-iteration parents) is the
+    // planner's hardest shape; cross it with the task-granular knobs.
+    let cluster = ClusterSpec::marenostrum();
+    let job = Workload::KMeans100M.job();
+    let plan = prepare(&job).unwrap();
+    let conf = SparkConf::default()
+        .with("spark.speculation", "true")
+        .with("spark.locality.wait", "1s");
+    let opts = SimOpts {
+        jitter: 0.04,
+        seed: 0xBEEF,
+        straggler: Some(Straggler { prob: 0.03, factor: 8.0 }),
+    };
+    let fresh = run(&job, &conf, &cluster, &opts);
+    let shared = run_planned(&plan, &conf, &cluster, &opts);
+    assert!(fresh.crashed.is_none());
+    assert!(job_results_identical(&fresh, &shared));
+    assert_eq!(fresh.sim, shared.sim, "identical work counters");
+}
+
+#[test]
+fn planned_multi_tenant_batch_matches_replanned() {
+    let cluster = ClusterSpec::mini();
+    let jobs: Vec<Job> = workloads::mixed_tenants(3, 2_000_000, 16);
+    let plans: Vec<Arc<JobPlan>> = jobs.iter().map(|j| prepare(j).unwrap()).collect();
+    for mode in ["FIFO", "FAIR"] {
+        let conf = SparkConf::default().with("spark.scheduler.mode", mode);
+        let a = run_all(&jobs, &conf, &cluster, &SimOpts::default());
+        let b = run_all_planned(&plans, &conf, &cluster, &SimOpts::default());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits(), "{mode}");
+        for (x, y) in a.results.iter().zip(&b.results) {
+            assert!(job_results_identical(x, y), "{mode}: {} diverged", x.job);
+        }
+    }
+}
+
+#[test]
+fn shared_plan_is_thread_safe_and_thread_invariant() {
+    // Many worker threads pricing one Arc<JobPlan> concurrently must
+    // reproduce the sequential results bit for bit (the tuner's
+    // parallel-trials contract on the new hot path).
+    use sparktune::tuner::TrialExecutor;
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let confs: Vec<SparkConf> = (0..24).map(|i| grid_conf(i * 5 % grid_size())).collect();
+    let eval = |c: &SparkConf| run_planned(&plan, c, &cluster, &opts).effective_duration();
+    let seq = TrialExecutor::new(1).evaluate(&confs, eval);
+    for threads in [2usize, 4, 8] {
+        let par = TrialExecutor::new(threads).evaluate(&confs, eval);
+        assert_eq!(seq, par, "{threads}-thread planned trials diverged");
+    }
+}
