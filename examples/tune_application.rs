@@ -24,7 +24,7 @@ fn main() {
 
     let cluster = ClusterSpec::marenostrum();
     let mut runner = sim_runner(workload, &cluster);
-    let out = tune(&mut runner, &TuneOpts { threshold, short_version: false, straggler_aware: false });
+    let out = tune(&mut runner, &TuneOpts { threshold, ..TuneOpts::default() });
 
     println!(
         "Fig-4 methodology on {} (keep-if-improves-by > {:.0}%):\n",
@@ -72,7 +72,7 @@ fn main() {
         |conf: &SparkConf| run(&job, conf, &cluster, &opts).effective_duration();
     let strag = tune(
         &mut jittered,
-        &TuneOpts { threshold, short_version: false, straggler_aware: true },
+        &TuneOpts { threshold, straggler_aware: true, ..TuneOpts::default() },
     );
     println!(
         "\nstraggler-aware list on a jittered cluster ({} runs): {:.1}s -> {:.1}s",

@@ -11,34 +11,41 @@
 //! * **parallel trials** — independent `(job, conf)` trials fanned over
 //!   OS threads with `TrialExecutor` (every run pure in `(conf, seed)`).
 //!
-//! Plus the trial-pipeline tentpole scenario: one job priced under 64
-//! conf candidates, **re-plan-per-trial vs plan-once** side by side
-//! (trials/sec), and the indexed event core's events/sec with its
-//! scan-work counters.
+//! Plus the trial-pipeline tentpole scenario: one job priced under a
+//! grid of conf candidates, **re-plan-per-trial vs plan-once** side by
+//! side (trials/sec), and the indexed event core's events/sec with its
+//! scan-work counters — the perf-smoke invariant (`flow_rolls <
+//! live_copy_event_sum`) is asserted here too, so a bench run doubles
+//! as a regression guard.
 //!
 //! Uses the in-tree `testkit::bench` harness (no criterion in the
-//! offline crate set).
+//! offline crate set). CLI: `--quick` shrinks sizes for the CI smoke
+//! lane, `--json PATH` writes a `sparktune.bench.v1` artifact.
 //!
-//! `cargo bench --bench sched_throughput`
+//! `cargo bench --bench sched_throughput [-- --quick --json BENCH_sched_throughput.json]`
 
 use sparktune::cluster::ClusterSpec;
 use sparktune::conf::SparkConf;
 use sparktune::engine::{prepare, run, run_all, run_planned};
 use sparktune::sim::{SimOpts, Straggler};
-use sparktune::testkit::bench;
+use sparktune::testkit::{BenchArgs, BenchSink};
 use sparktune::tuner::baselines::{grid_conf, grid_size};
 use sparktune::tuner::TrialExecutor;
 use sparktune::workloads;
 
 fn main() {
+    let args = BenchArgs::from_env();
+    let mut sink = BenchSink::new("sched_throughput", args.quick);
     let cluster = ClusterSpec::marenostrum();
-    let n_jobs = 8usize;
-    let jobs = workloads::multi_tenant(n_jobs as u32, 100_000_000, 640);
+    let n_jobs = args.size(8usize, 2);
+    let records = args.size(100_000_000u64, 4_000_000);
+    let iters = args.size(7usize, 2);
+    let jobs = workloads::multi_tenant(n_jobs as u32, records, 640);
     let conf = SparkConf::default().with("spark.serializer", "kryo");
     let opts = SimOpts::default();
 
     // ---- barrier-equivalent: jobs strictly one at a time ----
-    bench(&format!("sched/sequential run ×{n_jobs} jobs"), 7, n_jobs as f64, || {
+    sink.bench(&format!("sched/sequential run ×{n_jobs} jobs"), iters, n_jobs as f64, || {
         for job in &jobs {
             std::hint::black_box(run(job, &conf, &cluster, &opts));
         }
@@ -47,7 +54,7 @@ fn main() {
     // ---- event core: the whole batch in one simulation ----
     for mode in ["FIFO", "FAIR"] {
         let c = conf.clone().with("spark.scheduler.mode", mode);
-        bench(&format!("sched/run_all {mode} ×{n_jobs} jobs"), 7, n_jobs as f64, || {
+        sink.bench(&format!("sched/run_all {mode} ×{n_jobs} jobs"), iters, n_jobs as f64, || {
             std::hint::black_box(run_all(&jobs, &c, &cluster, &opts));
         });
     }
@@ -55,7 +62,7 @@ fn main() {
     // ---- straggler scenario: jittered cluster, clone/cancel hot path ----
     // Speculation adds per-event threshold scans plus clone bookkeeping;
     // this tracks what that costs against the same jittered baseline.
-    let probe = workloads::straggler_probe(320_000_000, 640);
+    let probe = workloads::straggler_probe(args.size(320_000_000, 8_000_000), 640);
     let jittered = SimOpts {
         jitter: 0.04,
         seed: 0x57A6,
@@ -65,35 +72,47 @@ fn main() {
         ("speculation off", conf.clone()),
         ("speculation on", conf.clone().with("spark.speculation", "true")),
     ] {
-        bench(&format!("sched/straggler probe ({label})"), 7, 1.0, || {
+        sink.bench(&format!("sched/straggler probe ({label})"), iters, 1.0, || {
             std::hint::black_box(run(&probe, &sconf, &cluster, &jittered));
         });
     }
 
-    // ---- plan once, price many: one job under 64 conf candidates ----
+    // ---- plan once, price many: one job under many conf candidates ----
     // The trial pipeline's tentpole scenario: identical candidate sets,
     // re-planning the job per trial vs sharing one Arc<JobPlan>. The
     // jobs/sec delta is the cost of redundant planning; outcomes are
     // bit-identical (asserted by tests/hotpath_equiv.rs and CI's
     // perf-smoke).
     let job = &jobs[0];
-    let candidates: Vec<SparkConf> = (0..64).map(|i| grid_conf(i * 7 % grid_size())).collect();
-    bench("sched/64-conf trials (re-plan per trial)", 5, candidates.len() as f64, || {
-        for c in &candidates {
-            std::hint::black_box(run(job, c, &cluster, &opts));
-        }
-    });
+    let n_cand = args.size(64usize, 8);
+    let candidates: Vec<SparkConf> = (0..n_cand).map(|i| grid_conf(i * 7 % grid_size())).collect();
+    let pp_iters = args.size(5usize, 2);
+    sink.bench(
+        &format!("sched/{n_cand}-conf trials (re-plan per trial)"),
+        pp_iters,
+        candidates.len() as f64,
+        || {
+            for c in &candidates {
+                std::hint::black_box(run(job, c, &cluster, &opts));
+            }
+        },
+    );
     let plan = prepare(job).expect("bench job plans cleanly");
-    bench("sched/64-conf trials (plan-once)", 5, candidates.len() as f64, || {
-        for c in &candidates {
-            std::hint::black_box(run_planned(&plan, c, &cluster, &opts));
-        }
-    });
+    sink.bench(
+        &format!("sched/{n_cand}-conf trials (plan-once)"),
+        pp_iters,
+        candidates.len() as f64,
+        || {
+            for c in &candidates {
+                std::hint::black_box(run_planned(&plan, c, &cluster, &opts));
+            }
+        },
+    );
     // Events/sec through the indexed core on this scenario (one trial).
     let probe_run = run_planned(&plan, &candidates[0], &cluster, &opts);
-    bench(
+    sink.bench(
         "sched/event core (events/sec, 1 trial)",
-        5,
+        pp_iters,
         probe_run.sim.events as f64,
         || {
             std::hint::black_box(run_planned(&plan, &candidates[0], &cluster, &opts));
@@ -106,19 +125,33 @@ fn main() {
         probe_run.sim.live_copy_event_sum,
         probe_run.sim.scan_work_saved()
     );
+    // The perf-smoke counter invariant, asserted at bench sizes too:
+    // the indexed event core must do strictly less flow work than a
+    // per-event rescan of the running set would.
+    assert!(probe_run.sim.events > 0, "bench scenario simulated nothing");
+    assert!(
+        probe_run.sim.flow_rolls < probe_run.sim.live_copy_event_sum,
+        "indexed core did {} flow rolls vs {} rescan-equivalent — \
+         the dirty-resource rule is not saving scan work",
+        probe_run.sim.flow_rolls,
+        probe_run.sim.live_copy_event_sum
+    );
 
     // ---- parallel trials: independent configurations across threads ----
-    let trial_confs: Vec<SparkConf> = (0..32).map(|i| grid_conf(i * 5 % 216)).collect();
+    let trial_confs: Vec<SparkConf> =
+        (0..args.size(32usize, 8)).map(|i| grid_conf(i * 5 % 216)).collect();
     let eval = |c: &SparkConf| run_planned(&plan, c, &cluster, &opts).effective_duration();
     for threads in [1usize, 4, 8] {
         let exec = TrialExecutor::new(threads);
-        bench(
+        sink.bench(
             &format!("sched/trials ×{} on {threads} thread(s)", trial_confs.len()),
-            5,
+            pp_iters,
             trial_confs.len() as f64,
             || {
                 std::hint::black_box(exec.evaluate(&trial_confs, eval));
             },
         );
     }
+
+    sink.write(args.json.as_deref()).expect("bench artifact written");
 }

@@ -16,27 +16,36 @@
 //! After the timed runs the dedup counters and cache hit rate are
 //! printed and sanity-asserted (requested > simulated on overlap).
 //!
-//! `cargo bench --bench service_throughput`
+//! CLI: `--quick` shrinks the tenant grid and iteration counts for the
+//! CI smoke lane, `--json PATH` writes a `sparktune.bench.v1` artifact.
+//!
+//! `cargo bench --bench service_throughput [-- --quick --json BENCH_service_throughput.json]`
 
 use sparktune::cluster::ClusterSpec;
 use sparktune::conf::SparkConf;
 use sparktune::engine::{prepare, run_planned};
 use sparktune::experiments::service::stress_requests;
 use sparktune::service::{ServiceOpts, TuningService};
-use sparktune::testkit::bench;
+use sparktune::testkit::{BenchArgs, BenchSink};
 use sparktune::tuner::{tune, TrialExecutor};
 
 fn main() {
+    let args = BenchArgs::from_env();
+    let mut sink = BenchSink::new("service_throughput", args.quick);
     let cluster = ClusterSpec::marenostrum();
+    const FULL_GRID: &[(u32, u32)] = &[(4, 3), (8, 4)];
+    const QUICK_GRID: &[(u32, u32)] = &[(2, 2)];
+    let grid = args.size(FULL_GRID, QUICK_GRID);
+    let (cold_iters, warm_iters) = args.size((3usize, 5usize), (2, 2));
 
-    for (tenants, apps) in [(4u32, 3u32), (8, 4)] {
+    for &(tenants, apps) in grid {
         let reqs = stress_requests(tenants, apps);
         let sessions = reqs.len() as f64;
-        let svc_opts = ServiceOpts { workers: 4, shards: 8, capacity: 65_536 };
+        let svc_opts = ServiceOpts { workers: 4, shards: 8, capacity: 65_536, ..ServiceOpts::default() };
 
         // ---- direct: same worker pool, plan-once, no memoization ----
         let pool = TrialExecutor::new(svc_opts.workers);
-        bench(&format!("service/direct tune {tenants}×{apps}"), 3, sessions, || {
+        sink.bench(&format!("service/direct tune {tenants}×{apps}"), cold_iters, sessions, || {
             let outcomes = pool.map(&reqs, |req| {
                 let plan = prepare(&req.job).expect("catalog jobs plan cleanly");
                 let mut runner = |conf: &SparkConf| {
@@ -48,7 +57,7 @@ fn main() {
         });
 
         // ---- cold service: fresh cache each iteration ----
-        bench(&format!("service/cold serve {tenants}×{apps}"), 3, sessions, || {
+        sink.bench(&format!("service/cold serve {tenants}×{apps}"), cold_iters, sessions, || {
             let svc = TuningService::new(cluster.clone(), svc_opts);
             std::hint::black_box(svc.serve(&reqs));
         });
@@ -56,7 +65,7 @@ fn main() {
         // ---- warm service: the steady-state serving path ----
         let svc = TuningService::new(cluster.clone(), svc_opts);
         svc.serve(&reqs); // warm it
-        bench(&format!("service/warm serve {tenants}×{apps}"), 5, sessions, || {
+        sink.bench(&format!("service/warm serve {tenants}×{apps}"), warm_iters, sessions, || {
             std::hint::black_box(svc.serve(&reqs));
         });
 
@@ -76,4 +85,6 @@ fn main() {
             s.trials_requested
         );
     }
+
+    sink.write(args.json.as_deref()).expect("bench artifact written");
 }

@@ -5,13 +5,15 @@
 //! ```text
 //! sparktune run    --workload <name> [--conf k=v]... [--seed N] [--reps N]
 //! sparktune tune   --workload <name> [--threshold 0.10] [--short]
-//!                  [--straggler-steps] [--background N]
+//!                  [--straggler-steps] [--background N] [--warm-from <name>]
 //! sparktune sweep  --figure fig1|fig2|fig3|table2 [--out-dir DIR]
 //! sparktune cases  [--out-dir DIR]
 //! sparktune ablation [--workload <name>]
 //! sparktune tenancy [--jobs N] [--records N] [--mixed]
 //! sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
 //! sparktune serve  [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
+//!                  [--warm-start]
+//! sparktune transfer [--tenants N] [--workers T] [--threshold D]
 //! sparktune perf-smoke [--workload <name>] [--trials N]
 //! sparktune help-conf
 //! ```
@@ -23,7 +25,7 @@ use crate::experiments::{self, cases, sensitivity, straggler, tenancy};
 use crate::report::sim_stats_table;
 use crate::sim::{SimOpts, SimStats, Straggler};
 use crate::tuner::baselines::{grid_conf, grid_size};
-use crate::tuner::{tune, TuneOpts};
+use crate::tuner::{tune, TuneOpts, WarmStart};
 use crate::util::stats::Summary;
 use crate::workloads::Workload;
 
@@ -51,7 +53,7 @@ fn parse_args(argv: &[String]) -> Result<Args, String> {
                 confs.push(
                     argv.get(i).ok_or_else(|| "missing value after --conf".to_string())?.clone(),
                 );
-            } else if matches!(name, "short" | "verbose" | "mixed" | "straggler-steps") {
+            } else if matches!(name, "short" | "verbose" | "mixed" | "straggler-steps" | "warm-start") {
                 bools.push(name.to_string());
             } else {
                 i += 1;
@@ -100,6 +102,8 @@ USAGE:
   sparktune run      --workload <name> [--conf k=v]... [--reps N] [--seed N]
   sparktune tune     --workload <name> [--threshold 0.10] [--short]
                      [--straggler-steps] [--background N] [--background-records N]
+                     [--warm-from <name>]  (seed the decision list from another
+                      workload's kept steps — cross-workload evidence transfer)
   sparktune sweep    --figure fig1|fig2|fig3|table2 [--out-dir DIR]
   sparktune cases    [--out-dir DIR]
   sparktune ablation [--workload <name>]
@@ -107,9 +111,16 @@ USAGE:
   sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
                      (jittered cluster: spark.speculation off vs on)
   sparktune serve    [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
+                     [--warm-start]
                      (tuning service: M×N overlapping sessions, memoized trials;
-                      exits non-zero unless trials dedupe and the fully-warm
-                      rerun is bit-identical to the cold pass)
+                      exits non-zero unless trials dedupe and the rerun is
+                      bit-identical to the cold pass — or, with --warm-start,
+                      strictly cheaper at equal final quality)
+  sparktune transfer [--tenants N] [--workers T] [--threshold D]
+                     (evidence transfer: train N tenants, warm-start a held-out
+                      similar workload; exits non-zero unless the warm session
+                      runs strictly fewer trials than cold at final duration
+                      ≤ cold, deterministically across worker counts)
   sparktune perf-smoke [--workload <name>] [--trials N]
                      (hot-path regression guard: plan-once pricing must be
                       bit-identical to re-planning and the indexed event core
@@ -205,8 +216,32 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 threshold,
                 short_version: args.has("short"),
                 straggler_aware: args.has("straggler-steps"),
+                warm_start: None,
             };
-            let out = if background > 0 {
+            let out = if let Some(src) = args.flag("warm-from") {
+                // Cross-workload evidence transfer, by hand: tune the
+                // named source workload cold, then seed this session's
+                // decision list from its kept steps.
+                let src_w = Workload::from_name(src)
+                    .ok_or_else(|| format!("unknown --warm-from workload {src:?}"))?;
+                let mut src_runner = cases::sim_runner(src_w, &cluster);
+                let src_out = tune(&mut src_runner, &opts);
+                let steps: Vec<String> = src_out
+                    .trials
+                    .iter()
+                    .filter(|t| t.kept)
+                    .map(|t| t.step.to_string())
+                    .collect();
+                println!(
+                    "warm start from {}: {} kept step(s) [{}]",
+                    src_w.name(),
+                    steps.len(),
+                    steps.join(", ")
+                );
+                let wopts = TuneOpts { warm_start: Some(WarmStart { steps }), ..opts };
+                let mut runner = cases::sim_runner(w, &cluster);
+                tune(&mut runner, &wopts)
+            } else if background > 0 {
                 // Tuner × tenancy: price every trial on a busy cluster
                 // (mixed background tenants submitted alongside).
                 let bg_records: u64 = args
@@ -370,12 +405,14 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             if tenants == 0 || apps == 0 {
                 return Err("--tenants and --apps must be >= 1".into());
             }
+            let warm_start = args.has("warm-start");
             let opts = experiments::service::StressOpts {
                 tenants,
                 apps,
                 workers,
                 capacity,
                 shards,
+                warm_start,
             };
             let r = experiments::service::service_stress(&opts, &cluster);
             println!("{}", experiments::service::service_table(&r).to_markdown());
@@ -392,16 +429,97 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             if tenants > 1 && r.cold_stats.trials_simulated >= r.cold_stats.trials_requested {
                 return Err("cold pass did not dedupe across overlapping sessions".into());
             }
-            if !r.deterministic() {
-                return Err("warm rerun diverged from the cold pass".into());
+            if warm_start {
+                // Evidence-transfer mode: the rerun warm-starts from
+                // the first pass, so it must be strictly cheaper at
+                // equal final quality — not bit-identical.
+                if !r.transfer_won() {
+                    return Err("warm-started rerun did not transfer (fewer runs, quality ≤ cold)"
+                        .into());
+                }
+                if r.pass2_requested() >= r.cold_stats.trials_requested {
+                    return Err("warm-started rerun requested no fewer trials than cold".into());
+                }
+                println!(
+                    "ok: {} sessions/pass; warm-started rerun requested {} trials vs {} cold \
+                     at equal final durations",
+                    r.cold.len(),
+                    r.pass2_requested(),
+                    r.cold_stats.trials_requested
+                );
+            } else {
+                if !r.deterministic() {
+                    return Err("warm rerun diverged from the cold pass".into());
+                }
+                println!(
+                    "ok: {} sessions/pass; cold pass simulated {} of {} requested trials; \
+                     cumulative hit rate {:.1}%; warm rerun bit-identical",
+                    r.cold.len(),
+                    r.cold_stats.trials_simulated,
+                    r.cold_stats.trials_requested,
+                    100.0 * r.stats.hit_rate()
+                );
+            }
+            Ok(())
+        }
+        "transfer" => {
+            let tenants: u32 =
+                args.flag("tenants").unwrap_or("6").parse().map_err(|e| format!("{e}"))?;
+            let workers: usize =
+                args.flag("workers").unwrap_or("4").parse().map_err(|e| format!("{e}"))?;
+            let threshold: f64 =
+                args.flag("threshold").unwrap_or("0.25").parse().map_err(|e| format!("{e}"))?;
+            if tenants == 0 {
+                return Err("--tenants must be >= 1".into());
+            }
+            if !(threshold.is_finite() && threshold > 0.0) {
+                return Err("--threshold must be a finite distance > 0".into());
+            }
+            let opts = experiments::transfer::TransferOpts { tenants, workers, threshold };
+            let r = experiments::transfer::transfer_experiment(&opts, &cluster);
+            println!("{}", experiments::transfer::transfer_table(&r).to_markdown());
+            // The CI transfer smoke: a neighbor must be found, the warm
+            // session must run strictly fewer trials than the cold one,
+            // and its final duration must be ≤ cold's (identical job,
+            // cluster, and seed ⇒ the comparison is exact through the
+            // fingerprint path, not statistical).
+            let Some(from) = &r.warm_from else {
+                return Err("no neighbor within the distance threshold — transfer never engaged"
+                    .into());
+            };
+            if r.warm.runs() >= r.cold.runs() {
+                return Err(format!(
+                    "warm session ran {} trials vs {} cold — transfer saved nothing",
+                    r.warm.runs(),
+                    r.cold.runs()
+                ));
+            }
+            if !(r.warm.best.is_finite() && r.warm.best <= r.cold.best) {
+                return Err(format!(
+                    "warm final duration {:.3}s worse than cold {:.3}s",
+                    r.warm.best, r.cold.best
+                ));
+            }
+            // Worker-count invariance: the whole scenario must reproduce
+            // bit for bit on a single-threaded service.
+            let solo = experiments::transfer::transfer_experiment(
+                &experiments::transfer::TransferOpts { workers: 1, ..opts },
+                &cluster,
+            );
+            if solo.warm_from != r.warm_from
+                || !crate::service::outcomes_identical(&solo.warm, &r.warm)
+                || !crate::service::outcomes_identical(&solo.cold, &r.cold)
+            {
+                return Err("transfer outcomes diverged across worker counts".into());
             }
             println!(
-                "ok: {} sessions/pass; cold pass simulated {} of {} requested trials; \
-                 cumulative hit rate {:.1}%; warm rerun bit-identical",
-                r.cold.len(),
-                r.cold_stats.trials_simulated,
-                r.cold_stats.trials_requested,
-                100.0 * r.stats.hit_rate()
+                "ok: warm-started from {from} in {} runs vs {} cold ({} saved); \
+                 final {:.3}s ≤ cold {:.3}s; thread-count invariant",
+                r.warm.runs(),
+                r.cold.runs(),
+                r.runs_saved(),
+                r.warm.best,
+                r.cold.best
             );
             Ok(())
         }
@@ -563,5 +681,38 @@ mod tests {
             .unwrap();
         assert!(a.has("straggler-steps"));
         assert_eq!(a.flag("background"), Some("2"));
+        let a = parse_args(&argv("serve --tenants 2 --warm-start")).unwrap();
+        assert!(a.has("warm-start"));
+    }
+
+    #[test]
+    fn transfer_subcommand_smoke() {
+        // The same invocation shape CI runs: train → warm-start a
+        // held-out workload; the subcommand itself asserts strictly
+        // fewer runs, quality ≤ cold, and thread-count invariance
+        // (exit 0 ⇔ all held).
+        assert_eq!(main(argv("transfer --tenants 6 --workers 4")), 0);
+        assert_eq!(main(argv("transfer --tenants 0")), 2, "zero tenants rejected");
+        assert_eq!(main(argv("transfer --threshold 0")), 2, "non-positive threshold rejected");
+    }
+
+    #[test]
+    fn serve_warm_start_mode_smoke() {
+        // Evidence-transfer serve mode: the rerun must be strictly
+        // cheaper at equal final quality (asserted by the subcommand).
+        assert_eq!(
+            main(argv(
+                "serve --tenants 2 --apps 1 --workers 2 --capacity 256 --shards 2 --warm-start"
+            )),
+            0
+        );
+    }
+
+    #[test]
+    fn tune_warm_from_smoke() {
+        // Seed mini-sort-by-key from its own cold kept steps: the warm
+        // session must succeed end to end through the dispatcher.
+        assert_eq!(main(argv("tune --workload mini --short --warm-from mini")), 0);
+        assert_eq!(main(argv("tune --workload mini --warm-from quantum")), 2);
     }
 }

@@ -20,7 +20,7 @@
 pub mod plan;
 pub mod run;
 
-pub use plan::{plan, Stage, StageInput, StageOutput};
+pub use plan::{plan, Locality, Stage, StageInput, StageOutput};
 pub use run::{
     prepare, run, run_all, run_all_planned, run_planned, JobPlan, JobResult, MultiJobResult,
     StageReport,

@@ -101,6 +101,19 @@ impl JobPlan {
             roots,
         })
     }
+
+    /// DAG children of stage `id`: the stages consuming its output, in
+    /// id order. Exposed for plan introspection (the service layer's
+    /// job feature profiles read DAG shape — fan-out, reuse — from
+    /// here); the runner walks the same table internally.
+    pub fn children(&self, id: usize) -> &[usize] {
+        &self.children[id]
+    }
+
+    /// Stages with no parents (the DAG entry points), in id order.
+    pub fn roots(&self) -> &[usize] {
+        &self.roots
+    }
 }
 
 /// Plan `job` once for sharing across trials ([`JobPlan`] behind an

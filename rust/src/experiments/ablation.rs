@@ -80,7 +80,7 @@ pub fn threshold_sweep(workload: Workload, cluster: &ClusterSpec) -> Table {
     };
     for thr in [0.0, 0.02, 0.05, 0.10, 0.20] {
         let mut runner = super::cases::sim_runner(workload, cluster);
-        let out = tune(&mut runner, &TuneOpts { threshold: thr, short_version: false, straggler_aware: false });
+        let out = tune(&mut runner, &TuneOpts { threshold: thr, ..TuneOpts::default() });
         t.rows.push(vec![
             format!("{:.0}%", thr * 100.0),
             out.trials.iter().filter(|x| x.kept).count().to_string(),

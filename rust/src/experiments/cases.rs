@@ -72,7 +72,7 @@ pub fn case_studies(cluster: &ClusterSpec) -> Vec<CaseStudy> {
         .into_iter()
         .map(|(w, threshold, paper)| {
             let mut runner = sim_runner(w, cluster);
-            let outcome = tune(&mut runner, &TuneOpts { threshold, short_version: false, straggler_aware: false });
+            let outcome = tune(&mut runner, &TuneOpts { threshold, ..TuneOpts::default() });
             CaseStudy { workload: w, threshold, outcome, paper }
         })
         .collect()
@@ -133,7 +133,7 @@ mod tests {
     fn case_study_sort_by_key() {
         let cluster = mn();
         let mut runner = sim_runner(Workload::SortByKey1B, &cluster);
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false, straggler_aware: false });
+        let out = tune(&mut runner, &TuneOpts { threshold: 0.10, ..TuneOpts::default() });
         assert_eq!(out.best_conf.serializer, SerKind::Kryo, "{:?}", out.trials);
         assert!(out.runs() <= 10);
         let improvement = out.total_improvement();
@@ -154,7 +154,7 @@ mod tests {
     fn case_study_kmeans_500d() {
         let cluster = mn();
         let mut runner = sim_runner(Workload::KMeans500D, &cluster);
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.05, short_version: false, straggler_aware: false });
+        let out = tune(&mut runner, &TuneOpts { threshold: 0.05, ..TuneOpts::default() });
         assert_eq!(out.best_conf.storage_memory_fraction, 0.7, "{:?}", out.final_settings());
         assert_eq!(out.best_conf.shuffle_memory_fraction, 0.1);
         let improvement = out.total_improvement();
@@ -171,7 +171,7 @@ mod tests {
     fn case_study_aggregate_by_key() {
         let cluster = mn();
         let mut runner = sim_runner(Workload::AggregateByKey2B, &cluster);
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.05, short_version: false, straggler_aware: false });
+        let out = tune(&mut runner, &TuneOpts { threshold: 0.05, ..TuneOpts::default() });
         let improvement = out.total_improvement();
         assert!(
             improvement > 0.08,

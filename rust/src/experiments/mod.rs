@@ -13,6 +13,9 @@
 //! * [`service`] — the tuning-service stress scenario: M tenants × N
 //!   apps through the memoized session server (cold vs warm, dedup and
 //!   bit-identical-outcome checks).
+//! * [`transfer`] — cross-workload evidence transfer: train N tenants,
+//!   then warm-start a held-out similar workload and show it reaches
+//!   the cold methodology's final quality in strictly fewer runs.
 //!
 //! Protocol follows the paper: each configuration is run with ≥5
 //! repetition seeds and the **median** is reported; the baseline for the
@@ -25,6 +28,7 @@ pub mod cases;
 pub mod service;
 pub mod straggler;
 pub mod tenancy;
+pub mod transfer;
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;

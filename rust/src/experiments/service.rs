@@ -34,11 +34,23 @@ pub struct StressOpts {
     pub capacity: usize,
     /// Memo-cache lock stripes.
     pub shards: usize,
+    /// Enable cross-workload evidence transfer: the second pass's
+    /// sessions warm-start from the first pass's recorded evidence
+    /// (identical workloads → distance-0 neighbors), so the rerun runs
+    /// strictly fewer trials instead of being bit-identical.
+    pub warm_start: bool,
 }
 
 impl Default for StressOpts {
     fn default() -> Self {
-        StressOpts { tenants: 4, apps: 3, workers: 4, capacity: 4096, shards: 8 }
+        StressOpts {
+            tenants: 4,
+            apps: 3,
+            workers: 4,
+            capacity: 4096,
+            shards: 8,
+            warm_start: false,
+        }
     }
 }
 
@@ -64,7 +76,7 @@ pub fn stress_requests(tenants: u32, apps: u32) -> Vec<SessionRequest> {
             reqs.push(SessionRequest {
                 name: format!("tenant{t}/app{a}"),
                 job: catalog(a),
-                tune: TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false },
+                tune: TuneOpts { short_version: true, ..TuneOpts::default() },
                 sim: SimOpts { jitter: 0.04, seed: 0x5E21E + a as u64, straggler: None },
             });
         }
@@ -108,6 +120,23 @@ impl StressReport {
     pub fn warm_jobs_per_sec(&self) -> f64 {
         self.warm.len() as f64 / self.warm_wall_secs.max(1e-9)
     }
+
+    /// Trials the second pass requested (cumulative minus cold-pass).
+    pub fn pass2_requested(&self) -> u64 {
+        self.stats.trials_requested.saturating_sub(self.cold_stats.trials_requested)
+    }
+
+    /// The warm-start mode's acceptance predicate: every second-pass
+    /// session transferred (strictly fewer runs than its first-pass
+    /// twin) and none ended with a worse final duration.
+    pub fn transfer_won(&self) -> bool {
+        self.cold.len() == self.warm.len()
+            && self.cold.iter().zip(&self.warm).all(|(c, w)| {
+                w.warm_from.is_some()
+                    && w.outcome.runs() < c.outcome.runs()
+                    && w.outcome.best <= c.outcome.best
+            })
+    }
 }
 
 /// Run the stress scenario: serve the batch cold, then re-serve it
@@ -116,7 +145,13 @@ pub fn service_stress(o: &StressOpts, cluster: &ClusterSpec) -> StressReport {
     let reqs = stress_requests(o.tenants, o.apps);
     let svc = TuningService::new(
         cluster.clone(),
-        ServiceOpts { workers: o.workers, shards: o.shards, capacity: o.capacity },
+        ServiceOpts {
+            workers: o.workers,
+            shards: o.shards,
+            capacity: o.capacity,
+            warm_start: o.warm_start,
+            ..ServiceOpts::default()
+        },
     );
     let t0 = std::time::Instant::now();
     let cold = svc.serve(&reqs);
@@ -194,6 +229,41 @@ mod tests {
         assert!(r.stats.hit_rate() > 0.0);
         // Two sessions of the same app across tenants agree exactly.
         assert!(outcomes_identical(&r.cold[0].outcome, &r.cold[2].outcome));
+    }
+
+    #[test]
+    fn warm_start_mode_transfers_on_the_second_pass() {
+        // With evidence transfer on, the rerun is *not* bit-identical —
+        // it is strictly cheaper: every second-pass session warm-starts
+        // from its first-pass twin (distance-0 neighbor), replays only
+        // the kept steps, and ends at the same final duration.
+        let o = StressOpts {
+            tenants: 2,
+            apps: 2,
+            workers: 4,
+            capacity: 1024,
+            shards: 4,
+            warm_start: true,
+        };
+        let r = service_stress(&o, &ClusterSpec::mini());
+        assert!(r.transfer_won(), "second pass must transfer: {:?}", r.stats);
+        assert!(
+            r.pass2_requested() < r.cold_stats.trials_requested,
+            "warm-started rerun must request fewer trials: {} vs {}",
+            r.pass2_requested(),
+            r.cold_stats.trials_requested
+        );
+        for (c, w) in r.cold.iter().zip(&r.warm) {
+            assert_eq!(
+                w.outcome.best.to_bits(),
+                c.outcome.best.to_bits(),
+                "{}: identical workload must reach the identical final duration",
+                w.name
+            );
+        }
+        // First pass ran cold (nothing recorded at admission time).
+        assert!(r.cold.iter().all(|c| c.warm_from.is_none()));
+        assert_eq!(r.stats.warm_started, r.warm.len() as u64);
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! The cross-workload evidence-transfer scenario: train a
+//! warm-start-enabled [`TuningService`] on N tenants' sessions, then
+//! tune a **held-out similar workload** warm and compare against the
+//! same workload tuned cold.
+//!
+//! The claim under test (ROADMAP "cross-workload evidence transfer",
+//! and the retrieval-tuning line of PAPERS.md): evidence from *similar*
+//! workloads lets a new application reach the cold methodology's final
+//! configuration quality in **strictly fewer** trial evaluations. The
+//! comparison is exact, not statistical — the held-out job, cluster,
+//! and simulator seed are identical across the cold and warm sessions,
+//! so equal final configurations price to bit-identical durations
+//! through the same fingerprinted trial path, and the CLI `transfer`
+//! smoke (CI) asserts:
+//!
+//! * a neighbor was actually found and used (`warm_from`),
+//! * the warm session ran strictly fewer trials than the cold one,
+//! * the warm final duration is ≤ the cold final duration,
+//! * outcomes reproduce bit-for-bit across service worker counts.
+
+use crate::cluster::ClusterSpec;
+use crate::engine::{prepare, run_planned, Job};
+use crate::report::Table;
+use crate::service::{ServiceOpts, SessionRequest, TuningService};
+use crate::sim::SimOpts;
+use crate::tuner::{tune, TuneOpts, TuneOutcome};
+use crate::workloads;
+
+/// Transfer-scenario sizing.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferOpts {
+    /// Training sessions (tenants) served before the held-out workload.
+    /// The catalog cycles shuffle-heavy / iterative-cached /
+    /// combine-heavy families at growing scales, so the index holds
+    /// both similar and dissimilar evidence.
+    pub tenants: u32,
+    /// Service worker threads.
+    pub workers: usize,
+    /// kNN admission threshold (profile distance).
+    pub threshold: f64,
+}
+
+impl Default for TransferOpts {
+    fn default() -> Self {
+        TransferOpts { tenants: 6, workers: 4, threshold: 0.25 }
+    }
+}
+
+/// Every session in the scenario shares one simulator setup: the trial
+/// streams differ only in their jobs, exactly like one tenant fleet on
+/// one cluster.
+fn sim() -> SimOpts {
+    SimOpts { jitter: 0.04, seed: 0x7A1F, straggler: None }
+}
+
+fn tune_opts() -> TuneOpts {
+    TuneOpts { short_version: true, ..TuneOpts::default() }
+}
+
+/// Training tenant `t`'s application: families cycle, scales grow every
+/// full cycle (mirrors [`crate::experiments::service`]'s catalog shape;
+/// partitions stay fixed so family similarity dominates the profile).
+pub fn training_job(t: u32) -> Job {
+    let scale = 1 + t as u64 / 3;
+    match t % 3 {
+        0 => workloads::sort_by_key(1_000_000 * scale, 16),
+        1 => workloads::kmeans(50_000 * scale, 20, 4, 2, 16),
+        _ => workloads::aggregate_by_key(1_500_000 * scale, 40_000, 16),
+    }
+}
+
+/// The held-out workload: a sort-by-key at a scale the training
+/// catalog never saw — similar to the trained sort-by-key tenants
+/// (1 % more records than the nearest, `tenant3`'s 2 M instance, so
+/// the neighbor's keep/reject signs transfer robustly), the same
+/// application to no one.
+pub fn held_out_job() -> Job {
+    workloads::sort_by_key(2_020_000, 16)
+}
+
+/// Outcome of the transfer scenario.
+#[derive(Clone, Debug)]
+pub struct TransferReport {
+    pub opts: TransferOpts,
+    /// Sessions recorded in the service's index after training.
+    pub trained: usize,
+    /// The neighbor the held-out session transferred from (None = the
+    /// warm path fell back cold — a scenario failure).
+    pub warm_from: Option<String>,
+    /// The held-out workload tuned cold (the paper's methodology).
+    pub cold: TuneOutcome,
+    /// The held-out workload tuned through the warm-started service.
+    pub warm: TuneOutcome,
+}
+
+impl TransferReport {
+    /// Trial evaluations saved by the transfer (runs include the
+    /// baseline run both sessions pay).
+    pub fn runs_saved(&self) -> i64 {
+        self.cold.runs() as i64 - self.warm.runs() as i64
+    }
+
+    /// The scenario's acceptance predicate: evidence was found and
+    /// used, strictly fewer runs, and final quality no worse than cold
+    /// (both finite — a crashed final configuration fails).
+    pub fn transfer_won(&self) -> bool {
+        self.warm_from.is_some()
+            && self.warm.runs() < self.cold.runs()
+            && self.warm.best.is_finite()
+            && self.cold.best.is_finite()
+            && self.warm.best <= self.cold.best
+    }
+}
+
+/// Run the scenario: train `opts.tenants` sessions, then serve the
+/// held-out workload warm; the cold control is a direct [`tune`] on
+/// the identical job/sim (bit-identical to a cold serve by the
+/// service-parity invariant).
+pub fn transfer_experiment(opts: &TransferOpts, cluster: &ClusterSpec) -> TransferReport {
+    // ---- cold control ----
+    let held_out = held_out_job();
+    let plan = prepare(&held_out).expect("held-out workload plans cleanly");
+    let mut cold_runner = |conf: &crate::conf::SparkConf| {
+        run_planned(&plan, conf, cluster, &sim()).effective_duration()
+    };
+    let cold = tune(&mut cold_runner, &tune_opts());
+
+    // ---- train ----
+    let svc = TuningService::new(
+        cluster.clone(),
+        ServiceOpts {
+            workers: opts.workers,
+            warm_start: true,
+            warm_threshold: opts.threshold,
+            ..ServiceOpts::default()
+        },
+    );
+    let training: Vec<SessionRequest> = (0..opts.tenants)
+        .map(|t| SessionRequest {
+            name: format!("tenant{t}/{}", training_job(t).name),
+            job: training_job(t),
+            tune: tune_opts(),
+            sim: sim(),
+        })
+        .collect();
+    svc.serve(&training);
+    let trained = svc.profiled_sessions();
+
+    // ---- transfer to the held-out workload ----
+    let warm_session = svc
+        .serve(&[SessionRequest {
+            name: "held-out/sort-by-key".into(),
+            job: held_out,
+            tune: tune_opts(),
+            sim: sim(),
+        }])
+        .remove(0);
+
+    TransferReport {
+        opts: *opts,
+        trained,
+        warm_from: warm_session.warm_from,
+        cold,
+        warm: warm_session.outcome,
+    }
+}
+
+/// Render the transfer report as a metric table.
+pub fn transfer_table(r: &TransferReport) -> Table {
+    Table::two_col(
+        format!(
+            "Evidence transfer — {} training tenants, threshold {:.2}",
+            r.opts.tenants, r.opts.threshold
+        ),
+        &[
+            ("sessions recorded in the index", r.trained.to_string()),
+            (
+                "held-out warm-started from",
+                r.warm_from.clone().unwrap_or_else(|| "<no neighbor in range>".into()),
+            ),
+            ("cold runs (trials + baseline)", r.cold.runs().to_string()),
+            ("warm runs (trials + baseline)", r.warm.runs().to_string()),
+            ("runs saved by transfer", r.runs_saved().to_string()),
+            ("cold final duration", format!("{:.3}s", r.cold.best)),
+            ("warm final duration", format!("{:.3}s", r.warm.best)),
+            (
+                "final configurations agree",
+                (r.warm.best_conf == r.cold.best_conf).to_string(),
+            ),
+            ("transfer won (fewer runs, quality ≤ cold)", r.transfer_won().to_string()),
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::outcomes_identical;
+
+    #[test]
+    fn transfer_reaches_cold_quality_in_fewer_runs() {
+        let r = transfer_experiment(&TransferOpts::default(), &ClusterSpec::mini());
+        assert_eq!(r.trained, 6);
+        let from = r.warm_from.as_deref().expect("a trained sort-by-key must be in range");
+        assert!(from.contains("sort-by-key"), "nearest neighbor is {from:?}");
+        assert!(
+            r.warm.runs() < r.cold.runs(),
+            "warm {} vs cold {} runs",
+            r.warm.runs(),
+            r.cold.runs()
+        );
+        assert_eq!(r.warm.best_conf, r.cold.best_conf, "transfer must land on the cold conf");
+        assert_eq!(
+            r.warm.best.to_bits(),
+            r.cold.best.to_bits(),
+            "same conf on the same trial key prices bit-identically"
+        );
+        assert!(r.transfer_won());
+    }
+
+    #[test]
+    fn transfer_is_deterministic_across_thread_counts() {
+        let base = transfer_experiment(
+            &TransferOpts { workers: 1, ..TransferOpts::default() },
+            &ClusterSpec::mini(),
+        );
+        for workers in [4usize, 8] {
+            let r = transfer_experiment(
+                &TransferOpts { workers, ..TransferOpts::default() },
+                &ClusterSpec::mini(),
+            );
+            assert_eq!(r.warm_from, base.warm_from, "workers={workers}");
+            assert!(outcomes_identical(&r.cold, &base.cold), "cold diverged, workers={workers}");
+            assert!(outcomes_identical(&r.warm, &base.warm), "warm diverged, workers={workers}");
+        }
+    }
+
+    #[test]
+    fn threshold_zero_disables_transfer() {
+        // With an impossible threshold nothing is in range: the
+        // held-out session runs cold through the warm-enabled service
+        // and the report says so.
+        let r = transfer_experiment(
+            &TransferOpts { threshold: 0.0, ..TransferOpts::default() },
+            &ClusterSpec::mini(),
+        );
+        assert!(r.warm_from.is_none());
+        assert_eq!(r.warm.runs(), r.cold.runs());
+        assert!(outcomes_identical(&r.warm, &r.cold), "cold fallback must equal direct tune");
+        assert!(!r.transfer_won());
+    }
+
+    #[test]
+    fn table_reports_the_headline_numbers() {
+        let r = transfer_experiment(&TransferOpts::default(), &ClusterSpec::mini());
+        let md = transfer_table(&r).to_markdown();
+        assert!(md.contains("runs saved by transfer"), "{md}");
+        assert!(md.contains("held-out warm-started from"), "{md}");
+        assert!(md.contains("| transfer won (fewer runs, quality ≤ cold) | true |"), "{md}");
+    }
+}

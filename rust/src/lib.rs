@@ -28,10 +28,14 @@
 //!   multi-threaded [`tuner::TrialExecutor`] that evaluates independent
 //!   trials in parallel with bit-identical results ([`tuner`]).
 //! * A **tuning-as-a-service core** ([`service`]): canonical trial
-//!   fingerprints, a sharded LRU memo cache, and a single-flight
-//!   session server that serves many concurrent tuning sessions
-//!   without ever simulating the same trial twice — bit-identical to
-//!   direct tuning.
+//!   fingerprints, a sharded cost-aware-LRU memo cache, and a
+//!   single-flight session server that serves many concurrent tuning
+//!   sessions without ever simulating the same trial twice —
+//!   bit-identical to direct tuning — plus **cross-workload evidence
+//!   transfer**: deterministic job feature profiles, a hand-rolled kNN
+//!   index over completed sessions, and warm-started decision lists
+//!   that replay a similar workload's kept steps in strictly fewer
+//!   trials.
 //! * Benchmarks from the paper's evaluation and the multi-tenant
 //!   scenario ([`workloads`]), experiment drivers for every figure and
 //!   table plus FIFO-vs-FAIR tenancy and the service stress scenario

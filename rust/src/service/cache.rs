@@ -1,4 +1,4 @@
-//! Sharded, LRU-bounded memoization cache for trial results.
+//! Sharded, cost-aware-LRU memoization cache for trial results.
 //!
 //! [`ShardedCache`] is a lock-striped hash map keyed by
 //! [`Fingerprint`]: the key space is split across `shards` independent
@@ -7,15 +7,29 @@
 //! classic Guava-/Caffeine-style striped cache, hand-rolled because the
 //! offline crate set has no concurrency crates.
 //!
-//! Each shard is bounded: entries carry a last-touch tick and a
-//! `BTreeMap` recency index, so eviction removes the least-recently-used
-//! entry in `O(log n)`. Hit/miss/insert/evict counters are process-wide
-//! atomics, cheap enough to leave on in production; [`CacheStats`] is a
+//! Each shard is bounded, and eviction is **cost-aware** (ROADMAP
+//! "cache admission"): entries carry the recorded cost of computing
+//! them ([`ShardedCache::insert_costed`]), and the shard evicts by a
+//! GreedyDual-style priority `inflation + cost` — `inflation` is a
+//! per-shard clock that rises to the priority of whatever was last
+//! evicted. A burst of cheap mini-trials therefore cycles among
+//! themselves while an expensive k-means trial, whose priority sits
+//! `cost` above the cheap tide, survives until enough evictions have
+//! raised the water level past it (it ages out, it is not pinned
+//! forever). Touching an entry refreshes its priority to the *current*
+//! `inflation + cost`, so recency still matters; with uniform costs the
+//! policy degrades to exact LRU (ties break on a monotone touch tick),
+//! which is precisely the historical behavior of this cache —
+//! [`ShardedCache::insert`] records cost 0.
+//!
+//! Hit/miss/insert/evict counters are process-wide atomics, cheap
+//! enough to leave on in production; [`CacheStats`] is a
 //! coherent-enough snapshot for reporting.
 //!
 //! The cache stores **values, not computations** — single-flight
 //! deduplication of concurrent identical trials lives one layer up, in
-//! [`super::server`].
+//! [`super::server`] (which also measures each computation's wall time
+//! and records it as the entry's cost).
 
 use super::fingerprint::Fingerprint;
 use std::collections::{BTreeMap, HashMap};
@@ -23,7 +37,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// Counter snapshot. `hits`/`misses` count [`ShardedCache::get`] calls;
-/// `inserts`/`evictions` count entries added and LRU-dropped.
+/// `inserts`/`evictions` count entries added and priority-dropped.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
@@ -44,18 +58,51 @@ impl CacheStats {
     }
 }
 
-struct Shard<V> {
-    /// fingerprint → (value, last-touch tick).
-    map: HashMap<u128, (V, u64)>,
-    /// last-touch tick → fingerprint; the smallest tick is the LRU entry.
-    recency: BTreeMap<u64, u128>,
-    /// Monotone per-shard clock, bumped on every touch.
-    tick: u64,
+/// One cached trial: its value, its recorded computation cost, and its
+/// current position in the shard's eviction queue.
+struct Entry<V> {
+    value: V,
+    /// Sanitized cost (finite, ≥ 0) recorded at insert.
+    cost: f64,
+    /// Key of this entry in `queue`: `(priority bits, touch tick)`.
+    queue_key: (u64, u64),
 }
 
-/// Lock-striped memo cache keyed by [`Fingerprint`], LRU-bounded per
-/// shard. `V` is cloned out on hits — trial results are small (an
-/// effective duration, or a compact result struct).
+struct Shard<V> {
+    /// fingerprint → entry.
+    map: HashMap<u128, Entry<V>>,
+    /// Eviction queue: `(priority bits, touch tick)` → fingerprint. The
+    /// first (smallest) key is the eviction victim. Priorities are
+    /// non-negative finite f64s, so their IEEE bit patterns order
+    /// identically to their values; the tick breaks ties LRU-first.
+    queue: BTreeMap<(u64, u64), u128>,
+    /// Monotone per-shard clock, bumped on every touch.
+    tick: u64,
+    /// GreedyDual water level: the priority of the last evicted entry.
+    /// Monotone non-decreasing; new/refreshed priorities are
+    /// `inflation + cost`.
+    inflation: f64,
+}
+
+/// Cost of entries inserted through the plain [`ShardedCache::insert`]
+/// path, and the floor costs are clamped to.
+const COST_FLOOR: f64 = 0.0;
+/// Cap on recorded costs: keeps priorities finite and prevents a
+/// mis-measured cost (or an ∞) from pinning an entry beyond any
+/// realistic eviction horizon.
+const COST_CAP: f64 = 1e9;
+
+fn sanitize_cost(cost: f64) -> f64 {
+    if cost.is_finite() {
+        cost.clamp(COST_FLOOR, COST_CAP)
+    } else {
+        COST_FLOOR
+    }
+}
+
+/// Lock-striped memo cache keyed by [`Fingerprint`], cost-aware-LRU
+/// bounded per shard. `V` is cloned out on hits — trial results are
+/// small (an effective duration, or a compact result struct).
 pub struct ShardedCache<V> {
     shards: Vec<Mutex<Shard<V>>>,
     cap_per_shard: usize,
@@ -75,7 +122,12 @@ impl<V: Clone> ShardedCache<V> {
         ShardedCache {
             shards: (0..shards)
                 .map(|_| {
-                    Mutex::new(Shard { map: HashMap::new(), recency: BTreeMap::new(), tick: 0 })
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        queue: BTreeMap::new(),
+                        tick: 0,
+                        inflation: 0.0,
+                    })
                 })
                 .collect(),
             cap_per_shard,
@@ -91,14 +143,14 @@ impl<V: Clone> ShardedCache<V> {
         ((fp.0 >> 64) as u64 % self.shards.len() as u64) as usize
     }
 
-    /// Look up a trial result, refreshing its recency on a hit.
+    /// Look up a trial result, refreshing its priority on a hit.
     pub fn get(&self, fp: Fingerprint) -> Option<V> {
         self.lookup(fp, true)
     }
 
     /// [`get`](ShardedCache::get) without touching the hit/miss
     /// counters — for internal re-checks that would otherwise count one
-    /// logical lookup twice (recency is still refreshed).
+    /// logical lookup twice (the priority is still refreshed).
     pub fn peek(&self, fp: Fingerprint) -> Option<V> {
         self.lookup(fp, false)
     }
@@ -107,16 +159,19 @@ impl<V: Clone> ShardedCache<V> {
         let mut guard = self.shards[self.shard_of(fp)].lock().expect("cache shard poisoned");
         let shard = &mut *guard;
         match shard.map.get_mut(&fp.0) {
-            Some((value, tick)) => {
-                let stale = *tick;
+            // One hash probe on the hit path: refresh the entry's
+            // priority to the current `inflation + cost` in place.
+            Some(e) => {
                 shard.tick += 1;
-                *tick = shard.tick;
-                shard.recency.remove(&stale);
-                shard.recency.insert(shard.tick, fp.0);
+                let priority = shard.inflation + e.cost;
+                let key = (priority.to_bits(), shard.tick);
+                shard.queue.remove(&e.queue_key);
+                shard.queue.insert(key, fp.0);
+                e.queue_key = key;
                 if count {
                     self.hits.fetch_add(1, Ordering::Relaxed);
                 }
-                Some(value.clone())
+                Some(e.value.clone())
             }
             None => {
                 if count {
@@ -127,23 +182,38 @@ impl<V: Clone> ShardedCache<V> {
         }
     }
 
-    /// Insert (or refresh) a trial result, evicting LRU entries if the
-    /// shard exceeds its capacity.
+    /// Insert (or refresh) a trial result with zero recorded cost —
+    /// plain LRU behavior among its cost-0 peers.
     pub fn insert(&self, fp: Fingerprint, value: V) {
+        self.insert_costed(fp, value, 0.0);
+    }
+
+    /// Insert (or refresh) a trial result, recording the cost (seconds
+    /// of wall-clock compute, as measured by the server's memoization
+    /// layer) that eviction weighs against recency. Evicts
+    /// lowest-priority entries while the shard exceeds its capacity.
+    /// Non-finite or negative costs are clamped (a crash marker's ∞
+    /// must not pin its entry forever).
+    pub fn insert_costed(&self, fp: Fingerprint, value: V, cost: f64) {
+        let cost = sanitize_cost(cost);
         let mut guard = self.shards[self.shard_of(fp)].lock().expect("cache shard poisoned");
         let shard = &mut *guard;
         shard.tick += 1;
-        let tick = shard.tick;
-        if let Some((_, stale)) = shard.map.insert(fp.0, (value, tick)) {
-            shard.recency.remove(&stale);
+        let priority = shard.inflation + cost;
+        let key = (priority.to_bits(), shard.tick);
+        if let Some(old) = shard.map.insert(fp.0, Entry { value, cost, queue_key: key }) {
+            shard.queue.remove(&old.queue_key);
         }
-        shard.recency.insert(tick, fp.0);
+        shard.queue.insert(key, fp.0);
         self.inserts.fetch_add(1, Ordering::Relaxed);
         while shard.map.len() > self.cap_per_shard {
-            let (&lru_tick, &lru_key) =
-                shard.recency.first_key_value().expect("recency tracks every entry");
-            shard.recency.remove(&lru_tick);
-            shard.map.remove(&lru_key);
+            let (&key, &victim) =
+                shard.queue.first_key_value().expect("queue tracks every entry");
+            shard.queue.remove(&key);
+            shard.map.remove(&victim);
+            // Raise the water level to the evicted priority: survivors'
+            // head start shrinks by exactly what the victim had left.
+            shard.inflation = shard.inflation.max(f64::from_bits(key.0));
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -212,7 +282,9 @@ mod tests {
 
     #[test]
     fn lru_eviction_is_touch_ordered() {
-        // One shard, capacity 2 → strict LRU semantics are observable.
+        // One shard, capacity 2, uniform (zero) costs → strict LRU
+        // semantics are observable: cost-awareness degrades to the
+        // historical policy when costs are equal.
         let c: ShardedCache<u64> = ShardedCache::new(1, 2);
         c.insert(fp(1), 1);
         c.insert(fp(2), 2);
@@ -241,6 +313,76 @@ mod tests {
         tiny.insert(fp(9), 9);
         assert_eq!(tiny.get(fp(9)), Some(9));
         assert!(!tiny.is_empty());
+    }
+
+    #[test]
+    fn expensive_entry_survives_a_cheap_thrash_burst() {
+        // The ROADMAP "cache admission" bug: under pure recency, one
+        // burst of cheap mini trials evicted an expensive k-means
+        // trial. Cost-aware eviction keeps the expensive entry while
+        // the cheap tide cycles among itself.
+        let c: ShardedCache<u64> = ShardedCache::new(1, 4);
+        c.insert_costed(fp(1000), 42, 10.0); // the expensive trial
+        for i in 0..40u128 {
+            c.insert_costed(fp(i), i as u64, 0.001); // cheap mini trials
+        }
+        assert_eq!(c.peek(fp(1000)), Some(42), "expensive trial must survive the burst");
+        assert!(c.stats().evictions >= 37, "cheap entries must have cycled");
+        assert!(c.len() <= 4);
+    }
+
+    #[test]
+    fn expensive_entries_age_out_not_pin_forever() {
+        // GreedyDual aging: evictions raise the shard's water level by
+        // the victims' priorities, so an expensive-but-stale entry is
+        // eventually displaced by persistent moderately-priced traffic
+        // (capacity 2, cost 5 vs a stream of cost-2 entries: the fifth
+        // cost-2 insert lifts inflation past 5 and the sixth evicts it).
+        let c: ShardedCache<u64> = ShardedCache::new(1, 2);
+        c.insert_costed(fp(1000), 42, 5.0);
+        for i in 0..4u128 {
+            c.insert_costed(fp(i), i as u64, 2.0);
+        }
+        // Cost bought several rounds of survival… (this peek also
+        // refreshes its priority at the current water level)
+        assert_eq!(c.peek(fp(1000)), Some(42), "cost must outlast the first rounds");
+        for i in 4..10u128 {
+            c.insert_costed(fp(i), i as u64, 2.0);
+        }
+        // …but the rising water level eventually displaces it.
+        assert_eq!(c.peek(fp(1000)), None, "expensive entry must eventually age out");
+    }
+
+    #[test]
+    fn touch_refreshes_costed_priority() {
+        // A touched expensive entry re-queues at the *current* water
+        // level + cost: recency and cost compose.
+        let c: ShardedCache<u64> = ShardedCache::new(1, 2);
+        c.insert_costed(fp(1), 1, 1.0);
+        c.insert_costed(fp(2), 2, 1.0);
+        // Evict a few rounds to raise inflation…
+        c.insert_costed(fp(3), 3, 1.0);
+        // …then the surviving entries' refresh keeps them ahead.
+        let survivor = if c.peek(fp(1)).is_some() { 1u128 } else { 2 };
+        assert_eq!(c.get(fp(survivor)), Some(survivor as u64));
+        c.insert_costed(fp(4), 4, 0.0);
+        assert_eq!(
+            c.peek(fp(survivor)),
+            Some(survivor as u64),
+            "refreshed costed entry outranks a fresh cost-0 insert"
+        );
+    }
+
+    #[test]
+    fn non_finite_costs_are_sanitized() {
+        // A crash trial's ∞ (or a NaN from a broken clock) must not pin
+        // its entry: it inserts at cost 0 and behaves like plain LRU.
+        let c: ShardedCache<u64> = ShardedCache::new(1, 2);
+        c.insert_costed(fp(1), 1, f64::INFINITY);
+        c.insert_costed(fp(2), 2, f64::NAN);
+        c.insert_costed(fp(3), 3, -4.0);
+        assert_eq!(c.peek(fp(1)), None, "∞-cost entry must still be evictable");
+        assert_eq!(c.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Nearest-neighbor index over completed tuning sessions.
+//!
+//! Each finished session leaves a [`NeighborRecord`]: its workload's
+//! feature profile ([`super::profile::JobProfile`]) plus the evidence a
+//! future similar workload can reuse — the session's **kept decision
+//! steps** in keep order, and its baseline/best durations. A new
+//! session consults [`KnnIndex::nearest`] at admission: a neighbor
+//! within the distance threshold seeds the session's decision list
+//! ([`crate::tuner::WarmStart`]); otherwise the session runs the
+//! paper's default order cold.
+//!
+//! Hand-rolled (the offline crate set has no ANN/space-partitioning
+//! crates): a linear scan over normalized-L2 distances. Session counts
+//! are small (thousands, not millions — one entry per *application*
+//! tuned, not per trial), so a scan is both exact and fast enough; the
+//! scan order is insertion order and ties break toward the **earliest
+//! inserted** record, making lookups deterministic for any history.
+
+use super::profile::JobProfile;
+
+/// Evidence left behind by one completed tuning session.
+#[derive(Clone, Debug)]
+pub struct NeighborRecord {
+    /// Session display name (e.g. `"tenant3/app1"`), for reporting.
+    pub name: String,
+    /// The workload's feature profile at admission.
+    pub profile: JobProfile,
+    /// Labels of the decision steps the session kept, in keep order —
+    /// exactly what [`crate::tuner::WarmStart`] replays.
+    pub kept_steps: Vec<String>,
+    /// Runtime under the default configuration (the session's trial 1).
+    pub baseline: f64,
+    /// Runtime under the session's final configuration.
+    pub best: f64,
+}
+
+/// A nearest neighbor and how far away it is.
+#[derive(Clone, Copy, Debug)]
+pub struct Neighbor<'a> {
+    /// Insertion index of the record (stable across lookups).
+    pub index: usize,
+    /// Normalized-L2 distance to the query profile.
+    pub distance: f64,
+    pub record: &'a NeighborRecord,
+}
+
+/// Exact nearest-neighbor index over session profiles.
+#[derive(Debug, Default)]
+pub struct KnnIndex {
+    entries: Vec<NeighborRecord>,
+}
+
+impl KnnIndex {
+    pub fn new() -> KnnIndex {
+        KnnIndex { entries: Vec::new() }
+    }
+
+    /// Record a completed session. Insertion order is part of the
+    /// index's deterministic contract (tie-breaking, indices), so
+    /// callers must insert in a reproducible order — the service
+    /// records batches in request order.
+    pub fn insert(&mut self, record: NeighborRecord) {
+        self.entries.push(record);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// All records, in insertion order.
+    pub fn records(&self) -> &[NeighborRecord] {
+        &self.entries
+    }
+
+    /// The nearest record within `max_dist` (inclusive), or `None` when
+    /// the index is empty or every record is too far — the caller falls
+    /// back to a cold session. Deterministic: equidistant records
+    /// resolve to the earliest inserted one (strict `<` scan).
+    pub fn nearest(&self, query: &JobProfile, max_dist: f64) -> Option<Neighbor<'_>> {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, rec) in self.entries.iter().enumerate() {
+            let d = rec.profile.distance(query);
+            if d <= max_dist && best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                best = Some((i, d));
+            }
+        }
+        best.map(|(index, distance)| Neighbor {
+            index,
+            distance,
+            record: &self.entries[index],
+        })
+    }
+
+    /// The `k` nearest records (no distance cutoff), sorted by
+    /// `(distance, insertion index)` — for diagnostics and reports.
+    pub fn k_nearest(&self, query: &JobProfile, k: usize) -> Vec<Neighbor<'_>> {
+        let mut scored: Vec<(usize, f64)> = self
+            .entries
+            .iter()
+            .enumerate()
+            .map(|(i, rec)| (i, rec.profile.distance(query)))
+            .collect();
+        // Distances are finite by construction (profiles sanitize NaN);
+        // total_cmp keeps the sort deterministic regardless.
+        scored.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        scored
+            .into_iter()
+            .take(k)
+            .map(|(index, distance)| Neighbor { index, distance, record: &self.entries[index] })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::profile::DIM;
+
+    /// A synthetic profile with every component at `v` — distances are
+    /// then exactly `|v - w|`, so thresholds and ties are testable
+    /// without running the extractor.
+    fn flat(v: f64) -> JobProfile {
+        JobProfile { features: [v; DIM] }
+    }
+
+    fn rec(name: &str, v: f64) -> NeighborRecord {
+        NeighborRecord {
+            name: name.into(),
+            profile: flat(v),
+            kept_steps: vec!["Kryo serializer".into()],
+            baseline: 100.0,
+            best: 80.0,
+        }
+    }
+
+    #[test]
+    fn empty_index_falls_back() {
+        let idx = KnnIndex::new();
+        assert!(idx.is_empty());
+        assert!(idx.nearest(&flat(0.5), f64::INFINITY).is_none());
+        assert!(idx.k_nearest(&flat(0.5), 3).is_empty());
+    }
+
+    #[test]
+    fn nearest_picks_the_closest_record() {
+        let mut idx = KnnIndex::new();
+        idx.insert(rec("far", 0.9));
+        idx.insert(rec("near", 0.52));
+        idx.insert(rec("mid", 0.7));
+        let n = idx.nearest(&flat(0.5), 1.0).expect("in range");
+        assert_eq!(n.record.name, "near");
+        assert_eq!(n.index, 1);
+        assert!((n.distance - 0.02).abs() < 1e-12, "{}", n.distance);
+        let ranked = idx.k_nearest(&flat(0.5), 3);
+        let names: Vec<&str> = ranked.iter().map(|n| n.record.name.as_str()).collect();
+        assert_eq!(names, ["near", "mid", "far"]);
+    }
+
+    #[test]
+    fn threshold_cuts_off_distant_neighbors() {
+        let mut idx = KnnIndex::new();
+        // 0.75 and 0.5 are exact in binary: the distance is exactly 0.25.
+        idx.insert(rec("only", 0.75));
+        assert!(idx.nearest(&flat(0.5), 0.2).is_none(), "outside the threshold");
+        let n = idx.nearest(&flat(0.5), 0.25).expect("inclusive threshold");
+        assert_eq!(n.record.name, "only");
+        assert!(idx.nearest(&flat(0.5), 0.4).is_some());
+    }
+
+    #[test]
+    fn ties_break_toward_the_earliest_insertion() {
+        let mut idx = KnnIndex::new();
+        idx.insert(rec("first", 0.6));
+        idx.insert(rec("twin", 0.6)); // identical profile, later insert
+        idx.insert(rec("other-side", 0.4)); // same distance from 0.5
+        let n = idx.nearest(&flat(0.5), 1.0).expect("in range");
+        assert_eq!(n.record.name, "first", "equidistant records resolve to the earliest");
+        assert_eq!(n.index, 0);
+        // k_nearest orders ties by insertion index too.
+        let ranked = idx.k_nearest(&flat(0.5), 3);
+        let names: Vec<&str> = ranked.iter().map(|n| n.record.name.as_str()).collect();
+        assert_eq!(names, ["first", "twin", "other-side"]);
+    }
+
+    #[test]
+    fn lookups_are_stable_across_calls() {
+        let mut idx = KnnIndex::new();
+        for i in 0..8 {
+            idx.insert(rec(&format!("r{i}"), 0.1 * i as f64));
+        }
+        let a = idx.nearest(&flat(0.33), 1.0).unwrap().index;
+        for _ in 0..5 {
+            assert_eq!(idx.nearest(&flat(0.33), 1.0).unwrap().index, a);
+        }
+        assert_eq!(idx.len(), 8);
+        assert_eq!(idx.records()[a].name, format!("r{a}"));
+    }
+}

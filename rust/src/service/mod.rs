@@ -12,24 +12,39 @@
 //!   (`job × conf × cluster × sim-opts`), built on
 //!   [`SparkConf::canonical_settings`](crate::conf::SparkConf::canonical_settings)
 //!   so the fingerprint and conf equality share one source of truth;
-//! * [`cache`] — a lock-striped, LRU-bounded memo cache of trial
-//!   results with hit/miss/evict counters;
+//! * [`cache`] — a lock-striped, cost-aware-LRU memo cache of trial
+//!   results with hit/miss/evict counters (expensive trials outlive
+//!   bursts of cheap ones);
+//! * [`profile`] — deterministic, scale-normalized feature vectors per
+//!   prepared job: the coordinate system for workload similarity;
+//! * [`knn`] — a nearest-neighbor index over completed sessions' kept
+//!   decision steps, the evidence store for cross-workload transfer;
 //! * [`server`] — the session manager: queues tuning requests, dedupes
-//!   identical in-flight trials across sessions (single-flight), and
-//!   fans sessions out over an OS-thread pool reusing
-//!   [`TrialExecutor`](crate::tuner::TrialExecutor).
+//!   identical in-flight trials across sessions (single-flight), fans
+//!   sessions out over an OS-thread pool reusing
+//!   [`TrialExecutor`](crate::tuner::TrialExecutor), and (opt-in)
+//!   warm-starts admitted sessions from their nearest recorded
+//!   neighbor's kept steps.
 //!
 //! Invariant pinned by the tests: serving a session through the cache
 //! is **bit-identical** to a direct [`tune`](crate::tuner::tune) call —
 //! for any worker count and any cache warmth — because every simulated
-//! trial is a pure function of its fingerprinted key.
+//! trial is a pure function of its fingerprinted key. Warm-started
+//! sessions are the deliberate exception: they run *strictly fewer*
+//! trials, and both admission and evidence recording happen at
+//! deterministic batch boundaries, so their outcomes too are invariant
+//! across worker counts.
 
 pub mod cache;
 pub mod fingerprint;
+pub mod knn;
+pub mod profile;
 pub mod server;
 
 pub use cache::{CacheStats, ShardedCache};
 pub use fingerprint::{fingerprint_conf, fingerprint_trial, Fingerprint, Fp128};
+pub use knn::{KnnIndex, Neighbor, NeighborRecord};
+pub use profile::JobProfile;
 pub use server::{
     outcomes_identical, ServiceOpts, ServiceStats, SessionOutcome, SessionRequest, TuningService,
 };

@@ -1,0 +1,419 @@
+//! Job feature profiles: the evidence-transfer coordinate system.
+//!
+//! The memo cache ([`super::cache`]) dedupes *exact* trial keys; this
+//! module gives the service a notion of **similar** workloads so a new
+//! application can be warm-started from a neighbor's decisions
+//! (retrieval-style tuning, see PAPERS.md: "Zero-Execution
+//! Retrieval-Augmented Configuration Tuning of Spark Applications").
+//!
+//! [`JobProfile::of`] extracts a fixed-dimension feature vector from a
+//! **prepared** job ([`JobPlan`]) plus the cluster it will run on and
+//! the simulator options — everything that shapes a session *except*
+//! the configuration being tuned (the conf is the output of tuning,
+//! not part of a workload's identity). The features are:
+//!
+//! * **deterministic** — pure arithmetic over the plan, bit-stable
+//!   across calls, processes, and thread counts;
+//! * **scale-normalized** — dominated by ratios (shuffle-to-input,
+//!   cached-parent fraction, sort fraction, …) and log-compressed
+//!   magnitudes, so the same workload family at 2× the records moves a
+//!   short distance while a different family (shuffle-heavy vs
+//!   iterative-cached vs combine-heavy) moves a long one;
+//! * **stably serialized** — [`JobProfile::serialize`] emits a
+//!   version-tagged, exact (bit-pattern) textual form that
+//!   [`JobProfile::deserialize`] round-trips, so a future persistent
+//!   kNN index (ROADMAP: cache persistence) can spill profiles next to
+//!   the trial cache.
+//!
+//! Distances between profiles ([`JobProfile::distance`], normalized
+//! L2) feed the nearest-neighbor index in [`super::knn`].
+
+use crate::cluster::ClusterSpec;
+use crate::engine::{JobPlan, Locality, StageInput, StageOutput};
+use crate::sim::SimOpts;
+
+/// Number of feature components.
+pub const DIM: usize = 21;
+
+/// Component names, in vector order (used by the stable serialization
+/// and the sensitivity goldens).
+pub const COMPONENTS: [&str; DIM] = [
+    "stages_log",        // 0: log-compressed stage count
+    "depth_ratio",       // 1: critical path length / stages (1 = linear chain)
+    "fan_in",            // 2: fraction of stages with > 1 parent
+    "reuse",             // 3: fraction of stages feeding > 1 child
+    "shuffle_stages",    // 4: fraction of stages writing shuffle output
+    "sort_frac",         // 5: sorting shuffle reads / shuffle reads
+    "combine_frac",      // 6: map-side-combine writes / shuffle writes
+    "cached_parent",     // 7: fraction of stages reading a cached parent
+    "cache_writes",      // 8: fraction of stages persisting their output
+    "shuffle_to_input",  // 9: shuffle-write bytes / root input bytes (squashed)
+    "cache_to_heap",     // 10: persisted bytes / total executor heap (squashed)
+    "input_to_heap",     // 11: root input bytes / total heap (squashed)
+    "input_bytes_log",   // 12: log-compressed root input bytes
+    "bytes_per_task_log", // 13: log-compressed input bytes per task
+    "tasks_per_core",    // 14: mean stage tasks / total cores (squashed)
+    "task_skew",         // 15: max/mean stage task count excess (squashed)
+    "heap_per_core_log", // 16: log-compressed heap bytes per core
+    "cpu_per_record_log", // 17: log-compressed per-record CPU ns
+    "entropy_mean",      // 18: mean dataset entropy (compressibility)
+    "jitter",            // 19: simulator jitter coefficient
+    "straggler",         // 20: expected straggler slowdown mass (squashed)
+];
+
+/// Serialization domain/version tag; bump on any change to [`DIM`],
+/// [`COMPONENTS`], or the extraction arithmetic.
+const VERSION: &str = "sparktune.profile.v1";
+
+/// A deterministic, scale-normalized feature vector describing one
+/// prepared workload on one cluster under one simulator setup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobProfile {
+    pub features: [f64; DIM],
+}
+
+/// `x / (1 + x)`: squash an unbounded non-negative ratio into `[0, 1)`.
+fn squash(x: f64) -> f64 {
+    let x = x.max(0.0);
+    x / (1.0 + x)
+}
+
+/// `ln(1 + x) / ln(1 + cap)`: log-compress a magnitude so a 2× scale
+/// change moves the component by a small, bounded amount. Exceeds 1.0
+/// only for inputs beyond `cap` (harmless: distances stay finite).
+fn logn(x: f64, cap: f64) -> f64 {
+    (1.0 + x.max(0.0)).ln() / (1.0 + cap).ln()
+}
+
+/// NaN/∞ guard: a malformed plan must yield a usable (if bland)
+/// coordinate, never poison every distance with NaN.
+fn finite(x: f64) -> f64 {
+    if x.is_finite() {
+        x
+    } else {
+        0.0
+    }
+}
+
+impl JobProfile {
+    /// Extract the profile of a prepared job on `cluster` under `opts`.
+    pub fn of(plan: &JobPlan, cluster: &ClusterSpec, opts: &SimOpts) -> JobProfile {
+        let n = plan.stages.len().max(1) as f64;
+
+        // ---- DAG shape ----
+        // Critical path via parents (parents precede their stage by id).
+        let mut depth = vec![0usize; plan.stages.len()];
+        let mut crit = 0usize;
+        for s in &plan.stages {
+            let d = 1 + s.parents.iter().map(|&p| depth[p]).max().unwrap_or(0);
+            depth[s.id] = d;
+            crit = crit.max(d);
+        }
+        let fan_in = plan.stages.iter().filter(|s| s.parents.len() > 1).count() as f64;
+        let reuse = (0..plan.stages.len())
+            .filter(|&i| plan.children(i).len() > 1)
+            .count() as f64;
+
+        // ---- per-stage structure and volumes ----
+        let mut shuffle_writes = 0u32;
+        let mut combine_writes = 0u32;
+        let mut shuffle_reads = 0u32;
+        let mut sort_reads = 0u32;
+        let mut cached_parent = 0u32;
+        let mut cache_writes = 0u32;
+        let mut shuffle_bytes = 0.0f64;
+        let mut cached_bytes = 0.0f64;
+        let mut total_tasks = 0.0f64;
+        let mut max_tasks = 0.0f64;
+        let mut cpu_ns_sum = 0.0f64;
+        let mut entropy_sum = 0.0f64;
+        for s in &plan.stages {
+            match &s.output {
+                StageOutput::ShuffleWrite { map_side_combine, out, .. } => {
+                    shuffle_writes += 1;
+                    shuffle_bytes += out.payload as f64;
+                    if *map_side_combine {
+                        combine_writes += 1;
+                    }
+                }
+                StageOutput::Action => {}
+            }
+            let mut stage_cpu = s.pipeline_cpu_ns_per_record;
+            match &s.input {
+                StageInput::ShuffleRead { needs_sort, .. } => {
+                    shuffle_reads += 1;
+                    if *needs_sort {
+                        sort_reads += 1;
+                    }
+                }
+                StageInput::Generate { cpu_ns_per_record } => stage_cpu += cpu_ns_per_record,
+                StageInput::CacheRead { .. } => {}
+            }
+            if matches!(s.locality, Locality::CachedParent(_)) {
+                cached_parent += 1;
+            }
+            if s.cache_write {
+                cache_writes += 1;
+                let ds = s.cache_dataset.as_ref().unwrap_or(&s.in_data);
+                cached_bytes += ds.payload as f64;
+            }
+            total_tasks += s.tasks as f64;
+            max_tasks = max_tasks.max(s.tasks as f64);
+            cpu_ns_sum += stage_cpu;
+            entropy_sum += s.in_data.entropy;
+        }
+        let mean_tasks = total_tasks / n;
+
+        // ---- root input volume (what the job actually reads in) ----
+        let input_bytes: f64 =
+            plan.roots().iter().map(|&r| plan.stages[r].in_data.payload as f64).sum();
+        let input_bytes = input_bytes.max(1.0);
+
+        // ---- cluster geometry ----
+        let total_heap = cluster.total_heap().max(1) as f64;
+        let total_cores = cluster.total_cores().max(1) as f64;
+        let heap_per_core = cluster.heap_per_node as f64 / cluster.cores_per_node.max(1) as f64;
+
+        // ---- simulator setup ----
+        let straggler_mass = opts
+            .straggler
+            .map(|s| s.prob.max(0.0) * (s.factor - 1.0).max(0.0))
+            .unwrap_or(0.0);
+
+        let mut features = [
+            logn(n, 64.0),
+            crit as f64 / n,
+            fan_in / n,
+            reuse / n,
+            shuffle_writes as f64 / n,
+            sort_reads as f64 / shuffle_reads.max(1) as f64,
+            combine_writes as f64 / shuffle_writes.max(1) as f64,
+            cached_parent as f64 / n,
+            cache_writes as f64 / n,
+            squash(shuffle_bytes / input_bytes),
+            squash(cached_bytes / total_heap),
+            squash(input_bytes / total_heap),
+            logn(input_bytes, 1e13),
+            logn(input_bytes / total_tasks.max(1.0), 1e11),
+            squash(mean_tasks / total_cores),
+            squash(if mean_tasks > 0.0 { max_tasks / mean_tasks - 1.0 } else { 0.0 }),
+            logn(heap_per_core, 64.0 * (1u64 << 30) as f64),
+            logn(cpu_ns_sum / n, 1e6),
+            entropy_sum / n,
+            opts.jitter.clamp(0.0, 1.0),
+            squash(straggler_mass),
+        ];
+        for f in &mut features {
+            *f = finite(*f);
+        }
+        JobProfile { features }
+    }
+
+    /// Normalized L2 distance: `sqrt(mean of squared component deltas)`.
+    /// 0 for identical profiles; components are individually ~[0, 1], so
+    /// distances land in the same range (two maximally different
+    /// workloads sit around 1).
+    pub fn distance(&self, other: &JobProfile) -> f64 {
+        let sum: f64 = self
+            .features
+            .iter()
+            .zip(&other.features)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        (sum / DIM as f64).sqrt()
+    }
+
+    /// Exact, version-tagged textual form: component values are emitted
+    /// as their IEEE-754 bit patterns, so `deserialize(serialize(p)) ==
+    /// p` bit for bit on any platform.
+    pub fn serialize(&self) -> String {
+        let mut out = String::from(VERSION);
+        for (name, v) in COMPONENTS.iter().zip(&self.features) {
+            out.push(';');
+            out.push_str(name);
+            out.push('=');
+            out.push_str(&format!("{:016x}", v.to_bits()));
+        }
+        out
+    }
+
+    /// Parse [`serialize`](JobProfile::serialize) output. Rejects
+    /// unknown versions, missing/renamed/reordered components, and
+    /// malformed values — stale persisted profiles must fail loudly,
+    /// not alias a different coordinate system.
+    pub fn deserialize(s: &str) -> Result<JobProfile, String> {
+        let mut parts = s.split(';');
+        let version = parts.next().unwrap_or("");
+        if version != VERSION {
+            return Err(format!("unknown profile version {version:?} (want {VERSION})"));
+        }
+        let mut features = [0.0f64; DIM];
+        let mut i = 0usize;
+        for part in parts {
+            let (name, hex) =
+                part.split_once('=').ok_or_else(|| format!("malformed component {part:?}"))?;
+            if i >= DIM {
+                return Err(format!("too many components (extra {name:?})"));
+            }
+            if name != COMPONENTS[i] {
+                return Err(format!(
+                    "component {i} is {name:?}, expected {:?} (order is part of the format)",
+                    COMPONENTS[i]
+                ));
+            }
+            let bits = u64::from_str_radix(hex, 16)
+                .map_err(|e| format!("component {name:?}: bad bits {hex:?}: {e}"))?;
+            features[i] = f64::from_bits(bits);
+            i += 1;
+        }
+        if i != DIM {
+            return Err(format!("profile has {i} components, expected {DIM}"));
+        }
+        Ok(JobProfile { features })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::prepare;
+    use crate::sim::Straggler;
+    use crate::workloads;
+
+    fn sim() -> SimOpts {
+        SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }
+    }
+
+    fn profile_of(job: &crate::engine::Job) -> JobProfile {
+        let plan = prepare(job).expect("catalog jobs plan cleanly");
+        JobProfile::of(&plan, &ClusterSpec::mini(), &sim())
+    }
+
+    #[test]
+    fn profiles_are_deterministic_and_finite() {
+        let a = profile_of(&workloads::sort_by_key(2_000_000, 16));
+        let b = profile_of(&workloads::sort_by_key(2_000_000, 16));
+        assert_eq!(a, b, "same job must profile bit-identically");
+        for (name, v) in COMPONENTS.iter().zip(&a.features) {
+            assert!(v.is_finite(), "{name} is {v}");
+            assert!(*v >= 0.0, "{name} is {v}");
+        }
+        assert_eq!(a.distance(&b), 0.0);
+    }
+
+    #[test]
+    fn scale_normalization_keeps_families_together() {
+        // Same family at 10× the records moves a short distance; a
+        // different family (iterative cached k-means, combine-heavy
+        // aggregate) moves a long one. This ordering is what makes the
+        // kNN warm start pick the right evidence.
+        let sbk_small = profile_of(&workloads::sort_by_key(2_000_000, 16));
+        let sbk_large = profile_of(&workloads::sort_by_key(20_000_000, 16));
+        let km = profile_of(&workloads::kmeans(100_000, 20, 4, 2, 16));
+        let abk = profile_of(&workloads::aggregate_by_key(2_000_000, 50_000, 16));
+        let d_scale = sbk_small.distance(&sbk_large);
+        let d_km = sbk_small.distance(&km);
+        let d_abk = sbk_small.distance(&abk);
+        assert!(
+            d_scale * 4.0 < d_km,
+            "10× scale ({d_scale:.4}) must be far closer than k-means ({d_km:.4})"
+        );
+        assert!(
+            d_scale * 4.0 < d_abk,
+            "10× scale ({d_scale:.4}) must be far closer than aggregate ({d_abk:.4})"
+        );
+        assert!(d_scale < 0.1, "same-family scale distance too large: {d_scale:.4}");
+    }
+
+    #[test]
+    fn per_component_sensitivity_goldens() {
+        // Each named perturbation must move exactly the components it is
+        // supposed to move and leave clearly-unrelated ones untouched.
+        let base = profile_of(&workloads::sort_by_key(2_000_000, 16));
+        let idx = |name: &str| COMPONENTS.iter().position(|c| *c == name).unwrap();
+
+        // More records: only volume components move.
+        let bigger = profile_of(&workloads::sort_by_key(4_000_000, 16));
+        for name in ["stages_log", "depth_ratio", "sort_frac", "entropy_mean", "tasks_per_core"] {
+            assert_eq!(
+                base.features[idx(name)],
+                bigger.features[idx(name)],
+                "{name} must not move with record count"
+            );
+        }
+        for name in ["input_bytes_log", "bytes_per_task_log", "input_to_heap"] {
+            assert!(
+                base.features[idx(name)] < bigger.features[idx(name)],
+                "{name} must grow with record count"
+            );
+        }
+
+        // An iterative cached job lights up the DAG/cache components.
+        let km = profile_of(&workloads::kmeans(100_000, 20, 4, 3, 16));
+        for name in ["cached_parent", "cache_writes", "fan_in", "reuse"] {
+            assert!(
+                km.features[idx(name)] > base.features[idx(name)],
+                "{name} must be larger for k-means than sort-by-key"
+            );
+        }
+
+        // Combine-heavy aggregation flips combine_frac, drops sort_frac.
+        let abk = profile_of(&workloads::aggregate_by_key(2_000_000, 50_000, 16));
+        assert_eq!(abk.features[idx("combine_frac")], 1.0);
+        assert_eq!(abk.features[idx("sort_frac")], 0.0);
+        assert_eq!(base.features[idx("combine_frac")], 0.0);
+        assert_eq!(base.features[idx("sort_frac")], 1.0);
+
+        // Simulator setup is part of the coordinate system.
+        let plan = prepare(&workloads::sort_by_key(2_000_000, 16)).unwrap();
+        let strag = JobProfile::of(
+            &plan,
+            &ClusterSpec::mini(),
+            &SimOpts {
+                jitter: 0.04,
+                seed: 0x7E57,
+                straggler: Some(Straggler { prob: 0.02, factor: 8.0 }),
+            },
+        );
+        assert!(strag.features[idx("straggler")] > base.features[idx("straggler")]);
+        assert_eq!(strag.features[idx("input_bytes_log")], base.features[idx("input_bytes_log")]);
+
+        // Cluster geometry too (same plan, bigger cluster).
+        let mn = JobProfile::of(&plan, &ClusterSpec::marenostrum(), &sim());
+        assert_ne!(mn.features[idx("input_to_heap")], base.features[idx("input_to_heap")]);
+        assert_ne!(mn.features[idx("tasks_per_core")], base.features[idx("tasks_per_core")]);
+    }
+
+    #[test]
+    fn serialization_round_trips_bit_for_bit() {
+        let p = profile_of(&workloads::kmeans(100_000, 20, 4, 2, 16));
+        let s = p.serialize();
+        assert!(s.starts_with(VERSION));
+        let q = JobProfile::deserialize(&s).expect("round trip");
+        assert_eq!(p, q);
+        for (a, b) in p.features.iter().zip(&q.features) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Serialization is stable: same profile, same string.
+        assert_eq!(s, profile_of(&workloads::kmeans(100_000, 20, 4, 2, 16)).serialize());
+    }
+
+    #[test]
+    fn deserialize_rejects_malformed_input() {
+        let p = profile_of(&workloads::sort_by_key(1_000_000, 16));
+        let s = p.serialize();
+        assert!(JobProfile::deserialize("sparktune.profile.v0;x=0").is_err(), "bad version");
+        assert!(JobProfile::deserialize(VERSION).is_err(), "missing components");
+        let truncated = s.rsplit_once(';').unwrap().0;
+        assert!(JobProfile::deserialize(truncated).is_err(), "truncated");
+        let reordered = {
+            let mut parts: Vec<&str> = s.split(';').collect();
+            parts.swap(1, 2);
+            parts.join(";")
+        };
+        assert!(JobProfile::deserialize(&reordered).is_err(), "reordered components");
+        assert!(JobProfile::deserialize(&format!("{s};extra=0")).is_err(), "extra component");
+        let garbled = s.replace('=', "#");
+        assert!(JobProfile::deserialize(&garbled).is_err(), "malformed separator");
+    }
+}

@@ -21,14 +21,29 @@
 //! [`tune`] directly — regardless of worker count, cache warmth, or
 //! which session happened to simulate a shared trial first. The
 //! integration tests pin exactly that.
+//!
+//! **Cross-workload evidence transfer** (opt-in via
+//! [`ServiceOpts::warm_start`]): the service profiles every session's
+//! workload ([`JobProfile`]) and records its kept decision steps in a
+//! nearest-neighbor index ([`KnnIndex`]) on completion. At admission, a
+//! new session whose profile lands within
+//! [`ServiceOpts::warm_threshold`] of a recorded neighbor is seeded
+//! with that neighbor's kept steps ([`crate::tuner::WarmStart`]) and
+//! replays them instead of walking the whole decision list; no
+//! neighbor in range → the paper's cold methodology, unchanged. Both
+//! the consult and the record happen at deterministic points (batch
+//! admission / batch completion, in request order), so serve outcomes
+//! stay invariant across worker counts even with transfer enabled.
 
 use super::cache::{CacheStats, ShardedCache};
 use super::fingerprint::{fingerprint_trial, Fingerprint};
+use super::knn::{KnnIndex, NeighborRecord};
+use super::profile::JobProfile;
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
 use crate::engine::{prepare, run, run_planned, Job, JobPlan};
 use crate::sim::SimOpts;
-use crate::tuner::{tune, TrialExecutor, TuneOpts, TuneOutcome};
+use crate::tuner::{tune, TrialExecutor, TuneOpts, TuneOutcome, WarmStart};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -42,11 +57,29 @@ pub struct ServiceOpts {
     pub shards: usize,
     /// Total memo-cache capacity, in trials.
     pub capacity: usize,
+    /// Warm-start admitted sessions from the nearest recorded similar
+    /// workload's kept steps. Off by default: warm-started outcomes are
+    /// intentionally *not* bit-identical to a cold [`tune`] (they run
+    /// fewer trials), so the parity invariant stays opt-out-free for
+    /// existing callers.
+    pub warm_start: bool,
+    /// Maximum profile distance (normalized L2, see
+    /// [`JobProfile::distance`]) at which a recorded session counts as
+    /// a neighbor. 0.25 keeps same-family workloads at different scales
+    /// (distances ≲ 0.1) while excluding cross-family matches
+    /// (distances ≳ 0.3) — see the profile goldens.
+    pub warm_threshold: f64,
 }
 
 impl Default for ServiceOpts {
     fn default() -> Self {
-        ServiceOpts { workers: 4, shards: 8, capacity: 4096 }
+        ServiceOpts {
+            workers: 4,
+            shards: 8,
+            capacity: 4096,
+            warm_start: false,
+            warm_threshold: 0.25,
+        }
     }
 }
 
@@ -62,24 +95,32 @@ pub struct SessionRequest {
 }
 
 /// A served session: the request's index and name plus the tuning
-/// outcome (bit-identical to a direct [`tune`] call).
+/// outcome (bit-identical to a direct [`tune`] call unless the session
+/// was warm-started — then `warm_from` names the evidence source).
 #[derive(Clone, Debug)]
 pub struct SessionOutcome {
     pub session: usize,
     pub name: String,
+    /// Name of the recorded neighbor whose kept steps seeded this
+    /// session, when the service warm-started it.
+    pub warm_from: Option<String>,
     pub outcome: TuneOutcome,
 }
 
 /// Service-level counters. `trials_requested` counts every trial any
 /// session asked for; of those, `trials_simulated` actually ran the
 /// simulator, `coalesced` waited on another session's identical
-/// in-flight trial, and the rest were cache hits.
+/// in-flight trial, and the rest were cache hits. `warm_started` /
+/// `warm_missed` count admission-time kNN consults that found / did
+/// not find a neighbor in range (only when warm start is enabled).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ServiceStats {
     pub sessions: u64,
     pub trials_requested: u64,
     pub trials_simulated: u64,
     pub coalesced: u64,
+    pub warm_started: u64,
+    pub warm_missed: u64,
     pub cache: CacheStats,
 }
 
@@ -129,11 +170,33 @@ pub struct TuningService {
     cluster: ClusterSpec,
     cache: ShardedCache<f64>,
     inflight: Mutex<HashMap<Fingerprint, Arc<InFlight>>>,
+    /// Evidence from completed sessions, keyed by workload profile.
+    /// One lock, coarse on purpose: it is touched twice per *batch*
+    /// (admission consult, completion record), never per trial.
+    knn: Mutex<KnnIndex>,
     workers: usize,
+    warm_start: bool,
+    warm_threshold: f64,
     sessions: AtomicU64,
     requested: AtomicU64,
     simulated: AtomicU64,
     coalesced: AtomicU64,
+    warm_started: AtomicU64,
+    warm_missed: AtomicU64,
+}
+
+/// One admitted session: its request, effective (possibly warm-started)
+/// tuning options, and — only when evidence transfer is on, which needs
+/// them at admission — the shared plan and workload profile. Resolved
+/// *before* the batch fans out, so admission is deterministic in
+/// request order; with transfer off, planning stays inside the worker
+/// pool exactly as before (parallel, no serial prologue).
+struct Admitted<'r> {
+    req: &'r SessionRequest,
+    plan: Option<Arc<JobPlan>>,
+    profile: Option<JobProfile>,
+    tune: TuneOpts,
+    warm_from: Option<String>,
 }
 
 impl TuningService {
@@ -142,11 +205,16 @@ impl TuningService {
             cluster,
             cache: ShardedCache::new(opts.shards, opts.capacity),
             inflight: Mutex::new(HashMap::new()),
+            knn: Mutex::new(KnnIndex::new()),
             workers: opts.workers.max(1),
+            warm_start: opts.warm_start,
+            warm_threshold: opts.warm_threshold,
             sessions: AtomicU64::new(0),
             requested: AtomicU64::new(0),
             simulated: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
+            warm_started: AtomicU64::new(0),
+            warm_missed: AtomicU64::new(0),
         }
     }
 
@@ -162,29 +230,108 @@ impl TuningService {
     /// prices goes through the memoized
     /// [`evaluate_planned`](TuningService::evaluate_planned) path, so
     /// overlapping sessions share simulations.
+    ///
+    /// With [`ServiceOpts::warm_start`], admission consults the kNN
+    /// index *before* any session runs and completion records evidence
+    /// *after* the whole batch finishes, both in request order — so a
+    /// batch's outcomes never depend on worker count or completion
+    /// interleaving, and evidence flows between `serve` calls (train on
+    /// one batch, transfer to the next), not racily within one.
     pub fn serve(&self, requests: &[SessionRequest]) -> Vec<SessionOutcome> {
         self.sessions.fetch_add(requests.len() as u64, Ordering::Relaxed);
+        // ---- admission (deterministic, request order) ----
+        let admitted: Vec<Admitted<'_>> = requests
+            .iter()
+            .map(|req| {
+                let mut tune_opts = req.tune.clone();
+                let mut warm_from = None;
+                let mut plan = None;
+                let mut profile = None;
+                if self.warm_start {
+                    // Transfer needs the plan at admission (the profile
+                    // is a function of it); with transfer off, planning
+                    // happens in the worker pool instead.
+                    plan = prepare(&req.job).ok();
+                    if let Some(plan) = &plan {
+                        let p = JobProfile::of(plan, &self.cluster, &req.sim);
+                        if tune_opts.warm_start.is_none() {
+                            let knn = self.knn.lock().expect("knn index poisoned");
+                            match knn.nearest(&p, self.warm_threshold) {
+                                Some(n) => {
+                                    tune_opts.warm_start =
+                                        Some(WarmStart { steps: n.record.kept_steps.clone() });
+                                    warm_from = Some(n.record.name.clone());
+                                    self.warm_started.fetch_add(1, Ordering::Relaxed);
+                                }
+                                None => {
+                                    self.warm_missed.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                        profile = Some(p);
+                    }
+                }
+                Admitted { req, plan, profile, tune: tune_opts, warm_from }
+            })
+            .collect();
+
+        // ---- serve the batch over the worker pool ----
         let pool = TrialExecutor::new(self.workers);
-        let outcomes = pool.map(requests, |req| {
-            let plan = prepare(&req.job).ok();
+        let outcomes = pool.map(&admitted, |adm| {
+            // Reuse the admission-time plan when transfer computed one;
+            // otherwise plan here, on the worker (the historical path).
+            let plan = match &adm.plan {
+                Some(p) => Some(Arc::clone(p)),
+                None => prepare(&adm.req.job).ok(),
+            };
             let mut runner = |conf: &SparkConf| match &plan {
-                Some(plan) => self.evaluate_planned(&req.job, plan, conf, &req.sim),
+                Some(plan) => self.evaluate_planned(&adm.req.job, plan, conf, &adm.req.sim),
                 // Unplannable jobs fall back to the plan-per-trial path,
                 // which prices the failure as a crash (INFINITY) — the
                 // same outcome a direct `tune` would see.
-                None => self.evaluate(&req.job, conf, &req.sim),
+                None => self.evaluate(&adm.req.job, conf, &adm.req.sim),
             };
-            tune(&mut runner, &req.tune)
+            tune(&mut runner, &adm.tune)
         });
-        outcomes
+        let outcomes: Vec<SessionOutcome> = outcomes
             .into_iter()
             .enumerate()
             .map(|(i, outcome)| SessionOutcome {
                 session: i,
                 name: requests[i].name.clone(),
+                warm_from: admitted[i].warm_from.clone(),
                 outcome,
             })
-            .collect()
+            .collect();
+
+        // ---- record evidence (deterministic, request order) ----
+        if self.warm_start {
+            let mut knn = self.knn.lock().expect("knn index poisoned");
+            for (adm, out) in admitted.iter().zip(&outcomes) {
+                if let Some(profile) = &adm.profile {
+                    knn.insert(NeighborRecord {
+                        name: out.name.clone(),
+                        profile: profile.clone(),
+                        kept_steps: out
+                            .outcome
+                            .trials
+                            .iter()
+                            .filter(|t| t.kept)
+                            .map(|t| t.step.to_string())
+                            .collect(),
+                        baseline: out.outcome.baseline,
+                        best: out.outcome.best,
+                    });
+                }
+            }
+        }
+        outcomes
+    }
+
+    /// Sessions recorded in the evidence index (0 unless
+    /// [`ServiceOpts::warm_start`] is enabled).
+    pub fn profiled_sessions(&self) -> usize {
+        self.knn.lock().expect("knn index poisoned").len()
     }
 
     /// Price one trial through the memo layers: fingerprint → cache →
@@ -272,14 +419,20 @@ impl TuningService {
                 }
             }
             let mut abort = Abort { svc: self, fp, flight: &flight, armed: true };
+            let started = std::time::Instant::now();
             let v = compute();
+            let cost_secs = started.elapsed().as_secs_f64();
             abort.armed = false;
             drop(abort);
             self.simulated.fetch_add(1, Ordering::Relaxed);
             // Cache strictly before deregistering: the re-check above
             // relies on completed trials being visible in the cache by
-            // the time their in-flight entry disappears.
-            self.cache.insert(fp, v);
+            // the time their in-flight entry disappears. The measured
+            // compute cost weighs this entry's eviction priority (an
+            // expensive k-means trial outlives a burst of cheap mini
+            // trials); the cost only shapes eviction order, never a
+            // value, so wall-clock noise cannot leak into outcomes.
+            self.cache.insert_costed(fp, v, cost_secs);
             self.inflight.lock().expect("in-flight table poisoned").remove(&fp);
             let mut slot = flight.slot.lock().expect("in-flight slot poisoned");
             *slot = FlightState::Done(v);
@@ -315,6 +468,8 @@ impl TuningService {
             trials_requested: self.requested.load(Ordering::Relaxed),
             trials_simulated,
             coalesced,
+            warm_started: self.warm_started.load(Ordering::Relaxed),
+            warm_missed: self.warm_missed.load(Ordering::Relaxed),
             cache: self.cache.stats(),
         }
     }
@@ -356,7 +511,7 @@ mod tests {
         SessionRequest {
             name: name.into(),
             job: Workload::MiniSortByKey.job(),
-            tune: TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false },
+            tune: TuneOpts { short_version: true, ..TuneOpts::default() },
             sim: SimOpts { jitter: 0.04, seed, straggler: None },
         }
     }
@@ -449,5 +604,84 @@ mod tests {
         let c = svc.serve(&[mini_request("c", 9)]).remove(0).outcome;
         assert!(outcomes_identical(&a, &b));
         assert!(!outcomes_identical(&a, &c), "different seed ⇒ different trials");
+    }
+
+    #[test]
+    fn warm_start_disabled_records_and_consults_nothing() {
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let out = svc.serve(&[mini_request("a", 1)]);
+        assert!(out[0].warm_from.is_none());
+        assert_eq!(svc.profiled_sessions(), 0);
+        let s = svc.stats();
+        assert_eq!((s.warm_started, s.warm_missed), (0, 0));
+    }
+
+    #[test]
+    fn warm_start_transfers_evidence_between_batches() {
+        let opts = ServiceOpts { warm_start: true, ..ServiceOpts::default() };
+        let svc = TuningService::new(ClusterSpec::mini(), opts);
+        // Train: a cold batch (empty index → every admission misses).
+        let cold = svc.serve(&[mini_request("train", 1)]).remove(0);
+        assert!(cold.warm_from.is_none(), "nothing recorded yet");
+        assert_eq!(svc.profiled_sessions(), 1);
+        // Transfer: an identical workload admits against the record.
+        let warm = svc.serve(&[mini_request("apply", 1)]).remove(0);
+        assert_eq!(warm.warm_from.as_deref(), Some("train"));
+        // The warm session replays only the kept steps: strictly fewer
+        // runs, same final configuration and quality (identical job and
+        // seed ⇒ the replayed trials reproduce bit for bit).
+        let kept = cold.outcome.trials.iter().filter(|t| t.kept).count();
+        assert_eq!(warm.outcome.runs(), kept + 1, "one trial per kept step + baseline");
+        assert!(warm.outcome.runs() < cold.outcome.runs());
+        assert_eq!(warm.outcome.best_conf, cold.outcome.best_conf);
+        assert_eq!(warm.outcome.best.to_bits(), cold.outcome.best.to_bits());
+        let s = svc.stats();
+        assert_eq!((s.warm_started, s.warm_missed), (1, 1));
+        assert_eq!(svc.profiled_sessions(), 2, "warm sessions leave evidence too");
+        // Deterministic across worker counts: a fresh service with a
+        // different pool reaches bit-identical outcomes.
+        for workers in [1usize, 8] {
+            let svc2 = TuningService::new(
+                ClusterSpec::mini(),
+                ServiceOpts { workers, warm_start: true, ..ServiceOpts::default() },
+            );
+            let cold2 = svc2.serve(&[mini_request("train", 1)]).remove(0);
+            let warm2 = svc2.serve(&[mini_request("apply", 1)]).remove(0);
+            assert!(outcomes_identical(&cold2.outcome, &cold.outcome), "workers={workers}");
+            assert!(outcomes_identical(&warm2.outcome, &warm.outcome), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn warm_start_respects_the_distance_threshold() {
+        // A dissimilar workload (combine-heavy aggregate vs sort) must
+        // not be used as evidence: its admission misses the threshold
+        // and the session runs cold.
+        let opts = ServiceOpts { warm_start: true, ..ServiceOpts::default() };
+        let svc = TuningService::new(ClusterSpec::mini(), opts);
+        svc.serve(&[mini_request("train-sbk", 1)]);
+        let far = SessionRequest {
+            name: "abk".into(),
+            job: crate::workloads::aggregate_by_key(2_000_000, 50_000, 16),
+            tune: TuneOpts { short_version: true, ..TuneOpts::default() },
+            sim: SimOpts { jitter: 0.04, seed: 1, straggler: None },
+        };
+        let out = svc.serve(std::slice::from_ref(&far)).remove(0);
+        assert!(out.warm_from.is_none(), "cross-family workloads must not transfer");
+        assert_eq!(svc.stats().warm_missed, 2, "train admission + this one");
+    }
+
+    #[test]
+    fn explicit_warm_start_in_the_request_wins() {
+        // A request that already carries warm-start evidence is not
+        // overridden by the service's index.
+        let opts = ServiceOpts { warm_start: true, ..ServiceOpts::default() };
+        let svc = TuningService::new(ClusterSpec::mini(), opts);
+        svc.serve(&[mini_request("train", 1)]);
+        let mut req = mini_request("explicit", 1);
+        req.tune.warm_start = Some(crate::tuner::WarmStart { steps: Vec::new() });
+        let out = svc.serve(std::slice::from_ref(&req)).remove(0);
+        assert!(out.warm_from.is_none(), "service must not override caller evidence");
+        assert_eq!(out.outcome.runs(), 1, "empty evidence ⇒ baseline only");
     }
 }

@@ -11,6 +11,7 @@
 
 use crate::util::Prng;
 use crate::util::stats::Summary;
+use std::fmt::Write as _;
 
 /// Size-aware generator handle passed to properties.
 pub struct Gen {
@@ -119,6 +120,136 @@ impl BenchResult {
     }
 }
 
+/// Bench-binary CLI arguments (the benches are `harness = false`
+/// mains): `--quick` shrinks sizes/iterations for CI smoke runs,
+/// `--json PATH` writes the collected results as a machine-readable
+/// artifact. Unknown flags (e.g. the `--bench` cargo passes to
+/// harness-less targets) are ignored.
+#[derive(Clone, Debug, Default)]
+pub struct BenchArgs {
+    pub quick: bool,
+    pub json: Option<String>,
+}
+
+impl BenchArgs {
+    /// Parse from the process arguments.
+    pub fn from_env() -> BenchArgs {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    fn parse(mut args: impl Iterator<Item = String>) -> BenchArgs {
+        let mut out = BenchArgs::default();
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--quick" | "quick" => out.quick = true,
+                "--json" => out.json = args.next(),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Pick `full` or `small` sizes by mode.
+    pub fn size<T>(&self, full: T, small: T) -> T {
+        if self.quick {
+            small
+        } else {
+            full
+        }
+    }
+}
+
+/// Collects [`BenchResult`]s and renders them as a versioned JSON
+/// artifact (`BENCH_*.json` in CI) — the groundwork for a tracked perf
+/// trajectory: one schema, machine-readable, uploaded per run.
+#[derive(Clone, Debug)]
+pub struct BenchSink {
+    /// Artifact identity, e.g. `"sched_throughput"`.
+    pub bench: String,
+    pub quick: bool,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSink {
+    pub fn new(bench: &str, quick: bool) -> BenchSink {
+        BenchSink { bench: bench.to_string(), quick, results: Vec::new() }
+    }
+
+    /// Run [`bench`] and record its result.
+    pub fn bench(&mut self, name: &str, iters: usize, units_per_iter: f64, f: impl FnMut()) {
+        self.results.push(bench(name, iters, units_per_iter, f));
+    }
+
+    /// Hand-rolled JSON (no serde in the offline crate set): a stable
+    /// schema with one object per bench row.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"schema\":\"sparktune.bench.v1\",\"bench\":{},\"quick\":{},\"results\":[",
+            json_string(&self.bench),
+            self.quick
+        );
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":{},\"iters\":{},\"median_secs\":{},\"min_secs\":{},\
+                 \"units_per_iter\":{},\"units_per_sec\":{}}}",
+                json_string(&r.name),
+                r.iters,
+                json_f64(r.median_secs),
+                json_f64(r.min_secs),
+                json_f64(r.units_per_iter),
+                json_f64(r.units_per_iter / r.median_secs.max(1e-12)),
+            );
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Write the JSON artifact if `path` is set (the `--json` flag);
+    /// no-op otherwise.
+    pub fn write(&self, path: Option<&str>) -> std::io::Result<()> {
+        if let Some(path) = path {
+            std::fs::write(path, self.to_json())?;
+            println!("wrote {path}");
+        }
+        Ok(())
+    }
+}
+
+/// JSON string escape (names are ASCII-ish bench labels; escape the
+/// must-escape set and control characters).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON number: finite floats print plainly; non-finite degrade to 0
+/// (JSON has no ∞/NaN).
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
 /// Minimal bench loop: 1 warm-up + `iters` timed runs; median reported.
 pub fn bench(name: &str, iters: usize, units_per_iter: f64, mut f: impl FnMut()) -> BenchResult {
     f(); // warm-up
@@ -177,5 +308,36 @@ mod tests {
         });
         assert!(r.median_secs >= 0.0 && r.median_secs < 1.0);
         assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn bench_args_parse_and_ignore_unknowns() {
+        let args = |s: &str| BenchArgs::parse(s.split_whitespace().map(str::to_string));
+        let a = args("--bench --quick --json OUT.json");
+        assert!(a.quick);
+        assert_eq!(a.json.as_deref(), Some("OUT.json"));
+        assert_eq!(a.size(64, 8), 8);
+        let b = args("--bench");
+        assert!(!b.quick && b.json.is_none());
+        assert_eq!(b.size(64, 8), 64);
+        assert!(args("--json").json.is_none(), "trailing --json tolerated");
+    }
+
+    #[test]
+    fn bench_sink_emits_stable_json() {
+        let mut sink = BenchSink::new("unit_test", true);
+        sink.bench("alpha \"quoted\" × row", 2, 10.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = sink.to_json();
+        assert!(j.starts_with("{\"schema\":\"sparktune.bench.v1\""), "{j}");
+        assert!(j.contains("\"bench\":\"unit_test\""), "{j}");
+        assert!(j.contains("\"quick\":true"), "{j}");
+        assert!(j.contains("\\\"quoted\\\""), "quotes must escape: {j}");
+        assert!(j.contains("\"units_per_iter\":10"), "{j}");
+        assert!(j.ends_with("]}"), "{j}");
+        // Non-finite numbers degrade to 0, never invalid JSON.
+        assert_eq!(json_f64(f64::INFINITY), "0");
+        assert_eq!(json_f64(f64::NAN), "0");
     }
 }

@@ -104,6 +104,26 @@ impl TuneOutcome {
     }
 }
 
+/// Evidence transferred from a similar, already-tuned workload: the
+/// neighbor session's **kept** decision-step labels, in its keep order
+/// (see `service::knn` for where these come from).
+///
+/// A warm-started [`tune`] replays these steps as its first trials —
+/// each still subject to the keep-iff-improving rule, so stale or
+/// mis-transferred evidence can reject, never regress. When every
+/// replay keeps (the transfer held), the session **stops there**: it
+/// ran exactly one trial per transferred decision instead of walking
+/// the whole decision list. If any replay rejects (or names an unknown
+/// step), the session falls back to the paper's default order over the
+/// groups not already settled by a kept replay.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct WarmStart {
+    /// Kept-step labels of the neighbor (matching [`Trial::step`]).
+    /// Empty means "the neighbor kept nothing — defaults are best":
+    /// the warm session runs only its baseline.
+    pub steps: Vec<String>,
+}
+
 /// Options for [`tune`].
 #[derive(Clone, Debug)]
 pub struct TuneOpts {
@@ -120,11 +140,15 @@ pub struct TuneOpts {
     /// trials on top of the paper's ≤ 10. Off by default, preserving the
     /// paper's exact budget.
     pub straggler_aware: bool,
+    /// Seed the decision list from a similar workload's kept steps
+    /// (cross-workload evidence transfer). `None` — the paper's cold
+    /// methodology, unchanged.
+    pub warm_start: Option<WarmStart>,
 }
 
 impl Default for TuneOpts {
     fn default() -> Self {
-        TuneOpts { threshold: 0.0, short_version: false, straggler_aware: false }
+        TuneOpts { threshold: 0.0, short_version: false, straggler_aware: false, warm_start: None }
     }
 }
 
@@ -233,6 +257,14 @@ const STRAGGLER_STEPS: &[StepDef] = &[
 ];
 
 /// Run the Fig-4 trial-and-error methodology.
+///
+/// With [`TuneOpts::warm_start`], the neighbor's kept steps are
+/// replayed first (one trial each, keep-iff-improving as always). A
+/// fully-kept replay ends the session — strictly fewer trials than the
+/// cold walk, and never worse than the default baseline, because
+/// nothing is ever kept without improving it. Any rejected or unknown
+/// replay step degrades gracefully: the cold decision list still runs
+/// over every sibling group not already settled by a kept replay.
 pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
     let steps: Vec<&StepDef> = if opts.straggler_aware {
         STEPS.iter().chain(STRAGGLER_STEPS.iter()).collect()
@@ -244,12 +276,71 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
     let mut best = baseline;
     let mut trials = Vec::new();
 
+    // ---- warm start: replay the neighbor's kept steps ----
+    // Groups settled by a kept replay are skipped by the cold walk
+    // below; `transfer_intact` tracks whether every piece of evidence
+    // held (in which case the cold walk is skipped entirely).
+    let mut settled: Vec<u8> = Vec::new();
+    let mut transfer_intact = true;
+    if let Some(ws) = &opts.warm_start {
+        for label in &ws.steps {
+            let Some(sd) = steps.iter().find(|s| s.step == label.as_str()) else {
+                // Stale evidence (a step label this decision list does
+                // not know) — fall through to the cold walk.
+                transfer_intact = false;
+                continue;
+            };
+            if opts.short_version && sd.group == FILE_BUFFER_GROUP {
+                // Evidence from a full-version neighbor must not smuggle
+                // the file-buffer trials into a short session: this
+                // session's contract excludes that group entirely, and
+                // the cold walk would skip it too — so skipping the
+                // replay does not break the transfer.
+                continue;
+            }
+            if settled.contains(&sd.group) {
+                // A well-formed neighbor keeps at most one step per
+                // sibling group; ignore duplicates defensively.
+                continue;
+            }
+            let mut cand = best_conf.clone();
+            for (k, v) in sd.delta {
+                cand.set(k, v).expect("methodology deltas are valid");
+            }
+            let t = runner.run(&cand);
+            let improvement =
+                if best.is_finite() && t.is_finite() { (best - t) / best } else { 0.0 };
+            let kept = t.is_finite() && improvement > opts.threshold;
+            trials.push(Trial {
+                step: sd.step,
+                delta: sd.delta.to_vec(),
+                duration: t,
+                improvement,
+                kept,
+            });
+            if kept {
+                best_conf = cand;
+                best = t;
+                settled.push(sd.group);
+            } else {
+                transfer_intact = false;
+            }
+        }
+        if transfer_intact {
+            // Every transferred decision reproduced on this workload:
+            // trust the neighbor for the rest of the list too. The
+            // session ends having run one trial per kept decision.
+            return TuneOutcome { best_conf, baseline, best, trials, threshold: opts.threshold };
+        }
+    }
+
     let mut i = 0;
     while i < steps.len() {
         let group = steps[i].group;
-        if opts.short_version && group == FILE_BUFFER_GROUP {
+        if (opts.short_version && group == FILE_BUFFER_GROUP) || settled.contains(&group) {
             // Skip this sibling group only — straggler-aware groups (if
-            // enabled) still run after it.
+            // enabled) still run after it. Settled groups were decided
+            // by a kept warm-start replay.
             while i < steps.len() && steps[i].group == group {
                 i += 1;
             }
@@ -366,7 +457,10 @@ mod tests {
         // With a 10 % threshold the 5 % memoryFraction gain and the hash
         // win of 10 % (not > 10 %) are rejected; only kryo (20 %) stays.
         let mut runner = |c: &SparkConf| surface(c);
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false, straggler_aware: false });
+        let out = tune(
+            &mut runner,
+            &TuneOpts { threshold: 0.10, ..TuneOpts::default() },
+        );
         assert_eq!(out.best_conf.serializer, SerKind::Kryo);
         assert_eq!(out.best_conf.shuffle_manager, ShuffleManagerKind::Sort);
         assert_eq!(out.best_conf.shuffle_memory_fraction, 0.2);
@@ -380,7 +474,10 @@ mod tests {
             calls += 1;
             surface(c)
         };
-        let out = tune(&mut runner, &TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false });
+        let out = tune(
+            &mut runner,
+            &TuneOpts { short_version: true, ..TuneOpts::default() },
+        );
         assert_eq!(out.runs(), 8, "shorter version is two runs less");
         assert!(!out.trials.iter().any(|t| t.step.starts_with("file buffer")));
         let _ = out;
@@ -472,5 +569,146 @@ mod tests {
         let out = tune(&mut runner, &TuneOpts::default());
         assert_eq!(out.best_conf, SparkConf::default());
         assert_eq!(out.total_improvement(), 0.0);
+    }
+
+    // ---- warm start (cross-workload evidence transfer) ----
+
+    fn kept_steps(out: &TuneOutcome) -> Vec<String> {
+        out.trials.iter().filter(|t| t.kept).map(|t| t.step.to_string()).collect()
+    }
+
+    #[test]
+    fn warm_start_replays_kept_steps_in_fewer_runs() {
+        // Cold session on the surface, then a warm session seeded from
+        // its kept steps: same final configuration and quality, one
+        // trial per kept decision instead of the whole list.
+        let mut runner = |c: &SparkConf| surface(c);
+        let cold = tune(&mut runner, &TuneOpts::default());
+        let kept = kept_steps(&cold);
+        assert!(kept.len() >= 3, "{kept:?}");
+
+        let mut calls = 0usize;
+        let mut warm_runner = |c: &SparkConf| {
+            calls += 1;
+            surface(c)
+        };
+        let warm = tune(
+            &mut warm_runner,
+            &TuneOpts { warm_start: Some(WarmStart { steps: kept.clone() }), ..TuneOpts::default() },
+        );
+        assert_eq!(warm.best_conf, cold.best_conf, "transfer must reach the same conf");
+        assert_eq!(warm.best.to_bits(), cold.best.to_bits());
+        assert_eq!(warm.runs(), kept.len() + 1, "one trial per kept step + baseline");
+        assert!(warm.runs() < cold.runs(), "{} vs {}", warm.runs(), cold.runs());
+        assert_eq!(calls, warm.runs());
+        assert!(warm.trials.iter().all(|t| t.kept), "every replay must keep");
+    }
+
+    #[test]
+    fn empty_warm_start_means_defaults_are_best() {
+        // The neighbor kept nothing: the warm session runs only its
+        // baseline and recommends the defaults.
+        let mut runner = |_: &SparkConf| 50.0;
+        let out = tune(
+            &mut runner,
+            &TuneOpts { warm_start: Some(WarmStart::default()), ..TuneOpts::default() },
+        );
+        assert_eq!(out.runs(), 1);
+        assert_eq!(out.best_conf, SparkConf::default());
+        assert_eq!(out.best, out.baseline);
+    }
+
+    #[test]
+    fn stale_warm_start_falls_back_to_the_cold_walk() {
+        // Unknown step labels (stale persisted evidence) must not keep
+        // the session from finding the cold optimum.
+        let mut runner = |c: &SparkConf| surface(c);
+        let cold = tune(&mut runner, &TuneOpts::default());
+        let mut runner = |c: &SparkConf| surface(c);
+        let warm = tune(
+            &mut runner,
+            &TuneOpts {
+                warm_start: Some(WarmStart { steps: vec!["no such step".into()] }),
+                ..TuneOpts::default()
+            },
+        );
+        assert_eq!(warm.best_conf, cold.best_conf);
+        assert_eq!(warm.best.to_bits(), cold.best.to_bits());
+        assert_eq!(warm.runs(), cold.runs(), "nothing replayed, nothing saved");
+    }
+
+    #[test]
+    fn rejected_replay_degrades_to_cold_quality() {
+        // Evidence from a *dissimilar* neighbor: "disable shuffle
+        // compression" is a big regression on this surface, so the
+        // replay rejects and the cold walk still runs — final quality
+        // matches the cold session, never worse.
+        let mut runner = |c: &SparkConf| surface(c);
+        let cold = tune(&mut runner, &TuneOpts::default());
+        let mut runner = |c: &SparkConf| surface(c);
+        let warm = tune(
+            &mut runner,
+            &TuneOpts {
+                warm_start: Some(WarmStart {
+                    steps: vec!["disable shuffle compression".into(), "Kryo serializer".into()],
+                }),
+                ..TuneOpts::default()
+            },
+        );
+        assert_eq!(warm.best_conf, cold.best_conf);
+        assert_eq!(warm.best.to_bits(), cold.best.to_bits());
+        // The rejected replay shows up as an unkept trial; the kept
+        // kryo replay settles its group so the cold walk skips it.
+        let replayed = &warm.trials[0];
+        assert_eq!(replayed.step, "disable shuffle compression");
+        assert!(!replayed.kept);
+        let kryo_trials =
+            warm.trials.iter().filter(|t| t.step == "Kryo serializer").count();
+        assert_eq!(kryo_trials, 1, "settled group must not re-run");
+        assert!(warm.best <= warm.baseline);
+    }
+
+    #[test]
+    fn short_version_excludes_replayed_file_buffer_evidence() {
+        // Evidence from a full-version neighbor that kept a file-buffer
+        // step: a short_version session must not replay it (its
+        // contract excludes the group), and skipping it must not break
+        // the rest of the transfer.
+        let mut calls = 0usize;
+        let mut runner = |c: &SparkConf| {
+            calls += 1;
+            surface(c)
+        };
+        let out = tune(
+            &mut runner,
+            &TuneOpts {
+                short_version: true,
+                warm_start: Some(WarmStart {
+                    steps: vec!["Kryo serializer".into(), "file buffer 96k".into()],
+                }),
+                ..TuneOpts::default()
+            },
+        );
+        assert!(!out.trials.iter().any(|t| t.step.starts_with("file buffer")));
+        assert_eq!(out.runs(), 2, "baseline + the kryo replay only");
+        assert_eq!(calls, 2);
+        assert_eq!(out.best_conf.serializer, SerKind::Kryo);
+    }
+
+    #[test]
+    fn warm_start_respects_the_threshold() {
+        // A replayed step whose improvement is under the threshold
+        // rejects, exactly like the cold rule.
+        let mut runner = |c: &SparkConf| surface(c);
+        let out = tune(
+            &mut runner,
+            &TuneOpts {
+                threshold: 0.30,
+                warm_start: Some(WarmStart { steps: vec!["Kryo serializer".into()] }),
+                ..TuneOpts::default()
+            },
+        );
+        assert!(!out.trials[0].kept, "20% gain must not clear a 30% threshold");
+        assert_eq!(out.best_conf.serializer, crate::ser::SerKind::Java);
     }
 }

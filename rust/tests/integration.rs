@@ -291,7 +291,7 @@ fn prop_tuner_never_worse_than_baseline_and_within_budget() {
             }
             t
         };
-        let out = tune(&mut runner, &TuneOpts { threshold, short_version: false, straggler_aware: false });
+        let out = tune(&mut runner, &TuneOpts { threshold, ..TuneOpts::default() });
         if out.best > out.baseline + 1e-9 {
             return Err(format!("best {} worse than baseline {}", out.best, out.baseline));
         }
@@ -331,7 +331,7 @@ fn tuned_configuration_reproduces_when_replayed() {
     let mut runner = |c: &SparkConf| {
         run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }).effective_duration()
     };
-    let out = tune(&mut runner, &TuneOpts { threshold: 0.10, short_version: false, straggler_aware: false });
+    let out = tune(&mut runner, &TuneOpts { threshold: 0.10, ..TuneOpts::default() });
     let replay = run(&job, &out.best_conf, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None });
     assert!(replay.crashed.is_none());
     assert!((replay.duration - out.best).abs() < 1e-9, "{} vs {}", replay.duration, out.best);
@@ -347,7 +347,7 @@ fn threshold_zero_keeps_at_least_as_much_as_threshold_ten() {
                 run(&job, c, &cluster, &SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None })
                     .effective_duration()
             };
-            tune(&mut runner, &TuneOpts { threshold: thr, short_version: false, straggler_aware: false })
+            tune(&mut runner, &TuneOpts { threshold: thr, ..TuneOpts::default() })
         };
         let loose = mk(0.0);
         let strict = mk(0.10);

@@ -8,16 +8,18 @@
 //!   than they request.
 //! * **Fingerprint goldens** — set-order invariance and sensitivity of
 //!   the trial fingerprint across every component of the trial key.
+//! * **Evidence transfer** — job profiles and the kNN warm start,
+//!   end to end through the public service API.
 
 use sparktune::cluster::ClusterSpec;
 use sparktune::conf::SparkConf;
-use sparktune::engine::run;
+use sparktune::engine::{prepare, run};
 use sparktune::service::{
-    fingerprint_trial, outcomes_identical, ServiceOpts, SessionRequest, TuningService,
+    fingerprint_trial, outcomes_identical, JobProfile, ServiceOpts, SessionRequest, TuningService,
 };
 use sparktune::sim::SimOpts;
 use sparktune::tuner::{tune, TuneOpts};
-use sparktune::workloads::Workload;
+use sparktune::workloads::{self, Workload};
 
 fn sim() -> SimOpts {
     SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }
@@ -30,7 +32,7 @@ fn request(name: &str, w: Workload, tune: TuneOpts) -> SessionRequest {
 #[test]
 fn served_outcome_is_bit_identical_to_direct_tune() {
     let cluster = ClusterSpec::mini();
-    let topts = TuneOpts { threshold: 0.0, short_version: false, straggler_aware: false };
+    let topts = TuneOpts::default();
 
     // Ground truth: the tuner driving the simulator directly.
     let job = Workload::MiniSortByKey.job();
@@ -41,7 +43,7 @@ fn served_outcome_is_bit_identical_to_direct_tune() {
     for workers in [1usize, 4, 8] {
         let svc = TuningService::new(
             cluster.clone(),
-            ServiceOpts { workers, shards: 4, capacity: 1024 },
+            ServiceOpts { workers, shards: 4, capacity: 1024, ..ServiceOpts::default() },
         );
         let req = request("solo", Workload::MiniSortByKey, topts.clone());
         // Cold pass.
@@ -66,13 +68,13 @@ fn served_outcome_is_bit_identical_to_direct_tune() {
 #[test]
 fn overlapping_sessions_simulate_strictly_fewer_trials() {
     let cluster = ClusterSpec::mini();
-    let topts = TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false };
+    let topts = TuneOpts { short_version: true, ..TuneOpts::default() };
     // 5 tenants tuning the same app: 5× the requests, 1× the simulations.
     let reqs: Vec<SessionRequest> = (0..5)
         .map(|t| request(&format!("tenant{t}"), Workload::MiniSortByKey, topts.clone()))
         .collect();
     let svc =
-        TuningService::new(cluster.clone(), ServiceOpts { workers: 4, shards: 4, capacity: 1024 });
+        TuningService::new(cluster.clone(), ServiceOpts { workers: 4, shards: 4, capacity: 1024, ..ServiceOpts::default() });
     let out = svc.serve(&reqs);
     let s = svc.stats();
     assert_eq!(s.sessions, 5);
@@ -126,7 +128,7 @@ fn service_handles_crashing_configurations() {
     // like it does directly; crashes memoize as crashes.
     let cluster = ClusterSpec::marenostrum();
     let svc =
-        TuningService::new(cluster.clone(), ServiceOpts { workers: 2, shards: 2, capacity: 64 });
+        TuningService::new(cluster.clone(), ServiceOpts { workers: 2, shards: 2, capacity: 64, ..ServiceOpts::default() });
     let job = Workload::SortByKey1B.job();
     let crashing = SparkConf::default()
         .with("spark.shuffle.memoryFraction", "0.1")
@@ -144,9 +146,9 @@ fn tiny_cache_still_serves_correctly() {
     // With capacity 1 the cache thrashes, but purity keeps results
     // exact — memoization is an optimization, never a semantic.
     let cluster = ClusterSpec::mini();
-    let topts = TuneOpts { threshold: 0.0, short_version: true, straggler_aware: false };
+    let topts = TuneOpts { short_version: true, ..TuneOpts::default() };
     let svc =
-        TuningService::new(cluster.clone(), ServiceOpts { workers: 2, shards: 1, capacity: 1 });
+        TuningService::new(cluster.clone(), ServiceOpts { workers: 2, shards: 1, capacity: 1, ..ServiceOpts::default() });
     let req = request("thrash", Workload::MiniSortByKey, topts.clone());
     let served = svc.serve(std::slice::from_ref(&req)).remove(0).outcome;
     let job = Workload::MiniSortByKey.job();
@@ -155,4 +157,63 @@ fn tiny_cache_still_serves_correctly() {
     let direct = tune(&mut direct_runner, &topts);
     assert!(outcomes_identical(&served, &direct));
     assert!(svc.stats().cache.evictions > 0, "capacity 1 must evict");
+}
+
+#[test]
+fn job_profiles_cluster_workload_families() {
+    // The public-API view of the profile goldens: same family at a new
+    // scale stays close; a different family is far; serialization is an
+    // exact round trip (the future persisted-index format).
+    let cluster = ClusterSpec::mini();
+    let profile = |job: &sparktune::engine::Job| {
+        JobProfile::of(&prepare(job).unwrap(), &cluster, &sim())
+    };
+    let sbk = profile(&workloads::sort_by_key(2_000_000, 16));
+    let sbk_scaled = profile(&workloads::sort_by_key(2_100_000, 16));
+    let kmeans = profile(&workloads::kmeans(100_000, 20, 4, 2, 16));
+    assert!(sbk.distance(&sbk_scaled) < 0.05, "{}", sbk.distance(&sbk_scaled));
+    assert!(sbk.distance(&kmeans) > 0.25, "{}", sbk.distance(&kmeans));
+    let round = JobProfile::deserialize(&sbk.serialize()).expect("round trip");
+    assert_eq!(round, sbk);
+}
+
+#[test]
+fn warm_started_service_transfers_across_scales_end_to_end() {
+    // Train on one scale, admit a 1%-larger workload of the same
+    // family: the service must warm-start it, reach the cold session's
+    // final configuration quality, and spend strictly fewer runs.
+    let cluster = ClusterSpec::mini();
+    let svc = TuningService::new(
+        cluster.clone(),
+        ServiceOpts { warm_start: true, ..ServiceOpts::default() },
+    );
+    let topts = TuneOpts { short_version: true, ..TuneOpts::default() };
+    let request = |name: &str, records: u64| SessionRequest {
+        name: name.into(),
+        job: workloads::sort_by_key(records, 16),
+        tune: topts.clone(),
+        sim: sim(),
+    };
+    svc.serve(&[request("train", 2_000_000)]);
+    let warm = svc.serve(&[request("apply", 2_020_000)]).remove(0);
+    assert_eq!(warm.warm_from.as_deref(), Some("train"));
+
+    // Cold control: the identical held-out workload tuned directly.
+    let held_out = workloads::sort_by_key(2_020_000, 16);
+    let mut cold_runner =
+        |conf: &SparkConf| run(&held_out, conf, &cluster, &sim()).effective_duration();
+    let cold = tune(&mut cold_runner, &topts);
+    assert!(
+        warm.outcome.runs() < cold.runs(),
+        "warm {} runs vs cold {}",
+        warm.outcome.runs(),
+        cold.runs()
+    );
+    assert!(warm.outcome.best.is_finite());
+    assert!(
+        warm.outcome.best <= cold.best,
+        "warm {} vs cold {}",
+        warm.outcome.best,
+        cold.best
+    );
 }
