@@ -2,35 +2,41 @@
 //! discrete-event simulator core, and a full simulated job — the
 //! instrument behind EXPERIMENTS.md §Perf.
 //!
-//! `cargo bench --bench hotpath`
+//! `cargo bench --bench hotpath` (`--quick` shrinks sizes for the CI
+//! smoke lane; `--json PATH` writes a `sparktune.bench.v1` artifact).
 
-use sparktune::cluster::ClusterSpec;
+use sparktune::cluster::{ClusterSpec, NodeId};
 use sparktune::codec::CodecKind;
 use sparktune::conf::SparkConf;
-use sparktune::engine::{prepare, run, run_planned};
+use sparktune::engine::{prepare, run, run_planned, run_planned_from, run_planned_recording};
 use sparktune::ser::{Record, SerKind};
-use sparktune::sim::{run_stage, EventSim, FifoScheduler, Phase, SimOpts, TaskSpec};
-use sparktune::testkit::bench;
+use sparktune::sim::{EventSim, FifoScheduler, Phase, SimOpts, StageSpec};
+use sparktune::testkit::{BenchArgs, BenchSink};
 use sparktune::util::Prng;
-use sparktune::workloads::Workload;
+use sparktune::workloads::{self, Workload};
 
 fn main() {
-    // ---- codecs on 4 MiB of mid-entropy data ----
+    let args = BenchArgs::from_env();
+    let mut sink = BenchSink::new("hotpath", args.quick);
+    let iters = args.size(9, 3);
+
+    // ---- codecs on 4 MiB (quick: 512 KiB) of mid-entropy data ----
     let mut rng = Prng::new(0xBE7C);
-    let mut data = vec![0u8; 4 << 20];
+    let mut data = vec![0u8; args.size(4 << 20, 512 << 10)];
     rng.fill_bytes_entropy(&mut data, 0.45);
     for kind in CodecKind::SPARK {
         let mut compressed = Vec::new();
-        bench(&format!("codec/{kind}/compress 4MiB"), 9, data.len() as f64, || {
+        sink.bench(&format!("codec/{kind}/compress"), iters, data.len() as f64, || {
             compressed = kind.compress_raw(&data);
         });
-        bench(&format!("codec/{kind}/decompress 4MiB"), 9, data.len() as f64, || {
+        sink.bench(&format!("codec/{kind}/decompress"), iters, data.len() as f64, || {
             std::hint::black_box(kind.decompress_raw(&compressed, data.len()).unwrap());
         });
     }
 
-    // ---- serializers on 20k × 100 B KV records ----
-    let records: Vec<Record> = (0..20_000)
+    // ---- serializers on 20k (quick: 2k) × 100 B KV records ----
+    let nrecs = args.size(20_000, 2_000);
+    let records: Vec<Record> = (0..nrecs)
         .map(|_| {
             let mut k = vec![0u8; 10];
             let mut v = vec![0u8; 90];
@@ -39,63 +45,99 @@ fn main() {
             Record::Kv { key: k, value: v }
         })
         .collect();
-    let payload = 100.0 * 20_000.0;
+    let payload = 100.0 * nrecs as f64;
     for kind in SerKind::ALL {
         let mut bytes = Vec::new();
-        bench(&format!("ser/{kind}/serialize 20k recs"), 9, payload, || {
+        sink.bench(&format!("ser/{kind}/serialize {nrecs} recs"), iters, payload, || {
             bytes = kind.serialize(&records);
         });
-        bench(&format!("ser/{kind}/deserialize 20k recs"), 9, payload, || {
+        sink.bench(&format!("ser/{kind}/deserialize {nrecs} recs"), iters, payload, || {
             std::hint::black_box(kind.deserialize(&bytes).unwrap());
         });
     }
 
-    // ---- DES core: 2000-task mixed stage on the 320-core cluster ----
+    // ---- DES core: shaped 2000-task mixed stage on the 320-core cluster ----
+    // One shared phase template + a width-2 replicated-block preference
+    // table — the `StageSpec` fast path (constant allocations per stage),
+    // which replaced the per-task `TaskSpec` materialization here.
     let cluster = ClusterSpec::marenostrum();
-    let tasks: Vec<TaskSpec> = (0..2000)
-        .map(|i| {
-            TaskSpec::new(vec![
-                Phase::NetIn { bytes: 1e6 * (1 + i % 5) as f64 },
-                Phase::DiskRead { bytes: 2e6 },
-                Phase::Cpu { secs: 0.05 },
-                Phase::DiskWrite { bytes: 3e6 },
-            ])
-        })
-        .collect();
-    bench("sim/run_stage 2000 tasks × 4 phases", 9, 2000.0, || {
-        std::hint::black_box(run_stage(&cluster, &tasks, &SimOpts::default()));
+    let ntasks = args.size(2000, 400);
+    let template = [
+        Phase::NetIn { bytes: 3e6 },
+        Phase::DiskRead { bytes: 2e6 },
+        Phase::Cpu { secs: 0.05 },
+        Phase::DiskWrite { bytes: 3e6 },
+    ];
+    let nodes = cluster.nodes;
+    let prefs: Vec<NodeId> =
+        (0..ntasks as u32).flat_map(|t| [t % nodes, (t + 7) % nodes]).collect();
+    let spec = StageSpec { template: &template, preferred: &prefs, pref_width: 2, tasks: ntasks };
+    sink.bench(&format!("sim/submit_shaped {ntasks}-task stage"), iters, ntasks as f64, || {
+        let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.submit_shaped(0, &spec, &SimOpts::default());
+        std::hint::black_box(sim.drain());
     });
 
     // ---- events/sec through the indexed event queue ----
-    // Same 2000-task stage, but the unit is *events*: the discovery +
+    // Same shaped stage, but the unit is *events*: the discovery +
     // dirty-roll + heap cost per event is the number the indexed-queue
     // overhaul moves.
     let events = {
         let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
-        sim.submit(0, &tasks, &SimOpts::default());
+        sim.submit_shaped(0, &spec, &SimOpts::default());
         sim.drain();
         sim.stats().events
     };
-    bench("sim/event core 2000-task stage (events/sec)", 9, events as f64, || {
+    sink.bench("sim/event core shaped stage (events/sec)", iters, events as f64, || {
         let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
-        sim.submit(0, &tasks, &SimOpts::default());
+        sim.submit_shaped(0, &spec, &SimOpts::default());
         std::hint::black_box(sim.drain());
     });
 
     // ---- full simulated jobs (the unit of every experiment) ----
-    for (name, w) in [
-        ("sort-by-key", Workload::SortByKey1B),
-        ("shuffling", Workload::Shuffling400G),
-        ("kmeans-100m (21 stages)", Workload::KMeans100M),
-    ] {
+    let jobs: &[(&str, Workload)] = if args.quick {
+        &[("kmeans-100m (21 stages)", Workload::KMeans100M)]
+    } else {
+        &[
+            ("sort-by-key", Workload::SortByKey1B),
+            ("shuffling", Workload::Shuffling400G),
+            ("kmeans-100m (21 stages)", Workload::KMeans100M),
+        ]
+    };
+    for (name, w) in jobs {
         let job = w.job();
         let conf = SparkConf::default();
-        bench(&format!("engine/run {name}"), 9, 1.0, || {
+        sink.bench(&format!("engine/run {name}"), iters, 1.0, || {
             std::hint::black_box(run(&job, &conf, &cluster, &SimOpts::default()));
         });
         let plan = prepare(&job).expect("bench workloads plan cleanly");
-        bench(&format!("engine/run_planned {name}"), 9, 1.0, || {
+        sink.bench(&format!("engine/run_planned {name}"), iters, 1.0, || {
             std::hint::black_box(run_planned(&plan, &conf, &cluster, &SimOpts::default()));
         });
     }
+
+    // ---- incremental re-pricing: checkpoint resume vs full pricing ----
+    // An iterative cache-heavy job priced under a shuffle-class delta
+    // (kryo): the fork path replays the generate+cache prefix from a
+    // checkpoint, the full path prices every event from t=0. Unit =
+    // priced trials; both rows are bit-identical in outcome (pinned by
+    // tests/hotpath_equiv.rs), so the gap is pure pricing work saved.
+    let (points, parts) = args.size((2_000_000, 64), (400_000, 32));
+    let itjob = workloads::kmeans(points, 32, 8, 3, parts);
+    let itplan = prepare(&itjob).expect("kmeans plans cleanly");
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let base = SparkConf::default();
+    let kryo = base.clone().with("spark.serializer", "kryo");
+    let (_, fork) = run_planned_recording(&itplan, &base, &cluster, &opts);
+    assert!(fork.checkpoints() > 0, "kmeans must record at least one checkpoint");
+    sink.bench("engine/re-price kmeans full (kryo delta)", iters, 1.0, || {
+        std::hint::black_box(run_planned(&itplan, &kryo, &cluster, &opts));
+    });
+    sink.bench("engine/re-price kmeans forked (kryo delta)", iters, 1.0, || {
+        let res = run_planned_from(&fork, &itplan, &kryo, &cluster, &opts)
+            .expect("a shuffle-class delta resumes from the recorded checkpoint");
+        std::hint::black_box(res);
+    });
+
+    sink.write(args.json.as_deref()).expect("bench artifact write");
 }

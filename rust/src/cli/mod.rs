@@ -25,9 +25,10 @@ use crate::experiments::{self, cases, sensitivity, straggler, tenancy};
 use crate::report::sim_stats_table;
 use crate::sim::{SimOpts, SimStats, Straggler};
 use crate::tuner::baselines::{grid_conf, grid_size};
-use crate::tuner::{tune, TuneOpts, WarmStart};
+use crate::tuner::{tune, ForkingRunner, TuneOpts, WarmStart};
 use crate::util::stats::Summary;
-use crate::workloads::Workload;
+use crate::workloads::{self, Workload};
+use std::sync::Arc;
 
 /// Parsed flags: `--key value` pairs, repeated `--conf`, positionals.
 struct Args {
@@ -123,8 +124,11 @@ USAGE:
                       ≤ cold, deterministically across worker counts)
   sparktune perf-smoke [--workload <name>] [--trials N]
                      (hot-path regression guard: plan-once pricing must be
-                      bit-identical to re-planning and the indexed event core
-                      must do strictly less flow work than per-event rescans)
+                      bit-identical to re-planning, the indexed event core
+                      must do strictly less flow work than per-event rescans,
+                      and an incrementally re-priced tuner walk must replay
+                      checkpointed events and process strictly fewer events
+                      than the full-reprice oracle at bit-identical outcomes)
   sparktune help-conf
 
 WORKLOADS: sort-by-key | shuffling | kmeans-100m | kmeans-200m |
@@ -574,6 +578,64 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 total.flow_rolls,
                 total.live_copy_event_sum,
                 total.live_copy_event_sum / total.flow_rolls.max(1)
+            );
+            // Incremental re-pricing gate: a full straggler-aware tuner
+            // walk over an iterative cache-heavy job, priced once through
+            // the checkpoint-forking runner and once through the
+            // full-reprice oracle. The walk must (a) be bit-identical,
+            // (b) actually replay checkpointed events, and (c) process
+            // strictly fewer events than pricing every trial from t=0.
+            let itjob = workloads::kmeans(2_000_000, 32, 8, 3, 64);
+            let itplan = prepare(&itjob).map_err(|e| e.to_string())?;
+            let walk = TuneOpts { straggler_aware: true, ..TuneOpts::default() };
+            let mut inc = ForkingRunner::new(Arc::clone(&itplan), &cluster, opts.clone());
+            let inc_out = tune(&mut inc, &walk);
+            let mut oracle = ForkingRunner::new(itplan, &cluster, opts);
+            oracle.full_reprice = true;
+            let full_out = tune(&mut oracle, &walk);
+            let identical = inc_out.best_conf == full_out.best_conf
+                && inc_out.baseline.to_bits() == full_out.baseline.to_bits()
+                && inc_out.best.to_bits() == full_out.best.to_bits()
+                && inc_out.trials.len() == full_out.trials.len()
+                && inc_out.trials.iter().zip(&full_out.trials).all(|(a, b)| {
+                    a.step == b.step
+                        && a.duration.to_bits() == b.duration.to_bits()
+                        && a.kept == b.kept
+                });
+            if !identical {
+                return Err(format!(
+                    "incremental re-pricing diverged from full pricing: \
+                     best {:.6}s vs {:.6}s over {} vs {} trials",
+                    inc_out.best,
+                    full_out.best,
+                    inc_out.trials.len(),
+                    full_out.trials.len()
+                ));
+            }
+            if inc.forked_trials() == 0 || inc.replayed_events() == 0 {
+                return Err(format!(
+                    "no trial resumed from a checkpoint ({} forked, {} replayed events) — \
+                     incremental re-pricing is not engaging",
+                    inc.forked_trials(),
+                    inc.replayed_events()
+                ));
+            }
+            if inc.total_events() >= oracle.total_events() {
+                return Err(format!(
+                    "incremental walk processed {} events vs {} full-reprice — \
+                     checkpoint forking is not saving pricing work",
+                    inc.total_events(),
+                    oracle.total_events()
+                ));
+            }
+            println!(
+                "ok: {}-trial walk incremental ≡ full; {} trials forked, {} events \
+                 replayed from checkpoints; {} events processed vs {} full-reprice",
+                inc_out.trials.len() + 1,
+                inc.forked_trials(),
+                inc.replayed_events(),
+                inc.total_events(),
+                oracle.total_events()
             );
             Ok(())
         }

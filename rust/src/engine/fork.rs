@@ -1,0 +1,607 @@
+//! Incremental trial re-pricing: fork the event timeline at the first
+//! conf-divergent event.
+//!
+//! The trial-and-error loop evaluates one plan under many
+//! configurations, and consecutive trials usually differ in a single
+//! conf group — the paper's decision list mutates one sibling group at
+//! a time. Whole prefixes of the event timeline are then provably
+//! shared: a parameter touching only shuffle/spill behavior cannot
+//! change how a generate-and-cache stage prices, so every event up to
+//! the first shuffle stage is bit-identical across those trials.
+//!
+//! This module makes that sharing executable:
+//!
+//! * [`run_planned_recording`] runs one planned job exactly like
+//!   [`run_planned`](super::run_planned) — bit-identical, pinned by
+//!   tests — while snapshotting a [`ForkPoint`]: engine + simulator
+//!   state ([`crate::sim::SimCheckpoint`]) captured at every
+//!   *conf-sensitivity barrier* (just before a newly runnable wave of
+//!   stages is priced and submitted).
+//! * [`divergence_mask`] classifies the difference between two
+//!   [`SparkConf`]s against a plan: which stages *can* price
+//!   differently (see the field classes below), or `None` when a
+//!   timeline-shaping (Global) field differs and nothing is reusable.
+//! * [`run_planned_from`] resumes pricing from the **latest checkpoint
+//!   whose already-submitted stages are all insensitive** to the conf
+//!   diff — the first event at which the timelines can diverge — and
+//!   re-prices only the suffix under the new conf. The result is
+//!   bit-identical to a full run (the tests pin it against both the
+//!   full-reprice oracle and the `Discovery::Scan` reference core),
+//!   with `SimStats::replayed_events` / `forked_trials` recording the
+//!   work that was *not* redone.
+//!
+//! # Conf-field classes
+//!
+//! Every [`SparkConf`] field falls in one of three classes, decided by
+//! which pricing paths read it (the classification is pinned by an
+//! exhaustive destructure — adding a conf field without classifying it
+//! is a compile error):
+//!
+//! * **Shuffle** — read only when pricing a stage with a shuffle-read
+//!   input or shuffle-write output (serializer and codec included: the
+//!   MEMORY_ONLY cache path stores deserialized objects and never
+//!   touches them, see [`crate::storage`]).
+//! * **Cache** — `spark.storage.memoryFraction` (and conservatively
+//!   `spark.rdd.compress`): sizes the storage pool, so it affects
+//!   cache stages *and*, through the cached-bytes share of every
+//!   executor's GC occupancy, every stage from the first cache-writer
+//!   on. Conservatively also shuffle stages (spill interplay).
+//! * **Global** — fields that shape the timeline itself (cores,
+//!   parallelism, scheduler mode, delay scheduling, speculation) or
+//!   whose reach we don't model precisely; any difference invalidates
+//!   every checkpoint. Unmodeled `extras` differences are Global too.
+//!
+//! Checkpoint validity needs *submitted* stages insensitive — not
+//! completed ones — because a submitted stage's tasks were priced at
+//! submission time under the base conf, whether or not they finished.
+
+use super::plan::{StageInput, StageOutput};
+use super::run::{self, JobPlan, JobResult, PricedMeta, PricingState, StageReport};
+use crate::cluster::ClusterSpec;
+use crate::conf::SparkConf;
+use crate::exec::MemoryModel;
+use crate::shuffle::IoProfiles;
+use crate::sim::{scheduler_for, EventSim, SimCheckpoint, SimOpts};
+use std::sync::Arc;
+
+/// Checkpoints recorded per run. Linear chains longer than this stop
+/// recording (keep-first: on realistic conf diffs the valid prefix is
+/// short — the first shuffle or cache stage bounds it — so early
+/// barriers are the ones that get reused).
+const MAX_CHECKPOINTS: usize = 16;
+
+/// Which pricing inputs a conf difference touches.
+struct Divergence {
+    shuffle: bool,
+    cache: bool,
+    global: bool,
+}
+
+/// Classify every divergent field of `a` vs `b` (see the module docs
+/// for the classes). The exhaustive destructure forces a decision for
+/// every new conf field. `warnings` are diagnostics, excluded from conf
+/// equality and from divergence alike.
+fn divergence(a: &SparkConf, b: &SparkConf) -> Divergence {
+    let SparkConf {
+        reducer_max_size_in_flight,
+        shuffle_compress,
+        shuffle_file_buffer,
+        shuffle_manager,
+        io_compression_codec,
+        shuffle_io_prefer_direct_bufs,
+        rdd_compress,
+        serializer,
+        shuffle_memory_fraction,
+        storage_memory_fraction,
+        shuffle_consolidate_files,
+        shuffle_spill_compress,
+        executor_cores,
+        executor_memory,
+        num_executors,
+        default_parallelism,
+        shuffle_spill,
+        scheduler_mode,
+        locality_wait_secs,
+        speculation,
+        speculation_multiplier,
+        speculation_quantile,
+        extras,
+        warnings: _,
+    } = a;
+    let shuffle = *reducer_max_size_in_flight != b.reducer_max_size_in_flight
+        || *shuffle_compress != b.shuffle_compress
+        || *shuffle_file_buffer != b.shuffle_file_buffer
+        || *shuffle_manager != b.shuffle_manager
+        || *io_compression_codec != b.io_compression_codec
+        || *shuffle_io_prefer_direct_bufs != b.shuffle_io_prefer_direct_bufs
+        || *serializer != b.serializer
+        || shuffle_memory_fraction.to_bits() != b.shuffle_memory_fraction.to_bits()
+        || *shuffle_consolidate_files != b.shuffle_consolidate_files
+        || *shuffle_spill_compress != b.shuffle_spill_compress
+        || *shuffle_spill != b.shuffle_spill;
+    let cache = storage_memory_fraction.to_bits() != b.storage_memory_fraction.to_bits()
+        || *rdd_compress != b.rdd_compress;
+    let global = *executor_cores != b.executor_cores
+        || *executor_memory != b.executor_memory
+        || *num_executors != b.num_executors
+        || *default_parallelism != b.default_parallelism
+        || *scheduler_mode != b.scheduler_mode
+        || locality_wait_secs.to_bits() != b.locality_wait_secs.to_bits()
+        || *speculation != b.speculation
+        || speculation_multiplier.to_bits() != b.speculation_multiplier.to_bits()
+        || speculation_quantile.to_bits() != b.speculation_quantile.to_bits()
+        || *extras != b.extras;
+    Divergence { shuffle, cache, global }
+}
+
+/// Per-stage conf-sensitivity of the diff between `a` and `b` on
+/// `plan`: `mask[sid]` is `true` iff stage `sid` *can* price
+/// differently under the two confs. `None` means a Global field
+/// differs — the whole timeline may diverge and nothing is reusable.
+/// Equal confs yield an all-`false` mask.
+pub fn divergence_mask(plan: &JobPlan, a: &SparkConf, b: &SparkConf) -> Option<Vec<bool>> {
+    let d = divergence(a, b);
+    if d.global {
+        return None;
+    }
+    let first_writer = plan.stages.iter().find(|s| s.cache_write).map(|s| s.id);
+    Some(
+        plan.stages
+            .iter()
+            .map(|s| {
+                let shuffle_stage = matches!(s.input, StageInput::ShuffleRead { .. })
+                    || matches!(s.output, StageOutput::ShuffleWrite { .. });
+                let cache_stage =
+                    matches!(s.input, StageInput::CacheRead { .. }) || s.cache_write;
+                (d.shuffle && shuffle_stage)
+                    || (d.cache
+                        && (shuffle_stage
+                            || cache_stage
+                            || first_writer.is_some_and(|w| s.id >= w)))
+            })
+            .collect(),
+    )
+}
+
+/// Engine + simulator state at one conf-sensitivity barrier: everything
+/// needed to re-enter the pump loop just before a wave of newly
+/// runnable stages is priced. Snapshotted *before* the wave submits, so
+/// the wave itself (and everything after) re-prices under the new conf;
+/// crashes in the wave reproduce too.
+#[derive(Clone)]
+struct EngineCheckpoint {
+    sim: SimCheckpoint,
+    /// Stage ids priced and submitted so far — the reuse precondition:
+    /// resuming is valid iff every one of them is insensitive to the
+    /// conf diff (submitted, not completed: pricing happens at
+    /// submission, whether or not the tasks have finished).
+    submitted: Vec<usize>,
+    /// The newly runnable wave this checkpoint was taken in front of.
+    to_submit: Vec<usize>,
+    /// handle → (job index, stage id, pricing metadata) prefix.
+    by_handle: Vec<(usize, usize, PricedMeta)>,
+    parents_left: Vec<usize>,
+    pricing: PricingState,
+    reports: Vec<Option<StageReport>>,
+    finish: f64,
+}
+
+/// The recorded timeline of one full pricing run: the conf it ran
+/// under plus every checkpoint taken along the way. Feed it to
+/// [`run_planned_from`] with a different conf to price only the suffix
+/// past the first possibly-divergent event.
+pub struct ForkPoint {
+    base_conf: SparkConf,
+    opts: SimOpts,
+    nodes: u32,
+    checkpoints: Vec<EngineCheckpoint>,
+}
+
+impl ForkPoint {
+    /// Number of recorded conf-sensitivity barriers.
+    pub fn checkpoints(&self) -> usize {
+        self.checkpoints.len()
+    }
+
+    /// The configuration the recorded timeline was priced under.
+    pub fn base_conf(&self) -> &SparkConf {
+        &self.base_conf
+    }
+
+    /// The latest checkpoint whose submitted prefix is insensitive to
+    /// the diff against `conf`.
+    fn resume_checkpoint(&self, plan: &JobPlan, conf: &SparkConf) -> Option<&EngineCheckpoint> {
+        let mask = divergence_mask(plan, &self.base_conf, conf)?;
+        self.checkpoints.iter().rev().find(|cp| cp.submitted.iter().all(|&sid| !mask[sid]))
+    }
+
+    /// How many events of the recorded timeline a trial under `conf`
+    /// would inherit instead of re-processing — the position of the
+    /// first event at which the two timelines can diverge. `None`:
+    /// nothing is reusable and the trial must price in full.
+    pub fn shared_prefix_events(&self, plan: &JobPlan, conf: &SparkConf) -> Option<u64> {
+        self.resume_checkpoint(plan, conf).map(|cp| cp.sim.events())
+    }
+}
+
+/// `SimOpts` equality by bit pattern — forks recorded under different
+/// seeds/jitter/straggler models describe different timelines.
+fn same_opts(a: &SimOpts, b: &SimOpts) -> bool {
+    a.seed == b.seed
+        && a.jitter.to_bits() == b.jitter.to_bits()
+        && match (&a.straggler, &b.straggler) {
+            (None, None) => true,
+            (Some(x), Some(y)) => {
+                x.prob.to_bits() == y.prob.to_bits() && x.factor.to_bits() == y.factor.to_bits()
+            }
+            _ => false,
+        }
+}
+
+/// [`run_planned`](super::run_planned) for one job, recording a
+/// [`ForkPoint`] along the way. Bit-identical to the plain run — same
+/// result, same [`crate::sim::SimStats`] — because checkpointing only
+/// *reads* state (the wave submission it momentarily defers happens in
+/// the same order immediately after).
+pub fn run_planned_recording(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> (JobResult, ForkPoint) {
+    let mem = MemoryModel::new(conf, cluster);
+    let prof = IoProfiles::from_conf(conf);
+    let mut sim =
+        EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), run::policy_of(conf));
+    sim.set_pool(0, plan.pool);
+    let n = plan.stages.len();
+    let mut jr = run::JobRt {
+        plan: Some(plan.as_ref()),
+        name: Arc::clone(&plan.name),
+        parents_left: plan.parents_left.clone(),
+        pricing: PricingState::new(n),
+        reports: vec![None; n],
+        crash: None,
+        crash_report: None,
+        finish: 0.0,
+        // Job index 0 keeps the batch runner's seed derivation bit for
+        // bit (a solo run is job 0 of a one-job batch).
+        job_seed: opts.seed,
+    };
+    let mut by_handle: Vec<(usize, usize, PricedMeta)> = Vec::new();
+    let mut checkpoints: Vec<EngineCheckpoint> = Vec::new();
+
+    for &sid in &plan.roots {
+        if jr.crash.is_some() {
+            break;
+        }
+        run::submit_stage(
+            0, sid, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
+        );
+    }
+
+    while let Some(done) = sim.advance() {
+        debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
+        let sid = by_handle[done.handle].1;
+        let meta = &by_handle[done.handle].2;
+        let stage_tasks = plan.stages[sid].tasks;
+        jr.reports[sid] = Some(StageReport {
+            name: Arc::clone(&plan.stages[sid].name),
+            duration: done.stats.duration,
+            tasks: stage_tasks,
+            cpu_secs: done.stats.cpu_secs,
+            disk_bytes: done.stats.disk_bytes,
+            net_bytes: done.stats.net_bytes,
+            spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
+            gc_factor: meta.gc,
+            cache_hit_fraction: meta.cache_hit_fraction,
+            locality_hits: done.stats.locality_hits,
+            speculated: done.stats.speculated,
+        });
+        jr.pricing.placements[sid] = Some(done.task_nodes);
+        jr.finish = done.at;
+        // Collect the newly runnable wave first (instead of submitting
+        // each child inside the decrement loop, as the batch runner
+        // does) so the barrier snapshot can be taken in front of it;
+        // the submissions then happen in the same child order —
+        // bit-identical, pinned by the tests.
+        let mut wave: Vec<usize> = Vec::new();
+        for &ch in &plan.children[sid] {
+            jr.parents_left[ch] -= 1;
+            if jr.parents_left[ch] == 0 {
+                wave.push(ch);
+            }
+        }
+        if !wave.is_empty() && jr.crash.is_none() && checkpoints.len() < MAX_CHECKPOINTS {
+            checkpoints.push(EngineCheckpoint {
+                sim: sim.checkpoint(),
+                submitted: by_handle.iter().map(|e| e.1).collect(),
+                to_submit: wave.clone(),
+                by_handle: by_handle.clone(),
+                parents_left: jr.parents_left.clone(),
+                pricing: jr.pricing.clone(),
+                reports: jr.reports.clone(),
+                finish: jr.finish,
+            });
+        }
+        for ch in wave {
+            if jr.crash.is_none() {
+                run::submit_stage(
+                    0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
+                );
+            }
+        }
+    }
+    debug_assert_eq!(
+        by_handle.len() as u64,
+        sim.stats().completions,
+        "event core went idle with registered stages incomplete"
+    );
+
+    let sim_stats = sim.stats();
+    let mut stages: Vec<StageReport> = jr.reports.into_iter().flatten().collect();
+    if let Some(cr) = jr.crash_report {
+        stages.push(cr);
+    }
+    let result = JobResult {
+        job: jr.name,
+        duration: jr.finish,
+        crashed: jr.crash,
+        stages,
+        sim: sim_stats,
+    };
+    let fork = ForkPoint {
+        base_conf: conf.clone(),
+        opts: opts.clone(),
+        nodes: cluster.nodes,
+        checkpoints,
+    };
+    (result, fork)
+}
+
+/// Price one trial by resuming `fork`'s recorded timeline at the latest
+/// checkpoint valid for `conf`, re-pricing only the suffix. Returns
+/// `None` when nothing is reusable — a Global field differs, no
+/// checkpoint's submitted prefix is insensitive, or the fork was
+/// recorded under different sim opts / cluster — and the caller must
+/// price in full.
+///
+/// On `Some`, the [`JobResult`] is **bit-identical** to a full
+/// [`run_planned`](super::run_planned) under `conf` except for the
+/// bookkeeping counters: `sim.replayed_events` carries the inherited
+/// prefix, `sim.forked_trials` is 1, and
+/// [`SimStats::logical`](crate::sim::SimStats::logical) equates the two.
+pub fn run_planned_from(
+    fork: &ForkPoint,
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> Option<JobResult> {
+    if cluster.nodes != fork.nodes || !same_opts(&fork.opts, opts) {
+        return None;
+    }
+    let cp = fork.resume_checkpoint(plan, conf)?;
+    let mem = MemoryModel::new(conf, cluster);
+    let prof = IoProfiles::from_conf(conf);
+    // Global fields match (resume_checkpoint verified it), so the
+    // scheduler and policy rebuilt from `conf` equal the recorded ones;
+    // pools are restored from the checkpoint itself.
+    let mut sim = EventSim::resume(cluster, scheduler_for(conf.scheduler_mode), &cp.sim);
+    let mut jr = run::JobRt {
+        plan: Some(plan.as_ref()),
+        name: Arc::clone(&plan.name),
+        parents_left: cp.parents_left.clone(),
+        pricing: cp.pricing.clone(),
+        reports: cp.reports.clone(),
+        crash: None,
+        crash_report: None,
+        finish: cp.finish,
+        job_seed: opts.seed,
+    };
+    let mut by_handle = cp.by_handle.clone();
+
+    // Re-price the checkpoint's pending wave under the new conf, then
+    // pump to completion exactly like the recording run.
+    for &ch in &cp.to_submit {
+        if jr.crash.is_none() {
+            run::submit_stage(
+                0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
+            );
+        }
+    }
+    while let Some(done) = sim.advance() {
+        debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
+        let sid = by_handle[done.handle].1;
+        let meta = &by_handle[done.handle].2;
+        let stage_tasks = plan.stages[sid].tasks;
+        jr.reports[sid] = Some(StageReport {
+            name: Arc::clone(&plan.stages[sid].name),
+            duration: done.stats.duration,
+            tasks: stage_tasks,
+            cpu_secs: done.stats.cpu_secs,
+            disk_bytes: done.stats.disk_bytes,
+            net_bytes: done.stats.net_bytes,
+            spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
+            gc_factor: meta.gc,
+            cache_hit_fraction: meta.cache_hit_fraction,
+            locality_hits: done.stats.locality_hits,
+            speculated: done.stats.speculated,
+        });
+        jr.pricing.placements[sid] = Some(done.task_nodes);
+        jr.finish = done.at;
+        for &ch in &plan.children[sid] {
+            jr.parents_left[ch] -= 1;
+            if jr.parents_left[ch] == 0 && jr.crash.is_none() {
+                run::submit_stage(
+                    0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
+                );
+            }
+        }
+    }
+    debug_assert_eq!(
+        by_handle.len() as u64,
+        sim.stats().completions,
+        "event core went idle with registered stages incomplete"
+    );
+
+    let sim_stats = sim.stats();
+    let mut stages: Vec<StageReport> = jr.reports.into_iter().flatten().collect();
+    if let Some(cr) = jr.crash_report {
+        stages.push(cr);
+    }
+    Some(JobResult {
+        job: jr.name,
+        duration: jr.finish,
+        crashed: jr.crash,
+        stages,
+        sim: sim_stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{prepare, run_planned, Dataset, Job, Op};
+    use crate::sim::Straggler;
+
+    /// Two-iteration mini k-means: generate + cache (no shuffle — the
+    /// serializer-insensitive prefix), then cache-read → map → shuffle
+    /// iterations.
+    fn mini_kmeans() -> Job {
+        let pts = Dataset::vectors(2_000_000, 32, 16);
+        let partials = Dataset::vectors(16 * 10, 32, 16).with_entropy(0.9);
+        let mut job = Job::new("mini-kmeans")
+            .op(Op::Generate { out: pts, cpu_ns_per_record: 400.0 })
+            .op(Op::Cache);
+        for _ in 0..2 {
+            job = job
+                .op(Op::CacheRead)
+                .op(Op::MapRecords { cpu_ns_per_record: 300.0, out: partials.clone() })
+                .op(Op::Repartition { reducers: 8 });
+        }
+        job
+    }
+
+    fn opts() -> SimOpts {
+        SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }
+    }
+
+    fn assert_results_identical(a: &JobResult, b: &JobResult, what: &str) {
+        assert_eq!(a.job, b.job, "{what}: job name");
+        assert_eq!(a.duration.to_bits(), b.duration.to_bits(), "{what}: duration");
+        assert_eq!(a.crashed, b.crashed, "{what}: crash state");
+        assert_eq!(a.stages.len(), b.stages.len(), "{what}: stage count");
+        for (x, y) in a.stages.iter().zip(&b.stages) {
+            assert_eq!(x.name, y.name, "{what}: stage name");
+            assert_eq!(x.duration.to_bits(), y.duration.to_bits(), "{what}: {} duration", x.name);
+            assert_eq!(x.cpu_secs.to_bits(), y.cpu_secs.to_bits(), "{what}: {} cpu", x.name);
+            assert_eq!(x.spilled_bytes, y.spilled_bytes, "{what}: {} spill", x.name);
+            assert_eq!(x.gc_factor.to_bits(), y.gc_factor.to_bits(), "{what}: {} gc", x.name);
+            assert_eq!(x.locality_hits, y.locality_hits, "{what}: {} locality", x.name);
+            assert_eq!(x.speculated, y.speculated, "{what}: {} speculated", x.name);
+        }
+    }
+
+    #[test]
+    fn global_field_diffs_invalidate_everything() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let base = SparkConf::default();
+        for (k, v) in [
+            ("spark.scheduler.mode", "FAIR"),
+            ("spark.locality.wait", "1s"),
+            ("spark.speculation", "true"),
+            ("spark.default.parallelism", "32"),
+            ("spark.yarn.queue", "prod"), // extras are unmodeled → Global
+        ] {
+            let other = base.clone().with(k, v);
+            assert!(divergence_mask(&plan, &base, &other).is_none(), "{k} must be Global");
+        }
+    }
+
+    #[test]
+    fn shuffle_diffs_spare_the_cache_prefix() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let base = SparkConf::default();
+        let kryo = base.clone().with("spark.serializer", "kryo");
+        let mask = divergence_mask(&plan, &base, &kryo).expect("shuffle-class diff");
+        // Stage 0 (generate + MEMORY_ONLY cache write) never touches the
+        // serializer; every shuffle stage can diverge.
+        assert!(!mask[0], "generate+cache stage is serializer-insensitive");
+        assert!(mask.iter().skip(1).any(|&m| m), "shuffle stages are serializer-sensitive");
+        // Equal confs: nothing diverges.
+        let zero = divergence_mask(&plan, &base, &base.clone()).unwrap();
+        assert!(zero.iter().all(|&m| !m));
+        // Storage fraction reaches everything from the first cache
+        // writer on (GC occupancy carries the cached bytes).
+        let frac = base.clone().with("spark.storage.memoryFraction", "0.7");
+        let mask = divergence_mask(&plan, &base, &frac).expect("cache-class diff");
+        assert!(mask.iter().all(|&m| m), "cache writer is stage 0 → all sensitive");
+    }
+
+    #[test]
+    fn recording_run_is_bit_identical_and_checkpoints() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let cluster = ClusterSpec::mini();
+        let conf = SparkConf::default();
+        let plain = run_planned(&plan, &conf, &cluster, &opts());
+        let (recorded, fork) = run_planned_recording(&plan, &conf, &cluster, &opts());
+        assert_results_identical(&plain, &recorded, "recording");
+        assert_eq!(plain.sim, recorded.sim, "recording must not perturb the core counters");
+        assert!(fork.checkpoints() > 0, "multi-stage job must hit barriers");
+        assert_eq!(fork.base_conf(), &conf);
+    }
+
+    #[test]
+    fn forked_run_matches_full_pricing_bitwise() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let cluster = ClusterSpec::mini();
+        let base = SparkConf::default();
+        let (_, fork) = run_planned_recording(&plan, &base, &cluster, &opts());
+        let kryo = base.clone().with("spark.serializer", "kryo");
+        let full = run_planned(&plan, &kryo, &cluster, &opts());
+        let forked = run_planned_from(&fork, &plan, &kryo, &cluster, &opts())
+            .expect("serializer diff shares the cache prefix");
+        assert_results_identical(&full, &forked, "fork");
+        // The bookkeeping counters are the only divergence: the forked
+        // run inherited a non-empty prefix instead of re-pricing it.
+        assert_eq!(forked.sim.logical(), full.sim.logical());
+        assert_eq!(forked.sim.forked_trials, 1);
+        assert!(forked.sim.replayed_events > 0);
+        assert_eq!(
+            fork.shared_prefix_events(&plan, &kryo),
+            Some(forked.sim.replayed_events),
+            "the resume point is the first divergent event"
+        );
+        assert!(
+            forked.sim.processed_events() < full.sim.events,
+            "forked trial must process strictly fewer events: {} vs {}",
+            forked.sim.processed_events(),
+            full.sim.events
+        );
+        assert_eq!(full.sim.forked_trials, 0, "full runs never fork");
+        assert_eq!(full.sim.replayed_events, 0);
+    }
+
+    #[test]
+    fn unreusable_trials_decline_instead_of_guessing() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let cluster = ClusterSpec::mini();
+        let base = SparkConf::default();
+        let (_, fork) = run_planned_recording(&plan, &base, &cluster, &opts());
+        // Global diff → no fork.
+        let fair = base.clone().with("spark.scheduler.mode", "FAIR");
+        assert!(run_planned_from(&fork, &plan, &fair, &cluster, &opts()).is_none());
+        // Different sim opts describe a different timeline → no fork.
+        let kryo = base.clone().with("spark.serializer", "kryo");
+        let other_seed = SimOpts { seed: 0x0DD, ..opts() };
+        assert!(run_planned_from(&fork, &plan, &kryo, &cluster, &other_seed).is_none());
+        let straggly = SimOpts { straggler: Some(Straggler { prob: 0.2, factor: 6.0 }), ..opts() };
+        assert!(run_planned_from(&fork, &plan, &kryo, &cluster, &straggly).is_none());
+        // Storage-fraction diff with the cache writer at stage 0: every
+        // checkpoint's prefix contains a sensitive stage → decline.
+        let frac = base.clone().with("spark.storage.memoryFraction", "0.7");
+        assert!(run_planned_from(&fork, &plan, &frac, &cluster, &opts()).is_none());
+        assert_eq!(fork.shared_prefix_events(&plan, &frac), None);
+    }
+}

@@ -17,9 +17,11 @@
 //! the DAG, and multiple jobs contend for one cluster under the
 //! `spark.scheduler.mode` policy.
 
+pub mod fork;
 pub mod plan;
 pub mod run;
 
+pub use fork::{divergence_mask, run_planned_from, run_planned_recording, ForkPoint};
 pub use plan::{plan, Locality, Stage, StageInput, StageOutput};
 pub use run::{
     prepare, run, run_all, run_all_planned, run_planned, JobPlan, JobResult, MultiJobResult,

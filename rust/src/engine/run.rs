@@ -68,11 +68,11 @@ pub struct JobPlan {
     /// The planned stages, in id order (see [`plan`]).
     pub stages: Vec<Stage>,
     /// DAG children per stage id.
-    children: Vec<Vec<usize>>,
+    pub(super) children: Vec<Vec<usize>>,
     /// Unfinished-parent counts per stage id (template, cloned per run).
-    parents_left: Vec<usize>,
+    pub(super) parents_left: Vec<usize>,
     /// Stages with no parents, in id order.
-    roots: Vec<usize>,
+    pub(super) roots: Vec<usize>,
 }
 
 impl JobPlan {
@@ -275,20 +275,8 @@ fn run_all_entries(
 ) -> MultiJobResult {
     let mem = MemoryModel::new(conf, cluster);
     let prof = IoProfiles::from_conf(conf);
-    // Delay scheduling + speculation flow from the typed configuration
-    // into the event core's policy.
-    let policy = SimPolicy {
-        locality_wait: conf.locality_wait_secs,
-        speculation: if conf.speculation {
-            Some(SpecPolicy {
-                quantile: conf.speculation_quantile,
-                multiplier: conf.speculation_multiplier,
-            })
-        } else {
-            None
-        },
-    };
-    let mut sim = EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), policy);
+    let mut sim =
+        EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), policy_of(conf));
 
     // ---- per-job runtime bookkeeping over the shared plans ----
     let mut jobs_rt: Vec<JobRt<'_>> = Vec::with_capacity(entries.len());
@@ -436,23 +424,42 @@ fn run_all_entries(
     MultiJobResult { results, makespan, sim: sim_stats }
 }
 
+/// Delay scheduling + speculation flow from the typed configuration into
+/// the event core's policy. Shared with the incremental re-pricing
+/// runner ([`super::fork`]) so both build the identical [`SimPolicy`].
+pub(super) fn policy_of(conf: &SparkConf) -> SimPolicy {
+    SimPolicy {
+        locality_wait: conf.locality_wait_secs,
+        speculation: if conf.speculation {
+            Some(SpecPolicy {
+                quantile: conf.speculation_quantile,
+                multiplier: conf.speculation_multiplier,
+            })
+        } else {
+            None
+        },
+    }
+}
+
 /// Runtime bookkeeping for one job inside the batch runner; the plan
-/// itself is borrowed from the shared `Arc`.
-struct JobRt<'p> {
+/// itself is borrowed from the shared `Arc`. `pub(super)` so the
+/// incremental re-pricing runner ([`super::fork`]) can drive the same
+/// submission machinery.
+pub(super) struct JobRt<'p> {
     /// `None` when planning failed (the job is reported crashed).
-    plan: Option<&'p JobPlan>,
-    name: Arc<str>,
+    pub(super) plan: Option<&'p JobPlan>,
+    pub(super) name: Arc<str>,
     /// Unfinished parent count per stage id (0 = runnable) — the one
     /// piece of DAG state that mutates per run.
-    parents_left: Vec<usize>,
-    pricing: PricingState,
+    pub(super) parents_left: Vec<usize>,
+    pub(super) pricing: PricingState,
     /// Completed stage reports by stage id.
-    reports: Vec<Option<StageReport>>,
-    crash: Option<String>,
-    crash_report: Option<StageReport>,
+    pub(super) reports: Vec<Option<StageReport>>,
+    pub(super) crash: Option<String>,
+    pub(super) crash_report: Option<StageReport>,
     /// Event-clock time of the last completion (or of the crash).
-    finish: f64,
-    job_seed: u64,
+    pub(super) finish: f64,
+    pub(super) job_seed: u64,
 }
 
 impl<'p> JobRt<'p> {
@@ -463,17 +470,19 @@ impl<'p> JobRt<'p> {
 
 /// Cross-stage pricing state, threaded along the DAG in submission
 /// (topological) order. All tables are dense, indexed by stage id.
-struct PricingState {
-    cache_plan: Option<storage::CachePlan>,
+/// `Clone` because checkpoints ([`super::fork`]) snapshot it mid-walk.
+#[derive(Clone, Debug)]
+pub(super) struct PricingState {
+    pub(super) cache_plan: Option<storage::CachePlan>,
     /// Shuffle handoff recorded under the *producer* stage id.
-    handoffs: Vec<Option<ShuffleHandoff>>,
+    pub(super) handoffs: Vec<Option<ShuffleHandoff>>,
     /// Actual node of each completed stage's tasks (by stage id, indexed
     /// by task) — the source of cache-read locality preferences.
-    placements: Vec<Option<Vec<NodeId>>>,
+    pub(super) placements: Vec<Option<Vec<NodeId>>>,
 }
 
 impl PricingState {
-    fn new(stages: usize) -> PricingState {
+    pub(super) fn new(stages: usize) -> PricingState {
         PricingState {
             cache_plan: None,
             handoffs: vec![None; stages],
@@ -483,22 +492,23 @@ impl PricingState {
 }
 
 #[derive(Clone, Debug)]
-struct ShuffleHandoff {
+pub(super) struct ShuffleHandoff {
     source_blocks: u32,
     entropy: f64,
 }
 
 /// Pricing metadata the completion handler needs to finish a report.
-struct PricedMeta {
-    gc: f64,
-    spilled_per_task: u64,
-    cache_hit_fraction: Option<f64>,
+#[derive(Clone, Debug)]
+pub(super) struct PricedMeta {
+    pub(super) gc: f64,
+    pub(super) spilled_per_task: u64,
+    pub(super) cache_hit_fraction: Option<f64>,
 }
 
 /// Price `sid` and submit its tasks to the event core; on OOM, mark the
 /// job crashed (no further stages of this job are submitted).
 #[allow(clippy::too_many_arguments)]
-fn submit_stage(
+pub(super) fn submit_stage(
     ji: usize,
     sid: usize,
     jr: &mut JobRt<'_>,
@@ -545,6 +555,7 @@ fn submit_stage(
                 &StageSpec {
                     template: &phases,
                     preferred: &preferred,
+                    pref_width: 1,
                     tasks: stage.tasks as usize,
                 },
                 &stage_opts,

@@ -122,6 +122,44 @@ pub fn fingerprint_trial(
     h.finish()
 }
 
+/// Fingerprint a trial's **fork family**: the key of the per-plan
+/// checkpoint store behind incremental re-pricing
+/// ([`crate::engine::run_planned_from`]). Two trials share a family —
+/// and may share a recorded event-timeline prefix — iff they agree on
+/// the job, the cluster, the simulator options, and every *Global*
+/// (timeline-shaping) conf field: cores, memory, parallelism, scheduler
+/// mode, delay scheduling, speculation, and any unmodeled extras.
+/// Shuffle- and cache-class fields are deliberately left out: those are
+/// exactly the differences a fork can absorb by re-pricing the suffix
+/// (see [`crate::engine::divergence_mask`] — whether a *particular*
+/// pair diverges early enough to help is decided there, per plan).
+pub fn fingerprint_fork(
+    job: &Job,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> Fingerprint {
+    let mut h = Fp128::new("sparktune.fork.v1");
+    write_job(&mut h, job);
+    h.write_u64(conf.executor_cores as u64);
+    h.write_u64(conf.executor_memory);
+    h.write_u64(conf.num_executors as u64);
+    h.write_u64(conf.default_parallelism as u64);
+    h.write_bool(conf.scheduler_mode == crate::sim::SchedulerMode::Fair);
+    h.write_f64(conf.locality_wait_secs);
+    h.write_bool(conf.speculation);
+    h.write_f64(conf.speculation_multiplier);
+    h.write_f64(conf.speculation_quantile);
+    h.write_u64(conf.extras.len() as u64);
+    for (k, v) in &conf.extras {
+        h.write_str(k);
+        h.write_str(v);
+    }
+    write_cluster(&mut h, cluster);
+    write_sim_opts(&mut h, opts);
+    h.finish()
+}
+
 /// Digest of just the configuration's canonical settings — the conf part
 /// of a trial key, exposed for tests and diagnostics.
 pub fn fingerprint_conf(conf: &SparkConf) -> Fingerprint {
@@ -310,6 +348,45 @@ mod tests {
         let c = a.clone().with("spark.rdd.compress", "true");
         assert_ne!(a, c);
         assert_ne!(fingerprint_conf(&a), fingerprint_conf(&c));
+    }
+
+    #[test]
+    fn fork_key_ignores_suffix_repriceable_fields_only() {
+        let (job, conf, cluster, opts) = base_key();
+        let base = fingerprint_fork(&job, &conf, &cluster, &opts);
+        // Shuffle/cache-class diffs stay in the same fork family (the
+        // whole point: those trials can share a recorded prefix).
+        for (k, v) in [
+            ("spark.serializer", "kryo"),
+            ("spark.shuffle.compress", "false"),
+            ("spark.shuffle.manager", "hash"),
+            ("spark.storage.memoryFraction", "0.7"),
+            ("spark.shuffle.spill", "false"),
+        ] {
+            let c = conf.clone().with(k, v);
+            assert_eq!(fingerprint_fork(&job, &c, &cluster, &opts), base, "{k} is not Global");
+        }
+        // Global (timeline-shaping) diffs split the family.
+        for (k, v) in [
+            ("spark.scheduler.mode", "FAIR"),
+            ("spark.locality.wait", "9s"),
+            ("spark.speculation", "true"),
+            ("spark.default.parallelism", "64"),
+            ("spark.executor.cores", "4"),
+            ("spark.yarn.queue", "prod"), // extras are unmodeled
+        ] {
+            let c = conf.clone().with(k, v);
+            assert_ne!(fingerprint_fork(&job, &c, &cluster, &opts), base, "{k} must be Global");
+        }
+        // And so do job / cluster / sim-opts perturbations.
+        let mut seed = opts.clone();
+        seed.seed ^= 1;
+        assert_ne!(fingerprint_fork(&job, &conf, &cluster, &seed), base);
+        let mut grown = cluster.clone();
+        grown.nodes += 1;
+        assert_ne!(fingerprint_fork(&job, &conf, &grown, &opts), base);
+        let other = Workload::KMeans100M.job();
+        assert_ne!(fingerprint_fork(&other, &conf, &cluster, &opts), base);
     }
 
     #[test]

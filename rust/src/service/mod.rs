@@ -42,7 +42,7 @@ pub mod profile;
 pub mod server;
 
 pub use cache::{CacheStats, ShardedCache};
-pub use fingerprint::{fingerprint_conf, fingerprint_trial, Fingerprint, Fp128};
+pub use fingerprint::{fingerprint_conf, fingerprint_fork, fingerprint_trial, Fingerprint, Fp128};
 pub use knn::{KnnIndex, Neighbor, NeighborRecord};
 pub use profile::JobProfile;
 pub use server::{

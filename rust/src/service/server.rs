@@ -36,12 +36,14 @@
 //! stay invariant across worker counts even with transfer enabled.
 
 use super::cache::{CacheStats, ShardedCache};
-use super::fingerprint::{fingerprint_trial, Fingerprint};
+use super::fingerprint::{fingerprint_fork, fingerprint_trial, Fingerprint};
 use super::knn::{KnnIndex, NeighborRecord};
 use super::profile::JobProfile;
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
-use crate::engine::{prepare, run, run_planned, Job, JobPlan};
+use crate::engine::{
+    prepare, run, run_planned, run_planned_from, run_planned_recording, ForkPoint, Job, JobPlan,
+};
 use crate::sim::SimOpts;
 use crate::tuner::{tune, TrialExecutor, TuneOpts, TuneOutcome, WarmStart};
 use std::collections::HashMap;
@@ -69,6 +71,12 @@ pub struct ServiceOpts {
     /// (distances ≲ 0.1) while excluding cross-family matches
     /// (distances ≳ 0.3) — see the profile goldens.
     pub warm_threshold: f64,
+    /// Force every planned trial through full pricing, bypassing the
+    /// incremental re-pricing fork store. Off by default (incremental
+    /// pricing is bit-identical to full pricing — pinned by the golden
+    /// suite); this is the *oracle* mode those tests and the CI
+    /// perf-smoke gate compare against.
+    pub full_reprice: bool,
 }
 
 impl Default for ServiceOpts {
@@ -79,6 +87,7 @@ impl Default for ServiceOpts {
             capacity: 4096,
             warm_start: false,
             warm_threshold: 0.25,
+            full_reprice: false,
         }
     }
 }
@@ -121,6 +130,12 @@ pub struct ServiceStats {
     pub coalesced: u64,
     pub warm_started: u64,
     pub warm_missed: u64,
+    /// Simulated trials that resumed a recorded event-timeline prefix
+    /// instead of pricing from t = 0 (incremental re-pricing).
+    pub forked_trials: u64,
+    /// Events those forked trials inherited from their checkpoints —
+    /// event-core work the service did not redo.
+    pub replayed_events: u64,
     pub cache: CacheStats,
 }
 
@@ -169,6 +184,13 @@ struct InFlight {
 pub struct TuningService {
     cluster: ClusterSpec,
     cache: ShardedCache<f64>,
+    /// Per-plan checkpoint store for incremental re-pricing: recorded
+    /// event timelines keyed by *fork family* ([`fingerprint_fork`] —
+    /// job + Global conf fields + cluster + sim opts), so the trials of
+    /// one tuner walk, which differ only in shuffle/cache-class fields,
+    /// land on one entry and share its prefix.
+    forks: ShardedCache<Arc<ForkPoint>>,
+    full_reprice: bool,
     inflight: Mutex<HashMap<Fingerprint, Arc<InFlight>>>,
     /// Evidence from completed sessions, keyed by workload profile.
     /// One lock, coarse on purpose: it is touched twice per *batch*
@@ -183,6 +205,8 @@ pub struct TuningService {
     coalesced: AtomicU64,
     warm_started: AtomicU64,
     warm_missed: AtomicU64,
+    forked: AtomicU64,
+    replayed: AtomicU64,
 }
 
 /// One admitted session: its request, effective (possibly warm-started)
@@ -204,6 +228,8 @@ impl TuningService {
         TuningService {
             cluster,
             cache: ShardedCache::new(opts.shards, opts.capacity),
+            forks: ShardedCache::new(opts.shards, opts.capacity),
+            full_reprice: opts.full_reprice,
             inflight: Mutex::new(HashMap::new()),
             knn: Mutex::new(KnnIndex::new()),
             workers: opts.workers.max(1),
@@ -215,6 +241,8 @@ impl TuningService {
             coalesced: AtomicU64::new(0),
             warm_started: AtomicU64::new(0),
             warm_missed: AtomicU64::new(0),
+            forked: AtomicU64::new(0),
+            replayed: AtomicU64::new(0),
         }
     }
 
@@ -349,7 +377,11 @@ impl TuningService {
     /// trial *identity* (fingerprint) still derives from the job itself,
     /// but a cache/coalescing miss prices the shared `Arc<JobPlan>`
     /// instead of re-planning — bit-identical (planning is pure), just
-    /// cheaper.
+    /// cheaper. Misses additionally go through the incremental
+    /// re-pricing fork store (unless [`ServiceOpts::full_reprice`]):
+    /// the first trial of a fork family records checkpoints, later
+    /// trials resume from the latest conf-insensitive one — still
+    /// bit-identical, the event core just skips the shared prefix.
     pub fn evaluate_planned(
         &self,
         job: &Job,
@@ -358,7 +390,38 @@ impl TuningService {
         sim: &SimOpts,
     ) -> f64 {
         let fp = fingerprint_trial(job, conf, &self.cluster, sim);
-        self.memoized(fp, || run_planned(plan, conf, &self.cluster, sim).effective_duration())
+        self.memoized(fp, || self.price_planned(job, plan, conf, sim))
+    }
+
+    /// Price one cache-missed planned trial: resume the fork family's
+    /// recorded timeline when a valid checkpoint exists, otherwise run
+    /// in full while recording one for the family's later trials.
+    fn price_planned(
+        &self,
+        job: &Job,
+        plan: &Arc<JobPlan>,
+        conf: &SparkConf,
+        sim: &SimOpts,
+    ) -> f64 {
+        if self.full_reprice {
+            return run_planned(plan, conf, &self.cluster, sim).effective_duration();
+        }
+        let fk = fingerprint_fork(job, conf, &self.cluster, sim);
+        if let Some(fork) = self.forks.get(fk) {
+            if let Some(res) = run_planned_from(&fork, plan, conf, &self.cluster, sim) {
+                self.forked.fetch_add(1, Ordering::Relaxed);
+                self.replayed.fetch_add(res.sim.replayed_events, Ordering::Relaxed);
+                return res.effective_duration();
+            }
+        }
+        let (res, fork) = run_planned_recording(plan, conf, &self.cluster, sim);
+        if fork.checkpoints() > 0 {
+            // Latest recording wins: a family whose stored fork declined
+            // this conf re-records under it, so the store adapts to
+            // whatever corner of the conf space the walk is exploring.
+            self.forks.insert(fk, Arc::new(fork));
+        }
+        res.effective_duration()
     }
 
     /// The memoization core, generic over the computation so tests can
@@ -470,6 +533,8 @@ impl TuningService {
             coalesced,
             warm_started: self.warm_started.load(Ordering::Relaxed),
             warm_missed: self.warm_missed.load(Ordering::Relaxed),
+            forked_trials: self.forked.load(Ordering::Relaxed),
+            replayed_events: self.replayed.load(Ordering::Relaxed),
             cache: self.cache.stats(),
         }
     }
@@ -514,6 +579,35 @@ mod tests {
             tune: TuneOpts { short_version: true, ..TuneOpts::default() },
             sim: SimOpts { jitter: 0.04, seed, straggler: None },
         }
+    }
+
+    #[test]
+    fn incremental_repricing_is_bit_identical_and_counted() {
+        // A cache-prefixed iterative workload (k-means: generate+cache,
+        // then shuffle iterations) under the full decision-list walk —
+        // consecutive trials differ in shuffle/cache-class fields only,
+        // so they share a fork family and the generate+cache prefix.
+        let req = SessionRequest {
+            name: "km".into(),
+            job: crate::workloads::kmeans(400_000, 32, 8, 3, 16),
+            tune: TuneOpts::default(),
+            sim: SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None },
+        };
+        let inc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let oracle = TuningService::new(
+            ClusterSpec::mini(),
+            ServiceOpts { full_reprice: true, ..ServiceOpts::default() },
+        );
+        let a = inc.serve(std::slice::from_ref(&req)).remove(0);
+        let b = oracle.serve(std::slice::from_ref(&req)).remove(0);
+        assert!(
+            outcomes_identical(&a.outcome, &b.outcome),
+            "incremental re-pricing must be bit-identical to the full-reprice oracle"
+        );
+        let (si, so) = (inc.stats(), oracle.stats());
+        assert!(si.forked_trials > 0, "shuffle-class trials must resume the recorded prefix");
+        assert!(si.replayed_events > 0, "resumed trials must inherit events");
+        assert_eq!((so.forked_trials, so.replayed_events), (0, 0), "the oracle never forks");
     }
 
     #[test]

@@ -225,6 +225,20 @@ pub struct SimStats {
     /// Σ over events of live running copies — the per-event scan work a
     /// rescanning core would have performed.
     pub live_copy_event_sum: u64,
+    /// Admission-bucket probes: pending-task peeks (and lazy-deletion
+    /// pops) the bucketed admission path actually performed. A linear
+    /// admission scan would have touched every pending task of every
+    /// offered stage instead.
+    pub admit_probes: u64,
+    /// Events inherited from a checkpoint instead of being re-processed
+    /// — incremental re-pricing's saved work. Zero on full runs; on a
+    /// resumed run, `events` still counts the *whole* timeline
+    /// (inherited + processed), so `events - replayed_events` is what
+    /// this trial actually cost.
+    pub replayed_events: u64,
+    /// Runs that resumed from a [`SimCheckpoint`] (0 or 1 per core;
+    /// aggregates across trials via [`absorb`](SimStats::absorb)).
+    pub forked_trials: u64,
 }
 
 impl SimStats {
@@ -242,6 +256,21 @@ impl SimStats {
         self.heap_pushes + self.heap_pops + self.heap_updates
     }
 
+    /// Events this run actually processed: the full timeline minus the
+    /// prefix inherited from a checkpoint.
+    pub fn processed_events(&self) -> u64 {
+        self.events.saturating_sub(self.replayed_events)
+    }
+
+    /// The counters that describe the *simulated timeline* rather than
+    /// how it was obtained: incremental bookkeeping (`replayed_events`,
+    /// `forked_trials`) zeroed. A resumed run and a full run of the same
+    /// trial are bit-identical under this projection — the equality the
+    /// golden oracles pin.
+    pub fn logical(&self) -> SimStats {
+        SimStats { replayed_events: 0, forked_trials: 0, ..*self }
+    }
+
     /// Fold another snapshot into this one (aggregating across runs —
     /// the CLI's `perf-smoke` totals, for example). Destructures
     /// exhaustively so adding a counter without summing it here is a
@@ -257,6 +286,9 @@ impl SimStats {
             heap_updates,
             flow_rolls,
             live_copy_event_sum,
+            admit_probes,
+            replayed_events,
+            forked_trials,
         } = *other;
         self.events += events;
         self.completions += completions;
@@ -267,6 +299,9 @@ impl SimStats {
         self.heap_updates += heap_updates;
         self.flow_rolls += flow_rolls;
         self.live_copy_event_sum += live_copy_event_sum;
+        self.admit_probes += admit_probes;
+        self.replayed_events += replayed_events;
+        self.forked_trials += forked_trials;
     }
 }
 
@@ -392,18 +427,25 @@ pub struct StageCompletion {
 }
 
 /// A uniform stage for the fast submission path: every task shares one
-/// phase template and carries at most one preferred node. The engine's
+/// phase template and a fixed-width preferred-node list (one entry for
+/// plain block locality, several for replicated blocks). The engine's
 /// priced stages are exactly this shape; submitting through
 /// [`EventSim::submit_shaped`] skips the per-task [`TaskSpec`]
-/// materialization (and its per-task `Vec` allocations) entirely.
-/// Results are bit-identical to the equivalent [`EventSim::submit`].
+/// materialization (and its per-task `Vec` allocations) entirely —
+/// including for replicated-input stages, which previously had to fall
+/// back to per-task specs. Results are bit-identical to the equivalent
+/// [`EventSim::submit`].
 #[derive(Clone, Copy, Debug)]
 pub struct StageSpec<'a> {
     /// Phase template shared by every task (jitter is applied per task).
     pub template: &'a [Phase],
-    /// Preferred node per task: either empty (no task has a preference)
-    /// or exactly `tasks` long.
+    /// Preferred nodes, `pref_width` per task, task-major: task `t` owns
+    /// `preferred[t*pref_width..(t+1)*pref_width]`. Either empty (no
+    /// task has a preference) or exactly `tasks × pref_width` long.
     pub preferred: &'a [NodeId],
+    /// Preference-list entries per task (ignored when `preferred` is
+    /// empty; a replica count for replicated-block inputs).
+    pub pref_width: usize,
     /// Task count.
     pub tasks: usize,
 }
@@ -421,6 +463,7 @@ const ABSENT: u32 = u32::MAX;
 /// on the id, making peek/pop order a total, deterministic function of
 /// the contents. Keys must not be NaN (the phase translator's
 /// `Phase::is_noop` NaN guard upholds this).
+#[derive(Clone)]
 struct TimeHeap {
     /// `(key, id)` pairs in heap order (minimum at index 0).
     items: Vec<(f64, u32)>,
@@ -470,6 +513,63 @@ impl TimeHeap {
         let top = *self.items.first()?;
         self.remove_at(0);
         Some(top)
+    }
+
+    /// Batch-pop every entry with key ≤ `cutoff` (the minimum-timestamp
+    /// tie group plus anything inside the same epsilon window), pushing
+    /// the ids onto `out` and returning how many were popped.
+    ///
+    /// The due entries form a root-connected subtree (heap property:
+    /// a parent past the cutoff has no due descendants), so a pruned
+    /// walk touches only them plus their fringe; holes are then filled
+    /// from the tail and one Floyd-style descending `sift_down` pass
+    /// over the vacated positions restores the heap — replacing the
+    /// per-event pop/sift cycle per tie. Pop *order* within the batch is
+    /// heap-layout order; callers needing the canonical tie order
+    /// (ascending id, as `pop` yields) sort the batch.
+    fn pop_due_into(&mut self, cutoff: f64, out: &mut Vec<u32>) -> usize {
+        let Some(&(top, _)) = self.items.first() else { return 0 };
+        if top > cutoff {
+            return 0;
+        }
+        // Pruned DFS over the due subtree, recording vacated positions.
+        let mut holes: Vec<usize> = vec![0];
+        let mut i = 0;
+        while i < holes.len() {
+            let p = holes[i];
+            i += 1;
+            let (_, id) = self.items[p];
+            self.pos[id as usize] = ABSENT;
+            out.push(id);
+            for child in [2 * p + 1, 2 * p + 2] {
+                if child < self.items.len() && self.items[child].0 <= cutoff {
+                    holes.push(child);
+                }
+            }
+        }
+        let popped = holes.len();
+        // Fill holes from the tail, largest position first: every hole
+        // above the current one is already gone, so the tail is always a
+        // survivor (or the hole itself).
+        holes.sort_unstable_by(|a, b| b.cmp(a));
+        for &p in &holes {
+            let last = self.items.len() - 1;
+            self.items.swap(p, last);
+            self.items.pop();
+            if p < self.items.len() {
+                self.pos[self.items[p].1 as usize] = p as u32;
+            }
+        }
+        // Descending-position sift_down = partial Floyd heapify over the
+        // refilled subtree (children of each fixed position are valid
+        // heaps by the time it is processed, deepest holes first). The
+        // subtree is rooted at position 0, so nothing ever sifts up.
+        for &p in &holes {
+            if p < self.items.len() {
+                self.sift_down(p);
+            }
+        }
+        popped
     }
 
     /// Remove `id` if queued (no-op otherwise).
@@ -559,6 +659,7 @@ enum ResKind {
 /// One running task copy in the slot arena. A copy keeps its slot for
 /// its whole lifetime (all phases); the slot is recycled through a LIFO
 /// free list when the copy finishes, is cancelled, or goes moot.
+#[derive(Clone)]
 struct Running {
     stage: u32,
     task_idx: u32,
@@ -603,6 +704,7 @@ const SLOT_NONE: u32 = u32::MAX;
 /// Per-stage runtime state: flat arenas + offset tables, so submission
 /// allocates a constant number of vectors however many tasks the stage
 /// carries.
+#[derive(Clone)]
 struct StageRt {
     job: JobId,
     seq: usize,
@@ -623,6 +725,16 @@ struct StageRt {
     /// How many pending tasks still carry a locality preference (drives
     /// hold-expiry bookkeeping).
     pending_pref: usize,
+    /// Admission buckets: pending tasks by preferred node (ascending
+    /// task index; one entry per preference, so multi-replica tasks sit
+    /// in several buckets). Entries go stale when their task launches
+    /// and are pruned lazily from the front — a free core probes its own
+    /// bucket's front instead of scanning the whole pending queue.
+    node_buckets: Vec<VecDeque<u32>>,
+    /// Pending tasks with no locality preference, ascending.
+    nopref_queue: VecDeque<u32>,
+    /// Task is still in `pending` (the buckets' lazy-deletion test).
+    in_pending: Vec<bool>,
     /// Task finished (winning copy completed).
     done: Vec<bool>,
     /// Task has a speculative backup copy (launched at most once).
@@ -726,6 +838,65 @@ pub struct EventSim<'a> {
     finished_scratch: Vec<u32>,
 }
 
+/// A full, owned snapshot of an [`EventSim`]'s mutable state, taken at a
+/// conf-sensitivity barrier by the incremental re-pricing pipeline
+/// (`engine::fork`): clock, task-event heap, stage-completion heap,
+/// locality-hold deque, slot arena with its PS flow remainders and
+/// cached rates, per-stage arenas, FAIR pools, round-robin cursor, and
+/// the [`SimStats`] counters as of the snapshot.
+///
+/// Restoring via [`EventSim::resume`] reproduces the core bit for bit:
+/// every RNG draw happens at *submission* (the stage arenas carry the
+/// already-jittered phases, straggler factors, and clone re-jitters), so
+/// there is no live RNG state to capture — the snapshot is pure value
+/// state. The checkpoint pins the node count it was taken on; resuming
+/// against a different cluster shape is a hard error.
+#[derive(Clone)]
+pub struct SimCheckpoint {
+    nodes: usize,
+    policy: SimPolicy,
+    discovery: Discovery,
+    now: f64,
+    free_cores: Vec<i64>,
+    free_core_total: i64,
+    flows: Vec<Vec<u32>>,
+    res_dirty: Vec<bool>,
+    dirty: Vec<u32>,
+    slots: Vec<Running>,
+    free_slots: Vec<u32>,
+    live: usize,
+    task_heap: TimeHeap,
+    completions: TimeHeap,
+    holds: VecDeque<(f64, u32)>,
+    spec_list: Vec<u32>,
+    stages: Vec<StageRt>,
+    pending_list: Vec<u32>,
+    jobs_running: Vec<usize>,
+    pools: Vec<PoolSpec>,
+    rr: usize,
+    admit_dirty: bool,
+    stats: SimStats,
+}
+
+impl SimCheckpoint {
+    /// Simulated clock at the snapshot.
+    pub fn at(&self) -> f64 {
+        self.now
+    }
+
+    /// Events already processed at the snapshot — the work a resumed
+    /// run inherits instead of repeating.
+    pub fn events(&self) -> u64 {
+        self.stats.events
+    }
+
+    /// Handles of stages submitted but not yet completed at the
+    /// snapshot (completion still queued).
+    pub fn open_stages(&self) -> usize {
+        self.stages.len() - self.stats.completions as usize
+    }
+}
+
 const EPS: f64 = 1e-9;
 
 impl<'a> EventSim<'a> {
@@ -809,6 +980,91 @@ impl<'a> EventSim<'a> {
         self.stats
     }
 
+    /// Snapshot the complete mutable state of the core (see
+    /// [`SimCheckpoint`]). Cheap relative to re-pricing: a handful of
+    /// `Vec` clones proportional to live state, no recomputation.
+    pub fn checkpoint(&self) -> SimCheckpoint {
+        SimCheckpoint {
+            nodes: self.free_cores.len(),
+            policy: self.policy,
+            discovery: self.discovery,
+            now: self.now,
+            free_cores: self.free_cores.clone(),
+            free_core_total: self.free_core_total,
+            flows: self.flows.clone(),
+            res_dirty: self.res_dirty.clone(),
+            dirty: self.dirty.clone(),
+            slots: self.slots.clone(),
+            free_slots: self.free_slots.clone(),
+            live: self.live,
+            task_heap: self.task_heap.clone(),
+            completions: self.completions.clone(),
+            holds: self.holds.clone(),
+            spec_list: self.spec_list.clone(),
+            stages: self.stages.clone(),
+            pending_list: self.pending_list.clone(),
+            jobs_running: self.jobs_running.clone(),
+            pools: self.pools.clone(),
+            rr: self.rr,
+            admit_dirty: self.admit_dirty,
+            stats: self.stats,
+        }
+    }
+
+    /// Rebuild a core from a [`SimCheckpoint`], inheriting the snapshot's
+    /// timeline prefix instead of re-processing it. The scheduler is
+    /// supplied fresh (it is stateless policy, not value state) and must
+    /// match the mode the checkpoint ran under; `cluster` must be the
+    /// cluster the checkpoint was taken on — both are enforced upstream
+    /// by the fork store's key and checked here where cheap.
+    ///
+    /// The restored core's [`SimStats`] continue from the snapshot, so
+    /// `events` still counts the whole timeline and downstream equality
+    /// oracles hold; `replayed_events` records the inherited prefix and
+    /// `forked_trials` ticks once — [`SimStats::logical`] projects both
+    /// away for bit-identity comparisons against full runs.
+    pub fn resume(
+        cluster: &'a ClusterSpec,
+        scheduler: Box<dyn Scheduler>,
+        cp: &SimCheckpoint,
+    ) -> EventSim<'a> {
+        assert_eq!(
+            cluster.nodes as usize,
+            cp.nodes,
+            "SimCheckpoint belongs to a different cluster shape"
+        );
+        let mut stats = cp.stats;
+        stats.replayed_events = cp.stats.events;
+        stats.forked_trials = cp.stats.forked_trials + 1;
+        EventSim {
+            cluster,
+            scheduler,
+            policy: cp.policy,
+            discovery: cp.discovery,
+            now: cp.now,
+            free_cores: cp.free_cores.clone(),
+            free_core_total: cp.free_core_total,
+            flows: cp.flows.clone(),
+            res_dirty: cp.res_dirty.clone(),
+            dirty: cp.dirty.clone(),
+            slots: cp.slots.clone(),
+            free_slots: cp.free_slots.clone(),
+            live: cp.live,
+            task_heap: cp.task_heap.clone(),
+            completions: cp.completions.clone(),
+            holds: cp.holds.clone(),
+            spec_list: cp.spec_list.clone(),
+            stages: cp.stages.clone(),
+            pending_list: cp.pending_list.clone(),
+            jobs_running: cp.jobs_running.clone(),
+            pools: cp.pools.clone(),
+            rr: cp.rr,
+            admit_dirty: cp.admit_dirty,
+            stats,
+            finished_scratch: Vec::new(),
+        }
+    }
+
     /// Assign `job` to a FAIR pool (weight / minShare). May be called
     /// before or after the job's first submission; jobs default to
     /// weight 1 / minShare 0.
@@ -869,8 +1125,14 @@ impl<'a> EventSim<'a> {
             // A real assert (not debug-only): a short preference table
             // would otherwise surface as an out-of-bounds slice deep in
             // the admission scan, far from the misuse site.
-            assert_eq!(spec.preferred.len(), n, "StageSpec: one preferred node per task");
-            (spec.preferred.to_vec(), (0..=n).map(|i| i as u32).collect())
+            let w = spec.pref_width;
+            assert!(w > 0, "StageSpec: non-empty preferences need pref_width >= 1");
+            assert_eq!(
+                spec.preferred.len(),
+                n * w,
+                "StageSpec: pref_width preferred nodes per task"
+            );
+            (spec.preferred.to_vec(), (0..=n).map(|i| (i * w) as u32).collect())
         };
         self.submit_arena(job, phases, phase_off, preferred, pref_off, n, opts)
     }
@@ -911,6 +1173,19 @@ impl<'a> EventSim<'a> {
         }
         let pending_pref =
             (0..n).filter(|&t| pref_off[t + 1] > pref_off[t]).count();
+        let nodes = self.free_cores.len();
+        let mut node_buckets = vec![VecDeque::new(); nodes];
+        let mut nopref_queue = VecDeque::new();
+        for t in 0..n {
+            let prefs = &preferred[pref_off[t] as usize..pref_off[t + 1] as usize];
+            if prefs.is_empty() {
+                nopref_queue.push_back(t as u32);
+            } else {
+                for &p in prefs {
+                    node_buckets[p as usize % nodes].push_back(t as u32);
+                }
+            }
+        }
 
         // One wave overhead per `total_cores` tasks, charged between the
         // last task finish and the completion event (the engine's
@@ -936,6 +1211,9 @@ impl<'a> EventSim<'a> {
             pref_off,
             pending: (0..n as u32).collect(),
             pending_pref,
+            node_buckets,
+            nopref_queue,
+            in_pending: vec![true; n],
             done: vec![false; n],
             cloned: vec![false; n],
             unfinished: n,
@@ -1230,14 +1508,12 @@ impl<'a> EventSim<'a> {
         finished.clear();
         match self.discovery {
             Discovery::Indexed => {
-                while let Some((t, slot)) = self.task_heap.peek() {
-                    if t > cutoff {
-                        break;
-                    }
-                    self.task_heap.pop();
-                    self.stats.heap_pops += 1;
-                    finished.push(slot);
-                }
+                // Minimum-timestamp ties (and same-epsilon stragglers)
+                // come out in one batched fix-up pass, not per-event
+                // pop/sift cycles; the sort restores the canonical
+                // ascending-slot processing order.
+                let popped = self.task_heap.pop_due_into(cutoff, &mut finished);
+                self.stats.heap_pops += popped as u64;
                 finished.sort_unstable();
             }
             Discovery::Scan => {
@@ -1501,20 +1777,90 @@ impl<'a> EventSim<'a> {
     /// guarantees one exists). Tasks still holding for busy local nodes
     /// are skipped: that is delay scheduling. Returns
     /// `(queue position, task index, Some(local node) | None for ANY)`.
-    fn find_admissible(&self, st: &StageRt) -> Option<(usize, usize, Option<NodeId>)> {
+    ///
+    /// Discovery is bucketed: each free node probes its *own* bucket's
+    /// front (lazily pruned) instead of the whole pending queue, so a
+    /// held stage costs O(free nodes) per offer rather than O(pending).
+    /// The pending queue is ascending by task index (tasks never
+    /// re-enter), so the earliest admissible task is the minimum over
+    /// bucket fronts — identical, pick for pick, to the linear scan,
+    /// which [`Discovery::Scan`] re-runs and asserts against.
+    fn find_admissible(&mut self, h: usize) -> Option<(usize, usize, Option<NodeId>)> {
         let nodes = self.free_cores.len();
-        let expired = self.policy.locality_wait <= 0.0
-            || self.now + EPS >= st.submitted_at + self.policy.locality_wait;
-        for (pos, &ti) in st.pending.iter().enumerate() {
-            let prefs = st.task_prefs(ti as usize);
-            if let Some(&n) = prefs.iter().find(|&&n| self.free_cores[n as usize % nodes] > 0) {
-                return Some((pos, ti as usize, Some((n as usize % nodes) as NodeId)));
+        let expired = {
+            let st = &self.stages[h];
+            self.policy.locality_wait <= 0.0
+                || self.now + EPS >= st.submitted_at + self.policy.locality_wait
+        };
+        // Lowest-indexed pending task with a free preferred node.
+        let mut local: Option<u32> = None;
+        for node in 0..nodes {
+            if self.free_cores[node] <= 0 {
+                continue;
             }
-            if prefs.is_empty() || expired {
-                return Some((pos, ti as usize, None));
+            let st = &mut self.stages[h];
+            while let Some(&ti) = st.node_buckets[node].front() {
+                self.stats.admit_probes += 1;
+                if st.in_pending[ti as usize] {
+                    break;
+                }
+                st.node_buckets[node].pop_front();
+            }
+            if let Some(&ti) = st.node_buckets[node].front() {
+                if local.map_or(true, |best| ti < best) {
+                    local = Some(ti);
+                }
             }
         }
-        None
+        // Lowest-indexed task allowed an ANY launch: any pending task
+        // once the hold expired, otherwise only preference-free ones.
+        let any: Option<u32> = if expired {
+            self.stages[h].pending.front().copied()
+        } else {
+            let st = &mut self.stages[h];
+            while let Some(&ti) = st.nopref_queue.front() {
+                self.stats.admit_probes += 1;
+                if st.in_pending[ti as usize] {
+                    break;
+                }
+                st.nopref_queue.pop_front();
+            }
+            st.nopref_queue.front().copied()
+        };
+        // An ANY candidate ahead of the local one cannot itself have a
+        // free preferred node (it would have been a bucket front below
+        // `local`), so it launches ANY exactly as the linear scan does.
+        let pick: Option<(u32, Option<NodeId>)> = match (local, any) {
+            (Some(l), Some(a)) if a < l => Some((a, None)),
+            (Some(l), _) => {
+                let st = &self.stages[h];
+                let n = st
+                    .task_prefs(l as usize)
+                    .iter()
+                    .copied()
+                    .find(|&n| self.free_cores[n as usize % nodes] > 0)
+                    .expect("bucketed local candidate has a free preferred node");
+                Some((l, Some((n as usize % nodes) as NodeId)))
+            }
+            (None, Some(a)) => Some((a, None)),
+            (None, None) => None,
+        };
+        let out = pick.map(|(ti, node)| {
+            let pos = self
+                .stages[h]
+                .pending
+                .binary_search(&ti)
+                .expect("picked task is pending (pending is ascending)");
+            (pos, ti as usize, node)
+        });
+        if self.discovery == Discovery::Scan {
+            let linear = find_admissible_linear(&self.stages[h], &self.free_cores, expired);
+            assert_eq!(
+                out, linear,
+                "bucketed admission diverged from the linear reference on stage {h}"
+            );
+        }
+        out
     }
 
     /// Fill free cores from pending stages, in scheduler order, honoring
@@ -1540,8 +1886,8 @@ impl<'a> EventSim<'a> {
                     self.pending_list.remove(i); // keeps ascending handle order
                     continue;
                 }
-                let s = &self.stages[h];
-                if let Some(pick) = self.find_admissible(s) {
+                if let Some(pick) = self.find_admissible(h) {
+                    let s = &self.stages[h];
                     let pool = self.pools.get(s.job).copied().unwrap_or_default();
                     candidates.push(StageView {
                         handle: h,
@@ -1571,6 +1917,7 @@ impl<'a> EventSim<'a> {
                 let st = &mut self.stages[h];
                 let removed = st.pending.remove(pos).expect("pick position is valid");
                 debug_assert_eq!(removed as usize, ti);
+                st.in_pending[ti] = false;
                 if st.pref_off[ti + 1] > st.pref_off[ti] {
                     st.pending_pref -= 1;
                 }
@@ -1791,6 +2138,28 @@ impl<'a> EventSim<'a> {
         }
         None
     }
+}
+
+/// Reference admission scan (the pre-bucket algorithm): walk the whole
+/// pending queue in order and apply the locality rules per task. The
+/// bucketed [`EventSim::find_admissible`] must agree pick for pick;
+/// [`Discovery::Scan`] asserts it on every offer.
+fn find_admissible_linear(
+    st: &StageRt,
+    free_cores: &[i64],
+    expired: bool,
+) -> Option<(usize, usize, Option<NodeId>)> {
+    let nodes = free_cores.len();
+    for (pos, &ti) in st.pending.iter().enumerate() {
+        let prefs = st.task_prefs(ti as usize);
+        if let Some(&n) = prefs.iter().find(|&&n| free_cores[n as usize % nodes] > 0) {
+            return Some((pos, ti as usize, Some((n as usize % nodes) as NodeId)));
+        }
+        if prefs.is_empty() || expired {
+            return Some((pos, ti as usize, None));
+        }
+    }
+    None
 }
 
 /// Scale the CPU phases of one task's slice of the phase arena by
@@ -2521,7 +2890,12 @@ mod tests {
             let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
             sim.submit_shaped(
                 0,
-                &StageSpec { template: &template, preferred: &prefs, tasks: prefs.len() },
+                &StageSpec {
+                    template: &template,
+                    preferred: &prefs,
+                    pref_width: 1,
+                    tasks: prefs.len(),
+                },
                 &opts,
             );
             sim.drain()
@@ -2537,11 +2911,232 @@ mod tests {
             let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
             sim.submit_shaped(
                 0,
-                &StageSpec { template: &[Phase::Cpu { secs: 0.3 }], preferred: &[], tasks: 9 },
+                &StageSpec {
+                    template: &[Phase::Cpu { secs: 0.3 }],
+                    preferred: &[],
+                    pref_width: 1,
+                    tasks: 9,
+                },
                 &opts,
             );
             sim.drain()
         };
         assert_streams_identical(&a, &b);
+    }
+
+    #[test]
+    fn shaped_replica_lists_match_on_any_of_taskspecs() {
+        // The replicated-block fast path: a width-2 preference table
+        // must reproduce per-task `on_any_of` specs bit for bit, with
+        // delay scheduling in play so preference *order* matters.
+        let c = ClusterSpec::mini();
+        let policy = SimPolicy { locality_wait: 0.25, speculation: None };
+        let template =
+            [Phase::Cpu { secs: 0.12 }, Phase::DiskRead { bytes: 2e6 }, Phase::Cpu { secs: 0.05 }];
+        let w = 2usize;
+        let tasks = 18usize;
+        let prefs: Vec<NodeId> =
+            (0..tasks * w).map(|k| ((k * 3 + k / w) % 4) as NodeId).collect();
+        let opts = SimOpts { jitter: 0.06, seed: 0xCE, straggler: None };
+        let via_tasks = {
+            let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+            let specs: Vec<TaskSpec> = (0..tasks)
+                .map(|t| TaskSpec::new(template.to_vec()).on_any_of(&prefs[t * w..(t + 1) * w]))
+                .collect();
+            sim.submit(0, &specs, &opts);
+            sim.drain()
+        };
+        let via_shape = {
+            let mut sim = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+            sim.submit_shaped(
+                0,
+                &StageSpec { template: &template, preferred: &prefs, pref_width: w, tasks },
+                &opts,
+            );
+            sim.drain()
+        };
+        assert_streams_identical(&via_tasks, &via_shape);
+        // The Scan core re-checks every admission pick against the
+        // linear reference; run the shaped variant through it too.
+        let via_scan = {
+            let mut sim = EventSim::with_discovery(
+                &c,
+                Box::new(FifoScheduler),
+                policy,
+                Discovery::Scan,
+            );
+            sim.submit_shaped(
+                0,
+                &StageSpec { template: &template, preferred: &prefs, pref_width: w, tasks },
+                &opts,
+            );
+            sim.drain()
+        };
+        assert_streams_identical(&via_shape, &via_scan);
+    }
+
+    #[test]
+    fn time_heap_batch_pop_takes_the_whole_tie_group() {
+        let mut h = TimeHeap::new();
+        for id in [9u32, 4, 6, 1, 12] {
+            h.set(id, 2.0);
+        }
+        h.set(3, 2.5);
+        h.set(8, 5.0);
+        let mut out = Vec::new();
+        assert_eq!(h.pop_due_into(2.0, &mut out), 5);
+        out.sort_unstable();
+        assert_eq!(out, vec![1, 4, 6, 9, 12], "the whole tie group pops in one pass");
+        assert_eq!(h.peek(), Some((2.5, 3)), "survivors keep heap order");
+        assert_eq!(h.len(), 2);
+        // Popped ids are re-insertable (position table fully cleared).
+        assert!(h.set(4, 1.0));
+        assert_eq!(h.pop(), Some((1.0, 4)));
+        // Nothing due → no-op.
+        let mut none = Vec::new();
+        assert_eq!(h.pop_due_into(0.5, &mut none), 0);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn time_heap_batch_pop_matches_sequential_pops() {
+        // Randomized: dense keys force large tie groups; the batch pop
+        // must return exactly the sequential pops' set and leave the
+        // heap draining in the identical total order.
+        let mut rng = Prng::new(0x7E57_AB);
+        for case in 0..300 {
+            let mut batched = TimeHeap::new();
+            let mut reference = TimeHeap::new();
+            let n = 1 + (case % 48) as u32;
+            for id in 0..n {
+                let key = rng.below(12) as f64 * 0.5;
+                batched.set(id, key);
+                reference.set(id, key);
+            }
+            let cutoff = rng.below(12) as f64 * 0.5;
+            let mut batch = Vec::new();
+            batched.pop_due_into(cutoff, &mut batch);
+            batch.sort_unstable();
+            let mut seq = Vec::new();
+            while let Some((k, id)) = reference.peek() {
+                if k > cutoff {
+                    break;
+                }
+                reference.pop();
+                seq.push(id);
+            }
+            seq.sort_unstable();
+            assert_eq!(batch, seq, "case {case}: due sets diverged");
+            let rest_a: Vec<(u64, u32)> =
+                std::iter::from_fn(|| batched.pop().map(|(k, i)| (k.to_bits(), i))).collect();
+            let rest_b: Vec<(u64, u32)> =
+                std::iter::from_fn(|| reference.pop().map(|(k, i)| (k.to_bits(), i))).collect();
+            assert_eq!(rest_a, rest_b, "case {case}: survivors diverged");
+        }
+    }
+
+    #[test]
+    fn bucketed_admission_probes_buckets_not_the_pending_queue() {
+        // Node 0's cores are pinned busy; a 1000-task stage holds for
+        // node 0 under a long locality wait while a third job churns
+        // the remaining cores. Every admission offer used to scan all
+        // held tasks (O(pending)); the bucketed path probes only the
+        // free nodes' — empty — buckets, so the total probe count stays
+        // below even ONE linear scan of the held queue.
+        let mut c = quiet();
+        c.nodes = 4;
+        c.cores_per_node = 2;
+        let held_tasks = 1000usize;
+        let mut sim = EventSim::with_policy(
+            &c,
+            Box::new(FifoScheduler),
+            SimPolicy { locality_wait: 1e6, speculation: None },
+        );
+        sim.submit(
+            0,
+            &[
+                TaskSpec::new(vec![Phase::Cpu { secs: 1000.0 }]).on(0),
+                TaskSpec::new(vec![Phase::Cpu { secs: 1000.0 }]).on(0),
+            ],
+            &opts0(),
+        );
+        let held: Vec<TaskSpec> =
+            (0..held_tasks).map(|_| TaskSpec::new(vec![Phase::Cpu { secs: 1.0 }]).on(0)).collect();
+        sim.submit(1, &held, &opts0());
+        sim.submit(2, &cpu_tasks(60, 0.5), &opts0());
+        // Run until the churn job completes; the held stage was offered
+        // (and skipped) at every one of those admission passes.
+        loop {
+            let done = sim.advance().expect("churn job completes");
+            if done.job == 2 {
+                break;
+            }
+        }
+        let st = sim.stats();
+        assert!(st.admit_probes > 0, "bucket probes are counted");
+        assert!(
+            st.admit_probes < held_tasks as u64,
+            "{} probes for the whole churn — a single linear offer of the held stage \
+             would already cost {held_tasks}",
+            st.admit_probes
+        );
+    }
+
+    #[test]
+    fn checkpoint_resume_reproduces_the_stream_bitwise() {
+        // Snapshot mid-run — holds pending, speculation armed, flows in
+        // flight — then finish twice: once on the original core, once on
+        // a resumed clone (including a post-checkpoint submission). The
+        // two tails must match bit for bit and the resumed stats must
+        // agree under the logical projection while exposing the saved
+        // work through `replayed_events`/`forked_trials`.
+        let c = ClusterSpec::mini();
+        let policy = SimPolicy {
+            locality_wait: 0.2,
+            speculation: Some(SpecPolicy { quantile: 0.5, multiplier: 1.4 }),
+        };
+        let opts = |j: u64| SimOpts {
+            jitter: 0.05,
+            seed: 21 + j,
+            straggler: Some(super::super::Straggler { prob: 0.25, factor: 6.0 }),
+        };
+        let mixed = |n: usize| -> Vec<TaskSpec> {
+            (0..n)
+                .map(|k| {
+                    TaskSpec::new(vec![
+                        Phase::Cpu { secs: 0.1 + (k % 5) as f64 * 0.04 },
+                        Phase::DiskWrite { bytes: 2e6 * (1 + k % 3) as f64 },
+                        Phase::NetIn { bytes: 1e6 },
+                    ])
+                    .on((k % 4) as NodeId)
+                })
+                .collect()
+        };
+        let mut full = EventSim::with_policy(&c, Box::new(FifoScheduler), policy);
+        full.set_pool(1, PoolSpec { weight: 2.0, min_share: 1 });
+        full.submit(0, &mixed(14), &opts(0));
+        full.submit(1, &mixed(10), &opts(1));
+        let first = full.advance().expect("two stages in flight");
+        let cp = full.checkpoint();
+        assert!(cp.events() > 0);
+        assert!(cp.at() > 0.0);
+        assert_eq!(cp.open_stages(), 1);
+
+        let finish = |sim: &mut EventSim<'_>| {
+            sim.submit(0, &mixed(6), &opts(2));
+            sim.drain()
+        };
+        let full_tail = finish(&mut full);
+        let mut resumed = EventSim::resume(&c, Box::new(FifoScheduler), &cp);
+        let resumed_tail = finish(&mut resumed);
+        assert_streams_identical(&full_tail, &resumed_tail);
+        let (fs, rs) = (full.stats(), resumed.stats());
+        assert_eq!(fs.logical(), rs.logical(), "whole-timeline counters must agree");
+        assert_eq!(fs.forked_trials, 0);
+        assert_eq!(fs.replayed_events, 0);
+        assert_eq!(rs.forked_trials, 1);
+        assert_eq!(rs.replayed_events, cp.events());
+        assert!(rs.processed_events() < fs.events, "the resumed run skipped the prefix");
+        let _ = first;
     }
 }

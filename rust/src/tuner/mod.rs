@@ -38,7 +38,13 @@ pub mod parallel;
 
 pub use parallel::TrialExecutor;
 
+use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
+use crate::engine::{
+    run_planned, run_planned_from, run_planned_recording, ForkPoint, JobPlan, JobResult,
+};
+use crate::sim::SimOpts;
+use std::sync::Arc;
 
 /// Maps a candidate configuration to its effective runtime in seconds
 /// (`f64::INFINITY` for crashed runs).
@@ -49,6 +55,117 @@ pub trait Runner {
 impl<F: FnMut(&SparkConf) -> f64> Runner for F {
     fn run(&mut self, conf: &SparkConf) -> f64 {
         self(conf)
+    }
+}
+
+/// Recorded fork points a [`ForkingRunner`] keeps around. Small on
+/// purpose: a tuning walk's incumbent advances monotonically, so only
+/// the last few recorded timelines can still match a future candidate.
+const MAX_FORKS: usize = 4;
+
+/// A [`Runner`] over one prepared plan that prices trials
+/// **incrementally**: the first trial of a conf family records the
+/// event timeline ([`run_planned_recording`]); later trials that differ
+/// only in shuffle/cache-class fields resume it at the first
+/// conf-divergent event ([`run_planned_from`]) instead of pricing from
+/// `t = 0`. Results are bit-identical to full pricing either way — this
+/// runner only changes how much event-core work each trial costs, which
+/// its counters expose ([`total_events`](ForkingRunner::total_events)
+/// is what the walk actually processed).
+///
+/// Set [`full_reprice`](ForkingRunner::full_reprice) to bypass the fork
+/// store entirely — the oracle mode the golden tests and the CI
+/// perf-smoke gate compare against.
+pub struct ForkingRunner<'c> {
+    plan: Arc<JobPlan>,
+    cluster: &'c ClusterSpec,
+    opts: SimOpts,
+    /// Force full pricing for every trial (oracle mode).
+    pub full_reprice: bool,
+    /// Recorded timelines, oldest first; probed newest-first (the
+    /// incumbent drifts toward recent confs), FIFO-evicted at
+    /// [`MAX_FORKS`].
+    forks: Vec<ForkPoint>,
+    forked_trials: u64,
+    replayed_events: u64,
+    full_trials: u64,
+    total_events: u64,
+}
+
+impl<'c> ForkingRunner<'c> {
+    pub fn new(plan: Arc<JobPlan>, cluster: &'c ClusterSpec, opts: SimOpts) -> ForkingRunner<'c> {
+        ForkingRunner {
+            plan,
+            cluster,
+            opts,
+            full_reprice: false,
+            forks: Vec::new(),
+            forked_trials: 0,
+            replayed_events: 0,
+            full_trials: 0,
+            total_events: 0,
+        }
+    }
+
+    /// Price one trial, returning the full [`JobResult`] (the [`Runner`]
+    /// impl reduces it to the effective duration).
+    pub fn run_result(&mut self, conf: &SparkConf) -> JobResult {
+        if self.full_reprice {
+            let res = run_planned(&self.plan, conf, self.cluster, &self.opts);
+            self.full_trials += 1;
+            self.total_events += res.sim.events;
+            return res;
+        }
+        for fork in self.forks.iter().rev() {
+            if let Some(res) = run_planned_from(fork, &self.plan, conf, self.cluster, &self.opts) {
+                self.forked_trials += 1;
+                self.replayed_events += res.sim.replayed_events;
+                self.total_events += res.sim.processed_events();
+                return res;
+            }
+        }
+        let (res, fork) = run_planned_recording(&self.plan, conf, self.cluster, &self.opts);
+        self.full_trials += 1;
+        self.total_events += res.sim.events;
+        if fork.checkpoints() > 0 {
+            if self.forks.len() == MAX_FORKS {
+                self.forks.remove(0);
+            }
+            self.forks.push(fork);
+        }
+        res
+    }
+
+    /// Trials that resumed a recorded timeline instead of pricing in full.
+    pub fn forked_trials(&self) -> u64 {
+        self.forked_trials
+    }
+
+    /// Events inherited from checkpoints across all forked trials.
+    pub fn replayed_events(&self) -> u64 {
+        self.replayed_events
+    }
+
+    /// Trials priced from `t = 0` (recordings and fork-store misses).
+    pub fn full_trials(&self) -> u64 {
+        self.full_trials
+    }
+
+    /// Events the event core actually processed across all trials —
+    /// the walk's true simulation cost (inherited prefixes excluded).
+    pub fn total_events(&self) -> u64 {
+        self.total_events
+    }
+
+    /// Fork points currently held (bounded by [`MAX_FORKS`]).
+    pub fn forks_recorded(&self) -> usize {
+        self.forks.len()
+    }
+}
+
+impl Runner for ForkingRunner<'_> {
+    fn run(&mut self, conf: &SparkConf) -> f64 {
+        self.run_result(conf).effective_duration()
     }
 }
 
@@ -569,6 +686,47 @@ mod tests {
         let out = tune(&mut runner, &TuneOpts::default());
         assert_eq!(out.best_conf, SparkConf::default());
         assert_eq!(out.total_improvement(), 0.0);
+    }
+
+    #[test]
+    fn forking_runner_walk_is_bit_identical_and_cheaper() {
+        // The full decision-list walk over a cache-prefixed iterative
+        // workload, priced incrementally vs the full-reprice oracle:
+        // identical outcome, strictly fewer events processed.
+        let job = crate::workloads::kmeans(400_000, 32, 8, 3, 16);
+        let plan = crate::engine::prepare(&job).unwrap();
+        let cluster = ClusterSpec::mini();
+        let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+
+        let mut inc = ForkingRunner::new(Arc::clone(&plan), &cluster, opts.clone());
+        let a = tune(&mut inc, &TuneOpts::default());
+        let mut oracle = ForkingRunner::new(Arc::clone(&plan), &cluster, opts);
+        oracle.full_reprice = true;
+        let b = tune(&mut oracle, &TuneOpts::default());
+
+        assert_eq!(a.best_conf, b.best_conf);
+        assert_eq!(a.baseline.to_bits(), b.baseline.to_bits());
+        assert_eq!(a.best.to_bits(), b.best.to_bits());
+        assert_eq!(a.trials.len(), b.trials.len());
+        for (x, y) in a.trials.iter().zip(&b.trials) {
+            assert_eq!(x.duration.to_bits(), y.duration.to_bits(), "{}", x.step);
+            assert_eq!(x.kept, y.kept, "{}", x.step);
+        }
+        assert!(inc.forked_trials() > 0, "shuffle-class steps must fork");
+        assert!(inc.replayed_events() > 0);
+        assert!(
+            inc.total_events() < oracle.total_events(),
+            "incremental walk must process strictly fewer events: {} vs {}",
+            inc.total_events(),
+            oracle.total_events()
+        );
+        assert_eq!(oracle.forked_trials(), 0, "oracle never forks");
+        assert_eq!(
+            inc.forked_trials() + inc.full_trials(),
+            oracle.full_trials(),
+            "same trial count either way"
+        );
+        assert!(inc.forks_recorded() <= 4);
     }
 
     // ---- warm start (cross-workload evidence transfer) ----

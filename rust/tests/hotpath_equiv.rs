@@ -10,10 +10,21 @@
 //! submission, and degenerate stages. Likewise, plan-once pricing
 //! (`prepare` + `run_planned`) must be bit-identical to re-planning per
 //! trial, for solo runs, multi-tenant batches, and crashing confs.
+//!
+//! The incremental re-pricing suite extends the same contract to
+//! timeline forking: `run_planned_recording` / `run_planned_from` must
+//! reproduce full pricing bit for bit (modulo the `replayed_events` /
+//! `forked_trials` bookkeeping, which `SimStats::logical` projects
+//! away) across FIFO/FAIR × locality × speculation × straggler, on the
+//! self-verifying Scan core as well as the Indexed one, under fork-store
+//! eviction, and for any service worker count.
 
 use sparktune::cluster::{ClusterSpec, NodeId};
 use sparktune::conf::SparkConf;
-use sparktune::engine::{prepare, run, run_all, run_all_planned, run_planned, Job, JobPlan};
+use sparktune::engine::{
+    prepare, run, run_all, run_all_planned, run_planned, run_planned_from, run_planned_recording,
+    Job, JobPlan,
+};
 use sparktune::sim::{
     scheduler_for, Discovery, EventSim, PoolSpec, SchedulerMode, SimOpts, SimPolicy, SimStats,
     SpecPolicy, StageCompletion, Straggler, TaskSpec,
@@ -315,6 +326,233 @@ fn planned_multi_tenant_batch_matches_replanned() {
         for (x, y) in a.results.iter().zip(&b.results) {
             assert!(job_results_identical(x, y), "{mode}: {} diverged", x.job);
         }
+    }
+}
+
+// ---------- incremental re-pricing (timeline forking) ----------
+
+/// Iterative cache-prefixed workload: generate + MEMORY_ONLY cache,
+/// then cache-read → map → shuffle iterations. The prefix is
+/// insensitive to every shuffle-class parameter, so forks have a real
+/// shared timeline to inherit.
+fn iterative_job() -> Job {
+    workloads::kmeans(400_000, 32, 8, 3, 16)
+}
+
+#[test]
+fn incremental_repricing_matches_full_bitwise_across_the_matrix() {
+    // FIFO/FAIR × delay-scheduling/speculation × straggler model, each
+    // crossed with the decision list's shuffle-class deltas: the forked
+    // run must equal the full-reprice oracle bit for bit, and the
+    // recording run must equal a plain run bit for bit (including every
+    // core work counter — recording must not perturb the timeline).
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&iterative_job()).unwrap();
+    let bases = [
+        ("fifo", SparkConf::default()),
+        ("fair", SparkConf::default().with("spark.scheduler.mode", "FAIR")),
+        (
+            "speculation+locality",
+            SparkConf::default()
+                .with("spark.speculation", "true")
+                .with("spark.locality.wait", "1s"),
+        ),
+    ];
+    let opt_sets = [
+        ("plain", SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }),
+        (
+            "straggler",
+            SimOpts {
+                jitter: 0.05,
+                seed: 0xBEEF,
+                straggler: Some(Straggler { prob: 0.1, factor: 6.0 }),
+            },
+        ),
+    ];
+    let deltas: [(&str, &[(&str, &str)]); 3] = [
+        ("kryo", &[("spark.serializer", "kryo")]),
+        ("no shuffle compression", &[("spark.shuffle.compress", "false")]),
+        (
+            "tungsten+lzf",
+            &[
+                ("spark.shuffle.manager", "tungsten-sort"),
+                ("spark.io.compression.codec", "lzf"),
+            ],
+        ),
+    ];
+    for (bname, base) in &bases {
+        for (oname, opts) in &opt_sets {
+            let (rec, fork) = run_planned_recording(&plan, base, &cluster, opts);
+            let plain = run_planned(&plan, base, &cluster, opts);
+            assert!(job_results_identical(&rec, &plain), "{bname}/{oname}: recording diverged");
+            assert_eq!(rec.sim, plain.sim, "{bname}/{oname}: recording perturbed the counters");
+            for (dname, delta) in &deltas {
+                let mut conf = base.clone();
+                for (k, v) in *delta {
+                    conf = conf.with(k, v);
+                }
+                let full = run_planned(&plan, &conf, &cluster, opts);
+                let forked = run_planned_from(&fork, &plan, &conf, &cluster, opts)
+                    .unwrap_or_else(|| panic!("{bname}/{oname}/{dname}: fork declined"));
+                assert!(
+                    job_results_identical(&full, &forked),
+                    "{bname}/{oname}/{dname}: forked result diverged from full pricing"
+                );
+                assert_eq!(
+                    forked.sim.logical(),
+                    full.sim.logical(),
+                    "{bname}/{oname}/{dname}: logical core counters diverged"
+                );
+                assert_eq!(forked.sim.forked_trials, 1, "{bname}/{oname}/{dname}");
+                assert!(forked.sim.replayed_events > 0, "{bname}/{oname}/{dname}");
+                assert!(
+                    forked.sim.processed_events() < full.sim.events,
+                    "{bname}/{oname}/{dname}: fork processed {} of {} events",
+                    forked.sim.processed_events(),
+                    full.sim.events
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_resume_reproduces_on_the_scan_core() {
+    // The Scan-core oracle: resume a checkpoint on the self-verifying
+    // reference core (which asserts the indexed bookkeeping invariants
+    // at every event), under speculation + stragglers + FAIR pools, and
+    // require the exact stream an uninterrupted run produces.
+    let cluster = ClusterSpec::mini();
+    let policy = SimPolicy {
+        locality_wait: 0.2,
+        speculation: Some(SpecPolicy { quantile: 0.6, multiplier: 1.4 }),
+    };
+    let submit_all = |sim: &mut EventSim<'_>| {
+        sim.set_pool(1, PoolSpec { weight: 2.0, min_share: 1 });
+        for j in 0..3usize {
+            sim.submit(
+                j,
+                &mixed_tasks(14, 4, j % 2 == 0),
+                &SimOpts {
+                    jitter: 0.05,
+                    seed: 21 + j as u64,
+                    straggler: Some(Straggler { prob: 0.2, factor: 5.0 }),
+                },
+            );
+        }
+    };
+    for discovery in [Discovery::Scan, Discovery::Indexed] {
+        let mut whole = EventSim::with_discovery(
+            &cluster,
+            scheduler_for(SchedulerMode::Fair),
+            policy,
+            discovery,
+        );
+        submit_all(&mut whole);
+        let all = whole.drain();
+
+        let mut head = EventSim::with_discovery(
+            &cluster,
+            scheduler_for(SchedulerMode::Fair),
+            policy,
+            discovery,
+        );
+        submit_all(&mut head);
+        let first = head.advance().expect("work pending");
+        let cp = head.checkpoint();
+        // The resumed core inherits the checkpoint's discovery mode, so
+        // the Scan pass re-verifies every restored invariant event by
+        // event.
+        let mut tail = EventSim::resume(&cluster, scheduler_for(SchedulerMode::Fair), &cp);
+        let mut rest = vec![first];
+        rest.extend(tail.drain());
+        assert_streams_identical(&all, &rest, &format!("{discovery:?} checkpoint resume"));
+        assert_eq!(tail.stats().logical(), whole.stats().logical(), "{discovery:?}");
+        assert_eq!(tail.stats().forked_trials, 1);
+        assert_eq!(tail.stats().replayed_events, cp.events());
+    }
+}
+
+#[test]
+fn fork_store_eviction_is_bounded_and_lossless() {
+    // Six distinct fork families (locality_wait is a Global field) blow
+    // through the ForkingRunner's bounded store; every trial — recorded,
+    // forked, or priced after its family was evicted — must still equal
+    // full pricing bit for bit.
+    use sparktune::tuner::ForkingRunner;
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&iterative_job()).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let mut runner = ForkingRunner::new(Arc::clone(&plan), &cluster, opts.clone());
+    for i in 0..6u32 {
+        let conf = SparkConf::default().with("spark.locality.wait", &format!("{i}s"));
+        let a = runner.run_result(&conf);
+        let b = run_planned(&plan, &conf, &cluster, &opts);
+        assert!(job_results_identical(&a, &b), "family {i} diverged");
+        assert!(runner.forks_recorded() <= 4, "store must stay bounded");
+    }
+    assert_eq!(runner.forked_trials(), 0, "global diffs never fork");
+    // The newest family is still resident: its shuffle-class variant forks.
+    let resident = SparkConf::default()
+        .with("spark.locality.wait", "5s")
+        .with("spark.serializer", "kryo");
+    let a = runner.run_result(&resident);
+    let b = run_planned(&plan, &resident, &cluster, &opts);
+    assert!(job_results_identical(&a, &b), "resident-family fork diverged");
+    assert_eq!(a.sim.logical(), b.sim.logical());
+    assert_eq!(runner.forked_trials(), 1);
+    // An evicted family's variant re-prices in full (and re-records) —
+    // never resumes a wrong timeline.
+    let evicted = SparkConf::default()
+        .with("spark.locality.wait", "0s")
+        .with("spark.serializer", "kryo");
+    let a = runner.run_result(&evicted);
+    let b = run_planned(&plan, &evicted, &cluster, &opts);
+    assert!(job_results_identical(&a, &b), "evicted-family reprice diverged");
+    assert_eq!(a.sim, b.sim, "an evicted family must price in full, not fork");
+    assert_eq!(runner.forked_trials(), 1, "no fork for the evicted family");
+    assert!(runner.forks_recorded() <= 4);
+}
+
+#[test]
+fn service_incremental_repricing_is_worker_count_invariant() {
+    // Sessions served with incremental re-pricing on must be bitwise
+    // equal to the full-reprice oracle for every worker count — the fork
+    // store is a shared mutable structure, but any trial it serves is
+    // bit-identical to full pricing, so outcomes cannot depend on which
+    // session recorded or resumed what.
+    use sparktune::service::{outcomes_identical, ServiceOpts, SessionRequest, TuningService};
+    use sparktune::tuner::TuneOpts;
+    let reqs: Vec<SessionRequest> = (0..3)
+        .map(|i| SessionRequest {
+            name: format!("km{i}"),
+            job: iterative_job(),
+            tune: TuneOpts::default(),
+            sim: SimOpts { jitter: 0.04, seed: 0x7E57 + (i % 2) as u64, straggler: None },
+        })
+        .collect();
+    let oracle = TuningService::new(
+        ClusterSpec::mini(),
+        ServiceOpts { full_reprice: true, ..ServiceOpts::default() },
+    );
+    let reference = oracle.serve(&reqs);
+    assert_eq!(oracle.stats().forked_trials, 0, "oracle never forks");
+    for workers in [1usize, 4, 8] {
+        let svc = TuningService::new(
+            ClusterSpec::mini(),
+            ServiceOpts { workers, ..ServiceOpts::default() },
+        );
+        let out = svc.serve(&reqs);
+        for (x, y) in reference.iter().zip(&out) {
+            assert!(
+                outcomes_identical(&x.outcome, &y.outcome),
+                "workers={workers}: session {} diverged from the oracle",
+                x.name
+            );
+        }
+        let s = svc.stats();
+        assert!(s.forked_trials > 0, "workers={workers}: no trial forked");
+        assert!(s.replayed_events > 0, "workers={workers}: nothing replayed");
     }
 }
 
