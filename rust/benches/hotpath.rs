@@ -12,8 +12,10 @@ use sparktune::engine::{prepare, run, run_planned, run_planned_from, run_planned
 use sparktune::ser::{Record, SerKind};
 use sparktune::sim::{EventSim, FifoScheduler, Phase, SimOpts, StageSpec};
 use sparktune::testkit::{BenchArgs, BenchSink};
+use sparktune::tuner::{tune, ForkingRunner, TuneOpts};
 use sparktune::util::Prng;
 use sparktune::workloads::{self, Workload};
+use std::sync::Arc;
 
 fn main() {
     let args = BenchArgs::from_env();
@@ -138,6 +140,41 @@ fn main() {
             .expect("a shuffle-class delta resumes from the recorded checkpoint");
         std::hint::black_box(res);
     });
+
+    // ---- mid-stage checkpoint resume ----
+    // A deep kmeans (19 stages — 18 new-wave barriers, two more than
+    // the recorder keeps) under a locality-wait delta: the policy
+    // certificate accepts every checkpoint, so the resume point is the
+    // newest snapshot, taken *inside* a late stage at the task-finish
+    // cadence. The full row re-prices the whole timeline from t=0.
+    let deepjob = workloads::kmeans(points / 2, 32, 8, 9, parts);
+    let deepplan = prepare(&deepjob).expect("kmeans plans cleanly");
+    let patient = base.clone().with("spark.locality.wait", "6s");
+    let (_, deepfork) = run_planned_recording(&deepplan, &base, &cluster, &opts);
+    assert!(deepfork.mid_stage_checkpoints() > 0, "the cadence must snapshot mid-stage");
+    assert!(
+        deepfork.resumes_mid_stage(&deepplan, &patient),
+        "the locality delta must resume from an intra-stage snapshot"
+    );
+    sink.bench("engine/re-price deep kmeans full (locality delta)", iters, 1.0, || {
+        std::hint::black_box(run_planned(&deepplan, &patient, &cluster, &opts));
+    });
+    sink.bench("engine/re-price deep kmeans forked mid-stage (locality delta)", iters, 1.0, || {
+        let res = run_planned_from(&deepfork, &deepplan, &patient, &cluster, &opts)
+            .expect("a certified locality delta resumes from the newest mid-stage snapshot");
+        std::hint::black_box(res);
+    });
+
+    // ---- incremental re-pricing counters for the tracked artifact ----
+    // One straggler-aware tuner walk through the checkpoint-forking
+    // runner; the counters land in BENCH_hotpath.json next to the
+    // timing rows so the perf trajectory tracks work saved, not just
+    // wall time.
+    let mut runner = ForkingRunner::new(Arc::clone(&itplan), &cluster, opts.clone());
+    let _ = tune(&mut runner, &TuneOpts { straggler_aware: true, ..TuneOpts::default() });
+    sink.counter("repricing/forked_trials", runner.forked_trials() as f64);
+    sink.counter("repricing/replayed_events", runner.replayed_events() as f64);
+    sink.counter("repricing/checkpoint_bytes", runner.checkpoint_bytes() as f64);
 
     sink.write(args.json.as_deref()).expect("bench artifact write");
 }

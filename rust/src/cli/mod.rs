@@ -580,37 +580,45 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 total.live_copy_event_sum / total.flow_rolls.max(1)
             );
             // Incremental re-pricing gate: a full straggler-aware tuner
-            // walk over an iterative cache-heavy job, priced once through
-            // the checkpoint-forking runner and once through the
-            // full-reprice oracle. The walk must (a) be bit-identical,
-            // (b) actually replay checkpointed events, and (c) process
-            // strictly fewer events than pricing every trial from t=0.
+            // walk over an iterative cache-heavy job, priced three ways —
+            // the per-field checkpoint-forking runner, the PR-6-style
+            // coarse three-way classifier, and the full-reprice oracle.
+            // The walk must (a) be bit-identical across all three,
+            // (b) actually replay checkpointed events, (c) process
+            // strictly fewer events per-field than the coarse classifier
+            // (which in turn must not exceed full pricing), and (d) keep
+            // the fork store's resident bytes within its budget.
             let itjob = workloads::kmeans(2_000_000, 32, 8, 3, 64);
             let itplan = prepare(&itjob).map_err(|e| e.to_string())?;
             let walk = TuneOpts { straggler_aware: true, ..TuneOpts::default() };
             let mut inc = ForkingRunner::new(Arc::clone(&itplan), &cluster, opts.clone());
             let inc_out = tune(&mut inc, &walk);
+            let mut coarse = ForkingRunner::new(Arc::clone(&itplan), &cluster, opts.clone());
+            coarse.coarse = true;
+            let coarse_out = tune(&mut coarse, &walk);
             let mut oracle = ForkingRunner::new(itplan, &cluster, opts);
             oracle.full_reprice = true;
             let full_out = tune(&mut oracle, &walk);
-            let identical = inc_out.best_conf == full_out.best_conf
-                && inc_out.baseline.to_bits() == full_out.baseline.to_bits()
-                && inc_out.best.to_bits() == full_out.best.to_bits()
-                && inc_out.trials.len() == full_out.trials.len()
-                && inc_out.trials.iter().zip(&full_out.trials).all(|(a, b)| {
-                    a.step == b.step
-                        && a.duration.to_bits() == b.duration.to_bits()
-                        && a.kept == b.kept
-                });
-            if !identical {
-                return Err(format!(
-                    "incremental re-pricing diverged from full pricing: \
-                     best {:.6}s vs {:.6}s over {} vs {} trials",
-                    inc_out.best,
-                    full_out.best,
-                    inc_out.trials.len(),
-                    full_out.trials.len()
-                ));
+            for (out, tag) in [(&inc_out, "per-field"), (&coarse_out, "coarse")] {
+                let identical = out.best_conf == full_out.best_conf
+                    && out.baseline.to_bits() == full_out.baseline.to_bits()
+                    && out.best.to_bits() == full_out.best.to_bits()
+                    && out.trials.len() == full_out.trials.len()
+                    && out.trials.iter().zip(&full_out.trials).all(|(a, b)| {
+                        a.step == b.step
+                            && a.duration.to_bits() == b.duration.to_bits()
+                            && a.kept == b.kept
+                    });
+                if !identical {
+                    return Err(format!(
+                        "{tag} re-pricing diverged from full pricing: \
+                         best {:.6}s vs {:.6}s over {} vs {} trials",
+                        out.best,
+                        full_out.best,
+                        out.trials.len(),
+                        full_out.trials.len()
+                    ));
+                }
             }
             if inc.forked_trials() == 0 || inc.replayed_events() == 0 {
                 return Err(format!(
@@ -620,22 +628,43 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                     inc.replayed_events()
                 ));
             }
-            if inc.total_events() >= oracle.total_events() {
+            if inc.total_events() >= coarse.total_events() {
                 return Err(format!(
-                    "incremental walk processed {} events vs {} full-reprice — \
-                     checkpoint forking is not saving pricing work",
+                    "per-field walk processed {} events vs {} coarse-classifier — \
+                     per-field sensitivity is not beating the three-way mask",
                     inc.total_events(),
+                    coarse.total_events()
+                ));
+            }
+            if coarse.total_events() > oracle.total_events() {
+                return Err(format!(
+                    "coarse walk processed {} events vs {} full-reprice — \
+                     the oracle emulation is doing extra work",
+                    coarse.total_events(),
                     oracle.total_events()
                 ));
             }
+            if inc.checkpoint_bytes() == 0
+                || inc.checkpoint_bytes() > inc.fork_budget_bytes() as u64
+            {
+                return Err(format!(
+                    "fork store holds {} bytes against a {}-byte budget",
+                    inc.checkpoint_bytes(),
+                    inc.fork_budget_bytes()
+                ));
+            }
             println!(
-                "ok: {}-trial walk incremental ≡ full; {} trials forked, {} events \
-                 replayed from checkpoints; {} events processed vs {} full-reprice",
+                "ok: {}-trial walk per-field ≡ coarse ≡ full; {} trials forked, {} events \
+                 replayed from checkpoints; {} events processed vs {} coarse vs {} \
+                 full-reprice; {} fork-store bytes within the {}-byte budget",
                 inc_out.trials.len() + 1,
                 inc.forked_trials(),
                 inc.replayed_events(),
                 inc.total_events(),
-                oracle.total_events()
+                coarse.total_events(),
+                oracle.total_events(),
+                inc.checkpoint_bytes(),
+                inc.fork_budget_bytes()
             );
             Ok(())
         }

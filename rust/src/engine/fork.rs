@@ -16,72 +16,201 @@
 //!   tests — while snapshotting a [`ForkPoint`]: engine + simulator
 //!   state ([`crate::sim::SimCheckpoint`]) captured at every
 //!   *conf-sensitivity barrier* (just before a newly runnable wave of
-//!   stages is priced and submitted).
-//! * [`divergence_mask`] classifies the difference between two
-//!   [`SparkConf`]s against a plan: which stages *can* price
-//!   differently (see the field classes below), or `None` when a
-//!   timeline-shaping (Global) field differs and nothing is reusable.
+//!   stages is priced and submitted) **and** inside long stages at
+//!   every [`SNAPSHOT_EVERY_FINISHES`]-th winning task finish (via
+//!   [`crate::sim::SnapshotSink`]), so a long tail stage is
+//!   fork-divisible too.
+//! * [`classify_param`] / the exhaustive destructure in `conf_delta`
+//!   map every tunable field to a [`Sensitivity`] class: a predicate
+//!   over per-stage pricing facts (or, for the scheduling-policy
+//!   fields, over recorded timeline facts) deciding which stages *can*
+//!   price differently under a diff on that field.
 //! * [`run_planned_from`] resumes pricing from the **latest checkpoint
-//!   whose already-submitted stages are all insensitive** to the conf
-//!   diff — the first event at which the timelines can diverge — and
-//!   re-prices only the suffix under the new conf. The result is
-//!   bit-identical to a full run (the tests pin it against both the
-//!   full-reprice oracle and the `Discovery::Scan` reference core),
-//!   with `SimStats::replayed_events` / `forked_trials` recording the
-//!   work that was *not* redone.
+//!   certified insensitive** to the conf diff — the first event at
+//!   which the timelines can diverge — and re-prices only the suffix
+//!   under the new conf. The result is bit-identical to a full run
+//!   (the tests pin it against both the full-reprice oracle and the
+//!   `Discovery::Scan` reference core), with
+//!   `SimStats::replayed_events` / `forked_trials` recording the work
+//!   that was *not* redone.
+//! * [`divergence_mask`] survives as the PR-6-era **coarse** three-way
+//!   classifier (shuffle / cache / Global); [`run_planned_from_with`]
+//!   can run in coarse mode so CI can prove the per-field classifier
+//!   strictly outperforms it on the same walk.
 //!
-//! # Conf-field classes
+//! # Per-field sensitivity
 //!
-//! Every [`SparkConf`] field falls in one of three classes, decided by
-//! which pricing paths read it (the classification is pinned by an
-//! exhaustive destructure — adding a conf field without classifying it
-//! is a compile error):
+//! Every [`SparkConf`] field falls in one [`Sensitivity`] class,
+//! decided by which pricing paths read it. The classification is
+//! pinned twice: adding a conf field without classifying it is a
+//! compile error (exhaustive destructure), and adding a
+//! [`crate::conf::params::PARAMS`] entry without a [`classify_param`]
+//! arm fails the drift-guard test — a new parameter can never silently
+//! default to "reusable".
 //!
-//! * **Shuffle** — read only when pricing a stage with a shuffle-read
-//!   input or shuffle-write output (serializer and codec included: the
-//!   MEMORY_ONLY cache path stores deserialized objects and never
-//!   touches them, see [`crate::storage`]).
+//! * Read-side shuffle fields (`reducer.maxSizeInFlight`,
+//!   `shuffle.io.preferDirectBufs`) touch only stages with a
+//!   shuffle-read input — a map-only write stage prices identically.
+//! * `shuffle.file.buffer` is read in exactly one place: the map-side
+//!   buffer-flush penalty, which is multiplied by the page-cache
+//!   pressure knee. Stages whose recorded
+//!   [`PricedMeta::flush_pressure`] is zero never paid it at the base
+//!   conf — and the knee depends on out-bytes, not the buffer — so the
+//!   buffer size cannot affect their price under any value.
+//! * `shuffle.spill` / `shuffle.spill.compress` only matter to stages
+//!   that actually spilled at the base conf
+//!   ([`PricedMeta::spilled_per_task`] > 0): a working set that fit
+//!   the budget fits it under either flag.
+//! * Byte-shaping shuffle fields (serializer, codec, compress) touch
+//!   shuffle stages with nonzero payload; structural ones (manager,
+//!   consolidateFiles, shuffle.memoryFraction) touch every shuffle
+//!   stage — they shape the downstream handoff (block counts) and the
+//!   working-set/GC interplay even at zero bytes.
 //! * **Cache** — `spark.storage.memoryFraction` (and conservatively
 //!   `spark.rdd.compress`): sizes the storage pool, so it affects
 //!   cache stages *and*, through the cached-bytes share of every
 //!   executor's GC occupancy, every stage from the first cache-writer
 //!   on. Conservatively also shuffle stages (spill interplay).
-//! * **Global** — fields that shape the timeline itself (cores,
-//!   parallelism, scheduler mode, delay scheduling, speculation) or
-//!   whose reach we don't model precisely; any difference invalidates
-//!   every checkpoint. Unmodeled `extras` differences are Global too.
+//! * **Policy** — `spark.locality.wait` and `spark.speculation{,
+//!   .multiplier,.quantile}` don't touch pricing at all; they shape
+//!   the timeline through the event core's [`crate::sim::SimPolicy`].
+//!   Their task-level randomness comes from dedicated per-stage rng
+//!   streams drawn at submission, so a checkpoint is a valid fork
+//!   point whenever recorded facts certify the prefix would have been
+//!   bit-identical under both policies (see
+//!   [`SimCheckpoint::locality_fork_ok`] and the speculation
+//!   predicates) — the resume then rewrites live hold deadlines /
+//!   installs the new policy and re-prices only the suffix.
+//! * **Global** — fields that shape the timeline in ways we don't
+//!   fork (cores, memory, parallelism, scheduler mode); any
+//!   difference invalidates every checkpoint. Unmodeled `extras`
+//!   differences are Global too.
 //!
 //! Checkpoint validity needs *submitted* stages insensitive — not
 //! completed ones — because a submitted stage's tasks were priced at
 //! submission time under the base conf, whether or not they finished.
+//!
+//! # Byte accounting
+//!
+//! Checkpoints are delta-encoded structurally: per-stage task arenas
+//! (phase templates, preferred-node lists) are `Arc`-shared between
+//! the live simulation and every snapshot, so consecutive checkpoints
+//! cost only their *owned* state ([`SimCheckpoint::owned_bytes`]).
+//! [`ForkPoint::bytes`] reports the real footprint — owned bytes plus
+//! each distinct arena counted once — and the stores that retain
+//! `ForkPoint`s (`tuner::ForkingRunner`, the service's fingerprint
+//! fork store) evict against a byte budget instead of a count.
 
-use super::plan::{StageInput, StageOutput};
+use super::plan::{Stage, StageInput, StageOutput};
 use super::run::{self, JobPlan, JobResult, PricedMeta, PricingState, StageReport};
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, NodeId};
 use crate::conf::SparkConf;
 use crate::exec::MemoryModel;
 use crate::shuffle::IoProfiles;
-use crate::sim::{scheduler_for, EventSim, SimCheckpoint, SimOpts};
+use crate::sim::{scheduler_for, EventSim, SimCheckpoint, SimOpts, SnapshotSink};
 use std::sync::Arc;
 
-/// Checkpoints recorded per run. Linear chains longer than this stop
-/// recording (keep-first: on realistic conf diffs the valid prefix is
-/// short — the first shuffle or cache stage bounds it — so early
-/// barriers are the ones that get reused).
+/// Wave-barrier checkpoints recorded per run. Linear chains longer than
+/// this stop recording barriers (keep-first: on realistic conf diffs
+/// the valid prefix is short — the first shuffle or cache stage bounds
+/// it — so early barriers are the ones that get reused).
 const MAX_CHECKPOINTS: usize = 16;
 
-/// Which pricing inputs a conf difference touches.
-struct Divergence {
+/// Mid-stage snapshot cadence: one [`SimCheckpoint`] per this many
+/// winning task finishes (across the whole run, so short stages don't
+/// flood the store and long stages get split proportionally).
+pub const SNAPSHOT_EVERY_FINISHES: u64 = 32;
+
+/// Owned-bytes budget for mid-stage snapshots per recording; once a
+/// run's snapshots exceed it, only wave barriers keep recording.
+pub const SNAPSHOT_BUDGET_BYTES: usize = 8 << 20;
+
+/// Margin for the speculation crossing-free certificates; matches the
+/// event core's tie-breaking epsilon.
+const SPEC_EPS: f64 = 1e-9;
+
+/// Sensitivity class of one tunable parameter: which recorded facts
+/// decide whether a diff on the field can change a submitted stage's
+/// price or the timeline prefix. See the module docs for the rules.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sensitivity {
+    /// Read only on the reduce (shuffle-read input) side.
+    ShuffleRead,
+    /// Map-side buffer-flush penalty only: write stages with zero
+    /// recorded flush pressure never read the buffer size.
+    ShuffleWriteBuffer,
+    /// Spill accounting only: stages that spilled nothing at the base
+    /// conf price identically under either value.
+    ShuffleSpill,
+    /// Byte-shaping shuffle fields: shuffle stages with nonzero
+    /// payload/record counts.
+    ShuffleBytes,
+    /// Structural shuffle fields: every shuffle stage (handoff shape
+    /// and working-set sizing flow through even at zero bytes).
+    Shuffle,
+    /// Storage pool sizing / cached-bytes GC occupancy.
+    Cache,
+    /// Delay-scheduling wait — forkable when the recorded prefix
+    /// drained before either deadline ([`SimCheckpoint::locality_fork_ok`]).
+    PolicyLocality,
+    /// Speculation policy — forkable when recorded facts certify no
+    /// backup and no threshold crossing under either policy.
+    PolicySpeculation,
+    /// Shapes the timeline in ways we don't fork; never reusable.
+    Global,
+}
+
+/// The sensitivity class of a tunable parameter key, `None` for keys
+/// the table doesn't know. Every [`crate::conf::params::PARAMS`] entry
+/// must map to `Some` — pinned by the drift-guard test below, so a new
+/// parameter can never silently default to "reusable".
+pub fn classify_param(key: &str) -> Option<Sensitivity> {
+    Some(match key {
+        "spark.reducer.maxSizeInFlight" => Sensitivity::ShuffleRead,
+        "spark.shuffle.io.preferDirectBufs" => Sensitivity::ShuffleRead,
+        "spark.shuffle.file.buffer" => Sensitivity::ShuffleWriteBuffer,
+        "spark.shuffle.spill" => Sensitivity::ShuffleSpill,
+        "spark.shuffle.spill.compress" => Sensitivity::ShuffleSpill,
+        "spark.shuffle.compress" => Sensitivity::ShuffleBytes,
+        "spark.io.compression.codec" => Sensitivity::ShuffleBytes,
+        "spark.serializer" => Sensitivity::ShuffleBytes,
+        "spark.shuffle.manager" => Sensitivity::Shuffle,
+        "spark.shuffle.consolidateFiles" => Sensitivity::Shuffle,
+        "spark.shuffle.memoryFraction" => Sensitivity::Shuffle,
+        "spark.storage.memoryFraction" => Sensitivity::Cache,
+        "spark.rdd.compress" => Sensitivity::Cache,
+        "spark.locality.wait" => Sensitivity::PolicyLocality,
+        "spark.speculation" => Sensitivity::PolicySpeculation,
+        "spark.speculation.multiplier" => Sensitivity::PolicySpeculation,
+        "spark.speculation.quantile" => Sensitivity::PolicySpeculation,
+        "spark.executor.cores" => Sensitivity::Global,
+        "spark.executor.memory" => Sensitivity::Global,
+        "spark.executor.instances" => Sensitivity::Global,
+        "spark.default.parallelism" => Sensitivity::Global,
+        "spark.scheduler.mode" => Sensitivity::Global,
+        _ => return None,
+    })
+}
+
+/// Which sensitivity classes a conf diff actually touches — one flag
+/// per class, each the OR of its fields' inequality (floats by bit
+/// pattern). The exhaustive destructure forces a decision for every
+/// new conf field; `warnings` are diagnostics, excluded from conf
+/// equality and from divergence alike.
+#[derive(Clone, Copy, Debug, Default)]
+struct ConfDelta {
+    shuffle_read: bool,
+    write_buffer: bool,
+    spill: bool,
+    shuffle_bytes: bool,
     shuffle: bool,
     cache: bool,
+    locality: bool,
+    spec: bool,
     global: bool,
 }
 
-/// Classify every divergent field of `a` vs `b` (see the module docs
-/// for the classes). The exhaustive destructure forces a decision for
-/// every new conf field. `warnings` are diagnostics, excluded from conf
-/// equality and from divergence alike.
-fn divergence(a: &SparkConf, b: &SparkConf) -> Divergence {
+fn conf_delta(a: &SparkConf, b: &SparkConf) -> ConfDelta {
     let SparkConf {
         reducer_max_size_in_flight,
         shuffle_compress,
@@ -108,37 +237,86 @@ fn divergence(a: &SparkConf, b: &SparkConf) -> Divergence {
         extras,
         warnings: _,
     } = a;
-    let shuffle = *reducer_max_size_in_flight != b.reducer_max_size_in_flight
-        || *shuffle_compress != b.shuffle_compress
-        || *shuffle_file_buffer != b.shuffle_file_buffer
-        || *shuffle_manager != b.shuffle_manager
-        || *io_compression_codec != b.io_compression_codec
-        || *shuffle_io_prefer_direct_bufs != b.shuffle_io_prefer_direct_bufs
-        || *serializer != b.serializer
-        || shuffle_memory_fraction.to_bits() != b.shuffle_memory_fraction.to_bits()
-        || *shuffle_consolidate_files != b.shuffle_consolidate_files
-        || *shuffle_spill_compress != b.shuffle_spill_compress
-        || *shuffle_spill != b.shuffle_spill;
-    let cache = storage_memory_fraction.to_bits() != b.storage_memory_fraction.to_bits()
-        || *rdd_compress != b.rdd_compress;
-    let global = *executor_cores != b.executor_cores
-        || *executor_memory != b.executor_memory
-        || *num_executors != b.num_executors
-        || *default_parallelism != b.default_parallelism
-        || *scheduler_mode != b.scheduler_mode
-        || locality_wait_secs.to_bits() != b.locality_wait_secs.to_bits()
-        || *speculation != b.speculation
-        || speculation_multiplier.to_bits() != b.speculation_multiplier.to_bits()
-        || speculation_quantile.to_bits() != b.speculation_quantile.to_bits()
-        || *extras != b.extras;
-    Divergence { shuffle, cache, global }
+    ConfDelta {
+        shuffle_read: *reducer_max_size_in_flight != b.reducer_max_size_in_flight
+            || *shuffle_io_prefer_direct_bufs != b.shuffle_io_prefer_direct_bufs,
+        write_buffer: *shuffle_file_buffer != b.shuffle_file_buffer,
+        spill: *shuffle_spill != b.shuffle_spill
+            || *shuffle_spill_compress != b.shuffle_spill_compress,
+        shuffle_bytes: *shuffle_compress != b.shuffle_compress
+            || *io_compression_codec != b.io_compression_codec
+            || *serializer != b.serializer,
+        shuffle: *shuffle_manager != b.shuffle_manager
+            || shuffle_memory_fraction.to_bits() != b.shuffle_memory_fraction.to_bits()
+            || *shuffle_consolidate_files != b.shuffle_consolidate_files,
+        cache: storage_memory_fraction.to_bits() != b.storage_memory_fraction.to_bits()
+            || *rdd_compress != b.rdd_compress,
+        locality: locality_wait_secs.to_bits() != b.locality_wait_secs.to_bits(),
+        spec: *speculation != b.speculation
+            || speculation_multiplier.to_bits() != b.speculation_multiplier.to_bits()
+            || speculation_quantile.to_bits() != b.speculation_quantile.to_bits(),
+        global: *executor_cores != b.executor_cores
+            || *executor_memory != b.executor_memory
+            || *num_executors != b.num_executors
+            || *default_parallelism != b.default_parallelism
+            || *scheduler_mode != b.scheduler_mode
+            || *extras != b.extras,
+    }
 }
 
-/// Per-stage conf-sensitivity of the diff between `a` and `b` on
-/// `plan`: `mask[sid]` is `true` iff stage `sid` *can* price
-/// differently under the two confs. `None` means a Global field
-/// differs — the whole timeline may diverge and nothing is reusable.
-/// Equal confs yield an all-`false` mask.
+/// Can stage `s` (priced under the base conf with facts `meta`) price
+/// differently under a diff touching the classes in `d`? The union of
+/// the per-class predicates over every differing field.
+fn stage_sensitive(
+    s: &Stage,
+    meta: &PricedMeta,
+    d: &ConfDelta,
+    first_writer: Option<usize>,
+) -> bool {
+    let read = matches!(s.input, StageInput::ShuffleRead { .. });
+    let write = matches!(s.output, StageOutput::ShuffleWrite { .. });
+    let shuffle_stage = read || write;
+    let cache_stage = matches!(s.input, StageInput::CacheRead { .. }) || s.cache_write;
+    let bytes_nonzero = (read && (s.in_data.payload > 0 || s.in_data.records > 0))
+        || match &s.output {
+            StageOutput::ShuffleWrite { out, .. } => out.payload > 0 || out.records > 0,
+            StageOutput::Action => false,
+        };
+    (d.shuffle_read && read)
+        || (d.write_buffer && write && meta.flush_pressure > 0.0)
+        || (d.spill && shuffle_stage && meta.spilled_per_task > 0)
+        || (d.shuffle_bytes && shuffle_stage && bytes_nonzero)
+        || (d.shuffle && shuffle_stage)
+        || (d.cache
+            && (shuffle_stage || cache_stage || first_writer.is_some_and(|w| s.id >= w)))
+}
+
+/// The PR-6-era coarse three-way classification, kept as the oracle CI
+/// measures the per-field classifier against: every fine shuffle
+/// subclass folds into one `shuffle` flag, and the policy fields are
+/// Global (unforkable) as they were before per-field sensitivity.
+struct Divergence {
+    shuffle: bool,
+    cache: bool,
+    global: bool,
+}
+
+fn divergence(a: &SparkConf, b: &SparkConf) -> Divergence {
+    let d = conf_delta(a, b);
+    Divergence {
+        shuffle: d.shuffle_read || d.write_buffer || d.spill || d.shuffle_bytes || d.shuffle,
+        cache: d.cache,
+        global: d.global || d.locality || d.spec,
+    }
+}
+
+/// Coarse per-stage conf-sensitivity of the diff between `a` and `b`
+/// on `plan`: `mask[sid]` is `true` iff stage `sid` *can* price
+/// differently under the two confs, by the PR-6 three-way classes.
+/// `None` means a field the coarse classifier calls Global differs —
+/// including the policy fields the fine path can fork. Equal confs
+/// yield an all-`false` mask. Kept public as the comparison oracle;
+/// the live path is [`run_planned_from`]'s per-field classifier.
 pub fn divergence_mask(plan: &JobPlan, a: &SparkConf, b: &SparkConf) -> Option<Vec<bool>> {
     let d = divergence(a, b);
     if d.global {
@@ -163,11 +341,14 @@ pub fn divergence_mask(plan: &JobPlan, a: &SparkConf, b: &SparkConf) -> Option<V
     )
 }
 
-/// Engine + simulator state at one conf-sensitivity barrier: everything
-/// needed to re-enter the pump loop just before a wave of newly
-/// runnable stages is priced. Snapshotted *before* the wave submits, so
-/// the wave itself (and everything after) re-prices under the new conf;
-/// crashes in the wave reproduce too.
+/// Engine + simulator state at one resumable point of the recorded
+/// timeline: everything needed to re-enter the pump loop. Wave-barrier
+/// checkpoints are snapshotted *before* a newly runnable wave submits,
+/// so the wave itself (and everything after) re-prices under the new
+/// conf; crashes in the wave reproduce too. Mid-stage checkpoints are
+/// snapshotted between completions (`to_submit` empty) — the engine
+/// tables only move at completions, so the paired sim snapshot and
+/// engine state are mutually consistent.
 #[derive(Clone)]
 struct EngineCheckpoint {
     sim: SimCheckpoint,
@@ -176,7 +357,8 @@ struct EngineCheckpoint {
     /// conf diff (submitted, not completed: pricing happens at
     /// submission, whether or not the tasks have finished).
     submitted: Vec<usize>,
-    /// The newly runnable wave this checkpoint was taken in front of.
+    /// The newly runnable wave this checkpoint was taken in front of
+    /// (empty for mid-stage checkpoints).
     to_submit: Vec<usize>,
     /// handle → (job index, stage id, pricing metadata) prefix.
     by_handle: Vec<(usize, usize, PricedMeta)>,
@@ -184,6 +366,41 @@ struct EngineCheckpoint {
     pricing: PricingState,
     reports: Vec<Option<StageReport>>,
     finish: f64,
+    /// (min, max) winning-task duration of each *completed* stage, by
+    /// stage id — the completed half of the speculation crossing-free
+    /// certificate (open stages are certified from the sim snapshot,
+    /// whose per-stage durations are dropped at completion).
+    dur_bounds: Vec<Option<(f64, f64)>>,
+    /// Taken inside a stage (every k-th task finish) rather than at a
+    /// new-wave barrier.
+    mid_stage: bool,
+}
+
+impl EngineCheckpoint {
+    /// Bytes this checkpoint uniquely owns — everything except the
+    /// `Arc`-shared task arenas, which [`ForkPoint::bytes`] counts once
+    /// per distinct arena across the whole recording (the
+    /// delta-encoding: consecutive snapshots share them structurally).
+    fn owned_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let mut b = size_of::<EngineCheckpoint>() + self.sim.owned_bytes();
+        b += (self.submitted.len() + self.to_submit.len() + self.parents_left.len())
+            * size_of::<usize>();
+        b += self.by_handle.len() * size_of::<(usize, usize, PricedMeta)>();
+        b += self.pricing.handoffs.len() * size_of::<Option<run::ShuffleHandoff>>();
+        b += self
+            .pricing
+            .placements
+            .iter()
+            .map(|p| {
+                size_of::<Option<Vec<NodeId>>>()
+                    + p.as_ref().map_or(0, |v| v.len() * size_of::<NodeId>())
+            })
+            .sum::<usize>();
+        b += self.reports.len() * size_of::<Option<StageReport>>();
+        b += self.dur_bounds.len() * size_of::<Option<(f64, f64)>>();
+        b
+    }
 }
 
 /// The recorded timeline of one full pricing run: the conf it ran
@@ -194,13 +411,55 @@ pub struct ForkPoint {
     base_conf: SparkConf,
     opts: SimOpts,
     nodes: u32,
+    /// The cluster's per-task overhead, captured at recording time —
+    /// task *elapsed* times include it, so the speculation
+    /// crossing-free certificate needs it at probe time (when no
+    /// cluster is in scope).
+    task_overhead: f64,
     checkpoints: Vec<EngineCheckpoint>,
+    bytes: usize,
 }
 
 impl ForkPoint {
-    /// Number of recorded conf-sensitivity barriers.
+    fn new(
+        base_conf: SparkConf,
+        opts: SimOpts,
+        cluster: &ClusterSpec,
+        checkpoints: Vec<EngineCheckpoint>,
+    ) -> ForkPoint {
+        let mut bytes: usize = checkpoints.iter().map(EngineCheckpoint::owned_bytes).sum();
+        // Arenas are Arc-shared across snapshots (and with the live sim
+        // during recording): count each distinct arena once.
+        let mut arenas: Vec<(usize, usize)> =
+            checkpoints.iter().flat_map(|c| c.sim.arena_chunks()).collect();
+        arenas.sort_unstable();
+        arenas.dedup();
+        bytes += arenas.iter().map(|&(_, sz)| sz).sum::<usize>();
+        ForkPoint {
+            base_conf,
+            opts,
+            nodes: cluster.nodes,
+            task_overhead: cluster.task_overhead,
+            checkpoints,
+            bytes,
+        }
+    }
+
+    /// Number of recorded resume points (wave barriers + mid-stage).
     pub fn checkpoints(&self) -> usize {
         self.checkpoints.len()
+    }
+
+    /// Number of mid-stage (intra-stage) checkpoints among them.
+    pub fn mid_stage_checkpoints(&self) -> usize {
+        self.checkpoints.iter().filter(|c| c.mid_stage).count()
+    }
+
+    /// Real memory footprint of this recording: owned checkpoint bytes
+    /// plus each distinct `Arc`-shared task arena counted once — what a
+    /// byte-budgeted fork store charges for retaining it.
+    pub fn bytes(&self) -> usize {
+        self.bytes
     }
 
     /// The configuration the recorded timeline was priced under.
@@ -208,11 +467,77 @@ impl ForkPoint {
         &self.base_conf
     }
 
-    /// The latest checkpoint whose submitted prefix is insensitive to
-    /// the diff against `conf`.
-    fn resume_checkpoint(&self, plan: &JobPlan, conf: &SparkConf) -> Option<&EngineCheckpoint> {
-        let mask = divergence_mask(plan, &self.base_conf, conf)?;
-        self.checkpoints.iter().rev().find(|cp| cp.submitted.iter().all(|&sid| !mask[sid]))
+    /// Would the recorded policy fields fork cleanly at `cp` under
+    /// `conf`? (Trivially yes when they don't differ.)
+    fn policy_fork_ok(&self, cp: &EngineCheckpoint, d: &ConfDelta, conf: &SparkConf) -> bool {
+        if d.locality && !cp.sim.locality_fork_ok(run::policy_of(conf).locality_wait) {
+            return false;
+        }
+        if d.spec {
+            let pa = run::policy_of(&self.base_conf).speculation;
+            let pb = run::policy_of(conf).speculation;
+            let ok = match (pa, pb) {
+                // Multiplier/quantile differ with speculation off on
+                // both sides: dead fields, the prefix is untouched.
+                (None, None) => true,
+                (Some(_), None) => cp.sim.spec_prefix_clean(),
+                // Turning speculation on: stages submitted under the
+                // spec-off policy carry no clone phase arenas, so only
+                // fully-drained prefixes are equivalent — and no task
+                // may ever have crossed the *new* threshold.
+                (None, Some(pb)) => {
+                    cp.sim.all_submitted_done()
+                        && cp.sim.spec_crossing_free(pb.multiplier, self.task_overhead)
+                        && completed_crossing_free(cp, pb.multiplier)
+                }
+                // On→on: the recorded prefix must be spec-silent *and*
+                // provably silent under the new multiplier too.
+                (Some(_), Some(pb)) => {
+                    cp.sim.spec_prefix_clean()
+                        && cp.sim.spec_crossing_free(pb.multiplier, self.task_overhead)
+                        && completed_crossing_free(cp, pb.multiplier)
+                }
+            };
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// The latest checkpoint certified insensitive to the diff against
+    /// `conf` — per-field stage predicates plus the policy-fork
+    /// certificates (fine), or the PR-6 coarse mask over wave barriers
+    /// only (coarse).
+    fn resume_checkpoint_with(
+        &self,
+        plan: &JobPlan,
+        conf: &SparkConf,
+        coarse: bool,
+    ) -> Option<&EngineCheckpoint> {
+        if coarse {
+            let mask = divergence_mask(plan, &self.base_conf, conf)?;
+            return self
+                .checkpoints
+                .iter()
+                .rev()
+                .filter(|cp| !cp.mid_stage)
+                .find(|cp| cp.submitted.iter().all(|&sid| !mask[sid]));
+        }
+        let d = conf_delta(&self.base_conf, conf);
+        if d.global {
+            return None;
+        }
+        let first_writer = plan.stages.iter().find(|s| s.cache_write).map(|s| s.id);
+        // Validity is not monotone along the chain (a late-submitted
+        // sensitive stage invalidates later checkpoints only), so scan
+        // newest-first for the latest valid resume point.
+        self.checkpoints.iter().rev().find(|cp| {
+            cp.by_handle
+                .iter()
+                .all(|(_, sid, meta)| !stage_sensitive(&plan.stages[*sid], meta, &d, first_writer))
+                && self.policy_fork_ok(cp, &d, conf)
+        })
     }
 
     /// How many events of the recorded timeline a trial under `conf`
@@ -220,8 +545,39 @@ impl ForkPoint {
     /// first event at which the two timelines can diverge. `None`:
     /// nothing is reusable and the trial must price in full.
     pub fn shared_prefix_events(&self, plan: &JobPlan, conf: &SparkConf) -> Option<u64> {
-        self.resume_checkpoint(plan, conf).map(|cp| cp.sim.events())
+        self.shared_prefix_events_with(plan, conf, false)
     }
+
+    /// [`Self::shared_prefix_events`] under an explicit classifier
+    /// (`coarse = true` emulates the PR-6 three-way oracle).
+    pub fn shared_prefix_events_with(
+        &self,
+        plan: &JobPlan,
+        conf: &SparkConf,
+        coarse: bool,
+    ) -> Option<u64> {
+        self.resume_checkpoint_with(plan, conf, coarse).map(|cp| cp.sim.events())
+    }
+
+    /// Would [`run_planned_from`] resume `conf` from an intra-stage
+    /// cadence snapshot (rather than a new-wave barrier)? `false` also
+    /// when nothing is reusable at all.
+    pub fn resumes_mid_stage(&self, plan: &JobPlan, conf: &SparkConf) -> bool {
+        self.resume_checkpoint_with(plan, conf, false).is_some_and(|cp| cp.mid_stage)
+    }
+}
+
+/// The completed-stage half of the speculation crossing-free
+/// certificate: no finished stage's slowest winning task ever reached
+/// `multiplier` × its fastest — medians only sit above the minimum and
+/// elapsed times only grow toward the recorded duration, so no task of
+/// those stages could have crossed a `multiplier` threshold at any
+/// point of the prefix.
+fn completed_crossing_free(cp: &EngineCheckpoint, multiplier: f64) -> bool {
+    cp.dur_bounds
+        .iter()
+        .flatten()
+        .all(|&(min, max)| max < multiplier * min - SPEC_EPS)
 }
 
 /// `SimOpts` equality by bit pattern — forks recorded under different
@@ -238,11 +594,47 @@ fn same_opts(a: &SimOpts, b: &SimOpts) -> bool {
         }
 }
 
+/// Adopt the mid-stage sim snapshots collected since the last
+/// completion: the engine tables only move at completions, so each one
+/// pairs with the *current* engine state. Crashed runs stop recording,
+/// like wave barriers do.
+fn drain_mid_stage(
+    sink: &mut SnapshotSink,
+    jr: &run::JobRt<'_>,
+    by_handle: &[(usize, usize, PricedMeta)],
+    dur_bounds: &[Option<(f64, f64)>],
+    checkpoints: &mut Vec<EngineCheckpoint>,
+) {
+    if sink.is_empty() {
+        return;
+    }
+    let snaps = sink.take();
+    if jr.crash.is_some() {
+        return;
+    }
+    let submitted: Vec<usize> = by_handle.iter().map(|e| e.1).collect();
+    for sim in snaps {
+        checkpoints.push(EngineCheckpoint {
+            sim,
+            submitted: submitted.clone(),
+            to_submit: Vec::new(),
+            by_handle: by_handle.to_vec(),
+            parents_left: jr.parents_left.clone(),
+            pricing: jr.pricing.clone(),
+            reports: jr.reports.clone(),
+            finish: jr.finish,
+            dur_bounds: dur_bounds.to_vec(),
+            mid_stage: true,
+        });
+    }
+}
+
 /// [`run_planned`](super::run_planned) for one job, recording a
 /// [`ForkPoint`] along the way. Bit-identical to the plain run — same
 /// result, same [`crate::sim::SimStats`] — because checkpointing only
 /// *reads* state (the wave submission it momentarily defers happens in
-/// the same order immediately after).
+/// the same order immediately after, and the mid-stage snapshot sink
+/// is a pure observer).
 pub fn run_planned_recording(
     plan: &Arc<JobPlan>,
     conf: &SparkConf,
@@ -270,6 +662,9 @@ pub fn run_planned_recording(
     };
     let mut by_handle: Vec<(usize, usize, PricedMeta)> = Vec::new();
     let mut checkpoints: Vec<EngineCheckpoint> = Vec::new();
+    let mut wave_barriers = 0usize;
+    let mut dur_bounds: Vec<Option<(f64, f64)>> = vec![None; n];
+    let mut sink = SnapshotSink::new(SNAPSHOT_EVERY_FINISHES, SNAPSHOT_BUDGET_BYTES);
 
     for &sid in &plan.roots {
         if jr.crash.is_some() {
@@ -280,7 +675,8 @@ pub fn run_planned_recording(
         );
     }
 
-    while let Some(done) = sim.advance() {
+    while let Some(done) = sim.advance_observed(Some(&mut sink)) {
+        drain_mid_stage(&mut sink, &jr, &by_handle, &dur_bounds, &mut checkpoints);
         debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
         let sid = by_handle[done.handle].1;
         let meta = &by_handle[done.handle].2;
@@ -298,6 +694,9 @@ pub fn run_planned_recording(
             locality_hits: done.stats.locality_hits,
             speculated: done.stats.speculated,
         });
+        if stage_tasks > 0 {
+            dur_bounds[sid] = Some((done.stats.task_time.min(), done.stats.task_time.max()));
+        }
         jr.pricing.placements[sid] = Some(done.task_nodes);
         jr.finish = done.at;
         // Collect the newly runnable wave first (instead of submitting
@@ -312,7 +711,8 @@ pub fn run_planned_recording(
                 wave.push(ch);
             }
         }
-        if !wave.is_empty() && jr.crash.is_none() && checkpoints.len() < MAX_CHECKPOINTS {
+        if !wave.is_empty() && jr.crash.is_none() && wave_barriers < MAX_CHECKPOINTS {
+            wave_barriers += 1;
             checkpoints.push(EngineCheckpoint {
                 sim: sim.checkpoint(),
                 submitted: by_handle.iter().map(|e| e.1).collect(),
@@ -322,6 +722,8 @@ pub fn run_planned_recording(
                 pricing: jr.pricing.clone(),
                 reports: jr.reports.clone(),
                 finish: jr.finish,
+                dur_bounds: dur_bounds.clone(),
+                mid_stage: false,
             });
         }
         for ch in wave {
@@ -332,6 +734,10 @@ pub fn run_planned_recording(
             }
         }
     }
+    // Snapshots taken inside the final stages (no wave follows them)
+    // are resume points too: a policy-only delta can fork almost at
+    // the end of the timeline.
+    drain_mid_stage(&mut sink, &jr, &by_handle, &dur_bounds, &mut checkpoints);
     debug_assert_eq!(
         by_handle.len() as u64,
         sim.stats().completions,
@@ -350,21 +756,15 @@ pub fn run_planned_recording(
         stages,
         sim: sim_stats,
     };
-    let fork = ForkPoint {
-        base_conf: conf.clone(),
-        opts: opts.clone(),
-        nodes: cluster.nodes,
-        checkpoints,
-    };
+    let fork = ForkPoint::new(conf.clone(), opts.clone(), cluster, checkpoints);
     (result, fork)
 }
 
 /// Price one trial by resuming `fork`'s recorded timeline at the latest
 /// checkpoint valid for `conf`, re-pricing only the suffix. Returns
 /// `None` when nothing is reusable — a Global field differs, no
-/// checkpoint's submitted prefix is insensitive, or the fork was
-/// recorded under different sim opts / cluster — and the caller must
-/// price in full.
+/// checkpoint is certified insensitive, or the fork was recorded under
+/// different sim opts / cluster — and the caller must price in full.
 ///
 /// On `Some`, the [`JobResult`] is **bit-identical** to a full
 /// [`run_planned`](super::run_planned) under `conf` except for the
@@ -378,16 +778,38 @@ pub fn run_planned_from(
     cluster: &ClusterSpec,
     opts: &SimOpts,
 ) -> Option<JobResult> {
+    run_planned_from_with(fork, plan, conf, cluster, opts, false)
+}
+
+/// [`run_planned_from`] under an explicit classifier. `coarse = true`
+/// emulates the PR-6 three-way oracle — wave-barrier checkpoints only,
+/// coarse mask, policy diffs decline — so CI can measure the per-field
+/// path against it on identical walks.
+pub fn run_planned_from_with(
+    fork: &ForkPoint,
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    coarse: bool,
+) -> Option<JobResult> {
     if cluster.nodes != fork.nodes || !same_opts(&fork.opts, opts) {
         return None;
     }
-    let cp = fork.resume_checkpoint(plan, conf)?;
+    let cp = fork.resume_checkpoint_with(plan, conf, coarse)?;
     let mem = MemoryModel::new(conf, cluster);
     let prof = IoProfiles::from_conf(conf);
-    // Global fields match (resume_checkpoint verified it), so the
-    // scheduler and policy rebuilt from `conf` equal the recorded ones;
-    // pools are restored from the checkpoint itself.
-    let mut sim = EventSim::resume(cluster, scheduler_for(conf.scheduler_mode), &cp.sim);
+    // Global fields match (the classifier verified it), so the
+    // scheduler rebuilt from `conf` equals the recorded one; pools are
+    // restored from the checkpoint itself. The policy may legitimately
+    // differ (certified policy fork): the resume installs the new one
+    // and rewrites live hold deadlines to the new wait.
+    let mut sim = EventSim::resume_with_policy(
+        cluster,
+        scheduler_for(conf.scheduler_mode),
+        &cp.sim,
+        run::policy_of(conf),
+    );
     let mut jr = run::JobRt {
         plan: Some(plan.as_ref()),
         name: Arc::clone(&plan.name),
@@ -401,8 +823,9 @@ pub fn run_planned_from(
     };
     let mut by_handle = cp.by_handle.clone();
 
-    // Re-price the checkpoint's pending wave under the new conf, then
-    // pump to completion exactly like the recording run.
+    // Re-price the checkpoint's pending wave under the new conf (empty
+    // for mid-stage checkpoints), then pump to completion exactly like
+    // the recording run.
     for &ch in &cp.to_submit {
         if jr.crash.is_none() {
             run::submit_stage(
@@ -504,7 +927,20 @@ mod tests {
     }
 
     #[test]
-    fn global_field_diffs_invalidate_everything() {
+    fn every_tunable_param_is_classified() {
+        for p in crate::conf::params::PARAMS {
+            assert!(
+                classify_param(p.key).is_some(),
+                "{} has no sensitivity class — a new parameter must be classified \
+                 explicitly, never default to reusable",
+                p.key
+            );
+        }
+        assert_eq!(classify_param("spark.yarn.queue"), None, "unmodeled keys stay unknown");
+    }
+
+    #[test]
+    fn coarse_mask_keeps_pr6_global_semantics() {
         let plan = prepare(&mini_kmeans()).unwrap();
         let base = SparkConf::default();
         for (k, v) in [
@@ -515,7 +951,31 @@ mod tests {
             ("spark.yarn.queue", "prod"), // extras are unmodeled → Global
         ] {
             let other = base.clone().with(k, v);
-            assert!(divergence_mask(&plan, &base, &other).is_none(), "{k} must be Global");
+            assert!(
+                divergence_mask(&plan, &base, &other).is_none(),
+                "{k} must be Global to the coarse oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn truly_global_field_diffs_invalidate_everything() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let cluster = ClusterSpec::mini();
+        let base = SparkConf::default();
+        let (_, fork) = run_planned_recording(&plan, &base, &cluster, &opts());
+        for (k, v) in [
+            ("spark.scheduler.mode", "FAIR"),
+            ("spark.default.parallelism", "32"),
+            ("spark.executor.cores", "2"),
+            ("spark.yarn.queue", "prod"),
+        ] {
+            let other = base.clone().with(k, v);
+            assert_eq!(
+                fork.shared_prefix_events(&plan, &other),
+                None,
+                "{k} must invalidate every checkpoint for the fine classifier too"
+            );
         }
     }
 
@@ -549,6 +1009,12 @@ mod tests {
         assert_results_identical(&plain, &recorded, "recording");
         assert_eq!(plain.sim, recorded.sim, "recording must not perturb the core counters");
         assert!(fork.checkpoints() > 0, "multi-stage job must hit barriers");
+        assert!(
+            fork.mid_stage_checkpoints() > 0,
+            "96 task finishes at cadence {SNAPSHOT_EVERY_FINISHES} must yield intra-stage \
+             snapshots"
+        );
+        assert!(fork.bytes() > 0, "footprint accounting covers the store's eviction budget");
         assert_eq!(fork.base_conf(), &conf);
     }
 
@@ -584,6 +1050,69 @@ mod tests {
     }
 
     #[test]
+    fn locality_wait_diffs_fork_bitwise_past_the_coarse_oracle() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let cluster = ClusterSpec::mini();
+        let base = SparkConf::default();
+        let (_, fork) = run_planned_recording(&plan, &base, &cluster, &opts());
+        // Every stage drains its pending queue within a fraction of a
+        // second — far inside min(3s, 10s) — so a patient-wait trial
+        // forks from the *latest* checkpoint.
+        let patient = base.clone().with("spark.locality.wait", "10s");
+        let full = run_planned(&plan, &patient, &cluster, &opts());
+        let forked = run_planned_from(&fork, &plan, &patient, &cluster, &opts())
+            .expect("drained prefix certifies the locality fork");
+        assert_results_identical(&full, &forked, "locality fork");
+        assert_eq!(forked.sim.logical(), full.sim.logical());
+        assert!(
+            forked.sim.processed_events() < full.sim.events,
+            "locality fork must beat full pricing: {} vs {}",
+            forked.sim.processed_events(),
+            full.sim.events
+        );
+        // The coarse oracle still calls locality Global: the fine
+        // classifier is strictly stronger on the same fork.
+        assert_eq!(fork.shared_prefix_events_with(&plan, &patient, true), None);
+        assert!(fork.shared_prefix_events(&plan, &patient).is_some());
+        // Zero wait flips the admission `expired` flag wholesale — the
+        // certificate must decline, not guess.
+        let eager = base.clone().with("spark.locality.wait", "0s");
+        assert_eq!(fork.shared_prefix_events(&plan, &eager), None);
+        let forked = run_planned_from(&fork, &plan, &eager, &cluster, &opts());
+        assert!(forked.is_none(), "zero-wait trials must re-price in full");
+    }
+
+    #[test]
+    fn speculation_toggle_forks_at_drained_barriers() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let cluster = ClusterSpec::mini();
+        let base = SparkConf::default();
+        let (_, fork) = run_planned_recording(&plan, &base, &cluster, &opts());
+        // Off→on: 4% jitter keeps every stage's max/min duration ratio
+        // far under the 1.5× default multiplier, so drained barriers
+        // certify that speculation would have stayed silent.
+        let spec = base.clone().with("spark.speculation", "true");
+        let full = run_planned(&plan, &spec, &cluster, &opts());
+        let forked = run_planned_from(&fork, &plan, &spec, &cluster, &opts())
+            .expect("crossing-free drained prefix certifies the speculation fork");
+        assert_results_identical(&full, &forked, "speculation fork");
+        assert_eq!(forked.sim.logical(), full.sim.logical());
+        assert_eq!(fork.shared_prefix_events_with(&plan, &spec, true), None, "coarse declines");
+        // An aggressive multiplier below the observed spread must
+        // decline: a task *could* have crossed it mid-prefix.
+        let aggressive = spec.clone().with("spark.speculation.multiplier", "1.001");
+        assert_eq!(fork.shared_prefix_events(&plan, &aggressive), None);
+        // On→on (multiplier change) forks from a spec-silent prefix.
+        let (_, sfork) = run_planned_recording(&plan, &spec, &cluster, &opts());
+        let patient = spec.clone().with("spark.speculation.multiplier", "3.0");
+        let full = run_planned(&plan, &patient, &cluster, &opts());
+        let forked = run_planned_from(&sfork, &plan, &patient, &cluster, &opts())
+            .expect("spec-silent prefix certifies the multiplier fork");
+        assert_results_identical(&full, &forked, "multiplier fork");
+        assert_eq!(forked.sim.logical(), full.sim.logical());
+    }
+
+    #[test]
     fn unreusable_trials_decline_instead_of_guessing() {
         let plan = prepare(&mini_kmeans()).unwrap();
         let cluster = ClusterSpec::mini();
@@ -603,5 +1132,34 @@ mod tests {
         let frac = base.clone().with("spark.storage.memoryFraction", "0.7");
         assert!(run_planned_from(&fork, &plan, &frac, &cluster, &opts()).is_none());
         assert_eq!(fork.shared_prefix_events(&plan, &frac), None);
+    }
+
+    #[test]
+    fn fine_classifier_resumes_strictly_later_than_coarse() {
+        let plan = prepare(&mini_kmeans()).unwrap();
+        let cluster = ClusterSpec::mini();
+        let base = SparkConf::default();
+        let (_, fork) = run_planned_recording(&plan, &base, &cluster, &opts());
+        // A read-side-only field: coarse taints every shuffle stage
+        // (write sides included); fine taints only shuffle-read stages,
+        // and mid-stage snapshots inside the taint-free suffix push the
+        // resume point later still.
+        let inflight = base.clone().with("spark.reducer.maxSizeInFlight", "96m");
+        let coarse = fork.shared_prefix_events_with(&plan, &inflight, true);
+        let fine = fork.shared_prefix_events(&plan, &inflight);
+        let (Some(c), Some(f)) = (coarse, fine) else {
+            panic!("both classifiers must find a shared prefix: {coarse:?} vs {fine:?}");
+        };
+        assert!(f >= c, "fine resume point can never be earlier than coarse");
+        let full = run_planned(&plan, &inflight, &cluster, &opts());
+        let forked = run_planned_from(&fork, &plan, &inflight, &cluster, &opts()).unwrap();
+        assert_results_identical(&full, &forked, "read-side fork");
+        let coarse_run =
+            run_planned_from_with(&fork, &plan, &inflight, &cluster, &opts(), true).unwrap();
+        assert_results_identical(&full, &coarse_run, "coarse fork");
+        assert!(
+            forked.sim.processed_events() <= coarse_run.sim.processed_events(),
+            "fine must never process more events than coarse"
+        );
     }
 }

@@ -21,7 +21,10 @@ pub mod fork;
 pub mod plan;
 pub mod run;
 
-pub use fork::{divergence_mask, run_planned_from, run_planned_recording, ForkPoint};
+pub use fork::{
+    classify_param, divergence_mask, run_planned_from, run_planned_from_with,
+    run_planned_recording, ForkPoint, Sensitivity,
+};
 pub use plan::{plan, Locality, Stage, StageInput, StageOutput};
 pub use run::{
     prepare, run, run_all, run_all_planned, run_planned, JobPlan, JobResult, MultiJobResult,

@@ -497,12 +497,21 @@ pub(super) struct ShuffleHandoff {
     entropy: f64,
 }
 
-/// Pricing metadata the completion handler needs to finish a report.
+/// Pricing metadata the completion handler needs to finish a report —
+/// and the per-stage facts the incremental re-pricer's sensitivity
+/// predicates ([`super::fork`]) read: whether this stage actually
+/// spilled, and whether its map-side writes actually paid buffer-flush
+/// penalties, *under the conf it was priced with*.
 #[derive(Clone, Debug)]
 pub(super) struct PricedMeta {
     pub(super) gc: f64,
     pub(super) spilled_per_task: u64,
     pub(super) cache_hit_fraction: Option<f64>,
+    /// Page-cache flush-penalty scale of this stage's map-side writes
+    /// (`shuffle::cache_pressure_knee`); 0.0 for non-shuffle-write
+    /// stages and for write sets the kernel absorbs entirely — exactly
+    /// when `spark.shuffle.file.buffer` cannot affect the price.
+    pub(super) flush_pressure: f64,
 }
 
 /// Price `sid` and submit its tasks to the event core; on OOM, mark the
@@ -599,6 +608,7 @@ fn price_stage(
     let mut net_in = 0.0f64;
     let mut fixed = 0.0f64;
     let mut spilled = 0u64;
+    let mut flush_pressure = 0.0f64;
     let mut live_bytes = UNMANAGED_LIVE
         + state.cache_plan.as_ref().map(|p| p.stored_bytes / cluster.nodes as u64).unwrap_or(0);
     let mut cache_hit_fraction = None;
@@ -732,6 +742,7 @@ fn price_stage(
             let page_cache = cluster.ram_per_node.saturating_sub(cluster.heap_per_node) as f64;
             let raw = (concurrent * out_bytes * 2.0) / page_cache.max(1.0);
             let pressure = shuffle::cache_pressure_knee(raw);
+            flush_pressure = pressure;
             let spec = MapSideSpec { cache_pressure: pressure, ..probe };
             let io = shuffle::map_side(conf, cluster, mem, prof, &spec);
             if let Some(SpillPlan::Oom { need, share }) = io.oom {
@@ -773,7 +784,7 @@ fn price_stage(
             Phase::Cpu { secs: cpu },
             Phase::DiskWrite { bytes: disk_write },
         ],
-        meta: PricedMeta { gc, spilled_per_task: spilled, cache_hit_fraction },
+        meta: PricedMeta { gc, spilled_per_task: spilled, cache_hit_fraction, flush_pressure },
     }
 }
 

@@ -241,6 +241,7 @@ mod tests {
             heap_updates: 70,
             flow_rolls: 90,
             live_copy_event_sum: 800,
+            ..SimStats::default()
         };
         let md = sim_stats_table(&s).to_markdown();
         assert!(md.contains("| events processed | 100 |"), "{md}");

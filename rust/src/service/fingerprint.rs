@@ -128,28 +128,28 @@ pub fn fingerprint_trial(
 /// and may share a recorded event-timeline prefix — iff they agree on
 /// the job, the cluster, the simulator options, and every *Global*
 /// (timeline-shaping) conf field: cores, memory, parallelism, scheduler
-/// mode, delay scheduling, speculation, and any unmodeled extras.
-/// Shuffle- and cache-class fields are deliberately left out: those are
-/// exactly the differences a fork can absorb by re-pricing the suffix
-/// (see [`crate::engine::divergence_mask`] — whether a *particular*
-/// pair diverges early enough to help is decided there, per plan).
+/// mode, and any unmodeled extras. Shuffle- and cache-class fields are
+/// deliberately left out: those are exactly the differences a fork can
+/// absorb by re-pricing the suffix. Since the per-field classifier
+/// learned to certify locality-wait and speculation forks from
+/// checkpoint facts (see [`crate::engine::classify_param`]), those
+/// policy fields are out too — whether a *particular* pair diverges
+/// early enough (or satisfies the policy certificates) is decided per
+/// plan at probe time, not by the family key. The domain tag is bumped
+/// to `v2` so persisted `v1` keys can never alias the wider families.
 pub fn fingerprint_fork(
     job: &Job,
     conf: &SparkConf,
     cluster: &ClusterSpec,
     opts: &SimOpts,
 ) -> Fingerprint {
-    let mut h = Fp128::new("sparktune.fork.v1");
+    let mut h = Fp128::new("sparktune.fork.v2");
     write_job(&mut h, job);
     h.write_u64(conf.executor_cores as u64);
     h.write_u64(conf.executor_memory);
     h.write_u64(conf.num_executors as u64);
     h.write_u64(conf.default_parallelism as u64);
     h.write_bool(conf.scheduler_mode == crate::sim::SchedulerMode::Fair);
-    h.write_f64(conf.locality_wait_secs);
-    h.write_bool(conf.speculation);
-    h.write_f64(conf.speculation_multiplier);
-    h.write_f64(conf.speculation_quantile);
     h.write_u64(conf.extras.len() as u64);
     for (k, v) in &conf.extras {
         h.write_str(k);
@@ -355,13 +355,19 @@ mod tests {
         let (job, conf, cluster, opts) = base_key();
         let base = fingerprint_fork(&job, &conf, &cluster, &opts);
         // Shuffle/cache-class diffs stay in the same fork family (the
-        // whole point: those trials can share a recorded prefix).
+        // whole point: those trials can share a recorded prefix), and
+        // so do the policy fields the per-field classifier can certify
+        // forks for from checkpoint facts.
         for (k, v) in [
             ("spark.serializer", "kryo"),
             ("spark.shuffle.compress", "false"),
             ("spark.shuffle.manager", "hash"),
             ("spark.storage.memoryFraction", "0.7"),
             ("spark.shuffle.spill", "false"),
+            ("spark.locality.wait", "9s"),
+            ("spark.speculation", "true"),
+            ("spark.speculation.multiplier", "2.0"),
+            ("spark.speculation.quantile", "0.5"),
         ] {
             let c = conf.clone().with(k, v);
             assert_eq!(fingerprint_fork(&job, &c, &cluster, &opts), base, "{k} is not Global");
@@ -369,8 +375,6 @@ mod tests {
         // Global (timeline-shaping) diffs split the family.
         for (k, v) in [
             ("spark.scheduler.mode", "FAIR"),
-            ("spark.locality.wait", "9s"),
-            ("spark.speculation", "true"),
             ("spark.default.parallelism", "64"),
             ("spark.executor.cores", "4"),
             ("spark.yarn.queue", "prod"), // extras are unmodeled

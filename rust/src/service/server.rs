@@ -45,7 +45,9 @@ use crate::engine::{
     prepare, run, run_planned, run_planned_from, run_planned_recording, ForkPoint, Job, JobPlan,
 };
 use crate::sim::SimOpts;
-use crate::tuner::{tune, TrialExecutor, TuneOpts, TuneOutcome, WarmStart};
+use crate::tuner::{
+    tune, TrialExecutor, TuneOpts, TuneOutcome, WarmStart, DEFAULT_FORK_BUDGET_BYTES,
+};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -77,6 +79,13 @@ pub struct ServiceOpts {
     /// suite); this is the *oracle* mode those tests and the CI
     /// perf-smoke gate compare against.
     pub full_reprice: bool,
+    /// Byte budget of the incremental re-pricing fork store: recorded
+    /// event timelines stay resident while their accounted footprint
+    /// ([`ForkPoint::bytes`], checkpoint arenas deduplicated) fits, and
+    /// are evicted GreedyDual-style (least-recently-matched family
+    /// first) once it doesn't. Evicting is lossless — a family whose
+    /// recording was dropped just re-records on its next trial.
+    pub fork_budget_bytes: usize,
 }
 
 impl Default for ServiceOpts {
@@ -88,6 +97,7 @@ impl Default for ServiceOpts {
             warm_start: false,
             warm_threshold: 0.25,
             full_reprice: false,
+            fork_budget_bytes: DEFAULT_FORK_BUDGET_BYTES,
         }
     }
 }
@@ -136,6 +146,11 @@ pub struct ServiceStats {
     /// Events those forked trials inherited from their checkpoints —
     /// event-core work the service did not redo.
     pub replayed_events: u64,
+    /// Accounted bytes of the recorded timelines currently resident in
+    /// the fork store — always within [`ServiceOpts::fork_budget_bytes`].
+    pub checkpoint_bytes: u64,
+    /// Recordings the fork store has evicted to stay within budget.
+    pub fork_evictions: u64,
     pub cache: CacheStats,
 }
 
@@ -172,6 +187,92 @@ struct InFlight {
     done: Condvar,
 }
 
+/// One resident recording in the [`ForkStore`].
+struct ForkEntry {
+    fork: Arc<ForkPoint>,
+    /// GreedyDual priority: `inflation + 1` at insert and on every
+    /// match. Recreating any recording costs one full pricing run
+    /// regardless of size, so the cost term is uniform and the victim
+    /// is the least-recently-matched family.
+    priority: f64,
+    /// Monotone touch tick; breaks priority ties LRU-first.
+    touched: u64,
+}
+
+/// Byte-budgeted store of recorded event timelines, keyed by fork
+/// family ([`fingerprint_fork`]). Residency is accounted in **bytes**
+/// ([`ForkPoint::bytes`] — owned checkpoint state plus deduplicated
+/// stage arenas), not entry counts, so one giant recording can't hide
+/// behind a small family count. Eviction is GreedyDual: smallest
+/// `(priority, touched)` goes first and `inflation` rises to each
+/// victim's priority, so stale families age out rather than pin.
+/// Dropping an entry is lossless — the family re-records on its next
+/// cache-missed trial.
+struct ForkStore {
+    map: HashMap<Fingerprint, ForkEntry>,
+    bytes: usize,
+    budget: usize,
+    inflation: f64,
+    tick: u64,
+    evictions: u64,
+}
+
+impl ForkStore {
+    fn new(budget: usize) -> ForkStore {
+        ForkStore {
+            map: HashMap::new(),
+            bytes: 0,
+            budget,
+            inflation: 0.0,
+            tick: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up a family's recording, refreshing its priority on a hit.
+    fn get(&mut self, fp: Fingerprint) -> Option<Arc<ForkPoint>> {
+        self.tick += 1;
+        let (inflation, tick) = (self.inflation, self.tick);
+        let e = self.map.get_mut(&fp)?;
+        e.priority = inflation + 1.0;
+        e.touched = tick;
+        Some(Arc::clone(&e.fork))
+    }
+
+    /// Admit a recording (latest recording wins for its family),
+    /// evicting the lowest-priority families until it fits. A recording
+    /// bigger than the whole budget is not retained.
+    fn insert(&mut self, fp: Fingerprint, fork: Arc<ForkPoint>) {
+        if fork.bytes() > self.budget {
+            return;
+        }
+        self.tick += 1;
+        if let Some(old) = self.map.remove(&fp) {
+            self.bytes -= old.fork.bytes();
+        }
+        while self.bytes + fork.bytes() > self.budget {
+            let (&vfp, _) = self
+                .map
+                .iter()
+                .min_by(|a, b| {
+                    (a.1.priority, a.1.touched)
+                        .partial_cmp(&(b.1.priority, b.1.touched))
+                        .expect("priorities are finite")
+                })
+                .expect("over budget implies a resident entry");
+            let victim = self.map.remove(&vfp).expect("victim is resident");
+            self.inflation = self.inflation.max(victim.priority);
+            self.bytes -= victim.fork.bytes();
+            self.evictions += 1;
+        }
+        self.bytes += fork.bytes();
+        self.map.insert(
+            fp,
+            ForkEntry { fork, priority: self.inflation + 1.0, touched: self.tick },
+        );
+    }
+}
+
 /// Shared tuning service: memo cache + single-flight table + worker
 /// pool over one fixed cluster. `&TuningService` is `Sync`; one
 /// instance serves any number of concurrent `serve` batches.
@@ -187,9 +288,12 @@ pub struct TuningService {
     /// Per-plan checkpoint store for incremental re-pricing: recorded
     /// event timelines keyed by *fork family* ([`fingerprint_fork`] —
     /// job + Global conf fields + cluster + sim opts), so the trials of
-    /// one tuner walk, which differ only in shuffle/cache-class fields,
-    /// land on one entry and share its prefix.
-    forks: ShardedCache<Arc<ForkPoint>>,
+    /// one tuner walk — which differ only in shuffle/cache-class or
+    /// certified policy fields — land on one entry and share its
+    /// prefix. One mutex, like the in-flight table: it is touched only
+    /// on cache-missed planned trials, microseconds against the
+    /// simulation that follows.
+    forks: Mutex<ForkStore>,
     full_reprice: bool,
     inflight: Mutex<HashMap<Fingerprint, Arc<InFlight>>>,
     /// Evidence from completed sessions, keyed by workload profile.
@@ -228,7 +332,7 @@ impl TuningService {
         TuningService {
             cluster,
             cache: ShardedCache::new(opts.shards, opts.capacity),
-            forks: ShardedCache::new(opts.shards, opts.capacity),
+            forks: Mutex::new(ForkStore::new(opts.fork_budget_bytes)),
             full_reprice: opts.full_reprice,
             inflight: Mutex::new(HashMap::new()),
             knn: Mutex::new(KnnIndex::new()),
@@ -407,7 +511,8 @@ impl TuningService {
             return run_planned(plan, conf, &self.cluster, sim).effective_duration();
         }
         let fk = fingerprint_fork(job, conf, &self.cluster, sim);
-        if let Some(fork) = self.forks.get(fk) {
+        let stored = self.forks.lock().expect("fork store poisoned").get(fk);
+        if let Some(fork) = stored {
             if let Some(res) = run_planned_from(&fork, plan, conf, &self.cluster, sim) {
                 self.forked.fetch_add(1, Ordering::Relaxed);
                 self.replayed.fetch_add(res.sim.replayed_events, Ordering::Relaxed);
@@ -419,7 +524,7 @@ impl TuningService {
             // Latest recording wins: a family whose stored fork declined
             // this conf re-records under it, so the store adapts to
             // whatever corner of the conf space the walk is exploring.
-            self.forks.insert(fk, Arc::new(fork));
+            self.forks.lock().expect("fork store poisoned").insert(fk, Arc::new(fork));
         }
         res.effective_duration()
     }
@@ -526,6 +631,10 @@ impl TuningService {
     pub fn stats(&self) -> ServiceStats {
         let trials_simulated = self.simulated.load(Ordering::Relaxed);
         let coalesced = self.coalesced.load(Ordering::Relaxed);
+        let (checkpoint_bytes, fork_evictions) = {
+            let fs = self.forks.lock().expect("fork store poisoned");
+            (fs.bytes as u64, fs.evictions)
+        };
         ServiceStats {
             sessions: self.sessions.load(Ordering::Relaxed),
             trials_requested: self.requested.load(Ordering::Relaxed),
@@ -535,6 +644,8 @@ impl TuningService {
             warm_missed: self.warm_missed.load(Ordering::Relaxed),
             forked_trials: self.forked.load(Ordering::Relaxed),
             replayed_events: self.replayed.load(Ordering::Relaxed),
+            checkpoint_bytes,
+            fork_evictions,
             cache: self.cache.stats(),
         }
     }
@@ -608,6 +719,34 @@ mod tests {
         assert!(si.forked_trials > 0, "shuffle-class trials must resume the recorded prefix");
         assert!(si.replayed_events > 0, "resumed trials must inherit events");
         assert_eq!((so.forked_trials, so.replayed_events), (0, 0), "the oracle never forks");
+        assert!(si.checkpoint_bytes > 0, "recordings must be resident");
+        assert!(si.checkpoint_bytes <= DEFAULT_FORK_BUDGET_BYTES as u64);
+        assert_eq!(so.checkpoint_bytes, 0, "the oracle records nothing");
+    }
+
+    #[test]
+    fn fork_store_byte_budget_is_lossless() {
+        // Starving the fork store of bytes disables the speedup, never
+        // the answer: a 1-byte budget retains no recordings, forks no
+        // trials, and still serves a bit-identical outcome.
+        let req = SessionRequest {
+            name: "km".into(),
+            job: crate::workloads::kmeans(400_000, 32, 8, 3, 16),
+            tune: TuneOpts::default(),
+            sim: SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None },
+        };
+        let roomy = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let tiny = TuningService::new(
+            ClusterSpec::mini(),
+            ServiceOpts { fork_budget_bytes: 1, ..ServiceOpts::default() },
+        );
+        let a = roomy.serve(std::slice::from_ref(&req)).remove(0);
+        let b = tiny.serve(std::slice::from_ref(&req)).remove(0);
+        assert!(outcomes_identical(&a.outcome, &b.outcome), "budget must not change outcomes");
+        let (sr, st) = (roomy.stats(), tiny.stats());
+        assert!(sr.forked_trials > 0);
+        assert_eq!(st.checkpoint_bytes, 0, "nothing fits a 1-byte budget");
+        assert_eq!(st.forked_trials, 0, "no recording, no forks");
     }
 
     #[test]

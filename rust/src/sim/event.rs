@@ -96,6 +96,7 @@ use crate::util::Prng;
 use std::cmp::Ordering;
 use std::collections::VecDeque;
 use std::fmt;
+use std::sync::Arc;
 
 /// Identifies one submitting job within an [`EventSim`] (the engine uses
 /// the job's index in the submission batch).
@@ -239,6 +240,17 @@ pub struct SimStats {
     /// Runs that resumed from a [`SimCheckpoint`] (0 or 1 per core;
     /// aggregates across trials via [`absorb`](SimStats::absorb)).
     pub forked_trials: u64,
+    /// Winning task finishes (one per task; losing speculative copies
+    /// are not counted). A *logical* timeline counter — identical
+    /// between a resumed run and a full run — that also paces mid-stage
+    /// snapshotting ([`SnapshotSink`]).
+    pub task_finishes: u64,
+    /// Events whose clock time came from a speculation-threshold
+    /// crossing (strictly earlier than every queued task/completion/hold
+    /// deadline). Zero means speculation never perturbed the timeline —
+    /// the fact the incremental re-pricer's policy-fork validity checks
+    /// rely on.
+    pub spec_events: u64,
 }
 
 impl SimStats {
@@ -289,6 +301,8 @@ impl SimStats {
             admit_probes,
             replayed_events,
             forked_trials,
+            task_finishes,
+            spec_events,
         } = *other;
         self.events += events;
         self.completions += completions;
@@ -302,6 +316,8 @@ impl SimStats {
         self.admit_probes += admit_probes;
         self.replayed_events += replayed_events;
         self.forked_trials += forked_trials;
+        self.task_finishes += task_finishes;
+        self.spec_events += spec_events;
     }
 }
 
@@ -644,6 +660,12 @@ impl TimeHeap {
         self.pos[self.items[a].1 as usize] = a as u32;
         self.pos[self.items[b].1 as usize] = b as u32;
     }
+
+    /// Heap footprint of the queue's buffers.
+    fn bytes(&self) -> usize {
+        self.items.len() * std::mem::size_of::<(f64, u32)>()
+            + self.pos.len() * std::mem::size_of::<u32>()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -701,15 +723,16 @@ struct Running {
 /// "No slot" marker for [`Running::sibling`].
 const SLOT_NONE: u32 = u32::MAX;
 
-/// Per-stage runtime state: flat arenas + offset tables, so submission
-/// allocates a constant number of vectors however many tasks the stage
-/// carries.
+/// The immutable-after-submission arenas of one stage: phase templates
+/// (with all jitter/straggler/clone draws already applied) and the
+/// preferred-node table. Split out of [`StageRt`] behind an `Arc` so
+/// checkpoints delta-encode against the live core — cloning a
+/// [`SimCheckpoint`]'s stages shares these arenas structurally (a
+/// pointer bump, not a memcpy), which is where the bulk of a stage's
+/// footprint lives. [`SimCheckpoint::owned_bytes`] counts them once per
+/// distinct arena, not once per snapshot.
 #[derive(Clone)]
-struct StageRt {
-    job: JobId,
-    seq: usize,
-    /// Task count.
-    tasks: usize,
+struct StageArena {
     /// Jittered (and possibly straggler-scaled) phases, all tasks
     /// back-to-back; task `t` owns `phases[phase_off[t]..phase_off[t+1]]`.
     phases: Vec<Phase>,
@@ -721,6 +744,32 @@ struct StageRt {
     /// Preferred nodes, all tasks back-to-back (empty slice = ANY).
     preferred: Vec<NodeId>,
     pref_off: Vec<u32>,
+}
+
+impl StageArena {
+    /// Heap footprint of the arena buffers.
+    fn bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.phases.len() * size_of::<Phase>()
+            + self.clone_phases.len() * size_of::<Phase>()
+            + self.phase_off.len() * size_of::<u32>()
+            + self.preferred.len() * size_of::<NodeId>()
+            + self.pref_off.len() * size_of::<u32>()
+    }
+}
+
+/// Per-stage runtime state: flat arenas + offset tables, so submission
+/// allocates a constant number of vectors however many tasks the stage
+/// carries.
+#[derive(Clone)]
+struct StageRt {
+    job: JobId,
+    seq: usize,
+    /// Task count.
+    tasks: usize,
+    /// Immutable phase/preference arenas, shared with every checkpoint
+    /// of this core (see [`StageArena`]).
+    arena: Arc<StageArena>,
     pending: VecDeque<u32>,
     /// How many pending tasks still carry a locality preference (drives
     /// hold-expiry bookkeeping).
@@ -742,6 +791,12 @@ struct StageRt {
     /// Tasks not yet finished.
     unfinished: usize,
     submitted_at: f64,
+    /// Clock time of the admission that emptied `pending` (`INFINITY`
+    /// while tasks are still pending; `submitted_at` for empty stages).
+    /// Bounds every admission-time locality decision this stage ever
+    /// made — the fact behind the re-pricer's locality-wait fork
+    /// validity check ([`SimCheckpoint::locality_fork_ok`]).
+    drained_at: f64,
     task_durations: Vec<f64>,
     /// `task_durations` kept sorted incrementally — the speculation
     /// median without per-event re-sorts. Maintained only under an
@@ -775,15 +830,23 @@ struct StageRt {
 
 impl StageRt {
     fn task_phases(&self, t: usize) -> &[Phase] {
-        &self.phases[self.phase_off[t] as usize..self.phase_off[t + 1] as usize]
+        let a = &self.arena;
+        &a.phases[a.phase_off[t] as usize..a.phase_off[t + 1] as usize]
     }
 
     fn clone_task_phases(&self, t: usize) -> &[Phase] {
-        &self.clone_phases[self.phase_off[t] as usize..self.phase_off[t + 1] as usize]
+        let a = &self.arena;
+        &a.clone_phases[a.phase_off[t] as usize..a.phase_off[t + 1] as usize]
     }
 
     fn task_prefs(&self, t: usize) -> &[NodeId] {
-        &self.preferred[self.pref_off[t] as usize..self.pref_off[t + 1] as usize]
+        let a = &self.arena;
+        &a.preferred[a.pref_off[t] as usize..a.pref_off[t + 1] as usize]
+    }
+
+    /// The task carries at least one locality preference.
+    fn task_has_pref(&self, t: usize) -> bool {
+        self.arena.pref_off[t + 1] > self.arena.pref_off[t]
     }
 }
 
@@ -894,6 +957,206 @@ impl SimCheckpoint {
     /// snapshot (completion still queued).
     pub fn open_stages(&self) -> usize {
         self.stages.len() - self.stats.completions as usize
+    }
+
+    /// The policy the snapshot was taken under.
+    pub(crate) fn sim_policy(&self) -> SimPolicy {
+        self.policy
+    }
+
+    /// Approximate heap footprint of the state this snapshot *owns* —
+    /// everything except the `Arc`-shared stage arenas ([`StageArena`]),
+    /// which are structurally shared (delta-encoded) across every
+    /// checkpoint of one recording and accounted separately via
+    /// [`arena_chunks`](Self::arena_chunks). Drives the fork stores'
+    /// byte budgets.
+    pub fn owned_bytes(&self) -> usize {
+        use std::mem::size_of;
+        let mut b = size_of::<SimCheckpoint>();
+        b += self.free_cores.len() * size_of::<i64>();
+        b += self
+            .flows
+            .iter()
+            .map(|f| size_of::<Vec<u32>>() + f.len() * size_of::<u32>())
+            .sum::<usize>();
+        b += self.res_dirty.len();
+        b += self.dirty.len() * size_of::<u32>();
+        b += self.slots.len() * size_of::<Running>();
+        b += self.free_slots.len() * size_of::<u32>();
+        b += self.task_heap.bytes();
+        b += self.completions.bytes();
+        b += self.holds.len() * size_of::<(f64, u32)>();
+        b += self.spec_list.len() * size_of::<u32>();
+        b += self.pending_list.len() * size_of::<u32>();
+        b += self.jobs_running.len() * size_of::<usize>();
+        b += self.pools.len() * size_of::<PoolSpec>();
+        for st in &self.stages {
+            b += size_of::<StageRt>();
+            b += st.pending.len() * size_of::<u32>();
+            b += st
+                .node_buckets
+                .iter()
+                .map(|q| size_of::<VecDeque<u32>>() + q.len() * size_of::<u32>())
+                .sum::<usize>();
+            b += st.nopref_queue.len() * size_of::<u32>();
+            b += st.in_pending.len() + st.done.len() + st.cloned.len();
+            b += (st.task_durations.len() + st.durations_sorted.len()) * size_of::<f64>();
+            b += st.orig_queue.len() * size_of::<(u32, u32)>();
+            b += st.task_nodes.len() * size_of::<NodeId>();
+        }
+        b
+    }
+
+    /// `(pointer, bytes)` of each stage's shared phase/preference arena.
+    /// Fork stores deduplicate by pointer when accounting a recording's
+    /// total footprint: each distinct arena is charged once, however
+    /// many checkpoints share it.
+    pub fn arena_chunks(&self) -> impl Iterator<Item = (usize, usize)> + '_ {
+        self.stages.iter().map(|st| (Arc::as_ptr(&st.arena) as usize, st.arena.bytes()))
+    }
+
+    // ---- policy-fork validity facts ----
+    //
+    // The incremental re-pricer (engine::fork) may resume this snapshot
+    // under a *different* locality-wait / speculation policy, provided
+    // the recorded prefix would have been bit-identical under both.
+    // These predicates certify that from recorded facts alone; each is
+    // conservative — `false` only costs a fallback to an earlier
+    // checkpoint or a full re-price, never correctness.
+
+    /// No speculation ever perturbed the prefix: no event's clock came
+    /// from a threshold crossing and no backup copy was launched. (An
+    /// unrealized crossing *is* an event — `next_spec_event` surfaces
+    /// the crossing time even when no foreign core is free — so this
+    /// also rules out silent candidate state.)
+    pub(crate) fn spec_prefix_clean(&self) -> bool {
+        self.stats.spec_events == 0 && self.stages.iter().all(|st| st.speculated == 0)
+    }
+
+    /// Every submitted stage has all tasks finished (its completion may
+    /// still be queued). Required when turning speculation *on* at a
+    /// fork: stages submitted under a spec-off policy carry no clone
+    /// phase arenas, so only fully-drained prefixes are equivalent.
+    pub(crate) fn all_submitted_done(&self) -> bool {
+        self.stages.iter().all(|st| st.unfinished == 0)
+    }
+
+    /// No task of any *open* stage could have crossed a speculation
+    /// threshold of `multiplier` × median at any point in the prefix:
+    /// for each stage with recorded durations, the largest elapsed time
+    /// any original copy ever reached (finished durations, plus running
+    /// originals as of the snapshot clock) stays strictly under
+    /// `multiplier` × the smallest finished duration — and medians only
+    /// sit above that minimum. Stages with no recorded durations pass
+    /// trivially: either no task finished (no median ⇒ no threshold
+    /// ever existed) or the stage completed and its durations were
+    /// folded into the engine's report — completed stages are the
+    /// caller's (engine::fork's) half of this check.
+    pub(crate) fn spec_crossing_free(&self, multiplier: f64, overhead: f64) -> bool {
+        let mut max_run = vec![0.0f64; self.stages.len()];
+        for r in &self.slots {
+            if r.alive && !r.is_clone {
+                let e = self.now - r.started + overhead;
+                let h = r.stage as usize;
+                if e > max_run[h] {
+                    max_run[h] = e;
+                }
+            }
+        }
+        self.stages.iter().enumerate().all(|(h, st)| {
+            let mut d_min = f64::INFINITY;
+            let mut d_max = 0.0f64;
+            for &d in &st.task_durations {
+                d_min = d_min.min(d);
+                d_max = d_max.max(d);
+            }
+            if !d_min.is_finite() {
+                return true;
+            }
+            d_max.max(max_run[h]) < multiplier * d_min - EPS
+        })
+    }
+
+    /// Swapping `locality_wait` from the recorded value to `new_wait`
+    /// cannot change the prefix: both waits are positive (zero flips
+    /// the admission `expired` flag and the hold-push set wholesale)
+    /// and every stage drained its pending queue strictly before the
+    /// *smaller* deadline — so every admission decision the prefix ever
+    /// made saw an unexpired hold under either wait, and no live hold
+    /// deadline ever fired. (Still-pending stages are bounded by the
+    /// snapshot clock; post-resume admissions run under the new policy
+    /// on both sides.)
+    pub(crate) fn locality_fork_ok(&self, new_wait: f64) -> bool {
+        let old = self.policy.locality_wait;
+        if old.to_bits() == new_wait.to_bits() {
+            return true;
+        }
+        if !(old > 0.0 && new_wait > 0.0) {
+            return false;
+        }
+        let minw = old.min(new_wait);
+        self.stages.iter().all(|st| {
+            let t_last = if st.pending.is_empty() { st.drained_at } else { self.now };
+            t_last + EPS < st.submitted_at + minw
+        })
+    }
+}
+
+/// Mid-stage snapshot collector for
+/// [`EventSim::advance_observed`]: takes a [`SimCheckpoint`] after
+/// every `every`-th winning task finish, until the accumulated *owned*
+/// bytes (arena bytes are shared, not owned — see
+/// [`SimCheckpoint::owned_bytes`]) exceed `budget_bytes`. A pure
+/// observer: attaching one never changes the simulated timeline.
+pub struct SnapshotSink {
+    every: u64,
+    budget_bytes: usize,
+    taken_bytes: usize,
+    last_finishes: u64,
+    out: Vec<SimCheckpoint>,
+}
+
+impl SnapshotSink {
+    /// Snapshot cadence `every` (in winning task finishes, clamped to
+    /// ≥ 1) under an owned-bytes budget.
+    pub fn new(every: u64, budget_bytes: usize) -> SnapshotSink {
+        SnapshotSink {
+            every: every.max(1),
+            budget_bytes,
+            taken_bytes: 0,
+            last_finishes: 0,
+            out: Vec::new(),
+        }
+    }
+
+    /// Owned bytes of the snapshots collected so far.
+    pub fn bytes(&self) -> usize {
+        self.taken_bytes
+    }
+
+    /// Snapshots collected so far.
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+
+    /// Drain the collected snapshots (in event order).
+    pub fn take(&mut self) -> Vec<SimCheckpoint> {
+        std::mem::take(&mut self.out)
+    }
+
+    fn observe(&mut self, sim: &EventSim<'_>) {
+        let finishes = sim.stats.task_finishes;
+        if finishes < self.last_finishes + self.every || self.taken_bytes >= self.budget_bytes {
+            return;
+        }
+        self.last_finishes = finishes;
+        let cp = sim.checkpoint();
+        self.taken_bytes += cp.owned_bytes();
+        self.out.push(cp);
     }
 }
 
@@ -1065,6 +1328,33 @@ impl<'a> EventSim<'a> {
         }
     }
 
+    /// [`resume`](Self::resume) under a *different* [`SimPolicy`] — the
+    /// policy-forking path of the incremental re-pricer. The caller
+    /// must have certified the swap through the checkpoint's
+    /// fork-validity predicates ([`SimCheckpoint::locality_fork_ok`]
+    /// and friends): the recorded prefix must be bit-identical under
+    /// both policies. Live locality-hold deadlines are rewritten for
+    /// the new wait (deadline = stage submission + wait; submission
+    /// times are non-decreasing along the deque, so the rewrite
+    /// preserves its sort order); stale entries are observably inert
+    /// under either deadline.
+    pub(crate) fn resume_with_policy(
+        cluster: &'a ClusterSpec,
+        scheduler: Box<dyn Scheduler>,
+        cp: &SimCheckpoint,
+        policy: SimPolicy,
+    ) -> EventSim<'a> {
+        let mut sim = EventSim::resume(cluster, scheduler, cp);
+        if policy.locality_wait.to_bits() != cp.policy.locality_wait.to_bits() {
+            for i in 0..sim.holds.len() {
+                let h = sim.holds[i].1 as usize;
+                sim.holds[i].0 = sim.stages[h].submitted_at + policy.locality_wait;
+            }
+        }
+        sim.policy = policy;
+        sim
+    }
+
     /// Assign `job` to a FAIR pool (weight / minShare). May be called
     /// before or after the job's first submission; jobs default to
     /// weight 1 / minShare 0.
@@ -1204,11 +1494,7 @@ impl<'a> EventSim<'a> {
             job,
             seq: handle,
             tasks: n,
-            phases,
-            clone_phases,
-            phase_off,
-            preferred,
-            pref_off,
+            arena: Arc::new(StageArena { phases, clone_phases, phase_off, preferred, pref_off }),
             pending: (0..n as u32).collect(),
             pending_pref,
             node_buckets,
@@ -1218,6 +1504,7 @@ impl<'a> EventSim<'a> {
             cloned: vec![false; n],
             unfinished: n,
             submitted_at: self.now,
+            drained_at: if n == 0 { self.now } else { f64::INFINITY },
             task_durations: Vec::with_capacity(n),
             durations_sorted: if spec_on { Vec::with_capacity(n) } else { Vec::new() },
             spec_th: None,
@@ -1250,6 +1537,21 @@ impl<'a> EventSim<'a> {
     /// submitted stages have completed (the sim stays usable — submit
     /// more and call again).
     pub fn advance(&mut self) -> Option<StageCompletion> {
+        self.advance_observed(None)
+    }
+
+    /// [`advance`](Self::advance) with mid-stage snapshotting: after
+    /// every `sink.every`-th winning task finish the core checkpoints
+    /// itself into `sink` (until its byte budget is spent). The sink is
+    /// a pure observer — passing `Some` vs `None` never changes the
+    /// timeline, the stats, or the completion stream; the snapshot lands
+    /// after the event's finishers are processed and before the next
+    /// event is chosen, which is exactly where [`resume`](Self::resume)
+    /// re-enters the loop.
+    pub fn advance_observed(
+        &mut self,
+        mut sink: Option<&mut SnapshotSink>,
+    ) -> Option<StageCompletion> {
         loop {
             if let Some(c) = self.pop_due_completion() {
                 return Some(c);
@@ -1259,7 +1561,7 @@ impl<'a> EventSim<'a> {
             // Roll dirty resources so every deadline is fresh, then pick
             // the earliest event across the four queues.
             self.sweep_dirty();
-            let next = self.next_event_time();
+            let (next, from_spec) = self.next_event_time();
             if next == f64::INFINITY {
                 debug_assert!(self.live == 0, "idle core with {} copies still running", self.live);
                 return None;
@@ -1267,9 +1569,15 @@ impl<'a> EventSim<'a> {
             let prev_now = self.now;
             self.now = next.max(self.now);
             self.stats.events += 1;
+            if from_spec {
+                self.stats.spec_events += 1;
+            }
             self.stats.live_copy_event_sum += self.live as u64;
             self.drain_holds(prev_now);
             self.collect_and_process();
+            if let Some(s) = sink.as_deref_mut() {
+                s.observe(self);
+            }
         }
     }
 
@@ -1320,8 +1628,12 @@ impl<'a> EventSim<'a> {
 
     /// Earliest upcoming event time across task deadlines, stage
     /// completions, hold expiries, and speculation-threshold crossings;
-    /// `INFINITY` when fully idle.
-    fn next_event_time(&mut self) -> f64 {
+    /// `INFINITY` when fully idle. The flag is `true` iff the winning
+    /// time came *strictly* from a speculation crossing — both discovery
+    /// modes compare the same four sources in the same order, so the
+    /// attribution (and the [`SimStats::spec_events`] counter it feeds)
+    /// is mode-invariant.
+    fn next_event_time(&mut self) -> (f64, bool) {
         let mut next = f64::INFINITY;
         match self.discovery {
             Discovery::Indexed => {
@@ -1360,10 +1672,12 @@ impl<'a> EventSim<'a> {
             }
         }
         let spec_next = self.next_spec_event();
+        let mut from_spec = false;
         if spec_next < next {
             next = spec_next;
+            from_spec = true;
         }
-        next
+        (next, from_spec)
     }
 
     /// Earliest future speculation-threshold crossing. Within a stage,
@@ -1669,6 +1983,7 @@ impl<'a> EventSim<'a> {
     /// if it is still running.
     fn finish_task(&mut self, h: usize, ti: usize, node: NodeId, started: f64, sibling: u32) {
         self.give_core(node);
+        self.stats.task_finishes += 1;
         let job = self.stages[h].job;
         self.jobs_running[job] -= 1;
         let dur = self.now - started + self.cluster.task_overhead;
@@ -1914,12 +2229,16 @@ impl<'a> EventSim<'a> {
                 .expect("scheduler picked a non-candidate stage");
             let (pos, ti, local) = picks[ci];
             {
+                let now = self.now;
                 let st = &mut self.stages[h];
                 let removed = st.pending.remove(pos).expect("pick position is valid");
                 debug_assert_eq!(removed as usize, ti);
                 st.in_pending[ti] = false;
-                if st.pref_off[ti + 1] > st.pref_off[ti] {
+                if st.task_has_pref(ti) {
                     st.pending_pref -= 1;
+                }
+                if st.pending.is_empty() {
+                    st.drained_at = now;
                 }
             }
             let (node, is_local) = match local {
@@ -2181,7 +2500,7 @@ fn scale_cpu_in_place(phases: &mut [Phase], factor: f64) {
 /// sorted duration list.
 fn compute_spec_threshold(st: &StageRt, spec: &SpecPolicy) -> Option<f64> {
     let n = st.tasks;
-    if n == 0 || st.clone_phases.is_empty() {
+    if n == 0 || st.arena.clone_phases.is_empty() {
         return None;
     }
     let done = n - st.unfinished;

@@ -38,8 +38,8 @@ pub mod event;
 
 pub use event::{
     scheduler_for, Discovery, EventSim, FairScheduler, FifoScheduler, JobId, PoolSpec, Scheduler,
-    SchedulerMode, SimCheckpoint, SimPolicy, SimStats, SpecPolicy, StageCompletion, StageHandle,
-    StageSpec, StageView,
+    SchedulerMode, SimCheckpoint, SimPolicy, SimStats, SnapshotSink, SpecPolicy, StageCompletion,
+    StageHandle, StageSpec, StageView,
 };
 
 use crate::cluster::{ClusterSpec, NodeId};

@@ -168,16 +168,26 @@ pub struct BenchSink {
     pub bench: String,
     pub quick: bool,
     pub results: Vec<BenchResult>,
+    /// Named scalar counters riding along with the timing rows —
+    /// work-done telemetry (events replayed, bytes resident, …) that a
+    /// perf trajectory wants tracked next to the timings.
+    pub counters: Vec<(String, f64)>,
 }
 
 impl BenchSink {
     pub fn new(bench: &str, quick: bool) -> BenchSink {
-        BenchSink { bench: bench.to_string(), quick, results: Vec::new() }
+        BenchSink { bench: bench.to_string(), quick, results: Vec::new(), counters: Vec::new() }
     }
 
     /// Run [`bench`] and record its result.
     pub fn bench(&mut self, name: &str, iters: usize, units_per_iter: f64, f: impl FnMut()) {
         self.results.push(bench(name, iters, units_per_iter, f));
+    }
+
+    /// Record (and print) a named counter for the JSON artifact.
+    pub fn counter(&mut self, name: &str, value: f64) {
+        println!("count {name:<44} {value:>14}");
+        self.counters.push((name.to_string(), value));
     }
 
     /// Hand-rolled JSON (no serde in the offline crate set): a stable
@@ -205,6 +215,13 @@ impl BenchSink {
                 json_f64(r.units_per_iter),
                 json_f64(r.units_per_iter / r.median_secs.max(1e-12)),
             );
+        }
+        out.push_str("],\"counters\":[");
+        for (i, (name, value)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "{{\"name\":{},\"value\":{}}}", json_string(name), json_f64(*value));
         }
         out.push_str("]}");
         out
@@ -329,12 +346,17 @@ mod tests {
         sink.bench("alpha \"quoted\" × row", 2, 10.0, || {
             std::hint::black_box(1 + 1);
         });
+        sink.counter("replayed_events", 1234.0);
         let j = sink.to_json();
         assert!(j.starts_with("{\"schema\":\"sparktune.bench.v1\""), "{j}");
         assert!(j.contains("\"bench\":\"unit_test\""), "{j}");
         assert!(j.contains("\"quick\":true"), "{j}");
         assert!(j.contains("\\\"quoted\\\""), "quotes must escape: {j}");
         assert!(j.contains("\"units_per_iter\":10"), "{j}");
+        assert!(
+            j.contains("\"counters\":[{\"name\":\"replayed_events\",\"value\":1234}]"),
+            "{j}"
+        );
         assert!(j.ends_with("]}"), "{j}");
         // Non-finite numbers degrade to 0, never invalid JSON.
         assert_eq!(json_f64(f64::INFINITY), "0");

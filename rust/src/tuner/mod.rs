@@ -41,7 +41,7 @@ pub use parallel::TrialExecutor;
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
 use crate::engine::{
-    run_planned, run_planned_from, run_planned_recording, ForkPoint, JobPlan, JobResult,
+    run_planned, run_planned_from_with, run_planned_recording, ForkPoint, JobPlan, JobResult,
 };
 use crate::sim::SimOpts;
 use std::sync::Arc;
@@ -58,34 +58,65 @@ impl<F: FnMut(&SparkConf) -> f64> Runner for F {
     }
 }
 
-/// Recorded fork points a [`ForkingRunner`] keeps around. Small on
-/// purpose: a tuning walk's incumbent advances monotonically, so only
-/// the last few recorded timelines can still match a future candidate.
-const MAX_FORKS: usize = 4;
+/// Default byte budget of a [`ForkingRunner`]'s fork store: recordings
+/// are retained while their accounted footprint ([`ForkPoint::bytes`])
+/// fits, and evicted GreedyDual-style once it doesn't. Generous for a
+/// tuning walk (tens of recordings of a mid-size plan) while bounding
+/// the worst case — a walk's incumbent advances monotonically, so
+/// evicted old timelines are rarely missed.
+pub const DEFAULT_FORK_BUDGET_BYTES: usize = 64 << 20;
+
+/// One resident recording plus its GreedyDual bookkeeping.
+struct StoredFork {
+    fork: ForkPoint,
+    /// GreedyDual priority: `inflation + 1` at insert and at every
+    /// successful match. Recreating any recording costs one full
+    /// pricing run regardless of size, so the cost term is uniform —
+    /// the victim is then the least-recently-matched entry, which
+    /// fixes the old probe/evict mismatch (forks were probed
+    /// newest-first but evicted FIFO, so the most-probed entry could
+    /// be the next victim).
+    priority: f64,
+    /// Monotone touch tick; breaks priority ties LRU-first.
+    touched: u64,
+}
 
 /// A [`Runner`] over one prepared plan that prices trials
 /// **incrementally**: the first trial of a conf family records the
-/// event timeline ([`run_planned_recording`]); later trials that differ
-/// only in shuffle/cache-class fields resume it at the first
-/// conf-divergent event ([`run_planned_from`]) instead of pricing from
-/// `t = 0`. Results are bit-identical to full pricing either way — this
-/// runner only changes how much event-core work each trial costs, which
-/// its counters expose ([`total_events`](ForkingRunner::total_events)
-/// is what the walk actually processed).
+/// event timeline ([`run_planned_recording`]); later trials whose conf
+/// diff is certified insensitive — per-field stage sensitivity, plus
+/// the locality/speculation policy-fork certificates — resume it at
+/// the first conf-divergent event ([`run_planned_from_with`]) instead
+/// of pricing from `t = 0`. Results are bit-identical to full pricing
+/// either way — this runner only changes how much event-core work each
+/// trial costs, which its counters expose
+/// ([`total_events`](ForkingRunner::total_events) is what the walk
+/// actually processed).
 ///
 /// Set [`full_reprice`](ForkingRunner::full_reprice) to bypass the fork
 /// store entirely — the oracle mode the golden tests and the CI
-/// perf-smoke gate compare against.
+/// perf-smoke gate compare against — or [`coarse`](ForkingRunner::coarse)
+/// to emulate the PR-6 three-way classifier (wave barriers only, policy
+/// diffs decline), the second CI oracle the per-field path must
+/// strictly beat.
 pub struct ForkingRunner<'c> {
     plan: Arc<JobPlan>,
     cluster: &'c ClusterSpec,
     opts: SimOpts,
     /// Force full pricing for every trial (oracle mode).
     pub full_reprice: bool,
-    /// Recorded timelines, oldest first; probed newest-first (the
-    /// incumbent drifts toward recent confs), FIFO-evicted at
-    /// [`MAX_FORKS`].
-    forks: Vec<ForkPoint>,
+    /// Classify diffs with the PR-6 coarse three-way oracle instead of
+    /// per-field sensitivity (comparison mode; still bit-identical).
+    pub coarse: bool,
+    /// Resident recordings; probed exhaustively (the fork sharing the
+    /// longest event prefix wins), evicted by byte budget.
+    forks: Vec<StoredFork>,
+    budget_bytes: usize,
+    store_bytes: usize,
+    /// GreedyDual aging clock: rises to each victim's priority.
+    inflation: f64,
+    /// Monotone clock feeding [`StoredFork::touched`].
+    tick: u64,
     forked_trials: u64,
     replayed_events: u64,
     full_trials: u64,
@@ -99,7 +130,12 @@ impl<'c> ForkingRunner<'c> {
             cluster,
             opts,
             full_reprice: false,
+            coarse: false,
             forks: Vec::new(),
+            budget_bytes: DEFAULT_FORK_BUDGET_BYTES,
+            store_bytes: 0,
+            inflation: 0.0,
+            tick: 0,
             forked_trials: 0,
             replayed_events: 0,
             full_trials: 0,
@@ -116,8 +152,34 @@ impl<'c> ForkingRunner<'c> {
             self.total_events += res.sim.events;
             return res;
         }
-        for fork in self.forks.iter().rev() {
-            if let Some(res) = run_planned_from(fork, &self.plan, conf, self.cluster, &self.opts) {
+        // Probe every resident recording — probes are cheap mask/fact
+        // scans — and fork from the one sharing the longest event
+        // prefix: the fewest re-priced events, not merely the newest
+        // match.
+        let best = self
+            .forks
+            .iter()
+            .enumerate()
+            .filter_map(|(i, sf)| {
+                sf.fork
+                    .shared_prefix_events_with(&self.plan, conf, self.coarse)
+                    .map(|ev| (i, ev))
+            })
+            .max_by_key(|&(_, ev)| ev);
+        if let Some((i, _)) = best {
+            if let Some(res) = run_planned_from_with(
+                &self.forks[i].fork,
+                &self.plan,
+                conf,
+                self.cluster,
+                &self.opts,
+                self.coarse,
+            ) {
+                // GreedyDual refresh: a matched recording re-earns its
+                // residency.
+                self.tick += 1;
+                self.forks[i].priority = self.inflation + 1.0;
+                self.forks[i].touched = self.tick;
                 self.forked_trials += 1;
                 self.replayed_events += res.sim.replayed_events;
                 self.total_events += res.sim.processed_events();
@@ -127,13 +189,56 @@ impl<'c> ForkingRunner<'c> {
         let (res, fork) = run_planned_recording(&self.plan, conf, self.cluster, &self.opts);
         self.full_trials += 1;
         self.total_events += res.sim.events;
-        if fork.checkpoints() > 0 {
-            if self.forks.len() == MAX_FORKS {
-                self.forks.remove(0);
-            }
-            self.forks.push(fork);
-        }
+        self.store(fork);
         res
+    }
+
+    /// Admit a fresh recording, evicting the lowest-priority residents
+    /// until it fits the byte budget. Recordings with no checkpoints
+    /// (single-stage plans, immediate crashes) or bigger than the whole
+    /// budget are not retained.
+    fn store(&mut self, fork: ForkPoint) {
+        if fork.checkpoints() == 0 || fork.bytes() > self.budget_bytes {
+            return;
+        }
+        while self.store_bytes + fork.bytes() > self.budget_bytes {
+            self.evict_one();
+        }
+        self.tick += 1;
+        self.store_bytes += fork.bytes();
+        self.forks.push(StoredFork {
+            fork,
+            priority: self.inflation + 1.0,
+            touched: self.tick,
+        });
+    }
+
+    /// Evict the GreedyDual victim: smallest `(priority, touched)` —
+    /// the least-recently-matched recording, ties LRU-first — raising
+    /// the inflation clock to its priority so stale entries age out.
+    fn evict_one(&mut self) {
+        let (vi, _) = self
+            .forks
+            .iter()
+            .enumerate()
+            .min_by(|a, b| {
+                (a.1.priority, a.1.touched)
+                    .partial_cmp(&(b.1.priority, b.1.touched))
+                    .expect("priorities are finite")
+            })
+            .expect("over budget implies a resident entry");
+        self.inflation = self.inflation.max(self.forks[vi].priority);
+        let victim = self.forks.remove(vi);
+        self.store_bytes -= victim.fork.bytes();
+    }
+
+    /// Change the fork-store byte budget, evicting down to it if the
+    /// resident set no longer fits.
+    pub fn set_fork_budget(&mut self, bytes: usize) {
+        self.budget_bytes = bytes;
+        while self.store_bytes > self.budget_bytes {
+            self.evict_one();
+        }
     }
 
     /// Trials that resumed a recorded timeline instead of pricing in full.
@@ -157,9 +262,20 @@ impl<'c> ForkingRunner<'c> {
         self.total_events
     }
 
-    /// Fork points currently held (bounded by [`MAX_FORKS`]).
+    /// Fork points currently resident (bounded by the byte budget).
     pub fn forks_recorded(&self) -> usize {
         self.forks.len()
+    }
+
+    /// Accounted bytes of the resident recordings — always within
+    /// [`Self::fork_budget_bytes`].
+    pub fn checkpoint_bytes(&self) -> u64 {
+        self.store_bytes as u64
+    }
+
+    /// The store's configured byte budget.
+    pub fn fork_budget_bytes(&self) -> usize {
+        self.budget_bytes
     }
 }
 
@@ -726,7 +842,53 @@ mod tests {
             oracle.full_trials(),
             "same trial count either way"
         );
-        assert!(inc.forks_recorded() <= 4);
+        assert!(inc.forks_recorded() >= 1, "the walk must retain recordings");
+        assert!(inc.checkpoint_bytes() > 0);
+        assert!(
+            inc.checkpoint_bytes() <= DEFAULT_FORK_BUDGET_BYTES as u64,
+            "fork-store residency must respect the byte budget"
+        );
+    }
+
+    #[test]
+    fn fine_walk_beats_the_coarse_oracle_on_stragglers() {
+        // The straggler-aware walk adds speculation and locality-wait
+        // steps. The PR-6 coarse classifier treats those fields as
+        // Global and re-prices them from t = 0; the per-field path
+        // certifies forks for them from checkpoint facts. Both are
+        // bit-identical to full pricing — the fine walk just pays
+        // strictly fewer events.
+        let job = crate::workloads::kmeans(400_000, 32, 8, 3, 16);
+        let plan = crate::engine::prepare(&job).unwrap();
+        let cluster = ClusterSpec::mini();
+        let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+        let topts = TuneOpts { straggler_aware: true, ..TuneOpts::default() };
+
+        let mut fine = ForkingRunner::new(Arc::clone(&plan), &cluster, opts.clone());
+        let a = tune(&mut fine, &topts);
+        let mut coarse = ForkingRunner::new(Arc::clone(&plan), &cluster, opts.clone());
+        coarse.coarse = true;
+        let b = tune(&mut coarse, &topts);
+        let mut full = ForkingRunner::new(Arc::clone(&plan), &cluster, opts);
+        full.full_reprice = true;
+        let c = tune(&mut full, &topts);
+
+        for (out, tag) in [(&a, "fine"), (&b, "coarse")] {
+            assert_eq!(out.best_conf, c.best_conf, "{tag}");
+            assert_eq!(out.trials.len(), c.trials.len(), "{tag}");
+            for (x, y) in out.trials.iter().zip(&c.trials) {
+                assert_eq!(x.duration.to_bits(), y.duration.to_bits(), "{tag}: {}", x.step);
+                assert_eq!(x.kept, y.kept, "{tag}: {}", x.step);
+            }
+        }
+        assert!(
+            fine.total_events() < coarse.total_events(),
+            "per-field classifier must strictly beat the coarse oracle: {} vs {}",
+            fine.total_events(),
+            coarse.total_events()
+        );
+        assert!(coarse.total_events() <= full.total_events());
+        assert!(fine.forked_trials() > coarse.forked_trials());
     }
 
     // ---- warm start (cross-workload evidence transfer) ----

@@ -16,8 +16,15 @@
 //! reproduce full pricing bit for bit (modulo the `replayed_events` /
 //! `forked_trials` bookkeeping, which `SimStats::logical` projects
 //! away) across FIFO/FAIR × locality × speculation × straggler, on the
-//! self-verifying Scan core as well as the Indexed one, under fork-store
-//! eviction, and for any service worker count.
+//! self-verifying Scan core as well as the Indexed one. The per-field
+//! sensitivity classifier decides the resume point — including
+//! certified policy forks (locality wait, speculation) the coarse
+//! three-way oracle calls Global — and mid-stage cadence snapshots are
+//! resume points too, so deep jobs fork from *inside* a late stage.
+//! The byte-budgeted fork store must stay lossless: a trial whose
+//! family was evicted re-prices in full, never resumes a wrong
+//! timeline, and the least-recently-matched entry is the victim. All
+//! of it for any service worker count.
 
 use sparktune::cluster::{ClusterSpec, NodeId};
 use sparktune::conf::SparkConf;
@@ -474,44 +481,133 @@ fn checkpoint_resume_reproduces_on_the_scan_core() {
 }
 
 #[test]
-fn fork_store_eviction_is_bounded_and_lossless() {
-    // Six distinct fork families (locality_wait is a Global field) blow
-    // through the ForkingRunner's bounded store; every trial — recorded,
-    // forked, or priced after its family was evicted — must still equal
-    // full pricing bit for bit.
+fn fork_store_byte_eviction_is_bounded_and_lossless() {
+    // Seven distinct fork families (extras diffs are Global — every
+    // family is a separate full recording) blow through a byte budget
+    // sized for two recordings; every trial — recorded, forked, or
+    // priced after its family was evicted — must still equal full
+    // pricing bit for bit, and the victim must be the
+    // *least-recently-matched* recording, not the oldest insertion.
     use sparktune::tuner::ForkingRunner;
     let cluster = ClusterSpec::mini();
     let plan = prepare(&iterative_job()).unwrap();
     let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let family = |i: u32| SparkConf::default().with("spark.yarn.queue", &format!("q{i}"));
     let mut runner = ForkingRunner::new(Arc::clone(&plan), &cluster, opts.clone());
-    for i in 0..6u32 {
-        let conf = SparkConf::default().with("spark.locality.wait", &format!("{i}s"));
+    let _ = runner.run_result(&family(0));
+    // Extras don't touch pricing, so every family's recording has the
+    // same footprint: a budget of 2.5× one recording holds exactly two.
+    let one = runner.checkpoint_bytes() as usize;
+    assert!(one > 0, "a recording has a real footprint");
+    runner.set_fork_budget(one * 5 / 2);
+    for i in 1..6u32 {
+        let conf = family(i);
         let a = runner.run_result(&conf);
         let b = run_planned(&plan, &conf, &cluster, &opts);
         assert!(job_results_identical(&a, &b), "family {i} diverged");
-        assert!(runner.forks_recorded() <= 4, "store must stay bounded");
+        assert!(
+            runner.checkpoint_bytes() <= runner.fork_budget_bytes() as u64,
+            "store must stay within its byte budget"
+        );
+        assert!(runner.forks_recorded() <= 2, "budget holds two recordings");
     }
-    assert_eq!(runner.forked_trials(), 0, "global diffs never fork");
-    // The newest family is still resident: its shuffle-class variant forks.
-    let resident = SparkConf::default()
-        .with("spark.locality.wait", "5s")
-        .with("spark.serializer", "kryo");
+    assert_eq!(runner.forked_trials(), 0, "global (extras) diffs never fork");
+    // Residents are now families 4 and 5. Matching family 4 with a
+    // shuffle-class variant forks — and refreshes its priority.
+    let resident = family(4).with("spark.serializer", "kryo");
     let a = runner.run_result(&resident);
     let b = run_planned(&plan, &resident, &cluster, &opts);
     assert!(job_results_identical(&a, &b), "resident-family fork diverged");
     assert_eq!(a.sim.logical(), b.sim.logical());
     assert_eq!(runner.forked_trials(), 1);
+    // Recording family 6 must evict the least-recently-matched entry:
+    // family 5 (never matched), not family 4 (matched above) — under
+    // the old FIFO store the refreshed family would be the victim.
+    let _ = runner.run_result(&family(6));
+    let pinned = family(4).with("spark.shuffle.compress", "false");
+    let a = runner.run_result(&pinned);
+    let b = run_planned(&plan, &pinned, &cluster, &opts);
+    assert!(job_results_identical(&a, &b), "pinned-family fork diverged");
+    assert_eq!(a.sim.logical(), b.sim.logical());
+    assert_eq!(runner.forked_trials(), 2, "the matched family must survive the eviction");
     // An evicted family's variant re-prices in full (and re-records) —
     // never resumes a wrong timeline.
-    let evicted = SparkConf::default()
-        .with("spark.locality.wait", "0s")
-        .with("spark.serializer", "kryo");
+    let evicted = family(5).with("spark.serializer", "kryo");
     let a = runner.run_result(&evicted);
     let b = run_planned(&plan, &evicted, &cluster, &opts);
     assert!(job_results_identical(&a, &b), "evicted-family reprice diverged");
     assert_eq!(a.sim, b.sim, "an evicted family must price in full, not fork");
-    assert_eq!(runner.forked_trials(), 1, "no fork for the evicted family");
-    assert!(runner.forks_recorded() <= 4);
+    assert_eq!(runner.forked_trials(), 2, "no fork for the evicted family");
+    assert!(runner.checkpoint_bytes() <= runner.fork_budget_bytes() as u64);
+}
+
+#[test]
+fn mid_stage_resume_matches_full_bitwise_across_the_matrix() {
+    // A 19-stage kmeans produces 18 new-wave barriers — two more than
+    // the recorder keeps — so the newest checkpoint is a cadence
+    // snapshot taken *inside* a late stage. A certified locality-wait
+    // delta resumes from it (the coarse oracle can't fork at all) and
+    // must equal the full-reprice oracle bit for bit across FIFO/FAIR
+    // × speculation × straggler.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&workloads::kmeans(400_000, 32, 8, 9, 16)).unwrap();
+    let bases = [
+        ("fifo", SparkConf::default()),
+        ("fair", SparkConf::default().with("spark.scheduler.mode", "FAIR")),
+        ("speculation", SparkConf::default().with("spark.speculation", "true")),
+    ];
+    let opt_sets = [
+        ("plain", SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }),
+        (
+            "straggler",
+            SimOpts {
+                jitter: 0.05,
+                seed: 0xBEEF,
+                straggler: Some(Straggler { prob: 0.1, factor: 6.0 }),
+            },
+        ),
+    ];
+    for (bname, base) in &bases {
+        for (oname, opts) in &opt_sets {
+            let (rec, fork) = run_planned_recording(&plan, base, &cluster, opts);
+            let plain = run_planned(&plan, base, &cluster, opts);
+            assert!(job_results_identical(&rec, &plain), "{bname}/{oname}: recording diverged");
+            assert!(fork.mid_stage_checkpoints() > 0, "{bname}/{oname}: no cadence snapshots");
+            let patient = base.clone().with("spark.locality.wait", "6s");
+            assert!(
+                fork.resumes_mid_stage(&plan, &patient),
+                "{bname}/{oname}: the locality delta must resume from an intra-stage snapshot"
+            );
+            assert_eq!(
+                fork.shared_prefix_events_with(&plan, &patient, true),
+                None,
+                "{bname}/{oname}: the coarse oracle calls locality Global"
+            );
+            let full = run_planned(&plan, &patient, &cluster, opts);
+            let forked = run_planned_from(&fork, &plan, &patient, &cluster, opts)
+                .unwrap_or_else(|| panic!("{bname}/{oname}: mid-stage fork declined"));
+            assert!(
+                job_results_identical(&full, &forked),
+                "{bname}/{oname}: mid-stage forked result diverged from full pricing"
+            );
+            assert_eq!(
+                forked.sim.logical(),
+                full.sim.logical(),
+                "{bname}/{oname}: logical core counters diverged"
+            );
+            assert_eq!(
+                fork.shared_prefix_events(&plan, &patient),
+                Some(forked.sim.replayed_events),
+                "{bname}/{oname}: the resume point is the first divergent event"
+            );
+            assert!(
+                forked.sim.processed_events() < full.sim.events,
+                "{bname}/{oname}: mid-stage fork processed {} of {} events",
+                forked.sim.processed_events(),
+                full.sim.events
+            );
+        }
+    }
 }
 
 #[test]
