@@ -9,6 +9,7 @@ use sparktune::cluster::{ClusterSpec, NodeId};
 use sparktune::codec::CodecKind;
 use sparktune::conf::SparkConf;
 use sparktune::engine::{prepare, run, run_planned, run_planned_from, run_planned_recording};
+use sparktune::obs::TraceSink;
 use sparktune::ser::{Record, SerKind};
 use sparktune::sim::{EventSim, FifoScheduler, Phase, SimOpts, StageSpec};
 use sparktune::testkit::{BenchArgs, BenchSink};
@@ -92,6 +93,23 @@ fn main() {
     };
     sink.bench("sim/event core shaped stage (events/sec)", iters, events as f64, || {
         let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.submit_shaped(0, &spec, &SimOpts::default());
+        std::hint::black_box(sim.drain());
+    });
+
+    // ---- trace-plane overhead on the same shaped stage ----
+    // The NullSink row must track the untraced row (the `enabled()`
+    // guard compiles the hot path to a branch on a None); the buffered
+    // row prices what full span recording costs per event.
+    sink.bench("sim/event core traced NullSink (events/sec)", iters, events as f64, || {
+        let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.set_trace(TraceSink::null());
+        sim.submit_shaped(0, &spec, &SimOpts::default());
+        std::hint::black_box(sim.drain());
+    });
+    sink.bench("sim/event core traced buffered (events/sec)", iters, events as f64, || {
+        let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.set_trace(TraceSink::buffered());
         sim.submit_shaped(0, &spec, &SimOpts::default());
         std::hint::black_box(sim.drain());
     });

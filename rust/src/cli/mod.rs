@@ -20,12 +20,13 @@
 
 use crate::cluster::ClusterSpec;
 use crate::conf::{params, SparkConf};
-use crate::engine::{prepare, run, run_planned};
+use crate::engine::{prepare, run, run_planned, run_planned_traced};
 use crate::experiments::{self, cases, sensitivity, straggler, tenancy};
-use crate::report::sim_stats_table;
+use crate::obs::{Registry, SpanId, TraceSink};
+use crate::report::{metrics_table, sim_stats_table, Table};
 use crate::sim::{SimOpts, SimStats, Straggler};
 use crate::tuner::baselines::{grid_conf, grid_size};
-use crate::tuner::{tune, ForkingRunner, TuneOpts, WarmStart};
+use crate::tuner::{tune, ForkingRunner, RunProvenance, TuneOpts, TuneOutcome, WarmStart};
 use crate::util::stats::Summary;
 use crate::workloads::{self, Workload};
 use std::sync::Arc;
@@ -54,7 +55,11 @@ fn parse_args(argv: &[String]) -> Result<Args, String> {
                 confs.push(
                     argv.get(i).ok_or_else(|| "missing value after --conf".to_string())?.clone(),
                 );
-            } else if matches!(name, "short" | "verbose" | "mixed" | "straggler-steps" | "warm-start") {
+            } else if matches!(
+                name,
+                "short" | "verbose" | "mixed" | "straggler-steps" | "warm-start" | "explain"
+                    | "metrics"
+            ) {
                 bools.push(name.to_string());
             } else {
                 i += 1;
@@ -97,14 +102,72 @@ impl Args {
     }
 }
 
+/// Surface a configuration's once-per-key warnings: each goes to stderr
+/// and — when a recorder is active — into the trace as a warning event,
+/// so exported timelines carry the conf caveats they were priced under.
+fn report_conf_warnings(conf: &SparkConf, trace: &TraceSink) {
+    for warn in &conf.warnings {
+        trace.warning(warn);
+        eprintln!("warning: {warn}");
+    }
+}
+
+/// One `tune --explain` table row: how a trial's number was produced.
+fn provenance_row(step: &str, verdict: &str, p: Option<RunProvenance>) -> Vec<String> {
+    let (path, replayed, processed) = match p {
+        Some(p) => {
+            let path = if p.memoized {
+                "memo"
+            } else if p.forked {
+                "fork"
+            } else {
+                "full"
+            };
+            (path.to_string(), p.replayed_events.to_string(), p.processed_events.to_string())
+        }
+        // Synthetic runners (response surfaces) track no provenance.
+        None => ("-".to_string(), "-".to_string(), "-".to_string()),
+    };
+    vec![step.to_string(), verdict.to_string(), path, replayed, processed]
+}
+
+/// The `tune --explain` provenance table: baseline plus every trial, in
+/// execution order, with the pricing path and event counts per row.
+fn provenance_table(out: &TuneOutcome) -> Table {
+    let mut rows = vec![provenance_row("baseline", "baseline", out.baseline_provenance)];
+    for t in &out.trials {
+        rows.push(provenance_row(t.step, if t.kept { "KEEP" } else { "reject" }, t.provenance));
+    }
+    Table {
+        title: "Trial provenance".into(),
+        header: vec![
+            "step".into(),
+            "verdict".into(),
+            "path".into(),
+            "replayed events".into(),
+            "processed events".into(),
+        ],
+        rows,
+    }
+}
+
 const USAGE: &str = "sparktune — Spark-1.5 parameter-tuning reproduction (Petridis et al., 2016)
 
 USAGE:
   sparktune run      --workload <name> [--conf k=v]... [--reps N] [--seed N]
-  sparktune tune     --workload <name> [--threshold 0.10] [--short]
+                     [--verbose] [--metrics]  (--metrics prints the versioned
+                      metrics-registry snapshot of the absorbed run counters)
+  sparktune tune     --workload <name> [--conf k=v]... [--threshold 0.10] [--short]
                      [--straggler-steps] [--background N] [--background-records N]
                      [--warm-from <name>]  (seed the decision list from another
                       workload's kept steps — cross-workload evidence transfer)
+                     [--explain]           (per-trial provenance: memo / fork /
+                      full pricing, replayed and processed event counts)
+                     [--trace-out FILE]    (write the session's deterministic
+                      Chrome-trace JSON — sim-clock span tree, load in
+                      chrome://tracing or Perfetto)
+                     [--event-log-out FILE] (write the Spark-history-style
+                      JSON-lines event log of the same spans)
   sparktune sweep    --figure fig1|fig2|fig3|table2 [--out-dir DIR]
   sparktune cases    [--out-dir DIR]
   sparktune ablation [--workload <name>]
@@ -112,11 +175,13 @@ USAGE:
   sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
                      (jittered cluster: spark.speculation off vs on)
   sparktune serve    [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
-                     [--warm-start]
+                     [--warm-start] [--conf k=v]... [--explain] [--metrics]
                      (tuning service: M×N overlapping sessions, memoized trials;
                       exits non-zero unless trials dedupe and the rerun is
                       bit-identical to the cold pass — or, with --warm-start,
-                      strictly cheaper at equal final quality)
+                      strictly cheaper at equal final quality. --explain prints
+                      per-session provenance tables, --metrics the service
+                      counters as a registry snapshot)
   sparktune transfer [--tenants N] [--workers T] [--threshold D]
                      (evidence transfer: train N tenants, warm-start a held-out
                       similar workload; exits non-zero unless the warm session
@@ -126,9 +191,12 @@ USAGE:
                      (hot-path regression guard: plan-once pricing must be
                       bit-identical to re-planning, the indexed event core
                       must do strictly less flow work than per-event rescans,
-                      and an incrementally re-priced tuner walk must replay
+                      an incrementally re-priced tuner walk must replay
                       checkpointed events and process strictly fewer events
-                      than the full-reprice oracle at bit-identical outcomes)
+                      than the full-reprice oracle at bit-identical outcomes,
+                      and a traced run must be bit-identical to the untraced
+                      run — same durations and SimStats — with byte-stable
+                      trace exports)
   sparktune help-conf
 
 WORKLOADS: sort-by-key | shuffling | kmeans-100m | kmeans-200m |
@@ -158,9 +226,7 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             let w = args.workload()?;
             let conf = args.conf()?;
             conf.validate().map_err(|e| e.to_string())?;
-            for warn in &conf.warnings {
-                eprintln!("warning: {warn}");
-            }
+            report_conf_warnings(&conf, &TraceSink::null());
             let reps: u64 = args.flag("reps").unwrap_or("5").parse().map_err(|e| format!("{e}"))?;
             let seed: u64 = args.flag("seed").unwrap_or("42").parse().map_err(|e| format!("{e}"))?;
             let job = w.job();
@@ -168,9 +234,11 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             let plan = prepare(&job).map_err(|e| e.to_string())?;
             let mut durations = Vec::new();
             let mut last_sim: Option<SimStats> = None;
+            let mut total = SimStats::default();
             for rep in 0..reps {
                 let r = run_planned(&plan, &conf, &cluster, &SimOpts { jitter: 0.04, seed: seed + rep, straggler: None });
                 last_sim = Some(r.sim);
+                total.absorb(&r.sim);
                 if let Some(c) = r.crashed {
                     println!("run {rep}: CRASH — {c}");
                     return Ok(());
@@ -208,6 +276,13 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                     println!("{}", sim_stats_table(&sim).to_markdown());
                 }
             }
+            if args.has("metrics") {
+                // The absorbed cross-rep counters, as the versioned
+                // registry snapshot (exact text rendering).
+                let reg = Registry::new(1);
+                reg.record_sim_stats("sim", &total);
+                print!("{}", reg.snapshot().render_text());
+            }
             Ok(())
         }
         "tune" => {
@@ -216,11 +291,24 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 args.flag("threshold").unwrap_or("0.0").parse().map_err(|e| format!("{e}"))?;
             let background: u32 =
                 args.flag("background").unwrap_or("0").parse().map_err(|e| format!("{e}"))?;
+            // Record the session span tree only when an export was
+            // requested — the null sink keeps the default path free.
+            let trace = if args.flag("trace-out").is_some() || args.flag("event-log-out").is_some()
+            {
+                TraceSink::buffered()
+            } else {
+                TraceSink::null()
+            };
+            let base = args.conf()?;
+            base.validate().map_err(|e| e.to_string())?;
+            report_conf_warnings(&base, &trace);
             let opts = TuneOpts {
                 threshold,
                 short_version: args.has("short"),
                 straggler_aware: args.has("straggler-steps"),
                 warm_start: None,
+                base,
+                trace: trace.clone(),
             };
             let out = if let Some(src) = args.flag("warm-from") {
                 // Cross-workload evidence transfer, by hand: tune the
@@ -288,6 +376,17 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             );
             for (k, v) in out.final_settings() {
                 println!("    {k}={v}");
+            }
+            if args.has("explain") {
+                println!("{}", provenance_table(&out).to_markdown());
+            }
+            if let Some(path) = args.flag("trace-out") {
+                std::fs::write(path, trace.chrome_trace()).map_err(|e| e.to_string())?;
+                println!("wrote {path} ({} trace events)", trace.len());
+            }
+            if let Some(path) = args.flag("event-log-out") {
+                std::fs::write(path, trace.event_log()).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
             }
             Ok(())
         }
@@ -410,6 +509,9 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 return Err("--tenants and --apps must be >= 1".into());
             }
             let warm_start = args.has("warm-start");
+            let base = args.conf()?;
+            base.validate().map_err(|e| e.to_string())?;
+            report_conf_warnings(&base, &TraceSink::null());
             let opts = experiments::service::StressOpts {
                 tenants,
                 apps,
@@ -418,8 +520,59 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 shards,
                 warm_start,
             };
-            let r = experiments::service::service_stress(&opts, &cluster);
+            let r = experiments::service::service_stress_with_base(&opts, &cluster, &base);
             println!("{}", experiments::service::service_table(&r).to_markdown());
+            if args.has("explain") {
+                // Per-session provenance rollup over the cold pass: how
+                // each session's trials were priced (memo hits and
+                // coalesced joins / fork-resumes / full runs) plus the
+                // events replayed from checkpoints.
+                let mut rows = Vec::new();
+                for s in &r.cold {
+                    let (mut memo, mut fork, mut full, mut replayed) = (0u64, 0u64, 0u64, 0u64);
+                    for p in std::iter::once(&s.outcome.baseline_provenance)
+                        .chain(s.outcome.trials.iter().map(|t| &t.provenance))
+                        .flatten()
+                    {
+                        if p.memoized {
+                            memo += 1;
+                        } else if p.forked {
+                            fork += 1;
+                        } else {
+                            full += 1;
+                        }
+                        replayed += p.replayed_events;
+                    }
+                    rows.push(vec![
+                        s.name.clone(),
+                        s.outcome.runs().to_string(),
+                        memo.to_string(),
+                        fork.to_string(),
+                        full.to_string(),
+                        replayed.to_string(),
+                    ]);
+                }
+                let t = Table {
+                    title: "Cold-pass session provenance".into(),
+                    header: vec![
+                        "session".into(),
+                        "runs".into(),
+                        "memo".into(),
+                        "fork".into(),
+                        "full".into(),
+                        "replayed events".into(),
+                    ],
+                    rows,
+                };
+                println!("{}", t.to_markdown());
+            }
+            if args.has("metrics") {
+                // The service counters as a registry snapshot, rendered
+                // through the shared table path.
+                let reg = Registry::new(1);
+                reg.record_service_stats(&r.stats);
+                println!("{}", metrics_table("Service metrics", &reg.snapshot()).to_markdown());
+            }
             // The CI smoke step relies on these two assertions: the
             // service must actually dedupe, and warm-cache results must
             // be bit-identical to cold ones.
@@ -665,6 +818,42 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 oracle.total_events(),
                 inc.checkpoint_bytes(),
                 inc.fork_budget_bytes()
+            );
+            // Observability gate: the tracing plane must be invisible to
+            // the simulation. A traced run must be bit-identical to the
+            // untraced run — same duration, same SimStats — while still
+            // recording a span tree, and a second traced run must export
+            // byte-identical Chrome-trace JSON and event logs (the
+            // exports are deterministic, sim-clock-stamped artifacts,
+            // not wall-clock ones).
+            let tr_opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+            let tr_conf = SparkConf::default();
+            let plain = run_planned(&plan, &tr_conf, &cluster, &tr_opts);
+            let sink = TraceSink::buffered();
+            let traced =
+                run_planned_traced(&plan, &tr_conf, &cluster, &tr_opts, &sink, SpanId::NONE);
+            if traced.duration.to_bits() != plain.duration.to_bits()
+                || traced.crashed != plain.crashed
+                || traced.sim != plain.sim
+            {
+                return Err(format!(
+                    "tracing perturbed the simulation: {} traced vs {} untraced",
+                    traced.duration, plain.duration
+                ));
+            }
+            if sink.len() == 0 {
+                return Err("traced run recorded no span events — the recorder is dead".into());
+            }
+            let sink2 = TraceSink::buffered();
+            let _ = run_planned_traced(&plan, &tr_conf, &cluster, &tr_opts, &sink2, SpanId::NONE);
+            if sink2.chrome_trace() != sink.chrome_trace() || sink2.event_log() != sink.event_log()
+            {
+                return Err("trace exports are not byte-stable across identical runs".into());
+            }
+            println!(
+                "ok: traced ≡ untraced run (bit-identical duration and counters); \
+                 {} span events recorded; Chrome-trace and event-log exports byte-stable",
+                sink.len()
             );
             Ok(())
         }

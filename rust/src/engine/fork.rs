@@ -106,6 +106,7 @@ use super::run::{self, JobPlan, JobResult, PricedMeta, PricingState, StageReport
 use crate::cluster::{ClusterSpec, NodeId};
 use crate::conf::SparkConf;
 use crate::exec::MemoryModel;
+use crate::obs::{SpanId, TraceSink};
 use crate::shuffle::IoProfiles;
 use crate::sim::{scheduler_for, EventSim, SimCheckpoint, SimOpts, SnapshotSink};
 use std::sync::Arc;
@@ -641,10 +642,31 @@ pub fn run_planned_recording(
     cluster: &ClusterSpec,
     opts: &SimOpts,
 ) -> (JobResult, ForkPoint) {
+    run_planned_recording_traced(plan, conf, cluster, opts, &TraceSink::null(), SpanId::NONE)
+}
+
+/// [`run_planned_recording`] with an observability recorder: stage and
+/// task-copy spans are emitted under `parent` (stage spans parent
+/// directly to it — the solo recording run has no job layer, a
+/// deliberate, deterministic asymmetry with the batch runner's
+/// job-span nesting). A pure observer, like the snapshot sink: results,
+/// stats, and the recorded [`ForkPoint`] are bit-identical to the
+/// untraced call.
+pub fn run_planned_recording_traced(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    trace: &TraceSink,
+    parent: SpanId,
+) -> (JobResult, ForkPoint) {
     let mem = MemoryModel::new(conf, cluster);
     let prof = IoProfiles::from_conf(conf);
     let mut sim =
         EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), run::policy_of(conf));
+    if trace.enabled() {
+        sim.set_trace(trace.clone());
+    }
     sim.set_pool(0, plan.pool);
     let n = plan.stages.len();
     let mut jr = run::JobRt {
@@ -661,6 +683,7 @@ pub fn run_planned_recording(
         job_seed: opts.seed,
     };
     let mut by_handle: Vec<(usize, usize, PricedMeta)> = Vec::new();
+    let mut span_by_handle: Vec<(SpanId, f64)> = Vec::new();
     let mut checkpoints: Vec<EngineCheckpoint> = Vec::new();
     let mut wave_barriers = 0usize;
     let mut dur_bounds: Vec<Option<(f64, f64)>> = vec![None; n];
@@ -672,6 +695,7 @@ pub fn run_planned_recording(
         }
         run::submit_stage(
             0, sid, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
+            trace, parent, &mut span_by_handle,
         );
     }
 
@@ -699,6 +723,10 @@ pub fn run_planned_recording(
         }
         jr.pricing.placements[sid] = Some(done.task_nodes);
         jr.finish = done.at;
+        if trace.enabled() {
+            let (span, submitted) = span_by_handle[done.handle];
+            trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
+        }
         // Collect the newly runnable wave first (instead of submitting
         // each child inside the decrement loop, as the batch runner
         // does) so the barrier snapshot can be taken in front of it;
@@ -730,6 +758,7 @@ pub fn run_planned_recording(
             if jr.crash.is_none() {
                 run::submit_stage(
                     0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
+                    trace, parent, &mut span_by_handle,
                 );
             }
         }
@@ -778,7 +807,25 @@ pub fn run_planned_from(
     cluster: &ClusterSpec,
     opts: &SimOpts,
 ) -> Option<JobResult> {
-    run_planned_from_with(fork, plan, conf, cluster, opts, false)
+    run_planned_from_with_traced(fork, plan, conf, cluster, opts, false, &TraceSink::null(), SpanId::NONE)
+}
+
+/// [`run_planned_from`] with an observability recorder: emits a
+/// fork-resume annotation (resume clock, inherited event count) plus
+/// spans for the re-priced *suffix* under `parent`. Stages submitted in
+/// the inherited prefix carry no spans (their task events parent to the
+/// root) — results are unaffected, and the annotation records exactly
+/// where recorded history ends and live re-pricing begins.
+pub fn run_planned_from_traced(
+    fork: &ForkPoint,
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    trace: &TraceSink,
+    parent: SpanId,
+) -> Option<JobResult> {
+    run_planned_from_with_traced(fork, plan, conf, cluster, opts, false, trace, parent)
 }
 
 /// [`run_planned_from`] under an explicit classifier. `coarse = true`
@@ -792,6 +839,22 @@ pub fn run_planned_from_with(
     cluster: &ClusterSpec,
     opts: &SimOpts,
     coarse: bool,
+) -> Option<JobResult> {
+    run_planned_from_with_traced(fork, plan, conf, cluster, opts, coarse, &TraceSink::null(), SpanId::NONE)
+}
+
+/// [`run_planned_from_with`] plus a recorder — the fully-general resume
+/// entry point ([`ForkingRunner`](crate::tuner::ForkingRunner) uses it
+/// so traced walks keep their classifier mode).
+pub fn run_planned_from_with_traced(
+    fork: &ForkPoint,
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    coarse: bool,
+    trace: &TraceSink,
+    parent: SpanId,
 ) -> Option<JobResult> {
     if cluster.nodes != fork.nodes || !same_opts(&fork.opts, opts) {
         return None;
@@ -810,6 +873,15 @@ pub fn run_planned_from_with(
         &cp.sim,
         run::policy_of(conf),
     );
+    if trace.enabled() {
+        sim.set_trace(trace.clone());
+        trace.instant(
+            parent,
+            "fork",
+            &format!("resume @{} ({} events replayed)", cp.sim.at(), cp.sim.events()),
+            cp.sim.at(),
+        );
+    }
     let mut jr = run::JobRt {
         plan: Some(plan.as_ref()),
         name: Arc::clone(&plan.name),
@@ -822,6 +894,9 @@ pub fn run_planned_from_with(
         job_seed: opts.seed,
     };
     let mut by_handle = cp.by_handle.clone();
+    // Prefix stages were priced during recording: they get no spans
+    // (their replayed task events parent to the session root).
+    let mut span_by_handle: Vec<(SpanId, f64)> = vec![(SpanId::NONE, 0.0); by_handle.len()];
 
     // Re-price the checkpoint's pending wave under the new conf (empty
     // for mid-stage checkpoints), then pump to completion exactly like
@@ -830,6 +905,7 @@ pub fn run_planned_from_with(
         if jr.crash.is_none() {
             run::submit_stage(
                 0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
+                trace, parent, &mut span_by_handle,
             );
         }
     }
@@ -853,11 +929,16 @@ pub fn run_planned_from_with(
         });
         jr.pricing.placements[sid] = Some(done.task_nodes);
         jr.finish = done.at;
+        if trace.enabled() {
+            let (span, submitted) = span_by_handle[done.handle];
+            trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
+        }
         for &ch in &plan.children[sid] {
             jr.parents_left[ch] -= 1;
             if jr.parents_left[ch] == 0 && jr.crash.is_none() {
                 run::submit_stage(
                     0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
+                    trace, parent, &mut span_by_handle,
                 );
             }
         }

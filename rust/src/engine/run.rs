@@ -48,6 +48,7 @@ use super::Job;
 use crate::cluster::{ClusterSpec, NodeId};
 use crate::conf::SparkConf;
 use crate::exec::{MemoryModel, SpillPlan};
+use crate::obs::{SpanId, TraceSink};
 use crate::shuffle::{self, IoProfiles, MapSideSpec, ReduceSideSpec};
 use crate::sim::{
     scheduler_for, EventSim, Phase, PoolSpec, SimOpts, SimPolicy, SimStats, SpecPolicy, StageSpec,
@@ -221,6 +222,25 @@ pub fn run_planned(
     all.results.pop().expect("one plan in, one result out")
 }
 
+/// [`run_planned`] with an observability recorder attached: job, stage,
+/// and task-copy spans are emitted into `trace` under `parent`. The
+/// recorder is a pure observer — the returned [`JobResult`] (durations,
+/// reports, and [`SimStats`]) is bit-identical to an untraced
+/// [`run_planned`] of the same inputs; the observability golden suite
+/// pins that across the full scheduling-policy matrix.
+pub fn run_planned_traced(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    trace: &TraceSink,
+    parent: SpanId,
+) -> JobResult {
+    let entries = vec![PlanEntry::Planned(Arc::clone(plan))];
+    let mut all = run_all_entries(&entries, conf, cluster, opts, trace, parent);
+    all.results.pop().expect("one plan in, one result out")
+}
+
 /// Run a batch of jobs **concurrently** on one cluster, planning each on
 /// the spot: every job's root stages are submitted at `t = 0` and the
 /// `spark.scheduler.mode` policy (`conf.scheduler_mode`) arbitrates
@@ -244,7 +264,7 @@ pub fn run_all(
             },
         })
         .collect();
-    run_all_entries(&entries, conf, cluster, opts)
+    run_all_entries(&entries, conf, cluster, opts, &TraceSink::null(), SpanId::NONE)
 }
 
 /// Run a batch of **prepared** plans concurrently — the price-many path:
@@ -258,7 +278,7 @@ pub fn run_all_planned(
 ) -> MultiJobResult {
     let entries: Vec<PlanEntry> =
         plans.iter().map(|p| PlanEntry::Planned(Arc::clone(p))).collect();
-    run_all_entries(&entries, conf, cluster, opts)
+    run_all_entries(&entries, conf, cluster, opts, &TraceSink::null(), SpanId::NONE)
 }
 
 /// One job's planning outcome entering the runner.
@@ -272,11 +292,16 @@ fn run_all_entries(
     conf: &SparkConf,
     cluster: &ClusterSpec,
     opts: &SimOpts,
+    trace: &TraceSink,
+    parent: SpanId,
 ) -> MultiJobResult {
     let mem = MemoryModel::new(conf, cluster);
     let prof = IoProfiles::from_conf(conf);
     let mut sim =
         EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), policy_of(conf));
+    if trace.enabled() {
+        sim.set_trace(trace.clone());
+    }
 
     // ---- per-job runtime bookkeeping over the shared plans ----
     let mut jobs_rt: Vec<JobRt<'_>> = Vec::with_capacity(entries.len());
@@ -316,9 +341,24 @@ fn run_all_entries(
         }
     }
 
+    // One trace span per planned job (task and stage spans nest under
+    // it); null sinks hand out NONE and every emission below no-ops.
+    let job_spans: Vec<SpanId> = jobs_rt
+        .iter()
+        .map(|jr| {
+            if trace.enabled() && jr.plan.is_some() {
+                trace.open(parent, "job")
+            } else {
+                SpanId::NONE
+            }
+        })
+        .collect();
+
     // handle → (job index, stage id, pricing metadata); handles are
     // sequential, so the table is a dense Vec, not a hash map.
     let mut by_handle: Vec<(usize, usize, PricedMeta)> = Vec::new();
+    // handle → (stage span, submission clock), parallel to `by_handle`.
+    let mut span_by_handle: Vec<(SpanId, f64)> = Vec::new();
 
     // ---- submit every root at t = 0, in job order ----
     for ji in 0..jobs_rt.len() {
@@ -338,6 +378,9 @@ fn run_all_entries(
                 &mem,
                 &prof,
                 opts,
+                trace,
+                job_spans[ji],
+                &mut span_by_handle,
             );
             if jobs_rt[ji].crash.is_some() {
                 break;
@@ -370,6 +413,10 @@ fn run_all_entries(
         // their preferred nodes from the writer's real placement.
         jr.pricing.placements[sid] = Some(done.task_nodes);
         jr.finish = done.at;
+        if trace.enabled() {
+            let (span, submitted) = span_by_handle[done.handle];
+            trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
+        }
         for &ch in &plan.children[sid] {
             let jr = &mut jobs_rt[ji];
             jr.parents_left[ch] -= 1;
@@ -385,6 +432,9 @@ fn run_all_entries(
                     &mem,
                     &prof,
                     opts,
+                    trace,
+                    job_spans[ji],
+                    &mut span_by_handle,
                 );
             }
         }
@@ -399,6 +449,11 @@ fn run_all_entries(
     );
 
     // ---- assemble per-job results ----
+    if trace.enabled() {
+        for (jr, &span) in jobs_rt.iter().zip(&job_spans) {
+            trace.close(span, "job", &jr.name, 0.0, jr.finish);
+        }
+    }
     let sim_stats = sim.stats();
     let results: Vec<JobResult> = jobs_rt
         .into_iter()
@@ -516,6 +571,12 @@ pub(super) struct PricedMeta {
 
 /// Price `sid` and submit its tasks to the event core; on OOM, mark the
 /// job crashed (no further stages of this job are submitted).
+///
+/// `trace`/`job_span`/`span_by_handle` thread the observability
+/// recorder: a successful submission opens a stage span under
+/// `job_span`, binds it to the core handle (task-copy spans nest under
+/// it), and records `(span, submission clock)` in `span_by_handle` —
+/// which stays parallel to `by_handle` (crash paths push to neither).
 #[allow(clippy::too_many_arguments)]
 pub(super) fn submit_stage(
     ji: usize,
@@ -528,6 +589,9 @@ pub(super) fn submit_stage(
     mem: &MemoryModel,
     prof: &IoProfiles,
     opts: &SimOpts,
+    trace: &TraceSink,
+    job_span: SpanId,
+    span_by_handle: &mut Vec<(SpanId, f64)>,
 ) {
     let plan = jr.plan();
     let stage = &plan.stages[sid];
@@ -571,6 +635,13 @@ pub(super) fn submit_stage(
             );
             debug_assert_eq!(handle, by_handle.len(), "stage handles are sequential");
             by_handle.push((ji, sid, meta));
+            if trace.enabled() {
+                let span = trace.open(job_span, "stage");
+                sim.bind_trace_span(handle, span);
+                span_by_handle.push((span, sim.now()));
+            } else {
+                span_by_handle.push((SpanId::NONE, 0.0));
+            }
         }
         Priced::Crash(msg) => {
             jr.crash = Some(msg);

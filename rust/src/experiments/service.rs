@@ -12,6 +12,7 @@
 //! subcommand (CI smoke) enforces.
 
 use crate::cluster::ClusterSpec;
+use crate::conf::SparkConf;
 use crate::engine::Job;
 use crate::report::Table;
 use crate::service::{
@@ -70,13 +71,23 @@ fn catalog(a: u32) -> Job {
 /// `t`'s app `a` is the same trial stream as every other tenant's app
 /// `a`, so the overlap is maximal by construction.
 pub fn stress_requests(tenants: u32, apps: u32) -> Vec<SessionRequest> {
+    stress_requests_with_base(tenants, apps, &SparkConf::default())
+}
+
+/// [`stress_requests`] with a non-default base configuration riding
+/// under every session's trials (the CLI's `serve --conf k=v` path).
+pub fn stress_requests_with_base(
+    tenants: u32,
+    apps: u32,
+    base: &SparkConf,
+) -> Vec<SessionRequest> {
     let mut reqs = Vec::with_capacity(tenants as usize * apps as usize);
     for t in 0..tenants {
         for a in 0..apps {
             reqs.push(SessionRequest {
                 name: format!("tenant{t}/app{a}"),
                 job: catalog(a),
-                tune: TuneOpts { short_version: true, ..TuneOpts::default() },
+                tune: TuneOpts { short_version: true, base: base.clone(), ..TuneOpts::default() },
                 sim: SimOpts { jitter: 0.04, seed: 0x5E21E + a as u64, straggler: None },
             });
         }
@@ -142,7 +153,18 @@ impl StressReport {
 /// Run the stress scenario: serve the batch cold, then re-serve it
 /// fully warm on the same service.
 pub fn service_stress(o: &StressOpts, cluster: &ClusterSpec) -> StressReport {
-    let reqs = stress_requests(o.tenants, o.apps);
+    service_stress_with_base(o, cluster, &SparkConf::default())
+}
+
+/// [`service_stress`] under a non-default base configuration
+/// ([`StressOpts`] is `Copy`-sized on purpose, so the base rides
+/// alongside rather than inside it).
+pub fn service_stress_with_base(
+    o: &StressOpts,
+    cluster: &ClusterSpec,
+    base: &SparkConf,
+) -> StressReport {
+    let reqs = stress_requests_with_base(o.tenants, o.apps, base);
     let svc = TuningService::new(
         cluster.clone(),
         ServiceOpts {
@@ -212,7 +234,7 @@ mod tests {
 
     #[test]
     fn stress_dedupes_and_stays_deterministic() {
-        let o = StressOpts { tenants: 3, apps: 2, workers: 4, capacity: 1024, shards: 4 };
+        let o = StressOpts { tenants: 3, apps: 2, workers: 4, capacity: 1024, shards: 4, warm_start: false };
         let r = service_stress(&o, &ClusterSpec::mini());
         assert_eq!(r.cold.len(), 6);
         assert!(r.deterministic(), "warm rerun must be bit-identical to the cold pass");
@@ -270,7 +292,7 @@ mod tests {
     fn stress_is_reproducible_across_services() {
         // A fresh service (fresh cache, different thread interleavings)
         // reaches identical outcomes: purity end to end.
-        let o = StressOpts { tenants: 2, apps: 2, workers: 3, capacity: 512, shards: 2 };
+        let o = StressOpts { tenants: 2, apps: 2, workers: 3, capacity: 512, shards: 2, warm_start: false };
         let a = service_stress(&o, &ClusterSpec::mini());
         let b = service_stress(&o, &ClusterSpec::mini());
         for (x, y) in a.cold.iter().zip(&b.cold) {
@@ -280,7 +302,7 @@ mod tests {
 
     #[test]
     fn table_reports_the_headline_counters() {
-        let o = StressOpts { tenants: 2, apps: 1, workers: 2, capacity: 256, shards: 2 };
+        let o = StressOpts { tenants: 2, apps: 1, workers: 2, capacity: 256, shards: 2, warm_start: false };
         let r = service_stress(&o, &ClusterSpec::mini());
         let md = service_table(&r).to_markdown();
         assert!(md.contains("trials requested"), "{md}");

@@ -36,6 +36,12 @@
 //!   index over completed sessions, and warm-started decision lists
 //!   that replay a similar workload's kept steps in strictly fewer
 //!   trials.
+//! * A **deterministic observability plane** ([`obs`]): a sim-clock
+//!   span-tree recorder threaded through the event core, engine, tuner,
+//!   and service (null by default — tracing never perturbs bit-identical
+//!   pricing), a lock-striped metrics registry absorbing every evidence
+//!   counter into one versioned snapshot, and per-trial provenance
+//!   records behind `tune --explain`.
 //! * Benchmarks from the paper's evaluation and the multi-tenant
 //!   scenario ([`workloads`]), experiment drivers for every figure and
 //!   table plus FIFO-vs-FAIR tenancy and the service stress scenario
@@ -55,6 +61,7 @@ pub mod conf;
 pub mod engine;
 pub mod exec;
 pub mod experiments;
+pub mod obs;
 pub mod real;
 pub mod report;
 pub mod runtime;

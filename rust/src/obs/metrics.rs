@@ -1,0 +1,436 @@
+//! Crate-wide metrics registry: named counters, gauges, and sim-time
+//! histograms behind lock stripes, snapshotted into one sorted,
+//! versioned view.
+//!
+//! The registry is the *aggregation* half of the observability plane
+//! (the [`trace`](super::trace) recorder is the *timeline* half). The
+//! existing evidence structs — [`SimStats`](crate::sim::SimStats),
+//! `ServiceStats`, cache hit/miss/evict counts, fork-store bytes — are
+//! absorbed into it by the exhaustive-destructure recorders below, so
+//! adding a field to either struct without teaching the registry about
+//! it is a compile error (the same drift-guard idiom as
+//! `every_tunable_param_is_classified`).
+//!
+//! Snapshots are deterministic: entries merge across stripes into one
+//! name-sorted list, and both renderings ([`Snapshot::render_text`],
+//! [`Snapshot::render_json`]) are exact, versioned
+//! (`sparktune.metrics.v1`) byte-stable formats in the
+//! `service::profile` hand-rolled-serialization idiom.
+
+use super::trace::{json_f64, json_string};
+use crate::sim::SimStats;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Upper bounds (sim seconds, inclusive) of the histogram buckets; an
+/// eighth overflow bucket catches everything beyond. Log-scale, sized
+/// for simulated durations: mini workloads price in fractions of a
+/// second, crashed/straggler-bound jobs in the 1e4–1e5 range.
+pub const HIST_BOUNDS: [f64; 7] = [0.1, 1.0, 10.0, 100.0, 1e3, 1e4, 1e5];
+
+/// A sim-time histogram: observation count, sum, and cumulative-style
+/// counts per [`HIST_BOUNDS`] bucket plus overflow.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Hist {
+    pub count: u64,
+    pub sum: f64,
+    /// `buckets[i]` counts observations `<=` `HIST_BOUNDS[i]`-but-above
+    /// the previous bound; `buckets[7]` is the overflow bucket.
+    pub buckets: [u64; 8],
+}
+
+impl Hist {
+    fn observe(&mut self, secs: f64) {
+        self.count += 1;
+        self.sum += secs;
+        let i = HIST_BOUNDS.iter().position(|&b| secs <= b).unwrap_or(HIST_BOUNDS.len());
+        self.buckets[i] += 1;
+    }
+}
+
+/// One registered metric value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Value {
+    /// Monotone event count.
+    Counter(u64),
+    /// Last-write-wins level (bytes resident, hit rate, ...).
+    Gauge(f64),
+    /// Distribution of simulated durations.
+    Histogram(Hist),
+}
+
+/// Lock-striped metric store. A metric's name picks its stripe (FNV-1a
+/// hash), so unrelated hot counters never contend on one mutex; the
+/// number of stripes is invisible in every snapshot (pinned by test).
+pub struct Registry {
+    shards: Vec<Mutex<BTreeMap<String, Value>>>,
+}
+
+impl Registry {
+    /// A registry with `shards` lock stripes (min 1).
+    pub fn new(shards: usize) -> Registry {
+        Registry {
+            shards: (0..shards.max(1)).map(|_| Mutex::new(BTreeMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, name: &str) -> &Mutex<BTreeMap<String, Value>> {
+        // FNV-1a over the name bytes: stable across runs and platforms.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in name.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        &self.shards[(h % self.shards.len() as u64) as usize]
+    }
+
+    /// Add `v` to the counter `name` (created at 0). Registering a name
+    /// that currently holds a different metric kind replaces it — kinds
+    /// are fixed per name by convention, not enforcement.
+    pub fn counter_add(&self, name: &str, v: u64) {
+        let mut m = self.shard(name).lock().expect("metrics shard poisoned");
+        match m.get_mut(name) {
+            Some(Value::Counter(c)) => *c += v,
+            _ => {
+                m.insert(name.to_string(), Value::Counter(v));
+            }
+        }
+    }
+
+    /// Set the gauge `name` to `v` (last write wins).
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        self.shard(name)
+            .lock()
+            .expect("metrics shard poisoned")
+            .insert(name.to_string(), Value::Gauge(v));
+    }
+
+    /// Record one simulated duration into the histogram `name`.
+    pub fn observe(&self, name: &str, secs: f64) {
+        let mut m = self.shard(name).lock().expect("metrics shard poisoned");
+        match m.get_mut(name) {
+            Some(Value::Histogram(h)) => h.observe(secs),
+            _ => {
+                let mut h = Hist::default();
+                h.observe(secs);
+                m.insert(name.to_string(), Value::Histogram(h));
+            }
+        }
+    }
+
+    /// Absorb one run's [`SimStats`] under `prefix` (e.g. `"sim"` →
+    /// `sim.events`, `sim.completions`, ...). The exhaustive destructure
+    /// is the drift guard: adding a `SimStats` field without naming it
+    /// here fails to compile.
+    pub fn record_sim_stats(&self, prefix: &str, s: &SimStats) {
+        let SimStats {
+            events,
+            completions,
+            task_launches,
+            phase_transitions,
+            heap_pushes,
+            heap_pops,
+            heap_updates,
+            flow_rolls,
+            live_copy_event_sum,
+            admit_probes,
+            replayed_events,
+            forked_trials,
+            task_finishes,
+            spec_events,
+        } = *s;
+        for (field, v) in [
+            ("events", events),
+            ("completions", completions),
+            ("task_launches", task_launches),
+            ("phase_transitions", phase_transitions),
+            ("heap_pushes", heap_pushes),
+            ("heap_pops", heap_pops),
+            ("heap_updates", heap_updates),
+            ("flow_rolls", flow_rolls),
+            ("live_copy_event_sum", live_copy_event_sum),
+            ("admit_probes", admit_probes),
+            ("replayed_events", replayed_events),
+            ("forked_trials", forked_trials),
+            ("task_finishes", task_finishes),
+            ("spec_events", spec_events),
+        ] {
+            self.counter_add(&format!("{prefix}.{field}"), v);
+        }
+    }
+
+    /// Absorb the service counters (`service.*`, cache under
+    /// `service.cache.*`). Exhaustive destructure — same drift guard as
+    /// [`record_sim_stats`](Registry::record_sim_stats).
+    pub fn record_service_stats(&self, s: &crate::service::ServiceStats) {
+        let crate::service::ServiceStats {
+            sessions,
+            trials_requested,
+            trials_simulated,
+            coalesced,
+            warm_started,
+            warm_missed,
+            forked_trials,
+            replayed_events,
+            checkpoint_bytes,
+            fork_evictions,
+            cache,
+        } = *s;
+        let crate::service::CacheStats { hits, misses, inserts, evictions } = cache;
+        for (name, v) in [
+            ("service.sessions", sessions),
+            ("service.trials_requested", trials_requested),
+            ("service.trials_simulated", trials_simulated),
+            ("service.coalesced", coalesced),
+            ("service.warm_started", warm_started),
+            ("service.warm_missed", warm_missed),
+            ("service.forked_trials", forked_trials),
+            ("service.replayed_events", replayed_events),
+            ("service.fork_evictions", fork_evictions),
+            ("service.cache.hits", hits),
+            ("service.cache.misses", misses),
+            ("service.cache.inserts", inserts),
+            ("service.cache.evictions", evictions),
+        ] {
+            self.counter_add(name, v);
+        }
+        // Residency is a level, not an event count.
+        self.gauge_set("service.checkpoint_bytes", checkpoint_bytes as f64);
+    }
+
+    /// A point-in-time view: all metrics, merged across stripes, sorted
+    /// by name. Independent of the stripe count.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut merged = BTreeMap::new();
+        for shard in &self.shards {
+            let m = shard.lock().expect("metrics shard poisoned");
+            for (k, v) in m.iter() {
+                merged.insert(k.clone(), *v);
+            }
+        }
+        Snapshot { entries: merged.into_iter().collect() }
+    }
+}
+
+/// A name-sorted point-in-time copy of a [`Registry`]'s metrics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub entries: Vec<(String, Value)>,
+}
+
+impl Snapshot {
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.entries
+            .binary_search_by(|(k, _)| k.as_str().cmp(name))
+            .ok()
+            .map(|i| &self.entries[i].1)
+    }
+
+    /// The counter `name`, or 0 when absent (absent and never-incremented
+    /// are indistinguishable by design).
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.get(name) {
+            Some(Value::Counter(c)) => *c,
+            _ => 0,
+        }
+    }
+
+    /// Exact text rendering: a `sparktune.metrics.v1` header line, then
+    /// one sorted line per metric. Byte-stable for equal snapshots.
+    pub fn render_text(&self) -> String {
+        let mut out = String::from("sparktune.metrics.v1\n");
+        for (name, v) in &self.entries {
+            match v {
+                Value::Counter(c) => {
+                    out.push_str(&format!("counter {name} {c}\n"));
+                }
+                Value::Gauge(g) => {
+                    out.push_str("gauge ");
+                    out.push_str(name);
+                    out.push(' ');
+                    json_f64(&mut out, *g);
+                    out.push('\n');
+                }
+                Value::Histogram(h) => {
+                    out.push_str(&format!("histogram {name} count {} sum ", h.count));
+                    json_f64(&mut out, h.sum);
+                    for (i, b) in h.buckets.iter().enumerate() {
+                        match HIST_BOUNDS.get(i) {
+                            Some(bound) => out.push_str(&format!(" le{bound} {b}")),
+                            None => out.push_str(&format!(" inf {b}")),
+                        }
+                    }
+                    out.push('\n');
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact JSON rendering, same schema tag, same sort order.
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\"schema\":\"sparktune.metrics.v1\",\"metrics\":[");
+        for (i, (name, v)) in self.entries.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"name\":");
+            json_string(&mut out, name);
+            match v {
+                Value::Counter(c) => {
+                    out.push_str(",\"type\":\"counter\",\"value\":");
+                    out.push_str(&c.to_string());
+                }
+                Value::Gauge(g) => {
+                    out.push_str(",\"type\":\"gauge\",\"value\":");
+                    json_f64(&mut out, *g);
+                }
+                Value::Histogram(h) => {
+                    out.push_str(",\"type\":\"histogram\",\"count\":");
+                    out.push_str(&h.count.to_string());
+                    out.push_str(",\"sum\":");
+                    json_f64(&mut out, h.sum);
+                    out.push_str(",\"buckets\":[");
+                    for (j, b) in h.buckets.iter().enumerate() {
+                        if j > 0 {
+                            out.push(',');
+                        }
+                        out.push_str(&b.to_string());
+                    }
+                    out.push(']');
+                }
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_default_to_zero() {
+        let r = Registry::new(4);
+        r.counter_add("a.x", 3);
+        r.counter_add("a.x", 4);
+        let s = r.snapshot();
+        assert_eq!(s.counter("a.x"), 7);
+        assert_eq!(s.counter("never.touched"), 0);
+    }
+
+    #[test]
+    fn snapshot_is_invariant_in_the_stripe_count() {
+        let fill = |r: &Registry| {
+            for (i, name) in ["sim.events", "sim.flow_rolls", "svc.hits", "svc.misses"]
+                .iter()
+                .enumerate()
+            {
+                r.counter_add(name, (i as u64 + 1) * 10);
+            }
+            r.gauge_set("store.bytes", 4096.5);
+            r.observe("trial.duration", 0.05);
+            r.observe("trial.duration", 42.0);
+            r.observe("trial.duration", 2e6);
+        };
+        let (a, b) = (Registry::new(1), Registry::new(16));
+        fill(&a);
+        fill(&b);
+        assert_eq!(a.snapshot(), b.snapshot());
+        assert_eq!(a.snapshot().render_text(), b.snapshot().render_text());
+        assert_eq!(a.snapshot().render_json(), b.snapshot().render_json());
+    }
+
+    #[test]
+    fn histogram_buckets_by_log_bound_with_overflow() {
+        let r = Registry::new(2);
+        for secs in [0.05, 0.1, 0.5, 99.0, 5e4, 2e6] {
+            r.observe("d", secs);
+        }
+        let s = r.snapshot();
+        let Some(Value::Histogram(h)) = s.get("d") else { panic!("histogram missing") };
+        assert_eq!(h.count, 6);
+        assert_eq!(h.buckets, [2, 1, 0, 1, 0, 0, 1, 1]);
+        assert!((h.sum - (0.05 + 0.1 + 0.5 + 99.0 + 5e4 + 2e6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn text_and_json_renderings_are_pinned() {
+        let r = Registry::new(3);
+        r.counter_add("sim.events", 100);
+        r.gauge_set("store.bytes", 1024.0);
+        r.observe("trial.duration", 2.5);
+        let s = r.snapshot();
+        assert_eq!(
+            s.render_text(),
+            "sparktune.metrics.v1\n\
+             counter sim.events 100\n\
+             histogram trial.duration count 1 sum 2.5 le0.1 0 le1 0 le10 1 le100 0 \
+             le1000 0 le10000 0 le100000 0 inf 0\n\
+             gauge store.bytes 1024\n"
+        );
+        assert_eq!(
+            s.render_json(),
+            "{\"schema\":\"sparktune.metrics.v1\",\"metrics\":[\
+             {\"name\":\"sim.events\",\"type\":\"counter\",\"value\":100},\
+             {\"name\":\"trial.duration\",\"type\":\"histogram\",\"count\":1,\"sum\":2.5,\
+             \"buckets\":[0,0,1,0,0,0,0,0]},\
+             {\"name\":\"store.bytes\",\"type\":\"gauge\",\"value\":1024}]}"
+        );
+    }
+
+    #[test]
+    fn record_sim_stats_covers_every_field() {
+        let mut st = SimStats::default();
+        st.events = 10;
+        st.completions = 1;
+        st.task_launches = 4;
+        st.phase_transitions = 8;
+        st.heap_pushes = 4;
+        st.heap_pops = 4;
+        st.heap_updates = 2;
+        st.flow_rolls = 6;
+        st.live_copy_event_sum = 30;
+        st.admit_probes = 5;
+        st.replayed_events = 3;
+        st.forked_trials = 1;
+        st.task_finishes = 4;
+        st.spec_events = 2;
+        let r = Registry::new(2);
+        r.record_sim_stats("sim", &st);
+        r.record_sim_stats("sim", &st);
+        let s = r.snapshot();
+        // Every field lands under the prefix, and recording twice sums.
+        assert_eq!(s.counter("sim.events"), 20);
+        assert_eq!(s.counter("sim.admit_probes"), 10);
+        assert_eq!(s.counter("sim.spec_events"), 4);
+        let sim_entries = s.entries.iter().filter(|(k, _)| k.starts_with("sim.")).count();
+        assert_eq!(sim_entries, 14, "one counter per SimStats field");
+    }
+
+    #[test]
+    fn record_service_stats_covers_counters_cache_and_bytes() {
+        let st = crate::service::ServiceStats {
+            sessions: 2,
+            trials_requested: 20,
+            trials_simulated: 12,
+            coalesced: 3,
+            warm_started: 1,
+            warm_missed: 1,
+            forked_trials: 6,
+            replayed_events: 900,
+            checkpoint_bytes: 4096,
+            fork_evictions: 1,
+            cache: crate::service::CacheStats { hits: 5, misses: 15, inserts: 12, evictions: 0 },
+        };
+        let r = Registry::new(4);
+        r.record_service_stats(&st);
+        let s = r.snapshot();
+        assert_eq!(s.counter("service.trials_requested"), 20);
+        assert_eq!(s.counter("service.cache.hits"), 5);
+        assert_eq!(s.counter("service.fork_evictions"), 1);
+        assert_eq!(s.get("service.checkpoint_bytes"), Some(&Value::Gauge(4096.0)));
+    }
+}

@@ -1,0 +1,32 @@
+//! Observability plane: deterministic tracing and a crate-wide metrics
+//! registry.
+//!
+//! The crate's core invariant — bit-identical pricing in `(submission
+//! order, seed)` — extends to observation: *capturing* evidence must
+//! never perturb what is captured. Both halves of this module are built
+//! around that rule:
+//!
+//! * [`trace`] — a [`TraceSink`] recorder threaded through the event
+//!   core, the engine runners, the tuner, and the service. It emits a
+//!   span tree (session → trial → stage → task copy, plus fork-resume /
+//!   warm-start annotations and conf warnings) stamped with the **sim
+//!   clock** and a monotonic sequence number — never wall time — so two
+//!   runs of the same walk export byte-identical traces. The default
+//!   sink is null: every hook compiles to an `Option::is_some` check
+//!   and the hot path does no work at all.
+//! * [`metrics`] — a lock-striped [`Registry`] of named counters,
+//!   gauges, and sim-time histograms that absorbs the existing
+//!   [`SimStats`](crate::sim::SimStats) / service counters into one
+//!   queryable, versioned snapshot (`sparktune.metrics.v1`) rendered
+//!   through `report`.
+//!
+//! Exports are hand-rolled (offline image, no serde): Chrome-trace JSON
+//! for `chrome://tracing` / Perfetto, and a Spark-history-server-style
+//! JSON-lines event log, both in the exact-serialization idiom of
+//! `service::profile`.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Registry, Snapshot, Value};
+pub use trace::{SpanId, TraceEvent, TraceKind, TraceSink};

@@ -1,0 +1,530 @@
+//! Deterministic span-tree recorder for the simulated timeline.
+//!
+//! A [`TraceSink`] is either **null** (the default — every hook is a
+//! single `Option` check, the hot path does no work) or **buffered** —
+//! an arena of [`TraceEvent`]s behind an `Arc<Mutex<..>>`, cheap to
+//! clone and thread through the engine, tuner, and service layers.
+//!
+//! # Determinism contract
+//!
+//! Events are stamped with the *simulated* clock and a monotonic
+//! per-sink sequence number. Wall time never appears anywhere, so the
+//! exported artifacts are byte-stable: the same walk traced twice — or
+//! on any number of threads, as long as each walk owns its sink —
+//! produces identical bytes. The recorder is a pure observer: a traced
+//! run's results and [`SimStats`](crate::sim::SimStats) are
+//! bit-identical to the untraced run (pinned by the golden suite in
+//! `tests/observability.rs`).
+//!
+//! # Span tree
+//!
+//! Spans nest session → trial → job → stage → task copy. A span is
+//! *opened* ([`TraceSink::open`]) when its subject starts — this only
+//! allocates an id and a lane, no event — and *closed*
+//! ([`TraceSink::close`]) when it ends, emitting one complete-span
+//! event. Trial spans start a fresh lane (`track`); every descendant
+//! inherits its ancestor trial's lane, so a Chrome trace shows one row
+//! per trial. Annotations (fork-resume points, warm-start replays,
+//! speculation launches) are instant events; conf warnings get their
+//! own event kind.
+//!
+//! # Export formats
+//!
+//! * [`chrome_trace`](TraceSink::chrome_trace) — the Chrome trace-event
+//!   JSON format (`chrome://tracing`, Perfetto): complete `"X"` events
+//!   with microsecond timestamps, one `tid` per lane. Complete events
+//!   (not `B`/`E` pairs) because concurrently running stages overlap on
+//!   the sim clock — nesting is by time containment.
+//! * [`event_log`](TraceSink::event_log) — a Spark-history-server-style
+//!   JSON-lines log: one object per line, Spark listener event names
+//!   where a natural analogue exists (`SparkListenerTaskEnd`,
+//!   `SparkListenerStageCompleted`, ...), `SparkTune*` names otherwise.
+//!
+//! Both are hand-rolled with a fixed key order and shortest-roundtrip
+//! float formatting — byte-exact, versioned `sparktune.trace.v1`.
+
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+/// Events per arena chunk: appends never reallocate-and-copy the
+/// recorded prefix, so a long walk's push cost stays flat.
+const CHUNK: usize = 1024;
+
+/// Identifier of one open (or closed) span within a sink. `NONE` (the
+/// zero id) is the root: spans opened under it are top-level.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SpanId(pub u64);
+
+impl SpanId {
+    /// The root parent: not a span, has no lane, never closed.
+    pub const NONE: SpanId = SpanId(0);
+
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// What one recorded event is.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceKind {
+    /// A completed span: `[start, end]` on the sim clock.
+    Span { start: f64, end: f64 },
+    /// A point annotation at `at` on the sim clock.
+    Instant { at: f64 },
+    /// A configuration warning (no clock position — warnings surface
+    /// at parse time, before any simulation runs).
+    Warning,
+}
+
+/// One recorded event. `seq` is the monotonic emission index within the
+/// sink; `track` is the lane (0 = the session lane, `k` = trial `k`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub track: u32,
+    /// The span this event closes ([`SpanId::NONE`] for instants and
+    /// warnings).
+    pub span: SpanId,
+    pub parent: SpanId,
+    pub kind: TraceKind,
+    /// Category: `"session"`, `"trial"`, `"job"`, `"stage"`, `"task"`,
+    /// `"fork"`, `"warm-start"`, `"speculation"`, `"warning"`, ...
+    pub cat: &'static str,
+    pub name: String,
+}
+
+/// Lane bookkeeping for one opened span.
+#[derive(Clone, Copy)]
+struct SpanMeta {
+    parent: SpanId,
+    track: u32,
+}
+
+/// The buffered recorder state: a chunked event arena plus the span
+/// table.
+struct TraceBuf {
+    chunks: Vec<Vec<TraceEvent>>,
+    seq: u64,
+    spans: Vec<SpanMeta>,
+    trials: u32,
+}
+
+impl TraceBuf {
+    fn new() -> TraceBuf {
+        TraceBuf { chunks: Vec::new(), seq: 0, spans: Vec::new(), trials: 0 }
+    }
+
+    fn meta(&self, span: SpanId) -> SpanMeta {
+        if span.is_none() {
+            SpanMeta { parent: SpanId::NONE, track: 0 }
+        } else {
+            self.spans[span.0 as usize - 1]
+        }
+    }
+
+    fn open(&mut self, parent: SpanId, cat: &'static str) -> SpanId {
+        let track = if cat == "trial" {
+            self.trials += 1;
+            self.trials
+        } else {
+            self.meta(parent).track
+        };
+        self.spans.push(SpanMeta { parent, track });
+        SpanId(self.spans.len() as u64)
+    }
+
+    fn push(&mut self, span: SpanId, parent: SpanId, track: u32, kind: TraceKind, cat: &'static str, name: String) {
+        let seq = self.seq;
+        self.seq += 1;
+        if self.chunks.last().is_none_or(|c| c.len() >= CHUNK) {
+            self.chunks.push(Vec::with_capacity(CHUNK));
+        }
+        self.chunks
+            .last_mut()
+            .expect("chunk pushed above")
+            .push(TraceEvent { seq, track, span, parent, kind, cat, name });
+    }
+
+    fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.chunks.iter().flatten()
+    }
+}
+
+/// A cloneable handle on one trace recording — or on nothing at all.
+/// The null sink ([`TraceSink::null`], also `Default`) makes every
+/// recording hook a no-op; [`TraceSink::buffered`] records into a
+/// shared arena. Clones share the same buffer, so one sink can be
+/// threaded through the tuner, the engine runners, and the event core
+/// of every trial of a walk.
+#[derive(Clone, Default)]
+pub struct TraceSink(Option<Arc<Mutex<TraceBuf>>>);
+
+impl fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.0 {
+            None => f.write_str("TraceSink(null)"),
+            Some(b) => {
+                let len = b.lock().map(|b| b.seq).unwrap_or(0);
+                write!(f, "TraceSink(buffered, {len} events)")
+            }
+        }
+    }
+}
+
+impl TraceSink {
+    /// The no-op sink: recording hooks do nothing, exports are empty.
+    pub fn null() -> TraceSink {
+        TraceSink(None)
+    }
+
+    /// A recording sink backed by a fresh shared buffer.
+    pub fn buffered() -> TraceSink {
+        TraceSink(Some(Arc::new(Mutex::new(TraceBuf::new()))))
+    }
+
+    /// `true` when events are actually recorded. Hot-path hooks guard
+    /// on this so the null sink costs one branch and zero allocations.
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    fn with<T: Default>(&self, f: impl FnOnce(&mut TraceBuf) -> T) -> T {
+        match &self.0 {
+            None => T::default(),
+            Some(b) => f(&mut b.lock().expect("trace buffer poisoned")),
+        }
+    }
+
+    /// Allocate a span id (and its lane) under `parent`. Emits no
+    /// event — the span appears in the export when it is
+    /// [`close`](Self::close)d. On the null sink returns
+    /// [`SpanId::NONE`].
+    pub fn open(&self, parent: SpanId, cat: &'static str) -> SpanId {
+        self.with(|b| b.open(parent, cat))
+    }
+
+    /// Close `span`, emitting its complete-span event over
+    /// `[start, end]` on the sim clock. Closing [`SpanId::NONE`] (an
+    /// id handed out by a null sink) is a no-op.
+    pub fn close(&self, span: SpanId, cat: &'static str, name: &str, start: f64, end: f64) {
+        if span.is_none() {
+            return;
+        }
+        self.with(|b| {
+            let m = b.meta(span);
+            b.push(span, m.parent, m.track, TraceKind::Span { start, end }, cat, name.to_string());
+        });
+    }
+
+    /// Open-and-close in one call: a span whose start and end are both
+    /// known at emission time (task copies, for example). Returns the
+    /// span id for reference.
+    pub fn span(&self, parent: SpanId, cat: &'static str, name: &str, start: f64, end: f64) -> SpanId {
+        self.with(|b| {
+            let span = b.open(parent, cat);
+            let m = b.meta(span);
+            b.push(span, m.parent, m.track, TraceKind::Span { start, end }, cat, name.to_string());
+            span
+        })
+    }
+
+    /// A point annotation under `parent` at sim clock `at`.
+    pub fn instant(&self, parent: SpanId, cat: &'static str, name: &str, at: f64) {
+        self.with(|b| {
+            let track = b.meta(parent).track;
+            b.push(SpanId::NONE, parent, track, TraceKind::Instant { at }, cat, name.to_string());
+        });
+    }
+
+    /// A configuration warning event (lane 0, no clock position).
+    pub fn warning(&self, message: &str) {
+        self.with(|b| {
+            b.push(SpanId::NONE, SpanId::NONE, 0, TraceKind::Warning, "warning", message.to_string());
+        });
+    }
+
+    /// Events recorded so far (cloned out, in emission order).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.with(|b| b.events().cloned().collect())
+    }
+
+    /// Number of events recorded so far (0 on the null sink).
+    pub fn len(&self) -> u64 {
+        self.with(|b| b.seq)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    // ---- exports ----
+
+    /// The recording in Chrome trace-event JSON (`chrome://tracing`,
+    /// Perfetto). Complete `"X"` events with microsecond `ts`/`dur`,
+    /// `pid` 1, one `tid` per lane; instants are `"i"` events. Byte
+    /// deterministic in the recorded stream.
+    pub fn chrome_trace(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        let mut first = true;
+        self.with(|b| {
+            for e in b.events() {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                out.push_str("{\"name\":");
+                json_string(&mut out, &e.name);
+                out.push_str(",\"cat\":");
+                json_string(&mut out, e.cat);
+                match e.kind {
+                    TraceKind::Span { start, end } => {
+                        out.push_str(",\"ph\":\"X\",\"ts\":");
+                        json_f64(&mut out, start * 1e6);
+                        out.push_str(",\"dur\":");
+                        json_f64(&mut out, (end - start) * 1e6);
+                    }
+                    TraceKind::Instant { at } => {
+                        out.push_str(",\"ph\":\"i\",\"s\":\"t\",\"ts\":");
+                        json_f64(&mut out, at * 1e6);
+                    }
+                    TraceKind::Warning => {
+                        out.push_str(",\"ph\":\"i\",\"s\":\"g\",\"ts\":0");
+                    }
+                }
+                out.push_str(",\"pid\":1,\"tid\":");
+                out.push_str(&e.track.to_string());
+                out.push_str(",\"args\":{\"seq\":");
+                out.push_str(&e.seq.to_string());
+                out.push_str("}}");
+            }
+        });
+        out.push_str("],\"displayTimeUnit\":\"ms\",\"otherData\":{\"schema\":\"sparktune.trace.v1\"}}");
+        out
+    }
+
+    /// The recording as a Spark-history-server-style event log: one
+    /// JSON object per line, headed by a `SparkTuneTraceStart` schema
+    /// line. Span categories with a Spark listener analogue use its
+    /// event name; everything else is a `SparkTune*` event. Fixed key
+    /// order, byte deterministic.
+    pub fn event_log(&self) -> String {
+        let mut out =
+            String::from("{\"Event\":\"SparkTuneTraceStart\",\"Schema\":\"sparktune.trace.v1\"}\n");
+        self.with(|b| {
+            for e in b.events() {
+                match e.kind {
+                    TraceKind::Span { start, end } => {
+                        let (event, t0, t1) = match e.cat {
+                            "task" => ("SparkListenerTaskEnd", "Launch Time", "Finish Time"),
+                            "stage" => {
+                                ("SparkListenerStageCompleted", "Submission Time", "Completion Time")
+                            }
+                            "job" => ("SparkListenerJobEnd", "Submission Time", "Completion Time"),
+                            "trial" => ("SparkTuneTrialCompleted", "Start Time", "Finish Time"),
+                            "session" => ("SparkTuneSessionCompleted", "Start Time", "Finish Time"),
+                            _ => ("SparkTuneSpan", "Start Time", "Finish Time"),
+                        };
+                        out.push_str("{\"Event\":\"");
+                        out.push_str(event);
+                        out.push_str("\",\"Seq\":");
+                        out.push_str(&e.seq.to_string());
+                        out.push_str(",\"Track\":");
+                        out.push_str(&e.track.to_string());
+                        if event == "SparkTuneSpan" {
+                            out.push_str(",\"Category\":");
+                            json_string(&mut out, e.cat);
+                        }
+                        out.push_str(",\"Name\":");
+                        json_string(&mut out, &e.name);
+                        out.push_str(",\"");
+                        out.push_str(t0);
+                        out.push_str("\":");
+                        json_f64(&mut out, start);
+                        out.push_str(",\"");
+                        out.push_str(t1);
+                        out.push_str("\":");
+                        json_f64(&mut out, end);
+                        out.push_str("}\n");
+                    }
+                    TraceKind::Instant { at } => {
+                        out.push_str("{\"Event\":\"SparkTuneAnnotation\",\"Seq\":");
+                        out.push_str(&e.seq.to_string());
+                        out.push_str(",\"Track\":");
+                        out.push_str(&e.track.to_string());
+                        out.push_str(",\"Category\":");
+                        json_string(&mut out, e.cat);
+                        out.push_str(",\"Name\":");
+                        json_string(&mut out, &e.name);
+                        out.push_str(",\"Time\":");
+                        json_f64(&mut out, at);
+                        out.push_str("}\n");
+                    }
+                    TraceKind::Warning => {
+                        out.push_str("{\"Event\":\"SparkTuneWarning\",\"Seq\":");
+                        out.push_str(&e.seq.to_string());
+                        out.push_str(",\"Message\":");
+                        json_string(&mut out, &e.name);
+                        out.push_str("}\n");
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+/// Append `s` as a JSON string literal (quotes, backslashes, and
+/// control characters escaped).
+pub(crate) fn json_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Append `x` as a JSON number. Rust's `Display` for `f64` is the
+/// shortest decimal that round-trips and never uses exponent notation,
+/// so the rendering is deterministic and valid JSON; non-finite values
+/// (no JSON encoding) become `null`.
+pub(crate) fn json_f64(out: &mut String, x: f64) {
+    if x.is_finite() {
+        out.push_str(&format!("{x}"));
+    } else {
+        out.push_str("null");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_records_nothing_and_allocates_no_spans() {
+        let t = TraceSink::null();
+        assert!(!t.enabled());
+        let s = t.open(SpanId::NONE, "session");
+        assert!(s.is_none());
+        t.close(s, "session", "x", 0.0, 1.0);
+        t.span(s, "task", "t", 0.0, 1.0);
+        t.instant(s, "fork", "resume", 0.5);
+        t.warning("w");
+        assert_eq!(t.len(), 0);
+        assert!(t.events().is_empty());
+        assert_eq!(t.chrome_trace(), TraceSink::buffered().chrome_trace());
+    }
+
+    #[test]
+    fn trial_spans_get_their_own_lane_and_descendants_inherit_it() {
+        let t = TraceSink::buffered();
+        let session = t.open(SpanId::NONE, "session");
+        let t1 = t.open(session, "trial");
+        let t2 = t.open(session, "trial");
+        let s1 = t.open(t1, "stage");
+        t.close(s1, "stage", "map", 0.0, 2.0);
+        t.span(s1, "task", "task 0", 0.0, 1.0);
+        t.close(t1, "trial", "kryo", 0.0, 2.0);
+        t.close(t2, "trial", "compress", 0.0, 3.0);
+        t.close(session, "session", "tune", 0.0, 3.0);
+        let ev = t.events();
+        let track_of = |name: &str| ev.iter().find(|e| e.name == name).unwrap().track;
+        assert_eq!(track_of("tune"), 0, "session stays on lane 0");
+        assert_eq!(track_of("kryo"), 1, "first trial opens lane 1");
+        assert_eq!(track_of("compress"), 2);
+        assert_eq!(track_of("map"), 1, "stage inherits its trial's lane");
+        assert_eq!(track_of("task 0"), 1, "task inherits through the stage");
+        // Seqs are monotonic in emission order.
+        for (i, e) in ev.iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+        }
+    }
+
+    #[test]
+    fn identical_recordings_export_identical_bytes() {
+        let build = || {
+            let t = TraceSink::buffered();
+            let s = t.open(SpanId::NONE, "session");
+            let tr = t.open(s, "trial");
+            t.instant(tr, "fork", "resume @1.5 (12 events replayed)", 1.5);
+            t.span(tr, "task", "task 7 (clone)", 0.25, 1.75);
+            t.close(tr, "trial", "step spark.serializer", 0.0, 2.5);
+            t.warning("unknown key spark.yarn.queue");
+            t.close(s, "session", "tune", 0.0, 2.5);
+            t
+        };
+        let (a, b) = (build(), build());
+        assert_eq!(a.chrome_trace(), b.chrome_trace());
+        assert_eq!(a.event_log(), b.event_log());
+        assert_eq!(a.events(), b.events());
+    }
+
+    #[test]
+    fn chrome_trace_and_event_log_shapes_are_pinned() {
+        let t = TraceSink::buffered();
+        let s = t.open(SpanId::NONE, "session");
+        let st = t.open(s, "stage");
+        t.close(st, "stage", "sort \"by\" key", 0.5, 2.0);
+        t.instant(s, "warm-start", "replay", 0.0);
+        t.warning("bad");
+        t.close(s, "session", "tune", 0.0, 2.0);
+        let chrome = t.chrome_trace();
+        assert!(chrome.starts_with("{\"traceEvents\":["));
+        assert!(chrome.contains(
+            "{\"name\":\"sort \\\"by\\\" key\",\"cat\":\"stage\",\"ph\":\"X\",\"ts\":500000,\
+             \"dur\":1500000,\"pid\":1,\"tid\":0,\"args\":{\"seq\":0}}"
+        ));
+        assert!(chrome.ends_with(
+            "],\"displayTimeUnit\":\"ms\",\"otherData\":{\"schema\":\"sparktune.trace.v1\"}}"
+        ));
+        let log = t.event_log();
+        let lines: Vec<&str> = log.lines().collect();
+        assert_eq!(
+            lines[0],
+            "{\"Event\":\"SparkTuneTraceStart\",\"Schema\":\"sparktune.trace.v1\"}"
+        );
+        assert_eq!(
+            lines[1],
+            "{\"Event\":\"SparkListenerStageCompleted\",\"Seq\":0,\"Track\":0,\
+             \"Name\":\"sort \\\"by\\\" key\",\"Submission Time\":0.5,\"Completion Time\":2}"
+        );
+        assert_eq!(
+            lines[2],
+            "{\"Event\":\"SparkTuneAnnotation\",\"Seq\":1,\"Track\":0,\
+             \"Category\":\"warm-start\",\"Name\":\"replay\",\"Time\":0}"
+        );
+        assert_eq!(lines[3], "{\"Event\":\"SparkTuneWarning\",\"Seq\":2,\"Message\":\"bad\"}");
+        assert_eq!(
+            lines[4],
+            "{\"Event\":\"SparkTuneSessionCompleted\",\"Seq\":3,\"Track\":0,\
+             \"Name\":\"tune\",\"Start Time\":0,\"Finish Time\":2}"
+        );
+    }
+
+    #[test]
+    fn non_finite_times_render_as_null() {
+        let t = TraceSink::buffered();
+        let s = t.open(SpanId::NONE, "trial");
+        t.close(s, "trial", "crashed", 0.0, f64::INFINITY);
+        assert!(t.chrome_trace().contains("\"dur\":null"));
+        assert!(t.event_log().contains("\"Finish Time\":null"));
+    }
+
+    #[test]
+    fn clones_share_one_buffer() {
+        let t = TraceSink::buffered();
+        let c = t.clone();
+        c.warning("from the clone");
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.events()[0].name, "from the clone");
+    }
+}

@@ -2,6 +2,7 @@
 //! markdown tables (Table 2, case studies, event-core hot-path counters)
 //! and CSV export.
 
+use crate::obs::{Registry, Snapshot, Value};
 use crate::sim::SimStats;
 use std::fmt::Write as _;
 
@@ -138,23 +139,68 @@ impl Table {
 /// queue's speedup shows up as `PS flow rolls` (dirty-resource touches)
 /// undercutting `rescan-equivalent work` (live copies × events, what a
 /// per-event rescan would have touched).
+///
+/// A *view over the metrics registry*: the stats are absorbed into a
+/// [`Registry`] under the `sim.` prefix and the rows are read back from
+/// the [`Snapshot`] — one rendering path whether the counters come from
+/// a single run, a `perf-smoke` aggregate, or a live registry.
 pub fn sim_stats_table(s: &SimStats) -> Table {
+    let reg = Registry::new(1);
+    reg.record_sim_stats("sim", s);
+    sim_stats_view(&reg.snapshot())
+}
+
+/// The [`sim_stats_table`] rows read from a snapshot that already holds
+/// `sim.*` counters (derived rows are computed from the counters, so
+/// the table stays consistent with whatever the registry absorbed).
+pub fn sim_stats_view(snap: &Snapshot) -> Table {
+    let c = |k: &str| snap.counter(k);
     Table::two_col(
         "Event-core hot path",
         &[
-            ("events processed", s.events.to_string()),
-            ("stage completions", s.completions.to_string()),
-            ("task copies launched", s.task_launches.to_string()),
-            ("phase transitions", s.phase_transitions.to_string()),
+            ("events processed", c("sim.events").to_string()),
+            ("stage completions", c("sim.completions").to_string()),
+            ("task copies launched", c("sim.task_launches").to_string()),
+            ("phase transitions", c("sim.phase_transitions").to_string()),
             (
                 "heap ops (push / pop / re-key)",
-                format!("{} / {} / {}", s.heap_pushes, s.heap_pops, s.heap_updates),
+                format!(
+                    "{} / {} / {}",
+                    c("sim.heap_pushes"),
+                    c("sim.heap_pops"),
+                    c("sim.heap_updates")
+                ),
             ),
-            ("PS flow rolls (dirty touches)", s.flow_rolls.to_string()),
-            ("rescan-equivalent work", s.live_copy_event_sum.to_string()),
-            ("scan work saved", s.scan_work_saved().to_string()),
+            ("PS flow rolls (dirty touches)", c("sim.flow_rolls").to_string()),
+            ("rescan-equivalent work", c("sim.live_copy_event_sum").to_string()),
+            (
+                "scan work saved",
+                c("sim.live_copy_event_sum").saturating_sub(c("sim.flow_rolls")).to_string(),
+            ),
         ],
     )
+}
+
+/// Render an entire metrics [`Snapshot`] as a `metric | value` table
+/// (counters and gauges one row each, histograms as `count / sum`).
+pub fn metrics_table(title: impl Into<String>, snap: &Snapshot) -> Table {
+    let rows: Vec<(String, String)> = snap
+        .entries
+        .iter()
+        .map(|(name, v)| {
+            let rendered = match v {
+                Value::Counter(c) => c.to_string(),
+                Value::Gauge(g) => format!("{g}"),
+                Value::Histogram(h) => format!("{} obs / {} s total", h.count, h.sum),
+            };
+            (name.clone(), rendered)
+        })
+        .collect();
+    Table {
+        title: title.into(),
+        header: vec!["metric".into(), "value".into()],
+        rows: rows.into_iter().map(|(k, v)| vec![k, v]).collect(),
+    }
 }
 
 fn csv_escape(s: &str) -> String {

@@ -44,9 +44,11 @@ use crate::conf::SparkConf;
 use crate::engine::{
     prepare, run, run_planned, run_planned_from, run_planned_recording, ForkPoint, Job, JobPlan,
 };
+use crate::obs::SpanId;
 use crate::sim::SimOpts;
 use crate::tuner::{
-    tune, TrialExecutor, TuneOpts, TuneOutcome, WarmStart, DEFAULT_FORK_BUDGET_BYTES,
+    tune, RunProvenance, Runner, TrialExecutor, TuneOpts, TuneOutcome, WarmStart,
+    DEFAULT_FORK_BUDGET_BYTES,
 };
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -327,6 +329,35 @@ struct Admitted<'r> {
     warm_from: Option<String>,
 }
 
+/// The [`Runner`] one session drives: every trial goes through the
+/// memoized service path, and the decision record of the most recent
+/// trial (cache/coalesce hit vs fork-resume vs full pricing) is kept
+/// for [`tune`] to attach to the [`crate::tuner::Trial`]. Unplannable
+/// jobs fall back to the plan-per-trial path, which prices the failure
+/// as a crash (INFINITY) — the same outcome a direct `tune` would see.
+struct ServiceRunner<'s> {
+    svc: &'s TuningService,
+    job: &'s Job,
+    plan: Option<Arc<JobPlan>>,
+    sim: &'s SimOpts,
+    last_prov: Option<RunProvenance>,
+}
+
+impl Runner for ServiceRunner<'_> {
+    fn run(&mut self, conf: &SparkConf) -> f64 {
+        let (v, prov) = match &self.plan {
+            Some(plan) => self.svc.evaluate_planned_prov(self.job, plan, conf, self.sim),
+            None => self.svc.evaluate_prov(self.job, conf, self.sim),
+        };
+        self.last_prov = Some(prov);
+        v
+    }
+
+    fn last_provenance(&self) -> Option<RunProvenance> {
+        self.last_prov
+    }
+}
+
 impl TuningService {
     pub fn new(cluster: ClusterSpec, opts: ServiceOpts) -> TuningService {
         TuningService {
@@ -393,6 +424,15 @@ impl TuningService {
                                     tune_opts.warm_start =
                                         Some(WarmStart { steps: n.record.kept_steps.clone() });
                                     warm_from = Some(n.record.name.clone());
+                                    // Annotate the session's recorder at
+                                    // admission — deterministic request
+                                    // order even if sessions share a sink.
+                                    tune_opts.trace.instant(
+                                        SpanId::NONE,
+                                        "warm-start",
+                                        &format!("evidence from '{}'", n.record.name),
+                                        0.0,
+                                    );
                                     self.warm_started.fetch_add(1, Ordering::Relaxed);
                                 }
                                 None => {
@@ -416,12 +456,12 @@ impl TuningService {
                 Some(p) => Some(Arc::clone(p)),
                 None => prepare(&adm.req.job).ok(),
             };
-            let mut runner = |conf: &SparkConf| match &plan {
-                Some(plan) => self.evaluate_planned(&adm.req.job, plan, conf, &adm.req.sim),
-                // Unplannable jobs fall back to the plan-per-trial path,
-                // which prices the failure as a crash (INFINITY) — the
-                // same outcome a direct `tune` would see.
-                None => self.evaluate(&adm.req.job, conf, &adm.req.sim),
+            let mut runner = ServiceRunner {
+                svc: self,
+                job: &adm.req.job,
+                plan,
+                sim: &adm.req.sim,
+                last_prov: None,
             };
             tune(&mut runner, &adm.tune)
         });
@@ -473,8 +513,32 @@ impl TuningService {
     /// [`evaluate_planned`](TuningService::evaluate_planned) to share
     /// one plan across all of a job's trials.
     pub fn evaluate(&self, job: &Job, conf: &SparkConf, sim: &SimOpts) -> f64 {
+        self.evaluate_prov(job, conf, sim).0
+    }
+
+    /// [`evaluate`](TuningService::evaluate) plus the trial's decision
+    /// record. `memoized: true` means this call never touched the
+    /// simulator — a cache hit or a coalesced join onto another
+    /// session's in-flight computation.
+    pub fn evaluate_prov(
+        &self,
+        job: &Job,
+        conf: &SparkConf,
+        sim: &SimOpts,
+    ) -> (f64, RunProvenance) {
         let fp = fingerprint_trial(job, conf, &self.cluster, sim);
-        self.memoized(fp, || run(job, conf, &self.cluster, sim).effective_duration())
+        let mut ran: Option<RunProvenance> = None;
+        let v = self.memoized(fp, || {
+            let res = run(job, conf, &self.cluster, sim);
+            ran = Some(RunProvenance {
+                memoized: false,
+                forked: false,
+                replayed_events: 0,
+                processed_events: res.sim.events,
+            });
+            res.effective_duration()
+        });
+        (v, ran.unwrap_or(RunProvenance { memoized: true, ..RunProvenance::default() }))
     }
 
     /// [`evaluate`](TuningService::evaluate) with a pre-planned job: the
@@ -493,8 +557,27 @@ impl TuningService {
         conf: &SparkConf,
         sim: &SimOpts,
     ) -> f64 {
+        self.evaluate_planned_prov(job, plan, conf, sim).0
+    }
+
+    /// [`evaluate_planned`](TuningService::evaluate_planned) plus the
+    /// trial's decision record (see
+    /// [`evaluate_prov`](TuningService::evaluate_prov)).
+    pub fn evaluate_planned_prov(
+        &self,
+        job: &Job,
+        plan: &Arc<JobPlan>,
+        conf: &SparkConf,
+        sim: &SimOpts,
+    ) -> (f64, RunProvenance) {
         let fp = fingerprint_trial(job, conf, &self.cluster, sim);
-        self.memoized(fp, || self.price_planned(job, plan, conf, sim))
+        let mut ran: Option<RunProvenance> = None;
+        let v = self.memoized(fp, || {
+            let (d, p) = self.price_planned(job, plan, conf, sim);
+            ran = Some(p);
+            d
+        });
+        (v, ran.unwrap_or(RunProvenance { memoized: true, ..RunProvenance::default() }))
     }
 
     /// Price one cache-missed planned trial: resume the fork family's
@@ -506,9 +589,16 @@ impl TuningService {
         plan: &Arc<JobPlan>,
         conf: &SparkConf,
         sim: &SimOpts,
-    ) -> f64 {
+    ) -> (f64, RunProvenance) {
         if self.full_reprice {
-            return run_planned(plan, conf, &self.cluster, sim).effective_duration();
+            let res = run_planned(plan, conf, &self.cluster, sim);
+            let prov = RunProvenance {
+                memoized: false,
+                forked: false,
+                replayed_events: 0,
+                processed_events: res.sim.events,
+            };
+            return (res.effective_duration(), prov);
         }
         let fk = fingerprint_fork(job, conf, &self.cluster, sim);
         let stored = self.forks.lock().expect("fork store poisoned").get(fk);
@@ -516,7 +606,13 @@ impl TuningService {
             if let Some(res) = run_planned_from(&fork, plan, conf, &self.cluster, sim) {
                 self.forked.fetch_add(1, Ordering::Relaxed);
                 self.replayed.fetch_add(res.sim.replayed_events, Ordering::Relaxed);
-                return res.effective_duration();
+                let prov = RunProvenance {
+                    memoized: false,
+                    forked: true,
+                    replayed_events: res.sim.replayed_events,
+                    processed_events: res.sim.processed_events(),
+                };
+                return (res.effective_duration(), prov);
             }
         }
         let (res, fork) = run_planned_recording(plan, conf, &self.cluster, sim);
@@ -526,7 +622,13 @@ impl TuningService {
             // whatever corner of the conf space the walk is exploring.
             self.forks.lock().expect("fork store poisoned").insert(fk, Arc::new(fork));
         }
-        res.effective_duration()
+        let prov = RunProvenance {
+            memoized: false,
+            forked: false,
+            replayed_events: 0,
+            processed_events: res.sim.events,
+        };
+        (res.effective_duration(), prov)
     }
 
     /// The memoization core, generic over the computation so tests can

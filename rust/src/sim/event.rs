@@ -91,6 +91,7 @@
 
 use super::{Phase, SimOpts, StageStats, TaskSpec};
 use crate::cluster::{ClusterSpec, NodeId};
+use crate::obs::{SpanId, TraceSink};
 use crate::util::stats::Summary;
 use crate::util::Prng;
 use std::cmp::Ordering;
@@ -899,6 +900,15 @@ pub struct EventSim<'a> {
     stats: SimStats,
     /// Reused scratch for same-event finisher collection.
     finished_scratch: Vec<u32>,
+    /// Observability recorder (null by default — a one-branch no-op).
+    /// Deliberately *not* part of [`SimCheckpoint`]: observation is
+    /// never value state, so resumed cores start with a fresh (null)
+    /// sink and the engine re-attaches its own.
+    trace: TraceSink,
+    /// Trace span bound to each stage handle ([`SpanId::NONE`] when the
+    /// stage was submitted before tracing attached, e.g. a resumed
+    /// prefix).
+    stage_spans: Vec<SpanId>,
 }
 
 /// A full, owned snapshot of an [`EventSim`]'s mutable state, taken at a
@@ -1215,7 +1225,32 @@ impl<'a> EventSim<'a> {
             admit_dirty: false,
             stats: SimStats::default(),
             finished_scratch: Vec::new(),
+            trace: TraceSink::null(),
+            stage_spans: Vec::new(),
         }
+    }
+
+    /// Attach an observability recorder: task-copy spans (winners,
+    /// cancelled losers) and speculation instants are emitted under the
+    /// spans bound via [`bind_trace_span`](Self::bind_trace_span). The
+    /// recorder is a pure observer — attaching one never changes the
+    /// timeline, the results, or the [`SimStats`] counters (pinned by
+    /// the observability golden suite).
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
+    }
+
+    /// Bind stage `handle`'s trace span: task-copy events of that stage
+    /// are parented under it.
+    pub fn bind_trace_span(&mut self, handle: StageHandle, span: SpanId) {
+        if self.stage_spans.len() <= handle {
+            self.stage_spans.resize(handle + 1, SpanId::NONE);
+        }
+        self.stage_spans[handle] = span;
+    }
+
+    fn stage_span(&self, h: usize) -> SpanId {
+        self.stage_spans.get(h).copied().unwrap_or(SpanId::NONE)
     }
 
     /// Current event-clock time (seconds, simulated).
@@ -1325,6 +1360,8 @@ impl<'a> EventSim<'a> {
             admit_dirty: cp.admit_dirty,
             stats,
             finished_scratch: Vec::new(),
+            trace: TraceSink::null(),
+            stage_spans: Vec::new(),
         }
     }
 
@@ -1868,9 +1905,12 @@ impl<'a> EventSim<'a> {
         }
         self.slots[slot as usize].phase_idx += 1;
         if !self.enter_next_phase(slot) {
-            let sibling = self.slots[slot as usize].sibling;
+            let (sibling, is_clone) = {
+                let r = &self.slots[slot as usize];
+                (r.sibling, r.is_clone)
+            };
             self.free_slot(slot);
-            self.finish_task(h, ti, node, started, sibling);
+            self.finish_task(h, ti, node, started, sibling, is_clone);
         }
     }
 
@@ -1981,7 +2021,23 @@ impl<'a> EventSim<'a> {
     /// (started at `started`; `sibling` is the winner's recorded racing
     /// partner, if a backup was launched). Cancels the losing sibling,
     /// if it is still running.
-    fn finish_task(&mut self, h: usize, ti: usize, node: NodeId, started: f64, sibling: u32) {
+    fn finish_task(
+        &mut self,
+        h: usize,
+        ti: usize,
+        node: NodeId,
+        started: f64,
+        sibling: u32,
+        is_clone: bool,
+    ) {
+        if self.trace.enabled() {
+            let name = if is_clone {
+                format!("task {ti} (clone won)")
+            } else {
+                format!("task {ti}")
+            };
+            self.trace.span(self.stage_span(h), "task", &name, started, self.now);
+        }
         self.give_core(node);
         self.stats.task_finishes += 1;
         let job = self.stages[h].job;
@@ -2048,6 +2104,16 @@ impl<'a> EventSim<'a> {
             self.end_flow(slot);
         } else if is_cpu {
             self.stages[h].cpu_secs -= left;
+        }
+        if self.trace.enabled() {
+            let started = self.slots[slot as usize].started;
+            self.trace.span(
+                self.stage_span(h),
+                "task",
+                &format!("task {ti} (cancelled)"),
+                started,
+                self.now,
+            );
         }
         self.free_slot(slot);
         self.give_core(node);
@@ -2298,7 +2364,7 @@ impl<'a> EventSim<'a> {
             // Zero-work copy: wins (or finishes) immediately.
             let sib = self.slots[slot as usize].sibling;
             self.free_slot(slot);
-            self.finish_task(h, ti, node, self.now, sib);
+            self.finish_task(h, ti, node, self.now, sib, is_clone);
         }
     }
 
@@ -2360,6 +2426,14 @@ impl<'a> EventSim<'a> {
                 let st = &mut self.stages[h];
                 st.cloned[ti] = true;
                 st.speculated += 1;
+            }
+            if self.trace.enabled() {
+                self.trace.instant(
+                    self.stage_span(h),
+                    "speculation",
+                    &format!("speculate task {ti} -> node {node}"),
+                    self.now,
+                );
             }
             self.launch_copy(h, ti, node, true, orig_slot);
             if self.free_core_total <= 0 {

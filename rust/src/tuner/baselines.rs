@@ -75,9 +75,9 @@ pub fn exhaustive(runner: &mut dyn Runner) -> TuneOutcome {
             best = t;
             best_conf = conf.clone();
         }
-        trials.push(Trial { step: "grid", delta: Vec::new(), duration: t, improvement, kept });
+        trials.push(Trial { step: "grid", delta: Vec::new(), duration: t, improvement, kept, provenance: None });
     }
-    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0 }
+    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0, baseline_provenance: None }
 }
 
 /// [`exhaustive`] with the trial runs fanned out over `exec`'s threads.
@@ -127,9 +127,9 @@ fn fold_trials(confs: Vec<SparkConf>, results: Vec<f64>, step: &'static str) -> 
             best = t;
             best_conf = conf.clone();
         }
-        trials.push(Trial { step, delta: Vec::new(), duration: t, improvement, kept });
+        trials.push(Trial { step, delta: Vec::new(), duration: t, improvement, kept, provenance: None });
     }
-    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0 }
+    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0, baseline_provenance: None }
 }
 
 /// Uniform random search over the grid with `budget` evaluations.
@@ -148,9 +148,9 @@ pub fn random_search(runner: &mut dyn Runner, budget: usize, seed: u64) -> TuneO
             best = t;
             best_conf = conf.clone();
         }
-        trials.push(Trial { step: "random", delta: Vec::new(), duration: t, improvement, kept });
+        trials.push(Trial { step: "random", delta: Vec::new(), duration: t, improvement, kept, provenance: None });
     }
-    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0 }
+    TuneOutcome { best_conf, baseline, best, trials, threshold: 0.0, baseline_provenance: None }
 }
 
 #[cfg(test)]

@@ -40,16 +40,45 @@ pub use parallel::TrialExecutor;
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
+use crate::engine::fork::run_planned_from_with_traced;
 use crate::engine::{
-    run_planned, run_planned_from_with, run_planned_recording, ForkPoint, JobPlan, JobResult,
+    run_planned_recording_traced, run_planned_traced, ForkPoint, JobPlan, JobResult,
 };
+use crate::obs::{SpanId, TraceSink};
 use crate::sim::SimOpts;
 use std::sync::Arc;
+
+/// How one trial's number was actually produced — the decision record
+/// behind `tune --explain`. Provenance is *observation only*: it never
+/// feeds back into tuning decisions, and two runs that price the same
+/// trial differently (memo hit vs fork vs full) still return
+/// bit-identical durations.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RunProvenance {
+    /// Served from the service memo cache without simulating.
+    pub memoized: bool,
+    /// Resumed a recorded timeline at the first conf-divergent event.
+    pub forked: bool,
+    /// Events inherited from the checkpoint (zero unless `forked`).
+    pub replayed_events: u64,
+    /// Events the event core actually processed for this trial.
+    pub processed_events: u64,
+}
 
 /// Maps a candidate configuration to its effective runtime in seconds
 /// (`f64::INFINITY` for crashed runs).
 pub trait Runner {
     fn run(&mut self, conf: &SparkConf) -> f64;
+
+    /// Install the recorder the next [`Runner::run`] should emit spans
+    /// under. Default: ignored (synthetic surfaces have no timeline).
+    fn set_trace(&mut self, _trace: &TraceSink, _span: SpanId) {}
+
+    /// Provenance of the most recent [`Runner::run`], if the runner
+    /// tracks it. Default: `None` (synthetic surfaces).
+    fn last_provenance(&self) -> Option<RunProvenance> {
+        None
+    }
 }
 
 impl<F: FnMut(&SparkConf) -> f64> Runner for F {
@@ -121,6 +150,11 @@ pub struct ForkingRunner<'c> {
     replayed_events: u64,
     full_trials: u64,
     total_events: u64,
+    /// Recorder for the *next* trial's engine spans (installed per
+    /// trial by [`tune`] via [`Runner::set_trace`]; null by default).
+    trace: TraceSink,
+    trace_span: SpanId,
+    last_prov: Option<RunProvenance>,
 }
 
 impl<'c> ForkingRunner<'c> {
@@ -140,6 +174,9 @@ impl<'c> ForkingRunner<'c> {
             replayed_events: 0,
             full_trials: 0,
             total_events: 0,
+            trace: TraceSink::null(),
+            trace_span: SpanId::NONE,
+            last_prov: None,
         }
     }
 
@@ -147,9 +184,16 @@ impl<'c> ForkingRunner<'c> {
     /// impl reduces it to the effective duration).
     pub fn run_result(&mut self, conf: &SparkConf) -> JobResult {
         if self.full_reprice {
-            let res = run_planned(&self.plan, conf, self.cluster, &self.opts);
+            let res =
+                run_planned_traced(&self.plan, conf, self.cluster, &self.opts, &self.trace, self.trace_span);
             self.full_trials += 1;
             self.total_events += res.sim.events;
+            self.last_prov = Some(RunProvenance {
+                memoized: false,
+                forked: false,
+                replayed_events: 0,
+                processed_events: res.sim.events,
+            });
             return res;
         }
         // Probe every resident recording — probes are cheap mask/fact
@@ -167,13 +211,15 @@ impl<'c> ForkingRunner<'c> {
             })
             .max_by_key(|&(_, ev)| ev);
         if let Some((i, _)) = best {
-            if let Some(res) = run_planned_from_with(
+            if let Some(res) = run_planned_from_with_traced(
                 &self.forks[i].fork,
                 &self.plan,
                 conf,
                 self.cluster,
                 &self.opts,
                 self.coarse,
+                &self.trace,
+                self.trace_span,
             ) {
                 // GreedyDual refresh: a matched recording re-earns its
                 // residency.
@@ -183,12 +229,31 @@ impl<'c> ForkingRunner<'c> {
                 self.forked_trials += 1;
                 self.replayed_events += res.sim.replayed_events;
                 self.total_events += res.sim.processed_events();
+                self.last_prov = Some(RunProvenance {
+                    memoized: false,
+                    forked: true,
+                    replayed_events: res.sim.replayed_events,
+                    processed_events: res.sim.processed_events(),
+                });
                 return res;
             }
         }
-        let (res, fork) = run_planned_recording(&self.plan, conf, self.cluster, &self.opts);
+        let (res, fork) = run_planned_recording_traced(
+            &self.plan,
+            conf,
+            self.cluster,
+            &self.opts,
+            &self.trace,
+            self.trace_span,
+        );
         self.full_trials += 1;
         self.total_events += res.sim.events;
+        self.last_prov = Some(RunProvenance {
+            memoized: false,
+            forked: false,
+            replayed_events: 0,
+            processed_events: res.sim.events,
+        });
         self.store(fork);
         res
     }
@@ -283,6 +348,15 @@ impl Runner for ForkingRunner<'_> {
     fn run(&mut self, conf: &SparkConf) -> f64 {
         self.run_result(conf).effective_duration()
     }
+
+    fn set_trace(&mut self, trace: &TraceSink, span: SpanId) {
+        self.trace = trace.clone();
+        self.trace_span = span;
+    }
+
+    fn last_provenance(&self) -> Option<RunProvenance> {
+        self.last_prov
+    }
 }
 
 /// One trial in the methodology.
@@ -299,6 +373,11 @@ pub struct Trial {
     pub improvement: f64,
     /// Was the delta kept (improvement > threshold)?
     pub kept: bool,
+    /// How the number was produced (memo / fork / full), when the
+    /// runner tracks it. Observation only — never compared by
+    /// [`crate::service::outcomes_identical`], because the same trial
+    /// legitimately prices differently depending on cache warmth.
+    pub provenance: Option<RunProvenance>,
 }
 
 /// Outcome of a tuning session.
@@ -314,6 +393,9 @@ pub struct TuneOutcome {
     pub trials: Vec<Trial>,
     /// The improvement threshold used.
     pub threshold: f64,
+    /// How the baseline run was produced (the baseline is not a
+    /// [`Trial`], so its decision record lives here).
+    pub baseline_provenance: Option<RunProvenance>,
 }
 
 impl TuneOutcome {
@@ -377,11 +459,27 @@ pub struct TuneOpts {
     /// (cross-workload evidence transfer). `None` — the paper's cold
     /// methodology, unchanged.
     pub warm_start: Option<WarmStart>,
+    /// The configuration the walk starts from (trial deltas stack on
+    /// top of it). The paper's methodology starts from the Spark
+    /// defaults; a non-default base lets `-c key=val` overrides ride
+    /// under every trial.
+    pub base: SparkConf,
+    /// Observability recorder: the session/trial span tree and
+    /// warm-start annotations are emitted here. Null by default —
+    /// recording never changes any trial's result.
+    pub trace: TraceSink,
 }
 
 impl Default for TuneOpts {
     fn default() -> Self {
-        TuneOpts { threshold: 0.0, short_version: false, straggler_aware: false, warm_start: None }
+        TuneOpts {
+            threshold: 0.0,
+            short_version: false,
+            straggler_aware: false,
+            warm_start: None,
+            base: SparkConf::default(),
+            trace: TraceSink::null(),
+        }
     }
 }
 
@@ -499,13 +597,40 @@ const STRAGGLER_STEPS: &[StepDef] = &[
 /// replay step degrades gracefully: the cold decision list still runs
 /// over every sibling group not already settled by a kept replay.
 pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
+    /// One trial under its own span: every trial gets a fresh lane in
+    /// the trace (each simulation starts at its own `t = 0`), named
+    /// after the decision step and closed at the trial's effective
+    /// duration. `priced` accumulates finite durations so the session
+    /// span's extent is the total simulated time the walk priced.
+    fn run_step(
+        runner: &mut dyn Runner,
+        trace: &TraceSink,
+        session: SpanId,
+        name: &str,
+        conf: &SparkConf,
+        priced: &mut f64,
+    ) -> (f64, Option<RunProvenance>) {
+        let span = trace.open(session, "trial");
+        runner.set_trace(trace, span);
+        let t = runner.run(conf);
+        trace.close(span, "trial", name, 0.0, t);
+        if t.is_finite() {
+            *priced += t;
+        }
+        (t, runner.last_provenance())
+    }
+
     let steps: Vec<&StepDef> = if opts.straggler_aware {
         STEPS.iter().chain(STRAGGLER_STEPS.iter()).collect()
     } else {
         STEPS.iter().collect()
     };
-    let mut best_conf = SparkConf::default();
-    let baseline = runner.run(&best_conf);
+    let trace = &opts.trace;
+    let session = trace.open(SpanId::NONE, "session");
+    let mut priced_secs = 0.0;
+    let mut best_conf = opts.base.clone();
+    let (baseline, baseline_provenance) =
+        run_step(runner, trace, session, "baseline", &best_conf, &mut priced_secs);
     let mut best = baseline;
     let mut trials = Vec::new();
 
@@ -540,7 +665,8 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
             for (k, v) in sd.delta {
                 cand.set(k, v).expect("methodology deltas are valid");
             }
-            let t = runner.run(&cand);
+            trace.instant(session, "warm-start", &format!("replay '{}'", sd.step), 0.0);
+            let (t, prov) = run_step(runner, trace, session, sd.step, &cand, &mut priced_secs);
             let improvement =
                 if best.is_finite() && t.is_finite() { (best - t) / best } else { 0.0 };
             let kept = t.is_finite() && improvement > opts.threshold;
@@ -550,6 +676,7 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
                 duration: t,
                 improvement,
                 kept,
+                provenance: prov,
             });
             if kept {
                 best_conf = cand;
@@ -563,7 +690,16 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
             // Every transferred decision reproduced on this workload:
             // trust the neighbor for the rest of the list too. The
             // session ends having run one trial per kept decision.
-            return TuneOutcome { best_conf, baseline, best, trials, threshold: opts.threshold };
+            trace.instant(session, "warm-start", "transfer intact - cold walk skipped", 0.0);
+            trace.close(session, "session", "tune", 0.0, priced_secs);
+            return TuneOutcome {
+                best_conf,
+                baseline,
+                best,
+                trials,
+                threshold: opts.threshold,
+                baseline_provenance,
+            };
         }
     }
 
@@ -589,7 +725,7 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
             for (k, v) in sd.delta {
                 cand.set(k, v).expect("methodology deltas are valid");
             }
-            let t = runner.run(&cand);
+            let (t, prov) = run_step(runner, trace, session, sd.step, &cand, &mut priced_secs);
             let improvement =
                 if best.is_finite() && t.is_finite() { (best - t) / best } else { 0.0 };
             group_trials.push(Trial {
@@ -598,6 +734,7 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
                 duration: t,
                 improvement,
                 kept: false,
+                provenance: prov,
             });
             if t.is_finite()
                 && improvement > opts.threshold
@@ -618,7 +755,8 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
         i = j;
     }
 
-    TuneOutcome { best_conf, baseline, best, trials, threshold: opts.threshold }
+    trace.close(session, "session", "tune", 0.0, priced_secs);
+    TuneOutcome { best_conf, baseline, best, trials, threshold: opts.threshold, baseline_provenance }
 }
 
 #[cfg(test)]

@@ -1,0 +1,354 @@
+//! Golden suite for the deterministic tracing & metrics plane.
+//!
+//! The observability plane must be a pure *observer*: for any scenario
+//! in the hot-path matrix (FIFO/FAIR × locality × speculation ×
+//! straggler × fork-resume), a traced run reproduces the untraced run
+//! **bit for bit** — durations, crash flags, and every [`SimStats`]
+//! work counter. The exported artifacts (Chrome-trace JSON, the
+//! Spark-history-style event log) are stamped with the sim clock and
+//! monotonic sequence numbers, never wall time, so repeated runs — and
+//! concurrent runs on any number of threads, one sink each — export
+//! byte-identical files. Trial provenance records reconcile exactly
+//! with the runner and service counters, and per-trial stats absorbed
+//! into one [`SimStats`] equal the metrics registry's aggregate of the
+//! same per-trial records, field for field.
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::conf::SparkConf;
+use sparktune::engine::{
+    prepare, run_planned, run_planned_from, run_planned_from_traced, run_planned_recording,
+    run_planned_recording_traced, run_planned_traced, Job, JobPlan, JobResult,
+};
+use sparktune::obs::{Registry, SpanId, TraceSink};
+use sparktune::service::{ServiceOpts, SessionRequest, TuningService};
+use sparktune::sim::{SimOpts, SimStats, Straggler};
+use sparktune::tuner::baselines::{grid_conf, grid_size};
+use sparktune::tuner::{tune, ForkingRunner, RunProvenance, TuneOpts, TuneOutcome};
+use sparktune::workloads;
+use std::sync::Arc;
+
+fn job_results_identical(a: &JobResult, b: &JobResult) -> bool {
+    a.job == b.job
+        && a.duration.to_bits() == b.duration.to_bits()
+        && a.crashed == b.crashed
+        && a.stages.len() == b.stages.len()
+        && a.stages.iter().zip(&b.stages).all(|(x, y)| {
+            x.name == y.name
+                && x.duration.to_bits() == y.duration.to_bits()
+                && x.cpu_secs.to_bits() == y.cpu_secs.to_bits()
+                && x.disk_bytes.to_bits() == y.disk_bytes.to_bits()
+                && x.net_bytes.to_bits() == y.net_bytes.to_bits()
+                && x.locality_hits == y.locality_hits
+                && x.speculated == y.speculated
+        })
+}
+
+/// Iterative cache-prefixed workload (same shape as the hot-path
+/// suite): the prefix is insensitive to shuffle-class deltas, so the
+/// fork-resume path has a real timeline to inherit — and to trace.
+fn iterative_job() -> Job {
+    workloads::kmeans(400_000, 32, 8, 3, 16)
+}
+
+#[test]
+fn traced_runs_are_bit_identical_to_untraced_across_the_matrix() {
+    // FIFO/FAIR × speculation+locality × straggler, crossed with all
+    // three pricing paths: plain, recording, and checkpoint fork-resume.
+    // Tracing on must equal tracing off bit for bit — results *and*
+    // work counters — while actually recording a span tree.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&iterative_job()).unwrap();
+    let bases = [
+        ("fifo", SparkConf::default()),
+        ("fair", SparkConf::default().with("spark.scheduler.mode", "FAIR")),
+        (
+            "speculation+locality",
+            SparkConf::default()
+                .with("spark.speculation", "true")
+                .with("spark.locality.wait", "1s"),
+        ),
+    ];
+    let opt_sets = [
+        ("plain", SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }),
+        (
+            "straggler",
+            SimOpts {
+                jitter: 0.05,
+                seed: 0xBEEF,
+                straggler: Some(Straggler { prob: 0.1, factor: 6.0 }),
+            },
+        ),
+    ];
+    for (bname, base) in &bases {
+        for (oname, opts) in &opt_sets {
+            // Plain pricing.
+            let plain = run_planned(&plan, base, &cluster, opts);
+            let sink = TraceSink::buffered();
+            let traced = run_planned_traced(&plan, base, &cluster, opts, &sink, SpanId::NONE);
+            assert!(
+                job_results_identical(&plain, &traced),
+                "{bname}/{oname}: tracing perturbed the run"
+            );
+            assert_eq!(plain.sim, traced.sim, "{bname}/{oname}: tracing perturbed the counters");
+            assert!(sink.len() > 0, "{bname}/{oname}: traced run recorded nothing");
+
+            // Recording (checkpoint capture must stay invisible too).
+            let (rec, fork) = run_planned_recording(&plan, base, &cluster, opts);
+            let rsink = TraceSink::buffered();
+            let (trec, _tfork) =
+                run_planned_recording_traced(&plan, base, &cluster, opts, &rsink, SpanId::NONE);
+            assert!(
+                job_results_identical(&rec, &trec),
+                "{bname}/{oname}: traced recording diverged"
+            );
+            assert_eq!(rec.sim, trec.sim, "{bname}/{oname}: traced recording counters diverged");
+
+            // Fork-resume under a shuffle-class delta: the traced resume
+            // must match the untraced resume bit for bit and annotate
+            // the resume point.
+            let kryo = base.clone().with("spark.serializer", "kryo");
+            let forked = run_planned_from(&fork, &plan, &kryo, &cluster, opts)
+                .unwrap_or_else(|| panic!("{bname}/{oname}: fork declined"));
+            let fsink = TraceSink::buffered();
+            let tforked =
+                run_planned_from_traced(&fork, &plan, &kryo, &cluster, opts, &fsink, SpanId::NONE)
+                    .unwrap_or_else(|| panic!("{bname}/{oname}: traced fork declined"));
+            assert!(
+                job_results_identical(&forked, &tforked),
+                "{bname}/{oname}: traced fork-resume diverged"
+            );
+            assert_eq!(forked.sim, tforked.sim, "{bname}/{oname}: traced fork counters diverged");
+            assert!(
+                fsink.events().iter().any(|e| e.cat == "fork" && e.name.starts_with("resume @")),
+                "{bname}/{oname}: fork-resume annotation missing"
+            );
+        }
+    }
+}
+
+#[test]
+fn null_sink_is_a_true_no_op() {
+    // The default path: a null-sink traced run is the untraced run —
+    // bit-identical outcome, zero events recorded, empty exports.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&iterative_job()).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let conf = SparkConf::default();
+    let plain = run_planned(&plan, &conf, &cluster, &opts);
+    let sink = TraceSink::null();
+    let traced = run_planned_traced(&plan, &conf, &cluster, &opts, &sink, SpanId::NONE);
+    assert!(job_results_identical(&plain, &traced));
+    assert_eq!(plain.sim, traced.sim);
+    assert_eq!(sink.len(), 0);
+    assert!(sink.events().is_empty());
+    assert_eq!(sink.chrome_trace(), TraceSink::buffered().chrome_trace());
+}
+
+/// One straggler-aware tuner walk through the checkpoint-forking runner
+/// with a buffered sink attached; returns the outcome, the runner's
+/// counters, and both exports.
+fn traced_walk(
+    plan: &Arc<JobPlan>,
+    cluster: &ClusterSpec,
+) -> (TuneOutcome, (u64, u64, u64), String, String) {
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let sink = TraceSink::buffered();
+    let walk =
+        TuneOpts { straggler_aware: true, trace: sink.clone(), ..TuneOpts::default() };
+    let mut runner = ForkingRunner::new(Arc::clone(plan), cluster, opts);
+    let out = tune(&mut runner, &walk);
+    let counters = (runner.forked_trials(), runner.replayed_events(), runner.total_events());
+    let (chrome, log) = (sink.chrome_trace(), sink.event_log());
+    (out, counters, chrome, log)
+}
+
+#[test]
+fn walk_exports_are_byte_stable_across_runs_and_threads() {
+    // The same walk traced twice — and concurrently on four threads,
+    // one sink each — must export byte-identical Chrome-trace JSON and
+    // event logs: everything is stamped with the sim clock and
+    // sequence numbers, never wall time.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&iterative_job()).unwrap();
+    let (_, _, chrome, log) = traced_walk(&plan, &cluster);
+    let (_, _, chrome2, log2) = traced_walk(&plan, &cluster);
+    assert_eq!(chrome, chrome2, "Chrome trace not byte-stable across runs");
+    assert_eq!(log, log2, "event log not byte-stable across runs");
+
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            (0..4).map(|_| s.spawn(|| traced_walk(&plan, &cluster))).collect();
+        for h in handles {
+            let (_, _, tc, tl) = h.join().expect("walk thread panicked");
+            assert_eq!(chrome, tc, "Chrome trace diverged across threads");
+            assert_eq!(log, tl, "event log diverged across threads");
+        }
+    });
+
+    // The span tree is real: session, trial, stage, and task spans all
+    // land in the log under their Spark-listener analogues, and the
+    // fork-resume annotations mark where checkpoints were inherited.
+    assert!(log.contains("\"Event\":\"SparkTuneSessionCompleted\""), "{log}");
+    assert!(log.contains("\"Event\":\"SparkTuneTrialCompleted\""));
+    assert!(log.contains("\"Event\":\"SparkListenerStageCompleted\""));
+    assert!(log.contains("\"Event\":\"SparkListenerTaskEnd\""));
+    assert!(chrome.contains("\"schema\":\"sparktune.trace.v1\""));
+}
+
+#[test]
+fn explain_provenance_rows_reconcile_with_runner_counters() {
+    // The `tune --explain` contract: the per-trial provenance rows are
+    // not narrative — they reconcile *exactly* with the runner's own
+    // counters. One row per run, fork rows count to `forked_trials`,
+    // replayed/processed sums match the runner's totals to the event.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&iterative_job()).unwrap();
+    let (out, (forked, replayed, total_events), _, _) = traced_walk(&plan, &cluster);
+    let rows: Vec<RunProvenance> = std::iter::once(out.baseline_provenance)
+        .chain(out.trials.iter().map(|t| t.provenance))
+        .map(|p| p.expect("the forking runner tracks provenance for every run"))
+        .collect();
+    assert_eq!(rows.len(), out.runs(), "one provenance row per run");
+    assert!(rows.iter().all(|p| !p.memoized), "no memo layer under a bare runner");
+    let fork_rows = rows.iter().filter(|p| p.forked).count() as u64;
+    assert!(fork_rows > 0, "the walk must resume at least one trial from a checkpoint");
+    assert_eq!(fork_rows, forked, "fork rows must equal the runner's forked_trials");
+    assert_eq!(
+        rows.iter().map(|p| p.replayed_events).sum::<u64>(),
+        replayed,
+        "replayed-event rows must sum to the runner's total"
+    );
+    assert_eq!(
+        rows.iter().map(|p| p.processed_events).sum::<u64>(),
+        total_events,
+        "processed-event rows must sum to the runner's total"
+    );
+    assert!(
+        rows.iter().all(|p| p.forked || p.replayed_events == 0),
+        "only fork rows inherit events"
+    );
+}
+
+#[test]
+fn service_provenance_reconciles_with_service_stats() {
+    // Across a deduping multi-session batch, the per-trial provenance
+    // surfaced in every session outcome must reconcile with the
+    // service-wide counters: rows == trials requested, non-memo rows ==
+    // trials actually simulated, fork rows and replayed sums == the
+    // service's fork counters.
+    let reqs: Vec<SessionRequest> = (0..3)
+        .map(|i| SessionRequest {
+            name: format!("km{i}"),
+            job: iterative_job(),
+            tune: TuneOpts::default(),
+            sim: SimOpts { jitter: 0.04, seed: 0x7E57 + (i % 2) as u64, straggler: None },
+        })
+        .collect();
+    let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+    let sessions = svc.serve(&reqs);
+    let stats = svc.stats();
+    let rows: Vec<RunProvenance> = sessions
+        .iter()
+        .flat_map(|s| {
+            std::iter::once(s.outcome.baseline_provenance)
+                .chain(s.outcome.trials.iter().map(|t| t.provenance))
+        })
+        .map(|p| p.expect("the service tracks provenance for every run"))
+        .collect();
+    assert_eq!(rows.len() as u64, stats.trials_requested, "one row per requested trial");
+    assert_eq!(
+        rows.iter().filter(|p| !p.memoized).count() as u64,
+        stats.trials_simulated,
+        "non-memo rows must equal the trials actually simulated"
+    );
+    assert!(rows.iter().any(|p| p.memoized), "overlapping sessions must hit the memo layer");
+    assert_eq!(
+        rows.iter().filter(|p| p.forked).count() as u64,
+        stats.forked_trials,
+        "fork rows must equal the service's forked_trials"
+    );
+    assert!(stats.forked_trials > 0, "incremental re-pricing must engage");
+    assert_eq!(
+        rows.iter().map(|p| p.replayed_events).sum::<u64>(),
+        stats.replayed_events,
+        "replayed-event rows must sum to the service counter"
+    );
+}
+
+#[test]
+fn absorbed_stats_equal_registry_aggregate() {
+    // Property: pricing N trials and absorbing their stats into one
+    // SimStats equals recording each trial's stats into the metrics
+    // registry and reading the aggregate back — field for field. The
+    // exhaustive destructure below is the drift guard: adding a field
+    // to SimStats breaks this test until the registry learns it.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&workloads::Workload::MiniSortByKey.job()).unwrap();
+    let reg = Registry::new(4);
+    let mut total = SimStats::default();
+    for i in 0..12usize {
+        let conf = grid_conf(i * 11 % grid_size());
+        let straggler = if i % 3 == 0 {
+            Some(Straggler { prob: 0.1, factor: 5.0 })
+        } else {
+            None
+        };
+        let opts = SimOpts { jitter: 0.04, seed: 0x7E57 + i as u64, straggler };
+        let r = run_planned(&plan, &conf, &cluster, &opts);
+        total.absorb(&r.sim);
+        reg.record_sim_stats("sim", &r.sim);
+    }
+    let snap = reg.snapshot();
+    let SimStats {
+        events,
+        completions,
+        task_launches,
+        phase_transitions,
+        heap_pushes,
+        heap_pops,
+        heap_updates,
+        flow_rolls,
+        live_copy_event_sum,
+        admit_probes,
+        replayed_events,
+        forked_trials,
+        task_finishes,
+        spec_events,
+    } = total;
+    for (field, absorbed) in [
+        ("sim.events", events),
+        ("sim.completions", completions),
+        ("sim.task_launches", task_launches),
+        ("sim.phase_transitions", phase_transitions),
+        ("sim.heap_pushes", heap_pushes),
+        ("sim.heap_pops", heap_pops),
+        ("sim.heap_updates", heap_updates),
+        ("sim.flow_rolls", flow_rolls),
+        ("sim.live_copy_event_sum", live_copy_event_sum),
+        ("sim.admit_probes", admit_probes),
+        ("sim.replayed_events", replayed_events),
+        ("sim.forked_trials", forked_trials),
+        ("sim.task_finishes", task_finishes),
+        ("sim.spec_events", spec_events),
+    ] {
+        assert_eq!(snap.counter(field), absorbed, "{field}: registry diverged from absorb()");
+    }
+    assert!(total.events > 0, "the property must exercise real runs");
+}
+
+#[test]
+fn conf_warnings_flow_into_trace_exports() {
+    // An unmodeled key produces a once-per-key warning; routed through
+    // the sink it must surface in both export formats.
+    let conf = SparkConf::default().with("spark.yarn.queue", "etl");
+    assert!(!conf.warnings.is_empty(), "unmodeled keys must warn");
+    let sink = TraceSink::buffered();
+    for w in &conf.warnings {
+        sink.warning(w);
+    }
+    let log = sink.event_log();
+    assert!(log.contains("\"Event\":\"SparkTuneWarning\""), "{log}");
+    assert!(log.contains("unmodeled configuration key"), "{log}");
+    let chrome = sink.chrome_trace();
+    assert!(chrome.contains("\"cat\":\"warning\""), "{chrome}");
+}
