@@ -11,7 +11,9 @@ use sparktune::conf::SparkConf;
 use sparktune::engine::{prepare, run, run_planned, run_planned_from, run_planned_recording};
 use sparktune::obs::TraceSink;
 use sparktune::ser::{Record, SerKind};
-use sparktune::sim::{EventSim, FifoScheduler, Phase, SimOpts, StageSpec};
+use sparktune::sim::{
+    EventSim, FaultPlan, FifoScheduler, Phase, RecoveryPolicy, SimOpts, StageSpec,
+};
 use sparktune::testkit::{BenchArgs, BenchSink};
 use sparktune::tuner::{tune, ForkingRunner, TuneOpts};
 use sparktune::util::Prng;
@@ -110,6 +112,36 @@ fn main() {
     sink.bench("sim/event core traced buffered (events/sec)", iters, events as f64, || {
         let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
         sim.set_trace(TraceSink::buffered());
+        sim.submit_shaped(0, &spec, &SimOpts::default());
+        std::hint::black_box(sim.drain());
+    });
+
+    // ---- fault-injector overhead on the same shaped stage ----
+    // The disarmed row must track the plain row (the hot path branches
+    // on an Option that is None); the armed row prices the per-launch
+    // hazard draw plus the retries its crashes inject, normalized to
+    // that run's own (larger) event count.
+    sink.bench("sim/event core injector disarmed (events/sec)", iters, events as f64, || {
+        let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.submit_shaped(0, &spec, &SimOpts::default());
+        std::hint::black_box(sim.drain());
+    });
+    let hazard = Arc::new(FaultPlan {
+        seed: 0xFA11,
+        task_crash_prob: 0.02,
+        flaky: None,
+        losses: Vec::new(),
+    });
+    let armed_events = {
+        let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.arm_faults(Arc::clone(&hazard), RecoveryPolicy::default());
+        sim.submit_shaped(0, &spec, &SimOpts::default());
+        sim.drain();
+        sim.stats().events
+    };
+    sink.bench("sim/event core injector armed (events/sec)", iters, armed_events as f64, || {
+        let mut sim = EventSim::new(&cluster, Box::new(FifoScheduler));
+        sim.arm_faults(Arc::clone(&hazard), RecoveryPolicy::default());
         sim.submit_shaped(0, &spec, &SimOpts::default());
         std::hint::black_box(sim.drain());
     });

@@ -11,6 +11,7 @@
 //! sparktune ablation [--workload <name>]
 //! sparktune tenancy [--jobs N] [--records N] [--mixed]
 //! sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
+//! sparktune faults [--records N] [--tasks N]
 //! sparktune serve  [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
 //!                  [--warm-start]
 //! sparktune transfer [--tenants N] [--workers T] [--threshold D]
@@ -21,12 +22,15 @@
 use crate::cluster::ClusterSpec;
 use crate::conf::{params, SparkConf};
 use crate::engine::{prepare, run, run_planned, run_planned_traced};
-use crate::experiments::{self, cases, sensitivity, straggler, tenancy};
+use crate::experiments::{self, cases, faults, sensitivity, straggler, tenancy};
 use crate::obs::{Registry, SpanId, TraceSink};
 use crate::report::{metrics_table, sim_stats_table, Table};
-use crate::sim::{SimOpts, SimStats, Straggler};
+use crate::sim::{FaultPlan, SimOpts, SimStats, Straggler};
 use crate::tuner::baselines::{grid_conf, grid_size};
-use crate::tuner::{tune, ForkingRunner, RunProvenance, TuneOpts, TuneOutcome, WarmStart};
+use crate::tuner::{
+    ensemble_score, tune, FaultEnsembleOpts, FaultEnsembleRunner, ForkingRunner, RunProvenance,
+    TuneOpts, TuneOutcome, WarmStart,
+};
 use crate::util::stats::Summary;
 use crate::workloads::{self, Workload};
 use std::sync::Arc;
@@ -58,7 +62,7 @@ fn parse_args(argv: &[String]) -> Result<Args, String> {
             } else if matches!(
                 name,
                 "short" | "verbose" | "mixed" | "straggler-steps" | "warm-start" | "explain"
-                    | "metrics"
+                    | "metrics" | "fault-ensemble" | "fault-p95"
             ) {
                 bools.push(name.to_string());
             } else {
@@ -168,12 +172,24 @@ USAGE:
                       chrome://tracing or Perfetto)
                      [--event-log-out FILE] (write the Spark-history-style
                       JSON-lines event log of the same spans)
+                     [--fault-ensemble] [--fault-draws K] [--fault-p95] [--seed N]
+                     (failure-robust tuning: price every trial over K seeded
+                      fault draws of a flaky-node scenario — keep a step iff
+                      it improves the ensemble mean, or the p95 with
+                      --fault-p95; --seed selects the scenario stream and the
+                      failure-policy steps join the decision list)
   sparktune sweep    --figure fig1|fig2|fig3|table2 [--out-dir DIR]
   sparktune cases    [--out-dir DIR]
   sparktune ablation [--workload <name>]
   sparktune tenancy  [--jobs N] [--records N] [--mixed]  (FIFO vs FAIR, identical or mixed tenants)
   sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
                      (jittered cluster: spark.speculation off vs on)
+  sparktune faults   [--records N] [--tasks N]
+                     (fault injection: a conf that wins on the clean cluster
+                      but aborts under a flaky node; the ensemble tuner finds
+                      a failure-robust incumbent; task retry vs speculation vs
+                      node exclusion under a black-hole node — exits non-zero
+                      unless every robustness property holds)
   sparktune serve    [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
                      [--warm-start] [--conf k=v]... [--explain] [--metrics]
                      (tuning service: M×N overlapping sessions, memoized trials;
@@ -302,6 +318,19 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             let base = args.conf()?;
             base.validate().map_err(|e| e.to_string())?;
             report_conf_warnings(&base, &trace);
+            // --fault-ensemble prices every trial over k seeded fault
+            // draws (mean, or p95 with --fault-p95) and appends the
+            // failure-policy steps to the decision list.
+            let fault_ensemble = if args.has("fault-ensemble") {
+                let draws: u32 =
+                    args.flag("fault-draws").unwrap_or("5").parse().map_err(|e| format!("{e}"))?;
+                if draws == 0 {
+                    return Err("--fault-draws must be >= 1".into());
+                }
+                Some(FaultEnsembleOpts { draws, p95: args.has("fault-p95") })
+            } else {
+                None
+            };
             let opts = TuneOpts {
                 threshold,
                 short_version: args.has("short"),
@@ -309,6 +338,7 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 warm_start: None,
                 base,
                 trace: trace.clone(),
+                fault_ensemble,
             };
             let out = if let Some(src) = args.flag("warm-from") {
                 // Cross-workload evidence transfer, by hand: tune the
@@ -347,6 +377,25 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                     background, bg_records
                 );
                 let mut runner = tenancy::busy_runner(w.job(), bg, &cluster);
+                tune(&mut runner, &opts)
+            } else if let Some(ens) = opts.fault_ensemble {
+                // Failure-robust tuning: every trial priced over the k
+                // seeded draws of the flaky-node scenario (--seed picks
+                // the scenario stream).
+                let default_seed = faults::SEED.to_string();
+                let seed: u64 = args
+                    .flag("seed")
+                    .unwrap_or(&default_seed)
+                    .parse()
+                    .map_err(|e| format!("{e}"))?;
+                let scenario = FaultPlan { seed, ..faults::flaky_scenario() };
+                let plan = prepare(&w.job()).map_err(|e| e.to_string())?;
+                let sim_opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+                let mut runner = FaultEnsembleRunner::new(
+                    ForkingRunner::new(plan, &cluster, sim_opts),
+                    scenario,
+                    ens,
+                );
                 tune(&mut runner, &opts)
             } else {
                 let mut runner = cases::sim_runner(w, &cluster);
@@ -857,6 +906,62 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             );
             Ok(())
         }
+        "faults" => {
+            // Fault-injection demo + CI smoke: both tables print, then
+            // the robustness properties are asserted so the exit code is
+            // the gate. The mini cluster keeps the black-hole node a
+            // quarter of the capacity — the regime where failure policy
+            // decides the ranking.
+            let cluster = ClusterSpec::mini();
+            let records: u64 = args
+                .flag("records")
+                .unwrap_or("4000000")
+                .parse()
+                .map_err(|e| format!("{e}"))?;
+            let tasks: u32 =
+                args.flag("tasks").unwrap_or("64").parse().map_err(|e| format!("{e}"))?;
+            let o = faults::faults_experiment(&cluster);
+            println!("{}", faults::faults_table(&o).to_markdown());
+            let m = straggler::mitigation_experiment(records, tasks, &cluster);
+            println!("{}", straggler::mitigation_table(&m).to_markdown());
+            if o.clean_fragile >= o.clean_default {
+                return Err(format!(
+                    "the fragile conf must win on the clean cluster: {:.3}s vs {:.3}s",
+                    o.clean_fragile, o.clean_default
+                ));
+            }
+            if faults::FaultsOutcome::aborted(&o.faulted_fragile) == 0 {
+                return Err("the fragile conf never aborted under injection".into());
+            }
+            if !o.tuned.best.is_finite() || faults::FaultsOutcome::aborted(&o.faulted_tuned) > 0 {
+                return Err("the ensemble-tuned incumbent is not failure-robust".into());
+            }
+            if ensemble_score(&o.faulted_tuned, true) >= ensemble_score(&o.faulted_fragile, true)
+            {
+                return Err("tuned p95 under injection did not beat the clean-cluster winner"
+                    .into());
+            }
+            if m.exclusion.crashed.is_some() || m.retry.crashed.is_none() {
+                return Err(
+                    "mitigation ranking broke: exclusion must survive the black-hole node \
+                     that aborts retries-only"
+                        .into(),
+                );
+            }
+            println!(
+                "ok: fragile conf wins clean ({:.1}s vs {:.1}s) but aborts {}/{} draws; \
+                 ensemble tuner recovers a robust incumbent (mean {:.1}s, p95 {:.1}s, 0 aborts) \
+                 in {} runs; exclusion survives the black-hole node that kills retries-only",
+                o.clean_fragile,
+                o.clean_default,
+                faults::FaultsOutcome::aborted(&o.faulted_fragile),
+                o.faulted_fragile.len(),
+                ensemble_score(&o.faulted_tuned, false),
+                ensemble_score(&o.faulted_tuned, true),
+                o.tuned.runs()
+            );
+            Ok(())
+        }
         "help-conf" => {
             println!("Modeled Spark 1.5.2 parameters (★ = the paper's 12):\n");
             for p in params::PARAMS {
@@ -963,6 +1068,39 @@ mod tests {
         assert_eq!(a.flag("background"), Some("2"));
         let a = parse_args(&argv("serve --tenants 2 --warm-start")).unwrap();
         assert!(a.has("warm-start"));
+        let a = parse_args(&argv(
+            "tune --workload mini --fault-ensemble --fault-draws 3 --fault-p95 --seed 9",
+        ))
+        .unwrap();
+        assert!(a.has("fault-ensemble") && a.has("fault-p95"));
+        assert_eq!(a.flag("fault-draws"), Some("3"));
+        assert_eq!(a.flag("seed"), Some("9"));
+    }
+
+    #[test]
+    fn faults_subcommand_smoke() {
+        // The same invocation CI smoke-runs: both tables print and every
+        // robustness property is asserted by the subcommand (exit 0 ⇔
+        // all held).
+        assert_eq!(main(argv("faults --records 2000000 --tasks 32")), 0);
+    }
+
+    #[test]
+    fn tune_fault_ensemble_smoke() {
+        // Failure-robust tuning through the dispatcher: k-draw ensemble
+        // pricing on the mini workload, mean and p95 modes.
+        assert_eq!(
+            main(argv("tune --workload mini --short --fault-ensemble --fault-draws 3")),
+            0
+        );
+        assert_eq!(
+            main(argv(
+                "tune --workload mini --short --fault-ensemble --fault-draws 3 --fault-p95 \
+                 --seed 7"
+            )),
+            0
+        );
+        assert_eq!(main(argv("tune --workload mini --fault-ensemble --fault-draws 0")), 2);
     }
 
     #[test]

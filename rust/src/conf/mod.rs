@@ -166,6 +166,20 @@ pub struct SparkConf {
     /// `spark.speculation.quantile` (default 0.75): fraction of a stage's
     /// tasks that must complete before speculation kicks in.
     pub speculation_quantile: f64,
+    /// `spark.task.maxFailures` (default 4): task attempts before the
+    /// stage — and with it the job — aborts. Only observable with a
+    /// fault plan armed (no task ever fails on a fault-free run).
+    pub task_max_failures: u32,
+    /// `spark.stage.maxConsecutiveAttempts` (default 4): stage
+    /// re-submissions (FetchFailed recoveries after an executor loss)
+    /// before the job aborts.
+    pub stage_max_attempts: u32,
+    /// `spark.excludeOnFailure.enabled` (default false): exclude nodes
+    /// with repeated task failures from placement.
+    pub exclude_on_failure: bool,
+    /// `spark.excludeOnFailure.task.maxTaskAttemptsPerNode` (default 2):
+    /// task failures on one node before it is excluded.
+    pub exclude_max_task_attempts_per_node: u32,
 
     /// Unmodeled `--conf` keys, carried through verbatim.
     pub extras: BTreeMap<String, String>,
@@ -219,6 +233,10 @@ impl Default for SparkConf {
             speculation: false,
             speculation_multiplier: 1.5,
             speculation_quantile: 0.75,
+            task_max_failures: 4,
+            stage_max_attempts: 4,
+            exclude_on_failure: false,
+            exclude_max_task_attempts_per_node: 2,
             extras: BTreeMap::new(),
             warnings: Vec::new(),
         }
@@ -306,6 +324,18 @@ impl SparkConf {
             }
             "spark.speculation.quantile" => {
                 self.speculation_quantile = parse_fraction(key, v)?;
+            }
+            "spark.task.maxFailures" => {
+                self.task_max_failures = parse_positive_u32(key, v)?;
+            }
+            "spark.stage.maxConsecutiveAttempts" => {
+                self.stage_max_attempts = parse_positive_u32(key, v)?;
+            }
+            "spark.excludeOnFailure.enabled" => {
+                self.exclude_on_failure = parse_bool(key, v)?;
+            }
+            "spark.excludeOnFailure.task.maxTaskAttemptsPerNode" => {
+                self.exclude_max_task_attempts_per_node = parse_positive_u32(key, v)?;
             }
             _ => {
                 // Unknown-but-carried key: Table 1 has ~150 parameters the
@@ -411,6 +441,13 @@ impl SparkConf {
         emit!("spark.speculation", self.speculation);
         emit!("spark.speculation.multiplier", self.speculation_multiplier + 0.0);
         emit!("spark.speculation.quantile", self.speculation_quantile + 0.0);
+        emit!("spark.task.maxFailures", self.task_max_failures);
+        emit!("spark.stage.maxConsecutiveAttempts", self.stage_max_attempts);
+        emit!("spark.excludeOnFailure.enabled", self.exclude_on_failure);
+        emit!(
+            "spark.excludeOnFailure.task.maxTaskAttemptsPerNode",
+            self.exclude_max_task_attempts_per_node
+        );
         for (k, v) in &self.extras {
             visit(k, v);
         }
@@ -467,6 +504,14 @@ impl SparkConf {
         cmp!(speculation, "spark.speculation", |v: &bool| v.to_string());
         cmp!(speculation_multiplier, "spark.speculation.multiplier", |v: &f64| format!("{v}"));
         cmp!(speculation_quantile, "spark.speculation.quantile", |v: &f64| format!("{v}"));
+        cmp!(task_max_failures, "spark.task.maxFailures", |v: &u32| v.to_string());
+        cmp!(stage_max_attempts, "spark.stage.maxConsecutiveAttempts", |v: &u32| v.to_string());
+        cmp!(exclude_on_failure, "spark.excludeOnFailure.enabled", |v: &bool| v.to_string());
+        cmp!(
+            exclude_max_task_attempts_per_node,
+            "spark.excludeOnFailure.task.maxTaskAttemptsPerNode",
+            |v: &u32| v.to_string()
+        );
         for (k, v) in &self.extras {
             out.push((k.clone(), v.clone()));
         }
@@ -513,6 +558,14 @@ fn parse_bool(key: &str, v: &str) -> Result<bool, ConfError> {
         "false" | "0" | "no" => Ok(false),
         _ => Err(invalid(key, v, "expected true/false".into())),
     }
+}
+
+fn parse_positive_u32(key: &str, v: &str) -> Result<u32, ConfError> {
+    let n: u32 = v.parse().map_err(|e| invalid(key, v, format!("{e}")))?;
+    if n == 0 {
+        return Err(invalid(key, v, "must be >= 1".into()));
+    }
+    Ok(n)
 }
 
 fn parse_fraction(key: &str, v: &str) -> Result<f64, ConfError> {
@@ -641,6 +694,33 @@ mod tests {
         assert!(c.set("spark.speculation", "maybe").is_err());
         assert!(c.set("spark.speculation.multiplier", "-1").is_err());
         assert!(c.set("spark.speculation.quantile", "1.5").is_err());
+    }
+
+    #[test]
+    fn failure_policy_keys_are_typed_not_extras() {
+        let mut c = SparkConf::default();
+        assert_eq!(c.task_max_failures, 4);
+        assert_eq!(c.stage_max_attempts, 4);
+        assert!(!c.exclude_on_failure);
+        assert_eq!(c.exclude_max_task_attempts_per_node, 2);
+        c.set("spark.task.maxFailures", "1").unwrap();
+        c.set("spark.stage.maxConsecutiveAttempts", "2").unwrap();
+        c.set("spark.excludeOnFailure.enabled", "true").unwrap();
+        c.set("spark.excludeOnFailure.task.maxTaskAttemptsPerNode", "3").unwrap();
+        assert_eq!(c.task_max_failures, 1);
+        assert_eq!(c.stage_max_attempts, 2);
+        assert!(c.exclude_on_failure);
+        assert_eq!(c.exclude_max_task_attempts_per_node, 3);
+        assert!(c.extras.is_empty(), "typed keys must not leak into extras: {:?}", c.extras);
+        assert!(c.warnings.is_empty(), "typed keys must not warn: {:?}", c.warnings);
+        let diff = c.diff_from_default();
+        assert!(diff.iter().any(|(k, v)| k == "spark.task.maxFailures" && v == "1"));
+        assert!(diff.iter().any(|(k, v)| k == "spark.excludeOnFailure.enabled" && v == "true"));
+        // Zero attempts would mean "never run anything" — rejected.
+        assert!(c.set("spark.task.maxFailures", "0").is_err());
+        assert!(c.set("spark.stage.maxConsecutiveAttempts", "0").is_err());
+        assert!(c.set("spark.excludeOnFailure.task.maxTaskAttemptsPerNode", "0").is_err());
+        assert!(c.set("spark.excludeOnFailure.enabled", "maybe").is_err());
     }
 
     #[test]

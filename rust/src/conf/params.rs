@@ -230,6 +230,37 @@ pub const PARAMS: &[ParamDef] = &[
         paper_param: false,
         doc: "Fraction of a stage's tasks that must be complete before speculation kicks in.",
     },
+    ParamDef {
+        key: "spark.task.maxFailures",
+        category: Category::Scheduling,
+        default: "4",
+        paper_param: false,
+        doc: "Task attempts before the stage (and job) aborts; only observable under an \
+              armed fault plan.",
+    },
+    ParamDef {
+        key: "spark.stage.maxConsecutiveAttempts",
+        category: Category::Scheduling,
+        default: "4",
+        paper_param: false,
+        doc: "Stage re-submissions (FetchFailed recoveries after an executor loss) before \
+              the job aborts.",
+    },
+    ParamDef {
+        key: "spark.excludeOnFailure.enabled",
+        category: Category::Scheduling,
+        default: "false",
+        paper_param: false,
+        doc: "Exclude nodes with repeated task failures from placement (Spark's \
+              blacklisting, renamed in 3.1).",
+    },
+    ParamDef {
+        key: "spark.excludeOnFailure.task.maxTaskAttemptsPerNode",
+        category: Category::Scheduling,
+        default: "2",
+        paper_param: false,
+        doc: "Task failures on one node before that node is excluded from placement.",
+    },
 ];
 
 /// Look up a parameter by key.
@@ -271,6 +302,10 @@ mod tests {
             "spark.speculation",
             "spark.speculation.multiplier",
             "spark.speculation.quantile",
+            "spark.task.maxFailures",
+            "spark.stage.maxConsecutiveAttempts",
+            "spark.excludeOnFailure.enabled",
+            "spark.excludeOnFailure.task.maxTaskAttemptsPerNode",
         ] {
             let p = find(key).unwrap_or_else(|| panic!("{key} missing from registry"));
             assert_eq!(p.category, Category::Scheduling, "{key}");

@@ -108,7 +108,7 @@ use crate::conf::SparkConf;
 use crate::exec::MemoryModel;
 use crate::obs::{SpanId, TraceSink};
 use crate::shuffle::IoProfiles;
-use crate::sim::{scheduler_for, EventSim, SimCheckpoint, SimOpts, SnapshotSink};
+use crate::sim::{scheduler_for, EventSim, FaultPlan, Phase, SimCheckpoint, SimOpts, SnapshotSink};
 use std::sync::Arc;
 
 /// Wave-barrier checkpoints recorded per run. Linear chains longer than
@@ -157,6 +157,13 @@ pub enum Sensitivity {
     /// Speculation policy — forkable when recorded facts certify no
     /// backup and no threshold crossing under either policy.
     PolicySpeculation,
+    /// Failure-handling policy (`spark.task.maxFailures`,
+    /// `spark.stage.maxConsecutiveAttempts`, `spark.excludeOnFailure.*`)
+    /// — read only when a recovery decision is made, so a checkpoint is
+    /// a valid fork point iff its recorded prefix is failure-free
+    /// ([`SimCheckpoint::fault_prefix_clean`]): a prefix that never made
+    /// a recovery decision is bit-identical under either policy.
+    PolicyFailure,
     /// Shapes the timeline in ways we don't fork; never reusable.
     Global,
 }
@@ -184,6 +191,10 @@ pub fn classify_param(key: &str) -> Option<Sensitivity> {
         "spark.speculation" => Sensitivity::PolicySpeculation,
         "spark.speculation.multiplier" => Sensitivity::PolicySpeculation,
         "spark.speculation.quantile" => Sensitivity::PolicySpeculation,
+        "spark.task.maxFailures" => Sensitivity::PolicyFailure,
+        "spark.stage.maxConsecutiveAttempts" => Sensitivity::PolicyFailure,
+        "spark.excludeOnFailure.enabled" => Sensitivity::PolicyFailure,
+        "spark.excludeOnFailure.task.maxTaskAttemptsPerNode" => Sensitivity::PolicyFailure,
         "spark.executor.cores" => Sensitivity::Global,
         "spark.executor.memory" => Sensitivity::Global,
         "spark.executor.instances" => Sensitivity::Global,
@@ -208,6 +219,7 @@ struct ConfDelta {
     cache: bool,
     locality: bool,
     spec: bool,
+    failure: bool,
     global: bool,
 }
 
@@ -235,6 +247,10 @@ fn conf_delta(a: &SparkConf, b: &SparkConf) -> ConfDelta {
         speculation,
         speculation_multiplier,
         speculation_quantile,
+        task_max_failures,
+        stage_max_attempts,
+        exclude_on_failure,
+        exclude_max_task_attempts_per_node,
         extras,
         warnings: _,
     } = a;
@@ -256,6 +272,10 @@ fn conf_delta(a: &SparkConf, b: &SparkConf) -> ConfDelta {
         spec: *speculation != b.speculation
             || speculation_multiplier.to_bits() != b.speculation_multiplier.to_bits()
             || speculation_quantile.to_bits() != b.speculation_quantile.to_bits(),
+        failure: *task_max_failures != b.task_max_failures
+            || *stage_max_attempts != b.stage_max_attempts
+            || *exclude_on_failure != b.exclude_on_failure
+            || *exclude_max_task_attempts_per_node != b.exclude_max_task_attempts_per_node,
         global: *executor_cores != b.executor_cores
             || *executor_memory != b.executor_memory
             || *num_executors != b.num_executors
@@ -307,7 +327,7 @@ fn divergence(a: &SparkConf, b: &SparkConf) -> Divergence {
     Divergence {
         shuffle: d.shuffle_read || d.write_buffer || d.spill || d.shuffle_bytes || d.shuffle,
         cache: d.cache,
-        global: d.global || d.locality || d.spec,
+        global: d.global || d.locality || d.spec || d.failure,
     }
 }
 
@@ -361,11 +381,15 @@ struct EngineCheckpoint {
     /// The newly runnable wave this checkpoint was taken in front of
     /// (empty for mid-stage checkpoints).
     to_submit: Vec<usize>,
-    /// handle → (job index, stage id, pricing metadata) prefix.
-    by_handle: Vec<(usize, usize, PricedMeta)>,
+    /// handle → (job index, stage id, pricing metadata, resubmission
+    /// descriptor) prefix.
+    by_handle: Vec<run::HandleEntry>,
     parents_left: Vec<usize>,
     pricing: PricingState,
     reports: Vec<Option<StageReport>>,
+    /// FetchFailed re-submission reports landed in the prefix (empty
+    /// without an armed fault plan).
+    extra_reports: Vec<StageReport>,
     finish: f64,
     /// (min, max) winning-task duration of each *completed* stage, by
     /// stage id — the completed half of the speculation crossing-free
@@ -387,8 +411,17 @@ impl EngineCheckpoint {
         let mut b = size_of::<EngineCheckpoint>() + self.sim.owned_bytes();
         b += (self.submitted.len() + self.to_submit.len() + self.parents_left.len())
             * size_of::<usize>();
-        b += self.by_handle.len() * size_of::<(usize, usize, PricedMeta)>();
+        b += self.by_handle.len() * size_of::<run::HandleEntry>();
+        b += self
+            .by_handle
+            .iter()
+            .filter_map(|e| e.3.as_ref())
+            .map(|rs| rs.indices.len() * size_of::<u32>() + rs.held.len() * size_of::<usize>())
+            .sum::<usize>();
         b += self.pricing.handoffs.len() * size_of::<Option<run::ShuffleHandoff>>();
+        b += self.pricing.stage_attempts.len() * size_of::<u32>();
+        b += self.pricing.phases.len() * size_of::<Option<[Phase; 5]>>();
+        b += self.extra_reports.len() * size_of::<StageReport>();
         b += self
             .pricing
             .placements
@@ -417,6 +450,10 @@ pub struct ForkPoint {
     /// crossing-free certificate needs it at probe time (when no
     /// cluster is in scope).
     task_overhead: f64,
+    /// The armed fault scenario the timeline was recorded under
+    /// (`None`: fault-free). Forks only resume under the *same*
+    /// scenario — the checkpoints carry its injector state.
+    faults: Option<FaultPlan>,
     checkpoints: Vec<EngineCheckpoint>,
     bytes: usize,
 }
@@ -426,6 +463,7 @@ impl ForkPoint {
         base_conf: SparkConf,
         opts: SimOpts,
         cluster: &ClusterSpec,
+        faults: Option<FaultPlan>,
         checkpoints: Vec<EngineCheckpoint>,
     ) -> ForkPoint {
         let mut bytes: usize = checkpoints.iter().map(EngineCheckpoint::owned_bytes).sum();
@@ -441,9 +479,15 @@ impl ForkPoint {
             opts,
             nodes: cluster.nodes,
             task_overhead: cluster.task_overhead,
+            faults,
             checkpoints,
             bytes,
         }
+    }
+
+    /// The armed fault scenario the timeline was recorded under, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref()
     }
 
     /// Number of recorded resume points (wave barriers + mid-stage).
@@ -471,6 +515,15 @@ impl ForkPoint {
     /// Would the recorded policy fields fork cleanly at `cp` under
     /// `conf`? (Trivially yes when they don't differ.)
     fn policy_fork_ok(&self, cp: &EngineCheckpoint, d: &ConfDelta, conf: &SparkConf) -> bool {
+        // Failure-policy fields are only read when a recovery decision
+        // is made; a prefix that recorded zero failures, losses, and
+        // aborts is certified bit-identical under either policy (the
+        // resume installs the new one for the suffix). Any recorded
+        // failure event means a decision was made → decline, never
+        // guess.
+        if d.failure && !cp.sim.fault_prefix_clean() {
+            return false;
+        }
         if d.locality && !cp.sim.locality_fork_ok(run::policy_of(conf).locality_wait) {
             return false;
         }
@@ -536,7 +589,9 @@ impl ForkPoint {
         self.checkpoints.iter().rev().find(|cp| {
             cp.by_handle
                 .iter()
-                .all(|(_, sid, meta)| !stage_sensitive(&plan.stages[*sid], meta, &d, first_writer))
+                .all(|(_, sid, meta, _)| {
+                    !stage_sensitive(&plan.stages[*sid], meta, &d, first_writer)
+                })
                 && self.policy_fork_ok(cp, &d, conf)
         })
     }
@@ -602,7 +657,7 @@ fn same_opts(a: &SimOpts, b: &SimOpts) -> bool {
 fn drain_mid_stage(
     sink: &mut SnapshotSink,
     jr: &run::JobRt<'_>,
-    by_handle: &[(usize, usize, PricedMeta)],
+    by_handle: &[run::HandleEntry],
     dur_bounds: &[Option<(f64, f64)>],
     checkpoints: &mut Vec<EngineCheckpoint>,
 ) {
@@ -623,6 +678,7 @@ fn drain_mid_stage(
             parents_left: jr.parents_left.clone(),
             pricing: jr.pricing.clone(),
             reports: jr.reports.clone(),
+            extra_reports: jr.extra_reports.clone(),
             finish: jr.finish,
             dur_bounds: dur_bounds.to_vec(),
             mid_stage: true,
@@ -642,7 +698,23 @@ pub fn run_planned_recording(
     cluster: &ClusterSpec,
     opts: &SimOpts,
 ) -> (JobResult, ForkPoint) {
-    run_planned_recording_traced(plan, conf, cluster, opts, &TraceSink::null(), SpanId::NONE)
+    recording_impl(plan, conf, cluster, opts, &TraceSink::null(), SpanId::NONE, None)
+}
+
+/// [`run_planned_recording`] under an armed fault scenario: bit-identical
+/// to [`run_planned_faulted`](super::run_planned_faulted) of the same
+/// inputs, and the recorded [`ForkPoint`] remembers the scenario — its
+/// checkpoints carry the injector's deterministic state, so
+/// [`run_planned_from_faulted`] resumes mid-scenario bit-identically. A
+/// disarmed plan records a plain fault-free fork.
+pub fn run_planned_recording_faulted(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    faults: &FaultPlan,
+) -> (JobResult, ForkPoint) {
+    recording_impl(plan, conf, cluster, opts, &TraceSink::null(), SpanId::NONE, Some(faults))
 }
 
 /// [`run_planned_recording`] with an observability recorder: stage and
@@ -660,12 +732,47 @@ pub fn run_planned_recording_traced(
     trace: &TraceSink,
     parent: SpanId,
 ) -> (JobResult, ForkPoint) {
+    recording_impl(plan, conf, cluster, opts, trace, parent, None)
+}
+
+/// The fully-general recording entry point: recorder plus an optional
+/// fault scenario (`None` or a disarmed plan records a plain fault-free
+/// fork). The fault-aware [`ForkingRunner`](crate::tuner::ForkingRunner)
+/// drives this so ensemble walks keep their trace lanes.
+pub fn run_planned_recording_faulted_traced(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    faults: Option<&FaultPlan>,
+    trace: &TraceSink,
+    parent: SpanId,
+) -> (JobResult, ForkPoint) {
+    recording_impl(plan, conf, cluster, opts, trace, parent, faults)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recording_impl(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    trace: &TraceSink,
+    parent: SpanId,
+    faults: Option<&FaultPlan>,
+) -> (JobResult, ForkPoint) {
     let mem = MemoryModel::new(conf, cluster);
     let prof = IoProfiles::from_conf(conf);
     let mut sim =
         EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), run::policy_of(conf));
     if trace.enabled() {
         sim.set_trace(trace.clone());
+    }
+    // A disarmed plan never perturbs anything — same rule as the batch
+    // runner, so `faults = None` and the empty plan share one code path.
+    let armed = faults.filter(|f| f.is_armed());
+    if let Some(f) = armed {
+        sim.arm_faults(Arc::new(f.clone()), run::recovery_of(conf));
     }
     sim.set_pool(0, plan.pool);
     let n = plan.stages.len();
@@ -675,6 +782,7 @@ pub fn run_planned_recording_traced(
         parents_left: plan.parents_left.clone(),
         pricing: PricingState::new(n),
         reports: vec![None; n],
+        extra_reports: Vec::new(),
         crash: None,
         crash_report: None,
         finish: 0.0,
@@ -682,7 +790,7 @@ pub fn run_planned_recording_traced(
         // bit (a solo run is job 0 of a one-job batch).
         job_seed: opts.seed,
     };
-    let mut by_handle: Vec<(usize, usize, PricedMeta)> = Vec::new();
+    let mut by_handle: Vec<run::HandleEntry> = Vec::new();
     let mut span_by_handle: Vec<(SpanId, f64)> = Vec::new();
     let mut checkpoints: Vec<EngineCheckpoint> = Vec::new();
     let mut wave_barriers = 0usize;
@@ -699,82 +807,131 @@ pub fn run_planned_recording_traced(
         );
     }
 
-    while let Some(done) = sim.advance_observed(Some(&mut sink)) {
+    loop {
+        let done = sim.advance_observed(Some(&mut sink));
+        // Adopt snapshots collected since the last engine-state change
+        // *before* this completion (or fault servicing) mutates the
+        // tables they pair with.
         drain_mid_stage(&mut sink, &jr, &by_handle, &dur_bounds, &mut checkpoints);
-        debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
-        let sid = by_handle[done.handle].1;
-        let meta = &by_handle[done.handle].2;
-        let stage_tasks = plan.stages[sid].tasks;
-        jr.reports[sid] = Some(StageReport {
-            name: Arc::clone(&plan.stages[sid].name),
-            duration: done.stats.duration,
-            tasks: stage_tasks,
-            cpu_secs: done.stats.cpu_secs,
-            disk_bytes: done.stats.disk_bytes,
-            net_bytes: done.stats.net_bytes,
-            spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
-            gc_factor: meta.gc,
-            cache_hit_fraction: meta.cache_hit_fraction,
-            locality_hits: done.stats.locality_hits,
-            speculated: done.stats.speculated,
-        });
-        if stage_tasks > 0 {
-            dur_bounds[sid] = Some((done.stats.task_time.min(), done.stats.task_time.max()));
-        }
-        jr.pricing.placements[sid] = Some(done.task_nodes);
-        jr.finish = done.at;
-        if trace.enabled() {
-            let (span, submitted) = span_by_handle[done.handle];
-            trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
-        }
-        // Collect the newly runnable wave first (instead of submitting
-        // each child inside the decrement loop, as the batch runner
-        // does) so the barrier snapshot can be taken in front of it;
-        // the submissions then happen in the same child order —
-        // bit-identical, pinned by the tests.
-        let mut wave: Vec<usize> = Vec::new();
-        for &ch in &plan.children[sid] {
-            jr.parents_left[ch] -= 1;
-            if jr.parents_left[ch] == 0 {
-                wave.push(ch);
+        if let Some(done) = &done {
+            debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
+            let sid = by_handle[done.handle].1;
+            if trace.enabled() {
+                let (span, submitted) = span_by_handle[done.handle];
+                trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
+            }
+            if done.aborted {
+                if jr.crash.is_none() {
+                    jr.crash = Some(format!(
+                        "{}: stage aborted — a task exceeded spark.task.maxFailures ({})",
+                        plan.stages[sid].name, conf.task_max_failures
+                    ));
+                    jr.crash_report =
+                        Some(run::partial_report(&plan.stages[sid], done.stats.duration));
+                }
+                jr.finish = done.at;
+            } else if let Some(rs) = by_handle[done.handle].3.clone() {
+                let meta = by_handle[done.handle].2.clone();
+                let runnable = run::finish_resubmit(&mut jr, plan, sid, &rs, &meta, done);
+                for ch in runnable {
+                    if jr.crash.is_none() {
+                        run::submit_stage(
+                            0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem,
+                            &prof, opts, trace, parent, &mut span_by_handle,
+                        );
+                    }
+                }
+            } else {
+                let meta = &by_handle[done.handle].2;
+                let stage_tasks = plan.stages[sid].tasks;
+                jr.reports[sid] = Some(StageReport {
+                    name: Arc::clone(&plan.stages[sid].name),
+                    duration: done.stats.duration,
+                    tasks: stage_tasks,
+                    cpu_secs: done.stats.cpu_secs,
+                    disk_bytes: done.stats.disk_bytes,
+                    net_bytes: done.stats.net_bytes,
+                    spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
+                    gc_factor: meta.gc,
+                    cache_hit_fraction: meta.cache_hit_fraction,
+                    locality_hits: done.stats.locality_hits,
+                    speculated: done.stats.speculated,
+                });
+                if stage_tasks > 0 {
+                    dur_bounds[sid] =
+                        Some((done.stats.task_time.min(), done.stats.task_time.max()));
+                }
+                jr.pricing.placements[sid] = Some(done.task_nodes.clone());
+                jr.finish = done.at;
+                // Collect the newly runnable wave first (instead of
+                // submitting each child inside the decrement loop, as
+                // the batch runner does) so the barrier snapshot can be
+                // taken in front of it; the submissions then happen in
+                // the same child order — bit-identical, pinned by the
+                // tests.
+                let mut wave: Vec<usize> = Vec::new();
+                for &ch in &plan.children[sid] {
+                    jr.parents_left[ch] -= 1;
+                    if jr.parents_left[ch] == 0 {
+                        wave.push(ch);
+                    }
+                }
+                if !wave.is_empty() && jr.crash.is_none() && wave_barriers < MAX_CHECKPOINTS {
+                    wave_barriers += 1;
+                    checkpoints.push(EngineCheckpoint {
+                        sim: sim.checkpoint(),
+                        submitted: by_handle.iter().map(|e| e.1).collect(),
+                        to_submit: wave.clone(),
+                        by_handle: by_handle.clone(),
+                        parents_left: jr.parents_left.clone(),
+                        pricing: jr.pricing.clone(),
+                        reports: jr.reports.clone(),
+                        extra_reports: jr.extra_reports.clone(),
+                        finish: jr.finish,
+                        dur_bounds: dur_bounds.clone(),
+                        mid_stage: false,
+                    });
+                }
+                for ch in wave {
+                    if jr.crash.is_none() {
+                        run::submit_stage(
+                            0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem,
+                            &prof, opts, trace, parent, &mut span_by_handle,
+                        );
+                    }
+                }
             }
         }
-        if !wave.is_empty() && jr.crash.is_none() && wave_barriers < MAX_CHECKPOINTS {
-            wave_barriers += 1;
-            checkpoints.push(EngineCheckpoint {
-                sim: sim.checkpoint(),
-                submitted: by_handle.iter().map(|e| e.1).collect(),
-                to_submit: wave.clone(),
-                by_handle: by_handle.clone(),
-                parents_left: jr.parents_left.clone(),
-                pricing: jr.pricing.clone(),
-                reports: jr.reports.clone(),
-                finish: jr.finish,
-                dur_bounds: dur_bounds.clone(),
-                mid_stage: false,
-            });
-        }
-        for ch in wave {
-            if jr.crash.is_none() {
-                run::submit_stage(
-                    0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
-                    trace, parent, &mut span_by_handle,
-                );
-            }
+        let progressed = run::service_fault_events(
+            &mut sim,
+            std::slice::from_mut(&mut jr),
+            &mut by_handle,
+            &mut span_by_handle,
+            &[parent],
+            conf,
+            cluster,
+            opts,
+            trace,
+        );
+        if done.is_none() && !progressed {
+            break;
         }
     }
     // Snapshots taken inside the final stages (no wave follows them)
     // are resume points too: a policy-only delta can fork almost at
     // the end of the timeline.
     drain_mid_stage(&mut sink, &jr, &by_handle, &dur_bounds, &mut checkpoints);
-    debug_assert_eq!(
-        by_handle.len() as u64,
-        sim.stats().completions,
+    if jr.crash.is_none() && jr.reports.iter().any(|r| r.is_none()) {
+        jr.crash = Some("cluster lost: stages left unfinished with no compute remaining".into());
+    }
+    debug_assert!(
+        sim.fault_plan().is_some() || by_handle.len() as u64 == sim.stats().completions,
         "event core went idle with registered stages incomplete"
     );
 
     let sim_stats = sim.stats();
     let mut stages: Vec<StageReport> = jr.reports.into_iter().flatten().collect();
+    stages.extend(jr.extra_reports);
     if let Some(cr) = jr.crash_report {
         stages.push(cr);
     }
@@ -785,7 +942,7 @@ pub fn run_planned_recording_traced(
         stages,
         sim: sim_stats,
     };
-    let fork = ForkPoint::new(conf.clone(), opts.clone(), cluster, checkpoints);
+    let fork = ForkPoint::new(conf.clone(), opts.clone(), cluster, armed.cloned(), checkpoints);
     (result, fork)
 }
 
@@ -807,7 +964,34 @@ pub fn run_planned_from(
     cluster: &ClusterSpec,
     opts: &SimOpts,
 ) -> Option<JobResult> {
-    run_planned_from_with_traced(fork, plan, conf, cluster, opts, false, &TraceSink::null(), SpanId::NONE)
+    from_impl(fork, plan, conf, cluster, opts, false, &TraceSink::null(), SpanId::NONE, None)
+}
+
+/// [`run_planned_from`] for a fork recorded under an armed fault
+/// scenario ([`run_planned_recording_faulted`]): resumes mid-scenario —
+/// the checkpoint carries the injector's deterministic state — and is
+/// bit-identical to a full [`run_planned_faulted`](super::run_planned_faulted)
+/// of the same `(conf, faults)`. Declines (`None`) when `faults` is not
+/// the recorded scenario: a fork never guesses across fault contexts.
+pub fn run_planned_from_faulted(
+    fork: &ForkPoint,
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    faults: &FaultPlan,
+) -> Option<JobResult> {
+    from_impl(
+        fork,
+        plan,
+        conf,
+        cluster,
+        opts,
+        false,
+        &TraceSink::null(),
+        SpanId::NONE,
+        Some(faults),
+    )
 }
 
 /// [`run_planned_from`] with an observability recorder: emits a
@@ -825,7 +1009,7 @@ pub fn run_planned_from_traced(
     trace: &TraceSink,
     parent: SpanId,
 ) -> Option<JobResult> {
-    run_planned_from_with_traced(fork, plan, conf, cluster, opts, false, trace, parent)
+    from_impl(fork, plan, conf, cluster, opts, false, trace, parent, None)
 }
 
 /// [`run_planned_from`] under an explicit classifier. `coarse = true`
@@ -840,7 +1024,7 @@ pub fn run_planned_from_with(
     opts: &SimOpts,
     coarse: bool,
 ) -> Option<JobResult> {
-    run_planned_from_with_traced(fork, plan, conf, cluster, opts, coarse, &TraceSink::null(), SpanId::NONE)
+    from_impl(fork, plan, conf, cluster, opts, coarse, &TraceSink::null(), SpanId::NONE, None)
 }
 
 /// [`run_planned_from_with`] plus a recorder — the fully-general resume
@@ -856,8 +1040,51 @@ pub fn run_planned_from_with_traced(
     trace: &TraceSink,
     parent: SpanId,
 ) -> Option<JobResult> {
+    from_impl(fork, plan, conf, cluster, opts, coarse, trace, parent, None)
+}
+
+/// The fully-general resume entry point: explicit classifier, recorder,
+/// and an optional fault scenario. Declines (returns `None`) when the
+/// requested scenario does not match the one the fork was recorded
+/// under — an armed request against a fault-free recording (or vice
+/// versa, or a different plan) must re-price from `t = 0`.
+#[allow(clippy::too_many_arguments)]
+pub fn run_planned_from_with_faulted_traced(
+    fork: &ForkPoint,
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    coarse: bool,
+    trace: &TraceSink,
+    parent: SpanId,
+    faults: Option<&FaultPlan>,
+) -> Option<JobResult> {
+    from_impl(fork, plan, conf, cluster, opts, coarse, trace, parent, faults)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn from_impl(
+    fork: &ForkPoint,
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    coarse: bool,
+    trace: &TraceSink,
+    parent: SpanId,
+    faults: Option<&FaultPlan>,
+) -> Option<JobResult> {
     if cluster.nodes != fork.nodes || !same_opts(&fork.opts, opts) {
         return None;
+    }
+    // The fork only describes the timeline of the scenario it was
+    // recorded under: a fault-free fork never resumes a faulted trial
+    // and vice versa, and two different scenarios never mix.
+    match (fork.faults.as_ref(), faults.filter(|f| f.is_armed())) {
+        (None, None) => {}
+        (Some(rec), Some(req)) if rec == req => {}
+        _ => return None,
     }
     let cp = fork.resume_checkpoint_with(plan, conf, coarse)?;
     let mem = MemoryModel::new(conf, cluster);
@@ -873,6 +1100,11 @@ pub fn run_planned_from_with_traced(
         &cp.sim,
         run::policy_of(conf),
     );
+    // The injector state rode along in the snapshot; the recovery
+    // *policy* is conf-derived, so install the (possibly different —
+    // certified by `policy_fork_ok`) one for the suffix. No-op on
+    // fault-free forks.
+    sim.set_recovery(run::recovery_of(conf));
     if trace.enabled() {
         sim.set_trace(trace.clone());
         trace.instant(
@@ -888,6 +1120,7 @@ pub fn run_planned_from_with_traced(
         parents_left: cp.parents_left.clone(),
         pricing: cp.pricing.clone(),
         reports: cp.reports.clone(),
+        extra_reports: cp.extra_reports.clone(),
         crash: None,
         crash_report: None,
         finish: cp.finish,
@@ -909,48 +1142,91 @@ pub fn run_planned_from_with_traced(
             );
         }
     }
-    while let Some(done) = sim.advance() {
-        debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
-        let sid = by_handle[done.handle].1;
-        let meta = &by_handle[done.handle].2;
-        let stage_tasks = plan.stages[sid].tasks;
-        jr.reports[sid] = Some(StageReport {
-            name: Arc::clone(&plan.stages[sid].name),
-            duration: done.stats.duration,
-            tasks: stage_tasks,
-            cpu_secs: done.stats.cpu_secs,
-            disk_bytes: done.stats.disk_bytes,
-            net_bytes: done.stats.net_bytes,
-            spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
-            gc_factor: meta.gc,
-            cache_hit_fraction: meta.cache_hit_fraction,
-            locality_hits: done.stats.locality_hits,
-            speculated: done.stats.speculated,
-        });
-        jr.pricing.placements[sid] = Some(done.task_nodes);
-        jr.finish = done.at;
-        if trace.enabled() {
-            let (span, submitted) = span_by_handle[done.handle];
-            trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
-        }
-        for &ch in &plan.children[sid] {
-            jr.parents_left[ch] -= 1;
-            if jr.parents_left[ch] == 0 && jr.crash.is_none() {
-                run::submit_stage(
-                    0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem, &prof, opts,
-                    trace, parent, &mut span_by_handle,
-                );
+    loop {
+        let done = sim.advance();
+        if let Some(done) = &done {
+            debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
+            let sid = by_handle[done.handle].1;
+            if trace.enabled() {
+                let (span, submitted) = span_by_handle[done.handle];
+                trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
+            }
+            if done.aborted {
+                if jr.crash.is_none() {
+                    jr.crash = Some(format!(
+                        "{}: stage aborted — a task exceeded spark.task.maxFailures ({})",
+                        plan.stages[sid].name, conf.task_max_failures
+                    ));
+                    jr.crash_report =
+                        Some(run::partial_report(&plan.stages[sid], done.stats.duration));
+                }
+                jr.finish = done.at;
+            } else if let Some(rs) = by_handle[done.handle].3.clone() {
+                let meta = by_handle[done.handle].2.clone();
+                let runnable = run::finish_resubmit(&mut jr, plan, sid, &rs, &meta, done);
+                for ch in runnable {
+                    if jr.crash.is_none() {
+                        run::submit_stage(
+                            0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem,
+                            &prof, opts, trace, parent, &mut span_by_handle,
+                        );
+                    }
+                }
+            } else {
+                let meta = &by_handle[done.handle].2;
+                let stage_tasks = plan.stages[sid].tasks;
+                jr.reports[sid] = Some(StageReport {
+                    name: Arc::clone(&plan.stages[sid].name),
+                    duration: done.stats.duration,
+                    tasks: stage_tasks,
+                    cpu_secs: done.stats.cpu_secs,
+                    disk_bytes: done.stats.disk_bytes,
+                    net_bytes: done.stats.net_bytes,
+                    spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
+                    gc_factor: meta.gc,
+                    cache_hit_fraction: meta.cache_hit_fraction,
+                    locality_hits: done.stats.locality_hits,
+                    speculated: done.stats.speculated,
+                });
+                jr.pricing.placements[sid] = Some(done.task_nodes.clone());
+                jr.finish = done.at;
+                for &ch in &plan.children[sid] {
+                    jr.parents_left[ch] -= 1;
+                    if jr.parents_left[ch] == 0 && jr.crash.is_none() {
+                        run::submit_stage(
+                            0, ch, &mut jr, &mut sim, &mut by_handle, conf, cluster, &mem,
+                            &prof, opts, trace, parent, &mut span_by_handle,
+                        );
+                    }
+                }
             }
         }
+        let progressed = run::service_fault_events(
+            &mut sim,
+            std::slice::from_mut(&mut jr),
+            &mut by_handle,
+            &mut span_by_handle,
+            &[parent],
+            conf,
+            cluster,
+            opts,
+            trace,
+        );
+        if done.is_none() && !progressed {
+            break;
+        }
     }
-    debug_assert_eq!(
-        by_handle.len() as u64,
-        sim.stats().completions,
+    if jr.crash.is_none() && jr.reports.iter().any(|r| r.is_none()) {
+        jr.crash = Some("cluster lost: stages left unfinished with no compute remaining".into());
+    }
+    debug_assert!(
+        sim.fault_plan().is_some() || by_handle.len() as u64 == sim.stats().completions,
         "event core went idle with registered stages incomplete"
     );
 
     let sim_stats = sim.stats();
     let mut stages: Vec<StageReport> = jr.reports.into_iter().flatten().collect();
+    stages.extend(jr.extra_reports);
     if let Some(cr) = jr.crash_report {
         stages.push(cr);
     }

@@ -22,13 +22,14 @@ pub mod plan;
 pub mod run;
 
 pub use fork::{
-    classify_param, divergence_mask, run_planned_from, run_planned_from_traced,
-    run_planned_from_with, run_planned_recording, run_planned_recording_traced, ForkPoint,
-    Sensitivity,
+    classify_param, divergence_mask, run_planned_from, run_planned_from_faulted,
+    run_planned_from_traced, run_planned_from_with, run_planned_recording,
+    run_planned_recording_faulted, run_planned_recording_traced, ForkPoint, Sensitivity,
 };
 pub use plan::{plan, Locality, Stage, StageInput, StageOutput};
 pub use run::{
-    prepare, run, run_all, run_all_planned, run_planned, run_planned_traced, JobPlan, JobResult,
+    prepare, run, run_all, run_all_planned, run_all_planned_faulted, run_planned,
+    run_planned_faulted, run_planned_faulted_traced, run_planned_traced, JobPlan, JobResult,
     MultiJobResult, StageReport,
 };
 

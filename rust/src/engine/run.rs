@@ -51,7 +51,8 @@ use crate::exec::{MemoryModel, SpillPlan};
 use crate::obs::{SpanId, TraceSink};
 use crate::shuffle::{self, IoProfiles, MapSideSpec, ReduceSideSpec};
 use crate::sim::{
-    scheduler_for, EventSim, Phase, PoolSpec, SimOpts, SimPolicy, SimStats, SpecPolicy, StageSpec,
+    scheduler_for, EventSim, FaultEvent, FaultPlan, Phase, PoolSpec, RecoveryPolicy, SimOpts,
+    SimPolicy, SimStats, SpecPolicy, StageCompletion, StageSpec,
 };
 use crate::storage::{self, PersistLevel};
 use std::sync::Arc;
@@ -237,8 +238,57 @@ pub fn run_planned_traced(
     parent: SpanId,
 ) -> JobResult {
     let entries = vec![PlanEntry::Planned(Arc::clone(plan))];
-    let mut all = run_all_entries(&entries, conf, cluster, opts, trace, parent);
+    let mut all = run_all_entries(&entries, conf, cluster, opts, trace, parent, None);
     all.results.pop().expect("one plan in, one result out")
+}
+
+/// [`run_planned`] with a deterministic fault scenario armed: the event
+/// core injects `faults`' seeded crash hazards and executor losses, and
+/// the runner performs Spark-faithful recovery — task retries up to
+/// `spark.task.maxFailures`, FetchFailed stage resubmission for lost
+/// shuffle-map partitions bounded by `spark.stage.maxConsecutiveAttempts`,
+/// and node exclusion per `spark.excludeOnFailure.*`. A disarmed plan
+/// (`FaultPlan::default()`) is bit-identical to [`run_planned`].
+pub fn run_planned_faulted(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    faults: &FaultPlan,
+) -> JobResult {
+    run_planned_faulted_traced(plan, conf, cluster, opts, faults, &TraceSink::null(), SpanId::NONE)
+}
+
+/// [`run_planned_faulted`] with an observability recorder attached —
+/// fault instants (executor loss/restart, exclusion, aborts) land in the
+/// trace alongside the usual job/stage/task spans. A pure observer: the
+/// returned result is bit-identical to the untraced call.
+pub fn run_planned_faulted_traced(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    faults: &FaultPlan,
+    trace: &TraceSink,
+    parent: SpanId,
+) -> JobResult {
+    let entries = vec![PlanEntry::Planned(Arc::clone(plan))];
+    let mut all = run_all_entries(&entries, conf, cluster, opts, trace, parent, Some(faults));
+    all.results.pop().expect("one plan in, one result out")
+}
+
+/// [`run_all_planned`] under an armed fault scenario — the multi-job
+/// counterpart of [`run_planned_faulted`].
+pub fn run_all_planned_faulted(
+    plans: &[Arc<JobPlan>],
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    faults: &FaultPlan,
+) -> MultiJobResult {
+    let entries: Vec<PlanEntry> =
+        plans.iter().map(|p| PlanEntry::Planned(Arc::clone(p))).collect();
+    run_all_entries(&entries, conf, cluster, opts, &TraceSink::null(), SpanId::NONE, Some(faults))
 }
 
 /// Run a batch of jobs **concurrently** on one cluster, planning each on
@@ -264,7 +314,7 @@ pub fn run_all(
             },
         })
         .collect();
-    run_all_entries(&entries, conf, cluster, opts, &TraceSink::null(), SpanId::NONE)
+    run_all_entries(&entries, conf, cluster, opts, &TraceSink::null(), SpanId::NONE, None)
 }
 
 /// Run a batch of **prepared** plans concurrently — the price-many path:
@@ -278,7 +328,7 @@ pub fn run_all_planned(
 ) -> MultiJobResult {
     let entries: Vec<PlanEntry> =
         plans.iter().map(|p| PlanEntry::Planned(Arc::clone(p))).collect();
-    run_all_entries(&entries, conf, cluster, opts, &TraceSink::null(), SpanId::NONE)
+    run_all_entries(&entries, conf, cluster, opts, &TraceSink::null(), SpanId::NONE, None)
 }
 
 /// One job's planning outcome entering the runner.
@@ -294,6 +344,7 @@ fn run_all_entries(
     opts: &SimOpts,
     trace: &TraceSink,
     parent: SpanId,
+    faults: Option<&FaultPlan>,
 ) -> MultiJobResult {
     let mem = MemoryModel::new(conf, cluster);
     let prof = IoProfiles::from_conf(conf);
@@ -301,6 +352,14 @@ fn run_all_entries(
         EventSim::with_policy(cluster, scheduler_for(conf.scheduler_mode), policy_of(conf));
     if trace.enabled() {
         sim.set_trace(trace.clone());
+    }
+    // A disarmed plan (no hazards, no losses) never perturbs anything:
+    // skip arming entirely so `faults = None` and the empty plan share
+    // one code path, bit for bit.
+    if let Some(f) = faults {
+        if f.is_armed() {
+            sim.arm_faults(Arc::new(f.clone()), recovery_of(conf));
+        }
     }
 
     // ---- per-job runtime bookkeeping over the shared plans ----
@@ -319,6 +378,7 @@ fn run_all_entries(
                     parents_left: plan.parents_left.clone(),
                     pricing: PricingState::new(n),
                     reports: vec![None; n],
+                    extra_reports: Vec::new(),
                     crash: None,
                     crash_report: None,
                     finish: 0.0,
@@ -332,6 +392,7 @@ fn run_all_entries(
                     parents_left: Vec::new(),
                     pricing: PricingState::new(0),
                     reports: Vec::new(),
+                    extra_reports: Vec::new(),
                     crash: Some(msg.clone()),
                     crash_report: None,
                     finish: 0.0,
@@ -354,9 +415,10 @@ fn run_all_entries(
         })
         .collect();
 
-    // handle → (job index, stage id, pricing metadata); handles are
-    // sequential, so the table is a dense Vec, not a hash map.
-    let mut by_handle: Vec<(usize, usize, PricedMeta)> = Vec::new();
+    // handle → (job index, stage id, pricing metadata, resubmission
+    // descriptor); handles are sequential, so the table is a dense Vec,
+    // not a hash map.
+    let mut by_handle: Vec<HandleEntry> = Vec::new();
     // handle → (stage span, submission clock), parallel to `by_handle`.
     let mut span_by_handle: Vec<(SpanId, f64)> = Vec::new();
 
@@ -389,62 +451,133 @@ fn run_all_entries(
     }
 
     // ---- pump completion events; unlock DAG children as they land ----
-    while let Some(done) = sim.advance() {
-        debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
-        let (ji, sid) = (by_handle[done.handle].0, by_handle[done.handle].1);
-        let meta = &by_handle[done.handle].2;
-        let jr = &mut jobs_rt[ji];
-        let plan = jr.plan.expect("submitted stage belongs to a planned job");
-        let stage_tasks = plan.stages[sid].tasks;
-        jr.reports[sid] = Some(StageReport {
-            name: Arc::clone(&plan.stages[sid].name),
-            duration: done.stats.duration,
-            tasks: stage_tasks,
-            cpu_secs: done.stats.cpu_secs,
-            disk_bytes: done.stats.disk_bytes,
-            net_bytes: done.stats.net_bytes,
-            spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
-            gc_factor: meta.gc,
-            cache_hit_fraction: meta.cache_hit_fraction,
-            locality_hits: done.stats.locality_hits,
-            speculated: done.stats.speculated,
-        });
-        // Record where each task actually ran: cache-read children derive
-        // their preferred nodes from the writer's real placement.
-        jr.pricing.placements[sid] = Some(done.task_nodes);
-        jr.finish = done.at;
-        if trace.enabled() {
-            let (span, submitted) = span_by_handle[done.handle];
-            trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
-        }
-        for &ch in &plan.children[sid] {
+    // Under an armed fault plan the loop also services the core's fault
+    // notifications after every advance: an executor loss invalidates
+    // the lost node's finished shuffle-map outputs, which resubmits the
+    // producing stage for exactly the lost partitions (the FetchFailed
+    // path). With no plan armed no fault event ever queues and the loop
+    // degenerates to the historical `while let Some(done)` pump.
+    loop {
+        let done = sim.advance();
+        if let Some(done) = &done {
+            debug_assert!(done.handle < by_handle.len(), "every submitted stage was registered");
+            let (ji, sid) = (by_handle[done.handle].0, by_handle[done.handle].1);
             let jr = &mut jobs_rt[ji];
-            jr.parents_left[ch] -= 1;
-            if jr.parents_left[ch] == 0 && jr.crash.is_none() {
-                submit_stage(
-                    ji,
-                    ch,
-                    jr,
-                    &mut sim,
-                    &mut by_handle,
-                    conf,
-                    cluster,
-                    &mem,
-                    &prof,
-                    opts,
-                    trace,
-                    job_spans[ji],
-                    &mut span_by_handle,
-                );
+            let plan = jr.plan.expect("submitted stage belongs to a planned job");
+            if trace.enabled() {
+                let (span, submitted) = span_by_handle[done.handle];
+                trace.close(span, "stage", &plan.stages[sid].name, submitted, done.at);
             }
+            if done.aborted {
+                // A task ran out of attempts: the stage — and the job —
+                // is gone. Already-running sibling stages drain normally.
+                if jr.crash.is_none() {
+                    jr.crash = Some(format!(
+                        "{}: stage aborted — a task exceeded spark.task.maxFailures ({})",
+                        plan.stages[sid].name, conf.task_max_failures
+                    ));
+                    jr.crash_report = Some(partial_report(&plan.stages[sid], done.stats.duration));
+                }
+                jr.finish = done.at;
+            } else if let Some(rs) = by_handle[done.handle].3.clone() {
+                let meta = by_handle[done.handle].2.clone();
+                let runnable = finish_resubmit(jr, plan, sid, &rs, &meta, done);
+                for ch in runnable {
+                    let jr = &mut jobs_rt[ji];
+                    if jr.crash.is_none() {
+                        submit_stage(
+                            ji,
+                            ch,
+                            jr,
+                            &mut sim,
+                            &mut by_handle,
+                            conf,
+                            cluster,
+                            &mem,
+                            &prof,
+                            opts,
+                            trace,
+                            job_spans[ji],
+                            &mut span_by_handle,
+                        );
+                    }
+                }
+            } else {
+                let meta = &by_handle[done.handle].2;
+                let stage_tasks = plan.stages[sid].tasks;
+                jr.reports[sid] = Some(StageReport {
+                    name: Arc::clone(&plan.stages[sid].name),
+                    duration: done.stats.duration,
+                    tasks: stage_tasks,
+                    cpu_secs: done.stats.cpu_secs,
+                    disk_bytes: done.stats.disk_bytes,
+                    net_bytes: done.stats.net_bytes,
+                    spilled_bytes: meta.spilled_per_task * stage_tasks as u64,
+                    gc_factor: meta.gc,
+                    cache_hit_fraction: meta.cache_hit_fraction,
+                    locality_hits: done.stats.locality_hits,
+                    speculated: done.stats.speculated,
+                });
+                // Record where each task actually ran: cache-read children
+                // derive their preferred nodes from the writer's real
+                // placement.
+                jr.pricing.placements[sid] = Some(done.task_nodes.clone());
+                jr.finish = done.at;
+                for &ch in &plan.children[sid] {
+                    let jr = &mut jobs_rt[ji];
+                    jr.parents_left[ch] -= 1;
+                    if jr.parents_left[ch] == 0 && jr.crash.is_none() {
+                        submit_stage(
+                            ji,
+                            ch,
+                            jr,
+                            &mut sim,
+                            &mut by_handle,
+                            conf,
+                            cluster,
+                            &mem,
+                            &prof,
+                            opts,
+                            trace,
+                            job_spans[ji],
+                            &mut span_by_handle,
+                        );
+                    }
+                }
+            }
+        }
+        let progressed = service_fault_events(
+            &mut sim,
+            &mut jobs_rt,
+            &mut by_handle,
+            &mut span_by_handle,
+            &job_spans,
+            conf,
+            cluster,
+            opts,
+            trace,
+        );
+        if done.is_none() && !progressed {
+            break;
+        }
+    }
+    // A fault scenario can strand work: every node down or excluded
+    // with tasks still queued, or a job waiting on a resubmission that
+    // itself aborted. Whatever is left unfinished is a crash, not a
+    // result.
+    for jr in &mut jobs_rt {
+        if jr.plan.is_some() && jr.crash.is_none() && jr.reports.iter().any(|r| r.is_none()) {
+            jr.crash =
+                Some("cluster lost: stages left unfinished with no compute remaining".into());
         }
     }
     // Every registered stage must have completed: a custom Scheduler that
     // stalls the core (see `Scheduler::pick`) would otherwise silently
-    // drop stages from the reports.
-    debug_assert_eq!(
-        by_handle.len() as u64,
-        sim.stats().completions,
+    // drop stages from the reports. (Under an armed fault plan a genuine
+    // stall is possible — all nodes down — and is reported as a crash
+    // above instead.)
+    debug_assert!(
+        sim.fault_plan().is_some() || by_handle.len() as u64 == sim.stats().completions,
         "event core went idle with registered stages incomplete"
     );
 
@@ -459,6 +592,7 @@ fn run_all_entries(
         .into_iter()
         .map(|jr| {
             let mut stages: Vec<StageReport> = jr.reports.into_iter().flatten().collect();
+            stages.extend(jr.extra_reports);
             if let Some(cr) = jr.crash_report {
                 stages.push(cr);
             }
@@ -477,6 +611,18 @@ fn run_all_entries(
         .map(|r| r.duration)
         .fold(0.0f64, f64::max);
     MultiJobResult { results, makespan, sim: sim_stats }
+}
+
+/// Failure-handling knobs flow from the typed configuration into the
+/// event core's recovery policy. Shared with the incremental re-pricing
+/// runner ([`super::fork`]) so both build the identical policy.
+pub(super) fn recovery_of(conf: &SparkConf) -> RecoveryPolicy {
+    RecoveryPolicy {
+        max_task_failures: conf.task_max_failures,
+        max_stage_attempts: conf.stage_max_attempts,
+        exclude_on_failure: conf.exclude_on_failure,
+        max_task_attempts_per_node: conf.exclude_max_task_attempts_per_node,
+    }
 }
 
 /// Delay scheduling + speculation flow from the typed configuration into
@@ -510,6 +656,9 @@ pub(super) struct JobRt<'p> {
     pub(super) pricing: PricingState,
     /// Completed stage reports by stage id.
     pub(super) reports: Vec<Option<StageReport>>,
+    /// Reports for FetchFailed stage re-submissions (fault recovery) —
+    /// appended after the regular per-stage reports in the result.
+    pub(super) extra_reports: Vec<StageReport>,
     pub(super) crash: Option<String>,
     pub(super) crash_report: Option<StageReport>,
     /// Event-clock time of the last completion (or of the crash).
@@ -532,8 +681,17 @@ pub(super) struct PricingState {
     /// Shuffle handoff recorded under the *producer* stage id.
     pub(super) handoffs: Vec<Option<ShuffleHandoff>>,
     /// Actual node of each completed stage's tasks (by stage id, indexed
-    /// by task) — the source of cache-read locality preferences.
+    /// by task) — the source of cache-read locality preferences. A lost
+    /// executor's entries are poisoned to `NodeId::MAX` until the
+    /// FetchFailed resubmission re-places them.
     pub(super) placements: Vec<Option<Vec<NodeId>>>,
+    /// FetchFailed re-submissions per stage id, compared against
+    /// `spark.stage.maxConsecutiveAttempts`.
+    pub(super) stage_attempts: Vec<u32>,
+    /// Priced phase template per submitted stage id — FetchFailed
+    /// resubmissions replay the template for the lost partitions without
+    /// re-pricing (re-pricing would double-apply cache-plan mutations).
+    pub(super) phases: Vec<Option<[Phase; 5]>>,
 }
 
 impl PricingState {
@@ -542,6 +700,8 @@ impl PricingState {
             cache_plan: None,
             handoffs: vec![None; stages],
             placements: vec![None; stages],
+            stage_attempts: vec![0; stages],
+            phases: vec![None; stages],
         }
     }
 }
@@ -569,6 +729,25 @@ pub(super) struct PricedMeta {
     pub(super) flush_pressure: f64,
 }
 
+/// Descriptor of a FetchFailed stage re-submission in flight: which
+/// original partition indices are being recomputed, which children were
+/// re-held (parents_left re-incremented) until the recovery lands, and
+/// which consecutive attempt this is.
+#[derive(Clone, Debug)]
+pub(super) struct Resubmit {
+    /// Original task indices of the lost partitions, in index order.
+    pub(super) indices: Vec<u32>,
+    /// Children whose `parents_left` was re-incremented for this
+    /// recovery (released — and possibly submitted — when it lands).
+    pub(super) held: Vec<usize>,
+    /// Consecutive re-submission attempt number (1-based).
+    pub(super) attempt: u32,
+}
+
+/// One `by_handle` row: (job index, stage id, pricing metadata,
+/// resubmission descriptor — `None` for a regular submission).
+pub(super) type HandleEntry = (usize, usize, PricedMeta, Option<Resubmit>);
+
 /// Price `sid` and submit its tasks to the event core; on OOM, mark the
 /// job crashed (no further stages of this job are submitted).
 ///
@@ -583,7 +762,7 @@ pub(super) fn submit_stage(
     sid: usize,
     jr: &mut JobRt<'_>,
     sim: &mut EventSim<'_>,
-    by_handle: &mut Vec<(usize, usize, PricedMeta)>,
+    by_handle: &mut Vec<HandleEntry>,
     conf: &SparkConf,
     cluster: &ClusterSpec,
     mem: &MemoryModel,
@@ -634,7 +813,8 @@ pub(super) fn submit_stage(
                 &stage_opts,
             );
             debug_assert_eq!(handle, by_handle.len(), "stage handles are sequential");
-            by_handle.push((ji, sid, meta));
+            jr.pricing.phases[sid] = Some(phases);
+            by_handle.push((ji, sid, meta, None));
             if trace.enabled() {
                 let span = trace.open(job_span, "stage");
                 sim.bind_trace_span(handle, span);
@@ -649,6 +829,198 @@ pub(super) fn submit_stage(
             jr.finish = sim.now();
         }
     }
+}
+
+/// Drain the event core's queued fault notifications and react the way
+/// Spark's DAGScheduler does: an executor loss invalidates the lost
+/// node's **finished** shuffle-map outputs, so any stage whose output a
+/// consumer still needs is re-submitted for exactly the lost partitions
+/// (the FetchFailed path), bounded by
+/// `spark.stage.maxConsecutiveAttempts`. Returns whether any work was
+/// submitted (the pump keeps spinning while recovery makes progress).
+/// Disarmed cores never queue events, so the fault-free hot path pays
+/// one empty-`Vec` take per iteration and nothing else.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn service_fault_events(
+    sim: &mut EventSim<'_>,
+    jobs_rt: &mut [JobRt<'_>],
+    by_handle: &mut Vec<HandleEntry>,
+    span_by_handle: &mut Vec<(SpanId, f64)>,
+    job_spans: &[SpanId],
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+    trace: &TraceSink,
+) -> bool {
+    let events = sim.take_fault_events();
+    if events.is_empty() {
+        return false;
+    }
+    let mut progressed = false;
+    for ev in &events {
+        let FaultEvent::ExecutorLost { node, .. } = ev else { continue };
+        let node = *node;
+        for ji in 0..jobs_rt.len() {
+            let jr = &mut jobs_rt[ji];
+            if jr.crash.is_some() {
+                continue;
+            }
+            let Some(plan) = jr.plan else { continue };
+            for sid in 0..plan.stages.len() {
+                if !matches!(plan.stages[sid].output, StageOutput::ShuffleWrite { .. }) {
+                    continue;
+                }
+                // Only finished map outputs can be lost here; a running
+                // stage's in-flight copies are the core's problem.
+                if jr.reports[sid].is_none() {
+                    continue;
+                }
+                let lost: Vec<u32> = match jr.pricing.placements[sid].as_ref() {
+                    Some(pl) => pl
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &n)| n == node)
+                        .map(|(i, _)| i as u32)
+                        .collect(),
+                    None => continue,
+                };
+                if lost.is_empty() {
+                    continue;
+                }
+                // Spark resubmits on FetchFailed — i.e. only when a
+                // consumer still needs the output. On the engine's chain
+                // DAGs that means a direct child has not completed yet.
+                let needed = plan.children[sid].iter().any(|&ch| jr.reports[ch].is_none());
+                if !needed {
+                    continue;
+                }
+                jr.pricing.stage_attempts[sid] += 1;
+                let attempt = jr.pricing.stage_attempts[sid];
+                if attempt >= conf.stage_max_attempts {
+                    jr.crash = Some(format!(
+                        "{}: FetchFailed recovery exceeded \
+                         spark.stage.maxConsecutiveAttempts ({})",
+                        plan.stages[sid].name, conf.stage_max_attempts
+                    ));
+                    jr.crash_report = Some(partial_report(&plan.stages[sid], 0.0));
+                    jr.finish = sim.now();
+                    break;
+                }
+                // Poison the lost slots so overlapping losses cannot
+                // re-resubmit the same partitions.
+                if let Some(pl) = jr.pricing.placements[sid].as_mut() {
+                    for &i in &lost {
+                        pl[i as usize] = NodeId::MAX;
+                    }
+                }
+                // Children not yet submitted also wait for the recovery.
+                let held: Vec<usize> = plan.children[sid]
+                    .iter()
+                    .copied()
+                    .filter(|&ch| jr.parents_left[ch] > 0)
+                    .collect();
+                for &ch in &held {
+                    jr.parents_left[ch] += 1;
+                }
+                let preferred: Vec<NodeId> = match plan.stages[sid].locality {
+                    Locality::ShuffleAll => Vec::new(),
+                    Locality::Blocks => lost.iter().map(|&i| cluster.block_node(i)).collect(),
+                    Locality::CachedParent(p) => {
+                        let placed = jr.pricing.placements[p].as_deref();
+                        lost.iter()
+                            .map(|&i| {
+                                placed
+                                    .and_then(|ns| ns.get(i as usize).copied())
+                                    // A poisoned (lost) parent placement
+                                    // degrades to the block heuristic.
+                                    .filter(|&n| n < cluster.nodes)
+                                    .unwrap_or_else(|| cluster.block_node(i))
+                            })
+                            .collect()
+                    }
+                };
+                let phases =
+                    jr.pricing.phases[sid].expect("completed stage has a recorded template");
+                let meta = by_handle
+                    .iter()
+                    .find(|e| e.0 == ji && e.1 == sid && e.3.is_none())
+                    .expect("completed stage has a registered handle")
+                    .2
+                    .clone();
+                let stage_opts = SimOpts {
+                    jitter: opts.jitter,
+                    seed: jr.job_seed
+                        ^ ((sid as u64) << 32)
+                        ^ (attempt as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+                    straggler: opts.straggler,
+                };
+                let handle = sim.submit_shaped(
+                    ji,
+                    &StageSpec {
+                        template: &phases,
+                        preferred: &preferred,
+                        pref_width: 1,
+                        tasks: lost.len(),
+                    },
+                    &stage_opts,
+                );
+                debug_assert_eq!(handle, by_handle.len(), "stage handles are sequential");
+                by_handle.push((ji, sid, meta, Some(Resubmit { indices: lost, held, attempt })));
+                if trace.enabled() {
+                    let span = trace.open(job_spans[ji], "stage");
+                    sim.bind_trace_span(handle, span);
+                    span_by_handle.push((span, sim.now()));
+                } else {
+                    span_by_handle.push((SpanId::NONE, 0.0));
+                }
+                progressed = true;
+            }
+        }
+    }
+    progressed
+}
+
+/// Land a completed FetchFailed re-submission: patch the recovered
+/// partitions back into the stage's placement map, record a synthetic
+/// `[resubmit N]` report, and release the children held for the
+/// recovery. Returns the children that became runnable.
+pub(super) fn finish_resubmit(
+    jr: &mut JobRt<'_>,
+    plan: &JobPlan,
+    sid: usize,
+    rs: &Resubmit,
+    meta: &PricedMeta,
+    done: &StageCompletion,
+) -> Vec<usize> {
+    if let Some(pl) = jr.pricing.placements[sid].as_mut() {
+        for (k, &orig) in rs.indices.iter().enumerate() {
+            if let (Some(slot), Some(&n)) = (pl.get_mut(orig as usize), done.task_nodes.get(k)) {
+                *slot = n;
+            }
+        }
+    }
+    jr.extra_reports.push(StageReport {
+        name: format!("{} [resubmit {}]", plan.stages[sid].name, rs.attempt).into(),
+        duration: done.stats.duration,
+        tasks: rs.indices.len() as u32,
+        cpu_secs: done.stats.cpu_secs,
+        disk_bytes: done.stats.disk_bytes,
+        net_bytes: done.stats.net_bytes,
+        spilled_bytes: meta.spilled_per_task * rs.indices.len() as u64,
+        gc_factor: meta.gc,
+        cache_hit_fraction: meta.cache_hit_fraction,
+        locality_hits: done.stats.locality_hits,
+        speculated: done.stats.speculated,
+    });
+    jr.finish = done.at;
+    let mut runnable = Vec::new();
+    for &ch in &rs.held {
+        jr.parents_left[ch] -= 1;
+        if jr.parents_left[ch] == 0 {
+            runnable.push(ch);
+        }
+    }
+    runnable
 }
 
 /// Result of pricing one stage: the uniform per-task phase template
@@ -859,7 +1231,7 @@ fn price_stage(
     }
 }
 
-fn partial_report(stage: &Stage, duration: f64) -> StageReport {
+pub(super) fn partial_report(stage: &Stage, duration: f64) -> StageReport {
     StageReport {
         name: Arc::clone(&stage.name),
         duration,

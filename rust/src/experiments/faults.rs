@@ -1,0 +1,238 @@
+//! Fault-robustness experiment: the paper's methodology prices
+//! configurations on a healthy testbed, but production clusters lose
+//! executors and grow flaky nodes. This driver injects a deterministic
+//! fault scenario (a black-hole node plus a small plan-wide transient
+//! crash hazard) and shows the failure-policy knobs changing the
+//! *ranking* of configurations:
+//!
+//! * a **fragile** configuration — Kryo plus `spark.task.maxFailures=1`
+//!   — wins on the clean cluster but aborts on every fault draw (one
+//!   commit on the flaky node exhausts its retry budget);
+//! * the **defaults** survive on retries alone only if re-placements
+//!   escape the flaky node;
+//! * the **ensemble tuner** ([`FaultEnsembleRunner`] +
+//!   [`TuneOpts::fault_ensemble`]) prices every decision-list step over
+//!   k seeded fault draws and keeps the failure-policy steps that pay —
+//!   node exclusion turns the black hole into a capacity loss and the
+//!   incumbent finishes on every draw.
+
+use crate::cluster::ClusterSpec;
+use crate::conf::SparkConf;
+use crate::engine::{prepare, run_planned, JobPlan};
+use crate::report::Table;
+use crate::sim::{FaultPlan, FlakyNode, SimOpts};
+use crate::tuner::{
+    ensemble_score, tune, FaultEnsembleOpts, FaultEnsembleRunner, ForkingRunner, Runner, TuneOpts,
+    TuneOutcome,
+};
+use crate::workloads::Workload;
+use std::sync::Arc;
+
+/// Fixed scenario seed: the experiment is a deterministic function of
+/// the workload and the fault plan.
+pub const SEED: u64 = 0xFA11;
+
+/// Fault draws per configuration (k of the ensemble).
+pub const DRAWS: u32 = 5;
+
+/// The injected scenario: node 1 is a black hole (every commit there
+/// fails — the doomed attempt still consumes its full duration), and
+/// every other attempt carries a 2 % transient crash hazard so the k
+/// draws differ.
+pub fn flaky_scenario() -> FaultPlan {
+    FaultPlan {
+        seed: SEED,
+        task_crash_prob: 0.02,
+        flaky: Some(FlakyNode { node: 1, crash_prob: 1.0 }),
+        losses: Vec::new(),
+    }
+}
+
+/// The configuration that wins clean and loses under failures: Kryo
+/// buys real speed, but `spark.task.maxFailures=1` turns the first
+/// crash into a job abort.
+pub fn fragile_conf() -> SparkConf {
+    SparkConf::default()
+        .with("spark.serializer", "org.apache.spark.serializer.KryoSerializer")
+        .with("spark.task.maxFailures", "1")
+}
+
+/// Everything the driver measured: clean makespans and the k fault-draw
+/// makespans for the three contenders, plus the full tuning outcome.
+#[derive(Clone, Debug)]
+pub struct FaultsOutcome {
+    pub clean_default: f64,
+    pub clean_fragile: f64,
+    pub clean_tuned: f64,
+    pub faulted_default: Vec<f64>,
+    pub faulted_fragile: Vec<f64>,
+    pub faulted_tuned: Vec<f64>,
+    /// The ensemble walk (its `best`/`baseline` are ensemble means).
+    pub tuned: TuneOutcome,
+}
+
+impl FaultsOutcome {
+    /// Aborted draws under `draws` (effective duration = ∞).
+    pub fn aborted(draws: &[f64]) -> usize {
+        draws.iter().filter(|d| d.is_infinite()).count()
+    }
+}
+
+/// Price `conf` over the k seeded fault draws of [`flaky_scenario`].
+/// Routed through [`FaultEnsembleRunner`] so the draw seeds are — by
+/// construction, not by convention — the ones the tuner prices.
+fn fault_draws(
+    plan: &Arc<JobPlan>,
+    conf: &SparkConf,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> Vec<f64> {
+    let mut r = FaultEnsembleRunner::new(
+        ForkingRunner::new(Arc::clone(plan), cluster, opts.clone()),
+        flaky_scenario(),
+        FaultEnsembleOpts { draws: DRAWS, p95: false },
+    );
+    r.run(conf);
+    r.last_draws().to_vec()
+}
+
+/// Run the whole comparison on `cluster` (mini-sort-by-key workload):
+/// clean and faulted pricing for the defaults and the fragile conf,
+/// then the ensemble decision-list walk and the same pricing for its
+/// incumbent.
+pub fn faults_experiment(cluster: &ClusterSpec) -> FaultsOutcome {
+    let plan = prepare(&Workload::MiniSortByKey.job()).expect("mini workload plans cleanly");
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+
+    let clean = |conf: &SparkConf| run_planned(&plan, conf, cluster, &opts).effective_duration();
+    let clean_default = clean(&SparkConf::default());
+    let clean_fragile = clean(&fragile_conf());
+    let faulted_default = fault_draws(&plan, &SparkConf::default(), cluster, &opts);
+    let faulted_fragile = fault_draws(&plan, &fragile_conf(), cluster, &opts);
+
+    let ens = FaultEnsembleOpts { draws: DRAWS, p95: false };
+    let mut runner = FaultEnsembleRunner::new(
+        ForkingRunner::new(Arc::clone(&plan), cluster, opts.clone()),
+        flaky_scenario(),
+        ens,
+    );
+    let tuned = tune(&mut runner, &TuneOpts { fault_ensemble: Some(ens), ..TuneOpts::default() });
+
+    let clean_tuned = clean(&tuned.best_conf);
+    let faulted_tuned = fault_draws(&plan, &tuned.best_conf, cluster, &opts);
+    FaultsOutcome {
+        clean_default,
+        clean_fragile,
+        clean_tuned,
+        faulted_default,
+        faulted_fragile,
+        faulted_tuned,
+        tuned,
+    }
+}
+
+/// Render the comparison as a markdown table: clean vs mean vs p95
+/// makespans plus the abort count per configuration.
+pub fn faults_table(o: &FaultsOutcome) -> Table {
+    fn cell(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v:.1}")
+        } else {
+            "aborted".into()
+        }
+    }
+    fn row(label: &str, clean: f64, draws: &[f64]) -> Vec<String> {
+        vec![
+            label.into(),
+            cell(clean),
+            cell(ensemble_score(draws, false)),
+            cell(ensemble_score(draws, true)),
+            format!("{}/{}", FaultsOutcome::aborted(draws), draws.len()),
+        ]
+    }
+    Table {
+        title: format!(
+            "Fault robustness — node 1 black-holed, {}% transient hazard, {} draws",
+            flaky_scenario().task_crash_prob * 100.0,
+            DRAWS
+        ),
+        header: vec![
+            "configuration".into(),
+            "clean (s)".into(),
+            "mean faulted (s)".into(),
+            "p95 faulted (s)".into(),
+            "aborted draws".into(),
+        ],
+        rows: vec![
+            row("defaults", o.clean_default, &o.faulted_default),
+            row("fragile (kryo, maxFailures=1)", o.clean_fragile, &o.faulted_fragile),
+            row("ensemble-tuned", o.clean_tuned, &o.faulted_tuned),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fragile_conf_wins_clean_but_aborts_on_every_draw() {
+        let o = faults_experiment(&ClusterSpec::mini());
+        assert!(
+            o.clean_fragile < o.clean_default,
+            "kryo must win clean: fragile {} vs default {}",
+            o.clean_fragile,
+            o.clean_default
+        );
+        // Node 1 holds block-placed generate tasks and every commit
+        // there fails — one failure exhausts maxFailures=1 on any seed.
+        assert_eq!(
+            FaultsOutcome::aborted(&o.faulted_fragile),
+            o.faulted_fragile.len(),
+            "the fragile conf must abort on every draw: {:?}",
+            o.faulted_fragile
+        );
+    }
+
+    #[test]
+    fn ensemble_tuner_finds_a_fault_robust_incumbent() {
+        let o = faults_experiment(&ClusterSpec::mini());
+        assert!(o.tuned.best.is_finite(), "ensemble walk must end on a finite incumbent");
+        assert!(o.tuned.best <= o.tuned.baseline, "never worse than defaults by construction");
+        assert_eq!(
+            FaultsOutcome::aborted(&o.faulted_tuned),
+            0,
+            "the robust incumbent survives every draw: {:?}",
+            o.faulted_tuned
+        );
+        // ... and beats the clean-cluster winner where it matters.
+        assert!(
+            ensemble_score(&o.faulted_tuned, false) < ensemble_score(&o.faulted_fragile, false),
+            "robust {} !< fragile {} under injection",
+            ensemble_score(&o.faulted_tuned, false),
+            ensemble_score(&o.faulted_fragile, false)
+        );
+    }
+
+    #[test]
+    fn experiment_is_deterministic() {
+        let a = faults_experiment(&ClusterSpec::mini());
+        let b = faults_experiment(&ClusterSpec::mini());
+        assert_eq!(a.clean_default.to_bits(), b.clean_default.to_bits());
+        assert_eq!(a.tuned.best.to_bits(), b.tuned.best.to_bits());
+        let bits = |v: &[f64]| v.iter().map(|d| d.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.faulted_default), bits(&b.faulted_default));
+        assert_eq!(bits(&a.faulted_fragile), bits(&b.faulted_fragile));
+        assert_eq!(bits(&a.faulted_tuned), bits(&b.faulted_tuned));
+    }
+
+    #[test]
+    fn table_lists_three_confs_and_flags_aborts() {
+        let o = faults_experiment(&ClusterSpec::mini());
+        let md = faults_table(&o).to_markdown();
+        assert!(md.contains("defaults"));
+        assert!(md.contains("fragile (kryo, maxFailures=1)"));
+        assert!(md.contains("ensemble-tuned"));
+        assert!(md.contains("aborted"), "the fragile row must read as aborted");
+    }
+}

@@ -9,7 +9,12 @@
 //!   cluster, FIFO vs FAIR with weighted pools, plus the busy-cluster
 //!   tuning runner (`spark.scheduler.mode` through the event core).
 //! * [`straggler`] — jittered-cluster speculation experiment
-//!   (`spark.speculation` off vs on, and the straggler-aware tuner).
+//!   (`spark.speculation` off vs on, and the straggler-aware tuner),
+//!   plus the three-way mitigation comparison under a flaky node
+//!   (task retry vs speculation vs node exclusion).
+//! * [`faults`] — fault injection: a conf that wins on the clean
+//!   cluster but aborts under failures, and the ensemble tuner finding
+//!   a failure-robust incumbent.
 //! * [`service`] — the tuning-service stress scenario: M tenants × N
 //!   apps through the memoized session server (cold vs warm, dedup and
 //!   bit-identical-outcome checks).
@@ -25,6 +30,7 @@
 
 pub mod ablation;
 pub mod cases;
+pub mod faults;
 pub mod service;
 pub mod straggler;
 pub mod tenancy;

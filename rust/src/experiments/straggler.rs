@@ -10,12 +10,18 @@
 //! Also runs the Fig-4-style decision list with the straggler-aware
 //! steps ([`crate::tuner::TuneOpts::straggler_aware`]) so the tuner can
 //! *discover* the speculation/locality settings by trial and error.
+//!
+//! [`mitigation_experiment`] completes the picture for *crashing* (not
+//! merely slow) nodes: the same probe under a black-hole node, priced
+//! three ways — task retries alone, speculation, and node exclusion —
+//! showing that speculation targets slow tasks and cannot save a job
+//! from a node that fails every commit, while exclusion can.
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
-use crate::engine::{prepare, run_planned, JobResult};
+use crate::engine::{prepare, run_planned, run_planned_faulted, JobResult};
 use crate::report::Table;
-use crate::sim::{SimOpts, Straggler};
+use crate::sim::{FaultPlan, FlakyNode, SimOpts, Straggler};
 use crate::tuner::{tune, TuneOpts, TuneOutcome};
 use crate::workloads;
 
@@ -117,6 +123,76 @@ pub fn straggler_table(o: &StragglerOutcome) -> Table {
     t
 }
 
+/// Outcome of the three-way mitigation comparison under a black-hole
+/// node: the same probe priced with task retries alone (the defaults),
+/// with speculation, and with node exclusion.
+#[derive(Clone, Debug)]
+pub struct MitigationOutcome {
+    /// Defaults: `spark.task.maxFailures` retries are the only defense.
+    pub retry: JobResult,
+    /// `spark.speculation=true` on top of the defaults.
+    pub speculation: JobResult,
+    /// `spark.excludeOnFailure.enabled=true` on top of the defaults.
+    pub exclusion: JobResult,
+}
+
+/// Price the straggler probe under a node that fails **every** commit
+/// (crash probability 1.0 on node 1) three ways. Retries re-land on the
+/// doomed node — block placement prefers it — so some task exhausts its
+/// budget and the job aborts; speculation never fires because doomed
+/// attempts are not slow, only fatal; exclusion removes the node after
+/// `spark.excludeOnFailure.task.maxTaskAttemptsPerNode` failures and
+/// the job finishes on the surviving capacity.
+pub fn mitigation_experiment(
+    records: u64,
+    partitions: u32,
+    cluster: &ClusterSpec,
+) -> MitigationOutcome {
+    let plan = prepare(&workloads::straggler_probe(records, partitions))
+        .expect("straggler probe plans cleanly");
+    let opts = SimOpts { jitter: 0.04, seed: SEED, straggler: None };
+    let faults = FaultPlan {
+        seed: SEED,
+        task_crash_prob: 0.0,
+        flaky: Some(FlakyNode { node: 1, crash_prob: 1.0 }),
+        losses: Vec::new(),
+    };
+    let price = |conf: &SparkConf| run_planned_faulted(&plan, conf, cluster, &opts, &faults);
+    MitigationOutcome {
+        retry: price(&SparkConf::default()),
+        speculation: price(&SparkConf::default().with("spark.speculation", "true")),
+        exclusion: price(&SparkConf::default().with("spark.excludeOnFailure.enabled", "true")),
+    }
+}
+
+/// Render the three-way comparison as a markdown table.
+pub fn mitigation_table(o: &MitigationOutcome) -> Table {
+    fn row(label: &str, r: &JobResult) -> Vec<String> {
+        vec![
+            label.into(),
+            if r.crashed.is_some() { "aborted".into() } else { format!("{:.1}", r.duration) },
+            format!("{}", r.sim.task_failures),
+            format!("{}", r.stages.iter().map(|s| s.speculated).sum::<usize>()),
+            format!("{}", r.sim.stage_aborts),
+        ]
+    }
+    Table {
+        title: "Mitigation under a black-hole node — retry vs speculation vs exclusion".into(),
+        header: vec![
+            "mitigation".into(),
+            "makespan (s)".into(),
+            "task failures".into(),
+            "backup copies".into(),
+            "stage aborts".into(),
+        ],
+        rows: vec![
+            row("task retries (defaults)", &o.retry),
+            row("speculation", &o.speculation),
+            row("node exclusion", &o.exclusion),
+        ],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +281,56 @@ mod tests {
             "keeping speculation halves the makespan: {:.3}",
             out.total_improvement()
         );
+    }
+
+    #[test]
+    fn exclusion_survives_a_black_hole_node_where_retries_and_speculation_abort() {
+        let o = mitigation_experiment(4_000_000, 64, &ClusterSpec::mini());
+        // Retries re-land on the doomed node (block placement prefers
+        // it) until some task exhausts spark.task.maxFailures.
+        assert!(
+            o.retry.effective_duration().is_infinite(),
+            "retries alone must abort: {:?}",
+            o.retry.crashed
+        );
+        assert!(o.retry.sim.stage_aborts >= 1);
+        // Speculation clones slow copies; doomed copies are not slow,
+        // so it fares exactly as badly as retries alone.
+        assert!(o.speculation.effective_duration().is_infinite());
+        assert_eq!(
+            o.speculation.stages.iter().map(|s| s.speculated).sum::<usize>(),
+            0,
+            "a crashing-but-not-slow copy must never be cloned"
+        );
+        // Exclusion removes the node after its charged failures and the
+        // job finishes on the surviving 3/4 capacity.
+        assert!(o.exclusion.crashed.is_none(), "{:?}", o.exclusion.crashed);
+        assert!(o.exclusion.duration.is_finite() && o.exclusion.duration > 0.0);
+        assert!(
+            o.exclusion.sim.task_failures >= 2,
+            "the node is excluded only after charged failures"
+        );
+        assert_eq!(o.exclusion.sim.stage_aborts, 0);
+    }
+
+    #[test]
+    fn mitigation_experiment_is_deterministic() {
+        let a = mitigation_experiment(2_000_000, 32, &ClusterSpec::mini());
+        let b = mitigation_experiment(2_000_000, 32, &ClusterSpec::mini());
+        assert_eq!(a.exclusion.duration.to_bits(), b.exclusion.duration.to_bits());
+        assert_eq!(a.retry.crashed, b.retry.crashed);
+        assert_eq!(a.exclusion.sim.task_failures, b.exclusion.sim.task_failures);
+        assert_eq!(a.speculation.sim.task_failures, b.speculation.sim.task_failures);
+    }
+
+    #[test]
+    fn mitigation_table_renders_three_rows() {
+        let o = mitigation_experiment(2_000_000, 32, &ClusterSpec::mini());
+        let md = mitigation_table(&o).to_markdown();
+        assert!(md.contains("task retries (defaults)"));
+        assert!(md.contains("speculation"));
+        assert!(md.contains("node exclusion"));
+        assert!(md.contains("aborted"), "the retry row must read as aborted:\n{md}");
     }
 
     #[test]

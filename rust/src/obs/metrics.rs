@@ -138,6 +138,11 @@ impl Registry {
             forked_trials,
             task_finishes,
             spec_events,
+            task_failures,
+            task_retries,
+            stage_aborts,
+            executor_losses,
+            executor_restarts,
         } = *s;
         for (field, v) in [
             ("events", events),
@@ -154,6 +159,11 @@ impl Registry {
             ("forked_trials", forked_trials),
             ("task_finishes", task_finishes),
             ("spec_events", spec_events),
+            ("task_failures", task_failures),
+            ("task_retries", task_retries),
+            ("stage_aborts", stage_aborts),
+            ("executor_losses", executor_losses),
+            ("executor_restarts", executor_restarts),
         ] {
             self.counter_add(&format!("{prefix}.{field}"), v);
         }
@@ -174,6 +184,7 @@ impl Registry {
             replayed_events,
             checkpoint_bytes,
             fork_evictions,
+            quarantined,
             cache,
         } = *s;
         let crate::service::CacheStats { hits, misses, inserts, evictions } = cache;
@@ -187,6 +198,7 @@ impl Registry {
             ("service.forked_trials", forked_trials),
             ("service.replayed_events", replayed_events),
             ("service.fork_evictions", fork_evictions),
+            ("service.quarantined", quarantined),
             ("service.cache.hits", hits),
             ("service.cache.misses", misses),
             ("service.cache.inserts", inserts),
@@ -398,6 +410,11 @@ mod tests {
         st.forked_trials = 1;
         st.task_finishes = 4;
         st.spec_events = 2;
+        st.task_failures = 3;
+        st.task_retries = 2;
+        st.stage_aborts = 1;
+        st.executor_losses = 1;
+        st.executor_restarts = 1;
         let r = Registry::new(2);
         r.record_sim_stats("sim", &st);
         r.record_sim_stats("sim", &st);
@@ -406,8 +423,10 @@ mod tests {
         assert_eq!(s.counter("sim.events"), 20);
         assert_eq!(s.counter("sim.admit_probes"), 10);
         assert_eq!(s.counter("sim.spec_events"), 4);
+        assert_eq!(s.counter("sim.task_failures"), 6);
+        assert_eq!(s.counter("sim.executor_losses"), 2);
         let sim_entries = s.entries.iter().filter(|(k, _)| k.starts_with("sim.")).count();
-        assert_eq!(sim_entries, 14, "one counter per SimStats field");
+        assert_eq!(sim_entries, 19, "one counter per SimStats field");
     }
 
     #[test]
@@ -423,6 +442,7 @@ mod tests {
             replayed_events: 900,
             checkpoint_bytes: 4096,
             fork_evictions: 1,
+            quarantined: 2,
             cache: crate::service::CacheStats { hits: 5, misses: 15, inserts: 12, evictions: 0 },
         };
         let r = Registry::new(4);
@@ -431,6 +451,7 @@ mod tests {
         assert_eq!(s.counter("service.trials_requested"), 20);
         assert_eq!(s.counter("service.cache.hits"), 5);
         assert_eq!(s.counter("service.fork_evictions"), 1);
+        assert_eq!(s.counter("service.quarantined"), 2);
         assert_eq!(s.get("service.checkpoint_bytes"), Some(&Value::Gauge(4096.0)));
     }
 }

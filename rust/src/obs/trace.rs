@@ -347,12 +347,30 @@ impl TraceSink {
                         out.push_str("}\n");
                     }
                     TraceKind::Instant { at } => {
-                        out.push_str("{\"Event\":\"SparkTuneAnnotation\",\"Seq\":");
+                        // Fault instants take their Spark listener
+                        // analogue (the injector stamps the two
+                        // "executor" shapes with fixed name prefixes);
+                        // stage aborts have no listener event — like
+                        // every other annotation they keep the
+                        // SparkTune name and carry their category.
+                        let event = match e.cat {
+                            "executor" if e.name.starts_with("executor lost") => {
+                                "SparkListenerExecutorRemoved"
+                            }
+                            "executor" => "SparkListenerExecutorAdded",
+                            "exclusion" => "SparkListenerNodeExcluded",
+                            _ => "SparkTuneAnnotation",
+                        };
+                        out.push_str("{\"Event\":\"");
+                        out.push_str(event);
+                        out.push_str("\",\"Seq\":");
                         out.push_str(&e.seq.to_string());
                         out.push_str(",\"Track\":");
                         out.push_str(&e.track.to_string());
-                        out.push_str(",\"Category\":");
-                        json_string(&mut out, e.cat);
+                        if event == "SparkTuneAnnotation" {
+                            out.push_str(",\"Category\":");
+                            json_string(&mut out, e.cat);
+                        }
                         out.push_str(",\"Name\":");
                         json_string(&mut out, &e.name);
                         out.push_str(",\"Time\":");
@@ -507,6 +525,31 @@ mod tests {
             lines[4],
             "{\"Event\":\"SparkTuneSessionCompleted\",\"Seq\":3,\"Track\":0,\
              \"Name\":\"tune\",\"Start Time\":0,\"Finish Time\":2}"
+        );
+    }
+
+    #[test]
+    fn fault_instants_use_spark_listener_event_names() {
+        let t = TraceSink::buffered();
+        let s = t.open(SpanId::NONE, "trial");
+        t.instant(s, "executor", "executor lost: node 2", 1.5);
+        t.instant(s, "executor", "executor restarted: node 2", 3.0);
+        t.instant(s, "exclusion", "node 1 excluded", 2.0);
+        t.instant(s, "abort", "stage 0 aborted (task exceeded maxFailures)", 2.5);
+        t.close(s, "trial", "walk", 0.0, 4.0);
+        let log = t.event_log();
+        let lines: Vec<&str> = log.lines().collect();
+        assert_eq!(
+            lines[1],
+            "{\"Event\":\"SparkListenerExecutorRemoved\",\"Seq\":0,\"Track\":1,\
+             \"Name\":\"executor lost: node 2\",\"Time\":1.5}"
+        );
+        assert!(lines[2].starts_with("{\"Event\":\"SparkListenerExecutorAdded\",\"Seq\":1"));
+        assert!(lines[3].starts_with("{\"Event\":\"SparkListenerNodeExcluded\",\"Seq\":2"));
+        assert!(
+            lines[4].contains("\"Event\":\"SparkTuneAnnotation\"")
+                && lines[4].contains("\"Category\":\"abort\""),
+            "stage aborts have no listener analogue - they stay annotations"
         );
     }
 

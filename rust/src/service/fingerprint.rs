@@ -135,15 +135,22 @@ pub fn fingerprint_trial(
 /// checkpoint facts (see [`crate::engine::classify_param`]), those
 /// policy fields are out too — whether a *particular* pair diverges
 /// early enough (or satisfies the policy certificates) is decided per
-/// plan at probe time, not by the family key. The domain tag is bumped
-/// to `v2` so persisted `v1` keys can never alias the wider families.
+/// plan at probe time, not by the family key. The failure-policy
+/// fields (`spark.task.maxFailures` and friends) follow the same rule:
+/// they are unobservable without an armed fault plan — and the
+/// service's fork store only prices fault-free — so trials differing
+/// only in them share a family, and the classifier's
+/// prefix-failure-free certificate settles each probe. The domain tag
+/// is bumped to `v3` because those keys used to live in `extras` (and
+/// so used to split families): persisted `v1`/`v2` keys can never
+/// alias the wider families.
 pub fn fingerprint_fork(
     job: &Job,
     conf: &SparkConf,
     cluster: &ClusterSpec,
     opts: &SimOpts,
 ) -> Fingerprint {
-    let mut h = Fp128::new("sparktune.fork.v2");
+    let mut h = Fp128::new("sparktune.fork.v3");
     write_job(&mut h, job);
     h.write_u64(conf.executor_cores as u64);
     h.write_u64(conf.executor_memory);
@@ -368,6 +375,10 @@ mod tests {
             ("spark.speculation", "true"),
             ("spark.speculation.multiplier", "2.0"),
             ("spark.speculation.quantile", "0.5"),
+            ("spark.task.maxFailures", "8"),
+            ("spark.stage.maxConsecutiveAttempts", "2"),
+            ("spark.excludeOnFailure.enabled", "true"),
+            ("spark.excludeOnFailure.task.maxTaskAttemptsPerNode", "1"),
         ] {
             let c = conf.clone().with(k, v);
             assert_eq!(fingerprint_fork(&job, &c, &cluster, &opts), base, "{k} is not Global");
@@ -391,6 +402,38 @@ mod tests {
         assert_ne!(fingerprint_fork(&job, &conf, &grown, &opts), base);
         let other = Workload::KMeans100M.job();
         assert_ne!(fingerprint_fork(&other, &conf, &cluster, &opts), base);
+    }
+
+    #[test]
+    fn failure_policy_fields_share_a_family_losslessly() {
+        // The failure-policy knobs are unobservable without an armed
+        // fault plan, so trials differing only in them share a fork
+        // family — and serving the second trial from the first's
+        // recording is bit-identical to pricing it in full (the
+        // prefix-failure-free certificate is trivially satisfied on a
+        // fault-free recording).
+        use crate::engine::{prepare, run_planned, run_planned_from, run_planned_recording};
+        let (_, conf, cluster, opts) = base_key();
+        // The cache-prefixed iterative workload the fork goldens use —
+        // guaranteed to record resumable checkpoints.
+        let job = crate::workloads::kmeans(400_000, 32, 8, 3, 16);
+        let fragile = conf
+            .clone()
+            .with("spark.task.maxFailures", "1")
+            .with("spark.excludeOnFailure.enabled", "true");
+        assert_eq!(
+            fingerprint_fork(&job, &fragile, &cluster, &opts),
+            fingerprint_fork(&job, &conf, &cluster, &opts),
+            "failure-policy fields must not split the family"
+        );
+        let plan = prepare(&job).expect("mini job plans");
+        let (_, fork) = run_planned_recording(&plan, &conf, &cluster, &opts);
+        let full = run_planned(&plan, &fragile, &cluster, &opts);
+        let forked = run_planned_from(&fork, &plan, &fragile, &cluster, &opts)
+            .expect("fault-free prefixes are failure-free — the fork must not decline");
+        assert_eq!(forked.duration.to_bits(), full.duration.to_bits());
+        assert_eq!(forked.crashed, full.crashed);
+        assert_eq!(forked.stages.len(), full.stages.len());
     }
 
     #[test]

@@ -153,8 +153,22 @@ pub struct ServiceStats {
     pub checkpoint_bytes: u64,
     /// Recordings the fork store has evicted to stay within budget.
     pub fork_evictions: u64,
+    /// Cache-missed trials short-circuited to INFINITY because their
+    /// fork family had already crashed [`QUARANTINE_CRASHES`] times —
+    /// simulator time the service refused to spend on a poisoned
+    /// conf/workload family.
+    pub quarantined: u64,
     pub cache: CacheStats,
 }
+
+/// Simulated crashes (INFINITY outcomes) a fork family may accumulate
+/// before the service quarantines it: later cache-missed trials of the
+/// family are priced as INFINITY without touching the simulator. Three
+/// distinct crashing trials is past any healthy walk — the decision
+/// list contains at most one deliberately OOM-prone sibling — so only
+/// genuinely poisoned families (an aborting fault scenario, a job whose
+/// cost model rejects every conf) ever hit it.
+pub const QUARANTINE_CRASHES: u64 = 3;
 
 impl ServiceStats {
     /// Fraction of requested trials that never touched the simulator
@@ -296,6 +310,11 @@ pub struct TuningService {
     /// on cache-missed planned trials, microseconds against the
     /// simulation that follows.
     forks: Mutex<ForkStore>,
+    /// Simulated-crash counts per fork family; families at or past
+    /// [`QUARANTINE_CRASHES`] are quarantined. Unlike the fork store
+    /// this table is never evicted — quarantine evidence must not age
+    /// out under byte pressure.
+    crashes: Mutex<HashMap<Fingerprint, u64>>,
     full_reprice: bool,
     inflight: Mutex<HashMap<Fingerprint, Arc<InFlight>>>,
     /// Evidence from completed sessions, keyed by workload profile.
@@ -313,6 +332,7 @@ pub struct TuningService {
     warm_missed: AtomicU64,
     forked: AtomicU64,
     replayed: AtomicU64,
+    quarantined: AtomicU64,
 }
 
 /// One admitted session: its request, effective (possibly warm-started)
@@ -364,6 +384,7 @@ impl TuningService {
             cluster,
             cache: ShardedCache::new(opts.shards, opts.capacity),
             forks: Mutex::new(ForkStore::new(opts.fork_budget_bytes)),
+            crashes: Mutex::new(HashMap::new()),
             full_reprice: opts.full_reprice,
             inflight: Mutex::new(HashMap::new()),
             knn: Mutex::new(KnnIndex::new()),
@@ -378,6 +399,7 @@ impl TuningService {
             warm_missed: AtomicU64::new(0),
             forked: AtomicU64::new(0),
             replayed: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
         }
     }
 
@@ -601,6 +623,22 @@ impl TuningService {
             return (res.effective_duration(), prov);
         }
         let fk = fingerprint_fork(job, conf, &self.cluster, sim);
+        if self.family_quarantined(fk) {
+            // The family has crashed its way past the quarantine
+            // threshold: price the trial as the crash it would almost
+            // certainly be, without burning a simulation on it. The
+            // INFINITY lands in the memo cache like any other crash, so
+            // the tuner's keep-iff-improving rule rejects the trial the
+            // same way it rejects a simulated OOM.
+            self.quarantined.fetch_add(1, Ordering::Relaxed);
+            let prov = RunProvenance {
+                memoized: false,
+                forked: false,
+                replayed_events: 0,
+                processed_events: 0,
+            };
+            return (f64::INFINITY, prov);
+        }
         let stored = self.forks.lock().expect("fork store poisoned").get(fk);
         if let Some(fork) = stored {
             if let Some(res) = run_planned_from(&fork, plan, conf, &self.cluster, sim) {
@@ -612,6 +650,7 @@ impl TuningService {
                     replayed_events: res.sim.replayed_events,
                     processed_events: res.sim.processed_events(),
                 };
+                self.note_outcome(fk, res.effective_duration());
                 return (res.effective_duration(), prov);
             }
         }
@@ -628,7 +667,24 @@ impl TuningService {
             replayed_events: 0,
             processed_events: res.sim.events,
         };
+        self.note_outcome(fk, res.effective_duration());
         (res.effective_duration(), prov)
+    }
+
+    /// Has this fork family crashed often enough to be quarantined?
+    fn family_quarantined(&self, fk: Fingerprint) -> bool {
+        self.crashes.lock().expect("crash table poisoned").get(&fk).copied().unwrap_or(0)
+            >= QUARANTINE_CRASHES
+    }
+
+    /// Record a simulated trial's outcome against its fork family:
+    /// crashes (INFINITY) count toward quarantine, finite outcomes are
+    /// free. Only *simulated* outcomes count — cache hits replaying an
+    /// old crash must not inflate the family's record.
+    fn note_outcome(&self, fk: Fingerprint, duration: f64) {
+        if duration.is_infinite() {
+            *self.crashes.lock().expect("crash table poisoned").entry(fk).or_insert(0) += 1;
+        }
     }
 
     /// The memoization core, generic over the computation so tests can
@@ -748,6 +804,7 @@ impl TuningService {
             replayed_events: self.replayed.load(Ordering::Relaxed),
             checkpoint_bytes,
             fork_evictions,
+            quarantined: self.quarantined.load(Ordering::Relaxed),
             cache: self.cache.stats(),
         }
     }
@@ -895,6 +952,92 @@ mod tests {
         assert!(boom.is_err());
         assert_eq!(svc.memoized(fp, || 9.25), 9.25);
         assert_eq!(svc.stats().trials_simulated, 1, "panicked compute never counted");
+    }
+
+    #[test]
+    fn poisoned_leader_propagates_to_coalesced_waiters() {
+        // Regression for the unwind-guard path: a waiter coalesced onto
+        // a flight whose leader panics must observe the poisoning (and
+        // panic itself) rather than block forever — and the fingerprint
+        // must stay serviceable afterwards.
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let fp = Fp128::new("test.poison-propagation").finish();
+        let barrier = Barrier::new(2);
+        std::thread::scope(|scope| {
+            let leader = scope.spawn(|| {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    svc.memoized(fp, || {
+                        // The flight is registered by now; release the
+                        // follower, then hold the slot long enough for
+                        // it to coalesce before unwinding.
+                        barrier.wait();
+                        std::thread::sleep(std::time::Duration::from_millis(50));
+                        panic!("cost model exploded")
+                    })
+                }))
+            });
+            let follower = scope.spawn(|| {
+                barrier.wait();
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    svc.memoized(fp, || 1.0)
+                }))
+            });
+            assert!(leader.join().expect("leader thread").is_err());
+            // The follower either coalesced onto the poisoned flight
+            // (propagates the panic) or arrived after deregistration and
+            // led a fresh computation (returns 1.0) — never a deadlock.
+            match follower.join().expect("follower thread") {
+                Err(_) => {}
+                Ok(v) => assert_eq!(v, 1.0),
+            }
+        });
+        // Not wedged: a later caller is served (fresh compute or the
+        // follower's cached value).
+        let v = svc.memoized(fp, || 2.5);
+        assert!(v == 2.5 || v == 1.0, "fingerprint must stay serviceable, got {v}");
+    }
+
+    #[test]
+    fn crashing_family_is_quarantined_after_three_strikes() {
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let fk = Fp128::new("test.quarantine").finish();
+        for strike in 0..QUARANTINE_CRASHES {
+            assert!(!svc.family_quarantined(fk), "strike {strike} is below the threshold");
+            svc.note_outcome(fk, f64::INFINITY);
+        }
+        assert!(svc.family_quarantined(fk));
+        // Finite outcomes never count toward quarantine.
+        let healthy = Fp128::new("test.healthy").finish();
+        for _ in 0..10 {
+            svc.note_outcome(healthy, 42.0);
+        }
+        assert!(!svc.family_quarantined(healthy));
+        // The counter tracks short-circuited *trials*, not strikes.
+        assert_eq!(svc.stats().quarantined, 0);
+    }
+
+    #[test]
+    fn quarantined_family_short_circuits_instead_of_simulating() {
+        let svc = TuningService::new(ClusterSpec::mini(), ServiceOpts::default());
+        let job = Workload::MiniSortByKey.job();
+        let plan = prepare(&job).expect("mini job plans");
+        let conf = SparkConf::default();
+        let sim = SimOpts { jitter: 0.04, seed: 7, straggler: None };
+        let fk = fingerprint_fork(&job, &conf, svc.cluster(), &sim);
+        for _ in 0..QUARANTINE_CRASHES {
+            svc.note_outcome(fk, f64::INFINITY);
+        }
+        let (v, prov) = svc.evaluate_planned_prov(&job, &plan, &conf, &sim);
+        assert!(v.is_infinite(), "a quarantined family prices as the crash it keeps being");
+        assert!(!prov.memoized);
+        assert_eq!(prov.processed_events, 0, "the simulator was never touched");
+        assert_eq!(svc.stats().quarantined, 1);
+        // A different family of the same job (different sim seed is part
+        // of the fork key) is unaffected.
+        let sim2 = SimOpts { jitter: 0.04, seed: 8, straggler: None };
+        assert_ne!(fingerprint_fork(&job, &conf, svc.cluster(), &sim2), fk);
+        let (v2, _) = svc.evaluate_planned_prov(&job, &plan, &conf, &sim2);
+        assert!(v2.is_finite(), "healthy families keep simulating");
     }
 
     #[test]

@@ -89,6 +89,7 @@
 //! preferences for child stages — is surfaced to the driver from
 //! [`advance`](EventSim::advance).
 
+use super::fault::{FaultEvent, FaultPlan, RecoveryPolicy, TimelineEvent};
 use super::{Phase, SimOpts, StageStats, TaskSpec};
 use crate::cluster::{ClusterSpec, NodeId};
 use crate::obs::{SpanId, TraceSink};
@@ -252,6 +253,19 @@ pub struct SimStats {
     /// the fact the incremental re-pricer's policy-fork validity checks
     /// rely on.
     pub spec_events: u64,
+    /// Task-copy failures injected by an armed [`FaultPlan`] (transient
+    /// crashes at output commit). Zero whenever faults are disarmed —
+    /// the re-pricer's failure-policy fork certificate relies on it.
+    pub task_failures: u64,
+    /// Failed or executor-lost tasks re-queued for another attempt.
+    pub task_retries: u64,
+    /// Stages aborted past `spark.task.maxFailures` (the owning job
+    /// crashes → INFINITY makespan).
+    pub stage_aborts: u64,
+    /// Scheduled executor/node losses applied from the fault timeline.
+    pub executor_losses: u64,
+    /// Node restarts applied after a down window.
+    pub executor_restarts: u64,
 }
 
 impl SimStats {
@@ -304,6 +318,11 @@ impl SimStats {
             forked_trials,
             task_finishes,
             spec_events,
+            task_failures,
+            task_retries,
+            stage_aborts,
+            executor_losses,
+            executor_restarts,
         } = *other;
         self.events += events;
         self.completions += completions;
@@ -319,6 +338,11 @@ impl SimStats {
         self.forked_trials += forked_trials;
         self.task_finishes += task_finishes;
         self.spec_events += spec_events;
+        self.task_failures += task_failures;
+        self.task_retries += task_retries;
+        self.stage_aborts += stage_aborts;
+        self.executor_losses += executor_losses;
+        self.executor_restarts += executor_restarts;
     }
 }
 
@@ -441,6 +465,10 @@ pub struct StageCompletion {
     /// engine derives cache-read locality preferences for child stages
     /// from this (cached blocks live where their writer actually ran).
     pub task_nodes: Vec<NodeId>,
+    /// The stage aborted (a task exhausted `spark.task.maxFailures`):
+    /// `at` is the abort instant, the stats cover only finished work,
+    /// and the owning job must be treated as crashed.
+    pub aborted: bool,
 }
 
 /// A uniform stage for the fast submission path: every task shares one
@@ -709,6 +737,10 @@ struct Running {
     is_cpu: bool,
     /// This copy is a speculative backup.
     is_clone: bool,
+    /// An armed [`FaultPlan`] doomed this copy at launch: it consumes
+    /// its full duration, then fails at output commit instead of
+    /// finishing (a pure per-launch draw — no live RNG state).
+    doomed: bool,
     alive: bool,
     /// Pulled out of the event queue for the event being processed right
     /// now. A sibling in this state is about to be handled as a moot
@@ -768,6 +800,19 @@ struct StageRt {
     seq: usize,
     /// Task count.
     tasks: usize,
+    /// The `SimOpts` seed the stage was submitted under — the stage half
+    /// of every fault draw's key ([`FaultPlan::dooms`]).
+    seed: u64,
+    /// Per-task failed-attempt counts (fault injection only; all zero on
+    /// fault-free runs). Doubles as the attempt number of the next
+    /// launch, so retry draws are distinct by construction.
+    failures: Vec<u32>,
+    /// A task exhausted `spark.task.maxFailures`: the stage completed
+    /// via the abort path and must never admit again.
+    aborted: bool,
+    /// Handle is currently in the core's `pending_list` (requeue-time
+    /// membership test — the list is otherwise append-only per stage).
+    in_pending_list: bool,
     /// Immutable phase/preference arenas, shared with every checkpoint
     /// of this core (see [`StageArena`]).
     arena: Arc<StageArena>,
@@ -909,6 +954,34 @@ pub struct EventSim<'a> {
     /// stage was submitted before tracing attached, e.g. a resumed
     /// prefix).
     stage_spans: Vec<SpanId>,
+    /// Armed fault injector + recovery policy (`None` = today's
+    /// fault-free core, bit for bit).
+    faults: Option<FaultRt>,
+    /// Fault/recovery notifications queued for the engine — drained via
+    /// [`take_fault_events`](Self::take_fault_events) (the engine's
+    /// FetchFailed resubmission path keys off `ExecutorLost`).
+    fault_events: Vec<FaultEvent>,
+}
+
+/// Live injector state: the armed plan, the recovery policy in force,
+/// the loss/restart timeline cursor, and per-node health. Pure value
+/// state (every crash draw is a pure function of launch-time facts), so
+/// checkpoints clone it wholesale.
+#[derive(Clone)]
+struct FaultRt {
+    plan: Arc<FaultPlan>,
+    recovery: RecoveryPolicy,
+    /// Sorted loss/restart instants ([`FaultPlan::timeline`]).
+    timeline: Vec<TimelineEvent>,
+    /// Next unapplied timeline entry.
+    cursor: usize,
+    /// Node is currently down (lost, not yet restarted).
+    down: Vec<bool>,
+    /// Node was excluded from placement (`spark.excludeOnFailure`);
+    /// exclusion is permanent for the run.
+    excluded: Vec<bool>,
+    /// Task failures charged to each node (drives exclusion).
+    node_failures: Vec<u32>,
 }
 
 /// A full, owned snapshot of an [`EventSim`]'s mutable state, taken at a
@@ -949,6 +1022,11 @@ pub struct SimCheckpoint {
     rr: usize,
     admit_dirty: bool,
     stats: SimStats,
+    faults: Option<FaultRt>,
+    /// Fault notifications emitted but not yet drained by the engine at
+    /// the snapshot (mid-stage snapshots land inside the advance loop,
+    /// before the engine's drain) — a resumed run re-delivers them.
+    fault_events: Vec<FaultEvent>,
 }
 
 impl SimCheckpoint {
@@ -1013,7 +1091,14 @@ impl SimCheckpoint {
             b += (st.task_durations.len() + st.durations_sorted.len()) * size_of::<f64>();
             b += st.orig_queue.len() * size_of::<(u32, u32)>();
             b += st.task_nodes.len() * size_of::<NodeId>();
+            b += st.failures.len() * size_of::<u32>();
         }
+        if let Some(f) = &self.faults {
+            b += f.timeline.len() * size_of::<TimelineEvent>();
+            b += f.down.len() + f.excluded.len();
+            b += f.node_failures.len() * size_of::<u32>();
+        }
+        b += self.fault_events.len() * size_of::<FaultEvent>();
         b
     }
 
@@ -1109,6 +1194,19 @@ impl SimCheckpoint {
             let t_last = if st.pending.is_empty() { st.drained_at } else { self.now };
             t_last + EPS < st.submitted_at + minw
         })
+    }
+
+    /// No fault ever perturbed the recorded prefix: no injected task
+    /// failure, no executor loss/restart, no abort. The recovery policy
+    /// (`spark.task.maxFailures` and friends) is only ever *consulted*
+    /// at a failure, so a fault-clean prefix is bit-identical under any
+    /// failure-policy values — the certificate behind the re-pricer's
+    /// failure-field forks. Trivially true whenever faults are disarmed.
+    pub(crate) fn fault_prefix_clean(&self) -> bool {
+        self.stats.task_failures == 0
+            && self.stats.executor_losses == 0
+            && self.stats.executor_restarts == 0
+            && self.stats.stage_aborts == 0
     }
 }
 
@@ -1227,7 +1325,50 @@ impl<'a> EventSim<'a> {
             finished_scratch: Vec::new(),
             trace: TraceSink::null(),
             stage_spans: Vec::new(),
+            faults: None,
+            fault_events: Vec::new(),
         }
+    }
+
+    /// Arm the fault injector: crash hazards and the loss/restart
+    /// timeline from `plan`, recovered under `recovery`. Must be called
+    /// before the first submission (stages capture their fault streams
+    /// at submit time). Arming an empty plan changes nothing; leaving
+    /// faults disarmed is bit-identical to the pre-fault core.
+    pub fn arm_faults(&mut self, plan: Arc<FaultPlan>, recovery: RecoveryPolicy) {
+        assert!(self.stages.is_empty(), "arm_faults must precede the first submission");
+        let nodes = self.free_cores.len();
+        let timeline = plan.timeline();
+        self.faults = Some(FaultRt {
+            plan,
+            recovery,
+            timeline,
+            cursor: 0,
+            down: vec![false; nodes],
+            excluded: vec![false; nodes],
+            node_failures: vec![0; nodes],
+        });
+    }
+
+    /// Swap the recovery policy on a resumed core (the re-pricer's
+    /// failure-policy fork: valid only behind a
+    /// [`SimCheckpoint::fault_prefix_clean`] certificate). No-op when
+    /// faults are disarmed.
+    pub(crate) fn set_recovery(&mut self, recovery: RecoveryPolicy) {
+        if let Some(f) = self.faults.as_mut() {
+            f.recovery = recovery;
+        }
+    }
+
+    /// The armed plan, if any (identity check for checkpoint reuse).
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.faults.as_ref().map(|f| &*f.plan)
+    }
+
+    /// Drain the fault/recovery notifications queued since the last
+    /// call (empty on fault-free runs).
+    pub fn take_fault_events(&mut self) -> Vec<FaultEvent> {
+        std::mem::take(&mut self.fault_events)
     }
 
     /// Attach an observability recorder: task-copy spans (winners,
@@ -1306,6 +1447,8 @@ impl<'a> EventSim<'a> {
             rr: self.rr,
             admit_dirty: self.admit_dirty,
             stats: self.stats,
+            faults: self.faults.clone(),
+            fault_events: self.fault_events.clone(),
         }
     }
 
@@ -1362,6 +1505,8 @@ impl<'a> EventSim<'a> {
             finished_scratch: Vec::new(),
             trace: TraceSink::null(),
             stage_spans: Vec::new(),
+            faults: cp.faults.clone(),
+            fault_events: cp.fault_events.clone(),
         }
     }
 
@@ -1531,6 +1676,10 @@ impl<'a> EventSim<'a> {
             job,
             seq: handle,
             tasks: n,
+            seed: opts.seed,
+            failures: vec![0; n],
+            aborted: false,
+            in_pending_list: n > 0,
             arena: Arc::new(StageArena { phases, clone_phases, phase_off, preferred, pref_off }),
             pending: (0..n as u32).collect(),
             pending_pref,
@@ -1611,6 +1760,10 @@ impl<'a> EventSim<'a> {
             }
             self.stats.live_copy_event_sum += self.live as u64;
             self.drain_holds(prev_now);
+            // Losses/restarts due at this instant apply before task
+            // finishes: a copy finishing exactly at its node's loss is
+            // lost with the node (killed and re-queued, not finished).
+            self.apply_due_faults();
             self.collect_and_process();
             if let Some(s) = sink.as_deref_mut() {
                 s.observe(self);
@@ -1713,6 +1866,18 @@ impl<'a> EventSim<'a> {
         if spec_next < next {
             next = spec_next;
             from_spec = true;
+        }
+        // The fault timeline competes like any other event source, in
+        // both discovery modes identically (ties go to the earlier
+        // candidate above — the loss still applies before that event's
+        // finishers are processed).
+        if let Some(f) = &self.faults {
+            if let Some(ev) = f.timeline.get(f.cursor) {
+                if ev.at() < next {
+                    next = ev.at();
+                    from_spec = false;
+                }
+            }
         }
         (next, from_spec)
     }
@@ -1897,7 +2062,7 @@ impl<'a> EventSim<'a> {
             let r = &self.slots[slot as usize];
             (r.stage as usize, r.task_idx as usize, r.node, r.started)
         };
-        if self.stages[h].done[ti] {
+        if self.stages[h].done[ti] || self.stages[h].aborted {
             self.free_slot(slot);
             self.give_core(node);
             self.jobs_running[self.stages[h].job] -= 1;
@@ -1905,12 +2070,16 @@ impl<'a> EventSim<'a> {
         }
         self.slots[slot as usize].phase_idx += 1;
         if !self.enter_next_phase(slot) {
-            let (sibling, is_clone) = {
+            let (sibling, is_clone, doomed) = {
                 let r = &self.slots[slot as usize];
-                (r.sibling, r.is_clone)
+                (r.sibling, r.is_clone, r.doomed)
             };
             self.free_slot(slot);
-            self.finish_task(h, ti, node, started, sibling, is_clone);
+            if doomed {
+                self.fail_task(h, ti, node, started, is_clone, sibling);
+            } else {
+                self.finish_task(h, ti, node, started, sibling, is_clone);
+            }
         }
     }
 
@@ -2120,6 +2289,363 @@ impl<'a> EventSim<'a> {
         self.jobs_running[self.stages[h].job] -= 1;
     }
 
+    // ---- fault injection & recovery ----
+
+    /// Apply every timeline entry due at the current clock (losses sort
+    /// before restarts at the same instant — see
+    /// [`FaultPlan::timeline`]). Runs after the clock moves and before
+    /// the event's finishers are processed, in both discovery modes.
+    fn apply_due_faults(&mut self) {
+        loop {
+            let ev = {
+                let Some(f) = &self.faults else { return };
+                match f.timeline.get(f.cursor) {
+                    Some(&e) if e.at() <= self.now + EPS => e,
+                    _ => return,
+                }
+            };
+            self.faults.as_mut().expect("injector armed").cursor += 1;
+            match ev {
+                TimelineEvent::Lost { node, .. } => self.apply_node_loss(node),
+                TimelineEvent::Restarted { node, .. } => self.apply_node_restart(node),
+            }
+        }
+    }
+
+    /// An executor/node went down: its free cores leave placement, every
+    /// copy running on it is killed (meters refunded for work never
+    /// completed), and each killed task with no surviving racing copy
+    /// re-queues — *without* charging `spark.task.maxFailures` (Spark
+    /// treats executor loss as infrastructure, not task fault). Finished
+    /// shuffle-map outputs on the node are the engine's problem: it
+    /// receives [`FaultEvent::ExecutorLost`] and drives the FetchFailed
+    /// resubmission path.
+    fn apply_node_loss(&mut self, node: NodeId) {
+        let counted = {
+            let f = self.faults.as_mut().expect("fault timeline without injector");
+            if f.down[node as usize] {
+                return; // lost twice without a restart between
+            }
+            f.down[node as usize] = true;
+            !f.excluded[node as usize]
+        };
+        self.stats.executor_losses += 1;
+        if counted {
+            let freed = self.free_cores[node as usize];
+            self.free_cores[node as usize] = 0;
+            self.free_core_total -= freed;
+        }
+        self.fault_events.push(FaultEvent::ExecutorLost { node, at: self.now });
+        if self.trace.enabled() {
+            self.trace.instant(
+                SpanId::NONE,
+                "executor",
+                &format!("executor lost: node {node}"),
+                self.now,
+            );
+        }
+        for slot in 0..self.slots.len() as u32 {
+            let (alive, collected, on_node, h, ti, sibling) = {
+                let r = &self.slots[slot as usize];
+                (
+                    r.alive,
+                    r.collected,
+                    r.node == node,
+                    r.stage as usize,
+                    r.task_idx as usize,
+                    r.sibling,
+                )
+            };
+            if !alive || collected || !on_node {
+                continue;
+            }
+            self.kill_copy(slot, "lost with executor");
+            if self.stages[h].done[ti] || self.stages[h].aborted {
+                continue;
+            }
+            let sibling_live = sibling != SLOT_NONE && {
+                let r = &self.slots[sibling as usize];
+                r.alive && r.stage as usize == h && r.task_idx as usize == ti
+            };
+            if sibling_live {
+                continue; // the racing copy on another node carries on
+            }
+            self.requeue_task(h, ti);
+            self.stats.task_retries += 1;
+        }
+    }
+
+    /// A down node's *compute* comes back (its lost shuffle outputs do
+    /// not). Excluded nodes stay out of placement even after a restart.
+    fn apply_node_restart(&mut self, node: NodeId) {
+        let restore = {
+            let f = self.faults.as_mut().expect("fault timeline without injector");
+            if !f.down[node as usize] {
+                return;
+            }
+            f.down[node as usize] = false;
+            !f.excluded[node as usize]
+        };
+        self.stats.executor_restarts += 1;
+        if restore {
+            let cores = self.cluster.cores_per_node as i64;
+            self.free_cores[node as usize] = cores;
+            self.free_core_total += cores;
+            self.admit_dirty = true;
+        }
+        self.fault_events.push(FaultEvent::ExecutorRestarted { node, at: self.now });
+        if self.trace.enabled() {
+            self.trace.instant(
+                SpanId::NONE,
+                "executor",
+                &format!("executor restarted: node {node}"),
+                self.now,
+            );
+        }
+    }
+
+    /// A doomed copy reached its commit point and failed: charge the
+    /// task's failure count (and the node's, for exclusion), then —
+    /// unless a racing copy survives — retry the task up to
+    /// `spark.task.maxFailures` or abort its stage past the limit. The
+    /// caller has already freed the copy's slot.
+    fn fail_task(
+        &mut self,
+        h: usize,
+        ti: usize,
+        node: NodeId,
+        started: f64,
+        is_clone: bool,
+        sibling: u32,
+    ) {
+        if self.trace.enabled() {
+            let name = if is_clone {
+                format!("task {ti} (clone failed)")
+            } else {
+                format!("task {ti} (failed)")
+            };
+            self.trace.span(self.stage_span(h), "task", &name, started, self.now);
+        }
+        self.give_core(node);
+        self.stats.task_failures += 1;
+        self.jobs_running[self.stages[h].job] -= 1;
+        self.stages[h].failures[ti] += 1;
+        let failures = self.stages[h].failures[ti];
+        self.fault_events.push(FaultEvent::TaskFailed {
+            stage: h,
+            task: ti as u32,
+            node,
+            at: self.now,
+            failures,
+        });
+        self.note_node_failure(node);
+        let sibling_live = sibling != SLOT_NONE && {
+            let r = &self.slots[sibling as usize];
+            r.alive && r.stage as usize == h && r.task_idx as usize == ti
+        };
+        if sibling_live {
+            return; // the racing copy may still win the task
+        }
+        let max = self
+            .faults
+            .as_ref()
+            .map(|f| f.recovery.max_task_failures)
+            .expect("doomed copy without injector");
+        if failures >= max {
+            self.abort_stage(h);
+        } else {
+            self.requeue_task(h, ti);
+            self.stats.task_retries += 1;
+        }
+    }
+
+    /// Charge a task failure to `node`; past
+    /// `spark.excludeOnFailure.task.maxTaskAttemptsPerNode` (with
+    /// exclusion enabled) the node leaves placement for good.
+    fn note_node_failure(&mut self, node: NodeId) {
+        let exclude = {
+            let Some(f) = self.faults.as_mut() else { return };
+            f.node_failures[node as usize] += 1;
+            f.recovery.exclude_on_failure
+                && !f.excluded[node as usize]
+                && f.node_failures[node as usize] >= f.recovery.max_task_attempts_per_node
+        };
+        if exclude {
+            self.exclude_node(node);
+        }
+    }
+
+    /// Remove `node` from placement permanently: zero its free cores
+    /// (running copies keep their cores until they retire — gated
+    /// [`give_core`](Self::give_core) swallows them).
+    fn exclude_node(&mut self, node: NodeId) {
+        let was_down = {
+            let f = self.faults.as_mut().expect("exclusion without injector");
+            f.excluded[node as usize] = true;
+            f.down[node as usize]
+        };
+        if !was_down {
+            let freed = self.free_cores[node as usize];
+            self.free_cores[node as usize] = 0;
+            self.free_core_total -= freed;
+        }
+        self.fault_events.push(FaultEvent::NodeExcluded { node, at: self.now });
+        if self.trace.enabled() {
+            self.trace.instant(
+                SpanId::NONE,
+                "exclusion",
+                &format!("node {node} excluded"),
+                self.now,
+            );
+        }
+    }
+
+    /// Put a failed or executor-lost task back in its stage's pending
+    /// structures (sorted re-insertion everywhere — the ascending-index
+    /// invariants behind bucketed admission and `binary_search` must
+    /// hold for re-entrants too). The stage re-enters `pending_list` if
+    /// it had drained. No fresh locality hold is granted: hold windows
+    /// are measured from stage submission (the same deterministic
+    /// simplification delay scheduling already makes), so a retry after
+    /// the window launches ANY immediately.
+    fn requeue_task(&mut self, h: usize, ti: usize) {
+        if self.stages[h].in_pending[ti] {
+            return; // already pending (defensive: double requeue)
+        }
+        let nodes = self.free_cores.len();
+        let has_pref = self.stages[h].task_has_pref(ti);
+        let t = ti as u32;
+        {
+            let st = &mut self.stages[h];
+            if let Err(pos) = st.pending.binary_search(&t) {
+                st.pending.insert(pos, t);
+            }
+            st.in_pending[ti] = true;
+            if has_pref {
+                st.pending_pref += 1;
+            }
+            // The stage is no longer drained; conservative for the
+            // locality-fork certificate (it falls back to the clock).
+            st.drained_at = f64::INFINITY;
+        }
+        if has_pref {
+            let arena = Arc::clone(&self.stages[h].arena);
+            let prefs =
+                &arena.preferred[arena.pref_off[ti] as usize..arena.pref_off[ti + 1] as usize];
+            let st = &mut self.stages[h];
+            for &p in prefs {
+                let q = &mut st.node_buckets[p as usize % nodes];
+                // Sorted re-insert; a not-yet-pruned stale entry of this
+                // task simply becomes live again.
+                if let Err(pos) = q.binary_search(&t) {
+                    q.insert(pos, t);
+                }
+            }
+        } else {
+            let q = &mut self.stages[h].nopref_queue;
+            if let Err(pos) = q.binary_search(&t) {
+                q.insert(pos, t);
+            }
+        }
+        if !self.stages[h].in_pending_list {
+            self.stages[h].in_pending_list = true;
+            let hv = h as u32;
+            let pos = self.pending_list.binary_search(&hv).unwrap_or_else(|e| e);
+            self.pending_list.insert(pos, hv);
+        }
+        self.admit_dirty = true;
+    }
+
+    /// A task exhausted `spark.task.maxFailures`: the whole stage aborts
+    /// *now* — every running copy is killed, pending work is cleared,
+    /// and the completion (flagged [`StageCompletion::aborted`]) fires
+    /// immediately so the engine can crash the owning job.
+    fn abort_stage(&mut self, h: usize) {
+        self.stats.stage_aborts += 1;
+        self.stages[h].aborted = true;
+        self.fault_events.push(FaultEvent::StageAborted { stage: h, at: self.now });
+        if self.trace.enabled() {
+            self.trace.instant(
+                self.stage_span(h),
+                "abort",
+                &format!("stage {h} aborted (task exceeded maxFailures)"),
+                self.now,
+            );
+        }
+        for slot in 0..self.slots.len() as u32 {
+            let (alive, collected, of_stage) = {
+                let r = &self.slots[slot as usize];
+                (r.alive, r.collected, r.stage as usize == h)
+            };
+            // Collected siblings are mid-batch: process_finished retires
+            // them through the aborted-stage guard instead.
+            if alive && !collected && of_stage {
+                self.kill_copy(slot, "stage aborted");
+            }
+        }
+        {
+            let st = &mut self.stages[h];
+            for &t in st.pending.iter() {
+                st.in_pending[t as usize] = false;
+            }
+            st.pending.clear();
+            st.pending_pref = 0;
+            st.nopref_queue.clear();
+            for q in st.node_buckets.iter_mut() {
+                q.clear();
+            }
+            st.orig_queue.clear();
+            st.unfinished = 0;
+        }
+        self.completions.set(h as u32, self.now);
+    }
+
+    /// Forcibly retire a running copy (node loss, stage abort): refund
+    /// the stage's meters for work it never completed — exactly as
+    /// [`cancel_sibling`](Self::cancel_sibling) refunds a losing racer —
+    /// withdraw its flow, and release its core and slot.
+    fn kill_copy(&mut self, slot: u32, reason: &str) {
+        let (h, ti, node, started, is_ps, is_cpu, kind, left) = {
+            let r = &self.slots[slot as usize];
+            let left = if r.is_ps {
+                (r.remaining - r.rate * (self.now - r.updated_at)).max(0.0)
+            } else {
+                (r.deadline - self.now).max(0.0)
+            };
+            (
+                r.stage as usize,
+                r.task_idx as usize,
+                r.node,
+                r.started,
+                r.is_ps,
+                r.is_cpu,
+                r.res,
+                left,
+            )
+        };
+        if is_ps {
+            match kind {
+                ResKind::Disk => self.stages[h].disk_bytes -= left,
+                ResKind::Nic => self.stages[h].net_bytes -= left,
+            }
+            self.end_flow(slot);
+        } else if is_cpu {
+            self.stages[h].cpu_secs -= left;
+        }
+        if self.trace.enabled() {
+            self.trace.span(
+                self.stage_span(h),
+                "task",
+                &format!("task {ti} ({reason})"),
+                started,
+                self.now,
+            );
+        }
+        self.free_slot(slot);
+        self.give_core(node);
+        self.jobs_running[self.stages[h].job] -= 1;
+    }
+
     /// Emit the earliest stage completion due at the current clock
     /// (ties: lowest handle, by the heap's id tie-break).
     fn pop_due_completion(&mut self) -> Option<StageCompletion> {
@@ -2146,6 +2672,7 @@ impl<'a> EventSim<'a> {
             at: due,
             stats,
             task_nodes: std::mem::take(&mut st.task_nodes),
+            aborted: st.aborted,
         })
     }
 
@@ -2265,6 +2792,7 @@ impl<'a> EventSim<'a> {
                 let h = self.pending_list[i] as usize;
                 if self.stages[h].pending.is_empty() {
                     self.pending_list.remove(i); // keeps ascending handle order
+                    self.stages[h].in_pending_list = false;
                     continue;
                 }
                 if let Some(pick) = self.find_admissible(h) {
@@ -2328,6 +2856,13 @@ impl<'a> EventSim<'a> {
         self.free_core_total -= 1;
         self.jobs_running[self.stages[h].job] += 1;
         self.stats.task_launches += 1;
+        let doomed = match &self.faults {
+            Some(f) => {
+                let st = &self.stages[h];
+                f.plan.dooms(st.seed, ti as u32, st.failures[ti], is_clone, node)
+            }
+            None => false,
+        };
         let slot = self.alloc_slot(Running {
             stage: h as u32,
             task_idx: ti as u32,
@@ -2343,6 +2878,7 @@ impl<'a> EventSim<'a> {
             res: ResKind::Disk,
             is_cpu: false,
             is_clone,
+            doomed,
             alive: true,
             collected: false,
             sibling,
@@ -2361,10 +2897,15 @@ impl<'a> EventSim<'a> {
             }
         }
         if !self.enter_next_phase(slot) {
-            // Zero-work copy: wins (or finishes) immediately.
+            // Zero-work copy: wins (or finishes — or, doomed, fails)
+            // immediately.
             let sib = self.slots[slot as usize].sibling;
             self.free_slot(slot);
-            self.finish_task(h, ti, node, self.now, sib, is_clone);
+            if doomed {
+                self.fail_task(h, ti, node, self.now, is_clone, sib);
+            } else {
+                self.finish_task(h, ti, node, self.now, sib, is_clone);
+            }
         }
     }
 
@@ -2465,8 +3006,17 @@ impl<'a> EventSim<'a> {
         }
     }
 
-    /// Return a core to `node` and re-arm the admission scan.
+    /// Return a core to `node` and re-arm the admission scan. Down and
+    /// excluded nodes swallow the core instead: their capacity is out of
+    /// placement until restart (exclusion is permanent), and their
+    /// `free_cores` entry stays zero so every placement scan skips them
+    /// without fault-specific checks.
     fn give_core(&mut self, node: NodeId) {
+        if let Some(f) = &self.faults {
+            if f.down[node as usize] || f.excluded[node as usize] {
+                return;
+            }
+        }
         self.free_cores[node as usize] += 1;
         self.free_core_total += 1;
         self.admit_dirty = true;

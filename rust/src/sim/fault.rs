@@ -1,0 +1,266 @@
+//! Deterministic fault injection: seeded per-task crash hazards,
+//! executor/node loss at simulated instants, optional node restart, and
+//! the Spark-faithful recovery-policy knobs the event core enforces.
+//!
+//! Determinism contract: every crash decision is a **pure function** of
+//! `(plan seed, stage seed, task index, attempt, copy kind, node)` — the
+//! injector keeps no live RNG state, so checkpoints stay pure value
+//! state and a forked run re-derives exactly the draws the recorded run
+//! saw. With no plan armed the injector draws nothing at all:
+//! `faults = None` is bit-identical to the fault-free core at every
+//! seed and thread count.
+
+use crate::cluster::NodeId;
+use crate::util::prng::Prng;
+
+/// One scheduled executor/node loss.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeLoss {
+    /// Node that goes down.
+    pub node: NodeId,
+    /// Simulated instant of the loss.
+    pub at: f64,
+    /// Bring the node's *compute* back `restart_after` seconds later
+    /// (its finished shuffle-map outputs stay lost), or never.
+    pub restart_after: Option<f64>,
+}
+
+/// A per-node hazard override: `node`'s task attempts crash with
+/// `crash_prob` instead of the plan-wide probability (a flaky executor —
+/// the regime where node exclusion pays).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FlakyNode {
+    pub node: NodeId,
+    pub crash_prob: f64,
+}
+
+/// A seeded, deterministic fault scenario. `FaultPlan::default()` is the
+/// empty scenario (no hazards, no losses) — arming it changes nothing.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    /// Stream selector for every crash draw in this plan.
+    pub seed: u64,
+    /// Plan-wide transient crash probability per task attempt.
+    pub task_crash_prob: f64,
+    /// Optional flaky node overriding the plan-wide hazard.
+    pub flaky: Option<FlakyNode>,
+    /// Scheduled executor losses (and optional restarts).
+    pub losses: Vec<NodeLoss>,
+}
+
+impl FaultPlan {
+    /// The crash probability a task attempt faces on `node`.
+    pub fn crash_prob_on(&self, node: NodeId) -> f64 {
+        match self.flaky {
+            Some(f) if f.node == node => f.crash_prob,
+            _ => self.task_crash_prob,
+        }
+    }
+
+    /// Pure crash draw for one launched copy: does this attempt die
+    /// (after consuming its full duration — a transient JVM crash at
+    /// output commit)? Stable across runs, thread counts, and
+    /// checkpoint forks by construction.
+    pub fn dooms(
+        &self,
+        stage_seed: u64,
+        task: u32,
+        attempt: u32,
+        is_clone: bool,
+        node: NodeId,
+    ) -> bool {
+        let p = self.crash_prob_on(node);
+        if p <= 0.0 {
+            return false;
+        }
+        let lane = ((task as u64) << 33) | ((attempt as u64) << 1) | is_clone as u64;
+        let key = mix(mix(self.seed ^ 0xFA17_0BAD, stage_seed), mix(lane, node as u64));
+        Prng::new(key).f64() < p
+    }
+
+    /// The loss/restart timeline, sorted by instant (ties: losses before
+    /// restarts, then by node). Panics on non-finite or negative times —
+    /// a malformed plan must fail loudly, not wedge the event clock.
+    pub fn timeline(&self) -> Vec<TimelineEvent> {
+        let mut out = Vec::with_capacity(self.losses.len() * 2);
+        for l in &self.losses {
+            assert!(
+                l.at.is_finite() && l.at >= 0.0,
+                "node loss instant must be finite and non-negative"
+            );
+            out.push(TimelineEvent::Lost { node: l.node, at: l.at });
+            if let Some(dt) = l.restart_after {
+                assert!(dt.is_finite() && dt > 0.0, "restart delay must be a finite > 0");
+                out.push(TimelineEvent::Restarted { node: l.node, at: l.at + dt });
+            }
+        }
+        out.sort_by(|a, b| {
+            a.at()
+                .partial_cmp(&b.at())
+                .expect("timeline instants are finite")
+                .then_with(|| a.rank().cmp(&b.rank()))
+                .then_with(|| a.node().cmp(&b.node()))
+        });
+        out
+    }
+
+    /// True when arming this plan could ever perturb a run.
+    pub fn is_armed(&self) -> bool {
+        self.task_crash_prob > 0.0
+            || self.flaky.map(|f| f.crash_prob > 0.0).unwrap_or(false)
+            || !self.losses.is_empty()
+    }
+}
+
+/// One entry of a plan's loss/restart timeline.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TimelineEvent {
+    Lost { node: NodeId, at: f64 },
+    Restarted { node: NodeId, at: f64 },
+}
+
+impl TimelineEvent {
+    pub fn at(&self) -> f64 {
+        match *self {
+            TimelineEvent::Lost { at, .. } | TimelineEvent::Restarted { at, .. } => at,
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        match *self {
+            TimelineEvent::Lost { node, .. } | TimelineEvent::Restarted { node, .. } => node,
+        }
+    }
+
+    fn rank(&self) -> u8 {
+        match self {
+            TimelineEvent::Lost { .. } => 0,
+            TimelineEvent::Restarted { .. } => 1,
+        }
+    }
+}
+
+/// Spark's failure-handling knobs, resolved from `SparkConf` by
+/// `engine::run::recovery_of`. Only consulted while a [`FaultPlan`] is
+/// armed — on a fault-free run no failure ever occurs, so these are
+/// behavior-preserving by construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RecoveryPolicy {
+    /// `spark.task.maxFailures`: attempts per task before the stage —
+    /// and with it the job — aborts.
+    pub max_task_failures: u32,
+    /// `spark.stage.maxConsecutiveAttempts`: stage re-submissions
+    /// (FetchFailed recoveries) before the job aborts.
+    pub max_stage_attempts: u32,
+    /// `spark.excludeOnFailure.enabled`.
+    pub exclude_on_failure: bool,
+    /// `spark.excludeOnFailure.task.maxTaskAttemptsPerNode`: task
+    /// failures on one node before it is excluded from placement.
+    pub max_task_attempts_per_node: u32,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            max_task_failures: 4,
+            max_stage_attempts: 4,
+            exclude_on_failure: false,
+            max_task_attempts_per_node: 2,
+        }
+    }
+}
+
+/// Fault/recovery notifications the event core queues for the engine
+/// (`EventSim::take_fault_events`) — the sim-level analogue of Spark's
+/// `SparkListenerExecutorRemoved` / task-failure listener events.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    ExecutorLost { node: NodeId, at: f64 },
+    ExecutorRestarted { node: NodeId, at: f64 },
+    TaskFailed { stage: usize, task: u32, node: NodeId, at: f64, failures: u32 },
+    NodeExcluded { node: NodeId, at: f64 },
+    StageAborted { stage: usize, at: f64 },
+}
+
+/// splitmix64-style finalizer over two words — the key mixer for the
+/// pure crash draws.
+fn mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_disarmed_and_never_dooms() {
+        let p = FaultPlan::default();
+        assert!(!p.is_armed());
+        for task in 0..64 {
+            assert!(!p.dooms(0x5EED, task, 0, false, (task % 4) as NodeId));
+        }
+        assert!(p.timeline().is_empty());
+    }
+
+    #[test]
+    fn dooms_is_a_pure_function_of_its_key() {
+        let p = FaultPlan { seed: 7, task_crash_prob: 0.5, ..FaultPlan::default() };
+        for task in 0..32 {
+            let a = p.dooms(0xABCD, task, 1, false, 2);
+            let b = p.dooms(0xABCD, task, 1, false, 2);
+            assert_eq!(a, b, "task {task} draw must reproduce");
+        }
+        // Attempt, clone flag, and stage seed all select distinct draws.
+        let outcomes: Vec<bool> = (0..128)
+            .map(|i| p.dooms(0xABCD ^ (i / 4), i, i % 3, i % 2 == 0, (i % 4) as NodeId))
+            .collect();
+        assert!(outcomes.iter().any(|&d| d) && outcomes.iter().any(|&d| !d));
+    }
+
+    #[test]
+    fn flaky_node_overrides_the_plan_hazard() {
+        let p = FaultPlan {
+            seed: 1,
+            task_crash_prob: 0.0,
+            flaky: Some(FlakyNode { node: 2, crash_prob: 1.0 }),
+            ..FaultPlan::default()
+        };
+        assert!(p.is_armed());
+        assert_eq!(p.crash_prob_on(0), 0.0);
+        assert_eq!(p.crash_prob_on(2), 1.0);
+        assert!(p.dooms(9, 0, 0, false, 2));
+        assert!(!p.dooms(9, 0, 0, false, 1));
+    }
+
+    #[test]
+    fn timeline_sorts_losses_and_restarts() {
+        let p = FaultPlan {
+            losses: vec![
+                NodeLoss { node: 3, at: 10.0, restart_after: Some(5.0) },
+                NodeLoss { node: 1, at: 2.0, restart_after: None },
+                NodeLoss { node: 0, at: 15.0, restart_after: None },
+            ],
+            ..FaultPlan::default()
+        };
+        let t = p.timeline();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t[0], TimelineEvent::Lost { node: 1, at: 2.0 });
+        assert_eq!(t[1], TimelineEvent::Lost { node: 3, at: 10.0 });
+        assert_eq!(t[2], TimelineEvent::Restarted { node: 3, at: 15.0 });
+        assert_eq!(t[3], TimelineEvent::Lost { node: 0, at: 15.0 });
+        // Loss sorts before a restart at the same instant.
+        assert!(t[2].rank() > t[3].rank() || t[2].at() < t[3].at() || t[2].rank() < t[3].rank());
+    }
+
+    #[test]
+    fn default_recovery_matches_spark_defaults() {
+        let r = RecoveryPolicy::default();
+        assert_eq!(r.max_task_failures, 4);
+        assert_eq!(r.max_stage_attempts, 4);
+        assert!(!r.exclude_on_failure);
+        assert_eq!(r.max_task_attempts_per_node, 2);
+    }
+}

@@ -33,14 +33,24 @@
 //! [`run_stage`] survives as a convenience wrapper that submits one
 //! stage into a fresh event core and drains it — exactly the historical
 //! barrier behavior, now a special case of the general core.
+//!
+//! The [`fault`] module adds a seeded, deterministic fault injector
+//! ([`FaultPlan`]: transient per-task crash hazards, executor/node loss
+//! at simulated instants, optional restart) plus the Spark-faithful
+//! recovery semantics the core enforces when one is armed — task retries
+//! up to `spark.task.maxFailures`, stage aborts past it, node exclusion
+//! (`spark.excludeOnFailure.*`). With no plan armed the core is
+//! bit-identical to the pre-fault simulator at every seed.
 
 pub mod event;
+pub mod fault;
 
 pub use event::{
     scheduler_for, Discovery, EventSim, FairScheduler, FifoScheduler, JobId, PoolSpec, Scheduler,
     SchedulerMode, SimCheckpoint, SimPolicy, SimStats, SnapshotSink, SpecPolicy, StageCompletion,
     StageHandle, StageSpec, StageView,
 };
+pub use fault::{FaultEvent, FaultPlan, FlakyNode, NodeLoss, RecoveryPolicy};
 
 use crate::cluster::{ClusterSpec, NodeId};
 use crate::util::stats::Summary;

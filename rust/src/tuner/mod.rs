@@ -40,12 +40,14 @@ pub use parallel::TrialExecutor;
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
-use crate::engine::fork::run_planned_from_with_traced;
+use crate::engine::fork::{
+    run_planned_from_with_faulted_traced, run_planned_recording_faulted_traced,
+};
 use crate::engine::{
-    run_planned_recording_traced, run_planned_traced, ForkPoint, JobPlan, JobResult,
+    run_planned_faulted_traced, run_planned_traced, ForkPoint, JobPlan, JobResult,
 };
 use crate::obs::{SpanId, TraceSink};
-use crate::sim::SimOpts;
+use crate::sim::{FaultPlan, SimOpts};
 use std::sync::Arc;
 
 /// How one trial's number was actually produced — the decision record
@@ -137,6 +139,12 @@ pub struct ForkingRunner<'c> {
     /// Classify diffs with the PR-6 coarse three-way oracle instead of
     /// per-field sensitivity (comparison mode; still bit-identical).
     pub coarse: bool,
+    /// Fault scenario every trial is priced under (`None` or a disarmed
+    /// plan — today's fault-free pricing, bit-identical). Recordings
+    /// remember their scenario, so the fork store stays sound even when
+    /// the plan is swapped mid-walk (mismatched forks decline and the
+    /// trial re-prices from `t = 0`).
+    pub faults: Option<FaultPlan>,
     /// Resident recordings; probed exhaustively (the fork sharing the
     /// longest event prefix wins), evicted by byte budget.
     forks: Vec<StoredFork>,
@@ -165,6 +173,7 @@ impl<'c> ForkingRunner<'c> {
             opts,
             full_reprice: false,
             coarse: false,
+            faults: None,
             forks: Vec::new(),
             budget_bytes: DEFAULT_FORK_BUDGET_BYTES,
             store_bytes: 0,
@@ -183,9 +192,28 @@ impl<'c> ForkingRunner<'c> {
     /// Price one trial, returning the full [`JobResult`] (the [`Runner`]
     /// impl reduces it to the effective duration).
     pub fn run_result(&mut self, conf: &SparkConf) -> JobResult {
+        let faults = self.faults.clone();
+        let armed = faults.as_ref().filter(|f| f.is_armed());
         if self.full_reprice {
-            let res =
-                run_planned_traced(&self.plan, conf, self.cluster, &self.opts, &self.trace, self.trace_span);
+            let res = match armed {
+                Some(f) => run_planned_faulted_traced(
+                    &self.plan,
+                    conf,
+                    self.cluster,
+                    &self.opts,
+                    f,
+                    &self.trace,
+                    self.trace_span,
+                ),
+                None => run_planned_traced(
+                    &self.plan,
+                    conf,
+                    self.cluster,
+                    &self.opts,
+                    &self.trace,
+                    self.trace_span,
+                ),
+            };
             self.full_trials += 1;
             self.total_events += res.sim.events;
             self.last_prov = Some(RunProvenance {
@@ -211,7 +239,7 @@ impl<'c> ForkingRunner<'c> {
             })
             .max_by_key(|&(_, ev)| ev);
         if let Some((i, _)) = best {
-            if let Some(res) = run_planned_from_with_traced(
+            if let Some(res) = run_planned_from_with_faulted_traced(
                 &self.forks[i].fork,
                 &self.plan,
                 conf,
@@ -220,6 +248,7 @@ impl<'c> ForkingRunner<'c> {
                 self.coarse,
                 &self.trace,
                 self.trace_span,
+                armed,
             ) {
                 // GreedyDual refresh: a matched recording re-earns its
                 // residency.
@@ -238,11 +267,12 @@ impl<'c> ForkingRunner<'c> {
                 return res;
             }
         }
-        let (res, fork) = run_planned_recording_traced(
+        let (res, fork) = run_planned_recording_faulted_traced(
             &self.plan,
             conf,
             self.cluster,
             &self.opts,
+            armed,
             &self.trace,
             self.trace_span,
         );
@@ -359,6 +389,112 @@ impl Runner for ForkingRunner<'_> {
     }
 }
 
+/// How [`FaultEnsembleRunner`] turns one trial into a robustness score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEnsembleOpts {
+    /// Independent fault draws per trial (k). Draw 0 prices the base
+    /// scenario verbatim; draw `i` re-seeds the plan deterministically,
+    /// so the same `(conf, base plan, k)` always prices the same k
+    /// scenarios — trials stay reproducible and comparable.
+    pub draws: u32,
+    /// Score each trial by the p95 of its draw makespans
+    /// (`sorted[⌈0.95·k⌉ − 1]`) instead of the mean — tail-robust
+    /// incumbents for clusters where the occasional bad draw is what
+    /// the SLA actually sees.
+    pub p95: bool,
+}
+
+impl Default for FaultEnsembleOpts {
+    fn default() -> Self {
+        FaultEnsembleOpts { draws: 5, p95: false }
+    }
+}
+
+/// Reduce one trial's draw makespans to its ensemble score. A crashed
+/// draw (∞) poisons the mean outright; under p95 it is tolerated only
+/// while it stays above the quantile index — crashing more than ~5 % of
+/// draws surfaces as an infinite score either way.
+pub fn ensemble_score(draws: &[f64], p95: bool) -> f64 {
+    if draws.is_empty() {
+        return f64::INFINITY;
+    }
+    if p95 {
+        let mut sorted = draws.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("makespans are never NaN"));
+        let idx = ((0.95 * sorted.len() as f64).ceil() as usize).max(1) - 1;
+        sorted[idx]
+    } else {
+        draws.iter().sum::<f64>() / draws.len() as f64
+    }
+}
+
+/// A [`Runner`] that prices every trial as a **seeded fault ensemble**:
+/// k deterministic re-seeds of one base [`FaultPlan`], scored by mean
+/// or p95 makespan ([`ensemble_score`]). The keep-iff-improving rule
+/// then optimizes expected (or tail) runtime *under failures* — a conf
+/// that wins fault-free but aborts under injection scores ∞ on the
+/// crashing draws and is never kept.
+///
+/// Wraps a [`ForkingRunner`], so draws still price incrementally where
+/// the certificates allow: recordings remember their scenario and
+/// forks only resume under the exact plan they were recorded with.
+pub struct FaultEnsembleRunner<'c> {
+    inner: ForkingRunner<'c>,
+    base: FaultPlan,
+    ens: FaultEnsembleOpts,
+    last_draws: Vec<f64>,
+}
+
+impl<'c> FaultEnsembleRunner<'c> {
+    pub fn new(
+        inner: ForkingRunner<'c>,
+        base: FaultPlan,
+        ens: FaultEnsembleOpts,
+    ) -> FaultEnsembleRunner<'c> {
+        FaultEnsembleRunner { inner, base, ens, last_draws: Vec::new() }
+    }
+
+    /// The i-th scenario of the ensemble: the base plan under a
+    /// deterministically varied injector seed (draw 0 is the base plan
+    /// itself, so a 1-draw ensemble degenerates to plain fault
+    /// pricing).
+    pub fn draw_plan(&self, i: u32) -> FaultPlan {
+        FaultPlan {
+            seed: self.base.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ..self.base.clone()
+        }
+    }
+
+    /// Makespans of the most recent trial's draws, in draw order.
+    pub fn last_draws(&self) -> &[f64] {
+        &self.last_draws
+    }
+
+    /// The wrapped incremental runner (event counters, fork store).
+    pub fn inner(&self) -> &ForkingRunner<'c> {
+        &self.inner
+    }
+}
+
+impl Runner for FaultEnsembleRunner<'_> {
+    fn run(&mut self, conf: &SparkConf) -> f64 {
+        self.last_draws.clear();
+        for i in 0..self.ens.draws.max(1) {
+            self.inner.faults = Some(self.draw_plan(i));
+            let t = self.inner.run(conf);
+            self.last_draws.push(t);
+        }
+        ensemble_score(&self.last_draws, self.ens.p95)
+    }
+
+    fn set_trace(&mut self, trace: &TraceSink, span: SpanId) {
+        self.inner.set_trace(trace, span);
+    }
+
+    // Provenance is per-run; a k-draw trial has no single decision
+    // record, so the ensemble reports none.
+}
+
 /// One trial in the methodology.
 #[derive(Clone, Debug)]
 pub struct Trial {
@@ -459,6 +595,12 @@ pub struct TuneOpts {
     /// (cross-workload evidence transfer). `None` — the paper's cold
     /// methodology, unchanged.
     pub warm_start: Option<WarmStart>,
+    /// Failure-robust mode: append the failure-policy steps (task-retry
+    /// budget, node exclusion) to the decision list. The pricing half
+    /// lives in the runner — pair this with a [`FaultEnsembleRunner`]
+    /// built from the same options so every trial is scored over k
+    /// seeded fault draws. `None` — fault-free tuning, unchanged.
+    pub fault_ensemble: Option<FaultEnsembleOpts>,
     /// The configuration the walk starts from (trial deltas stack on
     /// top of it). The paper's methodology starts from the Spark
     /// defaults; a non-default base lets `-c key=val` overrides ride
@@ -477,6 +619,7 @@ impl Default for TuneOpts {
             short_version: false,
             straggler_aware: false,
             warm_start: None,
+            fault_ensemble: None,
             base: SparkConf::default(),
             trace: TraceSink::null(),
         }
@@ -587,6 +730,31 @@ const STRAGGLER_STEPS: &[StepDef] = &[
     },
 ];
 
+/// Failure-policy extension of the decision list
+/// (`TuneOpts::fault_ensemble`): the task-retry budget as a sibling
+/// pair — restore the Spark default against a fragile base, or spend
+/// extra attempts riding out a crash-prone cluster — plus node
+/// exclusion. These knobs are unobservable fault-free (every trial
+/// prices identically), so they only join the walk when trials are
+/// scored under fault injection.
+const FAULT_STEPS: &[StepDef] = &[
+    StepDef {
+        step: "default task retries",
+        delta: &[("spark.task.maxFailures", "4")],
+        group: 9,
+    },
+    StepDef {
+        step: "persistent task retries",
+        delta: &[("spark.task.maxFailures", "8")],
+        group: 9,
+    },
+    StepDef {
+        step: "exclude flaky nodes",
+        delta: &[("spark.excludeOnFailure.enabled", "true")],
+        group: 10,
+    },
+];
+
 /// Run the Fig-4 trial-and-error methodology.
 ///
 /// With [`TuneOpts::warm_start`], the neighbor's kept steps are
@@ -620,11 +788,14 @@ pub fn tune(runner: &mut dyn Runner, opts: &TuneOpts) -> TuneOutcome {
         (t, runner.last_provenance())
     }
 
-    let steps: Vec<&StepDef> = if opts.straggler_aware {
+    let mut steps: Vec<&StepDef> = if opts.straggler_aware {
         STEPS.iter().chain(STRAGGLER_STEPS.iter()).collect()
     } else {
         STEPS.iter().collect()
     };
+    if opts.fault_ensemble.is_some() {
+        steps.extend(FAULT_STEPS.iter());
+    }
     let trace = &opts.trace;
     let session = trace.open(SpanId::NONE, "session");
     let mut priced_secs = 0.0;
@@ -1168,5 +1339,89 @@ mod tests {
         );
         assert!(!out.trials[0].kept, "20% gain must not clear a 30% threshold");
         assert_eq!(out.best_conf.serializer, crate::ser::SerKind::Java);
+    }
+
+    // ---- failure-robust tuning (fault ensembles) ----
+
+    #[test]
+    fn ensemble_score_mean_and_p95() {
+        let draws = [10.0, 20.0, 30.0, 40.0, 100.0];
+        assert_eq!(ensemble_score(&draws, false), 40.0);
+        // ⌈0.95·5⌉ − 1 = 4 → the max draw.
+        assert_eq!(ensemble_score(&draws, true), 100.0);
+        assert!(ensemble_score(&[], false).is_infinite());
+        assert!(ensemble_score(&[1.0, f64::INFINITY], false).is_infinite());
+        assert_eq!(ensemble_score(&[7.0], true), 7.0);
+    }
+
+    #[test]
+    fn fault_steps_are_opt_in_and_restore_the_retry_budget() {
+        // Synthetic failure surface: a starved retry budget triples the
+        // expected makespan (standing in for crashed draws), node
+        // exclusion shaves 5 %. The walk starts from a fragile base
+        // (maxFailures=1) — the kind that wins fault-free — and must
+        // restore the Spark default and enable exclusion.
+        let mut runner = |c: &SparkConf| {
+            let mut t = 100.0;
+            if c.task_max_failures < 4 {
+                t *= 3.0;
+            }
+            if c.exclude_on_failure {
+                t *= 0.95;
+            }
+            t
+        };
+        let mut base = SparkConf::default();
+        base.set("spark.task.maxFailures", "1").unwrap();
+        let out = tune(
+            &mut runner,
+            &TuneOpts {
+                fault_ensemble: Some(FaultEnsembleOpts::default()),
+                base,
+                ..TuneOpts::default()
+            },
+        );
+        assert_eq!(out.best_conf.task_max_failures, 4, "{:?}", out.final_settings());
+        assert!(out.best_conf.exclude_on_failure);
+
+        // Fault-free sessions never see the failure-policy steps.
+        let mut runner = |c: &SparkConf| surface(c);
+        let cold = tune(&mut runner, &TuneOpts::default());
+        assert!(!cold.trials.iter().any(|t| t.step.contains("retries")));
+        assert!(!cold.trials.iter().any(|t| t.step.contains("flaky")));
+    }
+
+    #[test]
+    fn fault_ensemble_runner_is_deterministic_and_tail_bounded() {
+        let job = crate::workloads::kmeans(400_000, 32, 8, 3, 16);
+        let plan = crate::engine::prepare(&job).unwrap();
+        let cluster = ClusterSpec::mini();
+        let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+        let faults =
+            FaultPlan { seed: 0xD00D, task_crash_prob: 0.02, ..FaultPlan::default() };
+
+        let conf = SparkConf::default();
+        let mut a = FaultEnsembleRunner::new(
+            ForkingRunner::new(Arc::clone(&plan), &cluster, opts.clone()),
+            faults.clone(),
+            FaultEnsembleOpts { draws: 3, p95: false },
+        );
+        let sa = a.run(&conf);
+        let mut b = FaultEnsembleRunner::new(
+            ForkingRunner::new(Arc::clone(&plan), &cluster, opts.clone()),
+            faults.clone(),
+            FaultEnsembleOpts { draws: 3, p95: false },
+        );
+        let sb = b.run(&conf);
+        assert_eq!(sa.to_bits(), sb.to_bits(), "ensemble scoring must be deterministic");
+        assert_eq!(a.last_draws().len(), 3);
+        assert!(sa.is_finite(), "a 2% per-task hazard must not abort under 4 retries");
+        // p95 of ≤ 20 draws is the max draw — never below the mean.
+        let p95 = ensemble_score(a.last_draws(), true);
+        assert!(p95 >= sa);
+        // Draw 0 prices the base scenario verbatim; later draws re-seed.
+        assert_eq!(a.draw_plan(0), faults);
+        assert_ne!(a.draw_plan(1).seed, faults.seed);
+        assert_eq!(a.draw_plan(1).task_crash_prob, faults.task_crash_prob);
     }
 }

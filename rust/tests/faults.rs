@@ -1,0 +1,441 @@
+//! Golden suite for fault injection & Spark-faithful recovery.
+//!
+//! The injector must be invisible when disarmed: for every scenario in
+//! the hot-path matrix (FIFO/FAIR × locality × speculation × straggler)
+//! a run through the faulted entry points with a disarmed [`FaultPlan`]
+//! reproduces the plain run **bit for bit** — durations, crash flags,
+//! and every [`SimStats`] work counter. Armed, the same seed must give
+//! the same run on any thread count, traced or untraced, and a fork
+//! resume under injection must equal full pricing bit for bit. The
+//! recovery semantics themselves — retries up to
+//! `spark.task.maxFailures`, FetchFailed parent-stage resubmission
+//! bounded by `spark.stage.maxConsecutiveAttempts`, executor restarts —
+//! are pinned against hand-checked scenarios.
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::conf::SparkConf;
+use sparktune::engine::{
+    prepare, run_planned, run_planned_faulted, run_planned_faulted_traced,
+    run_planned_from_faulted, run_planned_recording_faulted, Job, JobResult,
+};
+use sparktune::obs::{SpanId, TraceSink};
+use sparktune::sim::{FaultPlan, FlakyNode, NodeLoss, SimOpts, Straggler};
+use sparktune::workloads::{self, Workload};
+use std::sync::Arc;
+
+/// Bitwise result identity — durations, crash flags, stage reports.
+/// [`SimStats`] equality is asserted separately where the two runs use
+/// the *same* pricing mode: a fork resume legitimately differs from a
+/// full run in bookkeeping counters (`forked_trials`,
+/// `replayed_events`) while producing the identical result.
+fn job_results_identical(a: &JobResult, b: &JobResult) -> bool {
+    a.job == b.job
+        && a.duration.to_bits() == b.duration.to_bits()
+        && a.crashed == b.crashed
+        && a.stages.len() == b.stages.len()
+        && a.stages.iter().zip(&b.stages).all(|(x, y)| {
+            x.name == y.name
+                && x.duration.to_bits() == y.duration.to_bits()
+                && x.cpu_secs.to_bits() == y.cpu_secs.to_bits()
+                && x.disk_bytes.to_bits() == y.disk_bytes.to_bits()
+                && x.net_bytes.to_bits() == y.net_bytes.to_bits()
+                && x.locality_hits == y.locality_hits
+                && x.speculated == y.speculated
+        })
+}
+
+/// Iterative cache-prefixed workload (same shape as the hot-path
+/// suite): the prefix is insensitive to shuffle-class deltas, so the
+/// fork-resume path has a real timeline to inherit — under injection.
+fn iterative_job() -> Job {
+    workloads::kmeans(400_000, 32, 8, 3, 16)
+}
+
+/// An armed plan that exercises all three hazard classes: a plan-wide
+/// transient crash hazard, a flaky (but survivable) node, and an
+/// executor loss timed early inside the fault-free makespan (so it is
+/// guaranteed to fire) with a later restart.
+fn armed_plan(makespan: f64) -> FaultPlan {
+    FaultPlan {
+        seed: 0xD00D,
+        task_crash_prob: 0.03,
+        flaky: Some(FlakyNode { node: 2, crash_prob: 0.2 }),
+        losses: vec![NodeLoss {
+            node: 3,
+            at: 0.2 * makespan,
+            restart_after: Some(0.3 * makespan),
+        }],
+    }
+}
+
+#[test]
+fn disarmed_injector_is_bit_identical_across_the_matrix() {
+    // faults = None (or a disarmed plan) must keep every existing
+    // scenario bit-identical: the faulted entry points share one event
+    // core with the plain ones, and an unarmed core draws nothing.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let disarmed = FaultPlan::default();
+    assert!(!disarmed.is_armed());
+
+    let confs = [
+        ("fifo", SparkConf::default()),
+        ("fair", SparkConf::default().with("spark.scheduler.mode", "FAIR")),
+        ("locality", SparkConf::default().with("spark.locality.wait", "1s")),
+        ("speculation", SparkConf::default().with("spark.speculation", "true")),
+        (
+            "speculation+greedy",
+            SparkConf::default()
+                .with("spark.speculation", "true")
+                .with("spark.locality.wait", "0s"),
+        ),
+    ];
+    let opt_sets = [
+        ("plain", SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None }),
+        (
+            "straggler",
+            SimOpts {
+                jitter: 0.05,
+                seed: 0xBEEF,
+                straggler: Some(Straggler { prob: 0.1, factor: 6.0 }),
+            },
+        ),
+        ("no-jitter", SimOpts { jitter: 0.0, seed: 1, straggler: None }),
+    ];
+    for (cname, conf) in &confs {
+        for (oname, opts) in &opt_sets {
+            let plain = run_planned(&plan, conf, &cluster, opts);
+            let faulted = run_planned_faulted(&plan, conf, &cluster, opts, &disarmed);
+            assert!(
+                job_results_identical(&plain, &faulted),
+                "{cname}/{oname}: a disarmed injector perturbed the run"
+            );
+            assert_eq!(
+                plain.sim, faulted.sim,
+                "{cname}/{oname}: a disarmed injector perturbed the work counters"
+            );
+        }
+    }
+}
+
+#[test]
+fn same_seed_fault_runs_reproduce_across_threads() {
+    // The fault draws hash (stage seed, task, attempt, node) — no
+    // global RNG — so an armed run is a pure function of its inputs
+    // and must survive any thread count bit for bit.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let conf = SparkConf::default();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let makespan = run_planned(&plan, &conf, &cluster, &opts).duration;
+    let faults = armed_plan(makespan);
+
+    let serial = run_planned_faulted(&plan, &conf, &cluster, &opts, &faults);
+    assert!(faults.is_armed());
+    // Either the timed loss fires (the run lasts at least the clean
+    // makespan unless a fault already ended it) or a hazard crash
+    // pre-empted it — both prove injection actually happened.
+    assert!(
+        serial.sim.task_failures > 0 || serial.sim.executor_losses > 0,
+        "the armed plan must actually inject something"
+    );
+
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let (plan, conf, cluster, opts, faults) = (&plan, &conf, &cluster, &opts, &faults);
+                s.spawn(move || run_planned_faulted(plan, conf, cluster, opts, faults))
+            })
+            .collect();
+        for h in handles {
+            let threaded = h.join().unwrap();
+            assert!(
+                job_results_identical(&serial, &threaded),
+                "same-seed fault run diverged across threads"
+            );
+            assert_eq!(serial.sim, threaded.sim, "work counters diverged across threads");
+        }
+    });
+}
+
+#[test]
+fn traced_equals_untraced_under_injection() {
+    // Tracing stays a pure observer with the injector armed, and the
+    // exported artifacts are byte-stable run over run.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let conf = SparkConf::default();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let makespan = run_planned(&plan, &conf, &cluster, &opts).duration;
+    let faults = armed_plan(makespan);
+
+    let plain = run_planned_faulted(&plan, &conf, &cluster, &opts, &faults);
+    let sink = TraceSink::buffered();
+    let traced =
+        run_planned_faulted_traced(&plan, &conf, &cluster, &opts, &faults, &sink, SpanId::NONE);
+    assert!(job_results_identical(&plain, &traced), "tracing perturbed a faulted run");
+    assert_eq!(plain.sim, traced.sim, "tracing perturbed faulted work counters");
+
+    let events = sink.events();
+    assert!(!events.is_empty(), "a traced faulted run must record spans");
+    if plain.sim.executor_losses > 0 {
+        assert!(
+            events.iter().any(|e| e.cat == "executor"),
+            "executor losses must surface as trace instants"
+        );
+        assert!(
+            sink.event_log().contains("SparkListenerExecutorRemoved"),
+            "the event log must carry the Spark listener event"
+        );
+    }
+
+    // Byte-stable exports: a second traced run writes the same files.
+    let sink2 = TraceSink::buffered();
+    let again =
+        run_planned_faulted_traced(&plan, &conf, &cluster, &opts, &faults, &sink2, SpanId::NONE);
+    assert!(job_results_identical(&traced, &again));
+    assert_eq!(traced.sim, again.sim);
+    assert_eq!(sink.chrome_trace(), sink2.chrome_trace());
+    assert_eq!(sink.event_log(), sink2.event_log());
+}
+
+#[test]
+fn fork_resume_under_faults_is_bit_identical_to_full_pricing() {
+    // The tentpole acceptance bar: recording under injection equals the
+    // plain faulted run, and resuming a shuffle-class probe from the
+    // recorded fork equals pricing it from scratch — bit for bit.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&iterative_job()).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let faults =
+        FaultPlan { seed: 0xF0_4C, task_crash_prob: 0.03, flaky: None, losses: Vec::new() };
+    let base = SparkConf::default();
+
+    let (recorded, fork) = run_planned_recording_faulted(&plan, &base, &cluster, &opts, &faults);
+    let full_base = run_planned_faulted(&plan, &base, &cluster, &opts, &faults);
+    assert!(
+        job_results_identical(&recorded, &full_base),
+        "recording checkpoints perturbed a faulted run"
+    );
+
+    let probes = [
+        SparkConf::default()
+            .with("spark.serializer", "org.apache.spark.serializer.KryoSerializer"),
+        SparkConf::default().with("spark.shuffle.compress", "false"),
+        SparkConf::default().with("spark.shuffle.file.buffer", "128k"),
+    ];
+    let mut resumed = 0;
+    for probe in &probes {
+        let full = run_planned_faulted(&plan, probe, &cluster, &opts, &faults);
+        let forked = run_planned_from_faulted(&fork, &plan, probe, &cluster, &opts, &faults);
+        if let Some(forked) = forked {
+            resumed += 1;
+            assert!(
+                job_results_identical(&forked, &full),
+                "fork resume under faults diverged from full pricing"
+            );
+        }
+    }
+    assert!(resumed > 0, "at least one shuffle-class probe must resume from the fork");
+
+    // A probe that changes the failure policy itself may only resume
+    // when the certificate proves the prefix failure-free; either way
+    // the contract is the same — resume ≡ full pricing.
+    let policy_probe = SparkConf::default().with("spark.task.maxFailures", "8");
+    let full = run_planned_faulted(&plan, &policy_probe, &cluster, &opts, &faults);
+    if let Some(forked) =
+        run_planned_from_faulted(&fork, &plan, &policy_probe, &cluster, &opts, &faults)
+    {
+        assert!(
+            job_results_identical(&forked, &full),
+            "policy-divergent fork resume diverged from full pricing"
+        );
+    }
+}
+
+#[test]
+fn transient_crashes_retry_within_the_budget() {
+    // A plan-wide hazard with default maxFailures=4: every failure is
+    // retried (speculation off → no live sibling absorbs it), the job
+    // finishes, and the rework shows up as extra launches and a longer
+    // makespan than the fault-free twin.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let conf = SparkConf::default();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let faults = FaultPlan { seed: 7, task_crash_prob: 0.10, flaky: None, losses: Vec::new() };
+
+    let clean = run_planned(&plan, &conf, &cluster, &opts);
+    let r = run_planned_faulted(&plan, &conf, &cluster, &opts, &faults);
+    assert!(r.crashed.is_none(), "a 10% hazard must not exhaust maxFailures=4: {:?}", r.crashed);
+    assert!(r.sim.task_failures > 0, "a 10% hazard must hit at least one task");
+    assert_eq!(
+        r.sim.task_retries, r.sim.task_failures,
+        "without speculation every failure is retried"
+    );
+    assert_eq!(r.sim.stage_aborts, 0);
+    assert!(r.sim.task_launches > clean.sim.task_launches, "retries launch extra attempts");
+    assert!(r.duration >= clean.duration, "doomed attempts burn cluster time");
+}
+
+#[test]
+fn max_failures_exhaustion_aborts_the_stage() {
+    // A black-hole node with maxFailures=1: the first commit there
+    // fails and aborts the stage — effective duration is infinite and
+    // no retry is ever granted.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let conf = SparkConf::default().with("spark.task.maxFailures", "1");
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let faults = FaultPlan {
+        seed: 11,
+        task_crash_prob: 0.0,
+        flaky: Some(FlakyNode { node: 1, crash_prob: 1.0 }),
+        losses: Vec::new(),
+    };
+
+    let r = run_planned_faulted(&plan, &conf, &cluster, &opts, &faults);
+    assert!(r.crashed.is_some(), "one failure must exhaust maxFailures=1");
+    assert!(r.effective_duration().is_infinite());
+    assert!(r.sim.stage_aborts >= 1);
+    assert_eq!(r.sim.task_retries, 0, "an aborting failure grants no retry");
+}
+
+/// Fault-free reference run used to time executor losses inside a
+/// specific stage's window (linear DAG ⇒ makespan = Σ stage durations).
+fn clean_two_stage(
+    plan: &Arc<sparktune::engine::JobPlan>,
+    cluster: &ClusterSpec,
+    opts: &SimOpts,
+) -> (JobResult, f64) {
+    let clean = run_planned(plan, &SparkConf::default(), cluster, opts);
+    assert!(clean.crashed.is_none());
+    assert!(clean.stages.len() >= 2, "need a map stage feeding a reduce stage");
+    let mid_reduce = clean.stages[0].duration + 0.5 * clean.stages[1].duration;
+    (clean, mid_reduce)
+}
+
+#[test]
+fn lost_executor_resubmits_the_parent_stage_for_lost_partitions() {
+    // Losing a node mid-reduce invalidates its finished shuffle-map
+    // outputs: the FetchFailed path resubmits the parent stage for only
+    // the lost partitions, surfaced as a "[resubmit N]" stage report,
+    // and the job still finishes — slower than fault-free.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let (clean, mid_reduce) = clean_two_stage(&plan, &cluster, &opts);
+
+    let faults = FaultPlan {
+        seed: 3,
+        task_crash_prob: 0.0,
+        flaky: None,
+        losses: vec![NodeLoss { node: 1, at: mid_reduce, restart_after: None }],
+    };
+    let r = run_planned_faulted(&plan, &SparkConf::default(), &cluster, &opts, &faults);
+    assert!(r.crashed.is_none(), "default policy must recover: {:?}", r.crashed);
+    assert_eq!(r.sim.executor_losses, 1);
+    assert_eq!(r.sim.executor_restarts, 0);
+    assert!(
+        r.stages.iter().any(|s| s.name.contains("[resubmit")),
+        "lost map outputs must surface a resubmission report: {:?}",
+        r.stages.iter().map(|s| s.name.clone()).collect::<Vec<_>>()
+    );
+    assert!(
+        r.sim.task_launches > clean.sim.task_launches,
+        "re-running lost map partitions launches extra tasks"
+    );
+    assert!(r.duration > clean.duration, "recovery rework costs wall-clock");
+}
+
+#[test]
+fn stage_max_consecutive_attempts_bounds_fetch_failed_recovery() {
+    // With spark.stage.maxConsecutiveAttempts=1, the very first
+    // FetchFailed resubmission exceeds the bound: the job crashes
+    // instead of retrying forever.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let (_, mid_reduce) = clean_two_stage(&plan, &cluster, &opts);
+
+    let faults = FaultPlan {
+        seed: 3,
+        task_crash_prob: 0.0,
+        flaky: None,
+        losses: vec![NodeLoss { node: 1, at: mid_reduce, restart_after: None }],
+    };
+    let conf = SparkConf::default().with("spark.stage.maxConsecutiveAttempts", "1");
+    let r = run_planned_faulted(&plan, &conf, &cluster, &opts, &faults);
+    let msg = r
+        .crashed
+        .as_deref()
+        .expect("maxConsecutiveAttempts=1 must turn the resubmission into a crash");
+    assert!(msg.contains("FetchFailed"), "the crash must name the FetchFailed bound: {msg}");
+    assert!(r.effective_duration().is_infinite());
+}
+
+#[test]
+fn restarted_executor_rejoins_but_lost_outputs_are_still_repriced() {
+    // A restart restores compute capacity, not shuffle outputs: the
+    // resubmission still happens, the restart is counted, and the job
+    // finishes.
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let (clean, mid_reduce) = clean_two_stage(&plan, &cluster, &opts);
+
+    let gone = FaultPlan {
+        seed: 3,
+        task_crash_prob: 0.0,
+        flaky: None,
+        losses: vec![NodeLoss { node: 1, at: mid_reduce, restart_after: None }],
+    };
+    let back = FaultPlan {
+        losses: vec![NodeLoss {
+            node: 1,
+            at: mid_reduce,
+            restart_after: Some(0.1 * clean.stages[1].duration),
+        }],
+        ..gone.clone()
+    };
+    let r_gone = run_planned_faulted(&plan, &SparkConf::default(), &cluster, &opts, &gone);
+    let r_back = run_planned_faulted(&plan, &SparkConf::default(), &cluster, &opts, &back);
+    assert!(r_gone.crashed.is_none());
+    assert_eq!(r_gone.sim.executor_restarts, 0);
+    assert!(r_back.crashed.is_none());
+    assert_eq!(r_back.sim.executor_losses, 1);
+    assert_eq!(r_back.sim.executor_restarts, 1);
+    assert!(
+        r_back.stages.iter().any(|s| s.name.contains("[resubmit")),
+        "a restart does not resurrect shuffle outputs"
+    );
+}
+
+#[test]
+fn exclusion_caps_how_often_a_flaky_node_is_trusted() {
+    // excludeOnFailure turns a black-hole node into a bounded capacity
+    // loss: after maxTaskAttemptsPerNode failures the node is excluded
+    // and the job finishes, where retries alone would circle forever
+    // into an abort (re-queued attempts keep their block placement).
+    let cluster = ClusterSpec::mini();
+    let plan = prepare(&Workload::MiniSortByKey.job()).unwrap();
+    let opts = SimOpts { jitter: 0.04, seed: 0x7E57, straggler: None };
+    let faults = FaultPlan {
+        seed: 11,
+        task_crash_prob: 0.0,
+        flaky: Some(FlakyNode { node: 1, crash_prob: 1.0 }),
+        losses: Vec::new(),
+    };
+
+    let retries_only = run_planned_faulted(&plan, &SparkConf::default(), &cluster, &opts, &faults);
+    assert!(
+        retries_only.crashed.is_some(),
+        "node-local retries re-land on the black hole until maxFailures"
+    );
+
+    let excluding = SparkConf::default().with("spark.excludeOnFailure.enabled", "true");
+    let r = run_planned_faulted(&plan, &excluding, &cluster, &opts, &faults);
+    assert!(r.crashed.is_none(), "exclusion must rescue the job: {:?}", r.crashed);
+    assert!(r.sim.task_failures >= 2, "the node earns its exclusion the hard way");
+    assert_eq!(r.sim.stage_aborts, 0);
+}
