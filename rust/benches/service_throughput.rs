@@ -13,6 +13,11 @@
 //! * **service warm** — the same service re-serves the batch: every
 //!   trial is a cache hit, the jobs/sec ceiling of the serving layer.
 //!
+//! Two durability rows time the `sparktune.snapshot.v1` path on the
+//! warm state (snapshots/sec for `snapshot_to`, restores/sec for a
+//! fresh service's `restore_from`), and a `router-x4 warm serve` row
+//! prices the profile-hash router against the single warm service.
+//!
 //! After the timed runs the dedup counters and cache hit rate are
 //! printed and sanity-asserted (requested > simulated on overlap).
 //!
@@ -25,7 +30,7 @@ use sparktune::cluster::ClusterSpec;
 use sparktune::conf::SparkConf;
 use sparktune::engine::{prepare, run_planned};
 use sparktune::experiments::service::stress_requests;
-use sparktune::service::{ServiceOpts, TuningService};
+use sparktune::service::{ServiceOpts, ShardedRouter, TuningService};
 use sparktune::testkit::{BenchArgs, BenchSink};
 use sparktune::tuner::{tune, TrialExecutor};
 
@@ -67,6 +72,27 @@ fn main() {
         svc.serve(&reqs); // warm it
         sink.bench(&format!("service/warm serve {tenants}×{apps}"), warm_iters, sessions, || {
             std::hint::black_box(svc.serve(&reqs));
+        });
+
+        // ---- durability: snapshot + restore of the warm state ----
+        let dir = std::env::temp_dir()
+            .join(format!("sparktune-bench-snap-{}-{tenants}x{apps}", std::process::id()));
+        sink.bench(&format!("service/snapshot {tenants}×{apps}"), warm_iters, 1.0, || {
+            svc.snapshot_to(&dir).expect("snapshot");
+        });
+        sink.bench(&format!("service/restore {tenants}×{apps}"), warm_iters, 1.0, || {
+            let fresh = TuningService::new(cluster.clone(), svc_opts);
+            fresh.restore_from(&dir).expect("restore");
+            std::hint::black_box(fresh.cached_trials());
+        });
+        std::fs::remove_dir_all(&dir).ok();
+
+        // ---- 4-shard router, warm: the horizontal-scaling path ----
+        let router = ShardedRouter::new(cluster.clone(), 4, svc_opts);
+        router.serve(&reqs); // warm it
+        let row = format!("service/router-x4 warm serve {tenants}×{apps}");
+        sink.bench(&row, warm_iters, sessions, || {
+            std::hint::black_box(router.serve(&reqs));
         });
 
         let s = svc.stats();

@@ -13,7 +13,8 @@
 //! sparktune straggler [--records N] [--tasks N] [--prob P] [--factor F]
 //! sparktune faults [--records N] [--tasks N]
 //! sparktune serve  [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
-//!                  [--warm-start]
+//!                  [--cache-shards K] [--warm-start] [--state-dir DIR] [--require-restore]
+//!                  [--saturation] [--sessions N] [--window W] [--tenant-cap K] [--json FILE]
 //! sparktune transfer [--tenants N] [--workers T] [--threshold D]
 //! sparktune perf-smoke [--workload <name>] [--trials N]
 //! sparktune help-conf
@@ -62,7 +63,8 @@ fn parse_args(argv: &[String]) -> Result<Args, String> {
             } else if matches!(
                 name,
                 "short" | "verbose" | "mixed" | "straggler-steps" | "warm-start" | "explain"
-                    | "metrics" | "fault-ensemble" | "fault-p95"
+                    | "metrics" | "fault-ensemble" | "fault-p95" | "saturation"
+                    | "require-restore"
             ) {
                 bools.push(name.to_string());
             } else {
@@ -191,13 +193,30 @@ USAGE:
                       node exclusion under a black-hole node — exits non-zero
                       unless every robustness property holds)
   sparktune serve    [--tenants M] [--apps N] [--workers T] [--capacity C] [--shards S]
-                     [--warm-start] [--conf k=v]... [--explain] [--metrics]
-                     (tuning service: M×N overlapping sessions, memoized trials;
-                      exits non-zero unless trials dedupe and the rerun is
+                     [--cache-shards K] [--warm-start] [--conf k=v]... [--explain]
+                     [--metrics]
+                     (tuning service: M×N overlapping sessions served across an
+                      S-shard profile-hash router, memoized trials; exits
+                      non-zero unless trials dedupe and the rerun is
                       bit-identical to the cold pass — or, with --warm-start,
                       strictly cheaper at equal final quality. --explain prints
                       per-session provenance tables, --metrics the service
                       counters as a registry snapshot)
+                     [--state-dir DIR]   (durability: restore the
+                      sparktune.snapshot.v1 state in DIR on start — a corrupt
+                      or version-skewed snapshot is quarantined to
+                      DIR.corrupt-<k> and the service starts cold — snapshot
+                      after every pass, and gate restart equivalence: a fresh
+                      service restored from DIR must re-serve the batch
+                      bit-identically with zero new simulations)
+                     [--require-restore] (exit non-zero unless a snapshot was
+                      restored and the first pass was served entirely from it)
+                     [--saturation] [--sessions N] [--window W] [--tenant-cap K]
+                     [--json FILE]       (saturation mode: a deterministic
+                      1k-session stream with a hot tenant, admitted in W-sized
+                      windows under a per-tenant fairness cap; exits non-zero
+                      unless every session is served and the cap holds;
+                      --json writes the BENCH_service.json trendline rows)
   sparktune transfer [--tenants N] [--workers T] [--threshold D]
                      (evidence transfer: train N tenants, warm-start a held-out
                       similar workload; exits non-zero unless the warm session
@@ -552,24 +571,153 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                 args.flag("workers").unwrap_or("4").parse().map_err(|e| format!("{e}"))?;
             let capacity: usize =
                 args.flag("capacity").unwrap_or("4096").parse().map_err(|e| format!("{e}"))?;
+            // --shards sizes the profile-hash router (the horizontal
+            // scale-out axis); --cache-shards the per-service memo-cache
+            // lock stripes (a concurrency knob, invisible to outcomes).
             let shards: usize =
-                args.flag("shards").unwrap_or("8").parse().map_err(|e| format!("{e}"))?;
+                args.flag("shards").unwrap_or("4").parse().map_err(|e| format!("{e}"))?;
+            let cache_shards: usize =
+                args.flag("cache-shards").unwrap_or("8").parse().map_err(|e| format!("{e}"))?;
             if tenants == 0 || apps == 0 {
                 return Err("--tenants and --apps must be >= 1".into());
+            }
+            if shards == 0 || cache_shards == 0 {
+                return Err("--shards and --cache-shards must be >= 1".into());
             }
             let warm_start = args.has("warm-start");
             let base = args.conf()?;
             base.validate().map_err(|e| e.to_string())?;
             report_conf_warnings(&base, &TraceSink::null());
+            if args.has("saturation") {
+                // Saturation mode: a deterministic high-volume stream with
+                // windowed admission control and per-tenant fairness caps,
+                // emitting the BENCH_service.json trendline artifact.
+                let sessions: usize =
+                    args.flag("sessions").unwrap_or("1024").parse().map_err(|e| format!("{e}"))?;
+                let window: usize =
+                    args.flag("window").unwrap_or("64").parse().map_err(|e| format!("{e}"))?;
+                let tenant_cap: usize =
+                    args.flag("tenant-cap").unwrap_or("4").parse().map_err(|e| format!("{e}"))?;
+                if sessions == 0 {
+                    return Err("--sessions must be >= 1".into());
+                }
+                let o = experiments::service::SaturationOpts {
+                    sessions,
+                    tenants,
+                    apps,
+                    window,
+                    tenant_cap,
+                    service_shards: shards,
+                    workers,
+                    capacity,
+                    cache_shards,
+                    warm_start,
+                };
+                let r = experiments::service::service_saturation(&o, &cluster);
+                println!("{}", experiments::service::saturation_table(&r).to_markdown());
+                if r.outcomes.len() != sessions {
+                    return Err(format!("served {} of {sessions} sessions", r.outcomes.len()));
+                }
+                if r.max_tenant_window > tenant_cap.max(1) {
+                    return Err(format!(
+                        "fairness cap violated: a tenant took {} of one window (cap {})",
+                        r.max_tenant_window,
+                        tenant_cap.max(1)
+                    ));
+                }
+                if r.stats.hit_rate() <= 0.0 {
+                    return Err("service hit rate is zero — memoization is not engaging".into());
+                }
+                let mut sink = crate::testkit::BenchSink::new("service", false);
+                sink.results.push(crate::testkit::BenchResult {
+                    name: format!("saturation/{sessions}sessions/{shards}shards"),
+                    iters: 1,
+                    median_secs: r.wall_secs,
+                    min_secs: r.wall_secs,
+                    units_per_iter: r.outcomes.len() as f64,
+                });
+                sink.counter("admission_windows", r.windows as f64);
+                sink.counter("fairness_deferrals", r.deferrals as f64);
+                sink.counter("trials_requested", r.stats.trials_requested as f64);
+                sink.counter("trials_simulated", r.stats.trials_simulated as f64);
+                sink.counter("warm_started_sessions", r.stats.warm_started as f64);
+                sink.write(args.flag("json")).map_err(|e| e.to_string())?;
+                println!(
+                    "ok: {} sessions in {} windows ({} fairness deferrals); \
+                     max tenant share {}/{} per window",
+                    r.outcomes.len(),
+                    r.windows,
+                    r.deferrals,
+                    r.max_tenant_window,
+                    tenant_cap.max(1)
+                );
+                return Ok(());
+            }
             let opts = experiments::service::StressOpts {
                 tenants,
                 apps,
                 workers,
                 capacity,
-                shards,
+                shards: cache_shards,
                 warm_start,
+                service_shards: shards,
             };
-            let r = experiments::service::service_stress_with_base(&opts, &cluster, &base);
+            let state_dir = args.flag("state-dir").map(std::path::PathBuf::from);
+            if args.has("require-restore") && state_dir.is_none() {
+                return Err("--require-restore needs --state-dir".into());
+            }
+            let svc = experiments::service::stress_router(&opts, &cluster);
+            // ---- durability: restore-or-quarantine on start ----
+            let mut restored = false;
+            if let Some(dir) = &state_dir {
+                if dir.exists() {
+                    match svc.restore_from(dir) {
+                        Ok(()) => {
+                            restored = true;
+                            println!("restored service state from {}", dir.display());
+                        }
+                        Err(e) => {
+                            // Reject-don't-guess: the snapshot is set
+                            // aside whole for inspection and the service
+                            // starts cold (FORMATS.md, "Rejection").
+                            let q = crate::service::persist::quarantine_dir(dir)
+                                .map_err(|qe| format!("quarantining rejected snapshot: {qe}"))?;
+                            eprintln!(
+                                "warning: snapshot rejected ({e}); quarantined to {} — \
+                                 starting cold",
+                                q.display()
+                            );
+                        }
+                    }
+                }
+            }
+            if args.has("require-restore") && !restored {
+                return Err("--require-restore: no snapshot was restored".into());
+            }
+            // ---- the stress passes, snapshotting after each ----
+            let reqs = experiments::service::stress_requests_with_base(tenants, apps, &base);
+            let t0 = std::time::Instant::now();
+            let cold = svc.serve(&reqs);
+            let cold_wall_secs = t0.elapsed().as_secs_f64();
+            let cold_stats = svc.stats();
+            if let Some(dir) = &state_dir {
+                svc.snapshot_to(dir).map_err(|e| format!("snapshot after cold pass: {e}"))?;
+            }
+            let t1 = std::time::Instant::now();
+            let warm = svc.serve(&reqs);
+            let warm_wall_secs = t1.elapsed().as_secs_f64();
+            let r = experiments::service::StressReport {
+                opts,
+                cold,
+                warm,
+                cold_stats,
+                stats: svc.stats(),
+                cold_wall_secs,
+                warm_wall_secs,
+            };
+            if let Some(dir) = &state_dir {
+                svc.snapshot_to(dir).map_err(|e| format!("snapshot at shutdown: {e}"))?;
+            }
             println!("{}", experiments::service::service_table(&r).to_markdown());
             if args.has("explain") {
                 // Per-session provenance rollup over the cold pass: how
@@ -635,7 +783,32 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
             if tenants > 1 && r.cold_stats.trials_simulated >= r.cold_stats.trials_requested {
                 return Err("cold pass did not dedupe across overlapping sessions".into());
             }
-            if warm_start {
+            if restored && r.cold_stats.trials_simulated != 0 {
+                // Restart equivalence, first half: the restored memo
+                // cache must already hold every trial the batch re-asks
+                // for — a warm restart simulates nothing.
+                return Err(format!(
+                    "restored service simulated {} trials re-serving its own snapshot",
+                    r.cold_stats.trials_simulated
+                ));
+            }
+            if warm_start && restored {
+                // Restored-evidence mode: the *first* pass already
+                // warm-starts from the snapshot's kNN index, so the
+                // rerun can't run fewer trials — it must instead be
+                // bit-identical, with every session carrying evidence.
+                if !r.deterministic() {
+                    return Err("restored warm rerun diverged from the first pass".into());
+                }
+                if !r.cold.iter().all(|c| c.warm_from.is_some()) {
+                    return Err("restored evidence did not warm-start every session".into());
+                }
+                println!(
+                    "ok: {} sessions/pass; restored evidence warm-started all of them; \
+                     rerun bit-identical",
+                    r.cold.len()
+                );
+            } else if warm_start {
                 // Evidence-transfer mode: the rerun warm-starts from
                 // the first pass, so it must be strictly cheaper at
                 // equal final quality — not bit-identical.
@@ -664,6 +837,40 @@ fn dispatch(argv: &[String]) -> Result<(), String> {
                     r.cold_stats.trials_simulated,
                     r.cold_stats.trials_requested,
                     100.0 * r.stats.hit_rate()
+                );
+            }
+            if let Some(dir) = &state_dir {
+                // ---- restart-equivalence gate (in-process) ----
+                // A fresh router restored from the snapshot just written
+                // must re-serve the batch bit-identically to the live
+                // one — same outcomes, same warm-start decisions — and
+                // simulate nothing (everything is in the restored memo
+                // cache). This is the warm-restart ≡ never-restarted
+                // invariant, gated on every `serve --state-dir` run.
+                let twin = experiments::service::stress_router(&opts, &cluster);
+                twin.restore_from(dir)
+                    .map_err(|e| format!("restoring the just-written snapshot: {e}"))?;
+                let live = svc.serve(&reqs);
+                let fresh = twin.serve(&reqs);
+                for (x, y) in live.iter().zip(&fresh) {
+                    if !crate::service::outcomes_identical(&x.outcome, &y.outcome)
+                        || x.warm_from != y.warm_from
+                    {
+                        return Err(format!("restart equivalence broke on session {}", x.name));
+                    }
+                }
+                let ts = twin.stats();
+                if ts.trials_simulated != 0 {
+                    return Err(format!(
+                        "restored twin simulated {} trials re-serving a snapshotted batch",
+                        ts.trials_simulated
+                    ));
+                }
+                println!(
+                    "ok: restart equivalence — a fresh service restored from {} re-served \
+                     {} sessions bit-identically with 0 new simulations",
+                    dir.display(),
+                    fresh.len()
                 );
             }
             Ok(())
@@ -1068,6 +1275,10 @@ mod tests {
         assert_eq!(a.flag("background"), Some("2"));
         let a = parse_args(&argv("serve --tenants 2 --warm-start")).unwrap();
         assert!(a.has("warm-start"));
+        let a = parse_args(&argv("serve --saturation --require-restore --state-dir /tmp/x"))
+            .unwrap();
+        assert!(a.has("saturation") && a.has("require-restore"));
+        assert_eq!(a.flag("state-dir"), Some("/tmp/x"));
         let a = parse_args(&argv(
             "tune --workload mini --fault-ensemble --fault-draws 3 --fault-p95 --seed 9",
         ))
@@ -1124,6 +1335,67 @@ mod tests {
             )),
             0
         );
+    }
+
+    #[test]
+    fn serve_state_dir_restores_and_quarantines() {
+        // Run 1 starts cold and snapshots; run 2 restores and must serve
+        // its first pass entirely from the snapshot (--require-restore);
+        // run 3 faces a corrupted snapshot, which must be quarantined
+        // whole and fail --require-restore.
+        let dir = std::env::temp_dir().join(format!("sparktune-cli-state-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for k in 0..4 {
+            let _ = std::fs::remove_dir_all(dir.with_file_name(format!(
+                "sparktune-cli-state-{}.corrupt-{k}",
+                std::process::id()
+            )));
+        }
+        let base = format!(
+            "serve --tenants 2 --apps 1 --workers 2 --capacity 256 --shards 2 --state-dir {}",
+            dir.display()
+        );
+        assert_eq!(main(argv(&base)), 0, "cold start + snapshot must pass");
+        assert!(dir.join("manifest.snap").exists());
+        assert!(dir.join("shard-0000").join("cache.snap").exists());
+        assert_eq!(main(argv(&format!("{base} --require-restore"))), 0, "warm restart");
+        // Corrupt one shard file: the whole snapshot must be rejected
+        // (never partially applied) and set aside for inspection.
+        let cache = dir.join("shard-0000").join("cache.snap");
+        let mut text = std::fs::read_to_string(&cache).unwrap();
+        text.push_str("entry=trailing-garbage\n");
+        std::fs::write(&cache, text).unwrap();
+        assert_eq!(main(argv(&format!("{base} --require-restore"))), 2, "corrupt rejected");
+        assert!(!dir.exists(), "the rejected snapshot directory must be quarantined away");
+        let _ = std::fs::remove_dir_all(&dir);
+        for k in 0..4 {
+            let _ = std::fs::remove_dir_all(dir.with_file_name(format!(
+                "sparktune-cli-state-{}.corrupt-{k}",
+                std::process::id()
+            )));
+        }
+    }
+
+    #[test]
+    fn serve_saturation_smoke() {
+        // Saturation mode end to end: fairness cap enforced, every
+        // session served, and the BENCH_service.json artifact written.
+        let json =
+            std::env::temp_dir().join(format!("BENCH_service-test-{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&json);
+        assert_eq!(
+            main(argv(&format!(
+                "serve --saturation --sessions 24 --tenants 3 --apps 3 --window 6 \
+                 --tenant-cap 2 --shards 2 --workers 2 --capacity 512 --warm-start --json {}",
+                json.display()
+            ))),
+            0
+        );
+        let text = std::fs::read_to_string(&json).unwrap();
+        assert!(text.contains("\"schema\":\"sparktune.bench.v1\""), "{text}");
+        assert!(text.contains("fairness_deferrals"), "{text}");
+        assert!(text.contains("saturation/24sessions/2shards"), "{text}");
+        let _ = std::fs::remove_file(&json);
     }
 
     #[test]

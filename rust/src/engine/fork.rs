@@ -100,6 +100,19 @@
 //! each distinct arena counted once — and the stores that retain
 //! `ForkPoint`s (`tuner::ForkingRunner`, the service's fingerprint
 //! fork store) evict against a byte budget instead of a count.
+//!
+//! # Persistence boundary
+//!
+//! Recorded timelines are **process-local by design**: a [`ForkPoint`]
+//! is a frozen view of the engine's internal layout (arenas, heaps,
+//! flow remainders), and serializing it would turn that layout into an
+//! on-disk format frozen forever. Dropping a recording is lossless by
+//! this module's own contract — the family re-records on its next
+//! cache-missed trial — so the durable slice of the fork subsystem is
+//! only what is *outcome-relevant* across a restart: the store's
+//! GreedyDual aging clocks and the crash/quarantine table, persisted
+//! as the fork ledger by [`crate::service::persist`] (normative spec:
+//! `docs/FORMATS.md` §4.3).
 
 use super::plan::{Stage, StageInput, StageOutput};
 use super::run::{self, JobPlan, JobResult, PricedMeta, PricingState, StageReport};

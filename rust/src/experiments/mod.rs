@@ -15,9 +15,11 @@
 //! * [`faults`] — fault injection: a conf that wins on the clean
 //!   cluster but aborts under failures, and the ensemble tuner finding
 //!   a failure-robust incumbent.
-//! * [`service`] — the tuning-service stress scenario: M tenants × N
+//! * [`service`] — the tuning-service stress scenarios: M tenants × N
 //!   apps through the memoized session server (cold vs warm, dedup and
-//!   bit-identical-outcome checks).
+//!   bit-identical-outcome checks, at any router shard count), plus
+//!   the saturation mode (1k+ sessions, windowed admission with
+//!   per-tenant fairness caps, `BENCH_service.json` trendlines).
 //! * [`transfer`] — cross-workload evidence transfer: train N tenants,
 //!   then warm-start a held-out similar workload and show it reaches
 //!   the cold methodology's final quality in strictly fewer runs.

@@ -1,5 +1,7 @@
-//! The tuning-service stress scenario: M tenants × N apps against one
-//! shared [`TuningService`], cold then fully warm.
+//! The tuning-service stress scenarios: M tenants × N apps against a
+//! shared (possibly sharded) tuning service, cold then fully warm —
+//! plus a saturation mode with 1k+ sessions, windowed admission
+//! control, and per-tenant fairness caps.
 //!
 //! Every tenant tunes the same small app catalog (overlapping
 //! workloads are exactly what a shared tuning service sees in
@@ -9,18 +11,31 @@
 //! fully-warm pass re-serves the identical batch — every trial hits the
 //! cache — and the outcomes must stay bit-identical to the cold pass,
 //! which [`StressReport::deterministic`] checks and the CLI `serve`
-//! subcommand (CI smoke) enforces.
+//! subcommand (CI smoke) enforces. Batches are served through a
+//! [`ShardedRouter`] ([`StressOpts::service_shards`], default 1), which
+//! is pinned bit-identical to a plain
+//! [`TuningService`](crate::service::TuningService) — so every
+//! assertion above holds at any shard count.
+//!
+//! [`service_saturation`] is the scaling scenario behind
+//! `BENCH_service.json`: a deterministic stream of
+//! [`SaturationOpts::sessions`] sessions with a deliberately hot tenant
+//! is admitted in fixed-size windows, at most
+//! [`SaturationOpts::tenant_cap`] sessions per tenant per window
+//! (excess defers, in order, to the next window), and each window is
+//! served across the router's shards.
 
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
 use crate::engine::Job;
 use crate::report::Table;
 use crate::service::{
-    outcomes_identical, ServiceOpts, ServiceStats, SessionOutcome, SessionRequest, TuningService,
+    outcomes_identical, ServiceOpts, ServiceStats, SessionOutcome, SessionRequest, ShardedRouter,
 };
 use crate::sim::SimOpts;
 use crate::tuner::TuneOpts;
 use crate::workloads;
+use std::collections::{HashMap, VecDeque};
 
 /// Stress-scenario sizing.
 #[derive(Clone, Copy, Debug)]
@@ -40,6 +55,10 @@ pub struct StressOpts {
     /// (identical workloads → distance-0 neighbors), so the rerun runs
     /// strictly fewer trials instead of being bit-identical.
     pub warm_start: bool,
+    /// Router shards ([`ShardedRouter`]) the batch is partitioned over
+    /// by profile hash. 1 (the default) is the single-service layout;
+    /// any N is pinned bit-identical to it.
+    pub service_shards: usize,
 }
 
 impl Default for StressOpts {
@@ -51,6 +70,7 @@ impl Default for StressOpts {
             capacity: 4096,
             shards: 8,
             warm_start: false,
+            service_shards: 1,
         }
     }
 }
@@ -159,14 +179,14 @@ pub fn service_stress(o: &StressOpts, cluster: &ClusterSpec) -> StressReport {
 /// [`service_stress`] under a non-default base configuration
 /// ([`StressOpts`] is `Copy`-sized on purpose, so the base rides
 /// alongside rather than inside it).
-pub fn service_stress_with_base(
-    o: &StressOpts,
-    cluster: &ClusterSpec,
-    base: &SparkConf,
-) -> StressReport {
-    let reqs = stress_requests_with_base(o.tenants, o.apps, base);
-    let svc = TuningService::new(
+/// The router a stress/saturation scenario serves through:
+/// [`StressOpts::service_shards`] services, each sized by the
+/// remaining knobs, with cross-shard evidence transfer when
+/// [`StressOpts::warm_start`] is on.
+pub fn stress_router(o: &StressOpts, cluster: &ClusterSpec) -> ShardedRouter {
+    ShardedRouter::new(
         cluster.clone(),
+        o.service_shards,
         ServiceOpts {
             workers: o.workers,
             shards: o.shards,
@@ -174,7 +194,16 @@ pub fn service_stress_with_base(
             warm_start: o.warm_start,
             ..ServiceOpts::default()
         },
-    );
+    )
+}
+
+pub fn service_stress_with_base(
+    o: &StressOpts,
+    cluster: &ClusterSpec,
+    base: &SparkConf,
+) -> StressReport {
+    let reqs = stress_requests_with_base(o.tenants, o.apps, base);
+    let svc = stress_router(o, cluster);
     let t0 = std::time::Instant::now();
     let cold = svc.serve(&reqs);
     let cold_wall_secs = t0.elapsed().as_secs_f64();
@@ -228,13 +257,222 @@ pub fn service_table(r: &StressReport) -> Table {
     )
 }
 
+/// Saturation-scenario sizing. Defaults model a busy shared service:
+/// 1k+ sessions, a deliberately hot tenant, fixed admission windows,
+/// and a 4-shard router.
+#[derive(Clone, Copy, Debug)]
+pub struct SaturationOpts {
+    /// Total sessions in the stream.
+    pub sessions: usize,
+    /// Tenants the stream is spread over; tenant 0 is **hot** (every
+    /// 4th session is its, on top of its round-robin share), so the
+    /// fairness cap visibly defers it.
+    pub tenants: u32,
+    /// Distinct catalog apps cycled through the stream.
+    pub apps: u32,
+    /// Sessions admitted per window (min 1).
+    pub window: usize,
+    /// Max sessions one tenant may occupy in a single window (min 1);
+    /// the excess defers, in arrival order, to later windows.
+    pub tenant_cap: usize,
+    /// Router shards.
+    pub service_shards: usize,
+    /// Worker threads per shard.
+    pub workers: usize,
+    /// Memo-cache capacity per shard, in trials.
+    pub capacity: usize,
+    /// Memo-cache lock stripes per shard.
+    pub cache_shards: usize,
+    /// Cross-shard evidence transfer (on by default: a saturated
+    /// service is exactly where transfer pays).
+    pub warm_start: bool,
+}
+
+impl Default for SaturationOpts {
+    fn default() -> Self {
+        SaturationOpts {
+            sessions: 1024,
+            tenants: 8,
+            apps: 12,
+            window: 64,
+            tenant_cap: 4,
+            service_shards: 4,
+            workers: 4,
+            capacity: 4096,
+            cache_shards: 8,
+            warm_start: true,
+        }
+    }
+}
+
+/// Mini-scale catalog for the saturation stream: the same three
+/// workload families as [`catalog`], small enough that a 1k-session
+/// stream stays a smoke-sized run (distinct apps still price distinct
+/// trials; repeated ones memoize).
+fn mini_catalog(a: u32) -> Job {
+    let scale = 1 + a as u64 / 3;
+    match a % 3 {
+        0 => workloads::sort_by_key(250_000 * scale, 8),
+        1 => workloads::kmeans(20_000 * scale, 10, 4, 2, 8),
+        _ => workloads::aggregate_by_key(250_000 * scale, 10_000, 8),
+    }
+}
+
+/// The deterministic saturation stream: session `s` belongs to tenant
+/// 0 when `s % 4 == 0` (the hot tenant) and round-robins otherwise,
+/// and cycles the mini catalog. Returns `(tenant, request)` pairs in
+/// arrival order.
+pub fn saturation_requests(o: &SaturationOpts) -> Vec<(u32, SessionRequest)> {
+    let tenants = o.tenants.max(1);
+    let apps = o.apps.max(1);
+    (0..o.sessions)
+        .map(|s| {
+            let tenant = if s % 4 == 0 { 0 } else { s as u32 % tenants };
+            let app = s as u32 % apps;
+            let req = SessionRequest {
+                name: format!("tenant{tenant}/app{app}/s{s}"),
+                job: mini_catalog(app),
+                tune: TuneOpts { short_version: true, ..TuneOpts::default() },
+                sim: SimOpts { jitter: 0.04, seed: 0x5A7 + app as u64, straggler: None },
+            };
+            (tenant, req)
+        })
+        .collect()
+}
+
+/// Outcome of the saturation scenario.
+#[derive(Clone, Debug)]
+pub struct SaturationReport {
+    pub opts: SaturationOpts,
+    /// Every session's outcome, in admission (served) order.
+    pub outcomes: Vec<SessionOutcome>,
+    /// Admission windows it took to drain the stream.
+    pub windows: u64,
+    /// Sessions pushed past their arrival window by the fairness cap.
+    pub deferrals: u64,
+    /// Largest per-tenant admission count observed in any single
+    /// window — ≤ `tenant_cap` by construction (the fairness claim).
+    pub max_tenant_window: usize,
+    /// Aggregated router counters after the full stream.
+    pub stats: ServiceStats,
+    pub wall_secs: f64,
+}
+
+impl SaturationReport {
+    /// Sessions per wall-clock second across the whole stream.
+    pub fn jobs_per_sec(&self) -> f64 {
+        self.outcomes.len() as f64 / self.wall_secs.max(1e-9)
+    }
+}
+
+/// Run the saturation scenario: admit the stream in windows under the
+/// per-tenant cap, serving each window across the router's shards.
+/// Deterministic end to end — the stream, the admission schedule, and
+/// (by the router's contract) every outcome.
+pub fn service_saturation(o: &SaturationOpts, cluster: &ClusterSpec) -> SaturationReport {
+    let window = o.window.max(1);
+    let tenant_cap = o.tenant_cap.max(1);
+    let router = stress_router(
+        &StressOpts {
+            tenants: o.tenants,
+            apps: o.apps,
+            workers: o.workers,
+            capacity: o.capacity,
+            shards: o.cache_shards,
+            warm_start: o.warm_start,
+            service_shards: o.service_shards,
+        },
+        cluster,
+    );
+    let mut pending: VecDeque<(u32, SessionRequest)> = saturation_requests(o).into();
+    let mut outcomes = Vec::with_capacity(o.sessions);
+    let mut windows = 0u64;
+    let mut deferrals = 0u64;
+    let mut max_tenant_window = 0usize;
+    let t0 = std::time::Instant::now();
+    while !pending.is_empty() {
+        windows += 1;
+        let mut admitted: Vec<SessionRequest> = Vec::with_capacity(window);
+        let mut deferred: VecDeque<(u32, SessionRequest)> = VecDeque::new();
+        let mut per_tenant: HashMap<u32, usize> = HashMap::new();
+        while admitted.len() < window {
+            let Some((tenant, req)) = pending.pop_front() else { break };
+            let count = per_tenant.entry(tenant).or_insert(0);
+            if *count < tenant_cap {
+                *count += 1;
+                max_tenant_window = max_tenant_window.max(*count);
+                admitted.push(req);
+            } else {
+                deferrals += 1;
+                deferred.push_back((tenant, req));
+            }
+        }
+        // Deferred sessions keep their arrival order at the head of
+        // the queue: the cap delays them, it never reorders them.
+        while let Some(item) = deferred.pop_back() {
+            pending.push_front(item);
+        }
+        let base = outcomes.len();
+        for (i, mut out) in router.serve(&admitted).into_iter().enumerate() {
+            out.session = base + i;
+            outcomes.push(out);
+        }
+    }
+    SaturationReport {
+        opts: *o,
+        outcomes,
+        windows,
+        deferrals,
+        max_tenant_window,
+        stats: router.stats(),
+        wall_secs: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// Render the saturation counters (the `serve --saturation` CLI emits
+/// this; wall-clock rows vary run to run, counters don't).
+pub fn saturation_table(r: &SaturationReport) -> Table {
+    let s = &r.stats;
+    Table::two_col(
+        format!(
+            "Service saturation — {} sessions, {} tenants, {}-shard router",
+            r.outcomes.len(),
+            r.opts.tenants,
+            r.opts.service_shards
+        ),
+        &[
+            ("sessions served", r.outcomes.len().to_string()),
+            ("admission windows", r.windows.to_string()),
+            ("fairness deferrals", r.deferrals.to_string()),
+            (
+                "max tenant share of a window",
+                format!("{} (cap {})", r.max_tenant_window, r.opts.tenant_cap),
+            ),
+            ("trials requested", s.trials_requested.to_string()),
+            ("trials simulated", s.trials_simulated.to_string()),
+            ("service hit rate", format!("{:.1}%", 100.0 * s.hit_rate())),
+            ("warm-started sessions", s.warm_started.to_string()),
+            ("quarantined trials", s.quarantined.to_string()),
+            ("wall", format!("{:.3}s ({:.1} jobs/sec)", r.wall_secs, r.jobs_per_sec())),
+        ],
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn stress_dedupes_and_stays_deterministic() {
-        let o = StressOpts { tenants: 3, apps: 2, workers: 4, capacity: 1024, shards: 4, warm_start: false };
+        let o = StressOpts {
+            tenants: 3,
+            apps: 2,
+            workers: 4,
+            capacity: 1024,
+            shards: 4,
+            warm_start: false,
+            service_shards: 1,
+        };
         let r = service_stress(&o, &ClusterSpec::mini());
         assert_eq!(r.cold.len(), 6);
         assert!(r.deterministic(), "warm rerun must be bit-identical to the cold pass");
@@ -266,6 +504,7 @@ mod tests {
             capacity: 1024,
             shards: 4,
             warm_start: true,
+            service_shards: 1,
         };
         let r = service_stress(&o, &ClusterSpec::mini());
         assert!(r.transfer_won(), "second pass must transfer: {:?}", r.stats);
@@ -292,7 +531,15 @@ mod tests {
     fn stress_is_reproducible_across_services() {
         // A fresh service (fresh cache, different thread interleavings)
         // reaches identical outcomes: purity end to end.
-        let o = StressOpts { tenants: 2, apps: 2, workers: 3, capacity: 512, shards: 2, warm_start: false };
+        let o = StressOpts {
+            tenants: 2,
+            apps: 2,
+            workers: 3,
+            capacity: 512,
+            shards: 2,
+            warm_start: false,
+            service_shards: 1,
+        };
         let a = service_stress(&o, &ClusterSpec::mini());
         let b = service_stress(&o, &ClusterSpec::mini());
         for (x, y) in a.cold.iter().zip(&b.cold) {
@@ -302,12 +549,79 @@ mod tests {
 
     #[test]
     fn table_reports_the_headline_counters() {
-        let o = StressOpts { tenants: 2, apps: 1, workers: 2, capacity: 256, shards: 2, warm_start: false };
+        let o = StressOpts {
+            tenants: 2,
+            apps: 1,
+            workers: 2,
+            capacity: 256,
+            shards: 2,
+            warm_start: false,
+            service_shards: 1,
+        };
         let r = service_stress(&o, &ClusterSpec::mini());
         let md = service_table(&r).to_markdown();
         assert!(md.contains("trials requested"), "{md}");
         assert!(md.contains("trials simulated"), "{md}");
         assert!(md.contains("jobs/sec"), "{md}");
         assert!(md.contains("| cold ≡ warm (bit-identical) | true |"), "{md}");
+    }
+
+    #[test]
+    fn sharded_stress_matches_the_single_service_layout() {
+        // The same stress scenario through a 3-shard router: outcomes,
+        // warm-start decisions, and the determinism predicate all agree
+        // with the 1-shard layout bitwise.
+        let single = StressOpts {
+            tenants: 2,
+            apps: 2,
+            workers: 2,
+            capacity: 512,
+            shards: 2,
+            warm_start: true,
+            service_shards: 1,
+        };
+        let sharded = StressOpts { service_shards: 3, ..single };
+        let a = service_stress(&single, &ClusterSpec::mini());
+        let b = service_stress(&sharded, &ClusterSpec::mini());
+        for (x, y) in a.cold.iter().zip(&b.cold).chain(a.warm.iter().zip(&b.warm)) {
+            assert!(outcomes_identical(&x.outcome, &y.outcome), "{} diverged", x.name);
+            assert_eq!(x.warm_from, y.warm_from, "{}", x.name);
+        }
+        assert!(b.transfer_won(), "transfer must win at any shard count");
+        assert_eq!(a.stats.warm_started, b.stats.warm_started);
+    }
+
+    #[test]
+    fn saturation_enforces_the_fairness_cap_and_stays_deterministic() {
+        let o = SaturationOpts {
+            sessions: 48,
+            tenants: 4,
+            apps: 6,
+            window: 8,
+            tenant_cap: 2,
+            service_shards: 2,
+            workers: 2,
+            capacity: 1024,
+            cache_shards: 4,
+            warm_start: true,
+        };
+        let r = service_saturation(&o, &ClusterSpec::mini());
+        assert_eq!(r.outcomes.len(), 48, "every session must eventually be served");
+        assert!(r.max_tenant_window <= 2, "cap violated: {}", r.max_tenant_window);
+        // The hot tenant (0) over-demands, so the cap must actually bite.
+        assert!(r.deferrals > 0, "the hot tenant must be deferred at least once");
+        assert!(r.windows >= (48 / 8) as u64, "windows cannot beat the admission rate");
+        assert_eq!(r.stats.sessions, 48);
+        // Deterministic end to end: a second run reproduces everything.
+        let r2 = service_saturation(&o, &ClusterSpec::mini());
+        assert_eq!(r.windows, r2.windows);
+        assert_eq!(r.deferrals, r2.deferrals);
+        for (x, y) in r.outcomes.iter().zip(&r2.outcomes) {
+            assert_eq!(x.name, y.name, "admission order must be reproducible");
+            assert!(outcomes_identical(&x.outcome, &y.outcome), "{} diverged", x.name);
+        }
+        let md = saturation_table(&r).to_markdown();
+        assert!(md.contains("fairness deferrals"), "{md}");
+        assert!(md.contains("admission windows"), "{md}");
     }
 }

@@ -30,6 +30,15 @@
 //! deduplication of concurrent identical trials lives one layer up, in
 //! [`super::server`] (which also measures each computation's wall time
 //! and records it as the entry's cost).
+//!
+//! **Persistence.** [`ShardedCache::export_shards`] /
+//! [`ShardedCache::restore_shards`] expose the full eviction state —
+//! every entry with its cost and queue key, plus each shard's touch
+//! clock and inflation water level — in the canonical eviction-queue
+//! order, so [`super::persist`] can snapshot it bit-exactly and a
+//! warm-restarted service evicts, ages, and memoizes identically to one
+//! that never stopped. The hit/miss counters are process-lifetime
+//! observability and deliberately do not round-trip.
 
 use super::fingerprint::Fingerprint;
 use std::collections::{BTreeMap, HashMap};
@@ -82,6 +91,39 @@ struct Shard<V> {
     /// Monotone non-decreasing; new/refreshed priorities are
     /// `inflation + cost`.
     inflation: f64,
+}
+
+/// One cached entry in exported (snapshot) form: the fingerprint, the
+/// value, the sanitized cost, and the exact eviction-queue key
+/// (`priority_bits`, `queue_tick`) it occupied — enough to rebuild the
+/// shard's queue bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct ExportedEntry<V> {
+    /// Full 128-bit trial fingerprint.
+    pub fingerprint: u128,
+    /// The cached value (any bit pattern — ∞ crash markers included).
+    pub value: V,
+    /// Sanitized computation cost (finite, ≥ 0) recorded at insert.
+    pub cost: f64,
+    /// IEEE-754 bits of the entry's queue priority (`inflation + cost`
+    /// at its last touch). Finite by construction.
+    pub priority_bits: u64,
+    /// The shard-clock tick of the entry's last touch (queue tie-break).
+    pub queue_tick: u64,
+}
+
+/// One shard's full eviction state in exported form: its touch clock,
+/// its GreedyDual inflation water level, and its entries in eviction
+/// order (victim first) — the canonical, deterministic serialization
+/// order.
+#[derive(Clone, Debug)]
+pub struct ShardExport<V> {
+    /// Monotone per-shard touch clock.
+    pub tick: u64,
+    /// GreedyDual water level (finite, ≥ 0).
+    pub inflation: f64,
+    /// Entries in ascending queue-key order (eviction victim first).
+    pub entries: Vec<ExportedEntry<V>>,
 }
 
 /// Cost of entries inserted through the plain [`ShardedCache::insert`]
@@ -226,6 +268,130 @@ impl<V: Clone> ShardedCache<V> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Number of lock stripes.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Per-shard entry capacity (snapshot geometry).
+    pub fn capacity_per_shard(&self) -> usize {
+        self.cap_per_shard
+    }
+
+    /// Export every shard's full eviction state, entries in ascending
+    /// queue-key order — the canonical order [`super::persist`]
+    /// serializes. Pure read: no priorities are refreshed, no counters
+    /// move.
+    pub fn export_shards(&self) -> Vec<ShardExport<V>> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let shard = s.lock().expect("cache shard poisoned");
+                ShardExport {
+                    tick: shard.tick,
+                    inflation: shard.inflation,
+                    entries: shard
+                        .queue
+                        .iter()
+                        .map(|(&(prio, qtick), fp)| {
+                            let e = shard.map.get(fp).expect("queue tracks every entry");
+                            ExportedEntry {
+                                fingerprint: *fp,
+                                value: e.value.clone(),
+                                cost: e.cost,
+                                priority_bits: prio,
+                                queue_tick: qtick,
+                            }
+                        })
+                        .collect(),
+                }
+            })
+            .collect()
+    }
+
+    /// Replace every shard's contents with `exports`, validating first
+    /// and applying only if *all* shards pass (never partially
+    /// applied): the export count must match the stripe count, each
+    /// entry must hash to the shard it is filed under, queue keys and
+    /// fingerprints must be unique, ticks must not run ahead of the
+    /// shard clock, costs and water levels must be finite and
+    /// non-negative, and no shard may exceed its capacity. The
+    /// observability counters are left untouched. Restoring an export
+    /// taken via [`export_shards`](ShardedCache::export_shards) is
+    /// bit-exact.
+    pub fn restore_shards(&self, exports: Vec<ShardExport<V>>) -> Result<(), String> {
+        let n = self.shards.len();
+        if exports.len() != n {
+            return Err(format!("export has {} shards, cache has {n}", exports.len()));
+        }
+        for (i, ex) in exports.iter().enumerate() {
+            if !ex.inflation.is_finite() || ex.inflation < 0.0 {
+                return Err(format!("shard {i}: inflation must be finite and non-negative"));
+            }
+            if ex.entries.len() > self.cap_per_shard {
+                return Err(format!(
+                    "shard {i}: {} entries exceed the capacity of {}",
+                    ex.entries.len(),
+                    self.cap_per_shard
+                ));
+            }
+            let mut seen_fp = std::collections::HashSet::new();
+            let mut last_key: Option<(u64, u64)> = None;
+            for e in &ex.entries {
+                let owner = ((e.fingerprint >> 64) as u64 % n as u64) as usize;
+                if owner != i {
+                    return Err(format!(
+                        "entry {:032x} hashes to shard {owner}, filed under shard {i}",
+                        e.fingerprint
+                    ));
+                }
+                if !e.cost.is_finite() || e.cost < 0.0 {
+                    return Err(format!(
+                        "entry {:032x}: cost must be finite and non-negative",
+                        e.fingerprint
+                    ));
+                }
+                if !f64::from_bits(e.priority_bits).is_finite() {
+                    return Err(format!(
+                        "entry {:032x}: queue priority must be finite",
+                        e.fingerprint
+                    ));
+                }
+                if e.queue_tick > ex.tick {
+                    return Err(format!(
+                        "entry {:032x}: touch tick {} ahead of shard clock {}",
+                        e.fingerprint, e.queue_tick, ex.tick
+                    ));
+                }
+                if !seen_fp.insert(e.fingerprint) {
+                    return Err(format!("duplicate fingerprint {:032x}", e.fingerprint));
+                }
+                let key = (e.priority_bits, e.queue_tick);
+                if last_key.is_some_and(|prev| key <= prev) {
+                    return Err(format!(
+                        "entry {:032x}: queue keys must be strictly ascending",
+                        e.fingerprint
+                    ));
+                }
+                last_key = Some(key);
+            }
+        }
+        for (s, ex) in self.shards.iter().zip(exports) {
+            let mut guard = s.lock().expect("cache shard poisoned");
+            let shard = &mut *guard;
+            shard.map.clear();
+            shard.queue.clear();
+            shard.tick = ex.tick;
+            shard.inflation = ex.inflation;
+            for e in ex.entries {
+                let key = (e.priority_bits, e.queue_tick);
+                shard.map.insert(e.fingerprint, Entry { value: e.value, cost: e.cost, queue_key: key });
+                shard.queue.insert(key, e.fingerprint);
+            }
+        }
+        Ok(())
     }
 
     /// Snapshot of the counters.
@@ -383,6 +549,86 @@ mod tests {
         c.insert_costed(fp(3), 3, -4.0);
         assert_eq!(c.peek(fp(1)), None, "∞-cost entry must still be evictable");
         assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn export_restore_round_trips_eviction_state_bit_exactly() {
+        let a: ShardedCache<u64> = ShardedCache::new(2, 8);
+        for i in 0..6u128 {
+            a.insert_costed(fp(i), i as u64, 0.5 * i as f64);
+        }
+        a.get(fp(2)); // refresh a priority so queue keys are non-trivial
+        let b: ShardedCache<u64> = ShardedCache::new(2, 8);
+        b.restore_shards(a.export_shards()).expect("restore");
+        // The restored cache holds the same entries at the same queue
+        // positions: future evictions pick identical victims.
+        let (ea, eb) = (a.export_shards(), b.export_shards());
+        assert_eq!(ea.len(), eb.len());
+        for (x, y) in ea.iter().zip(&eb) {
+            assert_eq!(x.tick, y.tick);
+            assert_eq!(x.inflation.to_bits(), y.inflation.to_bits());
+            assert_eq!(x.entries.len(), y.entries.len());
+            for (p, q) in x.entries.iter().zip(&y.entries) {
+                assert_eq!(p.fingerprint, q.fingerprint);
+                assert_eq!(p.value, q.value);
+                assert_eq!(p.cost.to_bits(), q.cost.to_bits());
+                assert_eq!((p.priority_bits, p.queue_tick), (q.priority_bits, q.queue_tick));
+            }
+        }
+        a.insert_costed(fp(100), 100, 1.0);
+        b.insert_costed(fp(100), 100, 1.0);
+        let (ea, eb) = (a.export_shards(), b.export_shards());
+        for (x, y) in ea.iter().zip(&eb) {
+            let fa: Vec<u128> = x.entries.iter().map(|e| e.fingerprint).collect();
+            let fb: Vec<u128> = y.entries.iter().map(|e| e.fingerprint).collect();
+            assert_eq!(fa, fb, "post-restore evictions must agree");
+        }
+        // Counters did not round-trip: restore is state, not history.
+        assert_eq!(b.stats().inserts, 1);
+    }
+
+    #[test]
+    fn restore_rejects_invalid_exports_without_applying() {
+        let c: ShardedCache<u64> = ShardedCache::new(2, 2);
+        c.insert(fp(1), 1);
+        // Shard-count mismatch.
+        assert!(c.restore_shards(Vec::new()).is_err());
+        // An entry filed under the wrong shard.
+        let misfiled = vec![
+            ShardExport {
+                tick: 1,
+                inflation: 0.0,
+                entries: vec![ExportedEntry {
+                    fingerprint: fp(1).0, // hashes to shard 1
+                    value: 9,
+                    cost: 0.0,
+                    priority_bits: 0,
+                    queue_tick: 1,
+                }],
+            },
+            ShardExport { tick: 0, inflation: 0.0, entries: Vec::new() },
+        ];
+        assert!(c.restore_shards(misfiled).unwrap_err().contains("hashes to shard"));
+        // Over-capacity shard.
+        let over = vec![
+            ShardExport { tick: 0, inflation: 0.0, entries: Vec::new() },
+            ShardExport {
+                tick: 3,
+                inflation: 0.0,
+                entries: (1..=3u128)
+                    .map(|i| ExportedEntry {
+                        fingerprint: fp(i * 2 + 1).0,
+                        value: 0,
+                        cost: 0.0,
+                        priority_bits: 0,
+                        queue_tick: i as u64,
+                    })
+                    .collect(),
+            },
+        ];
+        assert!(c.restore_shards(over).unwrap_err().contains("capacity"));
+        // The failed restores left the cache untouched.
+        assert_eq!(c.peek(fp(1)), Some(1));
     }
 
     #[test]

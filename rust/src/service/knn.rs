@@ -15,12 +15,25 @@
 //! tuned, not per trial), so a scan is both exact and fast enough; the
 //! scan order is insertion order and ties break toward the **earliest
 //! inserted** record, making lookups deterministic for any history.
+//!
+//! Every record also carries a **global insertion stamp**
+//! ([`NeighborRecord::seq`]): monotone across the owning index *and*
+//! across the router's shards, it is the cross-shard tie-break key that
+//! makes an N-shard [`super::router::ShardedRouter`] admit exactly the
+//! neighbor a single index would have, and it round-trips through the
+//! `sparktune.snapshot.v1` kNN snapshot ([`super::persist`]) so warm
+//! restarts keep the same deterministic history.
 
 use super::profile::JobProfile;
 
 /// Evidence left behind by one completed tuning session.
 #[derive(Clone, Debug)]
 pub struct NeighborRecord {
+    /// Global insertion stamp: strictly increasing in recording order
+    /// across the whole service (all router shards share one stream).
+    /// Cross-shard nearest-neighbor ties resolve to the smallest stamp,
+    /// which is exactly the single-index "earliest inserted" rule.
+    pub seq: u64,
     /// Session display name (e.g. `"tenant3/app1"`), for reporting.
     pub name: String,
     /// The workload's feature profile at admission.
@@ -76,6 +89,13 @@ impl KnnIndex {
         &self.entries
     }
 
+    /// The next free global insertion stamp: one past the largest stamp
+    /// recorded here (0 when empty). Robust to non-contiguous stamps —
+    /// a router shard holds only its slice of the global stream.
+    pub fn next_seq(&self) -> u64 {
+        self.entries.iter().map(|r| r.seq).max().map_or(0, |m| m + 1)
+    }
+
     /// The nearest record within `max_dist` (inclusive), or `None` when
     /// the index is empty or every record is too far — the caller falls
     /// back to a cold session. Deterministic: equidistant records
@@ -129,6 +149,7 @@ mod tests {
 
     fn rec(name: &str, v: f64) -> NeighborRecord {
         NeighborRecord {
+            seq: 0,
             name: name.into(),
             profile: flat(v),
             kept_steps: vec!["Kryo serializer".into()],
@@ -184,6 +205,15 @@ mod tests {
         let ranked = idx.k_nearest(&flat(0.5), 3);
         let names: Vec<&str> = ranked.iter().map(|n| n.record.name.as_str()).collect();
         assert_eq!(names, ["first", "twin", "other-side"]);
+    }
+
+    #[test]
+    fn next_seq_is_one_past_the_largest_stamp() {
+        let mut idx = KnnIndex::new();
+        assert_eq!(idx.next_seq(), 0);
+        idx.insert(NeighborRecord { seq: 4, ..rec("a", 0.1) });
+        idx.insert(NeighborRecord { seq: 9, ..rec("b", 0.2) }); // non-contiguous slice
+        assert_eq!(idx.next_seq(), 10);
     }
 
     #[test]

@@ -22,9 +22,15 @@
 //! * [`server`] — the session manager: queues tuning requests, dedupes
 //!   identical in-flight trials across sessions (single-flight), fans
 //!   sessions out over an OS-thread pool reusing
-//!   [`TrialExecutor`](crate::tuner::TrialExecutor), and (opt-in)
+//!   [`TrialExecutor`](crate::tuner::TrialExecutor), (opt-in)
 //!   warm-starts admitted sessions from their nearest recorded
-//!   neighbor's kept steps.
+//!   neighbor's kept steps, and snapshots/restores its evidence state;
+//! * [`persist`] — the versioned `sparktune.snapshot.v1` on-disk
+//!   formats (cache, kNN, fork ledger, router manifest) with
+//!   atomic-write and quarantine helpers; `docs/FORMATS.md` is the
+//!   normative spec;
+//! * [`router`] — profile-hash partitioning over N service shards with
+//!   deterministic cross-shard warm-start: the horizontal-scaling leg.
 //!
 //! Invariant pinned by the tests: serving a session through the cache
 //! is **bit-identical** to a direct [`tune`](crate::tuner::tune) call —
@@ -33,18 +39,27 @@
 //! sessions are the deliberate exception: they run *strictly fewer*
 //! trials, and both admission and evidence recording happen at
 //! deterministic batch boundaries, so their outcomes too are invariant
-//! across worker counts.
+//! across worker counts. Two further invariants extend the same
+//! contract across process and machine boundaries: a service restored
+//! from a snapshot behaves bit-identically to the one that wrote it
+//! (**restart equivalence**), and an N-shard router serves any batch
+//! bit-identically to a single service (**shard equivalence**).
 
 pub mod cache;
 pub mod fingerprint;
 pub mod knn;
+pub mod persist;
 pub mod profile;
+pub mod router;
 pub mod server;
 
-pub use cache::{CacheStats, ShardedCache};
+pub use cache::{CacheStats, ExportedEntry, ShardExport, ShardedCache};
 pub use fingerprint::{fingerprint_conf, fingerprint_fork, fingerprint_trial, Fingerprint, Fp128};
 pub use knn::{KnnIndex, Neighbor, NeighborRecord};
+pub use persist::{ForkLedger, SnapshotError};
 pub use profile::JobProfile;
+pub use router::ShardedRouter;
 pub use server::{
-    outcomes_identical, ServiceOpts, ServiceStats, SessionOutcome, SessionRequest, TuningService,
+    outcomes_identical, ServiceOpts, ServiceStats, SessionOutcome, SessionRequest, StagedRestore,
+    TuningService,
 };

@@ -1,0 +1,788 @@
+//! Versioned on-disk snapshot formats for the service's evidence state
+//! (`sparktune.snapshot.v1`), plus atomic-write and quarantine helpers.
+//!
+//! Everything the service persists goes through this module: the
+//! GreedyDual-costed memo cache (fingerprints, values, costs, queue
+//! positions, and each shard's inflation water level and clock), the
+//! kNN evidence index (profiles, kept-step labels, global insertion
+//! stamps), the fork *ledger* (the byte-budgeted fork store's aging
+//! clocks plus the crash/quarantine table), and the router manifest.
+//! The formats are hand-rolled line-oriented text — the offline crate
+//! set has no serde — following the exact-serialization idiom of
+//! [`super::profile`]: an explicit version tag opening every header,
+//! `;`-separated components in a fixed order, f64s as `%016x` IEEE-754
+//! bit patterns (bit-exact round-trips, no decimal drift), strings
+//! hex-encoded byte-wise (no escaping grammar to get wrong), and a
+//! trailing [`Fp128`] checksum line over every preceding byte.
+//!
+//! Deserialization **rejects, never guesses**: unknown versions or
+//! kinds, reordered / missing / trailing components, truncated
+//! payloads, checksum mismatches, geometry mismatches (shard count,
+//! capacity, fork budget), out-of-order shards, entries hashed to the
+//! wrong shard, duplicate fingerprints or queue keys, non-monotone
+//! evidence stamps, and trailing garbage are all hard errors. A
+//! snapshot either restores exactly or not at all —
+//! [`super::server::TuningService::restore_from`] stages every file
+//! before applying any of it, and a rejected state directory is
+//! renamed aside by [`quarantine_dir`], never partially applied.
+//!
+//! `docs/FORMATS.md` is the normative spec for every persisted byte;
+//! the golden tests in `tests/persistence.rs` pin its worked example.
+
+use super::cache::{ExportedEntry, ShardExport, ShardedCache};
+use super::fingerprint::{Fingerprint, Fp128};
+use super::knn::{KnnIndex, NeighborRecord};
+use super::profile::JobProfile;
+use std::collections::HashSet;
+use std::fmt::{self, Write as _};
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Version tag opening every snapshot header line. Bump it whenever any
+/// persisted byte changes meaning; old tags are rejected, never
+/// migrated silently.
+pub const VERSION: &str = "sparktune.snapshot.v1";
+
+/// Why a snapshot could not be written or restored: an I/O failure, or
+/// a format violation naming the offending file and the rule it broke.
+#[derive(Debug)]
+pub enum SnapshotError {
+    /// The filesystem failed underneath the snapshot.
+    Io(io::Error),
+    /// The bytes were readable but violate the format spec
+    /// (`docs/FORMATS.md`); nothing was applied.
+    Format {
+        /// File the violation was found in (e.g. `"cache.snap"`).
+        file: String,
+        /// The rejection rule that fired.
+        reason: String,
+    },
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot i/o error: {e}"),
+            SnapshotError::Format { file, reason } => {
+                write!(f, "snapshot rejected ({file}): {reason}")
+            }
+        }
+    }
+}
+
+impl From<io::Error> for SnapshotError {
+    fn from(e: io::Error) -> SnapshotError {
+        SnapshotError::Io(e)
+    }
+}
+
+impl SnapshotError {
+    /// A [`SnapshotError::Format`] for `file`.
+    pub fn format(file: &str, reason: String) -> SnapshotError {
+        SnapshotError::Format { file: file.to_string(), reason }
+    }
+}
+
+// ---- primitive encodings -------------------------------------------------
+
+fn f64_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn hex_bytes(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() * 2);
+    for b in s.bytes() {
+        let _ = write!(out, "{b:02x}");
+    }
+    out
+}
+
+fn is_lower_hex(s: &str) -> bool {
+    s.bytes().all(|b| b.is_ascii_digit() || (b'a'..=b'f').contains(&b))
+}
+
+fn parse_hex_u64(s: &str) -> Result<u64, String> {
+    if s.len() != 16 || !is_lower_hex(s) {
+        return Err(format!("malformed u64 hex {s:?} (want exactly 16 lowercase hex digits)"));
+    }
+    u64::from_str_radix(s, 16).map_err(|e| format!("malformed u64 hex {s:?}: {e}"))
+}
+
+fn parse_hex_u128(s: &str) -> Result<u128, String> {
+    if s.len() != 32 || !is_lower_hex(s) {
+        return Err(format!("malformed u128 hex {s:?} (want exactly 32 lowercase hex digits)"));
+    }
+    u128::from_str_radix(s, 16).map_err(|e| format!("malformed u128 hex {s:?}: {e}"))
+}
+
+fn parse_f64_bits(s: &str) -> Result<f64, String> {
+    Ok(f64::from_bits(parse_hex_u64(s)?))
+}
+
+fn parse_dec_u64(s: &str) -> Result<u64, String> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return Err(format!("malformed decimal {s:?}"));
+    }
+    s.parse::<u64>().map_err(|e| format!("malformed decimal {s:?}: {e}"))
+}
+
+fn parse_dec_usize(s: &str) -> Result<usize, String> {
+    usize::try_from(parse_dec_u64(s)?).map_err(|e| format!("decimal {s:?} out of range: {e}"))
+}
+
+fn unhex_string(s: &str) -> Result<String, String> {
+    if s.len() % 2 != 0 || !is_lower_hex(s) {
+        return Err(format!("malformed hex string {s:?}"));
+    }
+    let bytes: Vec<u8> = (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).expect("checked hex"))
+        .collect();
+    String::from_utf8(bytes).map_err(|e| format!("hex string is not UTF-8: {e}"))
+}
+
+/// Pull the next `;`-component and require it to be `key=<value>` —
+/// fields are positional *and* named, so a reordered snapshot is
+/// rejected rather than reinterpreted.
+fn field<'a>(comp: Option<&'a str>, key: &str) -> Result<&'a str, String> {
+    let c = comp.ok_or_else(|| format!("missing component {key:?}"))?;
+    c.strip_prefix(key)
+        .and_then(|rest| rest.strip_prefix('='))
+        .ok_or_else(|| format!("expected component {key:?}, found {c:?}"))
+}
+
+fn no_trailing(comp: Option<&str>, line: &str) -> Result<(), String> {
+    match comp {
+        None => Ok(()),
+        Some(extra) => Err(format!("trailing component {extra:?} in line {line:?}")),
+    }
+}
+
+// ---- checksum framing ----------------------------------------------------
+
+fn checksum(payload: &str) -> Fingerprint {
+    let mut h = Fp128::new(VERSION);
+    h.write_bytes(payload.as_bytes());
+    h.finish()
+}
+
+/// Append the checksum footer: `checksum=<fp128 of every preceding
+/// byte>`. The footer detects truncation and corruption anywhere in the
+/// payload before any line is interpreted.
+pub fn seal(mut payload: String) -> String {
+    let fp = checksum(&payload);
+    let _ = writeln!(payload, "checksum={:032x}", fp.0);
+    payload
+}
+
+/// Verify and strip the checksum footer, returning the payload.
+/// Rejects a missing/garbled footer, trailing bytes after it, and any
+/// mismatch between the stored and recomputed checksum.
+pub fn unseal(text: &str) -> Result<&str, String> {
+    let stripped = text
+        .strip_suffix('\n')
+        .ok_or_else(|| "missing trailing newline after the checksum line".to_string())?;
+    let line_start = stripped.rfind('\n').map_or(0, |i| i + 1);
+    let stored = stripped[line_start..]
+        .strip_prefix("checksum=")
+        .ok_or_else(|| "missing checksum line".to_string())?;
+    let want = parse_hex_u128(stored)?;
+    let payload = &text[..line_start];
+    let got = checksum(payload).0;
+    if got != want {
+        return Err(format!(
+            "checksum mismatch: stored {stored}, computed {got:032x} (truncated or corrupt \
+             snapshot)"
+        ));
+    }
+    Ok(payload)
+}
+
+fn check_header<'a>(payload: &'a str, kind: &str) -> Result<(&'a str, std::str::Lines<'a>), String> {
+    let mut lines = payload.lines();
+    let header = lines.next().ok_or_else(|| "empty snapshot".to_string())?;
+    let mut parts = header.split(';');
+    let version = parts.next().unwrap_or("");
+    if version != VERSION {
+        return Err(format!(
+            "unsupported snapshot version {version:?} (this build reads {VERSION:?})"
+        ));
+    }
+    let found = field(parts.next(), "kind")?;
+    if found != kind {
+        return Err(format!("snapshot kind {found:?}, expected {kind:?}"));
+    }
+    // Hand the rest of the header back as the unsplit suffix.
+    let consumed = version.len() + 1 + "kind=".len() + kind.len();
+    let rest = if header.len() > consumed { &header[consumed + 1..] } else { "" };
+    Ok((rest, lines))
+}
+
+// ---- cache snapshot ------------------------------------------------------
+
+/// Serialize the memo cache, bit-exactly: per shard, the touch clock,
+/// the GreedyDual inflation water level, and every resident entry with
+/// its value, cost, and queue key — in eviction-queue order (victim
+/// first), the canonical order that makes snapshots byte-stable.
+/// Hit/miss counters are process-lifetime observability and are *not*
+/// persisted.
+pub fn encode_cache(cache: &ShardedCache<f64>) -> String {
+    let shards = cache.export_shards();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{VERSION};kind=cache;shards={};cap={}",
+        shards.len(),
+        cache.capacity_per_shard()
+    );
+    for (i, sh) in shards.iter().enumerate() {
+        let _ = writeln!(out, "shard={i};tick={};inflation={}", sh.tick, f64_hex(sh.inflation));
+        for e in &sh.entries {
+            let _ = writeln!(
+                out,
+                "entry={:032x};value={};cost={};prio={:016x};qtick={}",
+                e.fingerprint,
+                f64_hex(e.value),
+                f64_hex(e.cost),
+                e.priority_bits,
+                e.queue_tick,
+            );
+        }
+    }
+    seal(out)
+}
+
+/// Parse and validate a cache snapshot against this service's geometry
+/// (`shards` stripes × `cap_per_shard`). Every rejection rule from
+/// `docs/FORMATS.md` applies: geometry mismatch, shards out of order or
+/// missing, an entry fingerprint that hashes to a different shard,
+/// duplicate fingerprints or queue keys, a non-finite cost or priority,
+/// an entry tick ahead of its shard clock, or more entries than the
+/// capacity admits.
+pub fn decode_cache(
+    text: &str,
+    shards: usize,
+    cap_per_shard: usize,
+) -> Result<Vec<ShardExport<f64>>, String> {
+    let payload = unseal(text)?;
+    let (rest, lines) = check_header(payload, "cache")?;
+    let mut parts = rest.split(';');
+    let n = parse_dec_usize(field(parts.next(), "shards")?)?;
+    let cap = parse_dec_usize(field(parts.next(), "cap")?)?;
+    no_trailing(parts.next(), rest)?;
+    if n != shards || cap != cap_per_shard {
+        return Err(format!(
+            "cache geometry mismatch: snapshot is {n} shards × cap {cap}, this service is \
+             {shards} × {cap_per_shard}"
+        ));
+    }
+    let mut out: Vec<ShardExport<f64>> = Vec::with_capacity(n);
+    let mut seen_fp: HashSet<u128> = HashSet::new();
+    let mut last_key: Option<(u64, u64)> = None;
+    for line in lines {
+        if let Some(rest) = line.strip_prefix("shard=") {
+            let mut parts = rest.split(';');
+            let idx = parse_dec_usize(parts.next().unwrap_or(""))?;
+            if idx >= n {
+                return Err(format!("shard {idx} beyond the declared {n} shards"));
+            }
+            if idx != out.len() {
+                return Err(format!("shard {idx} out of order (expected shard {})", out.len()));
+            }
+            let tick = parse_dec_u64(field(parts.next(), "tick")?)?;
+            let inflation = parse_f64_bits(field(parts.next(), "inflation")?)?;
+            no_trailing(parts.next(), line)?;
+            if !inflation.is_finite() || inflation < 0.0 {
+                return Err(format!("shard {idx}: inflation must be finite and non-negative"));
+            }
+            out.push(ShardExport { tick, inflation, entries: Vec::new() });
+            seen_fp.clear();
+            last_key = None;
+        } else if let Some(rest) = line.strip_prefix("entry=") {
+            let sh = out.last_mut().ok_or_else(|| "entry line before any shard".to_string())?;
+            let mut parts = rest.split(';');
+            let fp = parse_hex_u128(parts.next().unwrap_or(""))?;
+            let value = parse_f64_bits(field(parts.next(), "value")?)?;
+            let cost = parse_f64_bits(field(parts.next(), "cost")?)?;
+            let prio = parse_hex_u64(field(parts.next(), "prio")?)?;
+            let qtick = parse_dec_u64(field(parts.next(), "qtick")?)?;
+            no_trailing(parts.next(), line)?;
+            let owner = ((fp >> 64) as u64 % n as u64) as usize;
+            if owner != out.len() - 1 {
+                return Err(format!(
+                    "entry {fp:032x} hashes to shard {owner} but was recorded in shard {}",
+                    out.len() - 1
+                ));
+            }
+            if !cost.is_finite() || cost < 0.0 {
+                return Err(format!("entry {fp:032x}: cost must be finite and non-negative"));
+            }
+            if !f64::from_bits(prio).is_finite() {
+                return Err(format!("entry {fp:032x}: queue priority must be finite"));
+            }
+            if qtick > sh.tick {
+                return Err(format!("entry {fp:032x}: touch tick {qtick} ahead of shard clock"));
+            }
+            if !seen_fp.insert(fp) {
+                return Err(format!("duplicate entry fingerprint {fp:032x}"));
+            }
+            if last_key.is_some_and(|prev| (prio, qtick) <= prev) {
+                return Err(format!(
+                    "entry {fp:032x}: queue keys must be strictly ascending within a shard"
+                ));
+            }
+            last_key = Some((prio, qtick));
+            if sh.entries.len() >= cap {
+                return Err(format!("shard holds more than its capacity of {cap} entries"));
+            }
+            sh.entries.push(ExportedEntry {
+                fingerprint: fp,
+                value,
+                cost,
+                priority_bits: prio,
+                queue_tick: qtick,
+            });
+        } else {
+            return Err(format!("unrecognized snapshot line {line:?}"));
+        }
+    }
+    if out.len() != n {
+        return Err(format!("snapshot declares {n} shards, found {}", out.len()));
+    }
+    Ok(out)
+}
+
+// ---- kNN snapshot --------------------------------------------------------
+
+/// Serialize the evidence index: every [`NeighborRecord`] in insertion
+/// order, each as a `record=` line (global insertion stamp, hex name,
+/// baseline/best bit patterns, kept-step count), its embedded
+/// [`JobProfile::serialize`] line, and one hex `step=` line per kept
+/// step.
+pub fn encode_knn(knn: &KnnIndex) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{VERSION};kind=knn;records={}", knn.len());
+    for r in knn.records() {
+        let _ = writeln!(
+            out,
+            "record={};name={};baseline={};best={};steps={}",
+            r.seq,
+            hex_bytes(&r.name),
+            f64_hex(r.baseline),
+            f64_hex(r.best),
+            r.kept_steps.len(),
+        );
+        let _ = writeln!(out, "profile={}", r.profile.serialize());
+        for s in &r.kept_steps {
+            let _ = writeln!(out, "step={}", hex_bytes(s));
+        }
+    }
+    seal(out)
+}
+
+/// Parse and validate a kNN snapshot, returning the records in
+/// insertion order. Rejects a record count mismatch, a kept-step count
+/// mismatch, non-monotone insertion stamps, and any profile the
+/// [`JobProfile::deserialize`] exact parser rejects.
+pub fn decode_knn(text: &str) -> Result<Vec<NeighborRecord>, String> {
+    let payload = unseal(text)?;
+    let (rest, mut lines) = check_header(payload, "knn")?;
+    let mut parts = rest.split(';');
+    let count = parse_dec_usize(field(parts.next(), "records")?)?;
+    no_trailing(parts.next(), rest)?;
+    let mut out: Vec<NeighborRecord> = Vec::with_capacity(count);
+    while let Some(line) = lines.next() {
+        let rest = line
+            .strip_prefix("record=")
+            .ok_or_else(|| format!("expected a record line, found {line:?}"))?;
+        let mut parts = rest.split(';');
+        let seq = parse_dec_u64(parts.next().unwrap_or(""))?;
+        let name = unhex_string(field(parts.next(), "name")?)?;
+        let baseline = parse_f64_bits(field(parts.next(), "baseline")?)?;
+        let best = parse_f64_bits(field(parts.next(), "best")?)?;
+        let steps = parse_dec_usize(field(parts.next(), "steps")?)?;
+        no_trailing(parts.next(), line)?;
+        if let Some(prev) = out.last() {
+            if seq <= prev.seq {
+                return Err(format!(
+                    "record stamp {seq} not strictly increasing (previous {})",
+                    prev.seq
+                ));
+            }
+        }
+        let pline =
+            lines.next().ok_or_else(|| "truncated record: missing profile line".to_string())?;
+        let ptext = pline
+            .strip_prefix("profile=")
+            .ok_or_else(|| format!("expected a profile line, found {pline:?}"))?;
+        let profile = JobProfile::deserialize(ptext)?;
+        let mut kept_steps = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let sline =
+                lines.next().ok_or_else(|| "truncated record: missing step line".to_string())?;
+            let s = sline
+                .strip_prefix("step=")
+                .ok_or_else(|| format!("expected a step line, found {sline:?}"))?;
+            kept_steps.push(unhex_string(s)?);
+        }
+        out.push(NeighborRecord { seq, name, profile, kept_steps, baseline, best });
+    }
+    if out.len() != count {
+        return Err(format!("snapshot declares {count} records, found {}", out.len()));
+    }
+    Ok(out)
+}
+
+// ---- fork ledger snapshot ------------------------------------------------
+
+/// The durable slice of the fork subsystem. The recorded event
+/// timelines themselves ([`crate::engine::ForkPoint`]) are deliberately
+/// *not* persisted — dropping a recording is lossless by the fork
+/// store's own contract (the family re-records on its next cache-missed
+/// trial), and serializing raw simulator checkpoints would freeze the
+/// engine's internal layout into a disk format. What must survive a
+/// restart bit-exactly is (a) the **crash/quarantine table**, which is
+/// outcome-relevant — a quarantined family prices INFINITY without
+/// simulating — and (b) the store's GreedyDual **aging clocks**
+/// (inflation, tick, evictions), so re-admitted recordings compete at
+/// the water level they would have faced without the restart.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ForkLedger {
+    /// Byte budget the store was configured with; restoring into a
+    /// service with a different budget is a geometry mismatch.
+    pub budget: usize,
+    /// Monotone touch clock of the fork store.
+    pub tick: u64,
+    /// GreedyDual inflation water level.
+    pub inflation: f64,
+    /// Evictions performed so far (ledger continuity for reporting).
+    pub evictions: u64,
+    /// `(fork-family fingerprint, simulated-crash count)`, strictly
+    /// ascending by fingerprint — the canonical order.
+    pub crashes: Vec<(u128, u64)>,
+}
+
+/// Serialize the fork ledger (header carries the scalars; one `crash=`
+/// line per quarantine-table entry, ascending by fingerprint).
+pub fn encode_fork(ledger: &ForkLedger) -> String {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{VERSION};kind=fork;budget={};tick={};inflation={};evictions={};crashes={}",
+        ledger.budget,
+        ledger.tick,
+        f64_hex(ledger.inflation),
+        ledger.evictions,
+        ledger.crashes.len(),
+    );
+    for &(fp, count) in &ledger.crashes {
+        let _ = writeln!(out, "crash={fp:032x};count={count}");
+    }
+    seal(out)
+}
+
+/// Parse and validate a fork-ledger snapshot. Rejects unsorted or
+/// duplicate crash fingerprints, zero crash counts, a non-finite
+/// inflation, and a crash-line count that disagrees with the header.
+pub fn decode_fork(text: &str) -> Result<ForkLedger, String> {
+    let payload = unseal(text)?;
+    let (rest, lines) = check_header(payload, "fork")?;
+    let mut parts = rest.split(';');
+    let budget = parse_dec_usize(field(parts.next(), "budget")?)?;
+    let tick = parse_dec_u64(field(parts.next(), "tick")?)?;
+    let inflation = parse_f64_bits(field(parts.next(), "inflation")?)?;
+    let evictions = parse_dec_u64(field(parts.next(), "evictions")?)?;
+    let count = parse_dec_usize(field(parts.next(), "crashes")?)?;
+    no_trailing(parts.next(), rest)?;
+    if !inflation.is_finite() || inflation < 0.0 {
+        return Err("fork inflation must be finite and non-negative".to_string());
+    }
+    let mut crashes: Vec<(u128, u64)> = Vec::with_capacity(count);
+    for line in lines {
+        let rest = line
+            .strip_prefix("crash=")
+            .ok_or_else(|| format!("expected a crash line, found {line:?}"))?;
+        let mut parts = rest.split(';');
+        let fp = parse_hex_u128(parts.next().unwrap_or(""))?;
+        let n = parse_dec_u64(field(parts.next(), "count")?)?;
+        no_trailing(parts.next(), line)?;
+        if n == 0 {
+            return Err(format!("crash {fp:032x}: zero crash count"));
+        }
+        if let Some(&(prev, _)) = crashes.last() {
+            if fp <= prev {
+                return Err(format!("crash {fp:032x} not strictly ascending after {prev:032x}"));
+            }
+        }
+        crashes.push((fp, n));
+    }
+    if crashes.len() != count {
+        return Err(format!("snapshot declares {count} crash entries, found {}", crashes.len()));
+    }
+    Ok(ForkLedger { budget, tick, inflation, evictions, crashes })
+}
+
+// ---- router manifest -----------------------------------------------------
+
+/// Serialize the router manifest: how many service shards the state
+/// directory partitions into.
+pub fn encode_router_manifest(shards: usize) -> String {
+    seal(format!("{VERSION};kind=router;shards={shards}\n"))
+}
+
+/// Parse and validate a router manifest, returning the shard count.
+pub fn decode_router_manifest(text: &str) -> Result<usize, String> {
+    let payload = unseal(text)?;
+    let (rest, mut lines) = check_header(payload, "router")?;
+    let mut parts = rest.split(';');
+    let shards = parse_dec_usize(field(parts.next(), "shards")?)?;
+    no_trailing(parts.next(), rest)?;
+    if let Some(extra) = lines.next() {
+        return Err(format!("trailing line {extra:?} in router manifest"));
+    }
+    if shards == 0 {
+        return Err("router manifest declares zero shards".to_string());
+    }
+    Ok(shards)
+}
+
+// ---- filesystem helpers --------------------------------------------------
+
+/// Write `contents` to `path` atomically: write `<stem>.tmp` fully,
+/// then rename it over the target — a reader (or a crash mid-write)
+/// sees the previous snapshot or the new one, never a torn half-write.
+pub fn write_atomic(path: &Path, contents: &str) -> io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, contents)?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Quarantine a rejected state directory: rename it to
+/// `<dir>.corrupt-<k>` (first free `k`) so the service can start cold
+/// while an operator inspects exactly the bytes that were rejected.
+/// Returns the quarantine path.
+pub fn quarantine_dir(dir: &Path) -> io::Result<PathBuf> {
+    let name = dir.file_name().and_then(|n| n.to_str()).unwrap_or("state");
+    for k in 0u32.. {
+        let candidate = dir.with_file_name(format!("{name}.corrupt-{k}"));
+        if !candidate.exists() {
+            std::fs::rename(dir, &candidate)?;
+            return Ok(candidate);
+        }
+    }
+    unreachable!("some quarantine suffix is free")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::profile::DIM;
+
+    fn flat(v: f64) -> JobProfile {
+        JobProfile { features: [v; DIM] }
+    }
+
+    fn rec(seq: u64, name: &str, steps: &[&str]) -> NeighborRecord {
+        NeighborRecord {
+            seq,
+            name: name.into(),
+            profile: flat(0.25 * seq as f64),
+            kept_steps: steps.iter().map(|s| s.to_string()).collect(),
+            baseline: 100.5,
+            best: 80.25,
+        }
+    }
+
+    #[test]
+    fn seal_unseal_round_trip_and_tamper_rejection() {
+        let sealed = seal("hello\nworld\n".to_string());
+        assert_eq!(unseal(&sealed).unwrap(), "hello\nworld\n");
+        // Any flipped byte in the payload is caught.
+        let tampered = sealed.replacen("world", "w0rld", 1);
+        assert!(unseal(&tampered).unwrap_err().contains("checksum mismatch"));
+        // Truncation is caught (the checksum line itself goes first).
+        assert!(unseal(&sealed[..sealed.len() - 2]).is_err());
+        // Trailing garbage after the checksum line is caught.
+        let appended = format!("{sealed}junk\n");
+        assert!(unseal(&appended).is_err());
+        // No checksum line at all.
+        assert!(unseal("hello\n").unwrap_err().contains("checksum"));
+    }
+
+    #[test]
+    fn cache_snapshot_round_trips_bit_exactly() {
+        let cache: ShardedCache<f64> = ShardedCache::new(2, 8);
+        // Spread entries across both shards with distinct costs; include
+        // an INFINITY value (a crash marker) — values round-trip any bit
+        // pattern, costs are sanitized-finite by construction.
+        for i in 0..6u128 {
+            let fp = Fingerprint((i << 64) | (0xabc + i));
+            cache.insert_costed(fp, if i == 3 { f64::INFINITY } else { 0.125 * i as f64 }, i as f64);
+        }
+        let text = encode_cache(&cache);
+        let decoded = decode_cache(&text, 2, 4).expect("round trip");
+        let exported = cache.export_shards();
+        assert_eq!(decoded.len(), exported.len());
+        for (d, e) in decoded.iter().zip(&exported) {
+            assert_eq!(d.tick, e.tick);
+            assert_eq!(d.inflation.to_bits(), e.inflation.to_bits());
+            assert_eq!(d.entries.len(), e.entries.len());
+            for (x, y) in d.entries.iter().zip(&e.entries) {
+                assert_eq!(x.fingerprint, y.fingerprint);
+                assert_eq!(x.value.to_bits(), y.value.to_bits());
+                assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+                assert_eq!(x.priority_bits, y.priority_bits);
+                assert_eq!(x.queue_tick, y.queue_tick);
+            }
+        }
+        // Encoding is deterministic (canonical queue order).
+        assert_eq!(text, encode_cache(&cache));
+    }
+
+    #[test]
+    fn cache_snapshot_rejects_geometry_and_structure_violations() {
+        let cache: ShardedCache<f64> = ShardedCache::new(2, 8);
+        cache.insert_costed(Fingerprint(1 << 64), 1.5, 2.0);
+        let text = encode_cache(&cache);
+        // Wrong geometry (shard count, capacity).
+        assert!(decode_cache(&text, 4, 4).unwrap_err().contains("geometry"));
+        assert!(decode_cache(&text, 2, 16).unwrap_err().contains("geometry"));
+        // Wrong version tag.
+        let skew = seal(
+            unseal(&text).unwrap().replacen("sparktune.snapshot.v1", "sparktune.snapshot.v2", 1),
+        );
+        assert!(decode_cache(&skew, 2, 4).unwrap_err().contains("unsupported snapshot version"));
+        // Wrong kind.
+        let wrong = seal("sparktune.snapshot.v1;kind=knn;records=0\n".to_string());
+        assert!(decode_cache(&wrong, 2, 4).unwrap_err().contains("kind"));
+        // An entry recorded in a shard its fingerprint does not hash to.
+        let misfiled = seal(
+            "sparktune.snapshot.v1;kind=cache;shards=2;cap=4\n\
+             shard=0;tick=1;inflation=0000000000000000\n\
+             entry=00000000000000010000000000000abc;value=3ff0000000000000;\
+             cost=0000000000000000;prio=0000000000000000;qtick=1\n\
+             shard=1;tick=0;inflation=0000000000000000\n"
+                .to_string(),
+        );
+        assert!(decode_cache(&misfiled, 2, 4).unwrap_err().contains("hashes to shard"));
+        // Reordered shards.
+        let reordered = seal(
+            "sparktune.snapshot.v1;kind=cache;shards=2;cap=4\n\
+             shard=1;tick=0;inflation=0000000000000000\n\
+             shard=0;tick=0;inflation=0000000000000000\n"
+                .to_string(),
+        );
+        assert!(decode_cache(&reordered, 2, 4).unwrap_err().contains("out of order"));
+        // Missing shards.
+        let missing =
+            seal("sparktune.snapshot.v1;kind=cache;shards=2;cap=4\n\
+                  shard=0;tick=0;inflation=0000000000000000\n"
+                .to_string());
+        assert!(decode_cache(&missing, 2, 4).unwrap_err().contains("found 1"));
+    }
+
+    #[test]
+    fn knn_snapshot_round_trips_names_steps_and_stamps() {
+        let mut knn = KnnIndex::new();
+        knn.insert(rec(0, "tenant0/app0", &["Kryo serializer", "tungsten-sort manager"]));
+        knn.insert(rec(3, "tenant1/app≠1", &[])); // non-ASCII name, no steps
+        let text = encode_knn(&knn);
+        let records = decode_knn(&text).expect("round trip");
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].seq, 0);
+        assert_eq!(records[0].name, "tenant0/app0");
+        assert_eq!(records[0].kept_steps, ["Kryo serializer", "tungsten-sort manager"]);
+        assert_eq!(records[0].baseline.to_bits(), 100.5f64.to_bits());
+        assert_eq!(records[1].seq, 3);
+        assert_eq!(records[1].name, "tenant1/app≠1");
+        assert!(records[1].kept_steps.is_empty());
+        for (r, o) in records.iter().zip(knn.records()) {
+            assert_eq!(r.profile, o.profile);
+        }
+        assert_eq!(text, encode_knn(&knn), "encoding is deterministic");
+    }
+
+    #[test]
+    fn knn_snapshot_rejects_corruption() {
+        let mut knn = KnnIndex::new();
+        knn.insert(rec(0, "a", &["x"]));
+        knn.insert(rec(1, "b", &[]));
+        let text = encode_knn(&knn);
+        // Non-monotone stamps.
+        let swapped = seal(unseal(&text).unwrap().replacen("record=1", "record=0", 1));
+        assert!(decode_knn(&swapped).unwrap_err().contains("strictly increasing"));
+        // Truncated: drop the final line of the payload.
+        let payload = unseal(&text).unwrap();
+        let cut = payload.rfind("record=").unwrap();
+        let truncated = seal(payload[..cut].to_string());
+        assert!(decode_knn(&truncated).unwrap_err().contains("declares 2 records"));
+        // A profile line the exact parser rejects.
+        let bad = seal(unseal(&text).unwrap().replacen("profile=sparktune", "profile=spark", 1));
+        assert!(decode_knn(&bad).is_err());
+    }
+
+    #[test]
+    fn fork_ledger_round_trips_and_rejects_disorder() {
+        let ledger = ForkLedger {
+            budget: 64 << 20,
+            tick: 42,
+            inflation: 7.0,
+            evictions: 3,
+            crashes: vec![(5, 1), (9, 4)],
+        };
+        let text = encode_fork(&ledger);
+        assert_eq!(decode_fork(&text).expect("round trip"), ledger);
+        // Unsorted crash fingerprints are rejected.
+        let unsorted = encode_fork(&ForkLedger {
+            crashes: vec![(9, 4), (5, 1)],
+            ..ledger.clone()
+        });
+        assert!(decode_fork(&unsorted).unwrap_err().contains("ascending"));
+        // Zero crash counts are rejected.
+        let zero = encode_fork(&ForkLedger { crashes: vec![(5, 0)], ..ledger.clone() });
+        assert!(decode_fork(&zero).unwrap_err().contains("zero crash count"));
+        // Header/crash-line count mismatch.
+        let payload = unseal(&text).unwrap().replacen("crashes=2", "crashes=3", 1);
+        assert!(decode_fork(&seal(payload)).unwrap_err().contains("declares 3"));
+    }
+
+    #[test]
+    fn router_manifest_round_trips() {
+        let text = encode_router_manifest(4);
+        assert_eq!(decode_router_manifest(&text).unwrap(), 4);
+        assert!(decode_router_manifest(&encode_router_manifest(0)).is_err());
+        let trailing = seal("sparktune.snapshot.v1;kind=router;shards=2\nextra\n".to_string());
+        assert!(decode_router_manifest(&trailing).unwrap_err().contains("trailing line"));
+    }
+
+    #[test]
+    fn atomic_write_then_rename_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("sparktune-persist-test-atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.snap");
+        write_atomic(&path, "first\n").unwrap();
+        write_atomic(&path, "second\n").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second\n");
+        assert!(!dir.join("cache.tmp").exists(), "tmp file must be renamed away");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn quarantine_renames_the_directory_aside() {
+        let base = std::env::temp_dir().join("sparktune-persist-test-quarantine");
+        let _ = std::fs::remove_dir_all(&base);
+        let dir = base.join("state");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("cache.snap"), "garbage").unwrap();
+        let moved = quarantine_dir(&dir).unwrap();
+        assert!(!dir.exists());
+        assert!(moved.to_string_lossy().contains("state.corrupt-0"));
+        assert_eq!(std::fs::read_to_string(moved.join("cache.snap")).unwrap(), "garbage");
+        // A second quarantine picks the next free suffix.
+        std::fs::create_dir_all(&dir).unwrap();
+        let moved2 = quarantine_dir(&dir).unwrap();
+        assert!(moved2.to_string_lossy().contains("state.corrupt-1"));
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -21,9 +21,11 @@
 //!   iterative-cached vs combine-heavy) moves a long one;
 //! * **stably serialized** — [`JobProfile::serialize`] emits a
 //!   version-tagged, exact (bit-pattern) textual form that
-//!   [`JobProfile::deserialize`] round-trips, so a future persistent
-//!   kNN index (ROADMAP: cache persistence) can spill profiles next to
-//!   the trial cache.
+//!   [`JobProfile::deserialize`] round-trips bit-for-bit. This is the
+//!   template idiom for every on-disk format in the crate
+//!   (`docs/FORMATS.md`), and the kNN snapshot ([`super::persist`])
+//!   embeds these lines verbatim to spill profiles next to the trial
+//!   cache.
 //!
 //! Distances between profiles ([`JobProfile::distance`], normalized
 //! L2) feed the nearest-neighbor index in [`super::knn`].

@@ -1,0 +1,413 @@
+//! Profile-hash routing over N [`TuningService`] shards.
+//!
+//! [`ShardedRouter`] is the horizontal-scaling leg of the service: it
+//! owns `N` independent [`TuningService`] instances and partitions
+//! sessions among them by a domain-separated hash of the workload's
+//! [`JobProfile`] (`sparktune.route.v1`). Hashing the *profile* — not
+//! the request name or arrival order — means every session of the same
+//! workload family lands on the same shard, so that shard's memo cache,
+//! fork store, and quarantine table accumulate exactly the history the
+//! family would have produced on a single service.
+//!
+//! **Cross-shard warm-start stays deterministic.** The shards
+//! themselves run with evidence transfer *off*; the router owns both
+//! sides of it, at the same deterministic points as a single service
+//! (admission and recording, in request order):
+//!
+//! * at admission it consults **every** shard's index
+//!   ([`TuningService::evidence_nearest`]) and takes the global minimum
+//!   by `(distance, insertion stamp)` — the stamp
+//!   ([`super::knn::NeighborRecord::seq`]) is a single global stream
+//!   the router assigns at recording time, so the winner is exactly
+//!   the record a single combined index would return under its
+//!   earliest-inserted tie-break;
+//! * after the batch it records each session's evidence into the shard
+//!   that owns its profile, stamping from the global stream in request
+//!   order.
+//!
+//! The pinned invariant (gated in CI through the `persistence` suite
+//! and the `serve` smoke): for any request batch, an N-shard router
+//! produces session outcomes and warm-start decisions **bit-identical**
+//! to a 1-shard router and to a single [`TuningService`]. Sharding
+//! changes *where* work and evidence live (and therefore per-shard
+//! counters like `trials_simulated` — cross-shard sessions cannot share
+//! a memo entry), never *what* any session concludes.
+//!
+//! Snapshots compose the same way: [`ShardedRouter::snapshot_to`]
+//! writes a `manifest.snap` plus one `shard-NNNN/` directory per shard,
+//! and [`ShardedRouter::restore_from`] stages **all** shards before
+//! applying any of them — a corrupt shard rejects the whole restore.
+
+use super::knn::NeighborRecord;
+use super::persist::{self, SnapshotError};
+use super::profile::JobProfile;
+use super::server::{
+    ServiceOpts, ServiceStats, SessionOutcome, SessionRequest, StagedRestore, TuningService,
+};
+use crate::cluster::ClusterSpec;
+use crate::engine::prepare;
+use crate::obs::SpanId;
+use crate::service::fingerprint::Fp128;
+use crate::tuner::WarmStart;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Routing-hash domain; bump if the feature-to-shard mapping changes
+/// (persisted shard directories are partitioned by it).
+const ROUTE_DOMAIN: &str = "sparktune.route.v1";
+
+/// An in-process router over `N` profile-partitioned
+/// [`TuningService`] shards. See the module docs for the determinism
+/// contract.
+pub struct ShardedRouter {
+    services: Vec<TuningService>,
+    warm_start: bool,
+    warm_threshold: f64,
+    warm_started: AtomicU64,
+    warm_missed: AtomicU64,
+}
+
+impl ShardedRouter {
+    /// A router of `shards` (min 1) services over one cluster. Each
+    /// shard gets the full `opts` sizing (its own cache capacity and
+    /// fork budget); evidence transfer is lifted out of the shards and
+    /// run by the router itself, so `opts.warm_start` configures the
+    /// *router's* cross-shard transfer.
+    pub fn new(cluster: ClusterSpec, shards: usize, opts: ServiceOpts) -> ShardedRouter {
+        let shard_opts = ServiceOpts { warm_start: false, ..opts };
+        ShardedRouter {
+            services: (0..shards.max(1))
+                .map(|_| TuningService::new(cluster.clone(), shard_opts))
+                .collect(),
+            warm_start: opts.warm_start,
+            warm_threshold: opts.warm_threshold,
+            warm_started: AtomicU64::new(0),
+            warm_missed: AtomicU64::new(0),
+        }
+    }
+
+    /// Number of service shards.
+    pub fn shard_count(&self) -> usize {
+        self.services.len()
+    }
+
+    /// The shards themselves, in partition order (diagnostics, tests).
+    pub fn shards(&self) -> &[TuningService] {
+        &self.services
+    }
+
+    /// The shard owning `profile`: a domain-separated hash of the
+    /// feature vector's bit patterns, top lane mod shard count.
+    /// Unplannable jobs (no profile) pin to shard 0 — they price as
+    /// crashes wherever they land, and a fixed home keeps them
+    /// deterministic.
+    pub fn shard_of(&self, profile: Option<&JobProfile>) -> usize {
+        match profile {
+            None => 0,
+            Some(p) => {
+                let mut h = Fp128::new(ROUTE_DOMAIN);
+                for &f in &p.features {
+                    h.write_f64(f);
+                }
+                ((h.finish().0 >> 64) as u64 % self.services.len() as u64) as usize
+            }
+        }
+    }
+
+    /// Serve a batch across the shards; outcomes come back in request
+    /// order, bit-identical to a single service serving the same batch
+    /// (see the module docs). Shards run concurrently — each serves its
+    /// sub-batch on its own worker pool.
+    pub fn serve(&self, requests: &[SessionRequest]) -> Vec<SessionOutcome> {
+        let n = self.services.len();
+        // ---- admission + routing (deterministic, request order) ----
+        let mut routed: Vec<SessionRequest> = Vec::with_capacity(requests.len());
+        let mut homes: Vec<usize> = Vec::with_capacity(requests.len());
+        let mut profiles: Vec<Option<JobProfile>> = Vec::with_capacity(requests.len());
+        let mut warm_froms: Vec<Option<String>> = vec![None; requests.len()];
+        for (i, req) in requests.iter().enumerate() {
+            let profile = prepare(&req.job)
+                .ok()
+                .map(|plan| JobProfile::of(&plan, self.services[0].cluster(), &req.sim));
+            let mut sub = req.clone();
+            if self.warm_start {
+                if let Some(p) = &profile {
+                    if sub.tune.warm_start.is_none() {
+                        let nearest = self
+                            .services
+                            .iter()
+                            .filter_map(|s| s.evidence_nearest(p, self.warm_threshold))
+                            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.seq.cmp(&b.1.seq)));
+                        match nearest {
+                            Some((_, rec)) => {
+                                sub.tune.warm_start =
+                                    Some(WarmStart { steps: rec.kept_steps.clone() });
+                                sub.tune.trace.instant(
+                                    SpanId::NONE,
+                                    "warm-start",
+                                    &format!("evidence from '{}'", rec.name),
+                                    0.0,
+                                );
+                                warm_froms[i] = Some(rec.name);
+                                self.warm_started.fetch_add(1, Ordering::Relaxed);
+                            }
+                            None => {
+                                self.warm_missed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                }
+            }
+            homes.push(self.shard_of(profile.as_ref()));
+            profiles.push(profile);
+            routed.push(sub);
+        }
+
+        // ---- fan out: each shard serves its sub-batch ----
+        let mut batches: Vec<(Vec<usize>, Vec<SessionRequest>)> =
+            (0..n).map(|_| (Vec::new(), Vec::new())).collect();
+        for (i, (home, sub)) in homes.iter().zip(routed).enumerate() {
+            batches[*home].0.push(i);
+            batches[*home].1.push(sub);
+        }
+        let mut slots: Vec<Option<SessionOutcome>> = (0..requests.len()).map(|_| None).collect();
+        let shard_outcomes: Vec<Vec<SessionOutcome>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .services
+                .iter()
+                .zip(&batches)
+                .map(|(svc, (_, batch))| scope.spawn(move || svc.serve(batch)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard serve panicked")).collect()
+        });
+        for ((indices, _), outcomes) in batches.iter().zip(shard_outcomes) {
+            for (&orig, mut out) in indices.iter().zip(outcomes) {
+                out.session = orig;
+                out.warm_from = warm_froms[orig].clone();
+                slots[orig] = Some(out);
+            }
+        }
+        let outcomes: Vec<SessionOutcome> =
+            slots.into_iter().map(|s| s.expect("every request was routed")).collect();
+
+        // ---- record evidence (deterministic, request order) ----
+        if self.warm_start {
+            let mut seq =
+                self.services.iter().map(|s| s.evidence_next_seq()).max().unwrap_or(0);
+            for ((profile, home), out) in profiles.iter().zip(&homes).zip(&outcomes) {
+                if let Some(profile) = profile {
+                    self.services[*home].record_evidence(NeighborRecord {
+                        seq,
+                        name: out.name.clone(),
+                        profile: profile.clone(),
+                        kept_steps: out
+                            .outcome
+                            .trials
+                            .iter()
+                            .filter(|t| t.kept)
+                            .map(|t| t.step.to_string())
+                            .collect(),
+                        baseline: out.outcome.baseline,
+                        best: out.outcome.best,
+                    });
+                    seq += 1;
+                }
+            }
+        }
+        outcomes
+    }
+
+    /// Aggregated counters: field-wise sum over the shards, plus the
+    /// router's own cross-shard warm-start counters (the shards run
+    /// with transfer off, so there is no double count).
+    pub fn stats(&self) -> ServiceStats {
+        let mut total = ServiceStats::default();
+        for s in &self.services {
+            let st = s.stats();
+            total.sessions += st.sessions;
+            total.trials_requested += st.trials_requested;
+            total.trials_simulated += st.trials_simulated;
+            total.coalesced += st.coalesced;
+            total.warm_started += st.warm_started;
+            total.warm_missed += st.warm_missed;
+            total.forked_trials += st.forked_trials;
+            total.replayed_events += st.replayed_events;
+            total.checkpoint_bytes += st.checkpoint_bytes;
+            total.fork_evictions += st.fork_evictions;
+            total.quarantined += st.quarantined;
+            total.cache.hits += st.cache.hits;
+            total.cache.misses += st.cache.misses;
+            total.cache.inserts += st.cache.inserts;
+            total.cache.evictions += st.cache.evictions;
+        }
+        total.warm_started += self.warm_started.load(Ordering::Relaxed);
+        total.warm_missed += self.warm_missed.load(Ordering::Relaxed);
+        total
+    }
+
+    /// Trials memoized across all shards.
+    pub fn cached_trials(&self) -> usize {
+        self.services.iter().map(|s| s.cached_trials()).sum()
+    }
+
+    /// Sessions recorded across all shards' evidence indices.
+    pub fn profiled_sessions(&self) -> usize {
+        self.services.iter().map(|s| s.profiled_sessions()).sum()
+    }
+
+    /// Snapshot every shard under `dir`: a router `manifest.snap`
+    /// (shard count) plus one `shard-NNNN/` directory per shard, each
+    /// written with [`TuningService::snapshot_to`]'s atomic protocol.
+    pub fn snapshot_to(&self, dir: &Path) -> Result<(), SnapshotError> {
+        std::fs::create_dir_all(dir)?;
+        persist::write_atomic(
+            &dir.join("manifest.snap"),
+            &persist::encode_router_manifest(self.services.len()),
+        )?;
+        for (i, svc) in self.services.iter().enumerate() {
+            svc.snapshot_to(&dir.join(format!("shard-{i:04}")))?;
+        }
+        Ok(())
+    }
+
+    /// Restore every shard from `dir`, staging **all** of them before
+    /// applying **any** — one corrupt shard rejects the whole restore
+    /// and leaves every shard's live state untouched. The manifest's
+    /// shard count must match this router's (profiles are partitioned
+    /// by shard count; restoring across a re-shard would misfile
+    /// evidence).
+    pub fn restore_from(&self, dir: &Path) -> Result<(), SnapshotError> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.snap"))?;
+        let shards = persist::decode_router_manifest(&manifest)
+            .map_err(|e| SnapshotError::format("manifest.snap", e))?;
+        if shards != self.services.len() {
+            return Err(SnapshotError::format(
+                "manifest.snap",
+                format!(
+                    "snapshot has {shards} shards, this router has {}",
+                    self.services.len()
+                ),
+            ));
+        }
+        let staged: Vec<StagedRestore> = self
+            .services
+            .iter()
+            .enumerate()
+            .map(|(i, svc)| svc.stage_restore(&dir.join(format!("shard-{i:04}"))))
+            .collect::<Result<_, _>>()?;
+        for (svc, st) in self.services.iter().zip(staged) {
+            svc.apply_restore(st);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::server::outcomes_identical;
+    use crate::sim::SimOpts;
+    use crate::tuner::TuneOpts;
+    use crate::workloads;
+
+    fn requests() -> Vec<SessionRequest> {
+        // Three workload families × two tenants: enough profile spread
+        // to land on multiple shards, small enough to stay fast.
+        let mut reqs = Vec::new();
+        for t in 0..2u32 {
+            for (a, job) in [
+                workloads::sort_by_key(1_000_000, 8),
+                workloads::kmeans(50_000, 10, 4, 2, 8),
+                workloads::aggregate_by_key(1_000_000, 20_000, 8),
+            ]
+            .into_iter()
+            .enumerate()
+            {
+                reqs.push(SessionRequest {
+                    name: format!("tenant{t}/app{a}"),
+                    job,
+                    tune: TuneOpts { short_version: true, ..TuneOpts::default() },
+                    sim: SimOpts { jitter: 0.04, seed: 0x5E21E + a as u64, straggler: None },
+                });
+            }
+        }
+        reqs
+    }
+
+    fn opts() -> ServiceOpts {
+        ServiceOpts { workers: 2, capacity: 512, warm_start: true, ..ServiceOpts::default() }
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_profile_keyed() {
+        let router = ShardedRouter::new(crate::cluster::ClusterSpec::mini(), 4, opts());
+        assert_eq!(router.shard_count(), 4);
+        let reqs = requests();
+        let homes: Vec<usize> = reqs
+            .iter()
+            .map(|r| {
+                let plan = prepare(&r.job).unwrap();
+                let p = JobProfile::of(&plan, router.shards()[0].cluster(), &r.sim);
+                router.shard_of(Some(&p))
+            })
+            .collect();
+        // Same request, same home — and tenants of one family agree.
+        assert_eq!(homes[0], homes[3], "same family must share a shard");
+        assert_eq!(homes[1], homes[4]);
+        assert_eq!(homes[2], homes[5]);
+        assert_eq!(router.shard_of(None), 0, "unplannable jobs pin to shard 0");
+    }
+
+    #[test]
+    fn four_shards_match_one_shard_and_a_single_service_bitwise() {
+        let reqs = requests();
+        let single = TuningService::new(crate::cluster::ClusterSpec::mini(), opts());
+        let r1 = ShardedRouter::new(crate::cluster::ClusterSpec::mini(), 1, opts());
+        let r4 = ShardedRouter::new(crate::cluster::ClusterSpec::mini(), 4, opts());
+        for pass in 0..2 {
+            let a = single.serve(&reqs);
+            let b = r1.serve(&reqs);
+            let c = r4.serve(&reqs);
+            for ((x, y), z) in a.iter().zip(&b).zip(&c) {
+                assert!(
+                    outcomes_identical(&x.outcome, &y.outcome),
+                    "pass {pass}: 1-shard router diverged from the single service on {}",
+                    x.name
+                );
+                assert!(
+                    outcomes_identical(&x.outcome, &z.outcome),
+                    "pass {pass}: 4-shard router diverged from the single service on {}",
+                    x.name
+                );
+                assert_eq!(x.warm_from, y.warm_from, "pass {pass}");
+                assert_eq!(x.warm_from, z.warm_from, "pass {pass}");
+                assert_eq!(x.session, y.session);
+                assert_eq!(x.session, z.session);
+            }
+            if pass == 1 {
+                // The second pass warm-starts from the first's evidence
+                // in all three deployments, identically.
+                assert!(a.iter().all(|o| o.warm_from.is_some()));
+            }
+        }
+        assert_eq!(single.profiled_sessions(), r4.profiled_sessions());
+        let (s1, s4) = (r1.stats(), r4.stats());
+        assert_eq!(s1.sessions, s4.sessions);
+        assert_eq!(s1.warm_started, s4.warm_started, "warm decisions must agree");
+        assert_eq!(s1.warm_missed, s4.warm_missed);
+    }
+
+    #[test]
+    fn stats_aggregate_across_shards() {
+        let reqs = requests();
+        let r = ShardedRouter::new(crate::cluster::ClusterSpec::mini(), 3, opts());
+        let out = r.serve(&reqs);
+        assert_eq!(out.len(), reqs.len());
+        let st = r.stats();
+        assert_eq!(st.sessions, reqs.len() as u64);
+        assert!(st.trials_requested > 0);
+        assert_eq!(st.warm_started + st.warm_missed, reqs.len() as u64);
+        assert!(r.cached_trials() > 0);
+        assert_eq!(r.profiled_sessions(), reqs.len());
+    }
+}

@@ -34,10 +34,26 @@
 //! the consult and the record happen at deterministic points (batch
 //! admission / batch completion, in request order), so serve outcomes
 //! stay invariant across worker counts even with transfer enabled.
+//!
+//! **Durability** (opt-in via
+//! [`snapshot_to`](TuningService::snapshot_to) /
+//! [`restore_from`](TuningService::restore_from)): the service's
+//! evidence state — memo cache with its GreedyDual eviction clocks, kNN
+//! index with its global insertion stamps, and the fork ledger
+//! (crash/quarantine table + fork-store aging clocks) — round-trips
+//! through the versioned `sparktune.snapshot.v1` formats in
+//! [`super::persist`] (spec: `docs/FORMATS.md`). The pinned invariant
+//! is **restart equivalence**: a service restored from a snapshot
+//! serves every future batch bit-identically to the service that wrote
+//! it, including eviction victims, warm-start choices, and quarantine
+//! decisions. Restores are staged-then-applied: a snapshot that fails
+//! any validation rule is rejected whole, never partially applied.
+//! Horizontal sharding lives one layer up, in [`super::router`].
 
-use super::cache::{CacheStats, ShardedCache};
+use super::cache::{CacheStats, ShardExport, ShardedCache};
 use super::fingerprint::{fingerprint_fork, fingerprint_trial, Fingerprint};
 use super::knn::{KnnIndex, NeighborRecord};
+use super::persist::{self, ForkLedger, SnapshotError};
 use super::profile::JobProfile;
 use crate::cluster::ClusterSpec;
 use crate::conf::SparkConf;
@@ -51,6 +67,7 @@ use crate::tuner::{
     DEFAULT_FORK_BUDGET_BYTES,
 };
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -349,6 +366,18 @@ struct Admitted<'r> {
     warm_from: Option<String>,
 }
 
+/// A fully-validated snapshot, ready to apply. Produced only by
+/// [`TuningService::stage_restore`]; holding one proves every file in
+/// the snapshot directory parsed, checksummed, and passed geometry
+/// validation — so [`TuningService::apply_restore`] cannot fail
+/// half-way, and a multi-shard router can stage *all* its shards
+/// before applying *any* of them.
+pub struct StagedRestore {
+    cache: Vec<ShardExport<f64>>,
+    knn: Vec<NeighborRecord>,
+    fork: ForkLedger,
+}
+
 /// The [`Runner`] one session drives: every trial goes through the
 /// memoized service path, and the decision record of the most recent
 /// trial (cache/coalesce hit vs fork-resume vs full pricing) is kept
@@ -503,7 +532,9 @@ impl TuningService {
             let mut knn = self.knn.lock().expect("knn index poisoned");
             for (adm, out) in admitted.iter().zip(&outcomes) {
                 if let Some(profile) = &adm.profile {
+                    let seq = knn.next_seq();
                     knn.insert(NeighborRecord {
+                        seq,
                         name: out.name.clone(),
                         profile: profile.clone(),
                         kept_steps: out
@@ -526,6 +557,145 @@ impl TuningService {
     /// [`ServiceOpts::warm_start`] is enabled).
     pub fn profiled_sessions(&self) -> usize {
         self.knn.lock().expect("knn index poisoned").len()
+    }
+
+    /// The nearest recorded neighbor within `max_dist`, as
+    /// `(distance, record)` — the router's per-shard consult for
+    /// deterministic cross-shard warm-start. Same semantics as the
+    /// in-batch consult: inclusive threshold, ties to the earliest
+    /// (smallest-stamp) record.
+    pub fn evidence_nearest(
+        &self,
+        profile: &JobProfile,
+        max_dist: f64,
+    ) -> Option<(f64, NeighborRecord)> {
+        let knn = self.knn.lock().expect("knn index poisoned");
+        knn.nearest(profile, max_dist).map(|n| (n.distance, n.record.clone()))
+    }
+
+    /// Record evidence directly into this service's index (the router's
+    /// post-batch recording path; the stamp is the caller's to assign
+    /// from the global stream).
+    pub fn record_evidence(&self, record: NeighborRecord) {
+        self.knn.lock().expect("knn index poisoned").insert(record);
+    }
+
+    /// One past the largest insertion stamp recorded here (see
+    /// [`KnnIndex::next_seq`]).
+    pub fn evidence_next_seq(&self) -> u64 {
+        self.knn.lock().expect("knn index poisoned").next_seq()
+    }
+
+    /// The durable slice of the fork subsystem (see
+    /// [`ForkLedger`]): store clocks plus the crash/quarantine table in
+    /// canonical (fingerprint-ascending) order.
+    fn fork_ledger(&self) -> ForkLedger {
+        let forks = self.forks.lock().expect("fork store poisoned");
+        let table = self.crashes.lock().expect("crash table poisoned");
+        let mut crashes: Vec<(u128, u64)> = table.iter().map(|(fp, &n)| (fp.0, n)).collect();
+        crashes.sort_unstable_by_key(|&(fp, _)| fp);
+        ForkLedger {
+            budget: forks.budget,
+            tick: forks.tick,
+            inflation: forks.inflation,
+            evictions: forks.evictions,
+            crashes,
+        }
+    }
+
+    /// Snapshot the service's evidence state into `dir` as
+    /// `sparktune.snapshot.v1` files (`cache.snap`, `knn.snap`,
+    /// `forks.snap`), each written atomically (write-then-rename) —
+    /// a crash mid-snapshot leaves the previous snapshot intact.
+    /// Serialization is canonical: the same state always produces the
+    /// same bytes.
+    pub fn snapshot_to(&self, dir: &Path) -> Result<(), SnapshotError> {
+        std::fs::create_dir_all(dir)?;
+        let cache = persist::encode_cache(&self.cache);
+        let knn = {
+            let knn = self.knn.lock().expect("knn index poisoned");
+            persist::encode_knn(&knn)
+        };
+        let fork = persist::encode_fork(&self.fork_ledger());
+        persist::write_atomic(&dir.join("cache.snap"), &cache)?;
+        persist::write_atomic(&dir.join("knn.snap"), &knn)?;
+        persist::write_atomic(&dir.join("forks.snap"), &fork)?;
+        Ok(())
+    }
+
+    /// Read and fully validate a snapshot directory *without touching
+    /// any live state*. The returned [`StagedRestore`] is the only way
+    /// to apply one — stage-then-apply is what makes a rejected
+    /// snapshot "never partially applied" (`docs/FORMATS.md`).
+    pub fn stage_restore(&self, dir: &Path) -> Result<StagedRestore, SnapshotError> {
+        let cache_text = std::fs::read_to_string(dir.join("cache.snap"))?;
+        let cache = persist::decode_cache(
+            &cache_text,
+            self.cache.shard_count(),
+            self.cache.capacity_per_shard(),
+        )
+        .map_err(|e| SnapshotError::format("cache.snap", e))?;
+        let knn_text = std::fs::read_to_string(dir.join("knn.snap"))?;
+        let knn =
+            persist::decode_knn(&knn_text).map_err(|e| SnapshotError::format("knn.snap", e))?;
+        let fork_text = std::fs::read_to_string(dir.join("forks.snap"))?;
+        let fork =
+            persist::decode_fork(&fork_text).map_err(|e| SnapshotError::format("forks.snap", e))?;
+        let budget = self.forks.lock().expect("fork store poisoned").budget;
+        if fork.budget != budget {
+            return Err(SnapshotError::format(
+                "forks.snap",
+                format!(
+                    "fork budget mismatch: snapshot {} bytes, this service {budget} bytes",
+                    fork.budget
+                ),
+            ));
+        }
+        Ok(StagedRestore { cache, knn, fork })
+    }
+
+    /// Replace the service's evidence state with a staged snapshot.
+    /// Infallible by construction — every validation ran in
+    /// [`stage_restore`](TuningService::stage_restore). Observability
+    /// counters are process-lifetime and not restored; fork
+    /// *recordings* are not persisted (dropping one is lossless — the
+    /// family re-records on its next cache-missed trial), only the
+    /// ledger clocks and the quarantine table, which are
+    /// outcome-relevant.
+    pub fn apply_restore(&self, staged: StagedRestore) {
+        self.cache.restore_shards(staged.cache).expect("staged restore was validated");
+        {
+            let mut knn = self.knn.lock().expect("knn index poisoned");
+            let mut index = KnnIndex::new();
+            for r in staged.knn {
+                index.insert(r);
+            }
+            *knn = index;
+        }
+        {
+            let mut forks = self.forks.lock().expect("fork store poisoned");
+            forks.map.clear();
+            forks.bytes = 0;
+            forks.tick = staged.fork.tick;
+            forks.inflation = staged.fork.inflation;
+            forks.evictions = staged.fork.evictions;
+        }
+        {
+            let mut crashes = self.crashes.lock().expect("crash table poisoned");
+            crashes.clear();
+            for (fp, n) in staged.fork.crashes {
+                crashes.insert(Fingerprint(fp), n);
+            }
+        }
+    }
+
+    /// [`stage_restore`](TuningService::stage_restore) +
+    /// [`apply_restore`](TuningService::apply_restore): restore this
+    /// service from a snapshot directory, or reject it whole.
+    pub fn restore_from(&self, dir: &Path) -> Result<(), SnapshotError> {
+        let staged = self.stage_restore(dir)?;
+        self.apply_restore(staged);
+        Ok(())
     }
 
     /// Price one trial through the memo layers: fingerprint → cache →

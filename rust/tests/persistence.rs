@@ -1,0 +1,377 @@
+//! Integration tests for the durable service layer: the acceptance
+//! criteria of `docs/FORMATS.md`, pinned end to end.
+//!
+//! * **Worked-example golden** — the exact `sparktune.snapshot.v1`
+//!   cache payload printed in `docs/FORMATS.md` §"Worked example" is
+//!   what `encode_cache` emits for that state, byte for byte, and it
+//!   decodes back bit-exactly.
+//! * **Reject, don't guess** — truncated, corrupt, version-skewed, and
+//!   geometry-mismatched snapshots are refused with a reason, at the
+//!   file level and at the directory level.
+//! * **Restart equivalence** — a warm-restarted service produces
+//!   outcomes bit-identical to the never-restarted twin, across worker
+//!   counts, and serves its first restored pass entirely from memo.
+//! * **Never partially applied** — one corrupt shard file rejects a
+//!   whole router restore and leaves every shard's live state
+//!   untouched.
+//! * **Shard equivalence** — a 4-shard router, a 1-shard router, and a
+//!   single `TuningService` serve the same batch bit-identically.
+
+use std::path::PathBuf;
+
+use sparktune::cluster::ClusterSpec;
+use sparktune::service::persist;
+use sparktune::service::{
+    outcomes_identical, ServiceOpts, SessionOutcome, SessionRequest, ShardedCache, ShardedRouter,
+    TuningService,
+};
+use sparktune::sim::SimOpts;
+use sparktune::tuner::TuneOpts;
+use sparktune::workloads;
+
+fn sim() -> SimOpts {
+    SimOpts { jitter: 0.04, seed: 0x51A7, straggler: None }
+}
+
+/// A small cross-family batch: two sort-by-key scales (close profiles,
+/// so warm-start has something to transfer) plus a k-means outlier.
+fn batch() -> Vec<SessionRequest> {
+    let topts = TuneOpts { short_version: true, ..TuneOpts::default() };
+    vec![
+        SessionRequest {
+            name: "tenant0/sbk".into(),
+            job: workloads::sort_by_key(2_000_000, 16),
+            tune: topts.clone(),
+            sim: sim(),
+        },
+        SessionRequest {
+            name: "tenant1/sbk-scaled".into(),
+            job: workloads::sort_by_key(2_020_000, 16),
+            tune: topts.clone(),
+            sim: sim(),
+        },
+        SessionRequest {
+            name: "tenant2/kmeans".into(),
+            job: workloads::kmeans(100_000, 20, 4, 2, 16),
+            tune: topts,
+            sim: sim(),
+        },
+    ]
+}
+
+fn opts(workers: usize) -> ServiceOpts {
+    ServiceOpts { workers, shards: 4, capacity: 4096, warm_start: true, ..ServiceOpts::default() }
+}
+
+/// Fresh temp dir path (not yet created) unique to this test + process.
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sparktune-persist-{tag}-{}", std::process::id()));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).expect("clear stale temp dir");
+    }
+    dir
+}
+
+fn assert_batches_identical(a: &[SessionOutcome], b: &[SessionOutcome], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: batch lengths differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.session, y.session, "{what}: session ids diverged");
+        assert_eq!(x.name, y.name, "{what}: session names diverged");
+        assert_eq!(x.warm_from, y.warm_from, "{what}: warm-start choices diverged ({})", x.name);
+        assert!(outcomes_identical(&x.outcome, &y.outcome), "{what}: {} diverged", x.name);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worked-example golden (docs/FORMATS.md §Worked example)
+// ---------------------------------------------------------------------------
+
+/// The exact payload (everything before the `checksum=` line) that
+/// `docs/FORMATS.md` walks through byte by byte. Keep the two in sync:
+/// the doc is normative, this test is its executable witness.
+const WORKED_EXAMPLE_PAYLOAD: &str = "\
+sparktune.snapshot.v1;kind=cache;shards=1;cap=4
+shard=0;tick=2;inflation=0000000000000000
+entry=00000000000000000000000000000002;value=401d000000000000;cost=0000000000000000;prio=0000000000000000;qtick=2
+entry=00000000000000000000000000000001;value=4045400000000000;cost=3ff8000000000000;prio=3ff8000000000000;qtick=1
+";
+
+/// Rebuild the worked example's cache state through the public API.
+fn worked_example_cache() -> ShardedCache<f64> {
+    use sparktune::service::Fingerprint;
+    let cache: ShardedCache<f64> = ShardedCache::new(1, 4);
+    // Trial 1: 42.5 s effective duration, 1.5 s to compute.
+    cache.insert_costed(Fingerprint(1), 42.5, 1.5);
+    // Trial 2: 7.25 s effective duration, free to compute (cost 0), so
+    // it queues *ahead* of trial 1 in eviction order despite being
+    // younger — the GreedyDual priority, not insertion order, sorts
+    // the entry lines.
+    cache.insert_costed(Fingerprint(2), 7.25, 0.0);
+    cache
+}
+
+#[test]
+fn formats_md_worked_example_is_what_we_emit() {
+    let encoded = persist::encode_cache(&worked_example_cache());
+    let payload = persist::unseal(&encoded).expect("own snapshot must unseal");
+    assert_eq!(
+        payload, WORKED_EXAMPLE_PAYLOAD,
+        "docs/FORMATS.md worked example drifted from encode_cache"
+    );
+    // The final line is the checksum over exactly that payload.
+    assert!(encoded.ends_with('\n'));
+    let last = encoded.lines().last().unwrap();
+    assert!(last.starts_with("checksum="), "last line is {last}");
+    assert_eq!(last.len(), "checksum=".len() + 32, "Fp128 prints as 32 hex digits");
+}
+
+#[test]
+fn formats_md_worked_example_round_trips_bit_exactly() {
+    let cache = worked_example_cache();
+    let encoded = persist::encode_cache(&cache);
+    let decoded = persist::decode_cache(&encoded, 1, 4).expect("own snapshot must decode");
+    let restored: ShardedCache<f64> = ShardedCache::new(1, 4);
+    restored.restore_shards(decoded).expect("decoded exports must restore");
+    assert_eq!(
+        persist::encode_cache(&restored),
+        encoded,
+        "decode→restore→encode must be the identity"
+    );
+    // Canonical: the same state always serializes to the same bytes.
+    assert_eq!(persist::encode_cache(&cache), encoded);
+}
+
+// ---------------------------------------------------------------------------
+// File-level rejection goldens
+// ---------------------------------------------------------------------------
+
+#[test]
+fn snapshot_rejections_name_their_reason() {
+    let sealed = persist::encode_cache(&worked_example_cache());
+
+    // Version skew: a future (or foreign) version is refused, never
+    // half-parsed.
+    let skewed = persist::seal(
+        WORKED_EXAMPLE_PAYLOAD.replace("sparktune.snapshot.v1", "sparktune.snapshot.v9"),
+    );
+    let err = persist::decode_cache(&skewed, 1, 4).unwrap_err();
+    assert!(err.contains("unsupported snapshot version"), "{err}");
+
+    // Kind mismatch: a sealed fork ledger is not a cache snapshot.
+    let fork = persist::encode_fork(&persist::ForkLedger {
+        budget: 1024,
+        tick: 0,
+        inflation: 0.0,
+        evictions: 0,
+        crashes: Vec::new(),
+    });
+    let err = persist::decode_cache(&fork, 1, 4).unwrap_err();
+    assert!(err.contains("kind"), "{err}");
+
+    // Truncation before the checksum line: the framing itself fails.
+    let no_checksum = sealed.lines().next().map(|l| format!("{l}\n")).unwrap();
+    let err = persist::decode_cache(&no_checksum, 1, 4).unwrap_err();
+    assert!(err.contains("missing checksum line"), "{err}");
+
+    // Truncation that keeps the checksum line: the checksum catches it.
+    let mut lines: Vec<&str> = sealed.lines().collect();
+    let checksum = lines.pop().unwrap();
+    lines.remove(lines.len() - 1); // drop the last entry line
+    let truncated = format!("{}\n{checksum}\n", lines.join("\n"));
+    let err = persist::decode_cache(&truncated, 1, 4).unwrap_err();
+    assert!(err.contains("checksum mismatch"), "{err}");
+
+    // A single flipped byte in the payload: ditto.
+    let flipped = sealed.replacen("tick=2", "tick=3", 1);
+    let err = persist::decode_cache(&flipped, 1, 4).unwrap_err();
+    assert!(err.contains("checksum mismatch"), "{err}");
+
+    // Bytes appended after the seal: the checksum is no longer last.
+    let appended = format!("{sealed}entry=trailing-garbage\n");
+    let err = persist::decode_cache(&appended, 1, 4).unwrap_err();
+    assert!(err.contains("missing checksum line"), "{err}");
+
+    // Geometry mismatch: a valid snapshot for the wrong cache shape.
+    let err = persist::decode_cache(&sealed, 2, 4).unwrap_err();
+    assert!(err.contains("cache geometry mismatch"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Restart equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn restored_service_is_bit_identical_to_never_restarted_twin() {
+    let cluster = ClusterSpec::mini();
+    let reqs = batch();
+    let dir = temp_dir("restart");
+    let mut reference: Option<Vec<SessionOutcome>> = None;
+
+    for workers in [1usize, 4] {
+        // The never-restarted service: cold pass, then a warm pass
+        // (which exercises kNN warm-start against the pass-1 evidence),
+        // then a snapshot of everything it knows.
+        let live = TuningService::new(cluster.clone(), opts(workers));
+        live.serve(&reqs);
+        live.serve(&reqs);
+        live.snapshot_to(&dir).expect("snapshot");
+
+        // The restarted twin: same geometry, state restored from disk.
+        let twin = TuningService::new(cluster.clone(), opts(workers));
+        twin.restore_from(&dir).expect("restore");
+
+        // Both serve the batch once more: bit-identical outcomes and
+        // warm-start choices…
+        let live_pass = live.serve(&reqs);
+        let twin_pass = twin.serve(&reqs);
+        assert_batches_identical(&live_pass, &twin_pass, &format!("workers={workers}"));
+
+        // …and the twin served entirely from restored evidence: zero
+        // fresh simulations, every session warm-started.
+        let s = twin.stats();
+        assert_eq!(s.trials_simulated, 0, "restored twin re-simulated (workers={workers})");
+        assert!(s.trials_requested > 0);
+        for o in &twin_pass {
+            assert!(o.warm_from.is_some(), "{} did not warm-start after restore", o.name);
+        }
+
+        // Outcomes are also invariant across worker counts.
+        match &reference {
+            None => reference = Some(twin_pass),
+            Some(r) => assert_batches_identical(r, &twin_pass, "across worker counts"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Never partially applied
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_shard_rejects_whole_router_restore_and_leaves_state_untouched() {
+    let cluster = ClusterSpec::mini();
+    let reqs = batch();
+    let dir = temp_dir("staged");
+
+    let router = ShardedRouter::new(cluster.clone(), 4, opts(2));
+    router.serve(&reqs); // cold pass: builds the evidence
+    let before = router.serve(&reqs); // steady state: warm, fully memoized
+    router.snapshot_to(&dir).expect("snapshot");
+
+    // Corrupt exactly one shard's cache file (bytes after the seal).
+    let victim = dir.join("shard-0002").join("cache.snap");
+    let mut text = std::fs::read_to_string(&victim).expect("read shard cache");
+    text.push_str("entry=trailing-garbage\n");
+    std::fs::write(&victim, text).expect("corrupt shard cache");
+
+    // The whole restore is rejected — including the three shards whose
+    // files are pristine…
+    let err = router.restore_from(&dir).expect_err("corrupt shard must reject");
+    let msg = err.to_string();
+    assert!(msg.contains("snapshot rejected"), "{msg}");
+    assert!(msg.contains("cache.snap"), "{msg}");
+
+    // …and the live state is untouched: the batch re-serves entirely
+    // from the router's own memo, bit-identically.
+    let simulated_before = router.stats().trials_simulated;
+    let after = router.serve(&reqs);
+    assert_batches_identical(&before, &after, "post-rejection state");
+    assert_eq!(
+        router.stats().trials_simulated,
+        simulated_before,
+        "rejected restore must not cost the router its memo"
+    );
+
+    // A fresh router refuses the same directory without picking up any
+    // partial state: it still cold-serves afterwards.
+    let fresh = ShardedRouter::new(cluster.clone(), 4, opts(2));
+    fresh.restore_from(&dir).expect_err("corrupt shard must reject");
+    assert_eq!(fresh.cached_trials(), 0, "rejected restore must not leak entries");
+
+    // Shard-count skew is a manifest-level rejection.
+    let reshard = ShardedRouter::new(cluster, 2, opts(2));
+    let err = reshard.restore_from(&dir).expect_err("re-shard must reject");
+    assert!(err.to_string().contains("shards"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quarantine_renames_rejected_state_dirs() {
+    let dir = temp_dir("quarantine");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("manifest.snap"), "junk\n").unwrap();
+
+    let q0 = persist::quarantine_dir(&dir).expect("quarantine");
+    assert!(!dir.exists());
+    let expected = format!("sparktune-persist-quarantine-{}.corrupt-0", std::process::id());
+    assert!(q0.ends_with(&expected), "{}", q0.display());
+    assert!(q0.join("manifest.snap").exists(), "rejected bytes are preserved for forensics");
+
+    // A second rejection of the same path picks the next free slot.
+    std::fs::create_dir_all(&dir).unwrap();
+    let q1 = persist::quarantine_dir(&dir).expect("quarantine again");
+    assert!(q1.to_string_lossy().ends_with(".corrupt-1"), "{}", q1.display());
+
+    std::fs::remove_dir_all(&q0).ok();
+    std::fs::remove_dir_all(&q1).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Shard equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn four_shards_one_shard_and_a_single_service_agree_bitwise() {
+    let cluster = ClusterSpec::mini();
+    let reqs = batch();
+
+    let single = TuningService::new(cluster.clone(), opts(2));
+    let one = ShardedRouter::new(cluster.clone(), 1, opts(2));
+    let four = ShardedRouter::new(cluster.clone(), 4, opts(2));
+
+    // Two passes each: the second exercises cross-shard warm-start
+    // against the first pass's recorded evidence.
+    for pass in 0..2 {
+        let a = single.serve(&reqs);
+        let b = one.serve(&reqs);
+        let c = four.serve(&reqs);
+        assert_batches_identical(&a, &b, &format!("pass {pass}: single vs 1-shard"));
+        assert_batches_identical(&a, &c, &format!("pass {pass}: single vs 4-shard"));
+    }
+
+    // The 4-shard router genuinely spread the work: more than one shard
+    // holds cached trials.
+    let populated = four.shards().iter().filter(|s| s.cached_trials() > 0).count();
+    assert!(populated > 1, "profile-hash routing left {populated} shard(s) populated");
+
+    // And the evidence totals agree with the single service.
+    assert_eq!(four.profiled_sessions(), single.profiled_sessions());
+}
+
+// ---------------------------------------------------------------------------
+// Restart equivalence, sharded: snapshot/restore through the router
+// ---------------------------------------------------------------------------
+
+#[test]
+fn restored_router_serves_entirely_from_snapshot() {
+    let cluster = ClusterSpec::mini();
+    let reqs = batch();
+    let dir = temp_dir("router-restart");
+
+    let live = ShardedRouter::new(cluster.clone(), 4, opts(2));
+    live.serve(&reqs);
+    live.serve(&reqs);
+    live.snapshot_to(&dir).expect("snapshot");
+
+    let twin = ShardedRouter::new(cluster.clone(), 4, opts(2));
+    twin.restore_from(&dir).expect("restore");
+
+    let live_pass = live.serve(&reqs);
+    let twin_pass = twin.serve(&reqs);
+    assert_batches_identical(&live_pass, &twin_pass, "router restart");
+    assert_eq!(twin.stats().trials_simulated, 0, "restored router re-simulated");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
